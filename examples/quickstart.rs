@@ -1,0 +1,82 @@
+//! Quickstart: train a 20-topic model on a small real-text + synthetic
+//! mix and print the discovered topics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::corpus::tokenizer::TokenizerConfig;
+use glint_lda::corpus::vocab::corpus_from_texts;
+use glint_lda::eval::topics::summarize;
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+
+/// A handful of themed snippets: enough for the real-text pipeline
+/// (tokenize → stopwords → stem → frequency-ordered vocab) to produce
+/// separable topics.
+const SNIPPETS: &[&str] = &[
+    "The recipe calls for fresh meat, aromatic spices and a slow cooker. Season the meat with spices.",
+    "Grind the spices, marinate the meat overnight, and the recipe rewards patience with flavor.",
+    "A good recipe balances spices; cheap cuts of meat become tender in the oven.",
+    "Gold rings and diamond necklaces gleamed in the jewelry shop window.",
+    "The jeweler set a flawless diamond into a gold ring for the wedding.",
+    "Jewelry appraisers weigh gold and grade diamonds under bright light.",
+    "The football team scored in the final minute; the crowd roared in the stadium.",
+    "A transfer record: the striker joined the club, and the league title race tightened.",
+    "The stadium hosts the league final; both teams drilled set pieces all week.",
+    "Browsers cache web pages; the crawler indexed millions of documents overnight.",
+    "The search engine ranks web documents by relevance and freshness signals.",
+    "A distributed crawler fetches pages politely and updates the web index.",
+];
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // --- Real-text path ---------------------------------------------------
+    let real = corpus_from_texts(SNIPPETS, &TokenizerConfig::default(), 1, 10_000);
+    println!(
+        "real-text corpus: {} docs, {} tokens, V={} (frequency-ordered: {})",
+        real.num_docs(),
+        real.num_tokens(),
+        real.vocab_size,
+        real.is_frequency_ordered()
+    );
+    let cfg = TrainConfig {
+        num_topics: 4,
+        iterations: 60,
+        workers: 2,
+        shards: 2,
+        block_words: 64,
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg, &real)?;
+    let model = trainer.run(&real)?;
+    println!("\ndiscovered topics (top words):");
+    for line in summarize(&model, &real.vocab, 6) {
+        println!("  {line}");
+    }
+
+    // --- Synthetic path (the scalable workload) ---------------------------
+    let synth = generate(&SynthConfig {
+        num_docs: 2000,
+        vocab_size: 3000,
+        num_topics: 20,
+        avg_doc_len: 60.0,
+        ..Default::default()
+    });
+    let cfg = TrainConfig {
+        num_topics: 20,
+        iterations: 15,
+        workers: 4,
+        shards: 4,
+        eval_every: 5,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg, &synth)?;
+    let model = trainer.run(&synth)?;
+    println!(
+        "\nsynthetic corpus perplexity after 15 iterations: {:.1}",
+        trainer.training_perplexity(&model, &synth)
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

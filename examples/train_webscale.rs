@@ -1,0 +1,101 @@
+//! End-to-end driver: the scaled "ClueWeb12" run (paper §4, Figure 6).
+//!
+//! Generates the web-scale analogue corpus (~16k docs, V=16k by default
+//! — override with --docs/--vocab/--topics), trains LightLDA over the
+//! asynchronous parameter server with all production features enabled
+//! (pipelined pulls, push buffering, dense hot-word aggregation,
+//! checkpointing), logs the perplexity curve per iteration, and
+//! cross-validates the final perplexity on the XLA/Pallas evaluator.
+//!
+//! ```sh
+//! cargo run --release --example train_webscale -- --topics 100 --iters 30
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md (§End-to-end).
+
+use std::path::PathBuf;
+
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::eval::topics::summarize;
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::runtime::engine::Engine;
+use glint_lda::util::cli::Args;
+use glint_lda::util::timer::Stopwatch;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    glint_lda::util::logger::set_level_str(&args.str_or("log", "info"));
+
+    let num_topics: u32 = args.get_as("topics", 100)?;
+    let iterations: u32 = args.get_as("iters", 30)?;
+    let ckpt_dir = std::env::temp_dir().join("glint_webscale_ckpt");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+    let corpus = generate(&SynthConfig {
+        num_docs: args.get_as("docs", 16_000)?,
+        vocab_size: args.get_as("vocab", 16_000)?,
+        num_topics: 60,
+        avg_doc_len: 90.0,
+        zipf_exponent: 1.07,
+        ..Default::default()
+    });
+    println!(
+        "corpus: {} docs, {} tokens, V={} | model: K={num_topics} => {} parameters",
+        corpus.num_docs(),
+        corpus.num_tokens(),
+        corpus.vocab_size,
+        corpus.vocab_size as u64 * num_topics as u64
+    );
+
+    let cfg = TrainConfig {
+        num_topics,
+        iterations,
+        workers: args.get_as("workers", 4)?,
+        shards: args.get_as("shards", 8)?,
+        eval_every: args.get_as("eval-every", 1)?,
+        checkpoint_dir: Some(ckpt_dir.clone()),
+        ..TrainConfig::default()
+    };
+    let clock = Stopwatch::new();
+    let mut trainer = Trainer::new(cfg, &corpus)?;
+    println!("setup done at t={:.1}s; training...", clock.secs());
+    let model = trainer.run(&corpus)?;
+
+    println!("\nloss (perplexity) curve:");
+    println!("{}", trainer.report.to_table());
+
+    let final_p = trainer.training_perplexity(&model, &corpus);
+    println!("final perplexity (rust evaluator): {final_p:.1}");
+
+    // Cross-check on the AOT XLA/Pallas path if artifacts are built.
+    let artifact_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    match Engine::new(&artifact_dir) {
+        Ok(engine) => {
+            let sw = Stopwatch::new();
+            let counts = trainer.doc_counts();
+            let xla_p =
+                glint_lda::eval::xla::xla_perplexity(&engine, &model, &corpus, &counts)?;
+            println!(
+                "final perplexity (xla/pallas evaluator, {}): {xla_p:.1} [{:.2}s]",
+                engine.platform(),
+                sw.secs()
+            );
+            let rel = ((final_p - xla_p) / final_p).abs();
+            assert!(rel < 1e-3, "evaluators disagree: {final_p} vs {xla_p}");
+        }
+        Err(e) => println!("xla evaluator skipped: {e}"),
+    }
+
+    println!("\nbiggest topics:");
+    for line in summarize(&model, &corpus.vocab, 10).into_iter().take(8) {
+        println!("  {line}");
+    }
+    println!(
+        "\ntotal wall-clock {:.1}s; PS traffic {:.1} MB pushed; checkpoints in {}",
+        clock.secs(),
+        trainer.bytes_pushed() as f64 / 1e6,
+        ckpt_dir.display()
+    );
+    println!("train_webscale OK");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT bridge: lower the L2 graphs to HLO text + write the manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` rust crate) rejects; the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md and rust/src/runtime/engine.rs.
+
+Usage:
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import em_estep_graph, perplexity_graph
+
+# Compiled shape configurations. K covers the paper's sweep (20-80 fits in
+# 128) and the web-scale run (1000 fits in 1024). VB/D are fixed block
+# sizes the rust side pads to.
+PERPLEXITY_CONFIGS = [
+    # (batch D, padded K, vocab block VB)
+    (64, 128, 2048),
+    (64, 1024, 2048),
+]
+EM_CONFIGS = [
+    (64, 128, 2048),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def scalar():
+    return jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def lower_perplexity(d, k, vb, use_pallas):
+    fn = functools.partial(perplexity_graph, use_pallas=use_pallas)
+    return jax.jit(fn).lower(
+        f32(d, k),      # n_dk
+        f32(k, vb),     # n_wk_t
+        f32(k),         # n_k
+        f32(d, vb),     # counts
+        scalar(),       # alpha
+        scalar(),       # beta
+        scalar(),       # vocab_size
+        scalar(),       # k_real
+    )
+
+
+def lower_em(d, k, vb):
+    return jax.jit(em_estep_graph).lower(
+        f32(d, k), f32(k, vb), f32(k), f32(d, vb), scalar(), scalar(), scalar()
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+
+    def emit(name, lowered, d, k, vb, pallas):
+        fname = f"{name}_d{d}_k{k}_v{vb}.hlo.txt"
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "batch": d,
+                "k": k,
+                "vblock": vb,
+                "pallas": pallas,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for d, k, vb in PERPLEXITY_CONFIGS:
+        emit("perplexity", lower_perplexity(d, k, vb, True), d, k, vb, True)
+        emit("perplexity_ref", lower_perplexity(d, k, vb, False), d, k, vb, False)
+    for d, k, vb in EM_CONFIGS:
+        emit("em_estep", lower_em(d, k, vb), d, k, vb, False)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

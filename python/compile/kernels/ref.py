@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the doclik kernel — the CORE correctness signal.
+
+Everything here is deliberately written in the most obvious way possible;
+pytest asserts the Pallas kernel matches it across shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-30
+
+
+def doc_loglik_ref(theta, phi, counts):
+    """Reference per-document log-likelihood.
+
+    loglik[d] = sum_v counts[d,v] * log(max(sum_k theta[d,k] phi[k,v], EPS))
+    with zero-count entries contributing exactly 0 (not 0 * -inf).
+    """
+    p = theta.astype(jnp.float32) @ phi.astype(jnp.float32)
+    counts = counts.astype(jnp.float32)
+    contrib = jnp.where(counts > 0.0, counts * jnp.log(jnp.maximum(p, EPS)), 0.0)
+    return jnp.sum(contrib, axis=1)
+
+
+def theta_from_counts(n_dk, alpha):
+    """theta = (n_dk + alpha) / (len_d + alpha * K), row-wise."""
+    n_dk = n_dk.astype(jnp.float32)
+    k = n_dk.shape[1]
+    denom = jnp.sum(n_dk, axis=1, keepdims=True) + alpha * k
+    return (n_dk + alpha) / denom
+
+
+def phi_from_counts(n_wk_t, n_k, beta, vocab_size):
+    """phi = (n_wk + beta) / (n_k + V beta); n_wk_t laid out (K, V_block).
+
+    `vocab_size` is the FULL vocabulary size V (the denominator is global
+    even when only a block of columns is materialized).
+    """
+    n_wk_t = n_wk_t.astype(jnp.float32)
+    n_k = n_k.astype(jnp.float32)
+    return (n_wk_t + beta) / (n_k[:, None] + vocab_size * beta)
+
+
+def em_estep_ref(n_dk, n_wk_t, n_k, counts, alpha, beta, vocab_size):
+    """Reference blockwise EM E-step (Asuncion et al. '09 / MLlib EM).
+
+    For every (doc d, word v-in-block) pair:
+        gamma_dvk ∝ (n_dk + alpha - 1)(n_wk + beta - 1)/(n_k + V(beta-1))
+    normalized over k; returns
+        new_nwk_t[k, v] = sum_d counts[d, v] gamma_dvk        (K, VB)
+        new_ndk_partial[d, k] = sum_v counts[d, v] gamma_dvk  (D, K)
+    """
+    n_dk = n_dk.astype(jnp.float32)
+    n_wk_t = n_wk_t.astype(jnp.float32)
+    n_k = n_k.astype(jnp.float32)
+    counts = counts.astype(jnp.float32)
+    doc_f = jnp.maximum(n_dk + alpha - 1.0, 1e-10)  # (D, K)
+    word_f = jnp.maximum(n_wk_t + beta - 1.0, 1e-10)  # (K, VB)
+    topic_f = jnp.maximum(n_k + vocab_size * (beta - 1.0), 1e-10)  # (K,)
+    # gamma[d, k, v] before normalization
+    g = doc_f[:, :, None] * (word_f / topic_f[:, None])[None, :, :]
+    g = g / jnp.sum(g, axis=1, keepdims=True)
+    gw = g * counts[:, None, :]
+    new_nwk_t = jnp.sum(gw, axis=0)  # (K, VB)
+    new_ndk = jnp.sum(gw, axis=2)  # (D, K)
+    return new_nwk_t, new_ndk

@@ -1,0 +1,66 @@
+"""L2: the JAX evaluation graphs, lowered once by aot.py.
+
+Two graphs, both shaped for blockwise streaming from the rust coordinator
+(documents arrive in batches of D, the vocabulary in blocks of VB):
+
+- ``perplexity_graph`` — per-document log-likelihood of a (D, VB) count
+  block given raw PS count tables; computes theta and the phi block, then
+  calls the L1 Pallas kernel for the matmul/log/reduce hot-spot.
+- ``em_estep_graph`` — one blockwise variational-EM E-step (the Spark
+  MLlib EM baseline's inner loop) over the same layout.
+
+All inputs are f32 tensors (counts are exact integers well below 2^24, so
+f32 is lossless) plus f32 scalars for the hyper-parameters. Rust pads
+D/K/VB up to the compiled sizes; padded topics use zero theta mass and
+padded vocabulary columns carry zero counts, so they contribute nothing.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.doclik import doc_loglik
+
+
+def perplexity_graph(n_dk, n_wk_t, n_k, counts, alpha, beta, vocab_size,
+                     k_real, use_pallas=True, tile_v=256):
+    """Per-document log-likelihood for one (doc batch, vocab block).
+
+    Args:
+      n_dk:    (D, K)  document-topic counts of the batch.
+      n_wk_t:  (K, VB) word-topic counts of the vocab block (transposed).
+      n_k:     (K,)    global topic totals.
+      counts:  (D, VB) bag-of-words counts of the batch on this block.
+      alpha, beta: scalar hyper-parameters.
+      vocab_size:  scalar FULL vocabulary size (phi denominator).
+      k_real:  scalar number of REAL topics (<= compiled K). Topic slots
+        >= k_real are padding: they are masked out of theta exactly, so a
+        model with any K can run on a larger compiled K without error.
+      use_pallas:  embed the Pallas kernel (True) or the pure-jnp
+        reference (False — compiled as the `_ref` artifact variant used
+        for cross-checking from rust).
+
+    Returns:
+      1-tuple of (D,) log-likelihood (tuple because the AOT bridge lowers
+      with return_tuple=True).
+    """
+    k_pad = n_dk.shape[1]
+    mask = (jnp.arange(k_pad, dtype=jnp.float32) < k_real).astype(jnp.float32)
+    n_dk = n_dk.astype(jnp.float32) * mask[None, :]
+    # theta over the real topics only: padded slots get exactly 0 mass.
+    denom = jnp.sum(n_dk, axis=1, keepdims=True) + alpha * k_real
+    theta = (n_dk + alpha * mask[None, :]) / denom
+    phi = ref.phi_from_counts(n_wk_t, n_k, beta, vocab_size)
+    if use_pallas:
+        out = doc_loglik(theta, phi, counts, tile_v=tile_v)
+    else:
+        out = ref.doc_loglik_ref(theta, phi, counts)
+    return (out,)
+
+
+def em_estep_graph(n_dk, n_wk_t, n_k, counts, alpha, beta, vocab_size):
+    """Blockwise EM E-step; see ref.em_estep_ref for the math.
+
+    Returns:
+      (new_nwk_t (K, VB), new_ndk_partial (D, K)).
+    """
+    return ref.em_estep_ref(n_dk, n_wk_t, n_k, counts, alpha, beta, vocab_size)

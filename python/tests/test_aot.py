@@ -1,0 +1,43 @@
+"""AOT manifest consistency tests (run after `make artifacts`)."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built; run `make artifacts`")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_version_and_files_exist():
+    m = manifest()
+    assert m["version"] == 1
+    assert len(m["artifacts"]) >= 3
+    for a in m["artifacts"]:
+        p = os.path.join(ART, a["file"])
+        assert os.path.exists(p), a["file"]
+        assert os.path.getsize(p) > 100
+
+
+def test_manifest_covers_paper_k_range():
+    m = manifest()
+    ks = sorted(a["k"] for a in m["artifacts"] if a["name"] == "perplexity")
+    assert any(k >= 80 for k in ks), "Table 1 K sweep needs K>=80"
+    assert any(k >= 1000 for k in ks), "web-scale run needs K>=1000"
+
+
+def test_hlo_text_is_parseable_shape():
+    m = manifest()
+    a = m["artifacts"][0]
+    with open(os.path.join(ART, a["file"])) as f:
+        text = f.read()
+    assert "HloModule" in text
+    assert "f32" in text
+

@@ -1,0 +1,143 @@
+"""L1 correctness: the Pallas doclik kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; numpy.testing asserts closeness.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.doclik import (
+    doc_loglik,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+
+hypothesis.settings.register_profile(
+    "ci", settings(max_examples=25, deadline=None)
+)
+hypothesis.settings.load_profile("ci")
+
+
+def random_case(rng, d, k, v, dtype=np.float32, sparsity=0.5):
+    theta = rng.dirichlet(np.full(k, 0.3), size=d).astype(dtype)
+    phi = rng.dirichlet(np.full(v, 0.1), size=k).astype(dtype)
+    counts = rng.poisson(1.0, size=(d, v)).astype(dtype)
+    counts *= (rng.random((d, v)) > sparsity).astype(dtype)
+    return theta, phi, counts
+
+
+@given(
+    d=st.sampled_from([1, 3, 8, 64]),
+    k=st.sampled_from([2, 8, 128]),
+    vmul=st.sampled_from([1, 2, 4]),
+    tile=st.sampled_from([128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_shapes(d, k, vmul, tile, seed):
+    v = tile * vmul
+    rng = np.random.default_rng(seed)
+    theta, phi, counts = random_case(rng, d, k, v)
+    got = np.asarray(doc_loglik(theta, phi, counts, tile_v=tile))
+    want = np.asarray(ref.doc_loglik_ref(theta, phi, counts))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@given(
+    dtype=st.sampled_from([np.float32, np.float64, np.int32]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_dtype_coercion(dtype, seed):
+    rng = np.random.default_rng(seed)
+    d, k, v = 4, 8, 256
+    theta, phi, counts = random_case(rng, d, k, v)
+    counts = counts.astype(dtype)
+    got = np.asarray(doc_loglik(theta, phi, counts))
+    want = np.asarray(ref.doc_loglik_ref(theta, phi, counts))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_zero_counts_give_zero():
+    d, k, v = 8, 16, 512
+    rng = np.random.default_rng(0)
+    theta, phi, _ = random_case(rng, d, k, v)
+    counts = np.zeros((d, v), np.float32)
+    got = np.asarray(doc_loglik(theta, phi, counts))
+    np.testing.assert_array_equal(got, np.zeros(d, np.float32))
+
+
+def test_padded_columns_contribute_nothing():
+    # Padding the vocab block with zero-count columns must not change the
+    # result even though the padded probabilities are degenerate.
+    d, k, v = 8, 16, 256
+    rng = np.random.default_rng(1)
+    theta, phi, counts = random_case(rng, d, k, v)
+    base = np.asarray(doc_loglik(theta, phi, counts))
+    phi_pad = np.concatenate([phi, np.zeros((k, 256), np.float32)], axis=1)
+    counts_pad = np.concatenate([counts, np.zeros((d, 256), np.float32)], axis=1)
+    padded = np.asarray(doc_loglik(theta, phi_pad, counts_pad))
+    np.testing.assert_allclose(padded, base, rtol=1e-6)
+
+
+def test_padded_topics_contribute_nothing():
+    d, k, v = 8, 16, 256
+    rng = np.random.default_rng(2)
+    theta, phi, counts = random_case(rng, d, k, v)
+    base = np.asarray(doc_loglik(theta, phi, counts))
+    theta_pad = np.concatenate([theta, np.zeros((d, 16), np.float32)], axis=1)
+    phi_pad = np.concatenate([phi, np.full((16, v), 1.0 / v, np.float32)], axis=0)
+    padded = np.asarray(doc_loglik(theta_pad, phi_pad, counts))
+    np.testing.assert_allclose(padded, base, rtol=1e-5)
+
+
+def test_analytic_uniform_case():
+    # theta uniform, phi uniform: p = 1/V for every word, so
+    # loglik[d] = total_counts[d] * log(1/V).
+    d, k, v = 4, 8, 512
+    theta = np.full((d, k), 1.0 / k, np.float32)
+    phi = np.full((k, v), 1.0 / v, np.float32)
+    counts = np.zeros((d, v), np.float32)
+    counts[:, :3] = 2.0
+    got = np.asarray(doc_loglik(theta, phi, counts))
+    want = 6.0 * np.log(1.0 / v)
+    np.testing.assert_allclose(got, np.full(d, want, np.float32), rtol=1e-5)
+
+
+def test_known_tiny_case():
+    theta = np.array([[1.0, 0.0]], np.float32)
+    phi = np.array(
+        [[0.5] + [0.5 / 255] * 255, [1.0 / 256] * 256], np.float32
+    )
+    counts = np.zeros((1, 256), np.float32)
+    counts[0, 0] = 3.0
+    got = np.asarray(doc_loglik(theta, phi, counts, tile_v=128))
+    np.testing.assert_allclose(got, [3.0 * np.log(0.5)], rtol=1e-6)
+
+
+def test_tile_must_divide_v():
+    theta = np.ones((2, 4), np.float32) / 4
+    phi = np.ones((4, 300), np.float32) / 300
+    counts = np.ones((2, 300), np.float32)
+    with pytest.raises(AssertionError):
+        doc_loglik(theta, phi, counts, tile_v=256)
+
+
+def test_vmem_estimate_within_budget():
+    # Default production shape must fit VMEM (16 MB/core).
+    assert vmem_bytes(64, 1024, 256) < 16 * 1024 * 1024
+    # And the MXU utilization estimate is sane.
+    u = mxu_utilization_estimate(64, 128, 256)
+    assert 0.0 < u <= 1.0
+
+
+def test_jit_cache_stable_across_calls():
+    rng = np.random.default_rng(3)
+    theta, phi, counts = random_case(rng, 8, 16, 256)
+    a = np.asarray(doc_loglik(theta, phi, counts))
+    b = np.asarray(doc_loglik(theta, phi, counts))
+    np.testing.assert_array_equal(a, b)

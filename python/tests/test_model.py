@@ -1,0 +1,119 @@
+"""L2 graph tests: perplexity graph (pallas vs ref paths) and EM E-step."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import em_estep_graph, perplexity_graph
+
+
+def make_counts(rng, d, k, v):
+    n_dk = rng.poisson(2.0, size=(d, k)).astype(np.float32)
+    n_wk_t = rng.poisson(3.0, size=(k, v)).astype(np.float32)
+    n_k = n_wk_t.sum(axis=1).astype(np.float32)
+    counts = rng.poisson(0.5, size=(d, v)).astype(np.float32)
+    return n_dk, n_wk_t, n_k, counts
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_pallas_and_ref_paths_agree(seed):
+    rng = np.random.default_rng(seed)
+    d, k, v = 8, 16, 512
+    n_dk, n_wk_t, n_k, counts = make_counts(rng, d, k, v)
+    (a,) = perplexity_graph(n_dk, n_wk_t, n_k, counts, 0.5, 0.01, float(v),
+                            float(k), use_pallas=True)
+    (b,) = perplexity_graph(n_dk, n_wk_t, n_k, counts, 0.5, 0.01, float(v),
+                            float(k), use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+def test_uniform_analytic_value():
+    # Zero counts everywhere: theta, phi uniform; one token per doc.
+    d, k, v = 4, 8, 256
+    n_dk = np.zeros((d, k), np.float32)
+    n_wk_t = np.zeros((k, v), np.float32)
+    n_k = np.zeros(k, np.float32)
+    counts = np.zeros((d, v), np.float32)
+    counts[:, 0] = 1.0
+    (ll,) = perplexity_graph(n_dk, n_wk_t, n_k, counts, 0.5, 1.0, float(v),
+                             float(k))
+    np.testing.assert_allclose(
+        np.asarray(ll), np.full(d, np.log(1.0 / v), np.float32), rtol=1e-4
+    )
+
+
+def test_perplexity_improves_with_matching_model():
+    # A model whose phi matches the docs' words should beat uniform.
+    d, k, v = 4, 8, 256
+    rng = np.random.default_rng(7)
+    n_dk = np.zeros((d, k), np.float32)
+    n_dk[:, 0] = 10.0  # all docs on topic 0
+    n_wk_t = np.zeros((k, v), np.float32)
+    n_wk_t[0, :16] = 100.0  # topic 0 concentrated on 16 words
+    n_k = n_wk_t.sum(axis=1)
+    counts = np.zeros((d, v), np.float32)
+    counts[:, :16] = rng.poisson(2.0, size=(d, 16)).astype(np.float32)
+    (good,) = perplexity_graph(n_dk, n_wk_t, n_k, counts, 0.1, 0.01, float(v),
+                               float(k))
+    (unif,) = perplexity_graph(
+        np.zeros_like(n_dk), np.zeros_like(n_wk_t), np.zeros_like(n_k),
+        counts, 0.1, 0.01, float(v), float(k))
+    assert np.asarray(good).sum() > np.asarray(unif).sum()
+
+
+def test_em_estep_conserves_token_mass():
+    rng = np.random.default_rng(11)
+    d, k, v = 8, 8, 128
+    n_dk, n_wk_t, n_k, counts = make_counts(rng, d, k, v)
+    new_nwk_t, new_ndk = em_estep_graph(
+        n_dk, n_wk_t, n_k, counts, 1.5, 1.1, float(v))
+    total = counts.sum()
+    np.testing.assert_allclose(np.asarray(new_nwk_t).sum(), total, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_ndk).sum(), total, rtol=1e-5)
+
+
+def test_em_estep_gamma_normalized_per_pair():
+    # For a single (d, v) pair with count 1, the contributions over k sum
+    # to exactly 1.
+    d, k, v = 1, 4, 128
+    n_dk = np.ones((d, k), np.float32)
+    n_wk_t = np.ones((k, v), np.float32) * 2
+    n_k = n_wk_t.sum(axis=1)
+    counts = np.zeros((d, v), np.float32)
+    counts[0, 5] = 1.0
+    new_nwk_t, new_ndk = em_estep_graph(
+        n_dk, n_wk_t, n_k, counts, 1.5, 1.1, float(v))
+    np.testing.assert_allclose(np.asarray(new_nwk_t)[:, 5].sum(), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_ndk).sum(), 1.0, rtol=1e-6)
+
+
+def test_em_estep_matches_ref():
+    rng = np.random.default_rng(13)
+    d, k, v = 4, 8, 128
+    n_dk, n_wk_t, n_k, counts = make_counts(rng, d, k, v)
+    a = em_estep_graph(n_dk, n_wk_t, n_k, counts, 1.5, 1.1, float(v))
+    b = ref.em_estep_ref(n_dk, n_wk_t, n_k, counts, 1.5, 1.1, float(v))
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+def test_k_real_masking_is_exact():
+    # A K=4 model evaluated on a K=16-compiled graph (padded slots) must
+    # equal the same model on a K=4 graph exactly.
+    rng = np.random.default_rng(21)
+    d, k, k_pad, v = 4, 4, 16, 256
+    n_dk, n_wk_t, n_k, counts = make_counts(rng, d, k, v)
+    (small,) = perplexity_graph(n_dk, n_wk_t, n_k, counts, 0.7, 0.01,
+                                float(v), float(k))
+    n_dk_p = np.zeros((d, k_pad), np.float32)
+    n_dk_p[:, :k] = n_dk
+    n_wk_p = np.zeros((k_pad, v), np.float32)
+    n_wk_p[:k] = n_wk_t
+    n_k_p = np.zeros(k_pad, np.float32)
+    n_k_p[:k] = n_k
+    (padded,) = perplexity_graph(n_dk_p, n_wk_p, n_k_p, counts, 0.7, 0.01,
+                                 float(v), float(k))
+    np.testing.assert_allclose(np.asarray(padded), np.asarray(small),
+                               rtol=1e-5, atol=1e-5)

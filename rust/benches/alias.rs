@@ -1,0 +1,44 @@
+//! Alias-table micro-benchmarks: O(K) build and O(1) sampling — the
+//! ingredient behind LightLDA's word proposal (paper §3 / Vose [14]).
+
+use glint_lda::lda::alias::AliasTable;
+use glint_lda::util::rng::Pcg64;
+use glint_lda::util::timer::{bench, fmt_secs};
+
+fn main() {
+    let mut rng = Pcg64::new(3);
+    println!("{:>8} {:>14} {:>16} {:>18}", "K", "build", "sample", "samples/s");
+    for &k in &[16usize, 64, 256, 1024, 4096] {
+        let weights: Vec<f64> = (0..k).map(|_| rng.f64() * 10.0 + 0.01).collect();
+        let build = bench(3, 20, || AliasTable::new(&weights));
+        let table = AliasTable::new(&weights);
+        let mut srng = Pcg64::new(9);
+        let sample = bench(3, 20, || {
+            let mut acc = 0u64;
+            for _ in 0..10_000 {
+                acc += table.sample(&mut srng) as u64;
+            }
+            acc
+        });
+        let per_sample = sample.mean / 10_000.0;
+        println!(
+            "{k:>8} {:>14} {:>16} {:>18.0}",
+            fmt_secs(build.mean),
+            fmt_secs(per_sample),
+            1.0 / per_sample
+        );
+    }
+    // O(1) check: per-sample cost at K=4096 within 3x of K=16.
+    let w16: Vec<f64> = (0..16).map(|i| i as f64 + 1.0).collect();
+    let w4096: Vec<f64> = (0..4096).map(|i| (i % 97) as f64 + 1.0).collect();
+    let t16 = AliasTable::new(&w16);
+    let t4096 = AliasTable::new(&w4096);
+    let mut srng = Pcg64::new(10);
+    let s16 = bench(3, 30, || (0..10_000).map(|_| t16.sample(&mut srng) as u64).sum::<u64>());
+    let mut srng = Pcg64::new(10);
+    let s4096 =
+        bench(3, 30, || (0..10_000).map(|_| t4096.sample(&mut srng) as u64).sum::<u64>());
+    let ratio = s4096.mean / s16.mean;
+    println!("\nper-sample cost K=4096 / K=16: {ratio:.2}x (O(1) expectation: ~1)");
+    assert!(ratio < 3.0, "sampling should be O(1) in K");
+}

@@ -1,0 +1,25 @@
+//! Regenerates the paper's Figure 4: top-5000 word frequencies of the
+//! (synthetic) ClueWeb12 corpus on log-log axes, plus the fitted Zipf
+//! exponent.
+
+use glint_lda::experiments::fig4;
+
+fn main() {
+    glint_lda::util::logger::set_level_str("info");
+    let scale: f64 = std::env::var("GLINT_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let r = fig4::run(&fig4::Fig4Config { scale, top: 5000, stride: 100 })
+        .expect("fig4 run");
+    println!(
+        "zipf fit over top-5000: log f = {:.2} {:+.3} log r (exponent {:.3})",
+        r.intercept, r.slope, -r.slope
+    );
+    println!("{}", r.report.to_table());
+    assert!(
+        (-1.6..=-0.7).contains(&r.slope),
+        "slope {} not web-like",
+        r.slope
+    );
+}

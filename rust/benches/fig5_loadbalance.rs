@@ -1,0 +1,24 @@
+//! Regenerates the paper's Figure 5: expected per-machine request share
+//! over 30 machines for cyclic/ordered, cyclic/shuffled and
+//! range/ordered layouts, validated against measured traffic from a real
+//! training run over the parameter server.
+
+use glint_lda::experiments::fig5;
+
+fn main() {
+    glint_lda::util::logger::set_level_str("info");
+    let scale: f64 = std::env::var("GLINT_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+    let r = fig5::run(&fig5::Fig5Config { scale, machines: 30, measure: true })
+        .expect("fig5 run");
+    println!("{}", r.report.to_table());
+    println!("imbalance (max/mean, 1.0 = perfect):");
+    for (name, f) in &r.imbalance {
+        println!("  {name:>18}: {f:.3}");
+    }
+    let get = |n: &str| r.imbalance.iter().find(|(x, _)| x == n).unwrap().1;
+    assert!(get("cyclic_ordered") < get("cyclic_shuffled"));
+    assert!(get("cyclic_ordered") < get("range_ordered"));
+}

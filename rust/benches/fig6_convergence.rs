@@ -1,0 +1,33 @@
+//! Regenerates the paper's Figure 6: perplexity over wall-clock time for
+//! the web-scale run (scaled; K=100 by default, K=1000 with
+//! GLINT_BENCH_TOPICS=1000 if you have the time budget).
+
+use glint_lda::experiments::fig6;
+
+fn main() {
+    glint_lda::util::logger::set_level_str("info");
+    let scale: f64 = std::env::var("GLINT_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.6);
+    let topics: u32 = std::env::var("GLINT_BENCH_TOPICS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let r = fig6::run(&fig6::Fig6Config {
+        scale,
+        num_topics: topics,
+        iterations: 25,
+        ..fig6::Fig6Config::default()
+    })
+    .expect("fig6 run");
+    println!("{}", r.report.to_table());
+    println!(
+        "final perplexity {:.1}; throughput {:.0} tokens/s",
+        r.final_perplexity, r.tokens_per_sec
+    );
+    assert!(
+        fig6::is_convergence_shaped(&r.report),
+        "curve must be convergence-shaped"
+    );
+}

@@ -1,0 +1,73 @@
+//! Parameter-server micro-benchmarks: pull/push throughput vs shard
+//! count and delta batch size, and the cost of the exactly-once
+//! hand-shake under message loss.
+
+use glint_lda::net::FaultPlan;
+use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
+use glint_lda::ps::config::PsConfig;
+use glint_lda::ps::server::ServerGroup;
+use glint_lda::util::rng::Pcg64;
+use glint_lda::util::timer::Stopwatch;
+
+fn setup(shards: usize, plan: FaultPlan) -> (ServerGroup, BigMatrix<i64>) {
+    let cfg = PsConfig::with_shards(shards);
+    let group = ServerGroup::start(cfg.clone(), plan, 11);
+    let client = PsClient::connect(&group.transport(), cfg);
+    let m = client.matrix::<i64>(50_000, 64).expect("matrix");
+    (group, m)
+}
+
+fn bench_push(m: &BigMatrix<i64>, batch: usize, rounds: usize) -> f64 {
+    let mut rng = Pcg64::new(5);
+    let deltas = CoordDeltas {
+        rows: (0..batch).map(|_| rng.below(50_000) as u64).collect(),
+        cols: (0..batch).map(|_| rng.below(64) as u32).collect(),
+        values: vec![1i64; batch],
+    };
+    let sw = Stopwatch::new();
+    for _ in 0..rounds {
+        m.push_coords(&deltas).expect("push");
+    }
+    (batch * rounds) as f64 / sw.secs()
+}
+
+fn bench_pull(m: &BigMatrix<i64>, rows: usize, rounds: usize) -> f64 {
+    let mut rng = Pcg64::new(6);
+    let ids: Vec<u64> = (0..rows).map(|_| rng.below(50_000) as u64).collect();
+    let sw = Stopwatch::new();
+    for _ in 0..rounds {
+        let v = m.pull_rows(&ids).expect("pull");
+        std::hint::black_box(v);
+    }
+    (rows * rounds) as f64 / sw.secs()
+}
+
+fn main() {
+    println!("== push throughput (deltas/s) vs shards, batch=100k ==");
+    for shards in [1, 2, 4, 8, 16, 30] {
+        let (_g, m) = setup(shards, FaultPlan::reliable());
+        let rate = bench_push(&m, 100_000, 10);
+        println!("  shards {shards:>3}: {rate:>12.0} deltas/s");
+    }
+    println!("== push throughput vs batch size (4 shards) ==");
+    let (_g, m) = setup(4, FaultPlan::reliable());
+    for batch in [1_000, 10_000, 100_000, 500_000] {
+        let rate = bench_push(&m, batch, (1_000_000 / batch).max(2));
+        println!("  batch {batch:>7}: {rate:>12.0} deltas/s");
+    }
+    println!("== pull throughput (rows/s, K=64) vs rows per request ==");
+    for rows in [64, 512, 4096, 16384] {
+        let rate = bench_pull(&m, rows, (100_000 / rows).max(2));
+        println!("  rows {rows:>6}: {rate:>12.0} rows/s");
+    }
+    println!("== exactly-once overhead under loss (4 shards, batch=100k) ==");
+    for (label, plan) in [
+        ("reliable", FaultPlan::reliable()),
+        ("1% loss", FaultPlan::lossy(0.01, 0.0)),
+        ("5% loss", FaultPlan::lossy(0.05, 0.01)),
+    ] {
+        let (_g, m) = setup(4, plan);
+        let rate = bench_push(&m, 100_000, 5);
+        println!("  {label:>9}: {rate:>12.0} deltas/s");
+    }
+}

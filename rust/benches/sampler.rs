@@ -1,0 +1,62 @@
+//! The paper's amortized-O(1) claim (§3): per-token sampling cost of
+//! LightLDA (MH + alias) vs exact collapsed Gibbs as K grows.
+//!
+//! Expected shape: Gibbs tokens/s degrades ~linearly with K; LightLDA
+//! stays (nearly) flat — this is what makes K=1000 on 27 TB feasible.
+
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::lda::gibbs::{sweep, LocalModel};
+use glint_lda::lda::hyper::LdaHyper;
+use glint_lda::lda::lightlda::sweep_light;
+use glint_lda::util::rng::Pcg64;
+use glint_lda::util::timer::Stopwatch;
+
+fn main() {
+    let corpus = generate(&SynthConfig {
+        num_docs: 1500,
+        vocab_size: 4000,
+        num_topics: 32,
+        avg_doc_len: 80.0,
+        ..Default::default()
+    });
+    let tokens = corpus.num_tokens();
+    println!("corpus: {} docs, {tokens} tokens", corpus.num_docs());
+    println!(
+        "{:>6} {:>16} {:>16} {:>8}",
+        "K", "gibbs tok/s", "lightlda tok/s", "speedup"
+    );
+    let mut gibbs_rates = Vec::new();
+    let mut light_rates = Vec::new();
+    for &k in &[20u32, 40, 80, 160, 320, 640] {
+        let hyper = LdaHyper::default_for(k as usize);
+        // Exact Gibbs.
+        let mut m = LocalModel::init_random(&corpus, k, hyper, 1);
+        let mut rng = Pcg64::new(2);
+        sweep(&mut m, &corpus, &mut rng); // warmup
+        let sw = Stopwatch::new();
+        sweep(&mut m, &corpus, &mut rng);
+        let gibbs_rate = tokens as f64 / sw.secs();
+        // LightLDA.
+        let mut m = LocalModel::init_random(&corpus, k, hyper, 3);
+        let mut rng = Pcg64::new(4);
+        sweep_light(&mut m, &corpus, 2, &mut rng); // warmup
+        let sw = Stopwatch::new();
+        sweep_light(&mut m, &corpus, 2, &mut rng);
+        let light_rate = tokens as f64 / sw.secs();
+        println!(
+            "{k:>6} {gibbs_rate:>16.0} {light_rate:>16.0} {:>7.1}x",
+            light_rate / gibbs_rate
+        );
+        gibbs_rates.push(gibbs_rate);
+        light_rates.push(light_rate);
+    }
+    // Shape assertions: Gibbs must degrade strongly with K (>=8x from
+    // K=20 to K=640); LightLDA must stay within 4x.
+    let g_drop = gibbs_rates[0] / gibbs_rates[gibbs_rates.len() - 1];
+    let l_drop = light_rates[0] / light_rates[light_rates.len() - 1];
+    println!("\ngibbs slowdown 20->640: {g_drop:.1}x; lightlda: {l_drop:.1}x");
+    // Thresholds leave headroom for machine-load noise: the contrast to
+    // verify is a ~32x linear degradation vs a small constant-ish factor.
+    assert!(g_drop > 8.0, "gibbs should be ~linear in K (got {g_drop:.1}x)");
+    assert!(l_drop < g_drop / 3.0, "lightlda should be ~flat in K (got {l_drop:.1}x)");
+}

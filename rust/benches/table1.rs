@@ -1,0 +1,28 @@
+//! Regenerates the paper's Table 1 (perplexity / runtime / shuffle write
+//! for ours vs Spark EM vs Spark Online over size and K sweeps).
+//!
+//! Scale with the env var `GLINT_BENCH_SCALE` (default 0.35 keeps
+//! `cargo bench` under a few minutes; the EXPERIMENTS.md numbers use 1.0
+//! via `glint-lda table1 --scale 1.0`).
+
+use glint_lda::experiments::table1;
+
+fn main() {
+    glint_lda::util::logger::set_level_str("info");
+    let scale: f64 = std::env::var("GLINT_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.35);
+    let cfg = table1::Table1Config {
+        scale,
+        iterations: 15,
+        ..table1::Table1Config::default()
+    };
+    let report = table1::run(&cfg).expect("table1 run");
+    println!("{}", table1::render_paper_style(&report));
+    println!("csv:\n{}", report.to_csv());
+    assert!(
+        table1::perplexity_parity(&report, 0.5),
+        "perplexity parity violated"
+    );
+}

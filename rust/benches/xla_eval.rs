@@ -1,0 +1,63 @@
+//! XLA/Pallas evaluation-path benchmark: rust evaluator vs the
+//! AOT-compiled `perplexity` graph (Pallas kernel) vs the `_ref`
+//! (pure-jnp lowering) artifact — the L1/L2 perf ablation.
+
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::eval::perplexity::{log_likelihood, TopicModel};
+use glint_lda::eval::xla::xla_log_likelihood;
+use glint_lda::lda::gibbs::LocalModel;
+use glint_lda::lda::hyper::LdaHyper;
+use glint_lda::runtime::engine::Engine;
+use glint_lda::util::rng::Pcg64;
+use glint_lda::util::timer::Stopwatch;
+
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(engine) = Engine::new(&dir) else {
+        println!("artifacts missing — run `make artifacts`; skipping xla_eval bench");
+        return;
+    };
+    let corpus = generate(&SynthConfig {
+        num_docs: 1000,
+        vocab_size: 8000,
+        num_topics: 32,
+        avg_doc_len: 80.0,
+        ..Default::default()
+    });
+    let k = 128u32;
+    let mut m = LocalModel::init_random(&corpus, k, LdaHyper::default_for(k as usize), 1);
+    let mut rng = Pcg64::new(2);
+    glint_lda::lda::gibbs::sweep(&mut m, &corpus, &mut rng);
+    let tm = TopicModel::from_local(&m);
+    let tokens = corpus.num_tokens();
+
+    // Rust scalar evaluator.
+    let sw = Stopwatch::new();
+    let (ll_rust, _) = log_likelihood(&tm, &corpus, &m.doc_counts);
+    let t_rust = sw.secs();
+    println!(
+        "rust evaluator:        {t_rust:.3}s ({:.1} M tokens/s), ll={ll_rust:.1}",
+        tokens as f64 / t_rust / 1e6
+    );
+
+    // XLA with Pallas kernel.
+    let sw = Stopwatch::new();
+    let (ll_xla, _) = xla_log_likelihood(&engine, &tm, &corpus, &m.doc_counts).unwrap();
+    let t_xla = sw.secs();
+    println!(
+        "xla (pallas kernel):   {t_xla:.3}s ({:.1} M tokens/s), ll={ll_xla:.1}",
+        tokens as f64 / t_xla / 1e6
+    );
+    // Second run: executable already compiled (steady-state cost).
+    let sw = Stopwatch::new();
+    let (_, _) = xla_log_likelihood(&engine, &tm, &corpus, &m.doc_counts).unwrap();
+    let t_xla2 = sw.secs();
+    println!(
+        "xla (pallas, warm):    {t_xla2:.3}s ({:.1} M tokens/s)",
+        tokens as f64 / t_xla2 / 1e6
+    );
+
+    let rel = ((ll_rust - ll_xla) / ll_rust).abs();
+    println!("agreement: rel diff {rel:.2e}");
+    assert!(rel < 1e-4);
+}

@@ -1,0 +1,20 @@
+//! Comparison baselines: the two LDA implementations Spark MLlib ships,
+//! re-implemented from their source algorithms (paper §4 compares against
+//! both on ClueWeb12 B13 subsets, Table 1).
+//!
+//! - [`em`] — the **variational EM** algorithm (Asuncion et al., UAI'09),
+//!   MLlib's `EMLDAOptimizer`. Each iteration recomputes soft topic
+//!   responsibilities for every token from the previous iteration's
+//!   expected counts and rebuilds the count tables — O(K) per token, and
+//!   in Spark the rebuilt `V x K` + `D x K` tables are *shuffled* across
+//!   the cluster each iteration (the paper's shuffle-write column).
+//! - [`online`] — **Online variational Bayes** (Hoffman et al.,
+//!   NIPS'10), MLlib's `OnlineLDAOptimizer`: minibatch stochastic updates
+//!   of the topic-word variational parameter λ. No shuffle (driver-side
+//!   aggregation), but O(K) per token with digamma-heavy inner loops.
+//! - [`shuffle`] — the shuffle-write accounting model that maps our
+//!   in-process execution onto the bytes Spark would move.
+
+pub mod em;
+pub mod online;
+pub mod shuffle;

@@ -1,0 +1,87 @@
+//! Shuffle-write accounting.
+//!
+//! Our baselines run in one process, so nothing is literally shuffled.
+//! To reproduce Table 1's shuffle-write column we account for the bytes
+//! Spark's execution of the same algorithm would write between stages:
+//!
+//! - **EM (GraphX `EMLDAOptimizer`)**: every iteration re-aggregates the
+//!   topic responsibilities along the document–word bipartite graph and
+//!   re-materializes both vertex tables. Shuffled bytes per iteration ≈
+//!   `8 * K * (D + V + E)` where `E` is the number of distinct
+//!   (doc, word) edges — K doubles per vertex state and per edge
+//!   message. This is linear in both corpus size and K, which is exactly
+//!   the shape of the paper's measurements (6.2 GB at 10 %/K=20 growing
+//!   to 23.9 GB at 10 %/K=80).
+//! - **Online LDA**: sufficient statistics are `treeAggregate`d to the
+//!   driver — no shuffle write (the paper reports 0).
+//! - **Ours**: the parameter server replaces shuffles entirely — 0 by
+//!   construction; network traffic is push/pull messages, measured
+//!   separately by [`crate::net::stats`].
+
+use crate::corpus::dataset::Corpus;
+
+/// Distinct (document, word) edge count of the bipartite graph.
+pub fn distinct_edges(corpus: &Corpus) -> u64 {
+    let mut edges = 0u64;
+    let mut seen = std::collections::HashSet::new();
+    for doc in &corpus.docs {
+        seen.clear();
+        for &w in &doc.tokens {
+            if seen.insert(w) {
+                edges += 1;
+            }
+        }
+    }
+    edges
+}
+
+/// Bytes the GraphX EM implementation would shuffle in one iteration.
+pub fn em_shuffle_bytes_per_iter(corpus: &Corpus, k: u32, edges: u64) -> u64 {
+    let d = corpus.num_docs() as u64;
+    let v = corpus.vocab_size as u64;
+    8 * k as u64 * (d + v + edges)
+}
+
+/// Total EM shuffle bytes over a run.
+pub fn em_shuffle_bytes(corpus: &Corpus, k: u32, iterations: u32) -> u64 {
+    let edges = distinct_edges(corpus);
+    em_shuffle_bytes_per_iter(corpus, k, edges) * iterations as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::dataset::Document;
+
+    fn corpus() -> Corpus {
+        Corpus {
+            docs: vec![
+                Document { tokens: vec![0, 1, 0, 2] }, // 3 distinct
+                Document { tokens: vec![1, 1] },       // 1 distinct
+            ],
+            vocab_size: 3,
+            vocab: vec![],
+        }
+    }
+
+    #[test]
+    fn edge_count_distinct_per_doc() {
+        assert_eq!(distinct_edges(&corpus()), 4);
+    }
+
+    #[test]
+    fn bytes_linear_in_k() {
+        let c = corpus();
+        let b20 = em_shuffle_bytes(&c, 20, 10);
+        let b40 = em_shuffle_bytes(&c, 40, 10);
+        assert_eq!(b40, 2 * b20);
+    }
+
+    #[test]
+    fn bytes_grow_with_corpus() {
+        let small = corpus();
+        let mut big = corpus();
+        big.docs.extend(small.docs.clone());
+        assert!(em_shuffle_bytes(&big, 20, 1) > em_shuffle_bytes(&small, 20, 1));
+    }
+}

@@ -1,0 +1,310 @@
+//! Bag-of-words corpus representation, partitioning, and binary I/O.
+//!
+//! Documents store token word-ids (with repetition, in occurrence order),
+//! mirroring how the Spark implementation carries RDD partitions of
+//! sampled documents. The corpus can be split into worker partitions
+//! (the RDD analogue) and serialized for checkpointing (§3.5).
+
+use std::path::Path;
+
+use crate::util::codec::{Reader, Writer};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// One document: a sequence of word ids.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Document {
+    /// Word ids in occurrence order (ids are frequency ranks: 0 = most
+    /// common word in the corpus).
+    pub tokens: Vec<u32>,
+}
+
+impl Document {
+    /// Number of tokens.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// True if no tokens.
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// A bag-of-words corpus with a frequency-ordered vocabulary.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Corpus {
+    /// Documents.
+    pub docs: Vec<Document>,
+    /// Vocabulary size (word ids are `0..vocab_size`).
+    pub vocab_size: u32,
+    /// Optional vocabulary strings, index = word id. Empty for synthetic
+    /// corpora (ids only).
+    pub vocab: Vec<String>,
+}
+
+impl Corpus {
+    /// Total token count.
+    pub fn num_tokens(&self) -> u64 {
+        self.docs.iter().map(|d| d.len() as u64).sum()
+    }
+
+    /// Number of documents.
+    pub fn num_docs(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// Per-word-id occurrence counts (length `vocab_size`).
+    pub fn word_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.vocab_size as usize];
+        for d in &self.docs {
+            for &w in &d.tokens {
+                counts[w as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Check the frequency-ordering invariant: word id 0 is the most
+    /// frequent, ids ascend with decreasing frequency (ties allowed).
+    pub fn is_frequency_ordered(&self) -> bool {
+        let counts = self.word_counts();
+        counts.windows(2).all(|w| w[0] >= w[1])
+    }
+
+    /// Split into `n` contiguous partitions of roughly equal *token*
+    /// counts (the Spark RDD analogue; balancing tokens rather than doc
+    /// counts keeps worker sampling time even). Returns index ranges.
+    pub fn partitions(&self, n: usize) -> Vec<std::ops::Range<usize>> {
+        let n = n.max(1);
+        let total = self.num_tokens();
+        let target = total / n as u64;
+        let mut ranges = Vec::with_capacity(n);
+        let mut start = 0usize;
+        let mut acc = 0u64;
+        let mut produced = 0usize;
+        for (i, d) in self.docs.iter().enumerate() {
+            acc += d.len() as u64;
+            // Leave enough docs for remaining partitions.
+            if acc >= target && produced + 1 < n && self.docs.len() - (i + 1) >= n - produced - 1 {
+                ranges.push(start..i + 1);
+                start = i + 1;
+                acc = 0;
+                produced += 1;
+            }
+        }
+        ranges.push(start..self.docs.len());
+        while ranges.len() < n {
+            ranges.push(self.docs.len()..self.docs.len());
+        }
+        ranges
+    }
+
+    /// Deterministic train/test split: every `holdout_every`-th document
+    /// goes to the test set.
+    pub fn split_holdout(&self, holdout_every: usize) -> (Corpus, Corpus) {
+        let mut train = Corpus { vocab_size: self.vocab_size, vocab: self.vocab.clone(), ..Default::default() };
+        let mut test = Corpus { vocab_size: self.vocab_size, vocab: self.vocab.clone(), ..Default::default() };
+        for (i, d) in self.docs.iter().enumerate() {
+            if holdout_every > 0 && (i + 1) % holdout_every == 0 {
+                test.docs.push(d.clone());
+            } else {
+                train.docs.push(d.clone());
+            }
+        }
+        (train, test)
+    }
+
+    /// Take a prefix subset containing roughly `fraction` of documents
+    /// (used for the paper's 2.5%–10% scaling experiments). Documents are
+    /// shuffled with `seed` first so the subset is representative.
+    pub fn subset(&self, fraction: f64, seed: u64) -> Corpus {
+        let mut order: Vec<usize> = (0..self.docs.len()).collect();
+        let mut rng = Pcg64::new(seed);
+        rng.shuffle(&mut order);
+        let keep = ((self.docs.len() as f64 * fraction).round() as usize).max(1);
+        let docs = order[..keep.min(order.len())]
+            .iter()
+            .map(|&i| self.docs[i].clone())
+            .collect();
+        Corpus { docs, vocab_size: self.vocab_size, vocab: self.vocab.clone() }
+    }
+
+    // --- binary I/O (checkpoints, corpus caching) -----------------------
+
+    const MAGIC: u32 = 0x474c_4331; // "GLC1"
+
+    /// Serialize to bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(16 + self.num_tokens() as usize * 2);
+        w.u32(Self::MAGIC);
+        w.u32(self.vocab_size);
+        w.usize(self.vocab.len());
+        for s in &self.vocab {
+            w.str(s);
+        }
+        w.usize(self.docs.len());
+        for d in &self.docs {
+            w.usize(d.tokens.len());
+            for &t in &d.tokens {
+                w.varint(t as u64);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Deserialize from bytes.
+    pub fn decode(bytes: &[u8]) -> Result<Corpus> {
+        let mut r = Reader::new(bytes);
+        if r.u32()? != Self::MAGIC {
+            return Err(Error::Decode("not a corpus file (bad magic)".into()));
+        }
+        let vocab_size = r.u32()?;
+        let nv = r.usize()?;
+        let mut vocab = Vec::with_capacity(nv);
+        for _ in 0..nv {
+            vocab.push(r.str()?);
+        }
+        let nd = r.usize()?;
+        let mut docs = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            let nt = r.usize()?;
+            let mut tokens = Vec::with_capacity(nt);
+            for _ in 0..nt {
+                let t = r.varint()? as u32;
+                if t >= vocab_size {
+                    return Err(Error::Decode(format!(
+                        "token id {t} >= vocab size {vocab_size}"
+                    )));
+                }
+                tokens.push(t);
+            }
+            docs.push(Document { tokens });
+        }
+        Ok(Corpus { docs, vocab_size, vocab })
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.encode())?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn load(path: &Path) -> Result<Corpus> {
+        let bytes = std::fs::read(path)?;
+        Corpus::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_corpus() -> Corpus {
+        Corpus {
+            docs: vec![
+                Document { tokens: vec![0, 1, 0, 2] },
+                Document { tokens: vec![1, 0] },
+                Document { tokens: vec![3, 0, 1] },
+                Document { tokens: vec![0] },
+            ],
+            vocab_size: 4,
+            vocab: vec!["the".into(), "cat".into(), "sat".into(), "mat".into()],
+        }
+    }
+
+    #[test]
+    fn counts_and_ordering() {
+        let c = sample_corpus();
+        assert_eq!(c.num_tokens(), 10);
+        assert_eq!(c.word_counts(), vec![5, 3, 1, 1]);
+        assert!(c.is_frequency_ordered());
+    }
+
+    #[test]
+    fn unordered_detected() {
+        let mut c = sample_corpus();
+        c.docs.push(Document { tokens: vec![3, 3, 3, 3, 3] });
+        assert!(!c.is_frequency_ordered());
+    }
+
+    #[test]
+    fn roundtrip_binary() {
+        let c = sample_corpus();
+        let decoded = Corpus::decode(&c.encode()).unwrap();
+        assert_eq!(c, decoded);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Corpus::decode(&[1, 2, 3]).is_err());
+        // Token id out of range.
+        let mut w = Writer::new();
+        w.u32(0x474c_4331);
+        w.u32(2); // vocab_size = 2
+        w.usize(0);
+        w.usize(1);
+        w.usize(1);
+        w.varint(5); // token 5 >= 2
+        assert!(Corpus::decode(&w.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn partitions_cover_disjointly() {
+        let c = sample_corpus();
+        for n in 1..=6 {
+            let parts = c.partitions(n);
+            assert_eq!(parts.len(), n);
+            let covered: usize = parts.iter().map(|r| r.len()).sum();
+            assert_eq!(covered, c.num_docs());
+            for w in parts.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_balance_tokens() {
+        let docs: Vec<Document> =
+            (0..100).map(|i| Document { tokens: vec![0; 1 + i % 7] }).collect();
+        let c = Corpus { docs, vocab_size: 1, vocab: vec![] };
+        let parts = c.partitions(4);
+        let tokens: Vec<u64> = parts
+            .iter()
+            .map(|r| c.docs[r.clone()].iter().map(|d| d.len() as u64).sum())
+            .collect();
+        let max = *tokens.iter().max().unwrap() as f64;
+        let min = *tokens.iter().min().unwrap() as f64;
+        assert!(max / min < 1.5, "token imbalance: {tokens:?}");
+    }
+
+    #[test]
+    fn holdout_split() {
+        let c = sample_corpus();
+        let (train, test) = c.split_holdout(2);
+        assert_eq!(train.num_docs(), 2);
+        assert_eq!(test.num_docs(), 2);
+        assert_eq!(train.vocab_size, 4);
+    }
+
+    #[test]
+    fn subset_size() {
+        let docs: Vec<Document> = (0..1000).map(|_| Document { tokens: vec![0] }).collect();
+        let c = Corpus { docs, vocab_size: 1, vocab: vec![] };
+        let s = c.subset(0.1, 1);
+        assert_eq!(s.num_docs(), 100);
+        let s2 = c.subset(0.1, 1);
+        assert_eq!(s, s2, "subset is deterministic for a seed");
+    }
+
+    #[test]
+    fn save_load_file() {
+        let c = sample_corpus();
+        let path = std::env::temp_dir().join("glint_test_corpus.bin");
+        c.save(&path).unwrap();
+        let loaded = Corpus::load(&path).unwrap();
+        assert_eq!(c, loaded);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,24 @@
+//! Corpus substrate: the ClueWeb12 analogue.
+//!
+//! The paper trains on ClueWeb12, a 27 TB web crawl we cannot ship.
+//! Everything the evaluation measures depends on corpus *statistics* —
+//! the Zipfian word-frequency law (Fig. 4), document length distribution,
+//! and vocabulary size — so [`synth`] generates corpora from an LDA
+//! generative process whose word marginals follow a fitted Zipf law
+//! (see DESIGN.md §Substitutions).
+//!
+//! A real-text path is also provided and exercised in tests/examples:
+//! [`tokenizer`] → [`stopwords`] → [`stemmer`] (Porter) → [`vocab`]
+//! (frequency-ordered, which is what makes the cyclic partitioning
+//! load-balanced, §3.2).
+
+pub mod dataset;
+pub mod stemmer;
+pub mod stopwords;
+pub mod synth;
+pub mod tokenizer;
+pub mod vocab;
+pub mod zipf;
+
+pub use dataset::{Corpus, Document};
+pub use synth::{generate, SynthConfig};

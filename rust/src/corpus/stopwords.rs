@@ -1,0 +1,74 @@
+//! English stop-word filtering (paper §3.2: "after stopword removal and
+//! stemming").
+//!
+//! Uses a compact embedded list (the classic SMART-derived set used by
+//! most IR toolkits, trimmed to high-frequency function words).
+
+use std::collections::HashSet;
+use std::sync::OnceLock;
+
+/// The embedded stop-word list.
+pub const STOPWORDS: &[&str] = &[
+    "a", "about", "above", "after", "again", "against", "all", "am", "an", "and", "any",
+    "are", "aren", "as", "at", "be", "because", "been", "before", "being", "below",
+    "between", "both", "but", "by", "can", "cannot", "could", "couldn", "did", "didn",
+    "do", "does", "doesn", "doing", "don", "down", "during", "each", "few", "for",
+    "from", "further", "had", "hadn", "has", "hasn", "have", "haven", "having", "he",
+    "her", "here", "hers", "herself", "him", "himself", "his", "how", "i", "if", "in",
+    "into", "is", "isn", "it", "its", "itself", "just", "me", "more", "most", "mustn",
+    "my", "myself", "no", "nor", "not", "now", "of", "off", "on", "once", "only", "or",
+    "other", "ought", "our", "ours", "ourselves", "out", "over", "own", "same", "shan",
+    "she", "should", "shouldn", "so", "some", "such", "than", "that", "the", "their",
+    "theirs", "them", "themselves", "then", "there", "these", "they", "this", "those",
+    "through", "to", "too", "under", "until", "up", "very", "was", "wasn", "we", "were",
+    "weren", "what", "when", "where", "which", "while", "who", "whom", "why", "will",
+    "with", "won", "would", "wouldn", "you", "your", "yours", "yourself", "yourselves",
+];
+
+fn set() -> &'static HashSet<&'static str> {
+    static SET: OnceLock<HashSet<&'static str>> = OnceLock::new();
+    SET.get_or_init(|| STOPWORDS.iter().copied().collect())
+}
+
+/// Is `word` (already lower-cased) a stop word?
+pub fn is_stopword(word: &str) -> bool {
+    set().contains(word)
+}
+
+/// Remove stop words in place.
+pub fn remove_stopwords(tokens: &mut Vec<String>) {
+    tokens.retain(|t| !is_stopword(t));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn common_words_are_stopwords() {
+        for w in ["the", "and", "of", "is", "with"] {
+            assert!(is_stopword(w), "{w}");
+        }
+    }
+
+    #[test]
+    fn content_words_are_not() {
+        for w in ["recipe", "gold", "diamond", "jewelry", "spices"] {
+            assert!(!is_stopword(w), "{w}");
+        }
+    }
+
+    #[test]
+    fn removal_filters_in_place() {
+        let mut toks: Vec<String> =
+            ["the", "gold", "and", "diamond", "ring"].iter().map(|s| s.to_string()).collect();
+        remove_stopwords(&mut toks);
+        assert_eq!(toks, vec!["gold", "diamond", "ring"]);
+    }
+
+    #[test]
+    fn list_is_deduplicated() {
+        let uniq: HashSet<_> = STOPWORDS.iter().collect();
+        assert_eq!(uniq.len(), STOPWORDS.len());
+    }
+}

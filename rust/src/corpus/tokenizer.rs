@@ -1,0 +1,97 @@
+//! Text tokenization for the real-text ingestion path.
+//!
+//! Lower-cases, splits on non-alphanumeric boundaries, and drops tokens
+//! that are too short, too long, or purely numeric — the standard
+//! preprocessing for web-scale topic modeling (the paper applies
+//! stop-word removal and stemming on top; see [`crate::corpus::stopwords`]
+//! and [`crate::corpus::stemmer`]).
+
+/// Tokenizer options.
+#[derive(Debug, Clone)]
+pub struct TokenizerConfig {
+    /// Minimum token length (chars).
+    pub min_len: usize,
+    /// Maximum token length (chars) — web crawls contain pathological
+    /// "words".
+    pub max_len: usize,
+    /// Drop tokens that are entirely digits.
+    pub drop_numeric: bool,
+}
+
+impl Default for TokenizerConfig {
+    fn default() -> Self {
+        TokenizerConfig { min_len: 2, max_len: 32, drop_numeric: true }
+    }
+}
+
+/// Tokenize `text` into lower-case word strings.
+pub fn tokenize(text: &str, cfg: &TokenizerConfig) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut current = String::new();
+    for ch in text.chars() {
+        if ch.is_alphanumeric() {
+            for lc in ch.to_lowercase() {
+                current.push(lc);
+            }
+        } else if !current.is_empty() {
+            flush(&mut current, cfg, &mut out);
+        }
+    }
+    if !current.is_empty() {
+        flush(&mut current, cfg, &mut out);
+    }
+    out
+}
+
+fn flush(current: &mut String, cfg: &TokenizerConfig, out: &mut Vec<String>) {
+    let n = current.chars().count();
+    let keep = n >= cfg.min_len
+        && n <= cfg.max_len
+        && !(cfg.drop_numeric && current.chars().all(|c| c.is_ascii_digit()));
+    if keep {
+        out.push(std::mem::take(current));
+    } else {
+        current.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(s: &str) -> Vec<String> {
+        tokenize(s, &TokenizerConfig::default())
+    }
+
+    #[test]
+    fn basic_splitting() {
+        assert_eq!(tok("The cat sat, on the mat!"), vec!["the", "cat", "sat", "on", "the", "mat"]);
+    }
+
+    #[test]
+    fn lowercases_unicode() {
+        assert_eq!(tok("Zürich HTTP"), vec!["zürich", "http"]);
+    }
+
+    #[test]
+    fn drops_short_and_numeric() {
+        assert_eq!(tok("a I 42 2023 ok"), vec!["ok"]);
+    }
+
+    #[test]
+    fn keeps_alphanumeric_mixes() {
+        assert_eq!(tok("web2 x86 b2b"), vec!["web2", "x86", "b2b"]);
+    }
+
+    #[test]
+    fn drops_overlong() {
+        let long = "x".repeat(40);
+        assert!(tok(&long).is_empty());
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(tok("").is_empty());
+        assert!(tok("  \n\t .,!").is_empty());
+    }
+}

@@ -1,0 +1,212 @@
+//! Frequency-ordered vocabulary construction (paper §3.2).
+//!
+//! "The features for our bag-of-words vectors are ordered by their
+//! respective frequency. This means that the most commonly occurring
+//! word is represented by the feature at index 1, the second most common
+//! word would be at index 2, etc." — combined with cyclic partitioning
+//! this is what load-balances the parameter servers.
+
+use std::collections::HashMap;
+
+use crate::corpus::dataset::{Corpus, Document};
+use crate::corpus::stemmer::stem;
+use crate::corpus::stopwords::is_stopword;
+use crate::corpus::tokenizer::{tokenize, TokenizerConfig};
+
+/// Vocabulary builder: counts words across documents, then freezes into a
+/// frequency-ordered id mapping.
+#[derive(Debug, Default)]
+pub struct VocabBuilder {
+    counts: HashMap<String, u64>,
+}
+
+impl VocabBuilder {
+    /// Empty builder.
+    pub fn new() -> VocabBuilder {
+        VocabBuilder::default()
+    }
+
+    /// Count one token.
+    pub fn add(&mut self, token: &str) {
+        *self.counts.entry(token.to_string()).or_insert(0) += 1;
+    }
+
+    /// Count every token in a document.
+    pub fn add_doc(&mut self, tokens: &[String]) {
+        for t in tokens {
+            self.add(t);
+        }
+    }
+
+    /// Distinct words seen.
+    pub fn distinct(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Freeze into a frequency-ordered vocabulary, dropping words seen
+    /// fewer than `min_count` times and keeping at most `max_size` words.
+    pub fn freeze(self, min_count: u64, max_size: usize) -> Vocabulary {
+        let mut entries: Vec<(String, u64)> =
+            self.counts.into_iter().filter(|(_, c)| *c >= min_count).collect();
+        // Descending frequency; ties broken lexicographically so the
+        // ordering (and therefore shard placement) is deterministic.
+        entries.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        entries.truncate(max_size);
+        let words: Vec<String> = entries.iter().map(|(w, _)| w.clone()).collect();
+        let index = words.iter().enumerate().map(|(i, w)| (w.clone(), i as u32)).collect();
+        Vocabulary { words, index }
+    }
+}
+
+/// Frozen frequency-ordered vocabulary: id 0 = most frequent word.
+#[derive(Debug, Clone, Default)]
+pub struct Vocabulary {
+    words: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Vocabulary {
+    /// Vocabulary size.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Word id for a string, if in vocabulary.
+    pub fn id(&self, word: &str) -> Option<u32> {
+        self.index.get(word).copied()
+    }
+
+    /// Word string for an id.
+    pub fn word(&self, id: u32) -> Option<&str> {
+        self.words.get(id as usize).map(|s| s.as_str())
+    }
+
+    /// All words in id order.
+    pub fn words(&self) -> &[String] {
+        &self.words
+    }
+}
+
+/// Full ingestion pipeline: raw texts → tokenize → stop-word removal →
+/// Porter stemming → frequency-ordered vocabulary → bag-of-words corpus.
+pub fn corpus_from_texts(
+    texts: &[&str],
+    tok_cfg: &TokenizerConfig,
+    min_count: u64,
+    max_vocab: usize,
+) -> Corpus {
+    // Pass 1: preprocess and count.
+    let mut processed: Vec<Vec<String>> = Vec::with_capacity(texts.len());
+    let mut builder = VocabBuilder::new();
+    for text in texts {
+        let mut toks = tokenize(text, tok_cfg);
+        toks.retain(|t| !is_stopword(t));
+        let toks: Vec<String> = toks.iter().map(|t| stem(t)).collect();
+        builder.add_doc(&toks);
+        processed.push(toks);
+    }
+    let vocab = builder.freeze(min_count, max_vocab);
+    // Pass 2: map to ids (dropping OOV tokens).
+    let docs = processed
+        .into_iter()
+        .map(|toks| Document {
+            tokens: toks.iter().filter_map(|t| vocab.id(t)).collect(),
+        })
+        .collect();
+    Corpus {
+        docs,
+        vocab_size: vocab.len() as u32,
+        vocab: vocab.words().to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freeze_orders_by_frequency() {
+        let mut b = VocabBuilder::new();
+        for _ in 0..5 {
+            b.add("common");
+        }
+        for _ in 0..3 {
+            b.add("middle");
+        }
+        b.add("rare");
+        let v = b.freeze(1, 100);
+        assert_eq!(v.id("common"), Some(0));
+        assert_eq!(v.id("middle"), Some(1));
+        assert_eq!(v.id("rare"), Some(2));
+        assert_eq!(v.word(0), Some("common"));
+    }
+
+    #[test]
+    fn min_count_filters() {
+        let mut b = VocabBuilder::new();
+        b.add("once");
+        for _ in 0..2 {
+            b.add("twice");
+        }
+        let v = b.freeze(2, 100);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v.id("once"), None);
+    }
+
+    #[test]
+    fn max_size_truncates() {
+        let mut b = VocabBuilder::new();
+        for i in 0..10 {
+            for _ in 0..(10 - i) {
+                b.add(&format!("w{i}"));
+            }
+        }
+        let v = b.freeze(1, 3);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.id("w0"), Some(0));
+        assert_eq!(v.id("w9"), None);
+    }
+
+    #[test]
+    fn ties_are_deterministic() {
+        let build = || {
+            let mut b = VocabBuilder::new();
+            b.add("zeta");
+            b.add("alpha");
+            b.freeze(1, 10)
+        };
+        let v1 = build();
+        let v2 = build();
+        assert_eq!(v1.words(), v2.words());
+        assert_eq!(v1.id("alpha"), Some(0), "lexicographic tiebreak");
+    }
+
+    #[test]
+    fn pipeline_end_to_end() {
+        let texts = [
+            "The jewelry store sells gold rings and diamond rings.",
+            "Gold and diamonds: the jewelry of kings!",
+            "A recipe with meat and spices. Spices make recipes great.",
+        ];
+        let c = corpus_from_texts(&texts, &TokenizerConfig::default(), 1, 1000);
+        assert_eq!(c.num_docs(), 3);
+        assert!(c.vocab_size > 0);
+        assert!(c.is_frequency_ordered());
+        // Stopwords are gone: "the"/"and" must not be in vocab.
+        assert!(!c.vocab.iter().any(|w| w == "the" || w == "and"));
+        // Stemming merged "rings"/"ring" and "recipes"/"recipe".
+        assert!(c.vocab.iter().any(|w| w == "ring"));
+        assert!(c.vocab.iter().any(|w| w == "recip"));
+        // Tokens are valid ids.
+        for d in &c.docs {
+            for &t in &d.tokens {
+                assert!(t < c.vocab_size);
+            }
+        }
+    }
+}

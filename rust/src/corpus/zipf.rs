@@ -1,0 +1,136 @@
+//! Zipf-law sampling and slope estimation.
+//!
+//! Word frequencies in web corpora follow Zipf's law: frequency is
+//! inversely proportional to frequency rank, `f(r) ∝ 1/r^s` with `s ≈ 1`
+//! (paper §3.2, Figure 4). The synthetic corpus uses [`ZipfSampler`] for
+//! its word marginals; [`fit_slope`] recovers the exponent from observed
+//! counts so the reproduction can verify the generated corpus matches the
+//! paper's distribution.
+
+use crate::util::math::linear_fit;
+use crate::util::rng::Pcg64;
+
+/// Samples ranks `0..n` with `P(r) ∝ 1/(r+1)^s` via an inverse-CDF table
+/// (O(log n) per draw, O(n) memory).
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    /// Build a sampler over `n` ranks with exponent `s`.
+    pub fn new(n: usize, s: f64) -> ZipfSampler {
+        assert!(n > 0, "need at least one rank");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Always false; samplers are non-empty by construction.
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Probability of rank `r`.
+    pub fn prob(&self, r: usize) -> f64 {
+        if r == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[r] - self.cdf[r - 1]
+        }
+    }
+
+    /// Draw a rank.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.f64();
+        // First index whose cdf >= u.
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// Fit the Zipf exponent from rank-ordered counts (descending): returns
+/// `(intercept, slope)` of `log f = a + b log r`; the Zipf exponent is
+/// `-b`. Zero counts are skipped.
+pub fn fit_slope(counts_desc: &[u64]) -> (f64, f64) {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (r, &c) in counts_desc.iter().enumerate() {
+        if c > 0 {
+            xs.push(((r + 1) as f64).ln());
+            ys.push((c as f64).ln());
+        }
+    }
+    linear_fit(&xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let z = ZipfSampler::new(100, 1.0);
+        let total: f64 = (0..100).map(|r| z.prob(r)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_zero_most_likely() {
+        let z = ZipfSampler::new(50, 1.2);
+        for r in 1..50 {
+            assert!(z.prob(0) > z.prob(r));
+        }
+    }
+
+    #[test]
+    fn empirical_matches_theoretical() {
+        let z = ZipfSampler::new(20, 1.0);
+        let mut rng = Pcg64::new(31);
+        let n = 200_000;
+        let mut counts = vec![0usize; 20];
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for r in 0..20 {
+            let emp = counts[r] as f64 / n as f64;
+            assert!(
+                (emp - z.prob(r)).abs() < 0.01,
+                "rank {r}: emp {emp} vs theory {}",
+                z.prob(r)
+            );
+        }
+    }
+
+    #[test]
+    fn fit_recovers_exponent() {
+        // Exact Zipf counts with s = 1.1.
+        let counts: Vec<u64> = (1..=5000u64)
+            .map(|r| (1e9 / (r as f64).powf(1.1)) as u64)
+            .collect();
+        let (_, slope) = fit_slope(&counts);
+        assert!((slope + 1.1).abs() < 0.01, "slope {slope}");
+    }
+
+    #[test]
+    fn fit_skips_zeros() {
+        let counts = vec![100, 50, 0, 25, 0];
+        let (_, slope) = fit_slope(&counts);
+        assert!(slope < 0.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! UMass topic coherence (Mimno et al., 2011) — an extension beyond the
+//! paper's perplexity metric, useful for validating that low perplexity
+//! corresponds to interpretable topics.
+//!
+//! `C(t) = Σ_{i<j} log( (D(w_i, w_j) + 1) / D(w_j) )` over the topic's
+//! top words ordered by probability, where `D` counts documents
+//! containing the word(s). Less negative = more coherent.
+
+use std::collections::HashSet;
+
+use crate::corpus::dataset::Corpus;
+use crate::eval::perplexity::TopicModel;
+use crate::eval::topics::top_words;
+
+/// Document frequencies: for each word, the set of doc ids containing it
+/// (built once, reused across topics).
+pub struct DocFreq {
+    postings: Vec<HashSet<u32>>,
+}
+
+impl DocFreq {
+    /// Build from a corpus.
+    pub fn build(corpus: &Corpus) -> DocFreq {
+        let mut postings = vec![HashSet::new(); corpus.vocab_size as usize];
+        for (d, doc) in corpus.docs.iter().enumerate() {
+            for &w in &doc.tokens {
+                postings[w as usize].insert(d as u32);
+            }
+        }
+        DocFreq { postings }
+    }
+
+    /// Documents containing `w`.
+    pub fn df(&self, w: u32) -> usize {
+        self.postings[w as usize].len()
+    }
+
+    /// Documents containing both `a` and `b`.
+    pub fn co_df(&self, a: u32, b: u32) -> usize {
+        let (small, large) = if self.postings[a as usize].len() < self.postings[b as usize].len()
+        {
+            (&self.postings[a as usize], &self.postings[b as usize])
+        } else {
+            (&self.postings[b as usize], &self.postings[a as usize])
+        };
+        small.iter().filter(|d| large.contains(d)).count()
+    }
+}
+
+/// UMass coherence of one topic over its `n` top words.
+pub fn umass(model: &TopicModel, df: &DocFreq, topic: u32, n: usize) -> f64 {
+    let top: Vec<u32> = top_words(model, topic, n).into_iter().map(|(w, _)| w).collect();
+    let mut c = 0.0;
+    for i in 1..top.len() {
+        for j in 0..i {
+            let d_j = df.df(top[j]);
+            if d_j == 0 {
+                continue;
+            }
+            let co = df.co_df(top[i], top[j]);
+            c += ((co as f64 + 1.0) / d_j as f64).ln();
+        }
+    }
+    c
+}
+
+/// Mean coherence over all topics.
+pub fn mean_umass(model: &TopicModel, df: &DocFreq, n: usize) -> f64 {
+    let total: f64 = (0..model.k).map(|k| umass(model, df, k, n)).sum();
+    total / model.k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::dataset::Document;
+    use crate::lda::hyper::LdaHyper;
+
+    fn corpus() -> Corpus {
+        Corpus {
+            docs: vec![
+                Document { tokens: vec![0, 1] },
+                Document { tokens: vec![0, 1] },
+                Document { tokens: vec![0, 1, 2] },
+                Document { tokens: vec![2, 3] },
+                Document { tokens: vec![3] },
+            ],
+            vocab_size: 4,
+            vocab: vec![],
+        }
+    }
+
+    #[test]
+    fn df_counts() {
+        let df = DocFreq::build(&corpus());
+        assert_eq!(df.df(0), 3);
+        assert_eq!(df.df(3), 2);
+        assert_eq!(df.co_df(0, 1), 3);
+        assert_eq!(df.co_df(0, 3), 0);
+    }
+
+    #[test]
+    fn cooccurring_topic_more_coherent() {
+        let df = DocFreq::build(&corpus());
+        // Topic A: words 0,1 always co-occur. Topic B: words 0,3 never do.
+        let model_a = TopicModel {
+            k: 2,
+            v: 4,
+            // Topic 0 top words = {0,1}; topic 1 top words = {0,3}? build
+            // counts accordingly.
+            n_wk: vec![
+                50, 40, // w0 in both
+                50, 0, // w1 topic0
+                0, 1, // w2
+                0, 40, // w3 topic1
+            ],
+            n_k: vec![100, 81],
+            hyper: LdaHyper { alpha: 0.5, beta: 0.01 },
+        };
+        let c0 = umass(&model_a, &df, 0, 2); // {0,1}
+        let c1 = umass(&model_a, &df, 1, 2); // {0 or 3 ...}
+        assert!(c0 > c1, "coherent {c0} vs incoherent {c1}");
+    }
+
+    #[test]
+    fn mean_is_average() {
+        let df = DocFreq::build(&corpus());
+        let model = TopicModel {
+            k: 1,
+            v: 4,
+            n_wk: vec![5, 4, 1, 1],
+            n_k: vec![11],
+            hyper: LdaHyper { alpha: 0.5, beta: 0.01 },
+        };
+        assert_eq!(mean_umass(&model, &df, 2), umass(&model, &df, 0, 2));
+    }
+}

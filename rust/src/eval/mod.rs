@@ -1,0 +1,9 @@
+//! Model evaluation: perplexity (the paper's quality metric throughout
+//! Table 1 and Figure 6), topic inspection, and topic coherence.
+
+pub mod coherence;
+pub mod perplexity;
+pub mod topics;
+pub mod xla;
+
+pub use perplexity::{holdout_perplexity, training_perplexity, TopicModel};

@@ -1,0 +1,295 @@
+//! Perplexity evaluation.
+//!
+//! Perplexity of a corpus under a topic model is
+//! `exp(-(Σ_d Σ_{w∈d} log p(w|d)) / N)` with
+//! `p(w|d) = Σ_k θ_dk φ_kw`, the paper's quality metric (Table 1,
+//! Fig. 6). Two modes:
+//!
+//! - [`training_perplexity`] — θ taken from the training doc-topic
+//!   counts (what the paper's Figure 6 tracks during the ClueWeb run);
+//! - [`holdout_perplexity`] — unseen documents are *folded in* by a few
+//!   Gibbs passes with frozen φ to estimate θ, then scored.
+//!
+//! The inner loop — a documents×topics by topics×vocab product — is the
+//! dense hot-spot the XLA/Pallas path accelerates
+//! ([`crate::runtime::engine`]; kernel in `python/compile/kernels/`).
+
+use crate::corpus::dataset::Corpus;
+use crate::lda::gibbs::LocalModel;
+use crate::lda::hyper::LdaHyper;
+use crate::lda::sparse_counts::DocTopicCounts;
+use crate::util::rng::Pcg64;
+
+/// A trained topic model: the global count tables plus hyper-parameters.
+/// This is what gets pulled off the parameter server at evaluation time.
+#[derive(Debug, Clone)]
+pub struct TopicModel {
+    /// Topics.
+    pub k: u32,
+    /// Vocabulary size.
+    pub v: u32,
+    /// Word-topic counts, `v x k` row-major.
+    pub n_wk: Vec<i64>,
+    /// Topic totals.
+    pub n_k: Vec<i64>,
+    /// Hyper-parameters.
+    pub hyper: LdaHyper,
+}
+
+impl TopicModel {
+    /// Extract the global tables from a single-machine model.
+    pub fn from_local(m: &LocalModel) -> TopicModel {
+        TopicModel {
+            k: m.k,
+            v: m.v,
+            n_wk: m.n_wk.clone(),
+            n_k: m.n_k.clone(),
+            hyper: m.hyper,
+        }
+    }
+
+    /// φ_kw point estimate.
+    #[inline]
+    pub fn phi(&self, w: u32, k: u32) -> f64 {
+        (self.n_wk[w as usize * self.k as usize + k as usize] as f64 + self.hyper.beta)
+            / (self.n_k[k as usize] as f64 + self.v as f64 * self.hyper.beta)
+    }
+
+    /// Dense φ as f32 `k x v_block` for a word range (row-major by topic),
+    /// the layout the XLA evaluation kernel consumes.
+    pub fn phi_block_f32(&self, w_start: u32, w_end: u32) -> Vec<f32> {
+        let kk = self.k as usize;
+        let vb = (w_end - w_start) as usize;
+        let mut out = vec![0f32; kk * vb];
+        for k in 0..self.k {
+            for (j, w) in (w_start..w_end).enumerate() {
+                out[k as usize * vb + j] = self.phi(w, k) as f32;
+            }
+        }
+        out
+    }
+}
+
+/// θ estimate from sparse doc counts. The normalizer uses the counts'
+/// own total (equals the document length whenever counts are consistent
+/// with assignments), so θ always sums to exactly 1.
+#[inline]
+fn theta_of(counts: &DocTopicCounts, total: u64, k: u32, hyper: &LdaHyper, k_topics: u32) -> f64 {
+    (counts.get(k) as f64 + hyper.alpha) / (total as f64 + k_topics as f64 * hyper.alpha)
+}
+
+/// Log-likelihood of `docs` given the model and per-document topic
+/// counts; returns `(total_log_lik, token_count)`.
+pub fn log_likelihood(
+    model: &TopicModel,
+    corpus: &Corpus,
+    doc_counts: &[DocTopicCounts],
+) -> (f64, u64) {
+    assert_eq!(corpus.docs.len(), doc_counts.len());
+    let mut total = 0.0;
+    let mut tokens = 0u64;
+    let kk = model.k;
+    // Precompute per-topic normalizers.
+    let vbeta = model.v as f64 * model.hyper.beta;
+    let inv_nk: Vec<f64> =
+        model.n_k.iter().map(|&n| 1.0 / (n as f64 + vbeta)).collect();
+    let mut theta = vec![0.0f64; kk as usize];
+    for (doc, counts) in corpus.docs.iter().zip(doc_counts) {
+        let ctotal = counts.total();
+        for k in 0..kk {
+            theta[k as usize] = theta_of(counts, ctotal, k, &model.hyper, kk);
+        }
+        for &w in &doc.tokens {
+            let row = &model.n_wk[w as usize * kk as usize..(w as usize + 1) * kk as usize];
+            let mut p = 0.0;
+            for k in 0..kk as usize {
+                p += theta[k] * (row[k] as f64 + model.hyper.beta) * inv_nk[k];
+            }
+            total += p.max(1e-300).ln();
+            tokens += 1;
+        }
+    }
+    (total, tokens)
+}
+
+/// Perplexity from a log-likelihood total.
+pub fn perplexity_from_loglik(total: f64, tokens: u64) -> f64 {
+    if tokens == 0 {
+        return f64::NAN;
+    }
+    (-total / tokens as f64).exp()
+}
+
+/// Perplexity from dense parameter estimates: `phi_vk` is `v x k`
+/// row-major (by word), `thetas` one length-`k` distribution per
+/// document. Used by the variational baselines, whose parameters are
+/// real-valued rather than integer counts.
+pub fn perplexity_dense(phi_vk: &[f64], thetas: &[Vec<f64>], k: u32, corpus: &Corpus) -> f64 {
+    assert_eq!(thetas.len(), corpus.docs.len());
+    let kk = k as usize;
+    let mut total = 0.0;
+    let mut tokens = 0u64;
+    for (doc, theta) in corpus.docs.iter().zip(thetas) {
+        for &w in &doc.tokens {
+            let row = &phi_vk[w as usize * kk..(w as usize + 1) * kk];
+            let p: f64 = row.iter().zip(theta).map(|(&f, &t)| f * t).sum();
+            total += p.max(1e-300).ln();
+            tokens += 1;
+        }
+    }
+    perplexity_from_loglik(total, tokens)
+}
+
+/// Training-set perplexity of a single-machine model (θ from its own
+/// doc-topic counts).
+pub fn training_perplexity(model: &LocalModel, corpus: &Corpus) -> f64 {
+    let tm = TopicModel::from_local(model);
+    let (ll, n) = log_likelihood(&tm, corpus, &model.doc_counts);
+    perplexity_from_loglik(ll, n)
+}
+
+/// Fold in an unseen document: `iters` Gibbs passes with frozen φ,
+/// returning its doc-topic counts.
+pub fn fold_in(
+    model: &TopicModel,
+    tokens: &[u32],
+    iters: u32,
+    rng: &mut Pcg64,
+) -> DocTopicCounts {
+    let kk = model.k as usize;
+    let mut z: Vec<u32> = tokens.iter().map(|_| rng.below(kk) as u32).collect();
+    let mut counts = DocTopicCounts::from_assignments(&z);
+    let mut weights = vec![0.0f64; kk];
+    let vbeta = model.v as f64 * model.hyper.beta;
+    for _ in 0..iters {
+        for (pos, &w) in tokens.iter().enumerate() {
+            let old = z[pos];
+            counts.decrement(old);
+            let row = &model.n_wk[w as usize * kk..(w as usize + 1) * kk];
+            for (k, wt) in weights.iter_mut().enumerate() {
+                *wt = (counts.get(k as u32) as f64 + model.hyper.alpha)
+                    * (row[k] as f64 + model.hyper.beta)
+                    / (model.n_k[k] as f64 + vbeta);
+            }
+            let new = rng.categorical(&weights) as u32;
+            counts.increment(new);
+            z[pos] = new;
+        }
+    }
+    counts
+}
+
+/// Held-out perplexity: fold in each document, then score it.
+pub fn holdout_perplexity(
+    model: &TopicModel,
+    corpus: &Corpus,
+    fold_in_iters: u32,
+    seed: u64,
+) -> f64 {
+    let mut rng = Pcg64::new(seed);
+    let counts: Vec<DocTopicCounts> = corpus
+        .docs
+        .iter()
+        .map(|d| fold_in(model, &d.tokens, fold_in_iters, &mut rng))
+        .collect();
+    let (ll, n) = log_likelihood(model, corpus, &counts);
+    perplexity_from_loglik(ll, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synth::{generate, SynthConfig};
+
+    fn corpus() -> Corpus {
+        generate(&SynthConfig {
+            num_docs: 100,
+            vocab_size: 200,
+            num_topics: 4,
+            avg_doc_len: 30.0,
+            seed: 21,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn uniform_model_perplexity_near_vocab_size() {
+        // With zero counts, phi is uniform over V; theta irrelevant:
+        // p(w|d) = 1/V so perplexity == V.
+        let c = corpus();
+        let m = TopicModel {
+            k: 4,
+            v: c.vocab_size,
+            n_wk: vec![0; c.vocab_size as usize * 4],
+            n_k: vec![0; 4],
+            hyper: LdaHyper { alpha: 0.5, beta: 0.01 },
+        };
+        let counts: Vec<DocTopicCounts> =
+            c.docs.iter().map(|_| DocTopicCounts::new()).collect();
+        let (ll, n) = log_likelihood(&m, &c, &counts);
+        let p = perplexity_from_loglik(ll, n);
+        assert!(
+            (p - c.vocab_size as f64).abs() < 1.0,
+            "uniform perplexity {p} vs V {}",
+            c.vocab_size
+        );
+    }
+
+    #[test]
+    fn perfect_model_beats_uniform() {
+        // A model trained a bit must beat the uniform bound.
+        let c = corpus();
+        let mut m = crate::lda::gibbs::LocalModel::init_random(
+            &c,
+            4,
+            LdaHyper::default_for(4),
+            1,
+        );
+        let mut rng = Pcg64::new(2);
+        for _ in 0..10 {
+            crate::lda::gibbs::sweep(&mut m, &c, &mut rng);
+        }
+        let p = training_perplexity(&m, &c);
+        assert!(p < c.vocab_size as f64 * 0.9, "{p}");
+    }
+
+    #[test]
+    fn holdout_higher_than_training_but_finite() {
+        let c = corpus();
+        let (train, test) = c.split_holdout(5);
+        let mut m = crate::lda::gibbs::LocalModel::init_random(
+            &train,
+            4,
+            LdaHyper::default_for(4),
+            3,
+        );
+        let mut rng = Pcg64::new(4);
+        for _ in 0..10 {
+            crate::lda::gibbs::sweep(&mut m, &train, &mut rng);
+        }
+        let tm = TopicModel::from_local(&m);
+        let hp = holdout_perplexity(&tm, &test, 5, 5);
+        assert!(hp.is_finite() && hp > 0.0);
+        assert!(hp < test.vocab_size as f64 * 2.0);
+    }
+
+    #[test]
+    fn phi_block_matches_scalar_phi() {
+        let c = corpus();
+        let m = crate::lda::gibbs::LocalModel::init_random(&c, 4, LdaHyper::default_for(4), 6);
+        let tm = TopicModel::from_local(&m);
+        let block = tm.phi_block_f32(10, 20);
+        for k in 0..4u32 {
+            for w in 10..20u32 {
+                let want = tm.phi(w, k) as f32;
+                let got = block[k as usize * 10 + (w - 10) as usize];
+                assert!((want - got).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_corpus_is_nan() {
+        assert!(perplexity_from_loglik(0.0, 0).is_nan());
+    }
+}

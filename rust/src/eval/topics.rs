@@ -1,0 +1,99 @@
+//! Topic inspection: top words per topic (the paper's qualitative
+//! evaluation — "uncovering some of the prevalent themes that appear on
+//! the Web").
+
+use crate::eval::perplexity::TopicModel;
+use crate::util::topk::TopK;
+
+/// The `n` highest-probability word ids of a topic, with φ values,
+/// descending.
+pub fn top_words(model: &TopicModel, topic: u32, n: usize) -> Vec<(u32, f64)> {
+    let mut tk = TopK::new(n);
+    for w in 0..model.v {
+        tk.push(model.phi(w, topic), w);
+    }
+    tk.into_sorted().into_iter().map(|(p, w)| (w, p)).collect()
+}
+
+/// Render a topic as a string of its top words (uses the corpus
+/// vocabulary when available, else `w<id>`).
+pub fn describe_topic(model: &TopicModel, vocab: &[String], topic: u32, n: usize) -> String {
+    top_words(model, topic, n)
+        .into_iter()
+        .map(|(w, _)| {
+            vocab
+                .get(w as usize)
+                .cloned()
+                .unwrap_or_else(|| format!("w{w}"))
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Summarize all topics, largest first (by `n_k` mass).
+pub fn summarize(model: &TopicModel, vocab: &[String], words_per_topic: usize) -> Vec<String> {
+    let mut order: Vec<u32> = (0..model.k).collect();
+    order.sort_by_key(|&k| std::cmp::Reverse(model.n_k[k as usize]));
+    order
+        .into_iter()
+        .map(|k| {
+            format!(
+                "topic {k:>4} ({} tokens): {}",
+                model.n_k[k as usize],
+                describe_topic(model, vocab, k, words_per_topic)
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lda::hyper::LdaHyper;
+
+    fn toy_model() -> TopicModel {
+        // 2 topics, 4 words. Topic 0 loves words 0,1; topic 1 loves 2,3.
+        TopicModel {
+            k: 2,
+            v: 4,
+            n_wk: vec![
+                90, 1, // w0
+                80, 2, // w1
+                3, 70, // w2
+                2, 60, // w3
+            ],
+            n_k: vec![175, 133],
+            hyper: LdaHyper { alpha: 0.5, beta: 0.01 },
+        }
+    }
+
+    #[test]
+    fn top_words_ranked() {
+        let m = toy_model();
+        let top = top_words(&m, 0, 2);
+        assert_eq!(top[0].0, 0);
+        assert_eq!(top[1].0, 1);
+        assert!(top[0].1 > top[1].1);
+        let top = top_words(&m, 1, 2);
+        assert_eq!(top[0].0, 2);
+    }
+
+    #[test]
+    fn describe_uses_vocab() {
+        let m = toy_model();
+        let vocab: Vec<String> =
+            ["gold", "ring", "recipe", "meat"].iter().map(|s| s.to_string()).collect();
+        let s = describe_topic(&m, &vocab, 0, 2);
+        assert_eq!(s, "gold ring");
+        let s = describe_topic(&m, &[], 1, 1);
+        assert_eq!(s, "w2");
+    }
+
+    #[test]
+    fn summarize_orders_by_mass() {
+        let m = toy_model();
+        let lines = summarize(&m, &[], 2);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("topic    0"), "{}", lines[0]);
+    }
+}

@@ -1,0 +1,239 @@
+//! XLA-accelerated perplexity: streams (doc batch, vocab block) tiles
+//! through the AOT-compiled `perplexity` graph (whose hot-spot is the
+//! Pallas doclik kernel — see `python/compile/`).
+//!
+//! Padding contract (matching `python/compile/model.py`):
+//! - topics are padded to the compiled K and the graph receives the
+//!   *real* K as a scalar; padded topic slots are masked out of θ
+//!   **exactly** in-graph, so any model K ≤ compiled K evaluates
+//!   bit-comparable to the pure-rust path;
+//! - vocabulary blocks are padded with zero counts (contribute exactly 0);
+//! - document batches are padded with empty docs (contribute exactly 0).
+
+use crate::corpus::dataset::Corpus;
+use crate::eval::perplexity::{perplexity_from_loglik, TopicModel};
+use crate::lda::sparse_counts::DocTopicCounts;
+use crate::runtime::artifacts::ArtifactSpec;
+use crate::runtime::engine::{Engine, Input};
+use crate::util::error::Result;
+
+/// Total log-likelihood and token count of `corpus` under `model`,
+/// computed on the XLA engine. `doc_counts` supplies θ (training-style
+/// evaluation, same contract as [`crate::eval::perplexity::log_likelihood`]).
+pub fn xla_log_likelihood(
+    engine: &Engine,
+    model: &TopicModel,
+    corpus: &Corpus,
+    doc_counts: &[DocTopicCounts],
+) -> Result<(f64, u64)> {
+    assert_eq!(corpus.docs.len(), doc_counts.len());
+    let spec = engine.select("perplexity", model.k as usize)?;
+    let d = spec.batch;
+    let k_pad = spec.k;
+    let vb = spec.vblock;
+    let k = model.k as usize;
+
+    // Precompute transposed, padded n_wk blocks and the padded n_k.
+    let v = model.v as usize;
+    let num_blocks = v.div_ceil(vb);
+    let mut nwk_blocks: Vec<Vec<f32>> = Vec::with_capacity(num_blocks);
+    for b in 0..num_blocks {
+        let w0 = b * vb;
+        let w1 = ((b + 1) * vb).min(v);
+        let mut block = vec![0f32; k_pad * vb];
+        for kk in 0..k {
+            for w in w0..w1 {
+                block[kk * vb + (w - w0)] = model.n_wk[w * k + kk] as f32;
+            }
+        }
+        nwk_blocks.push(block);
+    }
+    let mut n_k = vec![0f32; k_pad];
+    for kk in 0..k {
+        n_k[kk] = model.n_k[kk] as f32;
+    }
+
+    let mut total = 0.0f64;
+    let mut tokens = 0u64;
+    let mut batch_counts: Vec<Vec<(usize, f32)>> = Vec::with_capacity(d);
+
+    for batch_start in (0..corpus.docs.len()).step_by(d) {
+        let batch_end = (batch_start + d).min(corpus.docs.len());
+        let batch_len = batch_end - batch_start;
+        // n_dk for the batch.
+        let mut n_dk = vec![0f32; d * k_pad];
+        for (i, counts) in doc_counts[batch_start..batch_end].iter().enumerate() {
+            for (topic, c) in counts.iter() {
+                n_dk[i * k_pad + topic as usize] = c as f32;
+            }
+        }
+        // Sparse word counts per doc (once per batch).
+        batch_counts.clear();
+        for doc in &corpus.docs[batch_start..batch_end] {
+            let mut ids: Vec<u32> = doc.tokens.clone();
+            ids.sort_unstable();
+            let mut pairs: Vec<(usize, f32)> = Vec::new();
+            for &w in &ids {
+                match pairs.last_mut() {
+                    Some((lw, c)) if *lw == w as usize => *c += 1.0,
+                    _ => pairs.push((w as usize, 1.0)),
+                }
+            }
+            tokens += doc.tokens.len() as u64;
+            batch_counts.push(pairs);
+        }
+        for (b, nwk_block) in nwk_blocks.iter().enumerate() {
+            let w0 = b * vb;
+            let w1 = ((b + 1) * vb).min(v);
+            // Dense counts tile; skip empty tiles cheaply.
+            let mut counts_tile = vec![0f32; d * vb];
+            let mut any = false;
+            for (i, pairs) in batch_counts.iter().enumerate() {
+                // pairs are sorted by word id.
+                let lo = pairs.partition_point(|&(w, _)| w < w0);
+                for &(w, c) in &pairs[lo..] {
+                    if w >= w1 {
+                        break;
+                    }
+                    counts_tile[i * vb + (w - w0)] = c;
+                    any = true;
+                }
+            }
+            if !any {
+                continue;
+            }
+            let out = run_tile(
+                engine,
+                &spec,
+                &n_dk,
+                nwk_block,
+                &n_k,
+                &counts_tile,
+                model.hyper.alpha as f32,
+                model.hyper.beta as f32,
+                model.v as f32,
+                k as f32,
+                d,
+                k_pad,
+                vb,
+            )?;
+            for &ll in out.iter().take(batch_len) {
+                total += ll as f64;
+            }
+        }
+    }
+    Ok((total, tokens))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_tile(
+    engine: &Engine,
+    spec: &ArtifactSpec,
+    n_dk: &[f32],
+    nwk_block: &[f32],
+    n_k: &[f32],
+    counts: &[f32],
+    alpha: f32,
+    beta: f32,
+    vocab_size: f32,
+    k_real: f32,
+    d: usize,
+    k: usize,
+    vb: usize,
+) -> Result<Vec<f32>> {
+    let outs = engine.run_f32(
+        spec,
+        &[
+            Input::F32(n_dk.to_vec(), vec![d, k]),
+            Input::F32(nwk_block.to_vec(), vec![k, vb]),
+            Input::F32(n_k.to_vec(), vec![k]),
+            Input::F32(counts.to_vec(), vec![d, vb]),
+            Input::F32(vec![alpha], vec![]),
+            Input::F32(vec![beta], vec![]),
+            Input::F32(vec![vocab_size], vec![]),
+            Input::F32(vec![k_real], vec![]),
+        ],
+    )?;
+    Ok(outs.into_iter().next().unwrap_or_default())
+}
+
+/// XLA-evaluated training perplexity.
+pub fn xla_perplexity(
+    engine: &Engine,
+    model: &TopicModel,
+    corpus: &Corpus,
+    doc_counts: &[DocTopicCounts],
+) -> Result<f64> {
+    let (ll, tokens) = xla_log_likelihood(engine, model, corpus, doc_counts)?;
+    Ok(perplexity_from_loglik(ll, tokens))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synth::{generate, SynthConfig};
+    use crate::eval::perplexity::log_likelihood;
+    use crate::lda::gibbs::LocalModel;
+    use crate::lda::hyper::LdaHyper;
+
+    fn engine_or_skip() -> Option<Engine> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        match Engine::new(&dir) {
+            Ok(e) => Some(e),
+            Err(_) => {
+                eprintln!("skipping xla eval test: run `make artifacts`");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn xla_matches_rust_evaluator() {
+        let Some(engine) = engine_or_skip() else { return };
+        let c = generate(&SynthConfig {
+            num_docs: 100,
+            vocab_size: 3000, // > one vocab block to exercise blocking
+            num_topics: 4,
+            avg_doc_len: 40.0,
+            seed: 71,
+            ..Default::default()
+        });
+        // K = 128 matches the compiled artifact exactly: θ identical.
+        let k = 128u32;
+        let mut m = LocalModel::init_random(&c, k, LdaHyper::default_for(k as usize), 1);
+        let mut rng = crate::util::rng::Pcg64::new(2);
+        crate::lda::gibbs::sweep(&mut m, &c, &mut rng);
+        let tm = crate::eval::perplexity::TopicModel::from_local(&m);
+        let (rust_ll, rust_tok) = log_likelihood(&tm, &c, &m.doc_counts);
+        let (xla_ll, xla_tok) = xla_log_likelihood(&engine, &tm, &c, &m.doc_counts).unwrap();
+        assert_eq!(rust_tok, xla_tok);
+        let rel = ((rust_ll - xla_ll) / rust_ll).abs();
+        assert!(rel < 1e-4, "rust {rust_ll} vs xla {xla_ll} (rel {rel:.2e})");
+    }
+
+    #[test]
+    fn xla_padded_k_close_to_rust() {
+        let Some(engine) = engine_or_skip() else { return };
+        let c = generate(&SynthConfig {
+            num_docs: 60,
+            vocab_size: 500,
+            num_topics: 4,
+            avg_doc_len: 30.0,
+            seed: 72,
+            ..Default::default()
+        });
+        // K = 20 padded to 128: the in-graph mask makes this exact.
+        let k = 20u32;
+        let mut m = LocalModel::init_random(&c, k, LdaHyper::default_for(k as usize), 3);
+        let mut rng = crate::util::rng::Pcg64::new(4);
+        for _ in 0..3 {
+            crate::lda::gibbs::sweep(&mut m, &c, &mut rng);
+        }
+        let tm = crate::eval::perplexity::TopicModel::from_local(&m);
+        let (rust_ll, n) = log_likelihood(&tm, &c, &m.doc_counts);
+        let rust_p = perplexity_from_loglik(rust_ll, n);
+        let xla_p = xla_perplexity(&engine, &tm, &c, &m.doc_counts).unwrap();
+        let rel = ((rust_p - xla_p) / rust_p).abs();
+        assert!(rel < 1e-4, "rust {rust_p} vs xla {xla_p} (rel {rel:.2e})");
+    }
+}

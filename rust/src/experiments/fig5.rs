@@ -1,0 +1,168 @@
+//! Figure 5: the implicit load-balancing property of cyclic partitioning
+//! over frequency-ordered features.
+//!
+//! The paper computes, for 30 machines, the expected proportion of
+//! requests each machine receives given the corpus token counts, under
+//! (a) cyclic partitioning of frequency-ordered features and (b) the
+//! same after randomly shuffling feature order. We add (c) range
+//! partitioning of ordered features — the naive layout whose head-word
+//! hotspot motivates the whole trick — and validate the analytic model
+//! against *measured* per-shard request counts from an actual training
+//! run over the parameter server.
+
+use crate::corpus::synth::generate;
+use crate::lda::trainer::{TrainConfig, Trainer};
+use crate::metrics::{Report, Row};
+use crate::ps::partition::{PartitionScheme, Partitioner};
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+
+/// Fig. 5 harness configuration.
+#[derive(Debug, Clone)]
+pub struct Fig5Config {
+    /// Reference corpus scale.
+    pub scale: f64,
+    /// Number of machines (paper: 30).
+    pub machines: usize,
+    /// Also run a real (small) training job and measure per-shard
+    /// request counts from the transport.
+    pub measure: bool,
+}
+
+impl Default for Fig5Config {
+    fn default() -> Self {
+        Fig5Config { scale: 1.0, machines: 30, measure: true }
+    }
+}
+
+/// Expected request share per machine for a layout.
+fn expected_share(
+    counts: &[u64],
+    machines: usize,
+    scheme: PartitionScheme,
+    order: &[u32],
+) -> Vec<f64> {
+    let part = Partitioner::new(counts.len() as u64, machines, scheme);
+    let mut load = vec![0f64; machines];
+    for (row, &word) in order.iter().enumerate() {
+        load[part.shard_of(row as u64)] += counts[word as usize] as f64;
+    }
+    let total: f64 = load.iter().sum();
+    load.iter().map(|&l| l / total.max(1.0)).collect()
+}
+
+/// Max/mean imbalance factor (1.0 = perfectly balanced).
+pub fn imbalance(shares: &[f64]) -> f64 {
+    let mean = 1.0 / shares.len() as f64;
+    shares.iter().cloned().fold(0.0f64, f64::max) / mean
+}
+
+/// Fig. 5 output: per-machine shares per layout plus summary factors.
+pub struct Fig5Result {
+    /// Rows: machine, share_cyclic_ordered, share_cyclic_shuffled,
+    /// share_range_ordered (+ measured_share when measured).
+    pub report: Report,
+    /// Imbalance factors by layout name.
+    pub imbalance: Vec<(String, f64)>,
+}
+
+/// Run the experiment.
+pub fn run(cfg: &Fig5Config) -> Result<Fig5Result> {
+    let corpus = generate(&super::reference_corpus_config(cfg.scale));
+    let counts = corpus.word_counts();
+    let v = counts.len();
+    let identity: Vec<u32> = (0..v as u32).collect();
+    let mut shuffled = identity.clone();
+    Pcg64::new(0xf15).shuffle(&mut shuffled);
+
+    let cyc_ord = expected_share(&counts, cfg.machines, PartitionScheme::Cyclic, &identity);
+    let cyc_shuf = expected_share(&counts, cfg.machines, PartitionScheme::Cyclic, &shuffled);
+    let rng_ord = expected_share(&counts, cfg.machines, PartitionScheme::Range, &identity);
+
+    // Measured: run two iterations of actual training on `machines`
+    // shards and read the transport's per-endpoint request counters.
+    let measured = if cfg.measure {
+        let tc = TrainConfig {
+            num_topics: 16,
+            iterations: 2,
+            workers: 4,
+            shards: cfg.machines,
+            block_words: 512,
+            ..TrainConfig::default()
+        };
+        let sub = corpus.subset(0.25, 0x515);
+        let mut t = Trainer::new(tc, &sub)?;
+        t.run_iteration()?;
+        t.run_iteration()?;
+        let reqs = t.shard_request_counts();
+        let total: u64 = reqs.iter().sum();
+        Some(reqs.iter().map(|&r| r as f64 / total.max(1) as f64).collect::<Vec<_>>())
+    } else {
+        None
+    };
+
+    let report = Report::new();
+    for m in 0..cfg.machines {
+        let mut row = Row::new()
+            .set("machine", m as f64)
+            .set("cyclic_ordered", cyc_ord[m])
+            .set("cyclic_shuffled", cyc_shuf[m])
+            .set("range_ordered", rng_ord[m]);
+        if let Some(ms) = &measured {
+            row = row.set("measured", ms[m]);
+        }
+        report.push(row);
+    }
+    let mut imb = vec![
+        ("cyclic_ordered".to_string(), imbalance(&cyc_ord)),
+        ("cyclic_shuffled".to_string(), imbalance(&cyc_shuf)),
+        ("range_ordered".to_string(), imbalance(&rng_ord)),
+    ];
+    if let Some(ms) = &measured {
+        imb.push(("measured".to_string(), imbalance(ms)));
+    }
+    Ok(Fig5Result { report, imbalance: imb })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclic_ordered_beats_alternatives() {
+        let r = run(&Fig5Config { scale: 0.15, machines: 10, measure: false }).unwrap();
+        let get = |name: &str| {
+            r.imbalance.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap()
+        };
+        let cyc = get("cyclic_ordered");
+        let shuf = get("cyclic_shuffled");
+        let range = get("range_ordered");
+        // The paper's claim: cyclic partitioning on ordered features is
+        // the most balanced; range on ordered features concentrates the
+        // Zipf head catastrophically.
+        assert!(cyc < shuf, "cyclic ordered {cyc} vs shuffled {shuf}");
+        assert!(cyc < range, "cyclic ordered {cyc} vs range {range}");
+        assert!(range > 2.0, "range layout must be badly imbalanced: {range}");
+        assert!(cyc < 1.2, "cyclic ordered should be near-uniform: {cyc}");
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let r = run(&Fig5Config { scale: 0.1, machines: 7, measure: false }).unwrap();
+        for col in ["cyclic_ordered", "cyclic_shuffled", "range_ordered"] {
+            let total: f64 =
+                r.report.rows().iter().map(|row| row.get(col).unwrap()).sum();
+            assert!((total - 1.0).abs() < 1e-9, "{col} sums to {total}");
+        }
+    }
+
+    #[test]
+    fn measured_traffic_roughly_balanced_for_cyclic() {
+        let r = run(&Fig5Config { scale: 0.08, machines: 5, measure: true }).unwrap();
+        let measured =
+            r.imbalance.iter().find(|(n, _)| n == "measured").map(|(_, v)| *v).unwrap();
+        // Measured includes control traffic (GenUid/Forget spread evenly)
+        // so it should be quite balanced.
+        assert!(measured < 1.5, "measured imbalance {measured}");
+    }
+}

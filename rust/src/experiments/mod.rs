@@ -1,0 +1,31 @@
+//! Experiment harnesses: one module per paper table/figure.
+//!
+//! Each harness is a library function returning a [`crate::metrics::Report`]
+//! so it can be driven from the CLI (`glint-lda table1`), from the bench
+//! binaries (`cargo bench --bench table1`), and from tests. The scale
+//! knob maps the paper's cluster-sized workloads onto this machine; see
+//! DESIGN.md §Substitutions for the correspondence.
+
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+
+use crate::corpus::synth::SynthConfig;
+
+/// Shared experiment scale: the synthetic analogue of "10% of ClueWeb12
+/// B13" at a size this machine sweeps in minutes. All experiments derive
+/// their corpora from this so results are mutually comparable.
+pub fn reference_corpus_config(scale: f64) -> SynthConfig {
+    SynthConfig {
+        num_docs: ((8000.0 * scale) as usize).max(50),
+        vocab_size: ((8000.0 * scale) as u32).clamp(500, 60_000),
+        num_topics: 50,
+        avg_doc_len: 80.0,
+        zipf_exponent: 1.07,
+        stopwords_removed: 100,
+        doc_topic_alpha: 0.12,
+        topic_distinctness: 2.0,
+        seed: 0xc1e0,
+    }
+}

@@ -1,0 +1,186 @@
+//! Vose alias tables (Vose, 1991) — O(K) construction, O(1) sampling.
+//!
+//! LightLDA's word proposal `q_w(k) ∝ n_wk + β` must be drawn in O(1) to
+//! reach amortized O(1) per-token sampling (paper §3 / [14]). An alias
+//! table is built once per word per iteration and reused for all of that
+//! word's occurrences in the partition.
+
+use crate::util::rng::Pcg64;
+
+/// A frozen alias table over `K` outcomes.
+///
+/// Retains the (unnormalized) build-time weights: LightLDA's
+/// Metropolis–Hastings acceptance ratio needs the *stale* proposal mass
+/// `q(k)` that the table was built from.
+#[derive(Debug, Clone)]
+pub struct AliasTable {
+    /// Acceptance probability per slot.
+    prob: Vec<f64>,
+    /// Alternative outcome per slot.
+    alias: Vec<u32>,
+    /// Build-time unnormalized weights.
+    weights: Vec<f64>,
+    /// Sum of build-time weights.
+    total: f64,
+}
+
+impl AliasTable {
+    /// Build from unnormalized non-negative weights (at least one
+    /// positive). O(K).
+    pub fn new(weights: &[f64]) -> AliasTable {
+        let k = weights.len();
+        assert!(k > 0, "alias table needs at least one outcome");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must not all be zero");
+        let scale = k as f64 / total;
+
+        let mut prob = vec![0.0f64; k];
+        let mut alias = vec![0u32; k];
+        // Scaled probabilities; "small" (< 1) and "large" (>= 1) worklists.
+        let mut scaled: Vec<f64> = weights.iter().map(|&w| w * scale).collect();
+        let mut small: Vec<u32> = Vec::with_capacity(k);
+        let mut large: Vec<u32> = Vec::with_capacity(k);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s as usize] = scaled[s as usize];
+            alias[s as usize] = l;
+            scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Numerical leftovers: everything remaining takes prob 1.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+            alias[i as usize] = i;
+        }
+        AliasTable { prob, alias, weights: weights.to_vec(), total }
+    }
+
+    /// Build-time (stale) unnormalized weight of outcome `k`.
+    #[inline]
+    pub fn weight(&self, k: u32) -> f64 {
+        self.weights[k as usize]
+    }
+
+    /// Sum of build-time weights.
+    pub fn total_weight(&self) -> f64 {
+        self.total
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True when the table is over zero outcomes (cannot happen by
+    /// construction).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one outcome. O(1): one uniform slot + one biased coin.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> u32 {
+        let slot = rng.below(self.prob.len());
+        if rng.f64() < self.prob[slot] {
+            slot as u32
+        } else {
+            self.alias[slot]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall_explain;
+
+    fn empirical(weights: &[f64], draws: usize, seed: u64) -> Vec<f64> {
+        let table = AliasTable::new(weights);
+        let mut rng = Pcg64::new(seed);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn uniform_weights() {
+        let freq = empirical(&[1.0; 10], 100_000, 1);
+        for f in freq {
+            assert!((f - 0.1).abs() < 0.01, "{f}");
+        }
+    }
+
+    #[test]
+    fn skewed_weights() {
+        let w = [8.0, 1.0, 1.0];
+        let freq = empirical(&w, 200_000, 2);
+        assert!((freq[0] - 0.8).abs() < 0.01);
+        assert!((freq[1] - 0.1).abs() < 0.01);
+        assert!((freq[2] - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let w = [0.0, 1.0, 0.0, 3.0];
+        let freq = empirical(&w, 100_000, 3);
+        assert_eq!(freq[0], 0.0);
+        assert_eq!(freq[2], 0.0);
+        assert!((freq[3] - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn single_outcome() {
+        let freq = empirical(&[42.0], 1000, 4);
+        assert_eq!(freq[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero")]
+    fn all_zero_panics() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    /// Chi-square goodness of fit against the target distribution for
+    /// random weight vectors.
+    #[test]
+    fn distribution_matches_weights_property() {
+        forall_explain(
+            "alias matches distribution",
+            25,
+            |rng| {
+                let k = 2 + rng.below(50);
+                let w: Vec<f64> = (0..k).map(|_| rng.f64() * 10.0 + 0.01).collect();
+                w
+            },
+            |w| {
+                let total: f64 = w.iter().sum();
+                let draws = 200_000;
+                let freq = empirical(w, draws, 0xabc);
+                let mut chi2 = 0.0;
+                for (i, &wi) in w.iter().enumerate() {
+                    let expect = wi / total;
+                    let diff = freq[i] - expect;
+                    chi2 += diff * diff / expect;
+                }
+                let dof = (w.len() - 1) as f64;
+                // chi2/n should be near dof/draws; allow a broad margin.
+                if chi2 * draws as f64 > dof * 4.0 * draws as f64 / 1000.0 + 30.0 * dof {
+                    return Err(format!("chi2 statistic too large: {}", chi2 * draws as f64));
+                }
+                Ok(())
+            },
+        );
+    }
+}

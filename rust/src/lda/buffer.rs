@@ -1,0 +1,177 @@
+//! Push buffering (paper §3.3).
+//!
+//! Pushing every topic reassignment individually is infeasible (billions
+//! per iteration); pushing everything at once makes messages too large to
+//! cheaply resend on failure. The paper buffers ≈100,000 reassignments
+//! (~2 MB messages), and aggregates the reassignments of the most
+//! frequent words (top 2000) in a local *dense* matrix that is pushed
+//! once at the end of the iteration — those words are so hot that their
+//! deltas collapse massively under aggregation.
+
+use crate::ps::client::CoordDeltas;
+
+/// Accumulates count deltas, splitting them between a dense aggregate for
+/// hot rows and a bounded sparse triple buffer for the long tail.
+#[derive(Debug)]
+pub struct UpdateBuffer {
+    /// Sparse triple capacity before a flush is requested.
+    cap: usize,
+    /// Rows `< dense_rows` aggregate densely.
+    dense_rows: u64,
+    /// Columns (topics).
+    k: u32,
+    /// Dense aggregate, `dense_rows x k`.
+    dense: Vec<i64>,
+    /// Rows of the dense aggregate that have been touched.
+    dense_touched: Vec<bool>,
+    /// Sparse triples.
+    sparse: CoordDeltas<i64>,
+}
+
+impl UpdateBuffer {
+    /// Create a buffer. `cap` is the sparse flush threshold (paper:
+    /// 100,000), `dense_rows` the hot-row count (paper: 2,000).
+    pub fn new(cap: usize, dense_rows: u64, k: u32) -> UpdateBuffer {
+        UpdateBuffer {
+            cap: cap.max(1),
+            dense_rows,
+            k,
+            dense: vec![0; dense_rows as usize * k as usize],
+            dense_touched: vec![false; dense_rows as usize],
+            sparse: CoordDeltas::default(),
+        }
+    }
+
+    /// Number of sparse triples currently buffered.
+    pub fn sparse_len(&self) -> usize {
+        self.sparse.len()
+    }
+
+    /// Add a delta. Returns a batch of sparse deltas when the sparse
+    /// buffer reaches capacity (the caller pushes it to the parameter
+    /// server, asynchronously if it likes).
+    pub fn add(&mut self, row: u64, col: u32, delta: i64) -> Option<CoordDeltas<i64>> {
+        if delta == 0 {
+            return None;
+        }
+        if row < self.dense_rows {
+            let idx = row as usize * self.k as usize + col as usize;
+            self.dense[idx] += delta;
+            self.dense_touched[row as usize] = true;
+            return None;
+        }
+        self.sparse.rows.push(row);
+        self.sparse.cols.push(col);
+        self.sparse.values.push(delta);
+        if self.sparse.len() >= self.cap {
+            Some(self.take_sparse())
+        } else {
+            None
+        }
+    }
+
+    /// Take whatever sparse triples are buffered (end-of-iteration flush).
+    pub fn take_sparse(&mut self) -> CoordDeltas<i64> {
+        std::mem::take(&mut self.sparse)
+    }
+
+    /// Drain the dense aggregate into `(rows, row_major_values)` for a
+    /// `push_rows` call; only touched rows are emitted. Resets the
+    /// aggregate.
+    pub fn take_dense(&mut self) -> (Vec<u64>, Vec<i64>) {
+        let kk = self.k as usize;
+        let mut rows = Vec::new();
+        let mut values = Vec::new();
+        for r in 0..self.dense_rows as usize {
+            if self.dense_touched[r] {
+                rows.push(r as u64);
+                values.extend_from_slice(&self.dense[r * kk..(r + 1) * kk]);
+                self.dense[r * kk..(r + 1) * kk].fill(0);
+                self.dense_touched[r] = false;
+            }
+        }
+        (rows, values)
+    }
+
+    /// Sum of all buffered deltas (tests: conservation check).
+    pub fn buffered_total(&self) -> i64 {
+        self.dense.iter().sum::<i64>() + self.sparse.values.iter().sum::<i64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn dense_rows_aggregate() {
+        let mut b = UpdateBuffer::new(10, 5, 3);
+        assert!(b.add(0, 1, 1).is_none());
+        assert!(b.add(0, 1, 1).is_none());
+        assert!(b.add(4, 2, -1).is_none());
+        assert_eq!(b.sparse_len(), 0);
+        let (rows, vals) = b.take_dense();
+        assert_eq!(rows, vec![0, 4]);
+        assert_eq!(vals, vec![0, 2, 0, 0, 0, -1]);
+        // Drained: next take is empty.
+        let (rows, vals) = b.take_dense();
+        assert!(rows.is_empty() && vals.is_empty());
+    }
+
+    #[test]
+    fn sparse_flush_at_capacity() {
+        let mut b = UpdateBuffer::new(3, 0, 2);
+        assert!(b.add(10, 0, 1).is_none());
+        assert!(b.add(11, 1, 1).is_none());
+        let batch = b.add(12, 0, -1).expect("flush at cap");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.sparse_len(), 0);
+    }
+
+    #[test]
+    fn zero_deltas_skipped() {
+        let mut b = UpdateBuffer::new(10, 2, 2);
+        assert!(b.add(0, 0, 0).is_none());
+        assert!(b.add(5, 0, 0).is_none());
+        assert_eq!(b.sparse_len(), 0);
+        assert_eq!(b.buffered_total(), 0);
+    }
+
+    #[test]
+    fn conservation_property() {
+        // Sum of everything drained == sum of everything added.
+        forall(
+            "buffer conserves deltas",
+            100,
+            |rng| {
+                let ops: Vec<(u64, u32, i64)> = (0..rng.below(500))
+                    .map(|_| {
+                        (
+                            rng.below(100) as u64,
+                            rng.below(4) as u32,
+                            rng.below(5) as i64 - 2,
+                        )
+                    })
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut b = UpdateBuffer::new(37, 20, 4);
+                let mut flushed: i64 = 0;
+                let mut added: i64 = 0;
+                for &(r, c, d) in ops {
+                    added += d;
+                    if let Some(batch) = b.add(r, c, d) {
+                        flushed += batch.values.iter().sum::<i64>();
+                    }
+                }
+                let rest = b.take_sparse();
+                flushed += rest.values.iter().sum::<i64>();
+                let (_, dense_vals) = b.take_dense();
+                flushed += dense_vals.iter().sum::<i64>();
+                flushed == added
+            },
+        );
+    }
+}

@@ -1,0 +1,181 @@
+//! Checkpoint-based fault tolerance (paper §3.5).
+//!
+//! The parameter servers themselves are not fault tolerant. Instead, the
+//! *algorithm* checkpoints the dataset's topic assignments `z` after each
+//! iteration to durable storage; on failure the most recent checkpoint is
+//! loaded and the count tables are **rebuilt** on (fresh) parameter
+//! servers from the assignments, after which training continues.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::codec::{Reader, Writer};
+use crate::util::error::{Error, Result};
+
+/// A training checkpoint: iteration counter plus per-token topic
+/// assignments for every document (parallel to the corpus).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Checkpoint {
+    /// Completed iterations.
+    pub iteration: u32,
+    /// Number of topics the run was configured with.
+    pub num_topics: u32,
+    /// Per-document topic assignments.
+    pub assignments: Vec<Vec<u32>>,
+}
+
+const MAGIC: u32 = 0x474c_4b50; // "GLKP"
+
+impl Checkpoint {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let total: usize = self.assignments.iter().map(|a| a.len()).sum();
+        let mut w = Writer::with_capacity(16 + total * 2);
+        w.u32(MAGIC);
+        w.u32(self.iteration);
+        w.u32(self.num_topics);
+        w.usize(self.assignments.len());
+        for doc in &self.assignments {
+            w.usize(doc.len());
+            for &z in doc {
+                w.varint(z as u64);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Deserialize and validate topic bounds.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut r = Reader::new(bytes);
+        if r.u32()? != MAGIC {
+            return Err(Error::Checkpoint("bad magic (not a checkpoint)".into()));
+        }
+        let iteration = r.u32()?;
+        let num_topics = r.u32()?;
+        let nd = r.usize()?;
+        let mut assignments = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            let nt = r.usize()?;
+            let mut doc = Vec::with_capacity(nt);
+            for _ in 0..nt {
+                let z = r.varint()? as u32;
+                if z >= num_topics {
+                    return Err(Error::Checkpoint(format!(
+                        "assignment {z} >= num_topics {num_topics}"
+                    )));
+                }
+                doc.push(z);
+            }
+            assignments.push(doc);
+        }
+        Ok(Checkpoint { iteration, num_topics, assignments })
+    }
+
+    /// Path of the checkpoint file for `iteration` inside `dir`.
+    pub fn path_for(dir: &Path, iteration: u32) -> PathBuf {
+        dir.join(format!("checkpoint-{iteration:06}.bin"))
+    }
+
+    /// Write atomically (write temp + rename) so a crash mid-write never
+    /// corrupts the latest checkpoint.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let final_path = Self::path_for(dir, self.iteration);
+        let tmp = dir.join(format!(".checkpoint-{:06}.tmp", self.iteration));
+        std::fs::write(&tmp, self.encode())?;
+        std::fs::rename(&tmp, &final_path)?;
+        Ok(final_path)
+    }
+
+    /// Load a specific checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)?;
+        Checkpoint::decode(&bytes)
+    }
+
+    /// Find and load the latest checkpoint in `dir`, if any.
+    pub fn load_latest(dir: &Path) -> Result<Option<Checkpoint>> {
+        if !dir.exists() {
+            return Ok(None);
+        }
+        let mut best: Option<(u32, PathBuf)> = None;
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name
+                .strip_prefix("checkpoint-")
+                .and_then(|s| s.strip_suffix(".bin"))
+                .and_then(|s| s.parse::<u32>().ok())
+            {
+                if best.as_ref().map(|(b, _)| num > *b).unwrap_or(true) {
+                    best = Some((num, entry.path()));
+                }
+            }
+        }
+        match best {
+            Some((_, path)) => Ok(Some(Checkpoint::load(&path)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            iteration: 7,
+            num_topics: 10,
+            assignments: vec![vec![0, 9, 3], vec![], vec![5, 5]],
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("glint_ckpt_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        assert_eq!(Checkpoint::decode(&c.encode()).unwrap(), c);
+    }
+
+    #[test]
+    fn rejects_out_of_range_topics() {
+        let mut c = sample();
+        c.assignments[0][0] = 10; // == num_topics, invalid
+        assert!(Checkpoint::decode(&c.encode()).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Checkpoint::decode(&[0, 1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn save_and_load_latest() {
+        let dir = tmpdir("latest");
+        let mut c = sample();
+        c.iteration = 1;
+        c.save(&dir).unwrap();
+        c.iteration = 3;
+        c.save(&dir).unwrap();
+        c.iteration = 2;
+        c.save(&dir).unwrap();
+        let latest = Checkpoint::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.iteration, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_latest_empty_dir() {
+        let dir = tmpdir("empty");
+        assert!(Checkpoint::load_latest(&dir).unwrap().is_none());
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Checkpoint::load_latest(&dir).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

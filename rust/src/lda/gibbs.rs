@@ -1,0 +1,218 @@
+//! Exact O(K) collapsed Gibbs sampling (Griffiths & Steyvers, 2004) and
+//! the shared in-memory model state.
+//!
+//! This is the *reference* sampler: it computes the full conditional
+//! `P(z=k) ∝ (n_dk^- + α)(n_wk^- + β)/(n_k^- + Vβ)` for every topic, so
+//! each token costs O(K). It serves two purposes:
+//!
+//! 1. correctness oracle for the LightLDA Metropolis–Hastings sampler
+//!    (same stationary distribution, so perplexities must agree);
+//! 2. the O(K) side of the paper's amortized-O(1) claim, measured in
+//!    `benches/sampler.rs`.
+
+use crate::corpus::dataset::Corpus;
+use crate::lda::hyper::LdaHyper;
+use crate::lda::sparse_counts::DocTopicCounts;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Complete in-memory LDA state: count tables plus per-token topic
+/// assignments. Used by the single-machine samplers and as the scratch
+/// representation when rebuilding parameter-server state from a
+/// checkpoint.
+#[derive(Debug, Clone)]
+pub struct LocalModel {
+    /// Number of topics.
+    pub k: u32,
+    /// Vocabulary size.
+    pub v: u32,
+    /// Word-topic counts, `v x k` row-major.
+    pub n_wk: Vec<i64>,
+    /// Topic totals, length `k`.
+    pub n_k: Vec<i64>,
+    /// Topic assignment per token, parallel to the corpus docs.
+    pub assignments: Vec<Vec<u32>>,
+    /// Per-document topic counts.
+    pub doc_counts: Vec<DocTopicCounts>,
+    /// Hyper-parameters.
+    pub hyper: LdaHyper,
+}
+
+impl LocalModel {
+    /// Initialize with uniformly random topic assignments (the standard
+    /// Gibbs initialization; also what the distributed trainer does
+    /// before pushing initial counts to the parameter server).
+    pub fn init_random(corpus: &Corpus, k: u32, hyper: LdaHyper, seed: u64) -> LocalModel {
+        let mut rng = Pcg64::new(seed);
+        let v = corpus.vocab_size;
+        let mut n_wk = vec![0i64; v as usize * k as usize];
+        let mut n_k = vec![0i64; k as usize];
+        let mut assignments = Vec::with_capacity(corpus.docs.len());
+        let mut doc_counts = Vec::with_capacity(corpus.docs.len());
+        for doc in &corpus.docs {
+            let z: Vec<u32> = doc.tokens.iter().map(|_| rng.below(k as usize) as u32).collect();
+            for (&w, &zi) in doc.tokens.iter().zip(&z) {
+                n_wk[w as usize * k as usize + zi as usize] += 1;
+                n_k[zi as usize] += 1;
+            }
+            doc_counts.push(DocTopicCounts::from_assignments(&z));
+            assignments.push(z);
+        }
+        LocalModel { k, v, n_wk, n_k, assignments, doc_counts, hyper }
+    }
+
+    /// Word-topic count.
+    #[inline]
+    pub fn nwk(&self, w: u32, k: u32) -> i64 {
+        self.n_wk[w as usize * self.k as usize + k as usize]
+    }
+
+    /// Row of word-topic counts for `w`.
+    #[inline]
+    pub fn word_row(&self, w: u32) -> &[i64] {
+        let k = self.k as usize;
+        &self.n_wk[w as usize * k..(w as usize + 1) * k]
+    }
+
+    /// Point estimate of φ_kw = P(w | k).
+    pub fn phi(&self, w: u32, k: u32) -> f64 {
+        (self.nwk(w, k) as f64 + self.hyper.beta)
+            / (self.n_k[k as usize] as f64 + self.v as f64 * self.hyper.beta)
+    }
+
+    /// Point estimate of θ_dk = P(k | d).
+    pub fn theta(&self, d: usize, k: u32) -> f64 {
+        let len = self.assignments[d].len() as f64;
+        (self.doc_counts[d].get(k) as f64 + self.hyper.alpha)
+            / (len + self.k as f64 * self.hyper.alpha)
+    }
+
+    /// Verify all count-table invariants (tests and checkpoint recovery):
+    /// `n_wk`/`n_k`/`n_dk` must all be consistent with `assignments`.
+    pub fn check_consistency(&self, corpus: &Corpus) -> Result<()> {
+        let kk = self.k as usize;
+        let mut n_wk = vec![0i64; self.v as usize * kk];
+        let mut n_k = vec![0i64; kk];
+        if corpus.docs.len() != self.assignments.len() {
+            return Err(Error::Config("doc count mismatch".into()));
+        }
+        for (d, doc) in corpus.docs.iter().enumerate() {
+            if doc.tokens.len() != self.assignments[d].len() {
+                return Err(Error::Config(format!("doc {d} token/assignment length mismatch")));
+            }
+            for (&w, &z) in doc.tokens.iter().zip(&self.assignments[d]) {
+                n_wk[w as usize * kk + z as usize] += 1;
+                n_k[z as usize] += 1;
+            }
+            let expect = DocTopicCounts::from_assignments(&self.assignments[d]);
+            if expect != self.doc_counts[d] {
+                return Err(Error::Config(format!("doc {d} topic counts inconsistent")));
+            }
+        }
+        if n_wk != self.n_wk {
+            return Err(Error::Config("n_wk inconsistent with assignments".into()));
+        }
+        if n_k != self.n_k {
+            return Err(Error::Config("n_k inconsistent with assignments".into()));
+        }
+        Ok(())
+    }
+}
+
+/// One full exact-Gibbs sweep over the corpus. O(K) per token.
+pub fn sweep(model: &mut LocalModel, corpus: &Corpus, rng: &mut Pcg64) {
+    let kk = model.k as usize;
+    let vbeta = model.v as f64 * model.hyper.beta;
+    let mut weights = vec![0.0f64; kk];
+    for (d, doc) in corpus.docs.iter().enumerate() {
+        for (pos, &w) in doc.tokens.iter().enumerate() {
+            let z_old = model.assignments[d][pos];
+            // Exclude the token.
+            model.doc_counts[d].decrement(z_old);
+            model.n_wk[w as usize * kk + z_old as usize] -= 1;
+            model.n_k[z_old as usize] -= 1;
+            // Full conditional.
+            let row = &model.n_wk[w as usize * kk..(w as usize + 1) * kk];
+            for (k, wt) in weights.iter_mut().enumerate() {
+                let ndk = model.doc_counts[d].get(k as u32) as f64;
+                *wt = (ndk + model.hyper.alpha) * (row[k] as f64 + model.hyper.beta)
+                    / (model.n_k[k] as f64 + vbeta);
+            }
+            let z_new = rng.categorical(&weights) as u32;
+            // Re-include.
+            model.doc_counts[d].increment(z_new);
+            model.n_wk[w as usize * kk + z_new as usize] += 1;
+            model.n_k[z_new as usize] += 1;
+            model.assignments[d][pos] = z_new;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synth::{generate, SynthConfig};
+    use crate::eval::perplexity::training_perplexity;
+
+    fn tiny_corpus() -> Corpus {
+        generate(&SynthConfig {
+            num_docs: 120,
+            vocab_size: 300,
+            num_topics: 5,
+            avg_doc_len: 40.0,
+            seed: 7,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn init_is_consistent() {
+        let c = tiny_corpus();
+        let m = LocalModel::init_random(&c, 5, LdaHyper::default_for(5), 1);
+        m.check_consistency(&c).unwrap();
+        assert_eq!(m.n_k.iter().sum::<i64>() as u64, c.num_tokens());
+    }
+
+    #[test]
+    fn sweep_preserves_invariants() {
+        let c = tiny_corpus();
+        let mut m = LocalModel::init_random(&c, 5, LdaHyper::default_for(5), 2);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..3 {
+            sweep(&mut m, &c, &mut rng);
+            m.check_consistency(&c).unwrap();
+        }
+    }
+
+    #[test]
+    fn gibbs_reduces_perplexity() {
+        let c = tiny_corpus();
+        let mut m = LocalModel::init_random(&c, 5, LdaHyper::default_for(5), 4);
+        let mut rng = Pcg64::new(5);
+        let before = training_perplexity(&m, &c);
+        for _ in 0..15 {
+            sweep(&mut m, &c, &mut rng);
+        }
+        let after = training_perplexity(&m, &c);
+        // The Zipfian synthetic corpus has a strong unigram baseline, so
+        // relative drops are modest; require a clear, consistent drop.
+        assert!(
+            after < before * 0.93,
+            "perplexity should drop markedly: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn phi_theta_are_distributions() {
+        let c = tiny_corpus();
+        let m = LocalModel::init_random(&c, 5, LdaHyper::default_for(5), 6);
+        for k in 0..5 {
+            let total: f64 = (0..m.v).map(|w| m.phi(w, k)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "phi_{k} sums to {total}");
+        }
+        for d in [0usize, 10, 50] {
+            let total: f64 = (0..5).map(|k| m.theta(d, k)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "theta_{d} sums to {total}");
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! LDA hyper-parameters.
+
+/// Dirichlet concentrations for LDA.
+#[derive(Debug, Clone, Copy)]
+pub struct LdaHyper {
+    /// Document–topic concentration α (symmetric). The common default is
+    /// `50 / K` (Griffiths & Steyvers, 2004).
+    pub alpha: f64,
+    /// Topic–word concentration β (symmetric); 0.01 is the standard
+    /// web-corpus choice.
+    pub beta: f64,
+}
+
+impl LdaHyper {
+    /// Standard defaults for `k` topics: α = 50/K, β = 0.01.
+    pub fn default_for(k: usize) -> LdaHyper {
+        LdaHyper { alpha: 50.0 / k as f64, beta: 0.01 }
+    }
+
+    /// Validate positivity.
+    pub fn validate(&self) -> crate::util::error::Result<()> {
+        if self.alpha <= 0.0 || self.beta <= 0.0 {
+            return Err(crate::util::error::Error::Config(format!(
+                "alpha and beta must be positive (got alpha={}, beta={})",
+                self.alpha, self.beta
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_scale_with_k() {
+        let h = LdaHyper::default_for(50);
+        assert!((h.alpha - 1.0).abs() < 1e-12);
+        assert_eq!(h.beta, 0.01);
+        assert!(h.validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(LdaHyper { alpha: 0.0, beta: 0.1 }.validate().is_err());
+        assert!(LdaHyper { alpha: 0.1, beta: -1.0 }.validate().is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! Distributed LDA (the paper's §3).
+//!
+//! The inference algorithm is **LightLDA** (Yuan et al., WWW'15): a
+//! collapsed Gibbs sampler whose per-token resampling step is a
+//! Metropolis–Hastings kernel alternating two cheap proposals —
+//!
+//! - the **word proposal** `q_w(k) ∝ n_wk + β`, drawn in amortized O(1)
+//!   via Vose [`alias`] tables rebuilt once per word per iteration;
+//! - the **document proposal** `q_d(k) ∝ n_dk + α`, drawn in O(1) by
+//!   picking the topic of a uniformly random token of the document
+//!   (plus an α-weighted uniform smoothing branch);
+//!
+//! each followed by its exact acceptance probability, so the chain's
+//! stationary distribution is the true collapsed Gibbs posterior.
+//!
+//! The sampler runs data-parallel over corpus partitions ([`trainer`]);
+//! the shared state — the word-topic matrix `n_wk` and the topic vector
+//! `n_k` — lives on the parameter server. Document-topic counts `n_dk`
+//! are local to each partition ([`sparse_counts`]). Updates stream out
+//! through [`buffer`] (≈100 k-reassignment messages, with a dense local
+//! aggregate for the most frequent words, §3.3) while model rows are
+//! pulled ahead of the sampler by [`pipeline`] (§3.4). [`checkpoint`]
+//! provides the §3.5 fault-tolerance path. [`gibbs`] is the exact O(K)
+//! collapsed Gibbs baseline used for correctness and for the O(1)-vs-O(K)
+//! scaling benchmark.
+
+pub mod alias;
+pub mod buffer;
+pub mod checkpoint;
+pub mod gibbs;
+pub mod hyper;
+pub mod lightlda;
+pub mod pipeline;
+pub mod sparse_counts;
+pub mod trainer;
+
+pub use hyper::LdaHyper;
+pub use trainer::{TrainConfig, Trainer};

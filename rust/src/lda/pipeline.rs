@@ -1,0 +1,163 @@
+//! Pipelined model pulls (paper §3.4).
+//!
+//! Workers pull the word-topic matrix in fixed-size row blocks. While a
+//! block is being resampled (compute-bound), the *next* block is already
+//! being pulled on a separate network thread, so the sampler never waits
+//! on the network once the pipeline is warm.
+
+use std::sync::mpsc;
+
+use crate::ps::client::BigMatrix;
+use crate::util::error::Result;
+
+/// A pulled model block: the block index, the global row ids, and their
+/// values (row-major, `rows.len() x K`).
+pub struct Block {
+    /// Index into the block list.
+    pub index: usize,
+    /// Global row (word) ids.
+    pub rows: Vec<u64>,
+    /// Pulled values.
+    pub values: Vec<i64>,
+}
+
+/// Iterator over model blocks, prefetched `depth` blocks ahead on a
+/// background thread.
+pub struct PullPipeline {
+    rx: mpsc::Receiver<Result<Block>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PullPipeline {
+    /// Start pulling `blocks` (each a list of global rows) from `matrix`.
+    ///
+    /// `depth = 0` disables prefetching (each `next()` pulls
+    /// synchronously — the non-pipelined ablation); `depth >= 1` keeps
+    /// that many blocks in flight.
+    pub fn start(matrix: BigMatrix<i64>, blocks: Vec<Vec<u64>>, depth: usize) -> PullPipeline {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1) - 1 + 1);
+        let handle = std::thread::Builder::new()
+            .name("glint-pull-pipeline".into())
+            .spawn(move || {
+                for (index, rows) in blocks.into_iter().enumerate() {
+                    let result = matrix.pull_rows(&rows).map(|values| Block {
+                        index,
+                        rows,
+                        values,
+                    });
+                    let failed = result.is_err();
+                    if tx.send(result).is_err() || failed {
+                        return; // consumer gone or pull failed
+                    }
+                }
+            })
+            .expect("spawn pull pipeline");
+        PullPipeline { rx, handle: Some(handle) }
+    }
+
+    /// Next block, in order. `None` when exhausted.
+    pub fn next_block(&mut self) -> Option<Result<Block>> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for PullPipeline {
+    fn drop(&mut self) {
+        // Keep receiving until the producer exits (it stops at the end of
+        // the block list or on pull failure); this guarantees it is never
+        // left blocked on a full channel when we join.
+        while self.rx.recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Split the words `0..v` that are *present* (per `present` bitmap) into
+/// blocks of at most `block_size` rows.
+pub fn word_blocks(present: &[bool], block_size: usize) -> Vec<Vec<u64>> {
+    let mut blocks = Vec::new();
+    let mut current = Vec::with_capacity(block_size);
+    for (w, &p) in present.iter().enumerate() {
+        if p {
+            current.push(w as u64);
+            if current.len() == block_size {
+                blocks.push(std::mem::take(&mut current));
+            }
+        }
+    }
+    if !current.is_empty() {
+        blocks.push(current);
+    }
+    blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::FaultPlan;
+    use crate::ps::client::{CoordDeltas, PsClient};
+    use crate::ps::config::PsConfig;
+    use crate::ps::server::ServerGroup;
+
+    fn setup() -> (ServerGroup, BigMatrix<i64>) {
+        let cfg = PsConfig::with_shards(3);
+        let group = ServerGroup::start(cfg.clone(), FaultPlan::reliable(), 9);
+        let client = PsClient::connect(&group.transport(), cfg);
+        let m: BigMatrix<i64> = client.matrix(64, 4).unwrap();
+        // Mark each row with its id in column 0.
+        let deltas = CoordDeltas {
+            rows: (0..64).collect(),
+            cols: vec![0; 64],
+            values: (0..64).map(|r| r as i64 + 1).collect(),
+        };
+        m.push_coords(&deltas).unwrap();
+        (group, m)
+    }
+
+    #[test]
+    fn word_blocks_partition_present_words() {
+        let mut present = vec![false; 10];
+        for i in [0usize, 2, 3, 7, 8, 9] {
+            present[i] = true;
+        }
+        let blocks = word_blocks(&present, 4);
+        assert_eq!(blocks, vec![vec![0, 2, 3, 7], vec![8, 9]]);
+    }
+
+    #[test]
+    fn pipeline_yields_all_blocks_in_order() {
+        let (_g, m) = setup();
+        let blocks = vec![vec![0u64, 1, 2], vec![10, 20], vec![63]];
+        let mut p = PullPipeline::start(m, blocks, 2);
+        let mut seen = Vec::new();
+        while let Some(b) = p.next_block() {
+            let b = b.unwrap();
+            seen.push(b.index);
+            // Check pulled values match what we pushed.
+            for (i, &r) in b.rows.iter().enumerate() {
+                assert_eq!(b.values[i * 4], r as i64 + 1, "row {r}");
+            }
+        }
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn depth_zero_is_synchronous_but_complete() {
+        let (_g, m) = setup();
+        let blocks = vec![vec![5u64], vec![6]];
+        let mut p = PullPipeline::start(m, blocks, 0);
+        assert_eq!(p.next_block().unwrap().unwrap().rows, vec![5]);
+        assert_eq!(p.next_block().unwrap().unwrap().rows, vec![6]);
+        assert!(p.next_block().is_none());
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let (_g, m) = setup();
+        let blocks: Vec<Vec<u64>> = (0..32).map(|i| vec![i as u64]).collect();
+        let mut p = PullPipeline::start(m, blocks, 1);
+        let _ = p.next_block();
+        drop(p); // must not deadlock
+    }
+}

@@ -1,0 +1,139 @@
+//! Sparse document–topic counters.
+//!
+//! `n_dk` is document-local (paper §3: "the document-topic counts are
+//! document-specific and thus local to the data and need not be shared").
+//! A document touches at most `min(len, K)` topics, so counts are kept as
+//! a small sorted-by-topic vec of `(topic, count)` pairs — cache-friendly
+//! for the K≤1000 regime and far smaller than a dense `docs x K` matrix.
+
+/// Sparse topic counts for one document.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DocTopicCounts {
+    /// `(topic, count)` pairs, sorted by topic, counts > 0.
+    entries: Vec<(u32, u32)>,
+}
+
+impl DocTopicCounts {
+    /// Empty counts.
+    pub fn new() -> DocTopicCounts {
+        DocTopicCounts::default()
+    }
+
+    /// Build from a document's topic assignments.
+    pub fn from_assignments(z: &[u32]) -> DocTopicCounts {
+        let mut c = DocTopicCounts::new();
+        for &k in z {
+            c.increment(k);
+        }
+        c
+    }
+
+    /// Count for one topic.
+    #[inline]
+    pub fn get(&self, topic: u32) -> u32 {
+        match self.entries.binary_search_by_key(&topic, |e| e.0) {
+            Ok(i) => self.entries[i].1,
+            Err(_) => 0,
+        }
+    }
+
+    /// Add one to a topic's count.
+    #[inline]
+    pub fn increment(&mut self, topic: u32) {
+        match self.entries.binary_search_by_key(&topic, |e| e.0) {
+            Ok(i) => self.entries[i].1 += 1,
+            Err(i) => self.entries.insert(i, (topic, 1)),
+        }
+    }
+
+    /// Remove one from a topic's count. Panics in debug if absent.
+    #[inline]
+    pub fn decrement(&mut self, topic: u32) {
+        match self.entries.binary_search_by_key(&topic, |e| e.0) {
+            Ok(i) => {
+                self.entries[i].1 -= 1;
+                if self.entries[i].1 == 0 {
+                    self.entries.remove(i);
+                }
+            }
+            Err(_) => debug_assert!(false, "decrement of zero count for topic {topic}"),
+        }
+    }
+
+    /// Number of distinct topics present.
+    pub fn distinct(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Sum of all counts (== document length while consistent).
+    pub fn total(&self) -> u64 {
+        self.entries.iter().map(|&(_, c)| c as u64).sum()
+    }
+
+    /// Iterate `(topic, count)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.entries.iter().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn increment_decrement_roundtrip() {
+        let mut c = DocTopicCounts::new();
+        c.increment(5);
+        c.increment(5);
+        c.increment(2);
+        assert_eq!(c.get(5), 2);
+        assert_eq!(c.get(2), 1);
+        assert_eq!(c.get(9), 0);
+        c.decrement(5);
+        assert_eq!(c.get(5), 1);
+        c.decrement(5);
+        assert_eq!(c.get(5), 0);
+        assert_eq!(c.distinct(), 1);
+    }
+
+    #[test]
+    fn from_assignments_matches_manual() {
+        let z = [1u32, 3, 1, 1, 0];
+        let c = DocTopicCounts::from_assignments(&z);
+        assert_eq!(c.get(1), 3);
+        assert_eq!(c.get(3), 1);
+        assert_eq!(c.get(0), 1);
+        assert_eq!(c.total(), 5);
+    }
+
+    #[test]
+    fn stays_consistent_with_dense_reference_property() {
+        forall(
+            "sparse equals dense",
+            200,
+            |rng| {
+                let k = 1 + rng.below(20);
+                let ops: Vec<(bool, u32)> = (0..rng.below(300))
+                    .map(|_| (rng.bernoulli(0.6), rng.below(k) as u32))
+                    .collect();
+                (k, ops)
+            },
+            |(k, ops)| {
+                let mut dense = vec![0i64; *k];
+                let mut sparse = DocTopicCounts::new();
+                for &(inc, topic) in ops {
+                    if inc {
+                        dense[topic as usize] += 1;
+                        sparse.increment(topic);
+                    } else if dense[topic as usize] > 0 {
+                        dense[topic as usize] -= 1;
+                        sparse.decrement(topic);
+                    }
+                }
+                (0..*k).all(|t| dense[t] == sparse.get(t as u32) as i64)
+                    && sparse.total() == dense.iter().sum::<i64>() as u64
+            },
+        );
+    }
+}

@@ -1,0 +1,745 @@
+//! The distributed LightLDA trainer (paper §3.1, Figure 3).
+//!
+//! Plays the role of the Spark driver + executors: the corpus is split
+//! into partitions (the RDD analogue); each partition is sampled by a
+//! worker thread running the LightLDA Metropolis–Hastings kernel against
+//! shared state on the parameter server:
+//!
+//! - `n_wk` — `V x K` word-topic counts, a [`BigMatrix<i64>`];
+//! - `n_k`  — `K` topic totals, a [`BigVector<i64>`];
+//! - `n_dk` — document-topic counts, local to each worker.
+//!
+//! Per iteration, each worker walks the model in word blocks: rows are
+//! **pulled in fixed-size sets** with the next set prefetched while the
+//! current one is being sampled (§3.4, [`crate::lda::pipeline`]); alias
+//! tables are built per pulled word; all of the partition's occurrences
+//! of those words are resampled; updates stream out through the
+//! [`crate::lda::buffer`] (§3.3) and are pushed **asynchronously** on a
+//! background flusher pool while sampling continues. An iteration
+//! barrier waits for all pushes (exactly-once, §2.4) before the next
+//! iteration pulls.
+//!
+//! Fault tolerance (§3.5): assignments are checkpointed after each
+//! iteration; [`Trainer::restore`] rebuilds the parameter-server count
+//! tables from the latest checkpoint.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::corpus::dataset::Corpus;
+use crate::eval::perplexity::{log_likelihood, perplexity_from_loglik, TopicModel};
+use crate::lda::buffer::UpdateBuffer;
+use crate::lda::checkpoint::Checkpoint;
+use crate::lda::hyper::LdaHyper;
+use crate::lda::lightlda::{resample_token, word_alias, TokenView};
+use crate::lda::pipeline::{word_blocks, PullPipeline};
+use crate::lda::sparse_counts::DocTopicCounts;
+use crate::log_info;
+use crate::metrics::{Report, Row};
+use crate::net::FaultPlan;
+use crate::ps::client::{BigMatrix, BigVector, CoordDeltas, PsClient};
+use crate::ps::config::PsConfig;
+use crate::ps::partition::PartitionScheme;
+use crate::ps::server::ServerGroup;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::ThreadPool;
+use crate::util::timer::Stopwatch;
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of topics K.
+    pub num_topics: u32,
+    /// Gibbs iterations (full corpus sweeps).
+    pub iterations: u32,
+    /// Document-topic concentration; `<= 0` selects the 50/K default.
+    pub alpha: f64,
+    /// Topic-word concentration.
+    pub beta: f64,
+    /// Metropolis–Hastings proposal cycles per token (paper/LightLDA: 2).
+    pub mh_steps: u32,
+    /// Sampling worker threads ("executors").
+    pub workers: usize,
+    /// Parameter-server shards (paper cluster: 30).
+    pub shards: usize,
+    /// Words per pulled model block (§3.4 "fixed-size sets").
+    pub block_words: usize,
+    /// Sparse push-buffer flush threshold (§3.3; paper: 100,000).
+    pub buffer_cap: usize,
+    /// Number of most-frequent words aggregated densely (§3.3; paper:
+    /// 2,000).
+    pub dense_top_words: u64,
+    /// Prefetch depth for model pulls (0 disables pipelining — §3.4
+    /// ablation).
+    pub pipeline_depth: usize,
+    /// Row partitioning scheme on the servers (paper: cyclic).
+    pub scheme: PartitionScheme,
+    /// Simulated network faults.
+    pub fault: FaultPlan,
+    /// RNG seed.
+    pub seed: u64,
+    /// Compute training perplexity every N iterations (0 = never).
+    pub eval_every: u32,
+    /// Checkpoint directory (None disables checkpointing).
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            num_topics: 20,
+            iterations: 50,
+            alpha: 0.0,
+            beta: 0.01,
+            mh_steps: 2,
+            workers: 4,
+            shards: 4,
+            block_words: 2048,
+            buffer_cap: 100_000,
+            dense_top_words: 2000,
+            pipeline_depth: 1,
+            scheme: PartitionScheme::Cyclic,
+            fault: FaultPlan::reliable(),
+            seed: 0x1da,
+            eval_every: 0,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Resolved hyper-parameters.
+    pub fn hyper(&self) -> LdaHyper {
+        let alpha = if self.alpha > 0.0 { self.alpha } else { 50.0 / self.num_topics as f64 };
+        LdaHyper { alpha, beta: self.beta }
+    }
+}
+
+/// Per-partition worker state (the executor's slice of the RDD).
+struct WorkerState {
+    /// Document index range in the corpus.
+    doc_range: std::ops::Range<usize>,
+    /// Topic assignments for the partition's docs.
+    assignments: Vec<Vec<u32>>,
+    /// Doc-topic counts for the partition's docs.
+    doc_counts: Vec<DocTopicCounts>,
+    /// Inverted index: word -> occurrences as (local doc idx, position),
+    /// grouped so all of a word's tokens are sampled while its alias
+    /// table is fresh.
+    occurrences: Vec<Vec<(u32, u32)>>,
+    /// Which words occur in this partition at all.
+    present: Vec<bool>,
+    /// Worker RNG.
+    rng: Pcg64,
+}
+
+/// Counters published by one training iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterStats {
+    /// Tokens resampled.
+    pub tokens: u64,
+    /// Topic reassignments (z changed).
+    pub changed: u64,
+    /// Sparse delta messages pushed.
+    pub sparse_batches: u64,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+}
+
+/// Distributed LightLDA trainer bound to one corpus layout.
+pub struct Trainer {
+    cfg: TrainConfig,
+    hyper: LdaHyper,
+    group: ServerGroup,
+    client: PsClient,
+    n_wk: BigMatrix<i64>,
+    n_k: BigVector<i64>,
+    workers: Vec<WorkerState>,
+    flusher: ThreadPool,
+    vocab_size: u32,
+    completed_iterations: u32,
+    /// Per-iteration report (perplexity curve, throughput).
+    pub report: Report,
+}
+
+impl Trainer {
+    /// Set up servers, allocate the distributed model, initialize topic
+    /// assignments randomly and push the initial counts.
+    pub fn new(cfg: TrainConfig, corpus: &Corpus) -> Result<Trainer> {
+        cfg.hyper().validate()?;
+        if corpus.num_docs() == 0 {
+            return Err(Error::Config("empty corpus".into()));
+        }
+        let ps_cfg = PsConfig {
+            shards: cfg.shards,
+            scheme: cfg.scheme,
+            ..PsConfig::default()
+        };
+        let group = ServerGroup::start(ps_cfg.clone(), cfg.fault.clone(), cfg.seed ^ 0x9d);
+        let client = PsClient::connect(&group.transport(), ps_cfg);
+        let n_wk: BigMatrix<i64> =
+            client.matrix(corpus.vocab_size as u64, cfg.num_topics)?;
+        let n_k: BigVector<i64> = client.vector(cfg.num_topics as u64)?;
+
+        let mut trainer = Trainer {
+            hyper: cfg.hyper(),
+            group,
+            client,
+            n_wk,
+            n_k,
+            workers: Vec::new(),
+            flusher: ThreadPool::new(cfg.workers.max(2)),
+            vocab_size: corpus.vocab_size,
+            completed_iterations: 0,
+            report: Report::new(),
+            cfg,
+        };
+        let mut seed_rng = Pcg64::new(trainer.cfg.seed);
+        let k = trainer.cfg.num_topics;
+        let init = |_: &Corpus, doc: &crate::corpus::dataset::Document, rng: &mut Pcg64| {
+            doc.tokens.iter().map(|_| rng.below(k as usize) as u32).collect::<Vec<u32>>()
+        };
+        trainer.build_workers(corpus, |c, d, r| init(c, d, r), &mut seed_rng)?;
+        trainer.push_initial_counts()?;
+        Ok(trainer)
+    }
+
+    /// Restore from the latest checkpoint in `cfg.checkpoint_dir`:
+    /// assignments come from the checkpoint and the parameter-server
+    /// count tables are rebuilt from them (§3.5).
+    pub fn restore(cfg: TrainConfig, corpus: &Corpus) -> Result<Trainer> {
+        let dir = cfg
+            .checkpoint_dir
+            .clone()
+            .ok_or_else(|| Error::Checkpoint("no checkpoint_dir configured".into()))?;
+        let ckpt = Checkpoint::load_latest(&dir)?
+            .ok_or_else(|| Error::Checkpoint(format!("no checkpoint found in {dir:?}")))?;
+        if ckpt.num_topics != cfg.num_topics {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint has K={}, config has K={}",
+                ckpt.num_topics, cfg.num_topics
+            )));
+        }
+        if ckpt.assignments.len() != corpus.num_docs() {
+            return Err(Error::Checkpoint("checkpoint does not match corpus".into()));
+        }
+        for (d, doc) in corpus.docs.iter().enumerate() {
+            if ckpt.assignments[d].len() != doc.tokens.len() {
+                return Err(Error::Checkpoint(format!("doc {d} length mismatch")));
+            }
+        }
+
+        let ps_cfg = PsConfig { shards: cfg.shards, scheme: cfg.scheme, ..PsConfig::default() };
+        let group = ServerGroup::start(ps_cfg.clone(), cfg.fault.clone(), cfg.seed ^ 0x9d);
+        let client = PsClient::connect(&group.transport(), ps_cfg);
+        let n_wk: BigMatrix<i64> = client.matrix(corpus.vocab_size as u64, cfg.num_topics)?;
+        let n_k: BigVector<i64> = client.vector(cfg.num_topics as u64)?;
+        let completed = ckpt.iteration;
+        let assignments = std::cell::RefCell::new(ckpt.assignments);
+
+        let mut trainer = Trainer {
+            hyper: cfg.hyper(),
+            group,
+            client,
+            n_wk,
+            n_k,
+            workers: Vec::new(),
+            flusher: ThreadPool::new(cfg.workers.max(2)),
+            vocab_size: corpus.vocab_size,
+            completed_iterations: completed,
+            report: Report::new(),
+            cfg,
+        };
+        let mut seed_rng = Pcg64::new(trainer.cfg.seed ^ 0xc4);
+        // Hand each doc its checkpointed assignment. Docs are visited in
+        // order, so drain front-to-back.
+        let next = std::cell::Cell::new(0usize);
+        trainer.build_workers(
+            corpus,
+            |_, _, _| {
+                let i = next.get();
+                next.set(i + 1);
+                assignments.borrow_mut()[i].clone()
+            },
+            &mut seed_rng,
+        )?;
+        trainer.push_initial_counts()?;
+        log_info!(
+            "restored from checkpoint at iteration {} ({} docs)",
+            completed,
+            corpus.num_docs()
+        );
+        Ok(trainer)
+    }
+
+    /// Iterations completed so far (nonzero after restore).
+    pub fn completed_iterations(&self) -> u32 {
+        self.completed_iterations
+    }
+
+    fn build_workers(
+        &mut self,
+        corpus: &Corpus,
+        mut init_doc: impl FnMut(&Corpus, &crate::corpus::dataset::Document, &mut Pcg64) -> Vec<u32>,
+        seed_rng: &mut Pcg64,
+    ) -> Result<()> {
+        let ranges = corpus.partitions(self.cfg.workers);
+        let v = corpus.vocab_size as usize;
+        for range in ranges {
+            let mut assignments = Vec::with_capacity(range.len());
+            let mut doc_counts = Vec::with_capacity(range.len());
+            let mut occurrences: Vec<Vec<(u32, u32)>> = vec![Vec::new(); v];
+            let mut present = vec![false; v];
+            let mut rng = seed_rng.fork(range.start as u64);
+            for (local, d) in range.clone().enumerate() {
+                let doc = &corpus.docs[d];
+                let z = init_doc(corpus, doc, &mut rng);
+                debug_assert_eq!(z.len(), doc.tokens.len());
+                for (pos, &w) in doc.tokens.iter().enumerate() {
+                    occurrences[w as usize].push((local as u32, pos as u32));
+                    present[w as usize] = true;
+                }
+                doc_counts.push(DocTopicCounts::from_assignments(&z));
+                assignments.push(z);
+            }
+            self.workers.push(WorkerState {
+                doc_range: range,
+                assignments,
+                doc_counts,
+                occurrences,
+                present,
+                rng,
+            });
+        }
+        Ok(())
+    }
+
+    /// Push every worker's initial counts to the parameter server
+    /// (buffered, same path as training updates).
+    fn push_initial_counts(&mut self) -> Result<()> {
+        let k = self.cfg.num_topics;
+        let mut nk_local = vec![0i64; k as usize];
+        let mut buffer = UpdateBuffer::new(self.cfg.buffer_cap, self.cfg.dense_top_words, k);
+        for ws in &self.workers {
+            for (doc_z, _) in ws.assignments.iter().zip(&ws.doc_counts) {
+                for &z in doc_z {
+                    nk_local[z as usize] += 1;
+                }
+            }
+            for (w, occs) in ws.occurrences.iter().enumerate() {
+                for &(local, pos) in occs {
+                    let z = ws.assignments[local as usize][pos as usize];
+                    if let Some(batch) = buffer.add(w as u64, z, 1) {
+                        self.n_wk.push_coords(&batch)?;
+                    }
+                }
+            }
+        }
+        let rest = buffer.take_sparse();
+        self.n_wk.push_coords(&rest)?;
+        let (rows, values) = buffer.take_dense();
+        self.n_wk.push_rows(&rows, &values)?;
+        let idx: Vec<u64> = (0..k as u64).collect();
+        self.n_k.push(&idx, &nk_local)?;
+        Ok(())
+    }
+
+    /// Run the configured number of iterations; returns the final model
+    /// pulled off the parameter server.
+    pub fn run(&mut self, corpus: &Corpus) -> Result<TopicModel> {
+        let total = self.cfg.iterations;
+        while self.completed_iterations < total {
+            let stats = self.run_iteration()?;
+            let iter = self.completed_iterations;
+            let mut row = Row::new()
+                .set("iter", iter as f64)
+                .set("seconds", stats.seconds)
+                .set("tokens", stats.tokens as f64)
+                .set(
+                    "tokens_per_sec",
+                    if stats.seconds > 0.0 { stats.tokens as f64 / stats.seconds } else { 0.0 },
+                )
+                .set("changed_frac", stats.changed as f64 / stats.tokens.max(1) as f64);
+            if self.cfg.eval_every > 0 && iter % self.cfg.eval_every == 0 {
+                let model = self.pull_model()?;
+                let perplexity = self.training_perplexity(&model, corpus);
+                row = row.set("perplexity", perplexity);
+                log_info!(
+                    "iter {iter}: perplexity {perplexity:.1}, {:.0} tokens/s",
+                    stats.tokens as f64 / stats.seconds.max(1e-9)
+                );
+            } else {
+                log_info!(
+                    "iter {iter}: {:.0} tokens/s ({:.1}% reassigned)",
+                    stats.tokens as f64 / stats.seconds.max(1e-9),
+                    100.0 * stats.changed as f64 / stats.tokens.max(1) as f64
+                );
+            }
+            self.report.push(row);
+            if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                self.checkpoint(&dir)?;
+            }
+        }
+        self.pull_model()
+    }
+
+    /// Execute one full sweep (all workers, all partitions).
+    pub fn run_iteration(&mut self) -> Result<IterStats> {
+        let sw = Stopwatch::new();
+        let k = self.cfg.num_topics;
+        // Iteration-start snapshot of n_k, shared read-only by workers;
+        // each worker maintains its own local drift copy (LightLDA's
+        // bounded-staleness model).
+        let nk_snapshot = self.n_k.pull_all()?;
+        let n_wk = &self.n_wk;
+        let n_k_handle = &self.n_k;
+        let cfg = &self.cfg;
+        let hyper = self.hyper;
+        let v = self.vocab_size;
+        let flusher = &self.flusher;
+        let errors: Mutex<Vec<Error>> = Mutex::new(Vec::new());
+        let totals = Mutex::new(IterStats::default());
+
+        std::thread::scope(|scope| {
+            for ws in self.workers.iter_mut() {
+                let nk_snapshot = nk_snapshot.clone();
+                let errors = &errors;
+                let totals = &totals;
+                scope.spawn(move || {
+                    match worker_iteration(
+                        ws,
+                        cfg,
+                        hyper,
+                        v,
+                        k,
+                        nk_snapshot,
+                        n_wk,
+                        n_k_handle,
+                        flusher,
+                    ) {
+                        Ok(stats) => {
+                            let mut t = totals.lock().unwrap();
+                            t.tokens += stats.tokens;
+                            t.changed += stats.changed;
+                            t.sparse_batches += stats.sparse_batches;
+                        }
+                        Err(e) => errors.lock().unwrap().push(e),
+                    }
+                });
+            }
+        });
+        // Iteration barrier: all asynchronous pushes must have landed
+        // before the next iteration's pulls (and before checkpointing).
+        self.flusher.wait_idle();
+        if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
+            return Err(e);
+        }
+        self.completed_iterations += 1;
+        let mut stats = totals.into_inner().unwrap();
+        stats.seconds = sw.secs();
+        Ok(stats)
+    }
+
+    /// Write a checkpoint of all assignments (gathered from workers).
+    pub fn checkpoint(&self, dir: &std::path::Path) -> Result<()> {
+        let mut assignments = Vec::new();
+        for ws in &self.workers {
+            assignments.extend(ws.assignments.iter().cloned());
+        }
+        let ckpt = Checkpoint {
+            iteration: self.completed_iterations,
+            num_topics: self.cfg.num_topics,
+            assignments,
+        };
+        ckpt.save(dir)?;
+        Ok(())
+    }
+
+    /// Pull the full model off the parameter server.
+    pub fn pull_model(&self) -> Result<TopicModel> {
+        let rows: Vec<u64> = (0..self.vocab_size as u64).collect();
+        // Pull in chunks to keep messages bounded.
+        let k = self.cfg.num_topics as usize;
+        let mut n_wk = Vec::with_capacity(self.vocab_size as usize * k);
+        for chunk in rows.chunks(8192) {
+            n_wk.extend(self.n_wk.pull_rows(chunk)?);
+        }
+        let n_k = self.n_k.pull_all()?;
+        Ok(TopicModel { k: self.cfg.num_topics, v: self.vocab_size, n_wk, n_k, hyper: self.hyper })
+    }
+
+    /// All documents' topic counts in corpus order (gathered from the
+    /// workers; used by the evaluators).
+    pub fn doc_counts(&self) -> Vec<DocTopicCounts> {
+        let mut counts: Vec<DocTopicCounts> = Vec::new();
+        for ws in &self.workers {
+            counts.extend(ws.doc_counts.iter().cloned());
+        }
+        counts
+    }
+
+    /// Training perplexity using the workers' local doc-topic counts.
+    pub fn training_perplexity(&self, model: &TopicModel, corpus: &Corpus) -> f64 {
+        let counts = self.doc_counts();
+        let (ll, n) = log_likelihood(model, corpus, &counts);
+        perplexity_from_loglik(ll, n)
+    }
+
+    /// Aggregate network statistics from the transport (bytes, requests,
+    /// per-shard load) — powers the Fig. 5 measurement.
+    pub fn shard_request_counts(&self) -> Vec<u64> {
+        self.group.transport().stats().iter().map(|s| s.requests()).collect()
+    }
+
+    /// Total bytes sent to the parameter servers so far.
+    pub fn bytes_pushed(&self) -> u64 {
+        self.group.transport().stats().iter().map(|s| s.bytes_sent()).sum()
+    }
+
+    /// Consistency check for tests: the parameter-server tables must
+    /// equal the counts recomputed from worker assignments.
+    pub fn verify_counts(&self) -> Result<()> {
+        let model = self.pull_model()?;
+        let k = self.cfg.num_topics as usize;
+        let mut expect_wk = vec![0i64; self.vocab_size as usize * k];
+        let mut expect_k = vec![0i64; k];
+        for ws in &self.workers {
+            for (local, doc_z) in ws.assignments.iter().enumerate() {
+                let _ = local;
+                for &z in doc_z {
+                    expect_k[z as usize] += 1;
+                }
+            }
+            for (w, occs) in ws.occurrences.iter().enumerate() {
+                for &(local, pos) in occs {
+                    let z = ws.assignments[local as usize][pos as usize];
+                    expect_wk[w * k + z as usize] += 1;
+                }
+            }
+        }
+        if expect_wk != model.n_wk {
+            return Err(Error::Config("n_wk on server diverged from assignments".into()));
+        }
+        if expect_k != model.n_k {
+            return Err(Error::Config("n_k on server diverged from assignments".into()));
+        }
+        Ok(())
+    }
+}
+
+/// One worker's full sweep over its partition.
+#[allow(clippy::too_many_arguments)]
+fn worker_iteration(
+    ws: &mut WorkerState,
+    cfg: &TrainConfig,
+    hyper: LdaHyper,
+    v: u32,
+    k: u32,
+    mut nk_local: Vec<i64>,
+    n_wk: &BigMatrix<i64>,
+    n_k: &BigVector<i64>,
+    flusher: &ThreadPool,
+) -> Result<IterStats> {
+    let kk = k as usize;
+    let mut stats = IterStats::default();
+    let mut buffer = UpdateBuffer::new(cfg.buffer_cap, cfg.dense_top_words, k);
+    let mut nk_delta = vec![0i64; kk];
+
+    let blocks = word_blocks(&ws.present, cfg.block_words);
+    let mut pipeline = PullPipeline::start(n_wk.clone(), blocks, cfg.pipeline_depth);
+
+    while let Some(block) = pipeline.next_block() {
+        let mut block = block?;
+        // Sample all occurrences of each word in the block while its
+        // alias table (built from the just-pulled, stale row) is fresh.
+        for (bi, &wu) in block.rows.clone().iter().enumerate() {
+            let w = wu as usize;
+            let row_range = bi * kk..(bi + 1) * kk;
+            let alias = word_alias(&block.values[row_range.clone()], hyper.beta);
+            for &(local, pos) in &ws.occurrences[w] {
+                let (local, pos) = (local as usize, pos as usize);
+                let z_old = ws.assignments[local][pos];
+                // Inclusive counts; the kernel excludes on the fly, so
+                // the no-change path below is entirely read-only.
+                let z_new = {
+                    let view = TokenView {
+                        word_row: &block.values[row_range.clone()],
+                        n_k: &nk_local,
+                        doc_counts: &ws.doc_counts[local],
+                        doc_assignments: &ws.assignments[local],
+                        word_alias: &alias,
+                        v,
+                        hyper,
+                    };
+                    resample_token(z_old, &view, k, cfg.mh_steps, &mut ws.rng)
+                };
+                stats.tokens += 1;
+                if z_new != z_old {
+                    ws.doc_counts[local].decrement(z_old);
+                    ws.doc_counts[local].increment(z_new);
+                    block.values[bi * kk + z_old as usize] -= 1;
+                    block.values[bi * kk + z_new as usize] += 1;
+                    nk_local[z_old as usize] -= 1;
+                    nk_local[z_new as usize] += 1;
+                    ws.assignments[local][pos] = z_new;
+                    stats.changed += 1;
+                    nk_delta[z_old as usize] -= 1;
+                    nk_delta[z_new as usize] += 1;
+                    if let Some(batch) = buffer.add(wu, z_old, -1) {
+                        flush_async(flusher, n_wk, batch);
+                        stats.sparse_batches += 1;
+                    }
+                    if let Some(batch) = buffer.add(wu, z_new, 1) {
+                        flush_async(flusher, n_wk, batch);
+                        stats.sparse_batches += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    // End-of-iteration flushes: remaining sparse triples, the dense
+    // hot-word aggregate (§3.3), and this worker's n_k drift.
+    let rest = buffer.take_sparse();
+    if !rest.is_empty() {
+        flush_async(flusher, n_wk, rest);
+        stats.sparse_batches += 1;
+    }
+    let (rows, values) = buffer.take_dense();
+    if !rows.is_empty() {
+        let m = n_wk.clone();
+        flusher.execute(move || {
+            if let Err(e) = m.push_rows(&rows, &values) {
+                crate::log_error!("dense push failed: {e}");
+            }
+        });
+    }
+    if nk_delta.iter().any(|&d| d != 0) {
+        let idx: Vec<u64> = (0..kk as u64).collect();
+        let vals = nk_delta.clone();
+        let vec_handle = n_k.clone();
+        flusher.execute(move || {
+            if let Err(e) = vec_handle.push(&idx, &vals) {
+                crate::log_error!("n_k push failed: {e}");
+            }
+        });
+    }
+    Ok(stats)
+}
+
+fn flush_async(flusher: &ThreadPool, n_wk: &BigMatrix<i64>, batch: CoordDeltas<i64>) {
+    let m = n_wk.clone();
+    flusher.execute(move || {
+        if let Err(e) = m.push_coords(&batch) {
+            crate::log_error!("async push failed: {e}");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synth::{generate, SynthConfig};
+
+    fn corpus() -> Corpus {
+        generate(&SynthConfig {
+            num_docs: 150,
+            vocab_size: 400,
+            num_topics: 5,
+            avg_doc_len: 30.0,
+            seed: 33,
+            ..Default::default()
+        })
+    }
+
+    fn fast_cfg() -> TrainConfig {
+        TrainConfig {
+            num_topics: 8,
+            iterations: 3,
+            workers: 3,
+            shards: 3,
+            block_words: 64,
+            buffer_cap: 500,
+            dense_top_words: 20,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn counts_stay_consistent_across_iterations() {
+        let c = corpus();
+        let mut t = Trainer::new(fast_cfg(), &c).unwrap();
+        t.verify_counts().unwrap();
+        t.run_iteration().unwrap();
+        t.verify_counts().unwrap();
+        t.run_iteration().unwrap();
+        t.verify_counts().unwrap();
+    }
+
+    #[test]
+    fn training_reduces_perplexity() {
+        let c = corpus();
+        let mut cfg = fast_cfg();
+        cfg.iterations = 12;
+        let mut t = Trainer::new(cfg, &c).unwrap();
+        let m0 = t.pull_model().unwrap();
+        let p0 = t.training_perplexity(&m0, &c);
+        let model = t.run(&c).unwrap();
+        let p1 = t.training_perplexity(&model, &c);
+        assert!(p1 < p0 * 0.9, "perplexity {p0} -> {p1}");
+    }
+
+    #[test]
+    fn exactly_once_under_lossy_network_full_training() {
+        let c = corpus();
+        let mut cfg = fast_cfg();
+        cfg.fault = FaultPlan::lossy(0.05, 0.05);
+        cfg.iterations = 2;
+        let mut t = Trainer::new(cfg, &c).unwrap();
+        t.run_iteration().unwrap();
+        t.run_iteration().unwrap();
+        // Under message loss + duplication, the exactly-once protocol
+        // must keep server counts exactly equal to the assignments.
+        t.verify_counts().unwrap();
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip() {
+        let c = corpus();
+        let dir = std::env::temp_dir()
+            .join(format!("glint_trainer_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = fast_cfg();
+        cfg.checkpoint_dir = Some(dir.clone());
+        cfg.iterations = 2;
+        let mut t = Trainer::new(cfg.clone(), &c).unwrap();
+        let model_before = t.run(&c).unwrap();
+
+        // Simulate failure: rebuild everything from the checkpoint.
+        let t2 = Trainer::restore(cfg, &c).unwrap();
+        assert_eq!(t2.completed_iterations(), 2);
+        t2.verify_counts().unwrap();
+        let model_after = t2.pull_model().unwrap();
+        assert_eq!(model_before.n_wk, model_after.n_wk, "rebuilt n_wk must match");
+        assert_eq!(model_before.n_k, model_after.n_k);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn range_scheme_also_works() {
+        let c = corpus();
+        let mut cfg = fast_cfg();
+        cfg.scheme = PartitionScheme::Range;
+        cfg.iterations = 1;
+        let mut t = Trainer::new(cfg, &c).unwrap();
+        t.run_iteration().unwrap();
+        t.verify_counts().unwrap();
+    }
+
+    #[test]
+    fn empty_corpus_rejected() {
+        let c = Corpus { docs: vec![], vocab_size: 10, vocab: vec![] };
+        assert!(Trainer::new(fast_cfg(), &c).is_err());
+    }
+}

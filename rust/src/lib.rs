@@ -1,0 +1,43 @@
+//! # glint-lda
+//!
+//! A reproduction of *"Computing Web-scale Topic Models using an
+//! Asynchronous Parameter Server"* (Jagerman & Eickhoff, SIGIR 2017).
+//!
+//! The crate provides:
+//!
+//! - [`ps`] — **Glint**, an asynchronous parameter server: distributed
+//!   matrices/vectors with `pull`/`push`, cyclic row partitioning,
+//!   retrying pulls with exponential back-off and an *exactly-once*
+//!   hand-shake protocol for pushes, running over a fault-injectable
+//!   message transport ([`net`]).
+//! - [`lda`] — a distributed **LightLDA** sampler (Metropolis–Hastings
+//!   collapsed Gibbs with amortized O(1) per-token complexity) built on
+//!   the parameter server, with push buffering, pipelined model pulls and
+//!   checkpoint-based fault tolerance.
+//! - [`baselines`] — faithful re-implementations of Spark MLlib's
+//!   variational EM LDA and Online LDA, with a shuffle-write accounting
+//!   model, used as comparison points for the paper's Table 1.
+//! - [`corpus`] — a synthetic ClueWeb12 analogue (Zipfian LDA generative
+//!   corpus) plus a real-text ingestion pipeline (tokenizer, stopwords,
+//!   Porter stemmer, frequency-ordered vocabulary).
+//! - [`eval`] — held-out perplexity (pure-rust and XLA-accelerated paths)
+//!   and topic inspection utilities.
+//! - [`runtime`] — a PJRT/XLA engine that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from rust.
+//!
+//! Python (JAX + Pallas) participates only at *build* time: `make
+//! artifacts` lowers the evaluation graphs to HLO text once; the rust
+//! binary is self-contained afterwards.
+
+pub mod baselines;
+pub mod corpus;
+pub mod eval;
+pub mod experiments;
+pub mod lda;
+pub mod metrics;
+pub mod net;
+pub mod ps;
+pub mod runtime;
+pub mod util;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,278 @@
+//! glint-lda launcher.
+//!
+//! Subcommands:
+//!
+//! - `train`      — distributed LightLDA over the parameter server
+//! - `em`         — Spark-MLlib-style variational EM baseline
+//! - `online`     — Spark-MLlib-style Online VB baseline
+//! - `gen-corpus` — generate + save a synthetic ClueWeb12 analogue
+//! - `eval`       — perplexity via both the rust and XLA evaluators
+//! - `table1` / `fig4` / `fig5` / `fig6` — reproduce the paper's
+//!   evaluation artifacts (also available as `cargo bench` targets)
+
+use std::path::PathBuf;
+
+use glint_lda::baselines::{em, online};
+use glint_lda::corpus::dataset::Corpus;
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::eval::topics::summarize;
+use glint_lda::experiments::{fig4, fig5, fig6, table1};
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::log_info;
+use glint_lda::ps::partition::PartitionScheme;
+use glint_lda::util::cli::Args;
+use glint_lda::util::error::{Error, Result};
+use glint_lda::util::logger;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    logger::set_level_str(&args.str_or("log", "info"));
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("em") => cmd_em(args),
+        Some("online") => cmd_online(args),
+        Some("gen-corpus") => cmd_gen_corpus(args),
+        Some("eval") => cmd_eval(args),
+        Some("table1") => cmd_table1(args),
+        Some("fig4") => cmd_fig4(args),
+        Some("fig5") => cmd_fig5(args),
+        Some("fig6") => cmd_fig6(args),
+        Some(other) => Err(Error::Config(format!("unknown subcommand {other:?}"))),
+        None => {
+            println!(
+                "glint-lda — web-scale topic models with an asynchronous parameter server\n\
+                 \n\
+                 usage: glint-lda <train|em|online|gen-corpus|eval|table1|fig4|fig5|fig6> [--opt value]...\n\
+                 \n\
+                 common options:\n\
+                 --topics N      number of topics (default 20/100 depending on command)\n\
+                 --iters N       iterations (default 20)\n\
+                 --workers N     sampler threads (default 4)\n\
+                 --shards N      parameter-server shards (default 4)\n\
+                 --corpus PATH   corpus file (default: generate synthetic)\n\
+                 --docs N        synthetic corpus size (default 8000)\n\
+                 --vocab N       synthetic vocabulary size (default 8000)\n\
+                 --out PATH      write the report CSV here\n\
+                 --log LEVEL     error|warn|info|debug|trace"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_or_generate(args: &Args) -> Result<Corpus> {
+    if let Some(path) = args.get("corpus") {
+        log_info!("loading corpus from {path}");
+        return Corpus::load(&PathBuf::from(path));
+    }
+    let cfg = SynthConfig {
+        num_docs: args.get_as("docs", 8000usize)?,
+        vocab_size: args.get_as("vocab", 8000u32)?,
+        num_topics: args.get_as("gen-topics", 50usize)?,
+        avg_doc_len: args.get_as("avg-len", 80.0f64)?,
+        zipf_exponent: args.get_as("zipf", 1.07f64)?,
+        seed: args.get_as("seed", 0xc1e0u64)?,
+        ..SynthConfig::default()
+    };
+    log_info!(
+        "generating synthetic corpus: {} docs, V={}",
+        cfg.num_docs,
+        cfg.vocab_size
+    );
+    Ok(generate(&cfg))
+}
+
+fn train_config(args: &Args) -> Result<TrainConfig> {
+    Ok(TrainConfig {
+        num_topics: args.get_as("topics", 20u32)?,
+        iterations: args.get_as("iters", 20u32)?,
+        alpha: args.get_as("alpha", 0.0f64)?,
+        beta: args.get_as("beta", 0.01f64)?,
+        mh_steps: args.get_as("mh-steps", 2u32)?,
+        workers: args.get_as("workers", 4usize)?,
+        shards: args.get_as("shards", 4usize)?,
+        block_words: args.get_as("block-words", 2048usize)?,
+        buffer_cap: args.get_as("buffer-cap", 100_000usize)?,
+        dense_top_words: args.get_as("dense-top", 2000u64)?,
+        pipeline_depth: args.get_as("pipeline-depth", 1usize)?,
+        scheme: PartitionScheme::parse(&args.str_or("scheme", "cyclic"))
+            .ok_or_else(|| Error::Config("bad --scheme (cyclic|range)".into()))?,
+        seed: args.get_as("seed", 0x1dau64)?,
+        eval_every: args.get_as("eval-every", 5u32)?,
+        checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
+        ..TrainConfig::default()
+    })
+}
+
+fn maybe_save(args: &Args, csv: String) -> Result<()> {
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, csv)?;
+        log_info!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let corpus = load_or_generate(args)?;
+    let cfg = train_config(args)?;
+    let mut trainer = if args.flag("resume") {
+        Trainer::restore(cfg, &corpus)?
+    } else {
+        Trainer::new(cfg, &corpus)?
+    };
+    let model = trainer.run(&corpus)?;
+    let perplexity = trainer.training_perplexity(&model, &corpus);
+    log_info!("final training perplexity: {perplexity:.1}");
+    for line in summarize(&model, &corpus.vocab, args.get_as("top-words", 8usize)?)
+        .into_iter()
+        .take(args.get_as("show-topics", 10usize)?)
+    {
+        println!("{line}");
+    }
+    maybe_save(args, trainer.report.to_csv())
+}
+
+fn cmd_em(args: &Args) -> Result<()> {
+    let corpus = load_or_generate(args)?;
+    let cfg = em::EmConfig {
+        num_topics: args.get_as("topics", 20u32)?,
+        iterations: args.get_as("iters", 20u32)?,
+        workers: args.get_as("workers", 4usize)?,
+        ..em::EmConfig::default()
+    };
+    let model = em::train(&cfg, &corpus)?;
+    log_info!(
+        "EM perplexity {:.1}, simulated shuffle write {:.3} GB",
+        model.perplexity(&corpus),
+        model.shuffle_bytes as f64 / 1e9
+    );
+    maybe_save(args, model.report.to_csv())
+}
+
+fn cmd_online(args: &Args) -> Result<()> {
+    let corpus = load_or_generate(args)?;
+    let workers = args.get_as("workers", 4usize)?;
+    let cfg = online::OnlineConfig {
+        num_topics: args.get_as("topics", 20u32)?,
+        epochs: args.get_as("epochs", 2u32)?,
+        batch_size: args.get_as("batch", 256usize)?,
+        workers,
+        ..online::OnlineConfig::default()
+    };
+    let model = online::train(&cfg, &corpus)?;
+    log_info!("Online VB perplexity {:.1}", model.perplexity(&corpus, workers));
+    maybe_save(args, model.report.to_csv())
+}
+
+fn cmd_gen_corpus(args: &Args) -> Result<()> {
+    let corpus = load_or_generate(args)?;
+    let out = args.str_or("out", "corpus.bin");
+    corpus.save(&PathBuf::from(&out))?;
+    log_info!(
+        "saved {} docs / {} tokens to {out}",
+        corpus.num_docs(),
+        corpus.num_tokens()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    // Train briefly, then evaluate via both the rust and XLA paths —
+    // demonstrates the AOT artifacts working from the CLI.
+    let corpus = load_or_generate(args)?;
+    let mut cfg = train_config(args)?;
+    cfg.eval_every = 0;
+    let mut trainer = Trainer::new(cfg, &corpus)?;
+    let model = trainer.run(&corpus)?;
+    let rust_p = trainer.training_perplexity(&model, &corpus);
+    println!("rust evaluator: perplexity {rust_p:.2}");
+    let artifact_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    match glint_lda::runtime::engine::Engine::new(&artifact_dir) {
+        Ok(engine) => {
+            let counts = trainer.doc_counts();
+            let xla_p =
+                glint_lda::eval::xla::xla_perplexity(&engine, &model, &corpus, &counts)?;
+            println!("xla evaluator ({}): perplexity {xla_p:.2}", engine.platform());
+        }
+        Err(e) => println!("xla evaluator unavailable: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let cfg = table1::Table1Config {
+        scale: args.get_as("scale", 1.0f64)?,
+        iterations: args.get_as("iters", 20u32)?,
+        workers: args.get_as("workers", 4usize)?,
+        shards: args.get_as("shards", 4usize)?,
+        ..table1::Table1Config::default()
+    };
+    let report = table1::run(&cfg)?;
+    println!("{}", table1::render_paper_style(&report));
+    maybe_save(args, report.to_csv())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let cfg = fig4::Fig4Config {
+        scale: args.get_as("scale", 1.0f64)?,
+        top: args.get_as("top", 5000usize)?,
+        stride: args.get_as("stride", 10usize)?,
+    };
+    let r = fig4::run(&cfg)?;
+    println!(
+        "zipf fit: log f = {:.2} + {:.3} log r  (exponent {:.3})",
+        r.intercept, r.slope, -r.slope
+    );
+    println!("{}", r.report.to_table());
+    maybe_save(args, r.report.to_csv())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let cfg = fig5::Fig5Config {
+        scale: args.get_as("scale", 1.0f64)?,
+        machines: args.get_as("machines", 30usize)?,
+        measure: !args.flag("no-measure"),
+    };
+    let r = fig5::run(&cfg)?;
+    println!("{}", r.report.to_table());
+    println!("imbalance factors (max/mean; 1.0 = perfect):");
+    for (name, f) in &r.imbalance {
+        println!("  {name:>18}: {f:.3}");
+    }
+    maybe_save(args, r.report.to_csv())
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    let cfg = fig6::Fig6Config {
+        scale: args.get_as("scale", 2.0f64)?,
+        num_topics: args.get_as("topics", 100u32)?,
+        iterations: args.get_as("iters", 30u32)?,
+        workers: args.get_as("workers", 4usize)?,
+        shards: args.get_as("shards", 8usize)?,
+        eval_every: args.get_as("eval-every", 1u32)?,
+    };
+    let r = fig6::run(&cfg)?;
+    println!("{}", r.report.to_table());
+    println!(
+        "final perplexity {:.1}; mean throughput {:.0} tokens/s",
+        r.final_perplexity, r.tokens_per_sec
+    );
+    maybe_save(args, r.report.to_csv())
+}

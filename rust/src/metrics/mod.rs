@@ -1,0 +1,261 @@
+//! Training/runtime metrics: counters, gauges, per-iteration reports and
+//! CSV emission for the experiment harnesses.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A monotonically increasing counter (tokens sampled, messages sent...).
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// One row of an iteration report: named numeric fields in insertion
+/// order, e.g. `iter, seconds, perplexity, tokens_per_sec`.
+#[derive(Debug, Clone, Default)]
+pub struct Row {
+    fields: Vec<(String, f64)>,
+}
+
+impl Row {
+    /// Empty row.
+    pub fn new() -> Row {
+        Row::default()
+    }
+
+    /// Add (or overwrite) a field; returns self for chaining.
+    pub fn set(mut self, key: &str, value: f64) -> Row {
+        if let Some(slot) = self.fields.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.fields.push((key.to_string(), value));
+        }
+        self
+    }
+
+    /// Read a field.
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// Field names in order.
+    pub fn keys(&self) -> Vec<&str> {
+        self.fields.iter().map(|(k, _)| k.as_str()).collect()
+    }
+}
+
+/// Collects rows (one per iteration / experiment cell) and renders them
+/// as an aligned table or CSV.
+#[derive(Debug, Default)]
+pub struct Report {
+    rows: Mutex<Vec<Row>>,
+}
+
+impl Clone for Report {
+    fn clone(&self) -> Self {
+        Report { rows: Mutex::new(self.rows()) }
+    }
+}
+
+impl Report {
+    /// Empty report.
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    /// Append a row.
+    pub fn push(&self, row: Row) {
+        self.rows.lock().unwrap().push(row);
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.rows.lock().unwrap().len()
+    }
+
+    /// True when no rows collected.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of rows.
+    pub fn rows(&self) -> Vec<Row> {
+        self.rows.lock().unwrap().clone()
+    }
+
+    /// Union of all field names, in first-seen order.
+    fn columns(rows: &[Row]) -> Vec<String> {
+        let mut cols: Vec<String> = Vec::new();
+        for row in rows {
+            for (k, _) in &row.fields {
+                if !cols.contains(k) {
+                    cols.push(k.clone());
+                }
+            }
+        }
+        cols
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let rows = self.rows();
+        let cols = Self::columns(&rows);
+        let mut out = String::new();
+        out.push_str(&cols.join(","));
+        out.push('\n');
+        for row in &rows {
+            let line: Vec<String> = cols
+                .iter()
+                .map(|c| row.get(c).map(fmt_num).unwrap_or_default())
+                .collect();
+            out.push_str(&line.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as an aligned ASCII table (for paper-style output).
+    pub fn to_table(&self) -> String {
+        let rows = self.rows();
+        let cols = Self::columns(&rows);
+        let mut widths: Vec<usize> = cols.iter().map(|c| c.len()).collect();
+        let cells: Vec<Vec<String>> = rows
+            .iter()
+            .map(|row| {
+                cols.iter()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        let s = row.get(c).map(fmt_num).unwrap_or_default();
+                        widths[i] = widths[i].max(s.len());
+                        s
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut out = String::new();
+        for (i, c) in cols.iter().enumerate() {
+            let _ = write!(out, "{:>w$}  ", c, w = widths[i]);
+        }
+        out.push('\n');
+        for row in &cells {
+            for (i, s) in row.iter().enumerate() {
+                let _ = write!(out, "{:>w$}  ", s, w = widths[i]);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV to a file.
+    pub fn save_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Named counters registry for a training run.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create a counter by name.
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        std::sync::Arc::clone(
+            map.entry(name.to_string()).or_insert_with(|| std::sync::Arc::new(Counter::default())),
+        )
+    }
+
+    /// Snapshot all counters.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::default());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let c = std::sync::Arc::clone(&c);
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn row_set_get_overwrite() {
+        let r = Row::new().set("a", 1.0).set("b", 2.0).set("a", 3.0);
+        assert_eq!(r.get("a"), Some(3.0));
+        assert_eq!(r.keys(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn report_csv_and_table() {
+        let report = Report::new();
+        report.push(Row::new().set("iter", 1.0).set("perplexity", 6108.2));
+        report.push(Row::new().set("iter", 2.0).set("perplexity", 5731.0).set("extra", 1.0));
+        let csv = report.to_csv();
+        assert!(csv.starts_with("iter,perplexity,extra\n"));
+        assert!(csv.contains("1,6108.2"));
+        let table = report.to_table();
+        assert!(table.contains("perplexity"));
+    }
+
+    #[test]
+    fn registry_shares_counters() {
+        let reg = Registry::new();
+        reg.counter("tokens").add(5);
+        reg.counter("tokens").add(7);
+        assert_eq!(reg.snapshot()["tokens"], 12);
+    }
+}

@@ -1,0 +1,330 @@
+//! Simulated message transport with fault injection.
+//!
+//! The paper's parameter server runs on Akka, whose delivery guarantee is
+//! **at-most-once**: a message may be lost, and the sender cannot tell a
+//! lost message from a slow one. All of Glint's protocol machinery
+//! (retrying pulls with exponential back-off, the exactly-once push
+//! hand-shake) exists *because* of this semantics, so the reproduction
+//! models it explicitly: [`SimTransport`] delivers encoded request bytes
+//! to shard inboxes and can be configured to drop requests, drop replies,
+//! duplicate deliveries, and add latency.
+//!
+//! Requests and replies are fully serialized through [`crate::util::codec`]
+//! so that measured message *sizes* are faithful (the paper reasons about
+//! ~2 MB push messages and shuffle-write volumes).
+
+pub mod stats;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::util::rng::Pcg64;
+use stats::EndpointStats;
+
+/// A request in flight: encoded bytes plus a reply channel.
+///
+/// Dropping the reply sender simulates a lost response: the server
+/// processes the request but the client never hears back.
+pub struct Envelope {
+    /// Encoded request.
+    pub payload: Vec<u8>,
+    /// Channel on which the endpoint sends the encoded response, if the
+    /// fault plan lets the response through.
+    pub reply: Option<SyncSender<Vec<u8>>>,
+}
+
+/// Fault-injection plan for a [`SimTransport`].
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Probability a request is silently dropped before delivery.
+    pub drop_request: f64,
+    /// Probability the response is dropped after the server processed the
+    /// request (the dangerous case for pushes).
+    pub drop_reply: f64,
+    /// Probability a delivered request is delivered *twice* (models a
+    /// retransmission racing a slow first delivery).
+    pub duplicate: f64,
+    /// Artificial one-way latency added to each delivery.
+    pub latency: Duration,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            drop_request: 0.0,
+            drop_reply: 0.0,
+            duplicate: 0.0,
+            latency: Duration::ZERO,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A lossless, zero-latency network.
+    pub fn reliable() -> Self {
+        FaultPlan::default()
+    }
+
+    /// A nasty network for protocol tests.
+    pub fn lossy(drop: f64, duplicate: f64) -> Self {
+        FaultPlan {
+            drop_request: drop,
+            drop_reply: drop,
+            duplicate,
+            latency: Duration::ZERO,
+        }
+    }
+}
+
+/// Sending half of a connection to one endpoint (shard).
+#[derive(Clone)]
+pub struct Endpoint {
+    tx: mpsc::Sender<Envelope>,
+    plan: Arc<FaultPlan>,
+    seed: Arc<AtomicU64>,
+    /// Delivery/traffic counters for this endpoint.
+    pub stats: Arc<EndpointStats>,
+}
+
+impl Endpoint {
+    /// Fire a request and return a receiver for the reply.
+    ///
+    /// At-most-once semantics: the request or its reply may be dropped
+    /// according to the fault plan; the caller observes only a timeout.
+    pub fn send(&self, payload: Vec<u8>) -> Receiver<Vec<u8>> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(2);
+        let mut rng = self.fork_rng();
+        self.stats.record_request(payload.len());
+
+        if !self.plan.latency.is_zero() {
+            std::thread::sleep(self.plan.latency);
+        }
+        if rng.bernoulli(self.plan.drop_request) {
+            self.stats.record_dropped_request();
+            return reply_rx; // envelope never delivered
+        }
+        let duplicate = rng.bernoulli(self.plan.duplicate);
+        let reply = if rng.bernoulli(self.plan.drop_reply) {
+            self.stats.record_dropped_reply();
+            None
+        } else {
+            Some(reply_tx)
+        };
+        let _ = self.tx.send(Envelope { payload: payload.clone(), reply });
+        if duplicate {
+            self.stats.record_duplicate();
+            // The duplicate's reply channel is a dead end; the client
+            // consumes at most one response anyway.
+            let _ = self.tx.send(Envelope { payload, reply: None });
+        }
+        reply_rx
+    }
+
+    /// Send and wait for a reply with a timeout. `Ok(bytes)` on success,
+    /// `Err(())` on timeout / lost message.
+    pub fn request(&self, payload: Vec<u8>, timeout: Duration) -> Result<Vec<u8>, ()> {
+        let rx = self.send(payload);
+        match rx.recv_timeout(timeout) {
+            Ok(bytes) => {
+                self.stats.record_reply(bytes.len());
+                Ok(bytes)
+            }
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                self.stats.record_timeout();
+                Err(())
+            }
+        }
+    }
+
+    /// Control-plane send that bypasses fault injection (used for
+    /// shutdown — modeling an operator channel, not the data path).
+    /// Returns `Err(())` if the endpoint's server has already exited.
+    pub fn send_reliable(&self, payload: Vec<u8>, timeout: Duration) -> Result<Vec<u8>, ()> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(2);
+        if self.tx.send(Envelope { payload, reply: Some(reply_tx) }).is_err() {
+            return Err(());
+        }
+        reply_rx.recv_timeout(timeout).map_err(|_| ())
+    }
+
+    fn fork_rng(&self) -> Pcg64 {
+        // Each send gets a fresh deterministic stream: fault decisions are
+        // reproducible for a given transport seed and send ordering.
+        let n = self.seed.fetch_add(1, Ordering::Relaxed);
+        Pcg64::new(n ^ 0xfa_175)
+    }
+}
+
+/// Receiving half: the shard server's inbox.
+pub struct Inbox {
+    rx: mpsc::Receiver<Envelope>,
+}
+
+impl Inbox {
+    /// Block for the next envelope; `None` when all senders are gone.
+    pub fn recv(&self) -> Option<Envelope> {
+        self.rx.recv().ok()
+    }
+
+    /// Receive with a timeout (lets server loops check for shutdown).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Envelope> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+}
+
+/// Reply to an envelope, if its reply path survived fault injection.
+pub fn respond(env: &Envelope, bytes: Vec<u8>) {
+    if let Some(reply) = &env.reply {
+        match reply.try_send(bytes) {
+            Ok(()) | Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+}
+
+/// An in-process network connecting clients to `n` shard endpoints.
+pub struct SimTransport {
+    endpoints: Vec<Endpoint>,
+}
+
+impl SimTransport {
+    /// Create a transport with `shards` endpoints under the given fault
+    /// plan and a deterministic seed. Returns the transport (clients keep
+    /// it) and one inbox per shard (server threads take them).
+    pub fn new(shards: usize, plan: FaultPlan, seed: u64) -> (SimTransport, Vec<Inbox>) {
+        let plan = Arc::new(plan);
+        let mut endpoints = Vec::with_capacity(shards);
+        let mut inboxes = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let (tx, rx) = mpsc::channel();
+            endpoints.push(Endpoint {
+                tx,
+                plan: Arc::clone(&plan),
+                seed: Arc::new(AtomicU64::new(
+                    seed.wrapping_mul(0x9e37_79b9).wrapping_add(s as u64) << 20,
+                )),
+                stats: Arc::new(EndpointStats::default()),
+            });
+            inboxes.push(Inbox { rx });
+        }
+        (SimTransport { endpoints }, inboxes)
+    }
+
+    /// Number of endpoints (shards).
+    pub fn shards(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    /// Handle to one endpoint.
+    pub fn endpoint(&self, shard: usize) -> Endpoint {
+        self.endpoints[shard].clone()
+    }
+
+    /// All endpoints.
+    pub fn endpoints(&self) -> Vec<Endpoint> {
+        self.endpoints.clone()
+    }
+
+    /// Per-endpoint stats handles (request counts, bytes, faults).
+    pub fn stats(&self) -> Vec<Arc<EndpointStats>> {
+        self.endpoints.iter().map(|e| Arc::clone(&e.stats)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo server: replies with the request payload.
+    fn spawn_echo(inbox: Inbox) -> std::thread::JoinHandle<usize> {
+        std::thread::spawn(move || {
+            let mut handled = 0;
+            while let Some(env) = inbox.recv() {
+                handled += 1;
+                let bytes = env.payload.clone();
+                respond(&env, bytes);
+            }
+            handled
+        })
+    }
+
+    #[test]
+    fn reliable_roundtrip() {
+        let (net, mut inboxes) = SimTransport::new(1, FaultPlan::reliable(), 1);
+        let h = spawn_echo(inboxes.remove(0));
+        let ep = net.endpoint(0);
+        for i in 0..100u32 {
+            let got = ep.request(i.to_le_bytes().to_vec(), Duration::from_secs(1)).unwrap();
+            assert_eq!(got, i.to_le_bytes().to_vec());
+        }
+        drop(net);
+        drop(ep);
+        assert_eq!(h.join().unwrap(), 100);
+    }
+
+    #[test]
+    fn dropped_requests_time_out() {
+        let plan = FaultPlan { drop_request: 1.0, ..FaultPlan::default() };
+        let (net, mut inboxes) = SimTransport::new(1, plan, 2);
+        let _h = spawn_echo(inboxes.remove(0));
+        let ep = net.endpoint(0);
+        let r = ep.request(vec![1, 2, 3], Duration::from_millis(20));
+        assert!(r.is_err());
+        assert_eq!(ep.stats.dropped_requests(), 1);
+    }
+
+    #[test]
+    fn dropped_replies_still_process() {
+        let plan = FaultPlan { drop_reply: 1.0, ..FaultPlan::default() };
+        let (net, mut inboxes) = SimTransport::new(1, plan, 3);
+        let h = spawn_echo(inboxes.remove(0));
+        let ep = net.endpoint(0);
+        let r = ep.request(vec![9], Duration::from_millis(20));
+        assert!(r.is_err());
+        drop(net);
+        drop(ep);
+        // The server did process the request even though the reply was lost.
+        assert_eq!(h.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn duplicates_deliver_twice() {
+        let plan = FaultPlan { duplicate: 1.0, ..FaultPlan::default() };
+        let (net, mut inboxes) = SimTransport::new(1, plan, 4);
+        let h = spawn_echo(inboxes.remove(0));
+        let ep = net.endpoint(0);
+        let r = ep.request(vec![7], Duration::from_millis(100));
+        assert!(r.is_ok());
+        drop(net);
+        drop(ep);
+        assert_eq!(h.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn stats_track_bytes() {
+        let (net, mut inboxes) = SimTransport::new(1, FaultPlan::reliable(), 5);
+        let _h = spawn_echo(inboxes.remove(0));
+        let ep = net.endpoint(0);
+        ep.request(vec![0; 128], Duration::from_secs(1)).unwrap();
+        assert_eq!(ep.stats.requests(), 1);
+        assert_eq!(ep.stats.bytes_sent(), 128);
+        assert_eq!(ep.stats.bytes_received(), 128);
+    }
+
+    #[test]
+    fn multi_shard_isolation() {
+        let (net, inboxes) = SimTransport::new(4, FaultPlan::reliable(), 6);
+        let handles: Vec<_> = inboxes.into_iter().map(spawn_echo).collect();
+        for s in 0..4 {
+            let ep = net.endpoint(s);
+            ep.request(vec![s as u8], Duration::from_secs(1)).unwrap();
+        }
+        let eps: Vec<_> = (0..4).map(|s| net.endpoint(s)).collect();
+        drop(net);
+        drop(eps);
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 1);
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Per-endpoint traffic counters.
+//!
+//! These power the Fig. 5 load-balance measurement (requests per machine)
+//! and the network-volume columns of the experiment reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free counters for one endpoint (shard).
+#[derive(Debug, Default)]
+pub struct EndpointStats {
+    requests: AtomicU64,
+    replies: AtomicU64,
+    bytes_sent: AtomicU64,
+    bytes_received: AtomicU64,
+    dropped_requests: AtomicU64,
+    dropped_replies: AtomicU64,
+    duplicates: AtomicU64,
+    timeouts: AtomicU64,
+}
+
+impl EndpointStats {
+    /// Record an outgoing request of `bytes` bytes.
+    pub fn record_request(&self, bytes: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record a received reply of `bytes` bytes.
+    pub fn record_reply(&self, bytes: usize) {
+        self.replies.fetch_add(1, Ordering::Relaxed);
+        self.bytes_received.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record a request dropped by fault injection.
+    pub fn record_dropped_request(&self) {
+        self.dropped_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a reply dropped by fault injection.
+    pub fn record_dropped_reply(&self) {
+        self.dropped_replies.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a duplicated delivery.
+    pub fn record_duplicate(&self) {
+        self.duplicates.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a client-observed timeout.
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests sent to this endpoint.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Replies received from this endpoint.
+    pub fn replies(&self) -> u64 {
+        self.replies.load(Ordering::Relaxed)
+    }
+
+    /// Total request bytes.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    /// Total reply bytes.
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_received.load(Ordering::Relaxed)
+    }
+
+    /// Requests lost to fault injection.
+    pub fn dropped_requests(&self) -> u64 {
+        self.dropped_requests.load(Ordering::Relaxed)
+    }
+
+    /// Replies lost to fault injection.
+    pub fn dropped_replies(&self) -> u64 {
+        self.dropped_replies.load(Ordering::Relaxed)
+    }
+
+    /// Duplicated deliveries.
+    pub fn duplicates(&self) -> u64 {
+        self.duplicates.load(Ordering::Relaxed)
+    }
+
+    /// Client-observed timeouts.
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let s = EndpointStats::default();
+        s.record_request(100);
+        s.record_request(50);
+        s.record_reply(25);
+        s.record_timeout();
+        assert_eq!(s.requests(), 2);
+        assert_eq!(s.bytes_sent(), 150);
+        assert_eq!(s.replies(), 1);
+        assert_eq!(s.bytes_received(), 25);
+        assert_eq!(s.timeouts(), 1);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let s = std::sync::Arc::new(EndpointStats::default());
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let s = std::sync::Arc::clone(&s);
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        s.record_request(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(s.requests(), 8000);
+        assert_eq!(s.bytes_sent(), 8000);
+    }
+}

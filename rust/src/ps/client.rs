@@ -1,0 +1,590 @@
+//! Parameter-server client: `BigMatrix` / `BigVector` handles.
+//!
+//! The user acts on a *virtual view* of a distributed matrix (paper
+//! Figure 1): `pull` and `push` take global indices; the client splits
+//! each operation per shard (at most one request per shard, §2.3),
+//! issues the shard requests concurrently, and hides all delivery
+//! machinery:
+//!
+//! - **pulls** are idempotent, so lost messages are simply retried with
+//!   exponential back-off until `max_retries` is exhausted (§2.3);
+//! - **pushes** mutate state, so they run the three-phase hand-shake of
+//!   §2.4/Figure 2 — `GenUid` (retryable), `Push{uid}` (retried until a
+//!   `PushAck`; the shard deduplicates by uid so retries apply at most
+//!   once), `Forget{uid}` (retryable) — giving exactly-once effect.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use crate::net::{Endpoint, SimTransport};
+use crate::ps::config::PsConfig;
+use crate::ps::messages::{Data, Dtype, Request, Response};
+use crate::ps::partition::Partitioner;
+use crate::util::error::{Error, Result};
+
+/// Element types storable on the parameter server.
+pub trait Element: Copy + Default + Send + Sync + std::fmt::Debug + 'static {
+    /// Corresponding wire dtype.
+    const DTYPE: Dtype;
+    /// Wrap a vector into a typed payload.
+    fn wrap(v: Vec<Self>) -> Data;
+    /// Unwrap a payload, checking the dtype.
+    fn unwrap(d: Data) -> Result<Vec<Self>>;
+}
+
+impl Element for i64 {
+    const DTYPE: Dtype = Dtype::I64;
+
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I64(v)
+    }
+
+    fn unwrap(d: Data) -> Result<Vec<Self>> {
+        match d {
+            Data::I64(v) => Ok(v),
+            other => Err(Error::Decode(format!("expected i64 data, got {:?}", other.dtype()))),
+        }
+    }
+}
+
+impl Element for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+
+    fn unwrap(d: Data) -> Result<Vec<Self>> {
+        match d {
+            Data::F32(v) => Ok(v),
+            other => Err(Error::Decode(format!("expected f32 data, got {:?}", other.dtype()))),
+        }
+    }
+}
+
+/// Client connection to a parameter-server group. Cheap to clone; clones
+/// share matrix-id allocation.
+#[derive(Clone)]
+pub struct PsClient {
+    endpoints: Vec<Endpoint>,
+    config: PsConfig,
+    next_matrix_id: Arc<AtomicU32>,
+}
+
+impl PsClient {
+    /// Connect through a transport (from [`crate::ps::server::ServerGroup`]).
+    pub fn connect(transport: &SimTransport, config: PsConfig) -> PsClient {
+        assert_eq!(
+            transport.shards(),
+            config.shards,
+            "transport endpoint count must match config.shards"
+        );
+        PsClient {
+            endpoints: transport.endpoints(),
+            config,
+            next_matrix_id: Arc::new(AtomicU32::new(1)),
+        }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    /// Deployment config.
+    pub fn config(&self) -> &PsConfig {
+        &self.config
+    }
+
+    /// Send `req` to `shard`, retrying with exponential back-off.
+    ///
+    /// Only safe for idempotent requests (everything except a raw push
+    /// without uid — which this API cannot express).
+    pub fn request_retry(&self, shard: usize, req: &Request) -> Result<Response> {
+        let payload = req.encode();
+        let op = match req {
+            Request::PullRows { .. } => "pull",
+            Request::GenUid => "gen-uid",
+            Request::PushCoords { .. } | Request::PushRows { .. } => "push",
+            Request::Forget { .. } => "forget",
+            Request::CreateMatrix { .. } => "create",
+            Request::ShardInfo => "info",
+            Request::Shutdown => "shutdown",
+        };
+        for attempt in 0..self.config.max_retries {
+            let timeout = self.config.timeout_for_attempt(attempt);
+            if let Ok(bytes) = self.endpoints[shard].request(payload.clone(), timeout) {
+                let resp = Response::decode(&bytes)?;
+                if let Response::Error(msg) = resp {
+                    return Err(Error::PsRejected(msg));
+                }
+                return Ok(resp);
+            }
+            // Lost request or lost reply — indistinguishable; retry with a
+            // longer timeout (paper §2.3).
+        }
+        Err(Error::PsTimeout { op, shard, attempts: self.config.max_retries })
+    }
+
+    /// Allocate a distributed `rows x cols` matrix.
+    pub fn matrix<T: Element>(&self, rows: u64, cols: u32) -> Result<BigMatrix<T>> {
+        if rows == 0 || cols == 0 {
+            return Err(Error::Config("matrix dimensions must be positive".into()));
+        }
+        let id = self.next_matrix_id.fetch_add(1, Ordering::SeqCst);
+        let req = Request::CreateMatrix { id, rows, cols, dtype: T::DTYPE };
+        // Broadcast creation to every shard, in parallel.
+        let results: Vec<Result<Response>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.shards())
+                .map(|s| {
+                    let req = &req;
+                    scope.spawn(move || self.request_retry(s, req))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("create worker")).collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(BigMatrix {
+            client: self.clone(),
+            id,
+            part: Partitioner::new(rows, self.config.shards, self.config.scheme),
+            cols,
+            _t: PhantomData,
+        })
+    }
+
+    /// Allocate a distributed vector of `len` entries (a 1-column matrix).
+    pub fn vector<T: Element>(&self, len: u64) -> Result<BigVector<T>> {
+        Ok(BigVector { inner: self.matrix(len, 1)? })
+    }
+
+    /// Query every shard's info (matrix count, resident bytes, pending
+    /// uids).
+    pub fn shard_infos(&self) -> Result<Vec<(u32, u64, u64, u64)>> {
+        (0..self.shards())
+            .map(|s| match self.request_retry(s, &Request::ShardInfo)? {
+                Response::Info { matrices, local_rows, bytes, pending_uids } => {
+                    Ok((matrices, local_rows, bytes, pending_uids))
+                }
+                r => Err(Error::Decode(format!("unexpected info response {r:?}"))),
+            })
+            .collect()
+    }
+}
+
+/// Sparse additive deltas destined for one matrix, grouped per shard by
+/// the client before pushing.
+#[derive(Debug, Clone, Default)]
+pub struct CoordDeltas<T> {
+    /// Global rows.
+    pub rows: Vec<u64>,
+    /// Columns.
+    pub cols: Vec<u32>,
+    /// Delta values.
+    pub values: Vec<T>,
+}
+
+impl<T> CoordDeltas<T> {
+    /// Number of deltas.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no deltas.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Handle to a distributed `rows x cols` matrix of `T`.
+///
+/// The handle is clonable and thread-safe; concurrent pushes from many
+/// workers are the intended use (the counts are commutative).
+#[derive(Clone)]
+pub struct BigMatrix<T: Element> {
+    client: PsClient,
+    id: u32,
+    part: Partitioner,
+    cols: u32,
+    _t: PhantomData<T>,
+}
+
+impl<T: Element> BigMatrix<T> {
+    /// Global rows.
+    pub fn rows(&self) -> u64 {
+        self.part.rows
+    }
+
+    /// Columns.
+    pub fn cols(&self) -> u32 {
+        self.cols
+    }
+
+    /// Matrix id (diagnostics).
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// Pull full rows by global index; returns values row-major in the
+    /// order requested (`rows.len() * cols` entries).
+    pub fn pull_rows(&self, rows: &[u64]) -> Result<Vec<T>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        for &r in rows {
+            if r >= self.part.rows {
+                return Err(Error::Config(format!(
+                    "row {r} out of bounds ({} rows)",
+                    self.part.rows
+                )));
+            }
+        }
+        // Split into at most one request per shard (§2.3).
+        let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); self.client.shards()];
+        for &r in rows {
+            per_shard[self.part.shard_of(r)].push(r);
+        }
+        // Issue shard requests concurrently; each retries independently.
+        let shard_results: Vec<Result<Vec<T>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = per_shard
+                .iter()
+                .enumerate()
+                .map(|(s, shard_rows)| {
+                    scope.spawn(move || -> Result<Vec<T>> {
+                        if shard_rows.is_empty() {
+                            return Ok(Vec::new());
+                        }
+                        let req = Request::PullRows { id: self.id, rows: shard_rows.clone() };
+                        match self.client.request_retry(s, &req)? {
+                            Response::Rows(data) => T::unwrap(data),
+                            r => Err(Error::Decode(format!("unexpected pull response {r:?}"))),
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("pull worker")).collect()
+        });
+        // Scatter back into request order.
+        let cols = self.cols as usize;
+        let mut shard_data = Vec::with_capacity(shard_results.len());
+        for r in shard_results {
+            shard_data.push(r?);
+        }
+        let mut cursor = vec![0usize; self.client.shards()];
+        let mut out = vec![T::default(); rows.len() * cols];
+        for (i, &r) in rows.iter().enumerate() {
+            let s = self.part.shard_of(r);
+            let src = &shard_data[s][cursor[s]..cursor[s] + cols];
+            out[i * cols..(i + 1) * cols].copy_from_slice(src);
+            cursor[s] += cols;
+        }
+        Ok(out)
+    }
+
+    /// Pull a single row.
+    pub fn pull_row(&self, row: u64) -> Result<Vec<T>> {
+        self.pull_rows(&[row])
+    }
+
+    /// Push sparse additive deltas with exactly-once semantics.
+    ///
+    /// Deltas are grouped per shard; each shard group runs the hand-shake
+    /// independently and concurrently.
+    pub fn push_coords(&self, deltas: &CoordDeltas<T>) -> Result<()> {
+        if deltas.is_empty() {
+            return Ok(());
+        }
+        if deltas.rows.len() != deltas.cols.len() || deltas.rows.len() != deltas.values.len() {
+            return Err(Error::Config("delta arrays must have equal length".into()));
+        }
+        let mut per_shard: Vec<CoordDeltas<T>> =
+            (0..self.client.shards()).map(|_| CoordDeltas::default()).collect();
+        for ((&r, &c), &v) in deltas.rows.iter().zip(&deltas.cols).zip(&deltas.values) {
+            if r >= self.part.rows || c >= self.cols {
+                return Err(Error::Config(format!(
+                    "delta ({r},{c}) out of bounds for {}x{}",
+                    self.part.rows, self.cols
+                )));
+            }
+            let s = self.part.shard_of(r);
+            per_shard[s].rows.push(r);
+            per_shard[s].cols.push(c);
+            per_shard[s].values.push(v);
+        }
+        let results: Vec<Result<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = per_shard
+                .iter()
+                .enumerate()
+                .map(|(s, group)| {
+                    scope.spawn(move || -> Result<()> {
+                        if group.is_empty() {
+                            return Ok(());
+                        }
+                        self.handshake_push(s, |uid| Request::PushCoords {
+                            id: self.id,
+                            uid,
+                            rows: group.rows.clone(),
+                            cols: group.cols.clone(),
+                            values: T::wrap(group.values.clone()),
+                        })
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("push worker")).collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
+    /// Push dense full-row deltas (`rows.len() * cols` values, row-major)
+    /// with exactly-once semantics.
+    pub fn push_rows(&self, rows: &[u64], values: &[T]) -> Result<()> {
+        if rows.is_empty() {
+            return Ok(());
+        }
+        let cols = self.cols as usize;
+        if values.len() != rows.len() * cols {
+            return Err(Error::Config(format!(
+                "push_rows shape mismatch: {} values for {} rows x {} cols",
+                values.len(),
+                rows.len(),
+                cols
+            )));
+        }
+        let shards = self.client.shards();
+        let mut shard_rows: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        let mut shard_vals: Vec<Vec<T>> = vec![Vec::new(); shards];
+        for (i, &r) in rows.iter().enumerate() {
+            if r >= self.part.rows {
+                return Err(Error::Config(format!("row {r} out of bounds")));
+            }
+            let s = self.part.shard_of(r);
+            shard_rows[s].push(r);
+            shard_vals[s].extend_from_slice(&values[i * cols..(i + 1) * cols]);
+        }
+        let results: Vec<Result<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..shards)
+                .map(|s| {
+                    let rws = &shard_rows[s];
+                    let vls = &shard_vals[s];
+                    scope.spawn(move || -> Result<()> {
+                        if rws.is_empty() {
+                            return Ok(());
+                        }
+                        self.handshake_push(s, |uid| Request::PushRows {
+                            id: self.id,
+                            uid,
+                            rows: rws.clone(),
+                            values: T::wrap(vls.clone()),
+                        })
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("push worker")).collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
+    /// The §2.4 hand-shake against one shard: acquire uid, push until
+    /// acknowledged, then release the uid.
+    fn handshake_push(&self, shard: usize, make: impl Fn(u64) -> Request) -> Result<()> {
+        // Phase 1: unique id (safe to retry: ids are cheap and unused ids
+        // are never recorded).
+        let uid = match self.client.request_retry(shard, &Request::GenUid)? {
+            Response::Uid(u) => u,
+            r => return Err(Error::Decode(format!("unexpected gen-uid response {r:?}"))),
+        };
+        // Phase 2: push, retried until *some* ack arrives. The shard
+        // applies the uid at most once, so duplicates are harmless.
+        let push = make(uid);
+        match self.client.request_retry(shard, &push)? {
+            Response::PushAck { .. } => {}
+            r => return Err(Error::Decode(format!("unexpected push response {r:?}"))),
+        }
+        // Phase 3: release the dedup record. Idempotent.
+        match self.client.request_retry(shard, &Request::Forget { uid })? {
+            Response::Ok => Ok(()),
+            r => Err(Error::Decode(format!("unexpected forget response {r:?}"))),
+        }
+    }
+}
+
+/// Handle to a distributed vector (1-column matrix).
+#[derive(Clone)]
+pub struct BigVector<T: Element> {
+    inner: BigMatrix<T>,
+}
+
+impl<T: Element> BigVector<T> {
+    /// Length.
+    pub fn len(&self) -> u64 {
+        self.inner.rows()
+    }
+
+    /// Always false (vectors are non-empty by construction).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pull selected entries.
+    pub fn pull(&self, indices: &[u64]) -> Result<Vec<T>> {
+        self.inner.pull_rows(indices)
+    }
+
+    /// Pull the entire vector.
+    pub fn pull_all(&self) -> Result<Vec<T>> {
+        let indices: Vec<u64> = (0..self.len()).collect();
+        self.pull(&indices)
+    }
+
+    /// Push sparse additive deltas.
+    pub fn push(&self, indices: &[u64], deltas: &[T]) -> Result<()> {
+        let cd = CoordDeltas {
+            rows: indices.to_vec(),
+            cols: vec![0; indices.len()],
+            values: deltas.to_vec(),
+        };
+        self.inner.push_coords(&cd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::FaultPlan;
+    use crate::ps::server::ServerGroup;
+
+    fn setup(shards: usize, plan: FaultPlan) -> (ServerGroup, PsClient) {
+        let cfg = PsConfig::with_shards(shards);
+        let group = ServerGroup::start(cfg.clone(), plan, 42);
+        let client = PsClient::connect(&group.transport(), cfg);
+        (group, client)
+    }
+
+    #[test]
+    fn matrix_pull_initially_zero() {
+        let (_g, client) = setup(3, FaultPlan::reliable());
+        let m: BigMatrix<i64> = client.matrix(10, 4).unwrap();
+        let vals = m.pull_rows(&[0, 3, 9]).unwrap();
+        assert_eq!(vals, vec![0; 12]);
+    }
+
+    #[test]
+    fn push_then_pull_roundtrip() {
+        let (_g, client) = setup(4, FaultPlan::reliable());
+        let m: BigMatrix<i64> = client.matrix(100, 5).unwrap();
+        let deltas = CoordDeltas {
+            rows: vec![0, 1, 50, 99, 0],
+            cols: vec![0, 1, 2, 4, 0],
+            values: vec![3, -1, 7, 2, 4],
+        };
+        m.push_coords(&deltas).unwrap();
+        let vals = m.pull_rows(&[0, 1, 50, 99]).unwrap();
+        assert_eq!(vals[0], 7); // 3 + 4 accumulated
+        assert_eq!(vals[5 + 1], -1);
+        assert_eq!(vals[10 + 2], 7);
+        assert_eq!(vals[15 + 4], 2);
+    }
+
+    #[test]
+    fn push_rows_dense() {
+        let (_g, client) = setup(2, FaultPlan::reliable());
+        let m: BigMatrix<f32> = client.matrix(4, 3).unwrap();
+        m.push_rows(&[1, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        m.push_rows(&[1], &[0.5, 0.5, 0.5]).unwrap();
+        let vals = m.pull_rows(&[1, 2]).unwrap();
+        assert_eq!(vals, vec![1.5, 2.5, 3.5, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn vector_ops() {
+        let (_g, client) = setup(3, FaultPlan::reliable());
+        let v: BigVector<i64> = client.vector(7).unwrap();
+        v.push(&[0, 6, 0], &[5, 10, 1]).unwrap();
+        assert_eq!(v.pull_all().unwrap(), vec![6, 0, 0, 0, 0, 0, 10]);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected_client_side() {
+        let (_g, client) = setup(2, FaultPlan::reliable());
+        let m: BigMatrix<i64> = client.matrix(5, 2).unwrap();
+        assert!(m.pull_rows(&[5]).is_err());
+        let bad = CoordDeltas { rows: vec![0], cols: vec![9], values: vec![1] };
+        assert!(m.push_coords(&bad).is_err());
+    }
+
+    #[test]
+    fn exactly_once_under_lossy_network() {
+        // 20% request loss, 20% reply loss, 10% duplication: the sum of
+        // all deltas must still be applied exactly once each.
+        let (_g, client) = setup(3, FaultPlan::lossy(0.2, 0.1));
+        let m: BigMatrix<i64> = client.matrix(30, 2).unwrap();
+        let mut expect = vec![0i64; 30 * 2];
+        for round in 0..20 {
+            let deltas = CoordDeltas {
+                rows: vec![round % 30, (round * 7) % 30],
+                cols: vec![0, 1],
+                values: vec![1, 2],
+            };
+            expect[(deltas.rows[0] * 2) as usize] += 1;
+            expect[(deltas.rows[1] * 2 + 1) as usize] += 2;
+            m.push_coords(&deltas).unwrap();
+        }
+        let all: Vec<u64> = (0..30).collect();
+        let got = m.pull_rows(&all).unwrap();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn concurrent_pushers_accumulate() {
+        let (_g, client) = setup(4, FaultPlan::reliable());
+        let m: BigMatrix<i64> = client.matrix(16, 1).unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..8 {
+                let m = m.clone();
+                scope.spawn(move || {
+                    for i in 0..50 {
+                        let deltas = CoordDeltas {
+                            rows: vec![((t * 50 + i) % 16) as u64],
+                            cols: vec![0],
+                            values: vec![1],
+                        };
+                        m.push_coords(&deltas).unwrap();
+                    }
+                });
+            }
+        });
+        let all: Vec<u64> = (0..16).collect();
+        let got = m.pull_rows(&all).unwrap();
+        assert_eq!(got.iter().sum::<i64>(), 8 * 50);
+    }
+
+    #[test]
+    fn total_loss_times_out_with_error() {
+        let cfg = PsConfig {
+            shards: 1,
+            max_retries: 3,
+            timeout: std::time::Duration::from_millis(5),
+            ..PsConfig::default()
+        };
+        let group = ServerGroup::start(
+            cfg.clone(),
+            FaultPlan { drop_request: 1.0, ..FaultPlan::default() },
+            7,
+        );
+        let client = PsClient::connect(&group.transport(), cfg);
+        match client.matrix::<i64>(4, 1) {
+            Err(Error::PsTimeout { attempts, .. }) => assert_eq!(attempts, 3),
+            Err(e) => panic!("unexpected error {e}"),
+            Ok(_) => panic!("matrix creation should have timed out"),
+        }
+    }
+}

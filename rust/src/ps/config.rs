@@ -1,0 +1,74 @@
+//! Parameter-server deployment configuration.
+
+use std::time::Duration;
+
+use crate::ps::partition::PartitionScheme;
+
+/// Configuration shared by clients and the server group.
+#[derive(Debug, Clone)]
+pub struct PsConfig {
+    /// Number of shard servers ("parameter servers" in the paper; 30 in
+    /// their cluster).
+    pub shards: usize,
+    /// Row partitioning scheme (paper: cyclic).
+    pub scheme: PartitionScheme,
+    /// Base reply timeout before the first retry.
+    pub timeout: Duration,
+    /// Maximum attempts before a request is declared failed (paper §2.3:
+    /// "after a specified number of retries ... we consider the pull
+    /// operation failed").
+    pub max_retries: u32,
+    /// Multiplier applied to the timeout after each failed attempt
+    /// (paper §2.3: exponential back-off).
+    pub backoff_factor: f64,
+    /// Upper bound on the per-attempt timeout.
+    pub max_timeout: Duration,
+}
+
+impl Default for PsConfig {
+    fn default() -> Self {
+        PsConfig {
+            shards: 4,
+            scheme: PartitionScheme::Cyclic,
+            timeout: Duration::from_millis(100),
+            max_retries: 12,
+            backoff_factor: 2.0,
+            max_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+impl PsConfig {
+    /// Config for `shards` shards, defaults elsewhere.
+    pub fn with_shards(shards: usize) -> PsConfig {
+        PsConfig { shards, ..PsConfig::default() }
+    }
+
+    /// Timeout for attempt `attempt` (0-based), growing exponentially and
+    /// clamped to `max_timeout`.
+    pub fn timeout_for_attempt(&self, attempt: u32) -> Duration {
+        let scaled = self.timeout.as_secs_f64() * self.backoff_factor.powi(attempt as i32);
+        Duration::from_secs_f64(scaled.min(self.max_timeout.as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially() {
+        let cfg = PsConfig::default();
+        let t0 = cfg.timeout_for_attempt(0);
+        let t1 = cfg.timeout_for_attempt(1);
+        let t2 = cfg.timeout_for_attempt(2);
+        assert_eq!(t1, t0 * 2);
+        assert_eq!(t2, t0 * 4);
+    }
+
+    #[test]
+    fn backoff_clamped() {
+        let cfg = PsConfig::default();
+        assert_eq!(cfg.timeout_for_attempt(30), cfg.max_timeout);
+    }
+}

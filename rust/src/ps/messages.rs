@@ -1,0 +1,424 @@
+//! Wire messages between parameter-server clients and shard servers.
+//!
+//! Every request/response is byte-serialized via [`crate::util::codec`],
+//! both to keep the transport payload-agnostic and so that measured
+//! message sizes match what a real deployment would put on the wire
+//! (the paper sizes its push buffers at ~2 MB, §3.3).
+
+use crate::util::codec::{Reader, Writer};
+use crate::util::error::{Error, Result};
+
+/// Element type of a distributed matrix/vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    /// 64-bit signed counters (Gibbs count tables).
+    I64,
+    /// 32-bit floats (weight vectors, e.g. logistic regression).
+    F32,
+}
+
+impl Dtype {
+    fn tag(self) -> u8 {
+        match self {
+            Dtype::I64 => 0,
+            Dtype::F32 => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Dtype> {
+        match t {
+            0 => Ok(Dtype::I64),
+            1 => Ok(Dtype::F32),
+            _ => Err(Error::Decode(format!("bad dtype tag {t}"))),
+        }
+    }
+}
+
+/// A typed payload of matrix values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    /// i64 values.
+    I64(Vec<i64>),
+    /// f32 values.
+    F32(Vec<f32>),
+}
+
+impl Data {
+    /// Number of scalar values.
+    pub fn len(&self) -> usize {
+        match self {
+            Data::I64(v) => v.len(),
+            Data::F32(v) => v.len(),
+        }
+    }
+
+    /// True when no values.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Element dtype.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Data::I64(_) => Dtype::I64,
+            Data::F32(_) => Dtype::F32,
+        }
+    }
+
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            Data::I64(v) => {
+                w.u8(Dtype::I64.tag());
+                w.slice_i64(v);
+            }
+            Data::F32(v) => {
+                w.u8(Dtype::F32.tag());
+                w.slice_f32(v);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<Data> {
+        match Dtype::from_tag(r.u8()?)? {
+            Dtype::I64 => Ok(Data::I64(r.slice_i64()?)),
+            Dtype::F32 => Ok(Data::F32(r.slice_f32()?)),
+        }
+    }
+}
+
+/// Client → shard server requests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Allocate this shard's slice of a new matrix (broadcast to all
+    /// shards). Vectors are matrices with `cols == 1`.
+    CreateMatrix {
+        /// Matrix id (client-assigned, globally unique).
+        id: u32,
+        /// Global row count.
+        rows: u64,
+        /// Column count.
+        cols: u32,
+        /// Element type.
+        dtype: Dtype,
+    },
+    /// Read full rows (global row ids owned by this shard).
+    PullRows {
+        /// Matrix id.
+        id: u32,
+        /// Global row indices.
+        rows: Vec<u64>,
+    },
+    /// Phase 1 of the push hand-shake: acquire a unique push id.
+    /// Idempotent to retry — an orphaned id is never pushed and costs one
+    /// set entry until forgotten by GC (never, in this model; ids are
+    /// only recorded once *used*).
+    GenUid,
+    /// Phase 2: apply sparse additive deltas under `uid`. Retrying is
+    /// safe: a shard applies a given `uid` at most once.
+    PushCoords {
+        /// Matrix id.
+        id: u32,
+        /// Unique push id from [`Request::GenUid`].
+        uid: u64,
+        /// Global row per delta.
+        rows: Vec<u64>,
+        /// Column per delta.
+        cols: Vec<u32>,
+        /// Delta values (same length).
+        values: Data,
+    },
+    /// Phase 2 (dense form): add full-row deltas under `uid`.
+    PushRows {
+        /// Matrix id.
+        id: u32,
+        /// Unique push id.
+        uid: u64,
+        /// Global rows, one per `cols`-sized chunk of `values`.
+        rows: Vec<u64>,
+        /// Row-major delta values, `rows.len() * cols` entries.
+        values: Data,
+    },
+    /// Phase 3: the push was acknowledged; the server may drop its
+    /// dedup record for `uid`. Idempotent.
+    Forget {
+        /// Push id to release.
+        uid: u64,
+    },
+    /// Shard introspection (row count, bytes, matrices).
+    ShardInfo,
+    /// Stop the shard server thread.
+    Shutdown,
+}
+
+/// Shard server → client responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Generic success.
+    Ok,
+    /// Unique push id (phase 1 reply).
+    Uid(u64),
+    /// Pulled row values, concatenated in request order.
+    Rows(Data),
+    /// Push applied (`fresh == true`) or deduplicated (`fresh == false`).
+    PushAck {
+        /// Whether this delivery performed the mutation.
+        fresh: bool,
+    },
+    /// Shard statistics.
+    Info {
+        /// Matrices hosted.
+        matrices: u32,
+        /// Total local rows across matrices.
+        local_rows: u64,
+        /// Payload bytes resident.
+        bytes: u64,
+        /// Outstanding (un-forgotten) push uids.
+        pending_uids: u64,
+    },
+    /// Request failed server-side.
+    Error(String),
+}
+
+// --- encoding ----------------------------------------------------------
+
+const T_CREATE: u8 = 1;
+const T_PULL_ROWS: u8 = 2;
+const T_GEN_UID: u8 = 3;
+const T_PUSH_COORDS: u8 = 4;
+const T_PUSH_ROWS: u8 = 5;
+const T_FORGET: u8 = 6;
+const T_INFO: u8 = 7;
+const T_SHUTDOWN: u8 = 8;
+
+impl Request {
+    /// Serialize to wire bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Request::CreateMatrix { id, rows, cols, dtype } => {
+                w.u8(T_CREATE);
+                w.u32(*id);
+                w.u64(*rows);
+                w.u32(*cols);
+                w.u8(dtype.tag());
+            }
+            Request::PullRows { id, rows } => {
+                w.u8(T_PULL_ROWS);
+                w.u32(*id);
+                w.slice_varint(rows);
+            }
+            Request::GenUid => w.u8(T_GEN_UID),
+            Request::PushCoords { id, uid, rows, cols, values } => {
+                w.u8(T_PUSH_COORDS);
+                w.u32(*id);
+                w.u64(*uid);
+                w.slice_varint(rows);
+                w.slice_u32(cols);
+                values.encode(&mut w);
+            }
+            Request::PushRows { id, uid, rows, values } => {
+                w.u8(T_PUSH_ROWS);
+                w.u32(*id);
+                w.u64(*uid);
+                w.slice_varint(rows);
+                values.encode(&mut w);
+            }
+            Request::Forget { uid } => {
+                w.u8(T_FORGET);
+                w.u64(*uid);
+            }
+            Request::ShardInfo => w.u8(T_INFO),
+            Request::Shutdown => w.u8(T_SHUTDOWN),
+        }
+        w.into_bytes()
+    }
+
+    /// Parse from wire bytes.
+    pub fn decode(bytes: &[u8]) -> Result<Request> {
+        let mut r = Reader::new(bytes);
+        let req = match r.u8()? {
+            T_CREATE => Request::CreateMatrix {
+                id: r.u32()?,
+                rows: r.u64()?,
+                cols: r.u32()?,
+                dtype: Dtype::from_tag(r.u8()?)?,
+            },
+            T_PULL_ROWS => Request::PullRows { id: r.u32()?, rows: r.slice_varint()? },
+            T_GEN_UID => Request::GenUid,
+            T_PUSH_COORDS => Request::PushCoords {
+                id: r.u32()?,
+                uid: r.u64()?,
+                rows: r.slice_varint()?,
+                cols: r.slice_u32()?,
+                values: Data::decode(&mut r)?,
+            },
+            T_PUSH_ROWS => Request::PushRows {
+                id: r.u32()?,
+                uid: r.u64()?,
+                rows: r.slice_varint()?,
+                values: Data::decode(&mut r)?,
+            },
+            T_FORGET => Request::Forget { uid: r.u64()? },
+            T_INFO => Request::ShardInfo,
+            T_SHUTDOWN => Request::Shutdown,
+            t => return Err(Error::Decode(format!("bad request tag {t}"))),
+        };
+        Ok(req)
+    }
+}
+
+const R_OK: u8 = 1;
+const R_UID: u8 = 2;
+const R_ROWS: u8 = 3;
+const R_PUSH_ACK: u8 = 4;
+const R_INFO: u8 = 5;
+const R_ERROR: u8 = 6;
+
+impl Response {
+    /// Serialize to wire bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Response::Ok => w.u8(R_OK),
+            Response::Uid(uid) => {
+                w.u8(R_UID);
+                w.u64(*uid);
+            }
+            Response::Rows(data) => {
+                w.u8(R_ROWS);
+                data.encode(&mut w);
+            }
+            Response::PushAck { fresh } => {
+                w.u8(R_PUSH_ACK);
+                w.u8(u8::from(*fresh));
+            }
+            Response::Info { matrices, local_rows, bytes, pending_uids } => {
+                w.u8(R_INFO);
+                w.u32(*matrices);
+                w.u64(*local_rows);
+                w.u64(*bytes);
+                w.u64(*pending_uids);
+            }
+            Response::Error(msg) => {
+                w.u8(R_ERROR);
+                w.str(msg);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Parse from wire bytes.
+    pub fn decode(bytes: &[u8]) -> Result<Response> {
+        let mut r = Reader::new(bytes);
+        let resp = match r.u8()? {
+            R_OK => Response::Ok,
+            R_UID => Response::Uid(r.u64()?),
+            R_ROWS => Response::Rows(Data::decode(&mut r)?),
+            R_PUSH_ACK => Response::PushAck { fresh: r.u8()? != 0 },
+            R_INFO => Response::Info {
+                matrices: r.u32()?,
+                local_rows: r.u64()?,
+                bytes: r.u64()?,
+                pending_uids: r.u64()?,
+            },
+            R_ERROR => Response::Error(r.str()?),
+            t => return Err(Error::Decode(format!("bad response tag {t}"))),
+        };
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip_req(req: Request) {
+        let bytes = req.encode();
+        assert_eq!(Request::decode(&bytes).unwrap(), req);
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let bytes = resp.encode();
+        assert_eq!(Response::decode(&bytes).unwrap(), resp);
+    }
+
+    #[test]
+    fn roundtrip_all_request_variants() {
+        roundtrip_req(Request::CreateMatrix { id: 1, rows: 100, cols: 8, dtype: Dtype::I64 });
+        roundtrip_req(Request::PullRows { id: 2, rows: vec![0, 5, 99] });
+        roundtrip_req(Request::GenUid);
+        roundtrip_req(Request::PushCoords {
+            id: 3,
+            uid: 42,
+            rows: vec![1, 2],
+            cols: vec![3, 4],
+            values: Data::I64(vec![1, -1]),
+        });
+        roundtrip_req(Request::PushRows {
+            id: 4,
+            uid: 43,
+            rows: vec![7],
+            values: Data::F32(vec![0.5, 1.5]),
+        });
+        roundtrip_req(Request::Forget { uid: 44 });
+        roundtrip_req(Request::ShardInfo);
+        roundtrip_req(Request::Shutdown);
+    }
+
+    #[test]
+    fn roundtrip_all_response_variants() {
+        roundtrip_resp(Response::Ok);
+        roundtrip_resp(Response::Uid(99));
+        roundtrip_resp(Response::Rows(Data::F32(vec![1.0, 2.0])));
+        roundtrip_resp(Response::Rows(Data::I64(vec![-5, 5])));
+        roundtrip_resp(Response::PushAck { fresh: true });
+        roundtrip_resp(Response::PushAck { fresh: false });
+        roundtrip_resp(Response::Info { matrices: 2, local_rows: 10, bytes: 160, pending_uids: 1 });
+        roundtrip_resp(Response::Error("boom".into()));
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(Request::decode(&[]).is_err());
+        assert!(Request::decode(&[0xff]).is_err());
+        assert!(Response::decode(&[0xee]).is_err());
+    }
+
+    #[test]
+    fn roundtrip_random_push_coords() {
+        forall(
+            "push coords roundtrip",
+            100,
+            |rng: &mut Pcg64| {
+                let n = rng.below(200);
+                Request::PushCoords {
+                    id: rng.next_u32(),
+                    uid: rng.next_u64(),
+                    rows: (0..n).map(|_| rng.next_u64() >> 16).collect(),
+                    cols: (0..n).map(|_| rng.next_u32() >> 16).collect(),
+                    values: Data::I64((0..n).map(|_| rng.next_u64() as i64).collect()),
+                }
+            },
+            |req| Request::decode(&req.encode()).unwrap() == *req,
+        );
+    }
+
+    #[test]
+    fn push_message_size_is_compact() {
+        // Paper §3.3: ~100k reassignments ≈ 2 MB. A reassignment is two
+        // coordinate deltas (decrement old topic, increment new topic);
+        // check that 100k deltas stay within the same order of magnitude.
+        let n = 100_000;
+        let req = Request::PushCoords {
+            id: 1,
+            uid: 1,
+            rows: (0..n).map(|i| (i % 50_000) as u64).collect(),
+            cols: (0..n).map(|i| (i % 1000) as u32).collect(),
+            values: Data::I64(vec![1; n]),
+        };
+        let bytes = req.encode().len();
+        assert!(bytes < 4 * 1024 * 1024, "100k-delta push is {bytes} bytes");
+    }
+}

@@ -1,0 +1,40 @@
+//! **Glint** — the asynchronous parameter server (the paper's §2).
+//!
+//! A parameter server stores large matrices and vectors partitioned across
+//! shard servers and exposes exactly two operations to users:
+//!
+//! - **pull** — fetch entries (rows of a matrix, slices of a vector);
+//! - **push** — apply additive deltas to entries.
+//!
+//! Because addition is commutative and associative, pushes need no
+//! locking or conflict resolution: deltas may be applied in any order
+//! (paper §2.5). What *does* need care is delivery semantics: the
+//! underlying transport is at-most-once, so
+//!
+//! - pulls are retried with **exponential back-off** until a response
+//!   arrives (they are read-only, so retries are harmless — §2.3);
+//! - pushes use a **three-phase hand-shake** (acquire unique id → push
+//!   with id, retrying until acknowledged → forget id) so that every
+//!   delta is applied **exactly once** even under message loss and
+//!   duplication (§2.4, Figure 2).
+//!
+//! Matrices are partitioned **row-wise cyclically** ([`partition`]):
+//! row `r` lives on shard `r mod n`. Combined with a frequency-ordered
+//! vocabulary this yields the implicit load-balancing property of §3.2.
+//!
+//! The user-facing handles are [`client::BigMatrix`] and
+//! [`client::BigVector`], which act on a *virtual view* of the matrix —
+//! callers never see where data physically lives (paper Figure 1).
+
+pub mod client;
+pub mod config;
+pub mod messages;
+pub mod partition;
+pub mod server;
+pub mod storage;
+
+pub use client::{BigMatrix, BigVector, PsClient};
+pub use config::PsConfig;
+pub use messages::{Data, Dtype, Request, Response};
+pub use partition::{PartitionScheme, Partitioner};
+pub use server::ServerGroup;

@@ -1,0 +1,201 @@
+//! Row partitioning schemes.
+//!
+//! The paper (§2.2) partitions matrices row-wise **cyclically**: row `r`
+//! is stored on shard `r mod n` at local offset `r / n`. This is trivial
+//! to compute, and — because the vocabulary is ordered by word frequency —
+//! spreads the Zipfian head words evenly over shards (§3.2, Figure 5).
+//!
+//! A **range** scheme (contiguous blocks, what a naive implementation
+//! would do) is provided as the comparison point for the Figure 5
+//! reproduction.
+
+/// How global rows map to (shard, local row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionScheme {
+    /// Row `r` → shard `r mod n` (the paper's scheme).
+    Cyclic,
+    /// Row `r` → shard `floor(r * n / rows)` (contiguous blocks).
+    Range,
+}
+
+impl PartitionScheme {
+    /// Parse from CLI string.
+    pub fn parse(s: &str) -> Option<PartitionScheme> {
+        match s {
+            "cyclic" => Some(PartitionScheme::Cyclic),
+            "range" => Some(PartitionScheme::Range),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete partitioning of `rows` rows over `shards` shards.
+#[derive(Debug, Clone, Copy)]
+pub struct Partitioner {
+    /// Total global rows.
+    pub rows: u64,
+    /// Number of shards.
+    pub shards: usize,
+    /// Mapping scheme.
+    pub scheme: PartitionScheme,
+}
+
+impl Partitioner {
+    /// Create a partitioner. `shards >= 1`.
+    pub fn new(rows: u64, shards: usize, scheme: PartitionScheme) -> Partitioner {
+        assert!(shards >= 1, "need at least one shard");
+        Partitioner { rows, shards, scheme }
+    }
+
+    /// Shard that owns global row `row`.
+    #[inline]
+    pub fn shard_of(&self, row: u64) -> usize {
+        debug_assert!(row < self.rows);
+        match self.scheme {
+            PartitionScheme::Cyclic => (row % self.shards as u64) as usize,
+            PartitionScheme::Range => {
+                // Boundaries are start(s) = floor(s * rows / shards);
+                // floor(row * shards / rows) approximates the inverse but
+                // can be off by one, so adjust against the real bounds.
+                let mut s = (row as u128 * self.shards as u128 / self.rows.max(1) as u128)
+                    as usize;
+                s = s.min(self.shards - 1);
+                while row < self.range_start(s) {
+                    s -= 1;
+                }
+                while row >= self.range_start(s + 1) {
+                    s += 1;
+                }
+                s
+            }
+        }
+    }
+
+    /// Local index of `row` within its owning shard.
+    #[inline]
+    pub fn local_index(&self, row: u64) -> u64 {
+        match self.scheme {
+            PartitionScheme::Cyclic => row / self.shards as u64,
+            PartitionScheme::Range => row - self.range_start(self.shard_of(row)),
+        }
+    }
+
+    /// Number of rows stored on `shard`.
+    pub fn rows_on_shard(&self, shard: usize) -> u64 {
+        match self.scheme {
+            PartitionScheme::Cyclic => {
+                let n = self.shards as u64;
+                self.rows / n + u64::from((shard as u64) < self.rows % n)
+            }
+            PartitionScheme::Range => self.range_start(shard + 1) - self.range_start(shard),
+        }
+    }
+
+    /// First global row of a range-scheme shard (also defined for
+    /// `shard == shards`, where it returns `rows`).
+    fn range_start(&self, shard: usize) -> u64 {
+        (shard as u128 * self.rows as u128 / self.shards as u128) as u64
+    }
+
+    /// Reconstruct the global row id from `(shard, local)`.
+    pub fn global_row(&self, shard: usize, local: u64) -> u64 {
+        match self.scheme {
+            PartitionScheme::Cyclic => local * self.shards as u64 + shard as u64,
+            PartitionScheme::Range => self.range_start(shard) + local,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall_explain;
+
+    #[test]
+    fn cyclic_basics() {
+        let p = Partitioner::new(10, 3, PartitionScheme::Cyclic);
+        assert_eq!(p.shard_of(0), 0);
+        assert_eq!(p.shard_of(1), 1);
+        assert_eq!(p.shard_of(2), 2);
+        assert_eq!(p.shard_of(3), 0);
+        assert_eq!(p.local_index(3), 1);
+        assert_eq!(p.rows_on_shard(0), 4); // rows 0,3,6,9
+        assert_eq!(p.rows_on_shard(1), 3); // rows 1,4,7
+        assert_eq!(p.rows_on_shard(2), 3); // rows 2,5,8
+    }
+
+    #[test]
+    fn range_basics() {
+        let p = Partitioner::new(10, 3, PartitionScheme::Range);
+        assert_eq!(p.shard_of(0), 0);
+        assert_eq!(p.shard_of(9), 2);
+        let total: u64 = (0..3).map(|s| p.rows_on_shard(s)).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn parse_scheme() {
+        assert_eq!(PartitionScheme::parse("cyclic"), Some(PartitionScheme::Cyclic));
+        assert_eq!(PartitionScheme::parse("range"), Some(PartitionScheme::Range));
+        assert_eq!(PartitionScheme::parse("zig"), None);
+    }
+
+    /// Round-trip property: global → (shard, local) → global is identity,
+    /// shard counts sum to total, local indices are dense per shard.
+    #[test]
+    fn partition_invariants_property() {
+        forall_explain(
+            "partition invariants",
+            200,
+            |rng| {
+                let rows = 1 + rng.below(5000) as u64;
+                let shards = 1 + rng.below(64);
+                let scheme = if rng.bernoulli(0.5) {
+                    PartitionScheme::Cyclic
+                } else {
+                    PartitionScheme::Range
+                };
+                (rows, shards, scheme)
+            },
+            |&(rows, shards, scheme)| {
+                let p = Partitioner::new(rows, shards, scheme);
+                let total: u64 = (0..shards).map(|s| p.rows_on_shard(s)).sum();
+                if total != rows {
+                    return Err(format!("shard sizes sum to {total}, want {rows}"));
+                }
+                let mut seen_local = vec![std::collections::HashSet::new(); shards];
+                for r in 0..rows {
+                    let s = p.shard_of(r);
+                    if s >= shards {
+                        return Err(format!("row {r} mapped to invalid shard {s}"));
+                    }
+                    let l = p.local_index(r);
+                    if l >= p.rows_on_shard(s) {
+                        return Err(format!(
+                            "row {r}: local {l} >= shard size {}",
+                            p.rows_on_shard(s)
+                        ));
+                    }
+                    if p.global_row(s, l) != r {
+                        return Err(format!("row {r} does not round-trip"));
+                    }
+                    if !seen_local[s].insert(l) {
+                        return Err(format!("local index {l} on shard {s} duplicated"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cyclic_balances_zipf_head() {
+        // The motivating property (Figure 5): under cyclic partitioning of
+        // a frequency-ordered vocabulary, adjacent high-frequency rows go
+        // to different shards.
+        let p = Partitioner::new(1000, 30, PartitionScheme::Cyclic);
+        let shards: Vec<usize> = (0..30).map(|r| p.shard_of(r as u64)).collect();
+        let uniq: std::collections::HashSet<_> = shards.iter().collect();
+        assert_eq!(uniq.len(), 30, "top-30 words spread over all 30 shards");
+    }
+}

@@ -1,0 +1,467 @@
+//! Shard server: the process that owns a slice of every distributed
+//! matrix and serves pull/push requests.
+//!
+//! Each shard runs a single-threaded event loop over its inbox (the Akka
+//! actor model of the original: one actor per partial matrix, serialized
+//! message processing). Exactly-once pushes are enforced with a
+//! seen-uid set: a `PushCoords`/`PushRows` whose uid was already applied
+//! acknowledges without re-applying (paper §2.4, Figure 2).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::net::{respond, FaultPlan, Inbox, SimTransport};
+use crate::ps::config::PsConfig;
+use crate::ps::messages::{Data, Dtype, Request, Response};
+use crate::ps::partition::Partitioner;
+use crate::ps::storage::DenseShard;
+use crate::util::error::Result;
+
+/// One matrix's slice on this shard.
+enum MatrixSlice {
+    I64 { part: Partitioner, shard: DenseShard<i64> },
+    F32 { part: Partitioner, shard: DenseShard<f32> },
+}
+
+impl MatrixSlice {
+    fn local_rows(&self) -> u64 {
+        match self {
+            MatrixSlice::I64 { shard, .. } => shard.local_rows(),
+            MatrixSlice::F32 { shard, .. } => shard.local_rows(),
+        }
+    }
+
+    fn bytes(&self) -> u64 {
+        match self {
+            MatrixSlice::I64 { shard, .. } => shard.bytes() as u64,
+            MatrixSlice::F32 { shard, .. } => shard.bytes() as u64,
+        }
+    }
+}
+
+/// State of one shard server.
+pub struct ShardState {
+    shard_id: usize,
+    config: PsConfig,
+    matrices: HashMap<u32, MatrixSlice>,
+    /// Applied-but-not-forgotten push ids (exactly-once dedup set).
+    seen_uids: HashSet<u64>,
+    next_uid: u64,
+}
+
+impl ShardState {
+    /// Fresh state for shard `shard_id`.
+    pub fn new(shard_id: usize, config: PsConfig) -> ShardState {
+        ShardState {
+            shard_id,
+            config,
+            matrices: HashMap::new(),
+            seen_uids: HashSet::new(),
+            // Uids carry the shard id in the top bits so they are unique
+            // across shards (useful in traces); dedup is per-shard anyway.
+            next_uid: (shard_id as u64) << 48,
+        }
+    }
+
+    /// Handle one decoded request.
+    pub fn handle(&mut self, req: Request) -> Response {
+        match req {
+            Request::CreateMatrix { id, rows, cols, dtype } => {
+                self.create(id, rows, cols, dtype)
+            }
+            Request::PullRows { id, rows } => self.pull_rows(id, &rows),
+            Request::GenUid => {
+                self.next_uid += 1;
+                Response::Uid(self.next_uid)
+            }
+            Request::PushCoords { id, uid, rows, cols, values } => {
+                if self.seen_uids.contains(&uid) {
+                    return Response::PushAck { fresh: false };
+                }
+                match self.apply_coords(id, &rows, &cols, &values) {
+                    Ok(()) => {
+                        self.seen_uids.insert(uid);
+                        Response::PushAck { fresh: true }
+                    }
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Request::PushRows { id, uid, rows, values } => {
+                if self.seen_uids.contains(&uid) {
+                    return Response::PushAck { fresh: false };
+                }
+                match self.apply_rows(id, &rows, &values) {
+                    Ok(()) => {
+                        self.seen_uids.insert(uid);
+                        Response::PushAck { fresh: true }
+                    }
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Request::Forget { uid } => {
+                self.seen_uids.remove(&uid);
+                Response::Ok
+            }
+            Request::ShardInfo => Response::Info {
+                matrices: self.matrices.len() as u32,
+                local_rows: self.matrices.values().map(|m| m.local_rows()).sum(),
+                bytes: self.matrices.values().map(|m| m.bytes()).sum(),
+                pending_uids: self.seen_uids.len() as u64,
+            },
+            Request::Shutdown => Response::Ok,
+        }
+    }
+
+    fn create(&mut self, id: u32, rows: u64, cols: u32, dtype: Dtype) -> Response {
+        // Idempotent: re-creating the same id with the same shape is a
+        // no-op (a retried CreateMatrix must not wipe data).
+        if let Some(existing) = self.matrices.get(&id) {
+            let (erows, ecols, edtype) = match existing {
+                MatrixSlice::I64 { part, shard } => (part.rows, shard.cols(), Dtype::I64),
+                MatrixSlice::F32 { part, shard } => (part.rows, shard.cols(), Dtype::F32),
+            };
+            return if (erows, ecols, edtype) == (rows, cols, dtype) {
+                Response::Ok
+            } else {
+                Response::Error(format!("matrix {id} already exists with different shape"))
+            };
+        }
+        let part = Partitioner::new(rows, self.config.shards, self.config.scheme);
+        let local = part.rows_on_shard(self.shard_id);
+        let slice = match dtype {
+            Dtype::I64 => MatrixSlice::I64 { part, shard: DenseShard::new(local, cols) },
+            Dtype::F32 => MatrixSlice::F32 { part, shard: DenseShard::new(local, cols) },
+        };
+        self.matrices.insert(id, slice);
+        Response::Ok
+    }
+
+    fn pull_rows(&self, id: u32, rows: &[u64]) -> Response {
+        let Some(slice) = self.matrices.get(&id) else {
+            return Response::Error(format!("unknown matrix {id}"));
+        };
+        let result: Result<Data> = match slice {
+            MatrixSlice::I64 { part, shard } => {
+                let mut out = Vec::with_capacity(rows.len() * shard.cols() as usize);
+                rows.iter()
+                    .try_for_each(|&r| shard.read_row(part.local_index(r), &mut out))
+                    .map(|()| Data::I64(out))
+            }
+            MatrixSlice::F32 { part, shard } => {
+                let mut out = Vec::with_capacity(rows.len() * shard.cols() as usize);
+                rows.iter()
+                    .try_for_each(|&r| shard.read_row(part.local_index(r), &mut out))
+                    .map(|()| Data::F32(out))
+            }
+        };
+        match result {
+            Ok(data) => Response::Rows(data),
+            Err(e) => Response::Error(e.to_string()),
+        }
+    }
+
+    fn apply_coords(&mut self, id: u32, rows: &[u64], cols: &[u32], values: &Data) -> Result<()> {
+        if rows.len() != cols.len() || rows.len() != values.len() {
+            return Err(crate::util::error::Error::PsRejected(format!(
+                "coord push length mismatch: {} rows, {} cols, {} values",
+                rows.len(),
+                cols.len(),
+                values.len()
+            )));
+        }
+        let slice = self.matrices.get_mut(&id).ok_or_else(|| {
+            crate::util::error::Error::PsRejected(format!("unknown matrix {id}"))
+        })?;
+        match (slice, values) {
+            (MatrixSlice::I64 { part, shard }, Data::I64(vals)) => {
+                for ((&r, &c), &v) in rows.iter().zip(cols).zip(vals) {
+                    shard.add(part.local_index(r), c, v)?;
+                }
+                Ok(())
+            }
+            (MatrixSlice::F32 { part, shard }, Data::F32(vals)) => {
+                for ((&r, &c), &v) in rows.iter().zip(cols).zip(vals) {
+                    shard.add(part.local_index(r), c, v)?;
+                }
+                Ok(())
+            }
+            _ => Err(crate::util::error::Error::PsRejected(format!(
+                "dtype mismatch pushing to matrix {id}"
+            ))),
+        }
+    }
+
+    fn apply_rows(&mut self, id: u32, rows: &[u64], values: &Data) -> Result<()> {
+        let slice = self.matrices.get_mut(&id).ok_or_else(|| {
+            crate::util::error::Error::PsRejected(format!("unknown matrix {id}"))
+        })?;
+        match (slice, values) {
+            (MatrixSlice::I64 { part, shard }, Data::I64(vals)) => {
+                let cols = shard.cols() as usize;
+                if vals.len() != rows.len() * cols {
+                    return Err(crate::util::error::Error::PsRejected(
+                        "row push shape mismatch".into(),
+                    ));
+                }
+                for (&r, chunk) in rows.iter().zip(vals.chunks_exact(cols)) {
+                    shard.add_row(part.local_index(r), chunk)?;
+                }
+                Ok(())
+            }
+            (MatrixSlice::F32 { part, shard }, Data::F32(vals)) => {
+                let cols = shard.cols() as usize;
+                if vals.len() != rows.len() * cols {
+                    return Err(crate::util::error::Error::PsRejected(
+                        "row push shape mismatch".into(),
+                    ));
+                }
+                for (&r, chunk) in rows.iter().zip(vals.chunks_exact(cols)) {
+                    shard.add_row(part.local_index(r), chunk)?;
+                }
+                Ok(())
+            }
+            _ => Err(crate::util::error::Error::PsRejected(format!(
+                "dtype mismatch pushing to matrix {id}"
+            ))),
+        }
+    }
+}
+
+/// Event loop for one shard server thread.
+fn serve(mut state: ShardState, inbox: Inbox) {
+    while let Some(env) = inbox.recv() {
+        let resp = match Request::decode(&env.payload) {
+            Ok(Request::Shutdown) => {
+                respond(&env, Response::Ok.encode());
+                return;
+            }
+            Ok(req) => state.handle(req),
+            Err(e) => Response::Error(e.to_string()),
+        };
+        respond(&env, resp.encode());
+    }
+}
+
+/// A running group of shard servers plus the transport connecting to
+/// them. Owns the server threads; dropping the group shuts them down.
+pub struct ServerGroup {
+    transport: Arc<SimTransport>,
+    config: PsConfig,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ServerGroup {
+    /// Start `config.shards` shard servers over a transport with the
+    /// given fault plan.
+    pub fn start(config: PsConfig, plan: FaultPlan, seed: u64) -> ServerGroup {
+        let (transport, inboxes) = SimTransport::new(config.shards, plan, seed);
+        let handles = inboxes
+            .into_iter()
+            .enumerate()
+            .map(|(shard_id, inbox)| {
+                let state = ShardState::new(shard_id, config.clone());
+                std::thread::Builder::new()
+                    .name(format!("glint-shard-{shard_id}"))
+                    .spawn(move || serve(state, inbox))
+                    .expect("spawn shard server")
+            })
+            .collect();
+        ServerGroup { transport: Arc::new(transport), config, handles }
+    }
+
+    /// The transport clients should connect through.
+    pub fn transport(&self) -> Arc<SimTransport> {
+        Arc::clone(&self.transport)
+    }
+
+    /// Deployment config.
+    pub fn config(&self) -> &PsConfig {
+        &self.config
+    }
+
+    /// Gracefully stop all shard threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        for s in 0..self.transport.shards() {
+            let ep = self.transport.endpoint(s);
+            // Control-plane channel: bypasses fault injection so the stop
+            // signal always lands (or errors if the shard already exited).
+            let _ = ep
+                .send_reliable(Request::Shutdown.encode(), std::time::Duration::from_secs(5));
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerGroup {
+    fn drop(&mut self) {
+        if !self.handles.is_empty() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> ShardState {
+        // Single shard so every row is local.
+        ShardState::new(0, PsConfig::with_shards(1))
+    }
+
+    #[test]
+    fn create_pull_push_cycle() {
+        let mut s = state();
+        assert_eq!(
+            s.handle(Request::CreateMatrix { id: 1, rows: 4, cols: 3, dtype: Dtype::I64 }),
+            Response::Ok
+        );
+        let uid = match s.handle(Request::GenUid) {
+            Response::Uid(u) => u,
+            r => panic!("want uid, got {r:?}"),
+        };
+        assert_eq!(
+            s.handle(Request::PushCoords {
+                id: 1,
+                uid,
+                rows: vec![0, 0, 3],
+                cols: vec![0, 1, 2],
+                values: Data::I64(vec![5, 7, -2]),
+            }),
+            Response::PushAck { fresh: true }
+        );
+        match s.handle(Request::PullRows { id: 1, rows: vec![0, 3] }) {
+            Response::Rows(Data::I64(v)) => assert_eq!(v, vec![5, 7, 0, 0, 0, -2]),
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_push_not_reapplied() {
+        let mut s = state();
+        s.handle(Request::CreateMatrix { id: 1, rows: 1, cols: 1, dtype: Dtype::I64 });
+        let push = Request::PushCoords {
+            id: 1,
+            uid: 7,
+            rows: vec![0],
+            cols: vec![0],
+            values: Data::I64(vec![10]),
+        };
+        assert_eq!(s.handle(push.clone()), Response::PushAck { fresh: true });
+        assert_eq!(s.handle(push.clone()), Response::PushAck { fresh: false });
+        assert_eq!(s.handle(push), Response::PushAck { fresh: false });
+        match s.handle(Request::PullRows { id: 1, rows: vec![0] }) {
+            Response::Rows(Data::I64(v)) => assert_eq!(v, vec![10]),
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn forget_releases_uid() {
+        let mut s = state();
+        s.handle(Request::CreateMatrix { id: 1, rows: 1, cols: 1, dtype: Dtype::I64 });
+        let push = Request::PushCoords {
+            id: 1,
+            uid: 9,
+            rows: vec![0],
+            cols: vec![0],
+            values: Data::I64(vec![1]),
+        };
+        s.handle(push.clone());
+        match s.handle(Request::ShardInfo) {
+            Response::Info { pending_uids, .. } => assert_eq!(pending_uids, 1),
+            r => panic!("unexpected {r:?}"),
+        }
+        assert_eq!(s.handle(Request::Forget { uid: 9 }), Response::Ok);
+        assert_eq!(s.handle(Request::Forget { uid: 9 }), Response::Ok); // idempotent
+        match s.handle(Request::ShardInfo) {
+            Response::Info { pending_uids, .. } => assert_eq!(pending_uids, 0),
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn recreate_same_shape_is_idempotent() {
+        let mut s = state();
+        let create = Request::CreateMatrix { id: 1, rows: 2, cols: 2, dtype: Dtype::I64 };
+        s.handle(create.clone());
+        s.handle(Request::PushCoords {
+            id: 1,
+            uid: 1,
+            rows: vec![1],
+            cols: vec![1],
+            values: Data::I64(vec![4]),
+        });
+        // Retried create must not wipe the data.
+        assert_eq!(s.handle(create), Response::Ok);
+        match s.handle(Request::PullRows { id: 1, rows: vec![1] }) {
+            Response::Rows(Data::I64(v)) => assert_eq!(v, vec![0, 4]),
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn recreate_different_shape_rejected() {
+        let mut s = state();
+        s.handle(Request::CreateMatrix { id: 1, rows: 2, cols: 2, dtype: Dtype::I64 });
+        match s.handle(Request::CreateMatrix { id: 1, rows: 3, cols: 2, dtype: Dtype::I64 }) {
+            Response::Error(_) => {}
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_for_unknown_matrix_and_mismatch() {
+        let mut s = state();
+        match s.handle(Request::PullRows { id: 99, rows: vec![0] }) {
+            Response::Error(m) => assert!(m.contains("unknown")),
+            r => panic!("unexpected {r:?}"),
+        }
+        s.handle(Request::CreateMatrix { id: 1, rows: 1, cols: 1, dtype: Dtype::I64 });
+        match s.handle(Request::PushCoords {
+            id: 1,
+            uid: 1,
+            rows: vec![0],
+            cols: vec![0],
+            values: Data::F32(vec![1.0]),
+        }) {
+            Response::Error(m) => assert!(m.contains("dtype")),
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn failed_push_does_not_consume_uid() {
+        let mut s = state();
+        s.handle(Request::CreateMatrix { id: 1, rows: 1, cols: 1, dtype: Dtype::I64 });
+        // Out-of-bounds column: rejected, uid stays unused, so a corrected
+        // retry under the same uid can still apply.
+        match s.handle(Request::PushCoords {
+            id: 1,
+            uid: 5,
+            rows: vec![0],
+            cols: vec![10],
+            values: Data::I64(vec![1]),
+        }) {
+            Response::Error(_) => {}
+            r => panic!("unexpected {r:?}"),
+        }
+        assert_eq!(
+            s.handle(Request::PushCoords {
+                id: 1,
+                uid: 5,
+                rows: vec![0],
+                cols: vec![0],
+                values: Data::I64(vec![1]),
+            }),
+            Response::PushAck { fresh: true }
+        );
+    }
+}

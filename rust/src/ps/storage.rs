@@ -1,0 +1,152 @@
+//! Dense in-memory shard storage.
+//!
+//! The paper (§2.1) stores partial matrices as dense two-dimensional
+//! arrays of JVM primitives in row-major order, chosen for fast random
+//! updates and to avoid boxing/garbage-collection overhead. The rust
+//! equivalent is a flat `Vec<T>` of `Copy` primitives — contiguous, no
+//! indirection, no GC by construction.
+
+use crate::util::error::{Error, Result};
+
+/// A shard's slice of one distributed matrix: `local_rows x cols`,
+/// row-major.
+#[derive(Debug, Clone)]
+pub struct DenseShard<T> {
+    data: Vec<T>,
+    local_rows: u64,
+    cols: u32,
+}
+
+impl<T: Copy + Default + std::ops::AddAssign> DenseShard<T> {
+    /// Allocate a zeroed shard.
+    pub fn new(local_rows: u64, cols: u32) -> DenseShard<T> {
+        let len = local_rows as usize * cols as usize;
+        DenseShard { data: vec![T::default(); len], local_rows, cols }
+    }
+
+    /// Rows stored locally.
+    pub fn local_rows(&self) -> u64 {
+        self.local_rows
+    }
+
+    /// Columns (global — every shard stores full rows).
+    pub fn cols(&self) -> u32 {
+        self.cols
+    }
+
+    /// Bytes of payload storage.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<T>()
+    }
+
+    #[inline]
+    fn offset(&self, local_row: u64, col: u32) -> Result<usize> {
+        if local_row >= self.local_rows || col >= self.cols {
+            return Err(Error::PsRejected(format!(
+                "index ({local_row},{col}) out of bounds for {}x{} shard",
+                self.local_rows, self.cols
+            )));
+        }
+        Ok(local_row as usize * self.cols as usize + col as usize)
+    }
+
+    /// Read one entry.
+    pub fn get(&self, local_row: u64, col: u32) -> Result<T> {
+        Ok(self.data[self.offset(local_row, col)?])
+    }
+
+    /// Copy a full row into `out`.
+    pub fn read_row(&self, local_row: u64, out: &mut Vec<T>) -> Result<()> {
+        if local_row >= self.local_rows {
+            return Err(Error::PsRejected(format!(
+                "row {local_row} out of bounds ({} rows)",
+                self.local_rows
+            )));
+        }
+        let start = local_row as usize * self.cols as usize;
+        out.extend_from_slice(&self.data[start..start + self.cols as usize]);
+        Ok(())
+    }
+
+    /// Add `delta` to one entry.
+    pub fn add(&mut self, local_row: u64, col: u32, delta: T) -> Result<()> {
+        let o = self.offset(local_row, col)?;
+        self.data[o] += delta;
+        Ok(())
+    }
+
+    /// Add a full row of deltas.
+    pub fn add_row(&mut self, local_row: u64, deltas: &[T]) -> Result<()> {
+        if deltas.len() != self.cols as usize {
+            return Err(Error::PsRejected(format!(
+                "row delta has {} entries, want {}",
+                deltas.len(),
+                self.cols
+            )));
+        }
+        let start = self.offset(local_row, 0)?;
+        for (slot, &d) in self.data[start..start + self.cols as usize].iter_mut().zip(deltas) {
+            *slot += d;
+        }
+        Ok(())
+    }
+
+    /// Raw view of the shard (local_rows-major), for checkpoint rebuild
+    /// verification in tests.
+    pub fn raw(&self) -> &[T] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_initialized() {
+        let s: DenseShard<i64> = DenseShard::new(4, 3);
+        for r in 0..4 {
+            for c in 0..3 {
+                assert_eq!(s.get(r, c).unwrap(), 0);
+            }
+        }
+        assert_eq!(s.bytes(), 4 * 3 * 8);
+    }
+
+    #[test]
+    fn add_and_get() {
+        let mut s: DenseShard<i64> = DenseShard::new(2, 2);
+        s.add(0, 1, 5).unwrap();
+        s.add(0, 1, -2).unwrap();
+        assert_eq!(s.get(0, 1).unwrap(), 3);
+        assert_eq!(s.get(0, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn add_row_and_read_row() {
+        let mut s: DenseShard<f32> = DenseShard::new(3, 4);
+        s.add_row(1, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        s.add_row(1, &[0.5, 0.5, 0.5, 0.5]).unwrap();
+        let mut out = Vec::new();
+        s.read_row(1, &mut out).unwrap();
+        assert_eq!(out, vec![1.5, 2.5, 3.5, 4.5]);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut s: DenseShard<i64> = DenseShard::new(2, 2);
+        assert!(s.get(2, 0).is_err());
+        assert!(s.get(0, 2).is_err());
+        assert!(s.add(5, 0, 1).is_err());
+        assert!(s.add_row(0, &[1, 2, 3]).is_err());
+        let mut out = Vec::new();
+        assert!(s.read_row(9, &mut out).is_err());
+    }
+
+    #[test]
+    fn zero_sized_shard() {
+        let s: DenseShard<i64> = DenseShard::new(0, 10);
+        assert_eq!(s.local_rows(), 0);
+        assert_eq!(s.bytes(), 0);
+    }
+}

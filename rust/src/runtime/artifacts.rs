@@ -1,0 +1,149 @@
+//! Artifact manifest: what `make artifacts` produced and with which
+//! static shapes.
+//!
+//! `python/compile/aot.py` lowers each L2 graph for a set of static shape
+//! configurations (XLA AOT requires fixed shapes) and records them in
+//! `artifacts/manifest.json`. The rust side picks the smallest compiled
+//! variant that fits the model at hand and pads inputs up to it.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One compiled artifact variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Graph name, e.g. `"perplexity"`.
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Document batch size D.
+    pub batch: usize,
+    /// Padded topic count K.
+    pub k: usize,
+    /// Vocabulary block width V_B.
+    pub vblock: usize,
+    /// Whether the graph embeds the Pallas kernel (vs pure-jnp reference
+    /// lowering).
+    pub pallas: bool,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// All artifact variants.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|_| {
+            Error::MissingArtifact(format!("{} (manifest)", path.display()))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest JSON.
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Decode("manifest missing version".into()))?;
+        if version != 1 {
+            return Err(Error::Decode(format!("unsupported manifest version {version}")));
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Decode("manifest missing artifacts".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_usize = |key: &str| {
+                a.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::Decode(format!("artifact missing {key}")))
+            };
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Decode("artifact missing name".into()))?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Decode("artifact missing file".into()))?
+                    .to_string(),
+                batch: get_usize("batch")?,
+                k: get_usize("k")?,
+                vblock: get_usize("vblock")?,
+                pallas: matches!(a.get("pallas"), Some(Json::Bool(true))),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Pick the variant of `name` with the smallest padded K that still
+    /// fits `k` topics (preferring the Pallas build when both exist).
+    pub fn select(&self, name: &str, k: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name == name && a.k >= k)
+            .min_by_key(|a| (a.k, !a.pallas as usize))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "perplexity", "file": "p_k128.hlo.txt", "batch": 64,
+             "k": 128, "vblock": 2048, "pallas": true},
+            {"name": "perplexity", "file": "p_k1024.hlo.txt", "batch": 64,
+             "k": 1024, "vblock": 2048, "pallas": true},
+            {"name": "perplexity_ref", "file": "pref_k128.hlo.txt", "batch": 64,
+             "k": 128, "vblock": 2048, "pallas": false}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_select() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let s = m.select("perplexity", 100).unwrap();
+        assert_eq!(s.k, 128);
+        let s = m.select("perplexity", 129).unwrap();
+        assert_eq!(s.k, 1024);
+        assert!(m.select("perplexity", 2000).is_none());
+        assert!(m.select("unknown", 1).is_none());
+    }
+
+    #[test]
+    fn path_resolution() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        let p = m.path_of(&m.artifacts[0]);
+        assert_eq!(p, PathBuf::from("/tmp/arts/p_k128.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 1}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 9, "artifacts": []}"#).is_err());
+        let ok = Manifest::parse(Path::new("."), r#"{"version": 1, "artifacts": []}"#).unwrap();
+        assert!(ok.artifacts.is_empty());
+    }
+}

@@ -1,0 +1,185 @@
+//! PJRT execution engine.
+//!
+//! Loads HLO-text artifacts (produced by `python/compile/aot.py`),
+//! compiles them once on the PJRT CPU client, and executes them from the
+//! rust hot path. HLO *text* is the interchange format: jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::runtime::artifacts::{ArtifactSpec, Manifest};
+use crate::util::error::{Error, Result};
+
+/// A typed input buffer for one execution.
+pub enum Input {
+    /// f32 tensor with shape.
+    F32(Vec<f32>, Vec<usize>),
+}
+
+/// Engine: one PJRT client plus lazily compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create from an artifact directory (must contain `manifest.json`).
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+        Ok(Engine { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Select the best artifact variant for `name` at `k` topics.
+    pub fn select(&self, name: &str, k: usize) -> Result<ArtifactSpec> {
+        self.manifest
+            .select(name, k)
+            .cloned()
+            .ok_or_else(|| Error::MissingArtifact(format!("{name} (k >= {k})")))
+    }
+
+    fn compile(&self, spec: &ArtifactSpec) -> Result<()> {
+        let mut cache = self.compiled.lock().unwrap();
+        if cache.contains_key(&spec.file) {
+            return Ok(());
+        }
+        let path = self.manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Xla("non-utf8 artifact path".into()))?,
+        )
+        .map_err(|e| Error::Xla(format!("loading {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compiling {}: {e}", path.display())))?;
+        cache.insert(spec.file.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with f32 inputs; returns the flattened f32
+    /// outputs (the graphs are lowered with `return_tuple=True`; tuple
+    /// elements are returned in order).
+    pub fn run_f32(&self, spec: &ArtifactSpec, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        self.compile(spec)?;
+        let cache = self.compiled.lock().unwrap();
+        let exe = cache.get(&spec.file).expect("compiled above");
+
+        let mut literals = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            match input {
+                Input::F32(values, shape) => {
+                    let expect: usize = shape.iter().product();
+                    if values.len() != expect {
+                        return Err(Error::Config(format!(
+                            "input has {} values but shape {:?} needs {expect}",
+                            values.len(),
+                            shape
+                        )));
+                    }
+                    let lit = if shape.is_empty() {
+                        xla::Literal::scalar(values[0])
+                    } else {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(values)
+                            .reshape(&dims)
+                            .map_err(|e| Error::Xla(format!("reshape: {e}")))?
+                    };
+                    literals.push(lit);
+                }
+            }
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Xla(format!("execute: {e}")))?;
+        let out_literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(format!("to_literal: {e}")))?;
+        // Graphs are lowered with return_tuple=True.
+        let tuple = out_literal
+            .to_tuple()
+            .map_err(|e| Error::Xla(format!("decompose tuple: {e}")))?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            outs.push(t.to_vec::<f32>().map_err(|e| Error::Xla(format!("to_vec: {e}")))?);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        // Tests run from the workspace root.
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine_or_skip() -> Option<Engine> {
+        let dir = artifact_dir();
+        match Engine::new(&dir) {
+            Ok(e) => Some(e),
+            Err(_) => {
+                eprintln!("skipping engine test: run `make artifacts` first");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn engine_loads_and_runs_perplexity() {
+        let Some(engine) = engine_or_skip() else { return };
+        let Ok(spec) = engine.select("perplexity", 8) else {
+            eprintln!("no perplexity artifact; skipping");
+            return;
+        };
+        let d = spec.batch;
+        let k = spec.k;
+        let vb = spec.vblock;
+        // Uniform model: theta = 1/k, phi = 1/vb; one token of word 0 in
+        // every doc => per-doc loglik = ln(1/vb).
+        let n_dk = vec![0f32; d * k];
+        let n_wk = vec![0f32; k * vb];
+        let n_k = vec![0f32; k];
+        let mut counts = vec![0f32; d * vb];
+        for doc in 0..d {
+            counts[doc * vb] = 1.0;
+        }
+        let scalars = |v: f32| Input::F32(vec![v], vec![]);
+        let out = engine
+            .run_f32(
+                &spec,
+                &[
+                    Input::F32(n_dk, vec![d, k]),
+                    Input::F32(n_wk, vec![k, vb]),
+                    Input::F32(n_k, vec![k]),
+                    Input::F32(counts, vec![d, vb]),
+                    scalars(0.5),       // alpha
+                    scalars(1.0),       // beta
+                    scalars(vb as f32), // vocab size (for the phi denominator)
+                    scalars(k as f32),  // k_real (no padding here)
+                ],
+            )
+            .unwrap();
+        let loglik = &out[0];
+        let want = (1.0 / vb as f32).ln();
+        for (i, &ll) in loglik.iter().enumerate() {
+            assert!((ll - want).abs() < 1e-3, "doc {i}: {ll} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! XLA/PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and
+//! executes them from rust. Python never runs after `make artifacts`.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use engine::Engine;

@@ -1,0 +1,142 @@
+//! Minimal command-line argument parser.
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and a
+//! positional subcommand, which is all the launcher needs. No external
+//! crates are available offline, so this replaces `clap`.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Parsed arguments: one optional subcommand plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag argument, if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.opts.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Boolean flag (present without value) or `--key true/false`.
+    pub fn flag(&self, key: &str) -> bool {
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed option with default; errors on unparsable values.
+    pub fn get_as<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse::<T>().map_err(|_| {
+                Error::Config(format!("invalid value for --{key}: {raw:?}"))
+            }),
+        }
+    }
+
+    /// Typed required option.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        let raw = self
+            .get(key)
+            .ok_or_else(|| Error::Config(format!("missing required option --{key}")))?;
+        raw.parse::<T>()
+            .map_err(|_| Error::Config(format!("invalid value for --{key}: {raw:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--topics", "100", "--iters=50", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get_as::<usize>("topics", 0).unwrap(), 100);
+        assert_eq!(a.get_as::<usize>("iters", 0).unwrap(), 50);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["train"]);
+        assert_eq!(a.get_as::<f64>("alpha", 0.1).unwrap(), 0.1);
+        assert_eq!(a.str_or("corpus", "synthetic"), "synthetic");
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let a = parse(&["train", "--topics", "banana"]);
+        assert!(a.get_as::<usize>("topics", 0).is_err());
+    }
+
+    #[test]
+    fn require_missing_errors() {
+        let a = parse(&["train"]);
+        assert!(a.require::<usize>("topics").is_err());
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let a = parse(&["eval", "model.bin", "corpus.bin"]);
+        assert_eq!(a.positional, vec!["model.bin", "corpus.bin"]);
+    }
+
+    #[test]
+    fn boolean_with_explicit_value() {
+        let a = parse(&["x", "--pipeline", "false", "--buffered", "true"]);
+        assert!(!a.flag("pipeline"));
+        assert!(a.flag("buffered"));
+    }
+}

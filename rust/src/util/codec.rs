@@ -1,0 +1,414 @@
+//! Byte-level serialization used by the message layer and checkpoints.
+//!
+//! Little-endian fixed-width primitives plus LEB128 varints for lengths.
+//! No external crates: this is the wire format for the simulated network
+//! (so that message *sizes* are realistic — the paper reasons about ~2 MB
+//! push messages) and the on-disk checkpoint format.
+
+use crate::util::error::{Error, Result};
+
+/// Append-only byte writer.
+#[derive(Default, Debug)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    /// New writer with a capacity hint.
+    pub fn with_capacity(cap: usize) -> Self {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Finish and take the bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Current encoded size in bytes.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True if nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Write a single byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Write fixed-width little-endian u32.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write fixed-width little-endian u64.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write fixed-width little-endian i64.
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write f32 bits.
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write f64 bits.
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// LEB128 unsigned varint.
+    pub fn varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    /// usize as varint.
+    pub fn usize(&mut self, v: usize) {
+        self.varint(v as u64);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.usize(b.len());
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Length-prefixed slice of u32 (bulk, little-endian).
+    pub fn slice_u32(&mut self, v: &[u32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    /// Length-prefixed slice of u64 varints (good for row indices).
+    pub fn slice_varint(&mut self, v: &[u64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.varint(x);
+        }
+    }
+
+    /// Length-prefixed slice of i64 (bulk).
+    ///
+    /// On little-endian targets this is a single memcpy — the pull path
+    /// moves tens of MB of count rows per iteration, so the per-element
+    /// loop was a measured hot-spot (see EXPERIMENTS.md §Perf).
+    pub fn slice_i64(&mut self, v: &[i64]) {
+        self.usize(v.len());
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: i64 has no padding; reinterpreting as bytes is
+            // always valid, and on LE the byte order is the wire order.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8)
+            };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for &x in v {
+            self.i64(x);
+        }
+    }
+
+    /// Length-prefixed slice of f32 (bulk memcpy on little-endian).
+    pub fn slice_f32(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: f32 has no padding; see slice_i64.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for &x in v {
+            self.f32(x);
+        }
+    }
+}
+
+/// Cursor-based reader over an encoded buffer.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Wrap a byte slice.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when fully consumed.
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Decode(format!(
+                "unexpected end of buffer: need {n}, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read little-endian u32.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read little-endian u64.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read little-endian i64.
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read f32.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read f64.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read LEB128 varint.
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.u8()?;
+            if shift >= 64 {
+                return Err(Error::Decode("varint overflow".into()));
+            }
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    /// usize from varint.
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.varint()? as usize)
+    }
+
+    /// Length-prefixed string.
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.usize()?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|e| Error::Decode(format!("bad utf8: {e}")))
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.usize()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Length-prefixed u32 slice.
+    pub fn slice_u32(&mut self) -> Result<Vec<u32>> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed varint slice.
+    pub fn slice_varint(&mut self) -> Result<Vec<u64>> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.varint()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed i64 slice (bulk memcpy on little-endian).
+    pub fn slice_i64(&mut self) -> Result<Vec<i64>> {
+        let n = self.usize()?;
+        #[cfg(target_endian = "little")]
+        {
+            let raw = self.take(n * 8)?;
+            let mut out: Vec<i64> = Vec::with_capacity(n);
+            // SAFETY: the destination has capacity for n i64s; raw holds
+            // exactly n*8 bytes in wire (LE) order.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 8,
+                );
+                out.set_len(n);
+            }
+            Ok(out)
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                out.push(self.i64()?);
+            }
+            Ok(out)
+        }
+    }
+
+    /// Length-prefixed f32 slice (bulk memcpy on little-endian).
+    pub fn slice_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.usize()?;
+        #[cfg(target_endian = "little")]
+        {
+            let raw = self.take(n * 4)?;
+            let mut out: Vec<f32> = Vec::with_capacity(n);
+            // SAFETY: see slice_i64.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 4,
+                );
+                out.set_len(n);
+            }
+            Ok(out)
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                out.push(self.f32()?);
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_primitives() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xdeadbeef);
+        w.u64(u64::MAX);
+        w.i64(-42);
+        w.f32(3.25);
+        w.f64(-0.125);
+        w.str("héllo");
+        w.bytes(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdeadbeef);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.i64().unwrap(), -42);
+        assert_eq!(r.f32().unwrap(), 3.25);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.bytes().unwrap(), vec![1, 2, 3]);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 1, 127, 128, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            let mut w = Writer::new();
+            w.varint(v);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            assert_eq!(r.varint().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_slices_random() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..50 {
+            let n = rng.below(200);
+            let i64s: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64).collect();
+            let f32s: Vec<f32> = (0..n).map(|_| rng.f32() * 100.0 - 50.0).collect();
+            let idx: Vec<u64> = (0..n).map(|_| rng.next_u64() >> rng.below(64) as u32).collect();
+            let mut w = Writer::new();
+            w.slice_i64(&i64s);
+            w.slice_f32(&f32s);
+            w.slice_varint(&idx);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            assert_eq!(r.slice_i64().unwrap(), i64s);
+            assert_eq!(r.slice_f32().unwrap(), f32s);
+            assert_eq!(r.slice_varint().unwrap(), idx);
+        }
+    }
+
+    #[test]
+    fn truncated_buffer_errors() {
+        let mut w = Writer::new();
+        w.u64(123);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..4]);
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn bad_utf8_errors() {
+        let mut w = Writer::new();
+        w.usize(2);
+        w.u8(0xff);
+        w.u8(0xfe);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.str().is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Convenience alias used throughout the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the library.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O failure (checkpointing, corpus loading, artifact loading).
+    Io(std::io::Error),
+    /// A parameter-server request exhausted its retry budget.
+    PsTimeout {
+        /// Operation that failed, e.g. `"pull"` or `"push-ack"`.
+        op: &'static str,
+        /// Shard the request was routed to.
+        shard: usize,
+        /// Number of attempts made before giving up.
+        attempts: u32,
+    },
+    /// The parameter server rejected a request (bad matrix id, out of
+    /// bounds indices, dtype mismatch).
+    PsRejected(String),
+    /// Malformed data encountered while decoding (messages, checkpoints,
+    /// artifact manifests).
+    Decode(String),
+    /// Configuration error (invalid hyper-parameters, shape mismatch).
+    Config(String),
+    /// XLA/PJRT runtime failure.
+    Xla(String),
+    /// An artifact required by the XLA path is missing from `artifacts/`.
+    MissingArtifact(String),
+    /// Checkpoint is missing or inconsistent.
+    Checkpoint(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::PsTimeout { op, shard, attempts } => write!(
+                f,
+                "parameter server {op} to shard {shard} timed out after {attempts} attempts"
+            ),
+            Error::PsRejected(m) => write!(f, "parameter server rejected request: {m}"),
+            Error::Decode(m) => write!(f, "decode error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::MissingArtifact(m) => write!(
+                f,
+                "missing artifact {m}; run `make artifacts` to AOT-compile the JAX graphs"
+            ),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::PsTimeout { op: "pull", shard: 3, attempts: 7 };
+        assert!(e.to_string().contains("shard 3"));
+        assert!(e.to_string().contains("7 attempts"));
+        let e = Error::MissingArtifact("perplexity".into());
+        assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn io_conversion_preserves_source() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

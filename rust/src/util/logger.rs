@@ -1,0 +1,147 @@
+//! Leveled stderr logging with elapsed-time stamps.
+//!
+//! Intentionally tiny: a global level, `log_info!` / `log_debug!` macros,
+//! and monotonic timestamps relative to process start so training logs
+//! read like the paper's convergence plots (time on the x-axis).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log verbosity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Errors only.
+    Error = 0,
+    /// Warnings.
+    Warn = 1,
+    /// Progress messages (default).
+    Info = 2,
+    /// Per-iteration detail.
+    Debug = 3,
+    /// Message-level detail (very chatty).
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Set the global log level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Set level from a string (error|warn|info|debug|trace).
+pub fn set_level_str(s: &str) {
+    let lvl = match s {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Info,
+    };
+    set_level(lvl);
+}
+
+/// Current global level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Whether a message at `lvl` would be emitted.
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+/// Seconds since the first log call.
+pub fn uptime() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Emit a message (used by the macros; prefer those).
+pub fn emit(lvl: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        let tag = match lvl {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{:>9.3}s {tag}] {args}", uptime());
+    }
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at error level.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+/// Log at trace level.
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logger::emit($crate::util::logger::Level::Trace, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_level_str_parses() {
+        set_level_str("debug");
+        assert_eq!(level(), Level::Debug);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Trace));
+        set_level_str("info");
+        assert_eq!(level(), Level::Info);
+    }
+
+    #[test]
+    fn uptime_monotonic() {
+        let a = uptime();
+        let b = uptime();
+        assert!(b >= a);
+    }
+}

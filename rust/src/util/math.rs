@@ -1,0 +1,165 @@
+//! Special functions for the variational baselines.
+//!
+//! The Spark MLlib baselines (variational EM and Online VB) need `digamma`
+//! and `lgamma`; perplexity needs a stable `logsumexp`. Implementations
+//! follow the standard asymptotic expansions (same approach as Apache
+//! Commons Math, which MLlib itself uses).
+
+/// Digamma ψ(x) via upward recurrence + asymptotic series.
+///
+/// Accurate to ~1e-12 for x > 0; returns NaN for x <= 0 (our callers never
+/// pass non-positive values — concentrations are strictly positive).
+pub fn digamma(mut x: f64) -> f64 {
+    if x <= 0.0 {
+        return f64::NAN;
+    }
+    let mut result = 0.0;
+    // Recurrence: psi(x) = psi(x+1) - 1/x until x is large enough for the
+    // asymptotic expansion.
+    while x < 10.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    // psi(x) ~ ln x - 1/(2x) - 1/(12x^2) + 1/(120x^4) - 1/(252x^6)
+    result += x.ln() - 0.5 * inv
+        - inv2 * (1.0 / 12.0 - inv2 * (1.0 / 120.0 - inv2 / 252.0));
+    result
+}
+
+/// Log-gamma via the Lanczos approximation (g=7, n=9), |err| < 1e-13.
+pub fn lgamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Numerically stable log(sum(exp(xs))).
+pub fn logsumexp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Ordinary least squares fit of `y = a + b*x`; returns `(a, b)`.
+///
+/// Used to fit the Zipf slope in log-log space (paper Fig. 4).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+    }
+    let b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let _ = n;
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digamma_known_values() {
+        // psi(1) = -gamma (Euler–Mascheroni)
+        assert!((digamma(1.0) + 0.5772156649015329).abs() < 1e-10);
+        // psi(0.5) = -gamma - 2 ln 2
+        assert!((digamma(0.5) + 0.5772156649015329 + 2.0 * (2f64).ln()).abs() < 1e-10);
+        // psi(10) from tables
+        assert!((digamma(10.0) - 2.251752589066721).abs() < 1e-10);
+    }
+
+    #[test]
+    fn digamma_recurrence_property() {
+        // psi(x+1) = psi(x) + 1/x
+        for &x in &[0.1, 0.7, 1.3, 5.5, 42.0] {
+            assert!((digamma(x + 1.0) - digamma(x) - 1.0 / x).abs() < 1e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn lgamma_known_values() {
+        assert!((lgamma(1.0)).abs() < 1e-10);
+        assert!((lgamma(2.0)).abs() < 1e-10);
+        // Gamma(5) = 24
+        assert!((lgamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        // Gamma(0.5) = sqrt(pi)
+        assert!((lgamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lgamma_recurrence_property() {
+        // lgamma(x+1) = lgamma(x) + ln x
+        for &x in &[0.3, 1.7, 9.2, 101.5] {
+            assert!((lgamma(x + 1.0) - lgamma(x) - x.ln()).abs() < 1e-9, "x={x}");
+        }
+    }
+
+    #[test]
+    fn logsumexp_stability() {
+        // Would overflow naive exp.
+        let xs = [1000.0, 1000.0];
+        assert!((logsumexp(&xs) - (1000.0 + 2f64.ln())).abs() < 1e-9);
+        let xs = [-1000.0, -1000.0];
+        assert!((logsumexp(&xs) - (-1000.0 + 2f64.ln())).abs() < 1e-9);
+        assert_eq!(logsumexp(&[]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 - 1.5 * x).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b + 1.5).abs() < 1e-9);
+    }
+}

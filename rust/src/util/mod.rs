@@ -1,0 +1,19 @@
+//! Shared substrate utilities.
+//!
+//! Everything in here is dependency-free (std only): a PCG-family random
+//! number generator with distribution samplers, a byte-level codec used by
+//! the message layer and checkpoints, a scoped thread pool, special math
+//! functions needed by the variational baselines, a tiny CLI argument
+//! parser, a top-k heap, a property-testing harness, and logging.
+
+pub mod cli;
+pub mod codec;
+pub mod error;
+pub mod json;
+pub mod logger;
+pub mod math;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+pub mod topk;

@@ -1,0 +1,91 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest`/`quickcheck` are unavailable offline, so this provides the
+//! 10% we need: run a property against many randomly generated cases with
+//! a fixed seed (reproducible), and on failure report the case index and
+//! seed so the case can be replayed.
+//!
+//! ```
+//! use glint_lda::util::proptest::forall;
+//! forall("addition commutes", 1000, |rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     (a, b)
+//! }, |&(a, b)| a + b == b + a);
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Run `prop` against `cases` values drawn by `gen`. Panics with a
+/// replayable seed on the first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base_seed = 0x5eed_0000u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::new(seed);
+        let value = gen(&mut rng);
+        if !prop(&value) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}):\n  input: {value:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so the
+/// failure message can carry detail.
+pub fn forall_explain<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = 0x5eed_1000u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::new(seed);
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}): {msg}\n  input: {value:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("count", 100, |rng| rng.below(10), |_| {
+            true
+        });
+        forall("sum symmetric", 100, |rng| (rng.below(50), rng.below(50)), |&(a, b)| {
+            count += 1;
+            a + b == b + a
+        });
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_case() {
+        forall("always fails", 10, |rng| rng.below(10), |_| false);
+    }
+
+    #[test]
+    #[should_panic(expected = "detail here")]
+    fn explain_carries_message() {
+        forall_explain("explained", 5, |rng| rng.below(10), |_| {
+            Err("detail here".to_string())
+        });
+    }
+}

@@ -1,0 +1,355 @@
+//! Pseudo-random number generation and distribution samplers.
+//!
+//! The crate cannot depend on external crates (offline build), so this
+//! module provides a PCG64 (DXSM) generator plus the samplers the corpus
+//! generator and the Gibbs samplers need: uniform ints/floats, normal
+//! (Ziggurat-free Box–Muller), gamma (Marsaglia–Tsang), Dirichlet,
+//! categorical, and shuffling.
+//!
+//! PCG64-DXSM is the same generator family NumPy uses by default; it is
+//! fast (one 128-bit multiply per draw), has 2^128 period and passes
+//! PractRand.
+
+/// PCG64 DXSM generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_DEFAULT_MULTIPLIER: u128 = 0x2360ed051fc65da44385df649fccf645;
+const PCG_DXSM_MULTIPLIER: u64 = 0xda942042e4dd58b5;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed. Two generators with
+    /// different seeds produce independent-looking streams.
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 to expand the seed into 256 bits of state/stream.
+        let mut sm = SplitMix64::new(seed);
+        let state = ((sm.next() as u128) << 64) | sm.next() as u128;
+        let stream = ((sm.next() as u128) << 64) | sm.next() as u128;
+        let mut rng = Pcg64 { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.state.wrapping_add(state);
+        rng.step();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-worker streams).
+    pub fn fork(&mut self, salt: u64) -> Pcg64 {
+        let s = self.next_u64() ^ salt.wrapping_mul(0x9e3779b97f4a7c15);
+        Pcg64::new(s)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_DEFAULT_MULTIPLIER)
+            .wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output (DXSM output function).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let state = self.state;
+        self.step();
+        let mut hi = (state >> 64) as u64;
+        let lo = (state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(PCG_DXSM_MULTIPLIER);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Next u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` using Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (pair cached is omitted for
+    /// simplicity; gamma sampling dominates our use).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.f64();
+            return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang, with Johnk-style boost for
+    /// shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        debug_assert!(shape > 0.0);
+        if shape < 1.0 {
+            // G(a) = G(a+1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha) sample of dimension `k`, written into
+    /// `out` (overwritten, resized as needed).
+    pub fn dirichlet_sym(&mut self, alpha: f64, k: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(k);
+        let mut sum = 0.0;
+        for _ in 0..k {
+            let g = self.gamma(alpha);
+            sum += g;
+            out.push(g);
+        }
+        if sum <= 0.0 {
+            // Degenerate draw (all gammas underflowed): fall back to uniform.
+            let u = 1.0 / k as f64;
+            for v in out.iter_mut() {
+                *v = u;
+            }
+            return;
+        }
+        let inv = 1.0 / sum;
+        for v in out.iter_mut() {
+            *v *= inv;
+        }
+    }
+
+    /// General Dirichlet with per-component concentrations.
+    pub fn dirichlet(&mut self, alphas: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(alphas.len());
+        let mut sum = 0.0;
+        for &a in alphas {
+            let g = self.gamma(a);
+            sum += g;
+            out.push(g);
+        }
+        let inv = if sum > 0.0 { 1.0 / sum } else { 0.0 };
+        for v in out.iter_mut() {
+            *v *= inv;
+        }
+    }
+
+    /// Draw an index from an unnormalized weight vector in O(n).
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+}
+
+/// SplitMix64 — used only for seed expansion.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create from a seed.
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next 64-bit output.
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Pcg64::new(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[rng.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(11);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Pcg64::new(13);
+        for &shape in &[0.1, 0.5, 1.0, 2.5, 10.0] {
+            let n = 100_000;
+            let mut sum = 0.0;
+            for _ in 0..n {
+                sum += rng.gamma(shape);
+            }
+            let mean = sum / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.05 * shape.max(1.0),
+                "shape {shape} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Pcg64::new(17);
+        let mut out = Vec::new();
+        rng.dirichlet_sym(0.1, 50, &mut out);
+        let s: f64 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(out.iter().all(|&p| p >= 0.0));
+    }
+
+    #[test]
+    fn categorical_matches_weights() {
+        let mut rng = Pcg64::new(19);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..100_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / 100_000.0 - 0.7).abs() < 0.02);
+        assert!((counts[1] as f64 / 100_000.0 - 0.2).abs() < 0.02);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(23);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Pcg64::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

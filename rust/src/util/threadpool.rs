@@ -1,0 +1,211 @@
+//! A small work-stealing-free thread pool plus scoped parallel helpers.
+//!
+//! The trainer ("Spark executors") and the benchmark harnesses need
+//! data-parallel loops; external crates are unavailable, so we provide:
+//!
+//! - [`ThreadPool`] — fixed pool with a shared injector queue, used for
+//!   long-lived background work (pipelined pulls, async push flushes).
+//! - [`parallel_chunks`] — scoped fork-join over chunks of a slice, built
+//!   on `std::thread::scope`, used for the per-partition sampling loops.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    done: Condvar,
+}
+
+/// Fixed-size thread pool with FIFO job dispatch.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` worker threads (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("glint-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job for asynchronous execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(job));
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 || !q.is_empty() {
+            q = self.shared.done.wait(q).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        job();
+        if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Possibly the last job: wake waiters.
+            let _guard = shared.queue.lock().unwrap();
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Run `f(chunk_index, chunk)` over `items` split into `num_chunks`
+/// roughly equal contiguous chunks, one scoped thread per chunk.
+///
+/// Results are returned in chunk order. Panics in workers propagate.
+pub fn parallel_chunks<T: Sync, R: Send>(
+    items: &[T],
+    num_chunks: usize,
+    f: impl Fn(usize, &[T]) -> R + Sync,
+) -> Vec<R> {
+    let num_chunks = num_chunks.max(1).min(items.len().max(1));
+    let chunk_size = items.len().div_ceil(num_chunks);
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = items
+            .chunks(chunk_size.max(1))
+            .enumerate()
+            .map(|(i, chunk)| scope.spawn(move || f(i, chunk)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// Run `f(worker_index)` on `n` scoped threads and collect results.
+pub fn parallel_workers<R: Send>(n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n).map(|i| scope.spawn(move || f(i))).collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_chunks_covers_everything() {
+        let items: Vec<u64> = (0..10_000).collect();
+        let sums = parallel_chunks(&items, 7, |_, chunk| chunk.iter().sum::<u64>());
+        let total: u64 = sums.iter().sum();
+        assert_eq!(total, items.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn parallel_chunks_single_item() {
+        let items = [5u32];
+        let r = parallel_chunks(&items, 16, |_, c| c.len());
+        assert_eq!(r.iter().sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn parallel_chunks_empty() {
+        let items: [u32; 0] = [];
+        let r = parallel_chunks(&items, 4, |_, c| c.len());
+        assert_eq!(r.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn parallel_workers_indexes() {
+        let mut idx = parallel_workers(8, |i| i);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,146 @@
+//! Wall-clock timing helpers for the benchmark harnesses.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed time.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds as f64.
+    pub fn millis(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Restart and return the elapsed time since the previous start.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Measure a closure, returning `(result, seconds)`.
+pub fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let sw = Stopwatch::new();
+    let r = f();
+    (r, sw.secs())
+}
+
+/// Micro-benchmark runner: warms up, then runs `iters` timed iterations
+/// and reports per-iteration statistics. This replaces criterion (not
+/// available offline) for the `benches/` harnesses.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Mean seconds per iteration.
+    pub mean: f64,
+    /// Minimum seconds per iteration.
+    pub min: f64,
+    /// Maximum seconds per iteration.
+    pub max: f64,
+    /// Population standard deviation.
+    pub std_dev: f64,
+    /// Number of timed iterations.
+    pub iters: usize,
+}
+
+impl BenchStats {
+    /// Human-readable one-liner, scaled to convenient units.
+    pub fn summary(&self) -> String {
+        format!(
+            "mean {} (min {}, max {}, sd {}, n={})",
+            fmt_secs(self.mean),
+            fmt_secs(self.min),
+            fmt_secs(self.max),
+            fmt_secs(self.std_dev),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds with an auto-selected unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Run `f` `warmup + iters` times; time the last `iters`.
+pub fn bench<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::new();
+        std::hint::black_box(f());
+        samples.push(sw.secs());
+    }
+    let mean = crate::util::math::mean(&samples);
+    let sd = crate::util::math::std_dev(&samples);
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    BenchStats { mean, min, max, std_dev: sd, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.millis() >= 4.0);
+    }
+
+    #[test]
+    fn bench_collects_stats() {
+        let stats = bench(2, 10, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(stats.iters, 10);
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5e-6).ends_with("µs"));
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Top-k selection with a bounded min-heap.
+//!
+//! Used by `eval::topics` (top words per topic) and the load-balance
+//! figure harness.
+
+use std::collections::BinaryHeap;
+
+/// (score, payload) entry ordered by score (min-heap via Reverse below).
+#[derive(Debug, Clone, PartialEq)]
+struct Entry<T> {
+    score: f64,
+    item: T,
+}
+
+impl<T: PartialEq> Eq for Entry<T> {}
+
+impl<T: PartialEq> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T: PartialEq> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse: BinaryHeap is a max-heap; we want the smallest on top
+        // so it can be evicted.
+        other
+            .score
+            .partial_cmp(&self.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Maintains the `k` highest-scoring items seen.
+#[derive(Debug)]
+pub struct TopK<T> {
+    k: usize,
+    heap: BinaryHeap<Entry<T>>,
+}
+
+impl<T: PartialEq> TopK<T> {
+    /// Create a selector for the top `k` items.
+    pub fn new(k: usize) -> Self {
+        TopK { k, heap: BinaryHeap::with_capacity(k + 1) }
+    }
+
+    /// Offer an item.
+    pub fn push(&mut self, score: f64, item: T) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(Entry { score, item });
+        } else if let Some(min) = self.heap.peek() {
+            if score > min.score {
+                self.heap.pop();
+                self.heap.push(Entry { score, item });
+            }
+        }
+    }
+
+    /// Number of retained items.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no items retained.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Extract items sorted by descending score.
+    pub fn into_sorted(self) -> Vec<(f64, T)> {
+        let mut v: Vec<_> = self.heap.into_iter().map(|e| (e.score, e.item)).collect();
+        v.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn keeps_k_largest() {
+        let mut tk = TopK::new(3);
+        for i in 0..100 {
+            tk.push(i as f64, i);
+        }
+        let out = tk.into_sorted();
+        assert_eq!(out.iter().map(|e| e.1).collect::<Vec<_>>(), vec![99, 98, 97]);
+    }
+
+    #[test]
+    fn fewer_than_k() {
+        let mut tk = TopK::new(10);
+        tk.push(1.0, "a");
+        tk.push(2.0, "b");
+        let out = tk.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1, "b");
+    }
+
+    #[test]
+    fn zero_k() {
+        let mut tk = TopK::new(0);
+        tk.push(1.0, 1);
+        assert!(tk.is_empty());
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Pcg64::new(99);
+        for _ in 0..20 {
+            let n = 500;
+            let scores: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let mut tk = TopK::new(25);
+            for (i, &s) in scores.iter().enumerate() {
+                tk.push(s, i);
+            }
+            let got: Vec<usize> = tk.into_sorted().into_iter().map(|e| e.1).collect();
+            let mut expect: Vec<usize> = (0..n).collect();
+            expect.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            expect.truncate(25);
+            assert_eq!(got, expect);
+        }
+    }
+}

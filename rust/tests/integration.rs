@@ -1,0 +1,200 @@
+//! Cross-module integration tests: parameter server + LightLDA trainer +
+//! baselines + evaluators working together, including under injected
+//! faults. (Per-module unit/property tests live next to their modules.)
+
+use glint_lda::baselines::{em, online};
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::corpus::tokenizer::TokenizerConfig;
+use glint_lda::corpus::vocab::corpus_from_texts;
+use glint_lda::eval::coherence::{mean_umass, DocFreq};
+use glint_lda::eval::perplexity::holdout_perplexity;
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::net::FaultPlan;
+use glint_lda::ps::partition::PartitionScheme;
+
+fn corpus() -> glint_lda::corpus::dataset::Corpus {
+    generate(&SynthConfig {
+        num_docs: 400,
+        vocab_size: 900,
+        num_topics: 8,
+        avg_doc_len: 50.0,
+        seed: 99,
+        ..Default::default()
+    })
+}
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        num_topics: 10,
+        iterations: 10,
+        workers: 3,
+        shards: 4,
+        block_words: 256,
+        buffer_cap: 2000,
+        dense_top_words: 50,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn distributed_beats_uniform_and_matches_holdout() {
+    let c = corpus();
+    let (train, test) = c.split_holdout(5);
+    let mut t = Trainer::new(base_cfg(), &train).unwrap();
+    let model = t.run(&train).unwrap();
+    let train_p = t.training_perplexity(&model, &train);
+    assert!(train_p < train.vocab_size as f64 * 0.7);
+    // Held-out perplexity: finite, worse than training, better than
+    // uniform.
+    let hold_p = holdout_perplexity(&model, &test, 5, 7);
+    assert!(hold_p.is_finite());
+    assert!(hold_p < test.vocab_size as f64);
+}
+
+#[test]
+fn all_three_algorithms_land_in_the_same_perplexity_band() {
+    // The paper's central quality claim (Table 1): roughly equal
+    // perplexity across ours / EM / online on the same data.
+    let c = corpus();
+    let mut t = Trainer::new(TrainConfig { iterations: 15, ..base_cfg() }, &c).unwrap();
+    let ours = {
+        let m = t.run(&c).unwrap();
+        t.training_perplexity(&m, &c)
+    };
+    let em_p = {
+        let m = em::train(
+            &em::EmConfig { num_topics: 10, iterations: 15, workers: 3, ..Default::default() },
+            &c,
+        )
+        .unwrap();
+        m.perplexity(&c)
+    };
+    let online_p = {
+        let m = online::train(
+            &online::OnlineConfig {
+                num_topics: 10,
+                epochs: 3,
+                batch_size: 64,
+                workers: 3,
+                ..Default::default()
+            },
+            &c,
+        )
+        .unwrap();
+        m.perplexity(&c, 3)
+    };
+    let lo = ours.min(em_p).min(online_p);
+    let hi = ours.max(em_p).max(online_p);
+    assert!(
+        hi / lo < 1.5,
+        "perplexities diverged: ours {ours:.1}, em {em_p:.1}, online {online_p:.1}"
+    );
+}
+
+#[test]
+fn training_survives_nasty_network() {
+    let c = corpus();
+    let cfg = TrainConfig {
+        fault: FaultPlan::lossy(0.10, 0.10),
+        iterations: 3,
+        ..base_cfg()
+    };
+    let mut t = Trainer::new(cfg, &c).unwrap();
+    for _ in 0..3 {
+        t.run_iteration().unwrap();
+    }
+    // Exactly-once: server state identical to local assignments.
+    t.verify_counts().unwrap();
+}
+
+#[test]
+fn pipelining_and_buffering_do_not_change_counts() {
+    // Ablations must preserve correctness invariants exactly.
+    let c = corpus();
+    for (pipeline_depth, buffer_cap, dense_top) in
+        [(0usize, 100usize, 0u64), (2, 1_000_000, 900), (3, 7, 10)]
+    {
+        let cfg = TrainConfig {
+            pipeline_depth,
+            buffer_cap,
+            dense_top_words: dense_top,
+            iterations: 2,
+            ..base_cfg()
+        };
+        let mut t = Trainer::new(cfg, &c).unwrap();
+        t.run_iteration().unwrap();
+        t.run_iteration().unwrap();
+        t.verify_counts().unwrap();
+    }
+}
+
+#[test]
+fn range_and_cyclic_schemes_converge_equally() {
+    let c = corpus();
+    let mut perps = Vec::new();
+    for scheme in [PartitionScheme::Cyclic, PartitionScheme::Range] {
+        let cfg = TrainConfig { scheme, iterations: 8, ..base_cfg() };
+        let mut t = Trainer::new(cfg, &c).unwrap();
+        let m = t.run(&c).unwrap();
+        perps.push(t.training_perplexity(&m, &c));
+    }
+    let ratio = perps[0] / perps[1];
+    assert!(
+        (0.9..1.1).contains(&ratio),
+        "schemes should match statistically: {perps:?}"
+    );
+}
+
+#[test]
+fn real_text_pipeline_to_model() {
+    // Tokenize -> stopwords -> stem -> vocab -> train -> coherent topics.
+    let texts: Vec<String> = (0..60)
+        .map(|i| {
+            if i % 2 == 0 {
+                format!(
+                    "Cooking recipe number {i}: spices, meat, flavor and a hot oven. \
+                     The recipe uses spices to season the meat."
+                )
+            } else {
+                format!(
+                    "Match report {i}: the team scored at the stadium and the league \
+                     title race is alive. Fans filled the stadium."
+                )
+            }
+        })
+        .collect();
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let c = corpus_from_texts(&refs, &TokenizerConfig::default(), 2, 5000);
+    assert!(c.is_frequency_ordered());
+    let cfg = TrainConfig {
+        num_topics: 2,
+        iterations: 30,
+        workers: 2,
+        shards: 2,
+        block_words: 32,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, &c).unwrap();
+    let model = t.run(&c).unwrap();
+    // Topic coherence should be far from catastrophic for 2 clean topics.
+    let df = DocFreq::build(&c);
+    let coherence = mean_umass(&model, &df, 5);
+    assert!(coherence > -25.0, "topics incoherent: {coherence}");
+    // The two topics should separate cooking from football vocabulary.
+    let top0 = glint_lda::eval::topics::describe_topic(&model, &c.vocab, 0, 5);
+    let top1 = glint_lda::eval::topics::describe_topic(&model, &c.vocab, 1, 5);
+    assert_ne!(top0, top1);
+}
+
+#[test]
+fn trainer_report_records_curve() {
+    let c = corpus();
+    let cfg = TrainConfig { eval_every: 2, iterations: 6, ..base_cfg() };
+    let mut t = Trainer::new(cfg, &c).unwrap();
+    t.run(&c).unwrap();
+    let rows = t.report.rows();
+    assert_eq!(rows.len(), 6);
+    assert!(rows.iter().filter(|r| r.get("perplexity").is_some()).count() >= 3);
+    let csv = t.report.to_csv();
+    assert!(csv.contains("tokens_per_sec"));
+}

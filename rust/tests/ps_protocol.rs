@@ -1,0 +1,150 @@
+//! Property-style protocol tests for the parameter server under
+//! adversarial fault schedules: the exactly-once push guarantee and
+//! retried-pull correctness are the paper's §2.3/§2.4 claims.
+
+use glint_lda::net::FaultPlan;
+use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
+use glint_lda::ps::config::PsConfig;
+use glint_lda::ps::partition::PartitionScheme;
+use glint_lda::ps::server::ServerGroup;
+use glint_lda::util::rng::Pcg64;
+
+fn setup(shards: usize, plan: FaultPlan, seed: u64) -> (ServerGroup, PsClient) {
+    let cfg = PsConfig {
+        shards,
+        timeout: std::time::Duration::from_millis(20),
+        ..PsConfig::default()
+    };
+    let group = ServerGroup::start(cfg.clone(), plan, seed);
+    let client = PsClient::connect(&group.transport(), cfg);
+    (group, client)
+}
+
+/// Apply a random delta workload through a lossy network and verify the
+/// final server state equals the locally tracked ground truth — for
+/// many random fault schedules.
+#[test]
+fn exactly_once_over_many_fault_schedules() {
+    for case in 0..12 {
+        let mut rng = Pcg64::new(0xf00 + case);
+        let drop = rng.f64() * 0.25;
+        let dup = rng.f64() * 0.15;
+        let shards = 1 + rng.below(5);
+        let plan = FaultPlan::lossy(drop, dup);
+        let (_g, client) = setup(shards, plan, 0xabc + case);
+        let rows = 40u64;
+        let cols = 3u32;
+        let m: BigMatrix<i64> = client.matrix(rows, cols).unwrap();
+        let mut expect = vec![0i64; (rows * cols as u64) as usize];
+        for _ in 0..15 {
+            let n = 1 + rng.below(50);
+            let mut deltas = CoordDeltas::default();
+            for _ in 0..n {
+                let r = rng.below(rows as usize) as u64;
+                let c = rng.below(cols as usize) as u32;
+                let v = rng.below(5) as i64 - 2;
+                deltas.rows.push(r);
+                deltas.cols.push(c);
+                deltas.values.push(v);
+                expect[(r * cols as u64 + c as u64) as usize] += v;
+            }
+            m.push_coords(&deltas).unwrap();
+        }
+        let all: Vec<u64> = (0..rows).collect();
+        let got = m.pull_rows(&all).unwrap();
+        assert_eq!(
+            got, expect,
+            "state diverged under drop={drop:.2} dup={dup:.2} shards={shards} (case {case})"
+        );
+    }
+}
+
+/// Pulls are read-only: arbitrary retries must return consistent data.
+#[test]
+fn pulls_consistent_under_loss() {
+    let (_g, client) = setup(3, FaultPlan::lossy(0.2, 0.2), 0x9);
+    let m: BigMatrix<i64> = client.matrix(20, 2).unwrap();
+    let deltas = CoordDeltas {
+        rows: (0..20).collect(),
+        cols: (0..20).map(|i| (i % 2) as u32).collect(),
+        values: (0..20).map(|i| i as i64).collect(),
+    };
+    m.push_coords(&deltas).unwrap();
+    let all: Vec<u64> = (0..20).collect();
+    let first = m.pull_rows(&all).unwrap();
+    for _ in 0..10 {
+        assert_eq!(m.pull_rows(&all).unwrap(), first);
+    }
+}
+
+/// Concurrent pushers from many threads over a lossy network: total must
+/// still be exact (commutativity + exactly-once).
+#[test]
+fn concurrent_lossy_pushers_are_exact() {
+    let (_g, client) = setup(4, FaultPlan::lossy(0.08, 0.08), 0x77);
+    let m: BigMatrix<i64> = client.matrix(64, 1).unwrap();
+    let threads = 6;
+    let per_thread = 40;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let m = m.clone();
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(t as u64);
+                for _ in 0..per_thread {
+                    let deltas = CoordDeltas {
+                        rows: vec![rng.below(64) as u64],
+                        cols: vec![0],
+                        values: vec![1],
+                    };
+                    m.push_coords(&deltas).unwrap();
+                }
+            });
+        }
+    });
+    let all: Vec<u64> = (0..64).collect();
+    let got = m.pull_rows(&all).unwrap();
+    assert_eq!(got.iter().sum::<i64>(), (threads * per_thread) as i64);
+}
+
+/// Both partitioning schemes route every row to exactly one shard and
+/// survive the same lossy workload.
+#[test]
+fn schemes_equivalent_under_faults() {
+    for scheme in [PartitionScheme::Cyclic, PartitionScheme::Range] {
+        let cfg = PsConfig {
+            shards: 5,
+            scheme,
+            timeout: std::time::Duration::from_millis(20),
+            ..PsConfig::default()
+        };
+        let group = ServerGroup::start(cfg.clone(), FaultPlan::lossy(0.1, 0.1), 0x31);
+        let client = PsClient::connect(&group.transport(), cfg);
+        let m: BigMatrix<i64> = client.matrix(101, 2).unwrap();
+        let deltas = CoordDeltas {
+            rows: (0..101).collect(),
+            cols: vec![1; 101],
+            values: vec![7; 101],
+        };
+        m.push_coords(&deltas).unwrap();
+        let all: Vec<u64> = (0..101).collect();
+        let got = m.pull_rows(&all).unwrap();
+        for r in 0..101usize {
+            assert_eq!(got[r * 2], 0);
+            assert_eq!(got[r * 2 + 1], 7, "row {r} scheme {scheme:?}");
+        }
+    }
+}
+
+/// Shard info reflects reality after uid cleanup (Forget phase).
+#[test]
+fn no_uid_leaks_after_pushes() {
+    let (_g, client) = setup(3, FaultPlan::lossy(0.1, 0.1), 0x55);
+    let m: BigMatrix<i64> = client.matrix(30, 2).unwrap();
+    for i in 0..20 {
+        let deltas = CoordDeltas { rows: vec![i % 30], cols: vec![0], values: vec![1] };
+        m.push_coords(&deltas).unwrap();
+    }
+    let infos = client.shard_infos().unwrap();
+    let pending: u64 = infos.iter().map(|(_, _, _, p)| p).sum();
+    assert_eq!(pending, 0, "all push uids must be forgotten after acks");
+}
