@@ -1,27 +1,82 @@
 //! Parameter-server micro-benchmarks: pull/push throughput vs shard
 //! count and delta batch size, and the cost of the exactly-once
 //! hand-shake under message loss.
+//!
+//! Environment knobs (used by CI):
+//!
+//! - `TRANSPORT=sim|tcp` — run over the in-process simulated transport
+//!   (default) or real TCP loopback listeners;
+//! - `SMOKE=1` — a fast regression path: tiny matrix, few shards, few
+//!   rounds. Finishes in seconds while still exercising the full
+//!   create/push/pull protocol over the selected transport.
 
 use glint_lda::net::FaultPlan;
 use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
-use glint_lda::ps::config::PsConfig;
+use glint_lda::ps::config::{PsConfig, TransportMode};
 use glint_lda::ps::server::ServerGroup;
 use glint_lda::util::rng::Pcg64;
 use glint_lda::util::timer::Stopwatch;
 
-fn setup(shards: usize, plan: FaultPlan) -> (ServerGroup, BigMatrix<i64>) {
-    let cfg = PsConfig::with_shards(shards);
+/// Workload dimensions, scaled down under SMOKE=1.
+struct Dims {
+    rows: u64,
+    cols: u32,
+    shard_counts: &'static [usize],
+    batch_sizes: &'static [usize],
+    pull_sizes: &'static [usize],
+    big_batch: usize,
+    rounds: usize,
+}
+
+const FULL: Dims = Dims {
+    rows: 50_000,
+    cols: 64,
+    shard_counts: &[1, 2, 4, 8, 16, 30],
+    batch_sizes: &[1_000, 10_000, 100_000, 500_000],
+    pull_sizes: &[64, 512, 4096, 16384],
+    big_batch: 100_000,
+    rounds: 10,
+};
+
+const SMOKE: Dims = Dims {
+    rows: 2_000,
+    cols: 16,
+    shard_counts: &[1, 2],
+    batch_sizes: &[500, 5_000],
+    pull_sizes: &[64, 512],
+    big_batch: 5_000,
+    rounds: 2,
+};
+
+fn transport_mode() -> (TransportMode, &'static str) {
+    match std::env::var("TRANSPORT").as_deref() {
+        Ok("tcp") => (TransportMode::TcpLoopback, "tcp"),
+        _ => (TransportMode::Sim, "sim"),
+    }
+}
+
+fn is_smoke() -> bool {
+    std::env::var("SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn setup(
+    dims: &Dims,
+    shards: usize,
+    mode: TransportMode,
+    plan: FaultPlan,
+) -> (ServerGroup, BigMatrix<i64>) {
+    let cfg = PsConfig { transport: mode, ..PsConfig::with_shards(shards) };
     let group = ServerGroup::start(cfg.clone(), plan, 11);
-    let client = PsClient::connect(&group.transport(), cfg);
-    let m = client.matrix::<i64>(50_000, 64).expect("matrix");
+    let client = PsClient::connect(&*group.transport(), cfg);
+    let m = client.matrix::<i64>(dims.rows, dims.cols).expect("matrix");
     (group, m)
 }
 
-fn bench_push(m: &BigMatrix<i64>, batch: usize, rounds: usize) -> f64 {
+fn bench_push(dims: &Dims, m: &BigMatrix<i64>, batch: usize, rounds: usize) -> f64 {
     let mut rng = Pcg64::new(5);
     let deltas = CoordDeltas {
-        rows: (0..batch).map(|_| rng.below(50_000) as u64).collect(),
-        cols: (0..batch).map(|_| rng.below(64) as u32).collect(),
+        rows: (0..batch).map(|_| rng.below(dims.rows as usize) as u64).collect(),
+        cols: (0..batch).map(|_| rng.below(dims.cols as usize) as u32).collect(),
         values: vec![1i64; batch],
     };
     let sw = Stopwatch::new();
@@ -31,9 +86,9 @@ fn bench_push(m: &BigMatrix<i64>, batch: usize, rounds: usize) -> f64 {
     (batch * rounds) as f64 / sw.secs()
 }
 
-fn bench_pull(m: &BigMatrix<i64>, rows: usize, rounds: usize) -> f64 {
+fn bench_pull(dims: &Dims, m: &BigMatrix<i64>, rows: usize, rounds: usize) -> f64 {
     let mut rng = Pcg64::new(6);
-    let ids: Vec<u64> = (0..rows).map(|_| rng.below(50_000) as u64).collect();
+    let ids: Vec<u64> = (0..rows).map(|_| rng.below(dims.rows as usize) as u64).collect();
     let sw = Stopwatch::new();
     for _ in 0..rounds {
         let v = m.pull_rows(&ids).expect("pull");
@@ -43,31 +98,50 @@ fn bench_pull(m: &BigMatrix<i64>, rows: usize, rounds: usize) -> f64 {
 }
 
 fn main() {
-    println!("== push throughput (deltas/s) vs shards, batch=100k ==");
-    for shards in [1, 2, 4, 8, 16, 30] {
-        let (_g, m) = setup(shards, FaultPlan::reliable());
-        let rate = bench_push(&m, 100_000, 10);
+    let (mode, label) = transport_mode();
+    let smoke = is_smoke();
+    let dims = if smoke { &SMOKE } else { &FULL };
+    println!("== ps_throughput: transport={label}, smoke={smoke} ==");
+
+    println!("== push throughput (deltas/s) vs shards, batch={} ==", dims.big_batch);
+    for &shards in dims.shard_counts {
+        let (_g, m) = setup(dims, shards, mode.clone(), FaultPlan::reliable());
+        let rate = bench_push(dims, &m, dims.big_batch, dims.rounds);
         println!("  shards {shards:>3}: {rate:>12.0} deltas/s");
     }
-    println!("== push throughput vs batch size (4 shards) ==");
-    let (_g, m) = setup(4, FaultPlan::reliable());
-    for batch in [1_000, 10_000, 100_000, 500_000] {
-        let rate = bench_push(&m, batch, (1_000_000 / batch).max(2));
+
+    let mid_shards = if smoke { 2 } else { 4 };
+    println!("== push throughput vs batch size ({mid_shards} shards) ==");
+    let (_g, m) = setup(dims, mid_shards, mode.clone(), FaultPlan::reliable());
+    for &batch in dims.batch_sizes {
+        let rate = bench_push(dims, &m, batch, (dims.big_batch * 10 / batch).max(2));
         println!("  batch {batch:>7}: {rate:>12.0} deltas/s");
     }
-    println!("== pull throughput (rows/s, K=64) vs rows per request ==");
-    for rows in [64, 512, 4096, 16384] {
-        let rate = bench_pull(&m, rows, (100_000 / rows).max(2));
+
+    println!(
+        "== pull throughput (rows/s, K={}) vs rows per request ==",
+        dims.cols
+    );
+    for &rows in dims.pull_sizes {
+        let rate = bench_pull(dims, &m, rows, (dims.big_batch / rows).max(2));
         println!("  rows {rows:>6}: {rate:>12.0} rows/s");
     }
-    println!("== exactly-once overhead under loss (4 shards, batch=100k) ==");
-    for (label, plan) in [
-        ("reliable", FaultPlan::reliable()),
-        ("1% loss", FaultPlan::lossy(0.01, 0.0)),
-        ("5% loss", FaultPlan::lossy(0.05, 0.01)),
-    ] {
-        let (_g, m) = setup(4, plan);
-        let rate = bench_push(&m, 100_000, 5);
-        println!("  {label:>9}: {rate:>12.0} deltas/s");
+
+    if mode == TransportMode::Sim {
+        println!(
+            "== exactly-once overhead under loss ({mid_shards} shards, batch={}) ==",
+            dims.big_batch
+        );
+        for (label, plan) in [
+            ("reliable", FaultPlan::reliable()),
+            ("1% loss", FaultPlan::lossy(0.01, 0.0)),
+            ("5% loss", FaultPlan::lossy(0.05, 0.01)),
+        ] {
+            let (_g, m) = setup(dims, mid_shards, mode.clone(), plan);
+            let rate = bench_push(dims, &m, dims.big_batch, dims.rounds.min(5));
+            println!("  {label:>9}: {rate:>12.0} deltas/s");
+        }
+    } else {
+        println!("== fault-injection section skipped (sim-only) ==");
     }
 }

@@ -24,7 +24,7 @@
 //! tables from the latest checkpoint.
 
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::corpus::dataset::Corpus;
 use crate::eval::perplexity::{log_likelihood, perplexity_from_loglik, TopicModel};
@@ -36,9 +36,10 @@ use crate::lda::pipeline::{word_blocks, PullPipeline};
 use crate::lda::sparse_counts::DocTopicCounts;
 use crate::log_info;
 use crate::metrics::{Report, Row};
-use crate::net::FaultPlan;
+use crate::net::tcp::{resolve_addrs, TcpTransport};
+use crate::net::{FaultPlan, Transport};
 use crate::ps::client::{BigMatrix, BigVector, CoordDeltas, PsClient};
-use crate::ps::config::PsConfig;
+use crate::ps::config::{PsConfig, TransportMode};
 use crate::ps::partition::PartitionScheme;
 use crate::ps::server::ServerGroup;
 use crate::util::error::{Error, Result};
@@ -75,7 +76,12 @@ pub struct TrainConfig {
     pub pipeline_depth: usize,
     /// Row partitioning scheme on the servers (paper: cyclic).
     pub scheme: PartitionScheme,
-    /// Simulated network faults.
+    /// Transport between trainer and parameter servers. `Sim` and
+    /// `TcpLoopback` start the servers in-process; `Connect` attaches to
+    /// externally running `serve` processes (and overrides `shards` with
+    /// the address count).
+    pub transport: TransportMode,
+    /// Simulated network faults (ignored by the TCP transports).
     pub fault: FaultPlan,
     /// RNG seed.
     pub seed: u64,
@@ -100,6 +106,7 @@ impl Default for TrainConfig {
             dense_top_words: 2000,
             pipeline_depth: 1,
             scheme: PartitionScheme::Cyclic,
+            transport: TransportMode::Sim,
             fault: FaultPlan::reliable(),
             seed: 0x1da,
             eval_every: 0,
@@ -134,6 +141,53 @@ struct WorkerState {
     rng: Pcg64,
 }
 
+/// Bring up (or connect to) the parameter servers for a training run.
+///
+/// `Sim`/`TcpLoopback` start an in-process [`ServerGroup`]; `Connect`
+/// attaches to externally running `serve` processes, one shard per
+/// address (the address count wins over `cfg.shards`).
+fn start_parameter_servers(
+    cfg: &TrainConfig,
+) -> Result<(Option<ServerGroup>, Arc<dyn Transport>, PsClient)> {
+    match &cfg.transport {
+        TransportMode::Connect(addrs) => {
+            let resolved = resolve_addrs(addrs)?;
+            if cfg.shards != resolved.len() {
+                log_info!(
+                    "using {} shards (one per --connect address; configured {})",
+                    resolved.len(),
+                    cfg.shards
+                );
+            }
+            let ps_cfg = PsConfig {
+                shards: resolved.len(),
+                scheme: cfg.scheme,
+                transport: cfg.transport.clone(),
+                ..PsConfig::default()
+            };
+            let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
+            let client = PsClient::connect(&*transport, ps_cfg);
+            // A shard-count / scheme / address-order mismatch against the
+            // serve processes would silently route rows to wrong slots;
+            // fail loudly before any state is created.
+            client.validate_deployment()?;
+            Ok((None, transport, client))
+        }
+        _ => {
+            let ps_cfg = PsConfig {
+                shards: cfg.shards,
+                scheme: cfg.scheme,
+                transport: cfg.transport.clone(),
+                ..PsConfig::default()
+            };
+            let group = ServerGroup::start(ps_cfg.clone(), cfg.fault.clone(), cfg.seed ^ 0x9d);
+            let transport = group.transport();
+            let client = PsClient::connect(&*transport, ps_cfg);
+            Ok((Some(group), transport, client))
+        }
+    }
+}
+
 /// Counters published by one training iteration.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct IterStats {
@@ -151,7 +205,10 @@ pub struct IterStats {
 pub struct Trainer {
     cfg: TrainConfig,
     hyper: LdaHyper,
-    group: ServerGroup,
+    /// In-process server group (`None` when connected to external
+    /// `serve` processes).
+    group: Option<ServerGroup>,
+    transport: Arc<dyn Transport>,
     client: PsClient,
     n_wk: BigMatrix<i64>,
     n_k: BigVector<i64>,
@@ -171,13 +228,7 @@ impl Trainer {
         if corpus.num_docs() == 0 {
             return Err(Error::Config("empty corpus".into()));
         }
-        let ps_cfg = PsConfig {
-            shards: cfg.shards,
-            scheme: cfg.scheme,
-            ..PsConfig::default()
-        };
-        let group = ServerGroup::start(ps_cfg.clone(), cfg.fault.clone(), cfg.seed ^ 0x9d);
-        let client = PsClient::connect(&group.transport(), ps_cfg);
+        let (group, transport, client) = start_parameter_servers(&cfg)?;
         let n_wk: BigMatrix<i64> =
             client.matrix(corpus.vocab_size as u64, cfg.num_topics)?;
         let n_k: BigVector<i64> = client.vector(cfg.num_topics as u64)?;
@@ -185,6 +236,7 @@ impl Trainer {
         let mut trainer = Trainer {
             hyper: cfg.hyper(),
             group,
+            transport,
             client,
             n_wk,
             n_k,
@@ -230,9 +282,7 @@ impl Trainer {
             }
         }
 
-        let ps_cfg = PsConfig { shards: cfg.shards, scheme: cfg.scheme, ..PsConfig::default() };
-        let group = ServerGroup::start(ps_cfg.clone(), cfg.fault.clone(), cfg.seed ^ 0x9d);
-        let client = PsClient::connect(&group.transport(), ps_cfg);
+        let (group, transport, client) = start_parameter_servers(&cfg)?;
         let n_wk: BigMatrix<i64> = client.matrix(corpus.vocab_size as u64, cfg.num_topics)?;
         let n_k: BigVector<i64> = client.vector(cfg.num_topics as u64)?;
         let completed = ckpt.iteration;
@@ -241,6 +291,7 @@ impl Trainer {
         let mut trainer = Trainer {
             hyper: cfg.hyper(),
             group,
+            transport,
             client,
             n_wk,
             n_k,
@@ -276,6 +327,12 @@ impl Trainer {
     /// Iterations completed so far (nonzero after restore).
     pub fn completed_iterations(&self) -> u32 {
         self.completed_iterations
+    }
+
+    /// The in-process server group, when this trainer started one
+    /// (`None` when attached to external `serve` processes).
+    pub fn server_group(&self) -> Option<&ServerGroup> {
+        self.group.as_ref()
     }
 
     fn build_workers(
@@ -489,12 +546,18 @@ impl Trainer {
     /// Aggregate network statistics from the transport (bytes, requests,
     /// per-shard load) — powers the Fig. 5 measurement.
     pub fn shard_request_counts(&self) -> Vec<u64> {
-        self.group.transport().stats().iter().map(|s| s.requests()).collect()
+        self.transport.stats().iter().map(|s| s.requests()).collect()
     }
 
     /// Total bytes sent to the parameter servers so far.
     pub fn bytes_pushed(&self) -> u64 {
-        self.group.transport().stats().iter().map(|s| s.bytes_sent()).sum()
+        self.transport.stats().iter().map(|s| s.bytes_sent()).sum()
+    }
+
+    /// Tell externally started `serve` processes to exit (no-op concern
+    /// for in-process groups, which shut down when the trainer drops).
+    pub fn shutdown_servers(&self) -> Result<()> {
+        self.client.shutdown_servers()
     }
 
     /// Consistency check for tests: the parameter-server tables must

@@ -8,8 +8,10 @@
 //! - [`ps`] — **Glint**, an asynchronous parameter server: distributed
 //!   matrices/vectors with `pull`/`push`, cyclic row partitioning,
 //!   retrying pulls with exponential back-off and an *exactly-once*
-//!   hand-shake protocol for pushes, running over a fault-injectable
-//!   message transport ([`net`]).
+//!   hand-shake protocol for pushes, running over pluggable at-most-once
+//!   transports ([`net`]): an in-process fault-injectable simulator and
+//!   a real TCP backend (length-prefixed frames, `serve`/`--connect`
+//!   multi-process deployments).
 //! - [`lda`] — a distributed **LightLDA** sampler (Metropolis–Hastings
 //!   collapsed Gibbs with amortized O(1) per-token complexity) built on
 //!   the parameter server, with push buffering, pipelined model pulls and

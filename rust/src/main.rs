@@ -3,6 +3,11 @@
 //! Subcommands:
 //!
 //! - `train`      — distributed LightLDA over the parameter server
+//!   (in-process by default; `--transport tcp` for loopback TCP;
+//!   `--connect host:port,...` to use external `serve` processes)
+//! - `serve`      — host parameter-server shards over TCP for
+//!   multi-process deployments
+//! - `shutdown`   — stop external `serve` processes
 //! - `em`         — Spark-MLlib-style variational EM baseline
 //! - `online`     — Spark-MLlib-style Online VB baseline
 //! - `gen-corpus` — generate + save a synthetic ClueWeb12 analogue
@@ -19,7 +24,11 @@ use glint_lda::eval::topics::summarize;
 use glint_lda::experiments::{fig4, fig5, fig6, table1};
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
 use glint_lda::log_info;
+use glint_lda::net::tcp::{resolve_addrs, TcpTransport};
+use glint_lda::ps::client::PsClient;
+use glint_lda::ps::config::{PsConfig, TransportMode};
 use glint_lda::ps::partition::PartitionScheme;
+use glint_lda::ps::server::TcpShardServer;
 use glint_lda::util::cli::Args;
 use glint_lda::util::error::{Error, Result};
 use glint_lda::util::logger;
@@ -46,6 +55,8 @@ fn main() {
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("train") => cmd_train(args),
+        Some("serve") => cmd_serve(args),
+        Some("shutdown") => cmd_shutdown(args),
         Some("em") => cmd_em(args),
         Some("online") => cmd_online(args),
         Some("gen-corpus") => cmd_gen_corpus(args),
@@ -59,7 +70,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!(
                 "glint-lda — web-scale topic models with an asynchronous parameter server\n\
                  \n\
-                 usage: glint-lda <train|em|online|gen-corpus|eval|table1|fig4|fig5|fig6> [--opt value]...\n\
+                 usage: glint-lda <train|serve|shutdown|em|online|gen-corpus|eval|table1|fig4|fig5|fig6> [--opt value]...\n\
                  \n\
                  common options:\n\
                  --topics N      number of topics (default 20/100 depending on command)\n\
@@ -70,7 +81,20 @@ fn dispatch(args: &Args) -> Result<()> {
                  --docs N        synthetic corpus size (default 8000)\n\
                  --vocab N       synthetic vocabulary size (default 8000)\n\
                  --out PATH      write the report CSV here\n\
-                 --log LEVEL     error|warn|info|debug|trace"
+                 --log LEVEL     error|warn|info|debug|trace\n\
+                 \n\
+                 transports (train):\n\
+                 --transport T   sim (in-process, default) | tcp (loopback TCP)\n\
+                 --connect LIST  host:port,... of running `serve` shards\n\
+                 --shutdown      stop the connected `serve` shards after training\n\
+                 \n\
+                 serve options:\n\
+                 --bind LIST     host:port,... to listen on, one per hosted shard\n\
+                 --first-shard N global id of the first hosted shard (default 0)\n\
+                 --shards N      total shards in the deployment (default: hosted count)\n\
+                 \n\
+                 shutdown options:\n\
+                 --connect LIST  host:port,... of the shards to stop"
             );
             Ok(())
         }
@@ -99,6 +123,24 @@ fn load_or_generate(args: &Args) -> Result<Corpus> {
     Ok(generate(&cfg))
 }
 
+/// Split a `host:port,host:port` list into its entries.
+fn split_addr_list(raw: &str) -> Vec<String> {
+    raw.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+}
+
+/// Transport selection for `train`: `--connect` wins over `--transport`.
+fn transport_mode(args: &Args) -> Result<TransportMode> {
+    if let Some(list) = args.get("connect") {
+        let addrs = split_addr_list(list);
+        if addrs.is_empty() {
+            return Err(Error::Config("--connect needs at least one host:port".into()));
+        }
+        return Ok(TransportMode::Connect(addrs));
+    }
+    TransportMode::parse(&args.str_or("transport", "sim"))
+        .ok_or_else(|| Error::Config("bad --transport (sim|tcp)".into()))
+}
+
 fn train_config(args: &Args) -> Result<TrainConfig> {
     Ok(TrainConfig {
         num_topics: args.get_as("topics", 20u32)?,
@@ -114,6 +156,7 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
         pipeline_depth: args.get_as("pipeline-depth", 1usize)?,
         scheme: PartitionScheme::parse(&args.str_or("scheme", "cyclic"))
             .ok_or_else(|| Error::Config("bad --scheme (cyclic|range)".into()))?,
+        transport: transport_mode(args)?,
         seed: args.get_as("seed", 0x1dau64)?,
         eval_every: args.get_as("eval-every", 5u32)?,
         checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
@@ -146,7 +189,62 @@ fn cmd_train(args: &Args) -> Result<()> {
     {
         println!("{line}");
     }
-    maybe_save(args, trainer.report.to_csv())
+    maybe_save(args, trainer.report.to_csv())?;
+    if args.flag("shutdown") {
+        // Best-effort: a lost shutdown ack must not fail a training run
+        // that already succeeded.
+        match trainer.shutdown_servers() {
+            Ok(()) => log_info!("shard servers stopped"),
+            Err(e) => glint_lda::log_warn!("shard shutdown incomplete: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Host parameter-server shards over TCP (the server half of a
+/// multi-process deployment). Blocks until every hosted shard receives a
+/// `shutdown` request.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let binds = split_addr_list(&args.str_or("bind", "127.0.0.1:0"));
+    let addrs = resolve_addrs(&binds)?;
+    let first_shard = args.get_as("first-shard", 0usize)?;
+    let total = match args.get_as("shards", 0usize)? {
+        0 => first_shard + addrs.len(),
+        n => n,
+    };
+    let cfg = PsConfig {
+        shards: total,
+        scheme: PartitionScheme::parse(&args.str_or("scheme", "cyclic"))
+            .ok_or_else(|| Error::Config("bad --scheme (cyclic|range)".into()))?,
+        ..PsConfig::default()
+    };
+    let server = TcpShardServer::bind(cfg, first_shard, &addrs)?;
+    for (i, addr) in server.addrs().iter().enumerate() {
+        log_info!("shard {}/{} listening on {addr}", first_shard + i, total);
+    }
+    log_info!("serving; stop with `glint-lda shutdown --connect <addrs>`");
+    server.join();
+    log_info!("all hosted shards shut down");
+    Ok(())
+}
+
+/// Stop externally running `serve` shards.
+fn cmd_shutdown(args: &Args) -> Result<()> {
+    let list = args
+        .get("connect")
+        .ok_or_else(|| Error::Config("missing required option --connect".into()))?;
+    let addrs = split_addr_list(list);
+    let resolved = resolve_addrs(&addrs)?;
+    let cfg = PsConfig {
+        shards: resolved.len(),
+        transport: TransportMode::Connect(addrs),
+        ..PsConfig::default()
+    };
+    let transport = TcpTransport::connect(&resolved);
+    let client = PsClient::connect(&transport, cfg);
+    client.shutdown_servers()?;
+    log_info!("{} shard(s) stopped", resolved.len());
+    Ok(())
 }
 
 fn cmd_em(args: &Args) -> Result<()> {

@@ -1,0 +1,174 @@
+//! Length-prefixed framing for byte-stream transports.
+//!
+//! Every message on a TCP connection is one frame: a 4-byte little-endian
+//! payload length followed by the payload bytes. The length prefix is
+//! bounded by [`MAX_FRAME_LEN`] so a corrupt or hostile prefix cannot
+//! trigger an unbounded allocation; the paper's largest messages (~2 MB
+//! push buffers, §3.3) fit with two orders of magnitude to spare.
+
+use std::io::{self, Read, Write};
+
+/// Maximum accepted frame payload (64 MiB).
+pub const MAX_FRAME_LEN: usize = 64 * 1024 * 1024;
+
+/// Write one `length + payload` frame and flush the stream.
+///
+/// Header and payload go out as one buffer: the transports set
+/// `TCP_NODELAY`, so separate writes would put the 4-byte header in its
+/// own segment on every message.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {} bytes exceeds MAX_FRAME_LEN", payload.len()),
+        ));
+    }
+    let mut buf = Vec::with_capacity(4 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Read one frame. Returns `Ok(None)` on a clean EOF at a frame boundary
+/// (the peer closed the connection); errors on EOF inside a frame, on an
+/// oversized length prefix, and on any underlying I/O error (including
+/// read timeouts).
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    if !read_header(r, &mut header)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length prefix {len} exceeds MAX_FRAME_LEN"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Fill the 4-byte header, tolerating partial reads. `Ok(false)` when the
+/// stream is already at EOF; an error when EOF lands mid-header.
+fn read_header<R: Read>(r: &mut R, header: &mut [u8; 4]) -> io::Result<bool> {
+    let mut filled = 0;
+    while filled < header.len() {
+        match r.read(&mut header[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(false)
+                } else {
+                    Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed inside a frame header",
+                    ))
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// A reader that hands out at most one byte per `read` call, to
+    /// exercise the partial-read paths.
+    struct OneByteReader<R> {
+        inner: R,
+    }
+
+    impl<R: Read> Read for OneByteReader<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            let n = buf.len().min(1);
+            self.inner.read(&mut buf[..n])
+        }
+    }
+
+    #[test]
+    fn roundtrip_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[7u8; 1000]).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), vec![7u8; 1000]);
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn partial_reads_reassemble() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"byte at a time").unwrap();
+        let mut r = OneByteReader { inner: Cursor::new(buf) };
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"byte at a time");
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_LEN as u32 + 1).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn oversized_payload_refused_on_write() {
+        // Don't allocate 64 MiB in a unit test: the length check runs
+        // before any byte is written, so a sink that errors is enough to
+        // prove the order.
+        struct NoWrite;
+        impl Write for NoWrite {
+            fn write(&mut self, _: &[u8]) -> io::Result<usize> {
+                panic!("oversized frame must be rejected before writing");
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let payload = vec![0u8; MAX_FRAME_LEN + 1];
+        let err = write_frame(&mut NoWrite, &payload).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn eof_inside_header_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        buf.truncate(2); // half a header
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn eof_inside_payload_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        buf.truncate(6); // header + 2 of 6 payload bytes
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn max_len_boundary_accepted() {
+        // A frame of exactly MAX_FRAME_LEN must pass the length check;
+        // use the prefix alone plus a short read to avoid the allocation
+        // cost of a real max-size payload... which read_exact then fails
+        // on, proving the prefix itself was accepted.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_LEN as u32).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+}

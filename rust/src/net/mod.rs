@@ -1,19 +1,30 @@
-//! Simulated message transport with fault injection.
+//! Message transports connecting parameter-server clients to shards.
 //!
 //! The paper's parameter server runs on Akka, whose delivery guarantee is
 //! **at-most-once**: a message may be lost, and the sender cannot tell a
 //! lost message from a slow one. All of Glint's protocol machinery
 //! (retrying pulls with exponential back-off, the exactly-once push
-//! hand-shake) exists *because* of this semantics, so the reproduction
-//! models it explicitly: [`SimTransport`] delivers encoded request bytes
-//! to shard inboxes and can be configured to drop requests, drop replies,
-//! duplicate deliveries, and add latency.
+//! hand-shake) exists *because* of this semantics, so every transport
+//! here exposes the same contract through the [`Transport`] trait:
+//!
+//! - [`SimTransport`] — in-process delivery to shard inboxes with
+//!   configurable fault injection ([`FaultPlan`]): dropped requests,
+//!   dropped replies, duplicated deliveries, added latency. The protocol
+//!   test bed.
+//! - [`tcp::TcpTransport`] — real TCP with length-prefixed frames
+//!   ([`frame`]), pooled client connections and reconnect-on-error. The
+//!   multi-process deployment path; here the *network itself* supplies
+//!   the at-most-once behavior (timeouts, dead peers, dropped
+//!   connections).
 //!
 //! Requests and replies are fully serialized through [`crate::util::codec`]
-//! so that measured message *sizes* are faithful (the paper reasons about
-//! ~2 MB push messages and shuffle-write volumes).
+//! in both cases, so measured message *sizes* are faithful (the paper
+//! reasons about ~2 MB push messages and shuffle-write volumes) and the
+//! two transports are wire-compatible.
 
+pub mod frame;
 pub mod stats;
+pub mod tcp;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -76,45 +87,83 @@ impl FaultPlan {
             latency: Duration::ZERO,
         }
     }
+
+    /// True when this plan injects no faults and no latency.
+    pub fn is_reliable(&self) -> bool {
+        self.drop_request == 0.0
+            && self.drop_reply == 0.0
+            && self.duplicate == 0.0
+            && self.latency.is_zero()
+    }
 }
 
-/// Sending half of a connection to one endpoint (shard).
+/// A client's view of one shard: `n` shard endpoints plus per-endpoint
+/// traffic counters. Implemented by [`SimTransport`] (in-process, fault
+/// injectable) and [`tcp::TcpTransport`] (real sockets).
+pub trait Transport: Send + Sync {
+    /// Number of shard endpoints.
+    fn shards(&self) -> usize;
+
+    /// Handle to one shard's endpoint.
+    fn endpoint(&self, shard: usize) -> Endpoint;
+
+    /// Per-endpoint stats handles (request counts, bytes, faults).
+    fn stats(&self) -> Vec<Arc<EndpointStats>>;
+
+    /// All endpoints, in shard order.
+    fn endpoints(&self) -> Vec<Endpoint> {
+        (0..self.shards()).map(|s| self.endpoint(s)).collect()
+    }
+}
+
+/// Sending half of a connection to one endpoint (shard), over whichever
+/// backend the transport uses.
 #[derive(Clone)]
 pub struct Endpoint {
-    tx: mpsc::Sender<Envelope>,
-    plan: Arc<FaultPlan>,
-    seed: Arc<AtomicU64>,
+    inner: EndpointInner,
     /// Delivery/traffic counters for this endpoint.
     pub stats: Arc<EndpointStats>,
 }
 
-impl Endpoint {
-    /// Fire a request and return a receiver for the reply.
-    ///
-    /// At-most-once semantics: the request or its reply may be dropped
-    /// according to the fault plan; the caller observes only a timeout.
-    pub fn send(&self, payload: Vec<u8>) -> Receiver<Vec<u8>> {
+#[derive(Clone)]
+enum EndpointInner {
+    Sim(SimEndpoint),
+    Tcp(tcp::TcpEndpoint),
+}
+
+/// Simulated backend: an in-process channel plus the fault plan.
+#[derive(Clone)]
+struct SimEndpoint {
+    tx: mpsc::Sender<Envelope>,
+    plan: Arc<FaultPlan>,
+    seed: Arc<AtomicU64>,
+}
+
+impl SimEndpoint {
+    /// Deliver a request according to the fault plan; returns a receiver
+    /// for the reply (which may never arrive).
+    fn send(&self, payload: Vec<u8>, stats: &EndpointStats) -> Receiver<Vec<u8>> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(2);
         let mut rng = self.fork_rng();
-        self.stats.record_request(payload.len());
+        stats.record_request(payload.len());
 
         if !self.plan.latency.is_zero() {
             std::thread::sleep(self.plan.latency);
         }
         if rng.bernoulli(self.plan.drop_request) {
-            self.stats.record_dropped_request();
+            stats.record_dropped_request();
             return reply_rx; // envelope never delivered
         }
         let duplicate = rng.bernoulli(self.plan.duplicate);
         let reply = if rng.bernoulli(self.plan.drop_reply) {
-            self.stats.record_dropped_reply();
+            stats.record_dropped_reply();
             None
         } else {
             Some(reply_tx)
         };
         let _ = self.tx.send(Envelope { payload: payload.clone(), reply });
         if duplicate {
-            self.stats.record_duplicate();
+            stats.record_duplicate();
             // The duplicate's reply channel is a dead end; the client
             // consumes at most one response anyway.
             let _ = self.tx.send(Envelope { payload, reply: None });
@@ -122,18 +171,44 @@ impl Endpoint {
         reply_rx
     }
 
+    fn fork_rng(&self) -> Pcg64 {
+        // Each send gets a fresh deterministic stream: fault decisions are
+        // reproducible for a given transport seed and send ordering.
+        let n = self.seed.fetch_add(1, Ordering::Relaxed);
+        Pcg64::new(n ^ 0xfa_175)
+    }
+}
+
+impl Endpoint {
     /// Send and wait for a reply with a timeout. `Ok(bytes)` on success,
     /// `Err(())` on timeout / lost message.
     pub fn request(&self, payload: Vec<u8>, timeout: Duration) -> Result<Vec<u8>, ()> {
-        let rx = self.send(payload);
-        match rx.recv_timeout(timeout) {
-            Ok(bytes) => {
-                self.stats.record_reply(bytes.len());
-                Ok(bytes)
+        match &self.inner {
+            EndpointInner::Sim(sim) => {
+                let rx = sim.send(payload, &self.stats);
+                match rx.recv_timeout(timeout) {
+                    Ok(bytes) => {
+                        self.stats.record_reply(bytes.len());
+                        Ok(bytes)
+                    }
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                        self.stats.record_timeout();
+                        Err(())
+                    }
+                }
             }
-            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                self.stats.record_timeout();
-                Err(())
+            EndpointInner::Tcp(ep) => {
+                self.stats.record_request(payload.len());
+                match ep.roundtrip(&payload, timeout) {
+                    Ok(bytes) => {
+                        self.stats.record_reply(bytes.len());
+                        Ok(bytes)
+                    }
+                    Err(()) => {
+                        self.stats.record_timeout();
+                        Err(())
+                    }
+                }
             }
         }
     }
@@ -142,18 +217,18 @@ impl Endpoint {
     /// shutdown — modeling an operator channel, not the data path).
     /// Returns `Err(())` if the endpoint's server has already exited.
     pub fn send_reliable(&self, payload: Vec<u8>, timeout: Duration) -> Result<Vec<u8>, ()> {
-        let (reply_tx, reply_rx) = mpsc::sync_channel(2);
-        if self.tx.send(Envelope { payload, reply: Some(reply_tx) }).is_err() {
-            return Err(());
+        match &self.inner {
+            EndpointInner::Sim(sim) => {
+                let (reply_tx, reply_rx) = mpsc::sync_channel(2);
+                if sim.tx.send(Envelope { payload, reply: Some(reply_tx) }).is_err() {
+                    return Err(());
+                }
+                reply_rx.recv_timeout(timeout).map_err(|_| ())
+            }
+            // TCP has no fault injection to bypass; an ordinary
+            // round-trip (uncounted — operator traffic) is the same.
+            EndpointInner::Tcp(ep) => ep.roundtrip(&payload, timeout),
         }
-        reply_rx.recv_timeout(timeout).map_err(|_| ())
-    }
-
-    fn fork_rng(&self) -> Pcg64 {
-        // Each send gets a fresh deterministic stream: fault decisions are
-        // reproducible for a given transport seed and send ordering.
-        let n = self.seed.fetch_add(1, Ordering::Relaxed);
-        Pcg64::new(n ^ 0xfa_175)
     }
 }
 
@@ -199,35 +274,31 @@ impl SimTransport {
         for s in 0..shards {
             let (tx, rx) = mpsc::channel();
             endpoints.push(Endpoint {
-                tx,
-                plan: Arc::clone(&plan),
-                seed: Arc::new(AtomicU64::new(
-                    seed.wrapping_mul(0x9e37_79b9).wrapping_add(s as u64) << 20,
-                )),
+                inner: EndpointInner::Sim(SimEndpoint {
+                    tx,
+                    plan: Arc::clone(&plan),
+                    seed: Arc::new(AtomicU64::new(
+                        seed.wrapping_mul(0x9e37_79b9).wrapping_add(s as u64) << 20,
+                    )),
+                }),
                 stats: Arc::new(EndpointStats::default()),
             });
             inboxes.push(Inbox { rx });
         }
         (SimTransport { endpoints }, inboxes)
     }
+}
 
-    /// Number of endpoints (shards).
-    pub fn shards(&self) -> usize {
+impl Transport for SimTransport {
+    fn shards(&self) -> usize {
         self.endpoints.len()
     }
 
-    /// Handle to one endpoint.
-    pub fn endpoint(&self, shard: usize) -> Endpoint {
+    fn endpoint(&self, shard: usize) -> Endpoint {
         self.endpoints[shard].clone()
     }
 
-    /// All endpoints.
-    pub fn endpoints(&self) -> Vec<Endpoint> {
-        self.endpoints.clone()
-    }
-
-    /// Per-endpoint stats handles (request counts, bytes, faults).
-    pub fn stats(&self) -> Vec<Arc<EndpointStats>> {
+    fn stats(&self) -> Vec<Arc<EndpointStats>> {
         self.endpoints.iter().map(|e| Arc::clone(&e.stats)).collect()
     }
 }
@@ -326,5 +397,13 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), 1);
         }
+    }
+
+    #[test]
+    fn fault_plan_reliability_check() {
+        assert!(FaultPlan::reliable().is_reliable());
+        assert!(!FaultPlan::lossy(0.1, 0.0).is_reliable());
+        assert!(!FaultPlan { latency: Duration::from_millis(1), ..FaultPlan::default() }
+            .is_reliable());
     }
 }

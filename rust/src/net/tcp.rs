@@ -1,0 +1,440 @@
+//! Real TCP transport: length-prefixed frames over `std::net`.
+//!
+//! The client side ([`TcpTransport`]) keeps a small pool of reusable
+//! connections per shard endpoint and dials a fresh connection whenever
+//! the pool is empty or a round-trip fails. The server side
+//! ([`TcpServer`]) runs one listener per hosted shard with one handler
+//! thread per accepted connection; handlers forward decoded frames into
+//! the shard's [`Inbox`], so the single-threaded serve loop of
+//! [`crate::ps::server`] is shared verbatim with the simulated transport.
+//!
+//! Delivery semantics are the same **at-most-once** contract the
+//! simulated transport models: any dial/write/read failure or timeout is
+//! reported as a lost message (`Err(())`), the connection is discarded
+//! (a late reply must never desynchronize the framing), and the
+//! retry/exactly-once machinery in `ps/client.rs` takes over unchanged.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::error::{Error, Result};
+
+use super::frame::{read_frame, write_frame};
+use super::stats::EndpointStats;
+use super::{Endpoint, EndpointInner, Envelope, Inbox, Transport};
+
+/// Idle connections kept per endpoint for reuse.
+const POOL_CAP: usize = 16;
+/// Dial timeout for new connections (further clamped to the request
+/// timeout).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+/// How long a server-side connection handler waits for the shard's reply
+/// before abandoning the connection.
+const HANDLER_REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+/// Polling interval of the nonblocking accept loops.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Client half of one shard connection: an address plus a pool of
+/// reusable streams. Cheap to clone; clones share the pool.
+#[derive(Clone)]
+pub(crate) struct TcpEndpoint {
+    addr: SocketAddr,
+    pool: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl TcpEndpoint {
+    pub(crate) fn new(addr: SocketAddr) -> TcpEndpoint {
+        TcpEndpoint { addr, pool: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    fn checkout(&self) -> Option<TcpStream> {
+        self.pool.lock().unwrap().pop()
+    }
+
+    fn checkin(&self, stream: TcpStream) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(stream);
+        }
+    }
+
+    /// One request/reply round-trip bounded by `timeout` as a whole-call
+    /// deadline. Reuses a pooled connection when one is idle, dials
+    /// otherwise; reconnects (via the caller's retry) on any error.
+    pub(crate) fn roundtrip(
+        &self,
+        payload: &[u8],
+        timeout: Duration,
+    ) -> std::result::Result<Vec<u8>, ()> {
+        // Duration::ZERO means "no timeout" to the socket API; never pass
+        // it through.
+        let timeout = timeout.max(Duration::from_millis(1));
+        let started = std::time::Instant::now();
+        let deadline = started + timeout;
+        if let Some(stream) = self.checkout() {
+            match self.try_stream(stream, payload, deadline) {
+                Ok(reply) => return Ok(reply),
+                Err(()) => {
+                    // An idle stream going stale usually means the server
+                    // restarted or idle connections were reaped — every
+                    // other pooled stream is suspect. Flush them all and
+                    // fall through to a fresh dial *within this attempt*,
+                    // so a poisoned pool cannot consume the caller's
+                    // whole retry budget one dead stream at a time.
+                    self.pool.lock().unwrap().clear();
+                }
+            }
+        }
+        let budget = remaining(deadline).max(Duration::from_millis(1));
+        let stream = match TcpStream::connect_timeout(&self.addr, CONNECT_TIMEOUT.min(budget)) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                s
+            }
+            Err(_) => {
+                // Pace refused dials just enough that the caller's retry
+                // loop cannot hot-spin, but capped well below the attempt
+                // timeout: ECONNREFUSED is a definitive answer and a dead
+                // server must not cost the full back-off schedule (~60s
+                // with default PsConfig) to report.
+                std::thread::sleep(
+                    timeout
+                        .saturating_sub(started.elapsed())
+                        .min(Duration::from_millis(50)),
+                );
+                return Err(());
+            }
+        };
+        self.try_stream(stream, payload, deadline)
+    }
+
+    /// Write the request and read the reply on one stream under an
+    /// absolute deadline; pools the stream again only on success.
+    fn try_stream(
+        &self,
+        mut stream: TcpStream,
+        payload: &[u8],
+        deadline: std::time::Instant,
+    ) -> std::result::Result<Vec<u8>, ()> {
+        if stream
+            .set_write_timeout(Some(remaining(deadline).max(Duration::from_millis(1))))
+            .is_err()
+        {
+            return Err(());
+        }
+        if write_frame(&mut stream, payload).is_err() {
+            return Err(());
+        }
+        // The deadline applies to the whole reply, not per syscall: a
+        // peer trickling bytes must not extend the attempt indefinitely.
+        match read_frame(&mut DeadlineReader { stream: &mut stream, deadline }) {
+            Ok(Some(reply)) => {
+                self.checkin(stream);
+                Ok(reply)
+            }
+            // EOF, timeout or error: the reply is lost. The stream is
+            // dropped, never reused — a reply arriving after a timeout
+            // must not be mistaken for the answer to a later request.
+            Ok(None) | Err(_) => Err(()),
+        }
+    }
+}
+
+/// Time left until `deadline` (zero if passed).
+fn remaining(deadline: std::time::Instant) -> Duration {
+    deadline.saturating_duration_since(std::time::Instant::now())
+}
+
+/// Enforces an absolute deadline over a stream of reads: before each
+/// syscall the socket read timeout is shrunk to the remaining budget, so
+/// the *total* read time is bounded even when every individual chunk
+/// arrives "in time".
+struct DeadlineReader<'a> {
+    stream: &'a mut TcpStream,
+    deadline: std::time::Instant,
+}
+
+impl io::Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let left = remaining(self.deadline);
+        if left.is_zero() {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "read deadline exceeded"));
+        }
+        self.stream.set_read_timeout(Some(left))?;
+        self.stream.read(buf)
+    }
+}
+
+/// Client-side transport connecting to `n` shard servers over TCP.
+pub struct TcpTransport {
+    endpoints: Vec<Endpoint>,
+    addrs: Vec<SocketAddr>,
+}
+
+impl TcpTransport {
+    /// One pooled endpoint per shard address, in shard order.
+    pub fn connect(addrs: &[SocketAddr]) -> TcpTransport {
+        let endpoints = addrs
+            .iter()
+            .map(|&addr| Endpoint {
+                inner: EndpointInner::Tcp(TcpEndpoint::new(addr)),
+                stats: Arc::new(EndpointStats::default()),
+            })
+            .collect();
+        TcpTransport { endpoints, addrs: addrs.to_vec() }
+    }
+
+    /// Shard addresses in shard order.
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+}
+
+impl Transport for TcpTransport {
+    fn shards(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    fn endpoint(&self, shard: usize) -> Endpoint {
+        self.endpoints[shard].clone()
+    }
+
+    fn stats(&self) -> Vec<Arc<EndpointStats>> {
+        self.endpoints.iter().map(|e| Arc::clone(&e.stats)).collect()
+    }
+}
+
+/// Server-side listeners: one per shard hosted by this process.
+///
+/// Dropping (or [`TcpServer::shutdown`]) stops the accept loops; open
+/// connections are left to their handler threads, which exit when the
+/// peer closes or the shard's serve loop is gone.
+pub struct TcpServer {
+    addrs: Vec<SocketAddr>,
+    stop: Arc<AtomicBool>,
+    accepts: Vec<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind one listener per address and return the server handle plus
+    /// one [`Inbox`] per listener (in address order). Use port `0` for an
+    /// ephemeral port; the resolved addresses are available from
+    /// [`TcpServer::addrs`].
+    pub fn bind(addrs: &[SocketAddr]) -> io::Result<(TcpServer, Vec<Inbox>)> {
+        // Bind every listener before spawning anything, so a failed bind
+        // leaks no accept threads.
+        let mut listeners = Vec::with_capacity(addrs.len());
+        let mut local = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let listener = TcpListener::bind(addr)?;
+            listener.set_nonblocking(true)?;
+            local.push(listener.local_addr()?);
+            listeners.push(listener);
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut inboxes = Vec::with_capacity(addrs.len());
+        let mut accepts = Vec::with_capacity(addrs.len());
+        for (i, listener) in listeners.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            inboxes.push(Inbox { rx });
+            let stop = Arc::clone(&stop);
+            let handle = std::thread::Builder::new()
+                .name(format!("glint-tcp-accept-{i}"))
+                .spawn(move || accept_loop(&listener, &tx, &stop))
+                .expect("spawn tcp accept loop");
+            accepts.push(handle);
+        }
+        Ok((TcpServer { addrs: local, stop, accepts }, inboxes))
+    }
+
+    /// Local addresses of the listeners, in shard order.
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    /// Stop accepting new connections and join the accept threads.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in self.accepts.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, tx: &mpsc::Sender<Envelope>, stop: &AtomicBool) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let tx = tx.clone();
+                let _ = std::thread::Builder::new()
+                    .name("glint-tcp-conn".into())
+                    .spawn(move || connection_loop(stream, &tx));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => std::thread::sleep(ACCEPT_POLL),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            // Transient accept errors (ECONNABORTED from a client that
+            // RST before accept, EMFILE under fd pressure) must not kill
+            // the listener for the life of the serve process; back off
+            // and keep accepting.
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// One request/reply at a time per connection, in frame order. The
+/// envelope hop into the shard's inbox preserves the single-threaded
+/// actor model of the serve loop: many connections, one processor.
+fn connection_loop(mut stream: TcpStream, tx: &mpsc::Sender<Envelope>) {
+    // BSD-derived platforms (macOS included) hand accepted sockets the
+    // listener's O_NONBLOCK flag; reads here must block.
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    // Bound reply writes so a peer that stops reading cannot pin this
+    // handler thread forever on a full send buffer.
+    let _ = stream.set_write_timeout(Some(HANDLER_REPLY_TIMEOUT));
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) | Err(_) => return, // peer closed, or framing error
+        };
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        if tx.send(Envelope { payload, reply: Some(reply_tx) }).is_err() {
+            return; // the shard's serve loop has exited
+        }
+        let Ok(reply) = reply_rx.recv_timeout(HANDLER_REPLY_TIMEOUT) else {
+            return;
+        };
+        if write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Resolve `host:port` strings (one per shard) into socket addresses.
+pub fn resolve_addrs(specs: &[String]) -> Result<Vec<SocketAddr>> {
+    specs
+        .iter()
+        .map(|spec| {
+            spec.to_socket_addrs()
+                .map_err(|e| Error::Config(format!("cannot resolve {spec:?}: {e}")))?
+                .next()
+                .ok_or_else(|| Error::Config(format!("{spec:?} resolved to no addresses")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::respond;
+
+    /// Echo server over an inbox; returns on the b"stop" sentinel.
+    fn spawn_echo(inbox: Inbox) -> std::thread::JoinHandle<usize> {
+        std::thread::spawn(move || {
+            let mut handled = 0;
+            while let Some(env) = inbox.recv() {
+                handled += 1;
+                let stop = env.payload == b"stop";
+                respond(&env, env.payload.clone());
+                if stop {
+                    return handled;
+                }
+            }
+            handled
+        })
+    }
+
+    fn loopback() -> SocketAddr {
+        "127.0.0.1:0".parse().unwrap()
+    }
+
+    #[test]
+    fn roundtrip_over_loopback() {
+        let (mut server, mut inboxes) = TcpServer::bind(&[loopback()]).unwrap();
+        let h = spawn_echo(inboxes.remove(0));
+        let transport = TcpTransport::connect(server.addrs());
+        let ep = transport.endpoint(0);
+        for i in 0..50u32 {
+            let got = ep.request(i.to_le_bytes().to_vec(), Duration::from_secs(2)).unwrap();
+            assert_eq!(got, i.to_le_bytes());
+        }
+        assert_eq!(ep.stats.requests(), 50);
+        assert_eq!(ep.stats.replies(), 50);
+        assert_eq!(ep.stats.bytes_sent(), 200);
+        ep.request(b"stop".to_vec(), Duration::from_secs(2)).unwrap();
+        server.shutdown();
+        assert_eq!(h.join().unwrap(), 51);
+    }
+
+    #[test]
+    fn concurrent_clients_share_the_pool() {
+        let (mut server, mut inboxes) = TcpServer::bind(&[loopback()]).unwrap();
+        let h = spawn_echo(inboxes.remove(0));
+        let transport = TcpTransport::connect(server.addrs());
+        std::thread::scope(|scope| {
+            for t in 0..8u8 {
+                let ep = transport.endpoint(0);
+                scope.spawn(move || {
+                    for i in 0..20u8 {
+                        let msg = vec![t, i];
+                        let got = ep.request(msg.clone(), Duration::from_secs(2)).unwrap();
+                        assert_eq!(got, msg);
+                    }
+                });
+            }
+        });
+        let ep = transport.endpoint(0);
+        assert_eq!(ep.stats.requests(), 8 * 20);
+        ep.request(b"stop".to_vec(), Duration::from_secs(2)).unwrap();
+        server.shutdown();
+        assert_eq!(h.join().unwrap(), 8 * 20 + 1);
+    }
+
+    #[test]
+    fn unserviced_endpoint_times_out() {
+        // Bind a listener whose inbox is never drained: the handler
+        // forwards the frame but no reply ever comes, so the client must
+        // observe a timeout, not a hang.
+        let (mut server, inboxes) = TcpServer::bind(&[loopback()]).unwrap();
+        let transport = TcpTransport::connect(server.addrs());
+        let ep = transport.endpoint(0);
+        let r = ep.request(vec![1, 2, 3], Duration::from_millis(50));
+        assert!(r.is_err());
+        assert_eq!(ep.stats.timeouts(), 1);
+        drop(inboxes);
+        server.shutdown();
+    }
+
+    #[test]
+    fn dead_endpoint_is_an_error_not_a_hang() {
+        // Bind-then-drop leaves a port with no listener.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let transport = TcpTransport::connect(&[addr]);
+        let ep = transport.endpoint(0);
+        let r = ep.request(vec![9], Duration::from_millis(30));
+        assert!(r.is_err());
+        assert_eq!(ep.stats.timeouts(), 1);
+    }
+
+    #[test]
+    fn resolve_addrs_parses_and_rejects() {
+        let ok = resolve_addrs(&["127.0.0.1:7000".to_string()]).unwrap();
+        assert_eq!(ok[0].port(), 7000);
+        assert!(resolve_addrs(&["not an address".to_string()]).is_err());
+    }
+}

@@ -17,7 +17,7 @@ use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
-use crate::net::{Endpoint, SimTransport};
+use crate::net::{Endpoint, Transport};
 use crate::ps::config::PsConfig;
 use crate::ps::messages::{Data, Dtype, Request, Response};
 use crate::ps::partition::Partitioner;
@@ -73,17 +73,32 @@ pub struct PsClient {
 }
 
 impl PsClient {
-    /// Connect through a transport (from [`crate::ps::server::ServerGroup`]).
-    pub fn connect(transport: &SimTransport, config: PsConfig) -> PsClient {
+    /// Connect through any transport — the simulated in-process network
+    /// (from [`crate::ps::server::ServerGroup`]) or a TCP transport
+    /// reaching shard servers in other processes.
+    pub fn connect(transport: &dyn Transport, config: PsConfig) -> PsClient {
         assert_eq!(
             transport.shards(),
             config.shards,
             "transport endpoint count must match config.shards"
         );
+        // Seed matrix ids from wall-clock entropy rather than 1: shard
+        // servers keep matrices across client lifetimes (CreateMatrix is
+        // idempotent by id + shape), so a fresh client reconnecting to
+        // long-running `serve` processes must not silently adopt a
+        // previous run's count tables under a recycled id. This is a
+        // probabilistic guard (~n_matrices/2^32 per client pair), not a
+        // coordination protocol; true multi-tenant isolation would need
+        // server-assigned ids agreed across shards.
+        let base = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() ^ (d.as_secs() as u32))
+            .unwrap_or(0)
+            ^ std::process::id().rotate_left(16);
         PsClient {
             endpoints: transport.endpoints(),
             config,
-            next_matrix_id: Arc::new(AtomicU32::new(1)),
+            next_matrix_id: Arc::new(AtomicU32::new(base.max(1))),
         }
     }
 
@@ -161,18 +176,110 @@ impl PsClient {
         Ok(BigVector { inner: self.matrix(len, 1)? })
     }
 
-    /// Query every shard's info (matrix count, resident bytes, pending
-    /// uids).
-    pub fn shard_infos(&self) -> Result<Vec<(u32, u64, u64, u64)>> {
+    /// Ask every shard server to exit its serve loop. Intended for
+    /// externally started `serve` processes once training is done; with
+    /// an in-process [`crate::ps::server::ServerGroup`] prefer dropping
+    /// the group, which shuts down over the control plane.
+    ///
+    /// Best-effort: every shard is attempted even when an earlier one
+    /// fails (e.g. its ack was lost after it already exited); the first
+    /// error is returned afterwards.
+    pub fn shutdown_servers(&self) -> Result<()> {
+        let mut first_err = None;
+        for s in 0..self.shards() {
+            let result = match self.request_retry(s, &Request::Shutdown) {
+                Ok(Response::Ok) => Ok(()),
+                Ok(r) => Err(Error::Decode(format!("unexpected shutdown response {r:?}"))),
+                Err(e) => Err(e),
+            };
+            if let Err(e) = result {
+                crate::log_warn!("shutdown of shard {s} failed: {e}");
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Query every shard's info (deployment layout, matrix count,
+    /// resident bytes, pending uids).
+    pub fn shard_infos(&self) -> Result<Vec<ShardInfo>> {
         (0..self.shards())
             .map(|s| match self.request_retry(s, &Request::ShardInfo)? {
-                Response::Info { matrices, local_rows, bytes, pending_uids } => {
-                    Ok((matrices, local_rows, bytes, pending_uids))
-                }
+                Response::Info {
+                    shard_id,
+                    shards,
+                    scheme,
+                    matrices,
+                    local_rows,
+                    bytes,
+                    pending_uids,
+                } => Ok(ShardInfo {
+                    shard_id,
+                    shards,
+                    scheme,
+                    matrices,
+                    local_rows,
+                    bytes,
+                    pending_uids,
+                }),
                 r => Err(Error::Decode(format!("unexpected info response {r:?}"))),
             })
             .collect()
     }
+
+    /// Verify this client's deployment view against what every shard
+    /// server reports: address order must match shard ids, and shard
+    /// count and partitioning scheme must agree — otherwise pushes and
+    /// pulls would silently land on the wrong rows. Essential before
+    /// training over `--connect`.
+    pub fn validate_deployment(&self) -> Result<()> {
+        for (expect, info) in self.shard_infos()?.into_iter().enumerate() {
+            if info.shard_id as usize != expect {
+                return Err(Error::Config(format!(
+                    "endpoint {expect} is shard {} — the connect address list is out of order",
+                    info.shard_id
+                )));
+            }
+            if info.shards as usize != self.config.shards {
+                return Err(Error::Config(format!(
+                    "server reports a {}-shard deployment but this client connects {} \
+                     endpoint(s); row partitioning would disagree",
+                    info.shards,
+                    self.config.shards
+                )));
+            }
+            if info.scheme != self.config.scheme {
+                return Err(Error::Config(format!(
+                    "server partitions rows with the {:?} scheme, client is configured \
+                     for {:?}",
+                    info.scheme, self.config.scheme
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One shard server's introspection report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardInfo {
+    /// The server's global shard id.
+    pub shard_id: u32,
+    /// Total shards in the server's deployment.
+    pub shards: u32,
+    /// Row partitioning scheme on the server.
+    pub scheme: crate::ps::partition::PartitionScheme,
+    /// Matrices hosted.
+    pub matrices: u32,
+    /// Total local rows across matrices.
+    pub local_rows: u64,
+    /// Payload bytes resident.
+    pub bytes: u64,
+    /// Outstanding (un-forgotten) push uids.
+    pub pending_uids: u64,
 }
 
 /// Sparse additive deltas destined for one matrix, grouped per shard by

@@ -4,6 +4,32 @@ use std::time::Duration;
 
 use crate::ps::partition::PartitionScheme;
 
+/// Which transport carries client/shard traffic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportMode {
+    /// In-process simulated network with fault injection (the default;
+    /// single-process deployments and protocol tests).
+    Sim,
+    /// Real TCP over loopback: the server group binds one listener per
+    /// shard on `127.0.0.1` (ephemeral ports) inside this process.
+    TcpLoopback,
+    /// Client-only: connect over TCP to externally running `serve`
+    /// processes at these `host:port` addresses (one per shard).
+    Connect(Vec<String>),
+}
+
+impl TransportMode {
+    /// Parse a CLI transport name (`sim` | `tcp`). `Connect` is built
+    /// from an explicit address list instead.
+    pub fn parse(s: &str) -> Option<TransportMode> {
+        match s {
+            "sim" => Some(TransportMode::Sim),
+            "tcp" => Some(TransportMode::TcpLoopback),
+            _ => None,
+        }
+    }
+}
+
 /// Configuration shared by clients and the server group.
 #[derive(Debug, Clone)]
 pub struct PsConfig {
@@ -12,6 +38,8 @@ pub struct PsConfig {
     pub shards: usize,
     /// Row partitioning scheme (paper: cyclic).
     pub scheme: PartitionScheme,
+    /// Transport carrying the pull/push traffic.
+    pub transport: TransportMode,
     /// Base reply timeout before the first retry.
     pub timeout: Duration,
     /// Maximum attempts before a request is declared failed (paper §2.3:
@@ -30,6 +58,7 @@ impl Default for PsConfig {
         PsConfig {
             shards: 4,
             scheme: PartitionScheme::Cyclic,
+            transport: TransportMode::Sim,
             timeout: Duration::from_millis(100),
             max_retries: 12,
             backoff_factor: 2.0,
@@ -70,5 +99,12 @@ mod tests {
     fn backoff_clamped() {
         let cfg = PsConfig::default();
         assert_eq!(cfg.timeout_for_attempt(30), cfg.max_timeout);
+    }
+
+    #[test]
+    fn transport_mode_parses() {
+        assert_eq!(TransportMode::parse("sim"), Some(TransportMode::Sim));
+        assert_eq!(TransportMode::parse("tcp"), Some(TransportMode::TcpLoopback));
+        assert_eq!(TransportMode::parse("carrier-pigeon"), None);
     }
 }

@@ -5,6 +5,7 @@
 //! message sizes match what a real deployment would put on the wire
 //! (the paper sizes its push buffers at ~2 MB, §3.3).
 
+use crate::ps::partition::PartitionScheme;
 use crate::util::codec::{Reader, Writer};
 use crate::util::error::{Error, Result};
 
@@ -164,8 +165,15 @@ pub enum Response {
         /// Whether this delivery performed the mutation.
         fresh: bool,
     },
-    /// Shard statistics.
+    /// Shard statistics and deployment layout (lets clients validate
+    /// their shard count / scheme / address order against the server's).
     Info {
+        /// This server's global shard id.
+        shard_id: u32,
+        /// Total shards in the server's deployment.
+        shards: u32,
+        /// Row partitioning scheme the server applies.
+        scheme: PartitionScheme,
         /// Matrices hosted.
         matrices: u32,
         /// Total local rows across matrices.
@@ -292,8 +300,19 @@ impl Response {
                 w.u8(R_PUSH_ACK);
                 w.u8(u8::from(*fresh));
             }
-            Response::Info { matrices, local_rows, bytes, pending_uids } => {
+            Response::Info {
+                shard_id,
+                shards,
+                scheme,
+                matrices,
+                local_rows,
+                bytes,
+                pending_uids,
+            } => {
                 w.u8(R_INFO);
+                w.u32(*shard_id);
+                w.u32(*shards);
+                w.u8(scheme.tag());
                 w.u32(*matrices);
                 w.u64(*local_rows);
                 w.u64(*bytes);
@@ -316,6 +335,13 @@ impl Response {
             R_ROWS => Response::Rows(Data::decode(&mut r)?),
             R_PUSH_ACK => Response::PushAck { fresh: r.u8()? != 0 },
             R_INFO => Response::Info {
+                shard_id: r.u32()?,
+                shards: r.u32()?,
+                scheme: {
+                    let t = r.u8()?;
+                    PartitionScheme::from_tag(t)
+                        .ok_or_else(|| Error::Decode(format!("bad scheme tag {t}")))?
+                },
                 matrices: r.u32()?,
                 local_rows: r.u64()?,
                 bytes: r.u64()?,
@@ -375,7 +401,24 @@ mod tests {
         roundtrip_resp(Response::Rows(Data::I64(vec![-5, 5])));
         roundtrip_resp(Response::PushAck { fresh: true });
         roundtrip_resp(Response::PushAck { fresh: false });
-        roundtrip_resp(Response::Info { matrices: 2, local_rows: 10, bytes: 160, pending_uids: 1 });
+        roundtrip_resp(Response::Info {
+            shard_id: 3,
+            shards: 8,
+            scheme: PartitionScheme::Cyclic,
+            matrices: 2,
+            local_rows: 10,
+            bytes: 160,
+            pending_uids: 1,
+        });
+        roundtrip_resp(Response::Info {
+            shard_id: 0,
+            shards: 1,
+            scheme: PartitionScheme::Range,
+            matrices: 0,
+            local_rows: 0,
+            bytes: 0,
+            pending_uids: 0,
+        });
         roundtrip_resp(Response::Error("boom".into()));
     }
 

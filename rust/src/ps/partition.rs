@@ -27,6 +27,23 @@ impl PartitionScheme {
             _ => None,
         }
     }
+
+    /// Wire tag (shard-info messages).
+    pub fn tag(self) -> u8 {
+        match self {
+            PartitionScheme::Cyclic => 0,
+            PartitionScheme::Range => 1,
+        }
+    }
+
+    /// Inverse of [`PartitionScheme::tag`].
+    pub fn from_tag(t: u8) -> Option<PartitionScheme> {
+        match t {
+            0 => Some(PartitionScheme::Cyclic),
+            1 => Some(PartitionScheme::Range),
+            _ => None,
+        }
+    }
 }
 
 /// A concrete partitioning of `rows` rows over `shards` shards.
@@ -138,6 +155,14 @@ mod tests {
         assert_eq!(PartitionScheme::parse("cyclic"), Some(PartitionScheme::Cyclic));
         assert_eq!(PartitionScheme::parse("range"), Some(PartitionScheme::Range));
         assert_eq!(PartitionScheme::parse("zig"), None);
+    }
+
+    #[test]
+    fn scheme_tag_roundtrips() {
+        for s in [PartitionScheme::Cyclic, PartitionScheme::Range] {
+            assert_eq!(PartitionScheme::from_tag(s.tag()), Some(s));
+        }
+        assert_eq!(PartitionScheme::from_tag(9), None);
     }
 
     /// Round-trip property: global → (shard, local) → global is identity,

@@ -8,11 +8,14 @@
 //! acknowledges without re-applying (paper §2.4, Figure 2).
 
 use std::collections::{HashMap, HashSet};
+use std::net::SocketAddr;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::net::{respond, FaultPlan, Inbox, SimTransport};
-use crate::ps::config::PsConfig;
+use crate::log_warn;
+use crate::net::tcp::{TcpServer, TcpTransport};
+use crate::net::{respond, FaultPlan, Inbox, SimTransport, Transport};
+use crate::ps::config::{PsConfig, TransportMode};
 use crate::ps::messages::{Data, Dtype, Request, Response};
 use crate::ps::partition::Partitioner;
 use crate::ps::storage::DenseShard;
@@ -104,6 +107,9 @@ impl ShardState {
                 Response::Ok
             }
             Request::ShardInfo => Response::Info {
+                shard_id: self.shard_id as u32,
+                shards: self.config.shards as u32,
+                scheme: self.config.scheme,
                 matrices: self.matrices.len() as u32,
                 local_rows: self.matrices.values().map(|m| m.local_rows()).sum(),
                 bytes: self.matrices.values().map(|m| m.bytes()).sum(),
@@ -243,35 +249,82 @@ fn serve(mut state: ShardState, inbox: Inbox) {
     }
 }
 
+/// Spawn one serve-loop thread per inbox, for shards numbered from
+/// `first_shard` upward.
+fn spawn_serve_threads(
+    config: &PsConfig,
+    first_shard: usize,
+    inboxes: Vec<Inbox>,
+) -> Vec<JoinHandle<()>> {
+    inboxes
+        .into_iter()
+        .enumerate()
+        .map(|(i, inbox)| {
+            let shard_id = first_shard + i;
+            let state = ShardState::new(shard_id, config.clone());
+            std::thread::Builder::new()
+                .name(format!("glint-shard-{shard_id}"))
+                .spawn(move || serve(state, inbox))
+                .expect("spawn shard server")
+        })
+        .collect()
+}
+
 /// A running group of shard servers plus the transport connecting to
 /// them. Owns the server threads; dropping the group shuts them down.
 pub struct ServerGroup {
-    transport: Arc<SimTransport>,
+    transport: Arc<dyn Transport>,
     config: PsConfig,
     handles: Vec<JoinHandle<()>>,
+    /// Listener handles when the group runs over TCP loopback.
+    tcp: Option<TcpServer>,
 }
 
 impl ServerGroup {
-    /// Start `config.shards` shard servers over a transport with the
-    /// given fault plan.
+    /// Start `config.shards` shard servers over the transport selected
+    /// by `config.transport`:
+    ///
+    /// - [`TransportMode::Sim`] — in-process inboxes under `plan`;
+    /// - [`TransportMode::TcpLoopback`] — real TCP listeners on
+    ///   `127.0.0.1` ephemeral ports (the fault plan does not apply: the
+    ///   network itself supplies the at-most-once behavior);
+    /// - [`TransportMode::Connect`] — not startable: the servers live in
+    ///   other processes (use [`TcpShardServer`] there).
     pub fn start(config: PsConfig, plan: FaultPlan, seed: u64) -> ServerGroup {
-        let (transport, inboxes) = SimTransport::new(config.shards, plan, seed);
-        let handles = inboxes
-            .into_iter()
-            .enumerate()
-            .map(|(shard_id, inbox)| {
-                let state = ShardState::new(shard_id, config.clone());
-                std::thread::Builder::new()
-                    .name(format!("glint-shard-{shard_id}"))
-                    .spawn(move || serve(state, inbox))
-                    .expect("spawn shard server")
-            })
-            .collect();
-        ServerGroup { transport: Arc::new(transport), config, handles }
+        match config.transport {
+            TransportMode::Sim => {
+                let (transport, inboxes) = SimTransport::new(config.shards, plan, seed);
+                let handles = spawn_serve_threads(&config, 0, inboxes);
+                ServerGroup { transport: Arc::new(transport), config, handles, tcp: None }
+            }
+            TransportMode::TcpLoopback => {
+                if !plan.is_reliable() {
+                    log_warn!(
+                        "fault injection is sim-only; the TCP transport ignores the fault plan"
+                    );
+                }
+                let want: Vec<SocketAddr> =
+                    vec!["127.0.0.1:0".parse().unwrap(); config.shards];
+                let (server, inboxes) =
+                    TcpServer::bind(&want).expect("bind loopback tcp listeners");
+                let transport = TcpTransport::connect(server.addrs());
+                let handles = spawn_serve_threads(&config, 0, inboxes);
+                ServerGroup {
+                    transport: Arc::new(transport),
+                    config,
+                    handles,
+                    tcp: Some(server),
+                }
+            }
+            TransportMode::Connect(_) => panic!(
+                "ServerGroup::start cannot run in Connect mode: the shard servers live in \
+                 other processes (run `glint-lda serve` there and connect a client instead)"
+            ),
+        }
     }
 
     /// The transport clients should connect through.
-    pub fn transport(&self) -> Arc<SimTransport> {
+    pub fn transport(&self) -> Arc<dyn Transport> {
         Arc::clone(&self.transport)
     }
 
@@ -296,6 +349,9 @@ impl ServerGroup {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        if let Some(mut server) = self.tcp.take() {
+            server.shutdown();
+        }
     }
 }
 
@@ -304,6 +360,58 @@ impl Drop for ServerGroup {
         if !self.handles.is_empty() {
             self.shutdown_inner();
         }
+    }
+}
+
+/// Standalone TCP shard servers for multi-process deployments: the
+/// `glint-lda serve` half of a `serve` / `train --connect` pair.
+///
+/// Hosts shards `first_shard .. first_shard + addrs.len()` of a
+/// `config.shards`-shard deployment, one listener per shard. Each serve
+/// loop exits when it receives a [`Request::Shutdown`] (e.g. from
+/// [`crate::ps::client::PsClient::shutdown_servers`]).
+pub struct TcpShardServer {
+    server: TcpServer,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl TcpShardServer {
+    /// Bind listeners and start the serve loops. Use port `0` to bind
+    /// ephemeral ports and read them back from [`TcpShardServer::addrs`].
+    pub fn bind(
+        config: PsConfig,
+        first_shard: usize,
+        addrs: &[SocketAddr],
+    ) -> Result<TcpShardServer> {
+        if addrs.is_empty() {
+            return Err(crate::util::error::Error::Config(
+                "serve needs at least one bind address".into(),
+            ));
+        }
+        if first_shard + addrs.len() > config.shards {
+            return Err(crate::util::error::Error::Config(format!(
+                "shards {first_shard}..{} exceed the {}-shard deployment",
+                first_shard + addrs.len(),
+                config.shards
+            )));
+        }
+        let (server, inboxes) = TcpServer::bind(addrs)?;
+        let handles = spawn_serve_threads(&config, first_shard, inboxes);
+        Ok(TcpShardServer { server, handles })
+    }
+
+    /// Local listener addresses, in shard order.
+    pub fn addrs(&self) -> &[SocketAddr] {
+        self.server.addrs()
+    }
+
+    /// Block until every hosted shard has been told to shut down, then
+    /// stop accepting connections.
+    pub fn join(mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.server.shutdown();
     }
 }
 

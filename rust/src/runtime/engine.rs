@@ -5,9 +5,17 @@
 //! rust hot path. HLO *text* is the interchange format: jax ≥ 0.5 emits
 //! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT bindings (`xla` crate) are a vendored, environment-provided
+//! dependency, gated behind the off-by-default `xla` cargo feature so
+//! the crate builds from a clean checkout. Without the feature an
+//! API-identical stub is compiled whose [`Engine::new`] always errors —
+//! every caller already degrades gracefully to the pure-rust evaluator.
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::Path;
+#[cfg(feature = "xla")]
 use std::sync::Mutex;
 
 use crate::runtime::artifacts::{ArtifactSpec, Manifest};
@@ -20,12 +28,14 @@ pub enum Input {
 }
 
 /// Engine: one PJRT client plus lazily compiled executables.
+#[cfg(feature = "xla")]
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(feature = "xla")]
 impl Engine {
     /// Create from an artifact directory (must contain `manifest.json`).
     pub fn new(artifact_dir: &Path) -> Result<Engine> {
@@ -118,6 +128,50 @@ impl Engine {
             outs.push(t.to_vec::<f32>().map_err(|e| Error::Xla(format!("to_vec: {e}")))?);
         }
         Ok(outs)
+    }
+}
+
+/// Stub engine compiled when the `xla` feature is off (the default).
+///
+/// Construction always fails with a descriptive error, so every caller's
+/// fallback path (skip the XLA evaluator, use the pure-rust one)
+/// engages; the remaining methods exist only to keep the API identical.
+#[cfg(not(feature = "xla"))]
+pub struct Engine {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Engine {
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn new(_artifact_dir: &Path) -> Result<Engine> {
+        Err(Error::Xla(
+            "glint-lda was built without the `xla` feature; the PJRT evaluator is unavailable"
+                .into(),
+        ))
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    /// Select the best artifact variant for `name` at `k` topics.
+    pub fn select(&self, name: &str, k: usize) -> Result<ArtifactSpec> {
+        self.manifest
+            .select(name, k)
+            .cloned()
+            .ok_or_else(|| Error::MissingArtifact(format!("{name} (k >= {k})")))
+    }
+
+    /// Unreachable in practice: [`Engine::new`] never returns an engine.
+    pub fn run_f32(&self, _spec: &ArtifactSpec, _inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        Err(Error::Xla("glint-lda was built without the `xla` feature".into()))
     }
 }
 

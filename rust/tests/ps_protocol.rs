@@ -145,6 +145,6 @@ fn no_uid_leaks_after_pushes() {
         m.push_coords(&deltas).unwrap();
     }
     let infos = client.shard_infos().unwrap();
-    let pending: u64 = infos.iter().map(|(_, _, _, p)| p).sum();
+    let pending: u64 = infos.iter().map(|i| i.pending_uids).sum();
     assert_eq!(pending, 0, "all push uids must be forgotten after acks");
 }

@@ -1,0 +1,224 @@
+//! TCP transport integration tests: the framing layer against real
+//! sockets, the multi-process `serve` path driven in-process, recovery
+//! from dropped connections through the exponential back-off retry, and
+//! LightLDA training parity between the simulated and TCP transports.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::eval::perplexity::holdout_perplexity;
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::net::frame::{read_frame, write_frame};
+use glint_lda::net::tcp::TcpTransport;
+use glint_lda::net::Transport;
+use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
+use glint_lda::ps::config::{PsConfig, TransportMode};
+use glint_lda::ps::messages::{Request, Response};
+use glint_lda::ps::server::{ShardState, TcpShardServer};
+
+fn loopback_addrs(n: usize) -> Vec<std::net::SocketAddr> {
+    vec!["127.0.0.1:0".parse().unwrap(); n]
+}
+
+/// Full protocol over real sockets: create, exactly-once pushes, pulls,
+/// shard introspection, shutdown — through `TcpShardServer`, the same
+/// code path `glint-lda serve` runs.
+#[test]
+fn shard_server_roundtrip_over_tcp() {
+    let cfg = PsConfig {
+        shards: 2,
+        timeout: Duration::from_millis(200),
+        ..PsConfig::default()
+    };
+    let server = TcpShardServer::bind(cfg.clone(), 0, &loopback_addrs(2)).unwrap();
+    let transport = TcpTransport::connect(server.addrs());
+    let client = PsClient::connect(&transport, cfg);
+
+    let m: BigMatrix<i64> = client.matrix(40, 3).unwrap();
+    let deltas = CoordDeltas {
+        rows: vec![0, 1, 39, 0],
+        cols: vec![0, 2, 1, 0],
+        values: vec![5, -2, 7, 3],
+    };
+    m.push_coords(&deltas).unwrap();
+    let vals = m.pull_rows(&[0, 1, 39]).unwrap();
+    assert_eq!(vals[0], 8); // 5 + 3 accumulated
+    assert_eq!(vals[3 + 2], -2);
+    assert_eq!(vals[6 + 1], 7);
+
+    // No uid leaks, both shards hold rows, and the layout handshake
+    // agrees with the servers.
+    client.validate_deployment().unwrap();
+    let infos = client.shard_infos().unwrap();
+    assert_eq!(infos.len(), 2);
+    assert_eq!(infos.iter().map(|i| i.pending_uids).sum::<u64>(), 0);
+    assert_eq!(infos.iter().map(|i| i.local_rows).sum::<u64>(), 40);
+
+    client.shutdown_servers().unwrap();
+    server.join();
+}
+
+/// Two single-shard server "processes" (separately bound listeners with
+/// disjoint shard ids) serving one client — the multi-machine topology,
+/// on loopback.
+#[test]
+fn split_shard_servers_compose() {
+    let cfg = PsConfig {
+        shards: 2,
+        timeout: Duration::from_millis(200),
+        ..PsConfig::default()
+    };
+    let s0 = TcpShardServer::bind(cfg.clone(), 0, &loopback_addrs(1)).unwrap();
+    let s1 = TcpShardServer::bind(cfg.clone(), 1, &loopback_addrs(1)).unwrap();
+    let addrs = vec![s0.addrs()[0], s1.addrs()[0]];
+    let transport = TcpTransport::connect(&addrs);
+    let client = PsClient::connect(&transport, cfg);
+
+    let m: BigMatrix<i64> = client.matrix(10, 1).unwrap();
+    let deltas = CoordDeltas {
+        rows: (0..10).collect(),
+        cols: vec![0; 10],
+        values: (0..10).map(|i| i as i64).collect(),
+    };
+    m.push_coords(&deltas).unwrap();
+    let all: Vec<u64> = (0..10).collect();
+    let got = m.pull_rows(&all).unwrap();
+    assert_eq!(got, (0..10).map(|i| i as i64).collect::<Vec<_>>());
+
+    // A client that connects only one of the two shards must be rejected
+    // by the layout handshake instead of silently mis-partitioning rows.
+    let bad_cfg = PsConfig {
+        shards: 1,
+        timeout: Duration::from_millis(200),
+        ..PsConfig::default()
+    };
+    let bad_client = PsClient::connect(&TcpTransport::connect(&addrs[..1]), bad_cfg);
+    assert!(bad_client.validate_deployment().is_err());
+
+    client.shutdown_servers().unwrap();
+    s0.join();
+    s1.join();
+}
+
+/// A connection dropped mid-request (server reads the frame, then closes
+/// without replying) must surface as a lost message and be recovered by
+/// the existing exponential back-off retry on a fresh connection.
+#[test]
+fn dropped_connection_pull_recovers_via_retry() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = PsConfig {
+        shards: 1,
+        timeout: Duration::from_millis(50),
+        max_retries: 8,
+        ..PsConfig::default()
+    };
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || {
+        let mut state = ShardState::new(0, server_cfg);
+        // First connection: swallow one frame, then drop the socket
+        // without replying — an at-most-once loss.
+        let (mut doomed, _) = listener.accept().unwrap();
+        let _ = read_frame(&mut doomed);
+        drop(doomed);
+        // After that, behave: serve decoded requests until Shutdown.
+        loop {
+            let (mut stream, _) = listener.accept().unwrap();
+            while let Ok(Some(payload)) = read_frame(&mut stream) {
+                let req = Request::decode(&payload).unwrap();
+                let stop = req == Request::Shutdown;
+                let resp = if stop { Response::Ok } else { state.handle(req) };
+                write_frame(&mut stream, &resp.encode()).unwrap();
+                if stop {
+                    return;
+                }
+            }
+        }
+    });
+
+    let transport = TcpTransport::connect(&[addr]);
+    let client = PsClient::connect(&transport, cfg);
+    // The first CreateMatrix lands on the doomed connection; the retry
+    // must dial a fresh one and succeed.
+    let m: BigMatrix<i64> = client.matrix(10, 2).unwrap();
+    let vals = m.pull_rows(&[0, 9]).unwrap();
+    assert_eq!(vals, vec![0; 4]);
+    let stats = transport.stats();
+    assert!(
+        stats[0].timeouts() >= 1,
+        "the dropped connection must be observed as a lost message"
+    );
+    client.shutdown_servers().unwrap();
+    server.join().unwrap();
+}
+
+fn parity_corpus() -> glint_lda::corpus::dataset::Corpus {
+    generate(&SynthConfig {
+        num_docs: 360,
+        vocab_size: 800,
+        num_topics: 8,
+        avg_doc_len: 45.0,
+        seed: 424,
+        ..Default::default()
+    })
+}
+
+fn train_holdout_perplexity(transport: TransportMode) -> f64 {
+    let corpus = parity_corpus();
+    let (train, test) = corpus.split_holdout(5);
+    let cfg = TrainConfig {
+        num_topics: 10,
+        iterations: 8,
+        workers: 3,
+        shards: 2,
+        block_words: 256,
+        buffer_cap: 2000,
+        dense_top_words: 50,
+        transport,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(cfg, &train).unwrap();
+    let model = trainer.run(&train).unwrap();
+    holdout_perplexity(&model, &test, 5, 7)
+}
+
+/// The acceptance bar for the transport: LightLDA over TCP loopback
+/// (2 shards on 127.0.0.1) reaches the same held-out perplexity as the
+/// simulated transport, within sampling noise.
+#[test]
+fn tcp_training_matches_sim_heldout_perplexity() {
+    let sim = train_holdout_perplexity(TransportMode::Sim);
+    let tcp = train_holdout_perplexity(TransportMode::TcpLoopback);
+    assert!(sim.is_finite() && tcp.is_finite());
+    let ratio = tcp / sim;
+    assert!(
+        (0.9..1.1).contains(&ratio),
+        "tcp perplexity {tcp:.1} diverged from sim {sim:.1} (ratio {ratio:.3})"
+    );
+}
+
+/// Exactness over TCP: after training iterations, the server-side count
+/// tables must equal the counts recomputed from worker assignments —
+/// the same invariant the sim transport guarantees.
+#[test]
+fn tcp_training_counts_stay_consistent() {
+    let corpus = parity_corpus();
+    let cfg = TrainConfig {
+        num_topics: 8,
+        iterations: 2,
+        workers: 3,
+        shards: 3,
+        block_words: 128,
+        buffer_cap: 1000,
+        dense_top_words: 30,
+        transport: TransportMode::TcpLoopback,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(cfg, &corpus).unwrap();
+    trainer.run_iteration().unwrap();
+    trainer.run_iteration().unwrap();
+    trainer.verify_counts().unwrap();
+    assert!(trainer.bytes_pushed() > 0);
+    assert!(trainer.shard_request_counts().iter().all(|&c| c > 0));
+}
