@@ -1,6 +1,8 @@
 //! Parameter-server micro-benchmarks: pull/push throughput vs shard
-//! count and delta batch size, and the cost of the exactly-once
-//! hand-shake under message loss.
+//! count and delta batch size, the cost of the exactly-once hand-shake
+//! under message loss, and the win from the asynchronous ticket API
+//! (`pipeline_depth` 1 vs 8) with per-shard in-flight / queue-wait
+//! stats.
 //!
 //! Environment knobs (used by CI):
 //!
@@ -8,7 +10,12 @@
 //!   (default) or real TCP loopback listeners;
 //! - `SMOKE=1` — a fast regression path: tiny matrix, few shards, few
 //!   rounds. Finishes in seconds while still exercising the full
-//!   create/push/pull protocol over the selected transport.
+//!   create/push/pull protocol over the selected transport;
+//! - `PIPELINE_DEPTH=n` — the per-shard in-flight window used by the
+//!   blocking-API sections (the pipelining section always compares
+//!   depths 1 and 8);
+//! - `BENCH_JSON=path` — where to write the machine-readable summary
+//!   (default `BENCH_ps_throughput.json` in the working directory).
 
 use glint_lda::net::FaultPlan;
 use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
@@ -26,6 +33,12 @@ struct Dims {
     pull_sizes: &'static [usize],
     big_batch: usize,
     rounds: usize,
+    /// Batch size of one async fire-and-forget push.
+    async_batch: usize,
+    /// Rows per overlapped pull ticket.
+    async_pull_rows: usize,
+    /// Tickets issued per async measurement.
+    async_rounds: usize,
 }
 
 const FULL: Dims = Dims {
@@ -36,6 +49,9 @@ const FULL: Dims = Dims {
     pull_sizes: &[64, 512, 4096, 16384],
     big_batch: 100_000,
     rounds: 10,
+    async_batch: 20_000,
+    async_pull_rows: 4096,
+    async_rounds: 48,
 };
 
 const SMOKE: Dims = Dims {
@@ -46,6 +62,9 @@ const SMOKE: Dims = Dims {
     pull_sizes: &[64, 512],
     big_batch: 5_000,
     rounds: 2,
+    async_batch: 500,
+    async_pull_rows: 512,
+    async_rounds: 24,
 };
 
 fn transport_mode() -> (TransportMode, &'static str) {
@@ -59,26 +78,35 @@ fn is_smoke() -> bool {
     std::env::var("SMOKE").map(|v| v == "1").unwrap_or(false)
 }
 
+fn env_pipeline_depth() -> usize {
+    std::env::var("PIPELINE_DEPTH").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
 fn setup(
     dims: &Dims,
     shards: usize,
     mode: TransportMode,
     plan: FaultPlan,
-) -> (ServerGroup, BigMatrix<i64>) {
-    let cfg = PsConfig { transport: mode, ..PsConfig::with_shards(shards) };
+    pipeline_depth: usize,
+) -> (ServerGroup, PsClient, BigMatrix<i64>) {
+    let cfg = PsConfig { transport: mode, pipeline_depth, ..PsConfig::with_shards(shards) };
     let group = ServerGroup::start(cfg.clone(), plan, 11);
     let client = PsClient::connect(&*group.transport(), cfg);
     let m = client.matrix::<i64>(dims.rows, dims.cols).expect("matrix");
-    (group, m)
+    (group, client, m)
 }
 
-fn bench_push(dims: &Dims, m: &BigMatrix<i64>, batch: usize, rounds: usize) -> f64 {
-    let mut rng = Pcg64::new(5);
-    let deltas = CoordDeltas {
+fn make_deltas(dims: &Dims, batch: usize, seed: u64) -> CoordDeltas<i64> {
+    let mut rng = Pcg64::new(seed);
+    CoordDeltas {
         rows: (0..batch).map(|_| rng.below(dims.rows as usize) as u64).collect(),
         cols: (0..batch).map(|_| rng.below(dims.cols as usize) as u32).collect(),
         values: vec![1i64; batch],
-    };
+    }
+}
+
+fn bench_push(dims: &Dims, m: &BigMatrix<i64>, batch: usize, rounds: usize) -> f64 {
+    let deltas = make_deltas(dims, batch, 5);
     let sw = Stopwatch::new();
     for _ in 0..rounds {
         m.push_coords(&deltas).expect("push");
@@ -97,22 +125,105 @@ fn bench_pull(dims: &Dims, m: &BigMatrix<i64>, rows: usize, rounds: usize) -> f6
     (rows * rounds) as f64 / sw.secs()
 }
 
+/// Fire-and-forget pushes riding the in-flight window, barriered once at
+/// the end — the trainer's §3.3 update path.
+fn bench_push_async(
+    dims: &Dims,
+    client: &PsClient,
+    m: &BigMatrix<i64>,
+    batch: usize,
+    rounds: usize,
+) -> f64 {
+    let deltas = make_deltas(dims, batch, 7);
+    let sw = Stopwatch::new();
+    for _ in 0..rounds {
+        let _ = m.push_coords_async(&deltas);
+    }
+    client.flush().expect("flush");
+    (batch * rounds) as f64 / sw.secs()
+}
+
+/// Overlapped pulls: issue every ticket, then drain — the trainer's §3.4
+/// prefetch path.
+fn bench_pull_async(dims: &Dims, m: &BigMatrix<i64>, rows: usize, rounds: usize) -> f64 {
+    let mut rng = Pcg64::new(8);
+    let ids: Vec<u64> = (0..rows).map(|_| rng.below(dims.rows as usize) as u64).collect();
+    let sw = Stopwatch::new();
+    let tickets: Vec<_> = (0..rounds).map(|_| m.pull_rows_async(&ids)).collect();
+    for t in tickets {
+        std::hint::black_box(t.wait().expect("pull"));
+    }
+    (rows * rounds) as f64 / sw.secs()
+}
+
+/// One depth's measurements in the pipelining comparison.
+struct PipelineResult {
+    depth: usize,
+    push_rate: f64,
+    pull_rate: f64,
+    max_in_flight: u64,
+    avg_queue_wait_us: f64,
+}
+
+fn json_escape_free(s: &str) -> &str {
+    // Labels written into the JSON artifact are static identifiers.
+    debug_assert!(!s.contains('"') && !s.contains('\\'));
+    s
+}
+
+fn write_json(
+    path: &str,
+    transport: &str,
+    smoke: bool,
+    depth_env: usize,
+    results: &[PipelineResult],
+) {
+    let mut body = String::new();
+    body.push_str("{\n");
+    body.push_str("  \"bench\": \"ps_throughput\",\n");
+    body.push_str(&format!("  \"transport\": \"{}\",\n", json_escape_free(transport)));
+    body.push_str(&format!("  \"smoke\": {smoke},\n"));
+    body.push_str(&format!("  \"env_pipeline_depth\": {depth_env},\n"));
+    body.push_str("  \"pipeline\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"depth\": {}, \"push_deltas_per_sec\": {:.1}, \
+             \"pull_rows_per_sec\": {:.1}, \"max_in_flight\": {}, \
+             \"avg_queue_wait_us\": {:.2}}}{}\n",
+            r.depth,
+            r.push_rate,
+            r.pull_rate,
+            r.max_in_flight,
+            r.avg_queue_wait_us,
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let (mode, label) = transport_mode();
     let smoke = is_smoke();
+    let depth_env = env_pipeline_depth();
     let dims = if smoke { &SMOKE } else { &FULL };
-    println!("== ps_throughput: transport={label}, smoke={smoke} ==");
+    println!(
+        "== ps_throughput: transport={label}, smoke={smoke}, pipeline_depth={depth_env} =="
+    );
 
     println!("== push throughput (deltas/s) vs shards, batch={} ==", dims.big_batch);
     for &shards in dims.shard_counts {
-        let (_g, m) = setup(dims, shards, mode.clone(), FaultPlan::reliable());
+        let (_g, _c, m) = setup(dims, shards, mode.clone(), FaultPlan::reliable(), depth_env);
         let rate = bench_push(dims, &m, dims.big_batch, dims.rounds);
         println!("  shards {shards:>3}: {rate:>12.0} deltas/s");
     }
 
     let mid_shards = if smoke { 2 } else { 4 };
     println!("== push throughput vs batch size ({mid_shards} shards) ==");
-    let (_g, m) = setup(dims, mid_shards, mode.clone(), FaultPlan::reliable());
+    let (_g, _c, m) = setup(dims, mid_shards, mode.clone(), FaultPlan::reliable(), depth_env);
     for &batch in dims.batch_sizes {
         let rate = bench_push(dims, &m, batch, (dims.big_batch * 10 / batch).max(2));
         println!("  batch {batch:>7}: {rate:>12.0} deltas/s");
@@ -127,6 +238,47 @@ fn main() {
         println!("  rows {rows:>6}: {rate:>12.0} rows/s");
     }
 
+    // The headline comparison: the same async workload (fire-and-forget
+    // pushes + overlapped pulls) through a serialized window (depth 1)
+    // vs a pipelined one (depth 8).
+    println!(
+        "== async pipelining, depth 1 vs 8 ({mid_shards} shards, batch={}, {} tickets) ==",
+        dims.async_batch, dims.async_rounds
+    );
+    let mut results: Vec<PipelineResult> = Vec::new();
+    for depth in [1usize, 8] {
+        let (g, client, m) = setup(dims, mid_shards, mode.clone(), FaultPlan::reliable(), depth);
+        let push_rate = bench_push_async(dims, &client, &m, dims.async_batch, dims.async_rounds);
+        let pull_rate = bench_pull_async(dims, &m, dims.async_pull_rows, dims.async_rounds);
+        let stats = g.transport().stats();
+        let max_in_flight = stats.iter().map(|s| s.max_in_flight()).max().unwrap_or(0);
+        let dispatched: u64 = stats.iter().map(|s| s.dispatched_ops()).sum();
+        let wait_sum: f64 = stats
+            .iter()
+            .map(|s| s.avg_queue_wait().as_secs_f64() * s.dispatched_ops() as f64)
+            .sum();
+        let avg_queue_wait_us =
+            if dispatched > 0 { wait_sum / dispatched as f64 * 1e6 } else { 0.0 };
+        println!(
+            "  depth {depth}: push {push_rate:>12.0} deltas/s, pull {pull_rate:>12.0} rows/s, \
+             max in-flight {max_in_flight}, avg queue wait {avg_queue_wait_us:.1} us"
+        );
+        results.push(PipelineResult {
+            depth,
+            push_rate,
+            pull_rate,
+            max_in_flight,
+            avg_queue_wait_us,
+        });
+    }
+    if let [d1, d8] = &results[..] {
+        println!(
+            "  speedup depth8/depth1: push {:.2}x, pull {:.2}x",
+            d8.push_rate / d1.push_rate,
+            d8.pull_rate / d1.pull_rate
+        );
+    }
+
     if mode == TransportMode::Sim {
         println!(
             "== exactly-once overhead under loss ({mid_shards} shards, batch={}) ==",
@@ -137,11 +289,15 @@ fn main() {
             ("1% loss", FaultPlan::lossy(0.01, 0.0)),
             ("5% loss", FaultPlan::lossy(0.05, 0.01)),
         ] {
-            let (_g, m) = setup(dims, mid_shards, mode.clone(), plan);
+            let (_g, _c, m) = setup(dims, mid_shards, mode.clone(), plan, depth_env);
             let rate = bench_push(dims, &m, dims.big_batch, dims.rounds.min(5));
             println!("  {label:>9}: {rate:>12.0} deltas/s");
         }
     } else {
         println!("== fault-injection section skipped (sim-only) ==");
     }
+
+    let json_path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_ps_throughput.json".to_string());
+    write_json(&json_path, label, smoke, depth_env, &results);
 }

@@ -4,10 +4,13 @@
 //! paper [7]).
 //!
 //! A sparse synthetic classification problem is trained by several
-//! workers in parallel: each pulls the weight coordinates its minibatch
-//! touches, computes gradients locally, and pushes additive updates —
-//! exactly the pull/push API the LDA trainer uses, demonstrating the PS
-//! is a general substrate.
+//! workers in parallel: each prefetches the weight coordinates the
+//! *next* minibatch touches while computing the current gradient
+//! (asynchronous pull tickets), and sends updates as fire-and-forget
+//! push tickets that are barriered once per epoch with `flush()` —
+//! exactly the ticket API the LDA trainer uses, demonstrating the PS is
+//! a general substrate and that asynchronous SGD tolerates the
+//! staleness (Li et al.'s model).
 //!
 //! ```sh
 //! cargo run --release --example logistic_regression
@@ -82,42 +85,64 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let workers = 4;
     let lr = 0.5f32;
 
+    // The coordinates a minibatch touches (sorted, deduplicated).
+    let touched_of = |batch: &[&Example]| {
+        let mut touched: Vec<u64> = batch.iter().flat_map(|e| e.idx.iter().copied()).collect();
+        touched.sort_unstable();
+        touched.dedup();
+        touched
+    };
+
     for epoch in 0..epochs {
         std::thread::scope(|scope| {
             for t in 0..workers {
                 let weights = weights.clone();
+                let touched_of = &touched_of;
                 let chunk: Vec<&Example> =
                     train.iter().skip(t).step_by(workers).collect();
                 scope.spawn(move || {
-                    for batch in chunk.chunks(32) {
-                        // Pull only the touched coordinates.
-                        let mut touched: Vec<u64> =
-                            batch.iter().flat_map(|e| e.idx.iter().copied()).collect();
-                        touched.sort_unstable();
-                        touched.dedup();
-                        let w = weights.pull(&touched).expect("pull");
+                    let batches: Vec<&[&Example]> = chunk.chunks(32).collect();
+                    if batches.is_empty() {
+                        return;
+                    }
+                    // Prefetch the first batch's coordinates, then keep
+                    // one pull ticket in flight ahead of the compute.
+                    let first = touched_of(batches[0]);
+                    let first_ticket = weights.pull_async(&first);
+                    let mut pending = Some((first, first_ticket));
+                    for (b, batch) in batches.iter().enumerate() {
+                        let (here, ticket) = pending.take().expect("ticket");
+                        let w = ticket.wait().expect("pull");
+                        if let Some(next) = batches.get(b + 1) {
+                            let coords = touched_of(next);
+                            let ticket = weights.pull_async(&coords);
+                            pending = Some((coords, ticket));
+                        }
                         let at = |i: u64| {
-                            w[touched.binary_search(&i).unwrap()]
+                            w[here.binary_search(&i).unwrap()]
                         };
                         // Accumulate sparse gradient.
-                        let mut grad = vec![0f32; touched.len()];
-                        for e in batch {
+                        let mut grad = vec![0f32; here.len()];
+                        for e in *batch {
                             let z: f32 =
                                 e.idx.iter().zip(&e.val).map(|(&i, &v)| at(i) * v).sum();
                             // dL/dz for logistic loss with labels ±1.
                             let g = -e.y * (1.0 - sigmoid(e.y * z));
                             for (&i, &v) in e.idx.iter().zip(&e.val) {
-                                grad[touched.binary_search(&i).unwrap()] += g * v;
+                                grad[here.binary_search(&i).unwrap()] += g * v;
                             }
                         }
                         let scale = -lr / batch.len() as f32;
                         let deltas: Vec<f32> = grad.iter().map(|&g| g * scale).collect();
-                        weights.push(&touched, &deltas).expect("push");
+                        // Fire-and-forget; the epoch-end flush barriers.
+                        let _ = weights.push_async(&here, &deltas);
                     }
                 });
             }
         });
-        // Evaluate on the full pulled vector.
+        // Epoch barrier: every fire-and-forget push has landed (and any
+        // push error surfaces) before evaluation reads the weights.
+        client.flush()?;
         let w = weights.pull_all()?;
         println!(
             "epoch {epoch}: train acc {:.3}, test acc {:.3}",

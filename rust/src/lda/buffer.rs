@@ -130,6 +130,63 @@ mod tests {
     }
 
     #[test]
+    fn flush_fires_exactly_at_cap_not_before() {
+        let mut b = UpdateBuffer::new(4, 0, 2);
+        for i in 0..3 {
+            assert!(b.add(10 + i, 0, 1).is_none(), "delta {i} is below cap");
+        }
+        // The 4th delta lands exactly at cap: the batch carries all 4 and
+        // the buffer restarts empty.
+        let batch = b.add(13, 1, -1).expect("flush at exactly cap");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.rows, vec![10, 11, 12, 13]);
+        assert_eq!(b.sparse_len(), 0);
+        // Refilling to cap flushes again at the same boundary.
+        for i in 0..3 {
+            assert!(b.add(20 + i, 0, 1).is_none());
+        }
+        assert_eq!(b.add(23, 0, 1).expect("second flush").len(), 4);
+    }
+
+    #[test]
+    fn hot_rows_aggregate_dense_tail_rows_go_sparse() {
+        let mut b = UpdateBuffer::new(100, 3, 2);
+        // Rows strictly below dense_rows aggregate locally...
+        assert!(b.add(0, 0, 1).is_none());
+        assert!(b.add(2, 1, 5).is_none());
+        assert_eq!(b.sparse_len(), 0);
+        // ...the boundary row (row == dense_rows) is the first tail row.
+        assert!(b.add(3, 0, 7).is_none());
+        assert_eq!(b.sparse_len(), 1);
+        let (rows, vals) = b.take_dense();
+        assert_eq!(rows, vec![0, 2]);
+        assert_eq!(vals, vec![1, 0, 0, 5]);
+        let sparse = b.take_sparse();
+        assert_eq!((sparse.rows, sparse.cols, sparse.values), (vec![3], vec![0], vec![7]));
+    }
+
+    #[test]
+    fn drains_are_idempotent() {
+        let mut b = UpdateBuffer::new(100, 2, 2);
+        assert!(b.add(0, 1, 3).is_none());
+        assert!(b.add(50, 0, -2).is_none());
+        let first_sparse = b.take_sparse();
+        let (first_rows, first_vals) = b.take_dense();
+        assert_eq!(first_sparse.len(), 1);
+        assert_eq!((first_rows, first_vals), (vec![0], vec![0, 3]));
+        // Draining again yields nothing: the first drain reset both
+        // halves...
+        assert!(b.take_sparse().is_empty());
+        let (rows, vals) = b.take_dense();
+        assert!(rows.is_empty() && vals.is_empty());
+        assert_eq!(b.buffered_total(), 0);
+        // ...and the buffer stays usable afterwards.
+        assert!(b.add(1, 0, 9).is_none());
+        let (rows, vals) = b.take_dense();
+        assert_eq!((rows, vals), (vec![1], vec![9, 0]));
+    }
+
+    #[test]
     fn zero_deltas_skipped() {
         let mut b = UpdateBuffer::new(10, 2, 2);
         assert!(b.add(0, 0, 0).is_none());

@@ -1,13 +1,19 @@
 //! Pipelined model pulls (paper §3.4).
 //!
 //! Workers pull the word-topic matrix in fixed-size row blocks. While a
-//! block is being resampled (compute-bound), the *next* block is already
-//! being pulled on a separate network thread, so the sampler never waits
-//! on the network once the pipeline is warm.
+//! block is being resampled (compute-bound), the next `depth` blocks are
+//! already in flight as asynchronous [`PullTicket`]s riding each shard's
+//! bounded window, so the sampler never waits on the network once the
+//! pipeline is warm.
+//!
+//! Shard errors propagate through the ticket into
+//! [`PullPipeline::next_block`]'s `Result` — there is no background
+//! thread left to panic; a transient failure surfaces to the sampling
+//! loop, which abandons the iteration cleanly.
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
 
-use crate::ps::client::BigMatrix;
+use crate::ps::client::{BigMatrix, PullTicket};
 use crate::util::error::Result;
 
 /// A pulled model block: the block index, the global row ids, and their
@@ -21,55 +27,64 @@ pub struct Block {
     pub values: Vec<i64>,
 }
 
-/// Iterator over model blocks, prefetched `depth` blocks ahead on a
-/// background thread.
+/// Iterator over model blocks, prefetched `depth` blocks ahead through
+/// asynchronous pull tickets.
 pub struct PullPipeline {
-    rx: mpsc::Receiver<Result<Block>>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    matrix: BigMatrix<i64>,
+    /// Blocks not yet issued, front first.
+    remaining: VecDeque<Vec<u64>>,
+    /// Issued-but-not-consumed pulls, in issue order.
+    inflight: VecDeque<(usize, Vec<u64>, PullTicket<i64>)>,
+    depth: usize,
+    next_index: usize,
 }
 
 impl PullPipeline {
     /// Start pulling `blocks` (each a list of global rows) from `matrix`.
     ///
-    /// `depth = 0` disables prefetching (each `next()` pulls
+    /// `depth = 0` disables prefetching (each `next_block` pulls
     /// synchronously — the non-pipelined ablation); `depth >= 1` keeps
-    /// that many blocks in flight.
+    /// that many block pulls in flight ahead of the consumer.
     pub fn start(matrix: BigMatrix<i64>, blocks: Vec<Vec<u64>>, depth: usize) -> PullPipeline {
-        let (tx, rx) = mpsc::sync_channel(depth.max(1) - 1 + 1);
-        let handle = std::thread::Builder::new()
-            .name("glint-pull-pipeline".into())
-            .spawn(move || {
-                for (index, rows) in blocks.into_iter().enumerate() {
-                    let result = matrix.pull_rows(&rows).map(|values| Block {
-                        index,
-                        rows,
-                        values,
-                    });
-                    let failed = result.is_err();
-                    if tx.send(result).is_err() || failed {
-                        return; // consumer gone or pull failed
-                    }
-                }
-            })
-            .expect("spawn pull pipeline");
-        PullPipeline { rx, handle: Some(handle) }
+        let mut pipeline = PullPipeline {
+            matrix,
+            remaining: blocks.into(),
+            inflight: VecDeque::new(),
+            depth,
+            next_index: 0,
+        };
+        pipeline.fill();
+        pipeline
     }
 
-    /// Next block, in order. `None` when exhausted.
-    pub fn next_block(&mut self) -> Option<Result<Block>> {
-        self.rx.recv().ok()
-    }
-}
-
-impl Drop for PullPipeline {
-    fn drop(&mut self) {
-        // Keep receiving until the producer exits (it stops at the end of
-        // the block list or on pull failure); this guarantees it is never
-        // left blocked on a full channel when we join.
-        while self.rx.recv().is_ok() {}
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+    /// Issue pulls until `depth` tickets are in flight (or no blocks
+    /// remain).
+    fn fill(&mut self) {
+        while self.inflight.len() < self.depth {
+            let Some(rows) = self.remaining.pop_front() else {
+                return;
+            };
+            let ticket = self.matrix.pull_rows_async(&rows);
+            self.inflight.push_back((self.next_index, rows, ticket));
+            self.next_index += 1;
         }
+    }
+
+    /// Next block, in order. `None` when exhausted; a pull failure
+    /// surfaces here as `Some(Err(..))` and leaves later blocks
+    /// unconsumed.
+    pub fn next_block(&mut self) -> Option<Result<Block>> {
+        if self.depth == 0 {
+            let rows = self.remaining.pop_front()?;
+            let index = self.next_index;
+            self.next_index += 1;
+            return Some(self.matrix.pull_rows(&rows).map(|values| Block { index, rows, values }));
+        }
+        let (index, rows, ticket) = self.inflight.pop_front()?;
+        let result = ticket.wait().map(|values| Block { index, rows, values });
+        // Keep the window full while the caller samples this block.
+        self.fill();
+        Some(result)
     }
 }
 
@@ -111,7 +126,7 @@ mod tests {
             cols: vec![0; 64],
             values: (0..64).map(|r| r as i64 + 1).collect(),
         };
-        m.push_coords(&deltas).unwrap();
+        m.push_coords(&deltas).expect("seed rows");
         (group, m)
     }
 
@@ -150,6 +165,22 @@ mod tests {
         assert_eq!(p.next_block().unwrap().unwrap().rows, vec![5]);
         assert_eq!(p.next_block().unwrap().unwrap().rows, vec![6]);
         assert!(p.next_block().is_none());
+    }
+
+    #[test]
+    fn deep_prefetch_outruns_consumption_safely() {
+        // More depth than blocks, and more blocks than the per-shard
+        // window: everything must still arrive exactly once, in order.
+        let (_g, m) = setup();
+        let blocks: Vec<Vec<u64>> = (0..16).map(|i| vec![i as u64 * 4]).collect();
+        let mut p = PullPipeline::start(m, blocks, 32);
+        let mut count = 0;
+        while let Some(b) = p.next_block() {
+            let b = b.unwrap();
+            assert_eq!(b.index, count);
+            count += 1;
+        }
+        assert_eq!(count, 16);
     }
 
     #[test]

@@ -10,14 +10,17 @@
 //! - `n_dk` — document-topic counts, local to each worker.
 //!
 //! Per iteration, each worker walks the model in word blocks: rows are
-//! **pulled in fixed-size sets** with the next set prefetched while the
-//! current one is being sampled (§3.4, [`crate::lda::pipeline`]); alias
-//! tables are built per pulled word; all of the partition's occurrences
-//! of those words are resampled; updates stream out through the
-//! [`crate::lda::buffer`] (§3.3) and are pushed **asynchronously** on a
-//! background flusher pool while sampling continues. An iteration
-//! barrier waits for all pushes (exactly-once, §2.4) before the next
-//! iteration pulls.
+//! **pulled in fixed-size sets** with the next sets prefetched as
+//! asynchronous pull tickets while the current one is being sampled
+//! (§3.4, [`crate::lda::pipeline`]); alias tables are built per pulled
+//! word; all of the partition's occurrences of those words are
+//! resampled; updates stream out through the [`crate::lda::buffer`]
+//! (§3.3) as **fire-and-forget push tickets** riding each shard's
+//! bounded in-flight window while sampling continues. The iteration
+//! barrier is [`crate::ps::client::PsClient::flush`]: it drains every
+//! outstanding push (exactly-once, §2.4) — and surfaces any push error —
+//! before the next iteration pulls, before perplexity evaluation, and
+//! before checkpointing.
 //!
 //! Fault tolerance (§3.5): assignments are checkpointed after each
 //! iteration; [`Trainer::restore`] rebuilds the parameter-server count
@@ -38,13 +41,12 @@ use crate::log_info;
 use crate::metrics::{Report, Row};
 use crate::net::tcp::{resolve_addrs, TcpTransport};
 use crate::net::{FaultPlan, Transport};
-use crate::ps::client::{BigMatrix, BigVector, CoordDeltas, PsClient};
+use crate::ps::client::{BigMatrix, BigVector, PsClient};
 use crate::ps::config::{PsConfig, TransportMode};
 use crate::ps::partition::PartitionScheme;
 use crate::ps::server::ServerGroup;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
-use crate::util::threadpool::ThreadPool;
 use crate::util::timer::Stopwatch;
 
 /// Trainer configuration.
@@ -72,7 +74,9 @@ pub struct TrainConfig {
     /// 2,000).
     pub dense_top_words: u64,
     /// Prefetch depth for model pulls (0 disables pipelining — §3.4
-    /// ablation).
+    /// ablation). Also sizes the parameter-server client's per-shard
+    /// in-flight window ([`PsConfig::pipeline_depth`], floored at 2 so
+    /// push flushes still overlap sampling).
     pub pipeline_depth: usize,
     /// Row partitioning scheme on the servers (paper: cyclic).
     pub scheme: PartitionScheme,
@@ -163,6 +167,7 @@ fn start_parameter_servers(
                 shards: resolved.len(),
                 scheme: cfg.scheme,
                 transport: cfg.transport.clone(),
+                pipeline_depth: cfg.pipeline_depth.max(2),
                 ..PsConfig::default()
             };
             let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
@@ -178,6 +183,7 @@ fn start_parameter_servers(
                 shards: cfg.shards,
                 scheme: cfg.scheme,
                 transport: cfg.transport.clone(),
+                pipeline_depth: cfg.pipeline_depth.max(2),
                 ..PsConfig::default()
             };
             let group = ServerGroup::start(ps_cfg.clone(), cfg.fault.clone(), cfg.seed ^ 0x9d);
@@ -213,7 +219,6 @@ pub struct Trainer {
     n_wk: BigMatrix<i64>,
     n_k: BigVector<i64>,
     workers: Vec<WorkerState>,
-    flusher: ThreadPool,
     vocab_size: u32,
     completed_iterations: u32,
     /// Per-iteration report (perplexity curve, throughput).
@@ -241,7 +246,6 @@ impl Trainer {
             n_wk,
             n_k,
             workers: Vec::new(),
-            flusher: ThreadPool::new(cfg.workers.max(2)),
             vocab_size: corpus.vocab_size,
             completed_iterations: 0,
             report: Report::new(),
@@ -296,7 +300,6 @@ impl Trainer {
             n_wk,
             n_k,
             workers: Vec::new(),
-            flusher: ThreadPool::new(cfg.workers.max(2)),
             vocab_size: corpus.vocab_size,
             completed_iterations: completed,
             report: Report::new(),
@@ -373,7 +376,8 @@ impl Trainer {
     }
 
     /// Push every worker's initial counts to the parameter server
-    /// (buffered, same path as training updates).
+    /// (buffered fire-and-forget tickets, same path as training updates;
+    /// the trailing `flush` is the completion barrier).
     fn push_initial_counts(&mut self) -> Result<()> {
         let k = self.cfg.num_topics;
         let mut nk_local = vec![0i64; k as usize];
@@ -388,18 +392,18 @@ impl Trainer {
                 for &(local, pos) in occs {
                     let z = ws.assignments[local as usize][pos as usize];
                     if let Some(batch) = buffer.add(w as u64, z, 1) {
-                        self.n_wk.push_coords(&batch)?;
+                        let _ = self.n_wk.push_coords_async(&batch);
                     }
                 }
             }
         }
         let rest = buffer.take_sparse();
-        self.n_wk.push_coords(&rest)?;
+        let _ = self.n_wk.push_coords_async(&rest);
         let (rows, values) = buffer.take_dense();
-        self.n_wk.push_rows(&rows, &values)?;
+        let _ = self.n_wk.push_rows_async(&rows, &values);
         let idx: Vec<u64> = (0..k as u64).collect();
-        self.n_k.push(&idx, &nk_local)?;
-        Ok(())
+        let _ = self.n_k.push_async(&idx, &nk_local);
+        self.client.flush()
     }
 
     /// Run the configured number of iterations; returns the final model
@@ -454,7 +458,6 @@ impl Trainer {
         let cfg = &self.cfg;
         let hyper = self.hyper;
         let v = self.vocab_size;
-        let flusher = &self.flusher;
         let errors: Mutex<Vec<Error>> = Mutex::new(Vec::new());
         let totals = Mutex::new(IterStats::default());
 
@@ -464,17 +467,7 @@ impl Trainer {
                 let errors = &errors;
                 let totals = &totals;
                 scope.spawn(move || {
-                    match worker_iteration(
-                        ws,
-                        cfg,
-                        hyper,
-                        v,
-                        k,
-                        nk_snapshot,
-                        n_wk,
-                        n_k_handle,
-                        flusher,
-                    ) {
+                    match worker_iteration(ws, cfg, hyper, v, k, nk_snapshot, n_wk, n_k_handle) {
                         Ok(stats) => {
                             let mut t = totals.lock().unwrap();
                             t.tokens += stats.tokens;
@@ -486,12 +479,15 @@ impl Trainer {
                 });
             }
         });
-        // Iteration barrier: all asynchronous pushes must have landed
-        // before the next iteration's pulls (and before checkpointing).
-        self.flusher.wait_idle();
+        // Iteration barrier: every fire-and-forget push must have landed
+        // before the next iteration's pulls (and before checkpointing or
+        // evaluation); flush also surfaces push errors whose tickets
+        // were dropped by the workers.
+        let flushed = self.client.flush();
         if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
             return Err(e);
         }
+        flushed?;
         self.completed_iterations += 1;
         let mut stats = totals.into_inner().unwrap();
         stats.seconds = sw.secs();
@@ -515,12 +511,19 @@ impl Trainer {
 
     /// Pull the full model off the parameter server.
     pub fn pull_model(&self) -> Result<TopicModel> {
-        let rows: Vec<u64> = (0..self.vocab_size as u64).collect();
-        // Pull in chunks to keep messages bounded.
+        // Pull in 8192-row chunks through the same bounded prefetch
+        // pipeline (and at the same depth) the sampler uses (§3.4):
+        // later chunks are in flight while earlier ones are copied out,
+        // without unbounded result buffering — and `pipeline_depth = 0`
+        // keeps the synchronous ablation truly synchronous here too.
         let k = self.cfg.num_topics as usize;
+        let rows: Vec<u64> = (0..self.vocab_size as u64).collect();
+        let chunks: Vec<Vec<u64>> = rows.chunks(8192).map(|c| c.to_vec()).collect();
+        let mut pipeline =
+            PullPipeline::start(self.n_wk.clone(), chunks, self.cfg.pipeline_depth);
         let mut n_wk = Vec::with_capacity(self.vocab_size as usize * k);
-        for chunk in rows.chunks(8192) {
-            n_wk.extend(self.n_wk.pull_rows(chunk)?);
+        while let Some(block) = pipeline.next_block() {
+            n_wk.extend(block?.values);
         }
         let n_k = self.n_k.pull_all()?;
         Ok(TopicModel { k: self.cfg.num_topics, v: self.vocab_size, n_wk, n_k, hyper: self.hyper })
@@ -592,6 +595,11 @@ impl Trainer {
 }
 
 /// One worker's full sweep over its partition.
+///
+/// Sparse batches leave as fire-and-forget push tickets the moment the
+/// buffer fills; the shard windows backpressure the sampler if the
+/// network falls behind, and the iteration-end `flush` in
+/// [`Trainer::run_iteration`] is where their errors surface.
 #[allow(clippy::too_many_arguments)]
 fn worker_iteration(
     ws: &mut WorkerState,
@@ -602,7 +610,6 @@ fn worker_iteration(
     mut nk_local: Vec<i64>,
     n_wk: &BigMatrix<i64>,
     n_k: &BigVector<i64>,
-    flusher: &ThreadPool,
 ) -> Result<IterStats> {
     let kk = k as usize;
     let mut stats = IterStats::default();
@@ -650,11 +657,11 @@ fn worker_iteration(
                     nk_delta[z_old as usize] -= 1;
                     nk_delta[z_new as usize] += 1;
                     if let Some(batch) = buffer.add(wu, z_old, -1) {
-                        flush_async(flusher, n_wk, batch);
+                        let _ = n_wk.push_coords_async(&batch);
                         stats.sparse_batches += 1;
                     }
                     if let Some(batch) = buffer.add(wu, z_new, 1) {
-                        flush_async(flusher, n_wk, batch);
+                        let _ = n_wk.push_coords_async(&batch);
                         stats.sparse_batches += 1;
                     }
                 }
@@ -663,41 +670,22 @@ fn worker_iteration(
     }
 
     // End-of-iteration flushes: remaining sparse triples, the dense
-    // hot-word aggregate (§3.3), and this worker's n_k drift.
+    // hot-word aggregate (§3.3), and this worker's n_k drift — all
+    // fire-and-forget; run_iteration's flush() barrier collects them.
     let rest = buffer.take_sparse();
     if !rest.is_empty() {
-        flush_async(flusher, n_wk, rest);
+        let _ = n_wk.push_coords_async(&rest);
         stats.sparse_batches += 1;
     }
     let (rows, values) = buffer.take_dense();
     if !rows.is_empty() {
-        let m = n_wk.clone();
-        flusher.execute(move || {
-            if let Err(e) = m.push_rows(&rows, &values) {
-                crate::log_error!("dense push failed: {e}");
-            }
-        });
+        let _ = n_wk.push_rows_async(&rows, &values);
     }
     if nk_delta.iter().any(|&d| d != 0) {
         let idx: Vec<u64> = (0..kk as u64).collect();
-        let vals = nk_delta.clone();
-        let vec_handle = n_k.clone();
-        flusher.execute(move || {
-            if let Err(e) = vec_handle.push(&idx, &vals) {
-                crate::log_error!("n_k push failed: {e}");
-            }
-        });
+        let _ = n_k.push_async(&idx, &nk_delta);
     }
     Ok(stats)
-}
-
-fn flush_async(flusher: &ThreadPool, n_wk: &BigMatrix<i64>, batch: CoordDeltas<i64>) {
-    let m = n_wk.clone();
-    flusher.execute(move || {
-        if let Err(e) = m.push_coords(&batch) {
-            crate::log_error!("async push failed: {e}");
-        }
-    });
 }
 
 #[cfg(test)]
@@ -787,6 +775,21 @@ mod tests {
         assert_eq!(model_before.n_wk, model_after.n_wk, "rebuilt n_wk must match");
         assert_eq!(model_before.n_k, model_after.n_k);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overlapped_pipeline_keeps_counts_exact() {
+        // Deep prefetch + small buffer cap = many fire-and-forget pushes
+        // overlapping sampling; the flush barrier must still leave the
+        // server tables exactly equal to the assignments.
+        let c = corpus();
+        let mut cfg = fast_cfg();
+        cfg.pipeline_depth = 4;
+        cfg.buffer_cap = 100;
+        let mut t = Trainer::new(cfg, &c).unwrap();
+        t.run_iteration().unwrap();
+        t.run_iteration().unwrap();
+        t.verify_counts().unwrap();
     }
 
     #[test]

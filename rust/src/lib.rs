@@ -6,16 +6,20 @@
 //! The crate provides:
 //!
 //! - [`ps`] — **Glint**, an asynchronous parameter server: distributed
-//!   matrices/vectors with `pull`/`push`, cyclic row partitioning,
-//!   retrying pulls with exponential back-off and an *exactly-once*
-//!   hand-shake protocol for pushes, running over pluggable at-most-once
-//!   transports ([`net`]): an in-process fault-injectable simulator and
-//!   a real TCP backend (length-prefixed frames, `serve`/`--connect`
-//!   multi-process deployments).
+//!   matrices/vectors with ticket-based `pull`/`push` (`_async` variants
+//!   return wait()-able tickets riding bounded per-shard in-flight
+//!   windows, with `flush()` as the cross-ticket barrier), cyclic row
+//!   partitioning, retrying pulls with exponential back-off and an
+//!   *exactly-once* hand-shake protocol for pushes, running over
+//!   pluggable at-most-once transports ([`net`]): an in-process
+//!   fault-injectable simulator and a real TCP backend
+//!   (correlation-tagged frames multiplexed over one connection per
+//!   shard, `serve`/`--connect` multi-process deployments).
 //! - [`lda`] — a distributed **LightLDA** sampler (Metropolis–Hastings
 //!   collapsed Gibbs with amortized O(1) per-token complexity) built on
-//!   the parameter server, with push buffering, pipelined model pulls and
-//!   checkpoint-based fault tolerance.
+//!   the parameter server, with push buffering, prefetched model pulls
+//!   overlapping sampling with communication, and checkpoint-based fault
+//!   tolerance.
 //! - [`baselines`] — faithful re-implementations of Spark MLlib's
 //!   variational EM LDA and Online LDA, with a shuffle-write accounting
 //!   model, used as comparison points for the paper's Table 1.

@@ -1,15 +1,47 @@
 //! Length-prefixed framing for byte-stream transports.
 //!
-//! Every message on a TCP connection is one frame: a 4-byte little-endian
-//! payload length followed by the payload bytes. The length prefix is
-//! bounded by [`MAX_FRAME_LEN`] so a corrupt or hostile prefix cannot
-//! trigger an unbounded allocation; the paper's largest messages (~2 MB
-//! push buffers, §3.3) fit with two orders of magnitude to spare.
+//! Two frame layouts share one connection model:
+//!
+//! - **plain frames** ([`write_frame`]/[`read_frame`]) — a 4-byte
+//!   little-endian payload length followed by the payload bytes. One
+//!   request/reply at a time per stream.
+//! - **tagged frames** ([`write_tagged_frame`]/[`read_tagged_frame`]) —
+//!   the same length prefix followed by an 8-byte little-endian
+//!   *correlation id*, then the payload. The correlation id lets many
+//!   requests share one connection concurrently: the peer echoes the id
+//!   on the reply, and the reader matches responses back to waiters even
+//!   when they complete out of order. This is what the multiplexed TCP
+//!   transport speaks.
+//!
+//! The length prefix is bounded by [`MAX_FRAME_LEN`] so a corrupt or
+//! hostile prefix cannot trigger an unbounded allocation; the paper's
+//! largest messages (~2 MB push buffers, §3.3) fit with two orders of
+//! magnitude to spare.
 
 use std::io::{self, Read, Write};
 
 /// Maximum accepted frame payload (64 MiB).
 pub const MAX_FRAME_LEN: usize = 64 * 1024 * 1024;
+
+/// Byte length of a tagged-frame header (`u32` length + `u64`
+/// correlation id).
+pub const TAGGED_HEADER_LEN: usize = 12;
+
+/// Split a tagged-frame header into `(payload_len, correlation_id)`,
+/// validating the length prefix. The single place the tagged header
+/// layout is decoded — shared by [`read_tagged_frame`] and the
+/// timeout-tolerant reader loop in the TCP transport.
+pub fn parse_tagged_header(header: &[u8; TAGGED_HEADER_LEN]) -> io::Result<(usize, u64)> {
+    let len = u32::from_le_bytes(header[0..4].try_into().expect("4-byte slice")) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length prefix {len} exceeds MAX_FRAME_LEN"),
+        ));
+    }
+    let corr = u64::from_le_bytes(header[4..12].try_into().expect("8-byte slice"));
+    Ok((len, corr))
+}
 
 /// Write one `length + payload` frame and flush the stream.
 ///
@@ -40,6 +72,42 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
         return Ok(None);
     }
     let len = u32::from_le_bytes(header) as usize;
+    read_payload(r, len).map(Some)
+}
+
+/// Write one `length + correlation id + payload` frame and flush the
+/// stream, as one buffer (see [`write_frame`] for why).
+pub fn write_tagged_frame<W: Write>(w: &mut W, corr: u64, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {} bytes exceeds MAX_FRAME_LEN", payload.len()),
+        ));
+    }
+    let mut buf = Vec::with_capacity(12 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&corr.to_le_bytes());
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Read one tagged frame: `Ok(Some((correlation_id, payload)))`, or
+/// `Ok(None)` on a clean EOF at a frame boundary. Error conditions match
+/// [`read_frame`].
+pub fn read_tagged_frame<R: Read>(r: &mut R) -> io::Result<Option<(u64, Vec<u8>)>> {
+    let mut header = [0u8; TAGGED_HEADER_LEN];
+    if !read_header(r, &mut header)? {
+        return Ok(None);
+    }
+    let (len, corr) = parse_tagged_header(&header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some((corr, payload)))
+}
+
+/// Validate the decoded length prefix and read that many payload bytes.
+fn read_payload<R: Read>(r: &mut R, len: usize) -> io::Result<Vec<u8>> {
     if len > MAX_FRAME_LEN {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
@@ -48,12 +116,12 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
     }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
-    Ok(Some(payload))
+    Ok(payload)
 }
 
-/// Fill the 4-byte header, tolerating partial reads. `Ok(false)` when the
-/// stream is already at EOF; an error when EOF lands mid-header.
-fn read_header<R: Read>(r: &mut R, header: &mut [u8; 4]) -> io::Result<bool> {
+/// Fill a fixed-size header, tolerating partial reads. `Ok(false)` when
+/// the stream is already at EOF; an error when EOF lands mid-header.
+fn read_header<R: Read>(r: &mut R, header: &mut [u8]) -> io::Result<bool> {
     let mut filled = 0;
     while filled < header.len() {
         match r.read(&mut header[filled..]) {
@@ -158,6 +226,49 @@ mod tests {
         write_frame(&mut buf, b"abcdef").unwrap();
         buf.truncate(6); // header + 2 of 6 payload bytes
         assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_tagged_frames() {
+        let mut buf = Vec::new();
+        write_tagged_frame(&mut buf, 7, b"hello").unwrap();
+        write_tagged_frame(&mut buf, u64::MAX, b"").unwrap();
+        write_tagged_frame(&mut buf, 0, &[3u8; 500]).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_tagged_frame(&mut r).unwrap().unwrap(), (7, b"hello".to_vec()));
+        assert_eq!(read_tagged_frame(&mut r).unwrap().unwrap(), (u64::MAX, Vec::new()));
+        assert_eq!(read_tagged_frame(&mut r).unwrap().unwrap(), (0, vec![3u8; 500]));
+        assert!(read_tagged_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn tagged_partial_reads_reassemble() {
+        let mut buf = Vec::new();
+        write_tagged_frame(&mut buf, 0xdead_beef, b"byte at a time").unwrap();
+        let mut r = OneByteReader { inner: Cursor::new(buf) };
+        let (corr, payload) = read_tagged_frame(&mut r).unwrap().unwrap();
+        assert_eq!(corr, 0xdead_beef);
+        assert_eq!(payload, b"byte at a time");
+        assert!(read_tagged_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn tagged_oversized_length_prefix_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_LEN as u32 + 1).to_le_bytes());
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        let err = read_tagged_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn tagged_eof_inside_header_errors() {
+        let mut buf = Vec::new();
+        write_tagged_frame(&mut buf, 9, b"abcdef").unwrap();
+        buf.truncate(6); // half the 12-byte header
+        let err = read_tagged_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
     }
 
     #[test]

@@ -11,11 +11,13 @@
 //!   configurable fault injection ([`FaultPlan`]): dropped requests,
 //!   dropped replies, duplicated deliveries, added latency. The protocol
 //!   test bed.
-//! - [`tcp::TcpTransport`] — real TCP with length-prefixed frames
-//!   ([`frame`]), pooled client connections and reconnect-on-error. The
-//!   multi-process deployment path; here the *network itself* supplies
-//!   the at-most-once behavior (timeouts, dead peers, dropped
-//!   connections).
+//! - [`tcp::TcpTransport`] — real TCP with correlation-tagged,
+//!   length-prefixed frames ([`frame`]): one multiplexed connection per
+//!   shard carries any number of concurrently outstanding requests, with
+//!   responses matched back to waiters by correlation id (out-of-order
+//!   completion is fine) and reconnect-on-error. The multi-process
+//!   deployment path; here the *network itself* supplies the
+//!   at-most-once behavior (timeouts, dead peers, dropped connections).
 //!
 //! Requests and replies are fully serialized through [`crate::util::codec`]
 //! in both cases, so measured message *sizes* are faithful (the paper

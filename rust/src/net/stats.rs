@@ -1,9 +1,13 @@
 //! Per-endpoint traffic counters.
 //!
 //! These power the Fig. 5 load-balance measurement (requests per machine)
-//! and the network-volume columns of the experiment reports.
+//! and the network-volume columns of the experiment reports. The
+//! in-flight / queue-wait counters instrument the asynchronous client
+//! dispatchers so pipelining wins show up in the `ps_throughput` bench
+//! summary.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// Lock-free counters for one endpoint (shard).
 #[derive(Debug, Default)]
@@ -16,6 +20,16 @@ pub struct EndpointStats {
     dropped_replies: AtomicU64,
     duplicates: AtomicU64,
     timeouts: AtomicU64,
+    /// Asynchronous operations currently in this shard's window
+    /// (submitted, not yet completed).
+    in_flight: AtomicU64,
+    /// High-water mark of `in_flight`.
+    max_in_flight: AtomicU64,
+    /// Total time ops spent queued before a dispatcher worker picked
+    /// them up, in nanoseconds.
+    queue_wait_nanos: AtomicU64,
+    /// Ops whose queue wait has been recorded.
+    dispatched_ops: AtomicU64,
 }
 
 impl EndpointStats {
@@ -90,6 +104,48 @@ impl EndpointStats {
     pub fn timeouts(&self) -> u64 {
         self.timeouts.load(Ordering::Relaxed)
     }
+
+    /// Record an async op entering this shard's in-flight window.
+    pub fn record_op_submitted(&self) {
+        let now = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.max_in_flight.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Record an async op leaving the window (completed).
+    pub fn record_op_completed(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Record how long an op waited in the dispatcher queue before a
+    /// worker picked it up.
+    pub fn record_queue_wait(&self, wait: Duration) {
+        self.queue_wait_nanos.fetch_add(wait.as_nanos() as u64, Ordering::Relaxed);
+        self.dispatched_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Async ops currently in flight against this shard.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of concurrently in-flight async ops.
+    pub fn max_in_flight(&self) -> u64 {
+        self.max_in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Ops dispatched through the async window so far.
+    pub fn dispatched_ops(&self) -> u64 {
+        self.dispatched_ops.load(Ordering::Relaxed)
+    }
+
+    /// Mean queue wait of dispatched ops (zero when none ran).
+    pub fn avg_queue_wait(&self) -> Duration {
+        let ops = self.dispatched_ops.load(Ordering::Relaxed);
+        if ops == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.queue_wait_nanos.load(Ordering::Relaxed) / ops)
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +164,24 @@ mod tests {
         assert_eq!(s.replies(), 1);
         assert_eq!(s.bytes_received(), 25);
         assert_eq!(s.timeouts(), 1);
+    }
+
+    #[test]
+    fn in_flight_window_tracks_depth_and_wait() {
+        let s = EndpointStats::default();
+        s.record_op_submitted();
+        s.record_op_submitted();
+        s.record_op_submitted();
+        assert_eq!(s.in_flight(), 3);
+        s.record_op_completed();
+        s.record_op_completed();
+        assert_eq!(s.in_flight(), 1);
+        assert_eq!(s.max_in_flight(), 3);
+        assert_eq!(s.avg_queue_wait(), Duration::ZERO);
+        s.record_queue_wait(Duration::from_micros(10));
+        s.record_queue_wait(Duration::from_micros(30));
+        assert_eq!(s.dispatched_ops(), 2);
+        assert_eq!(s.avg_queue_wait(), Duration::from_micros(20));
     }
 
     #[test]

@@ -1,70 +1,286 @@
-//! Real TCP transport: length-prefixed frames over `std::net`.
+//! Real TCP transport: correlation-tagged, length-prefixed frames over
+//! `std::net`, multiplexed over one connection per shard.
 //!
-//! The client side ([`TcpTransport`]) keeps a small pool of reusable
-//! connections per shard endpoint and dials a fresh connection whenever
-//! the pool is empty or a round-trip fails. The server side
-//! ([`TcpServer`]) runs one listener per hosted shard with one handler
-//! thread per accepted connection; handlers forward decoded frames into
-//! the shard's [`Inbox`], so the single-threaded serve loop of
-//! [`crate::ps::server`] is shared verbatim with the simulated transport.
+//! The client side ([`TcpTransport`]) keeps **one** connection per shard
+//! endpoint and multiplexes every concurrently outstanding request over
+//! it: each request is written as a tagged frame
+//! ([`super::frame::write_tagged_frame`]) carrying a correlation id, and
+//! a per-connection reader thread matches replies back to their waiters
+//! by that id — responses may complete in any order. A request that
+//! times out simply abandons its correlation id; a late reply finds no
+//! waiter and is dropped, so the connection stays usable (no framing
+//! desynchronization is possible). Only dial/write/read *errors* discard
+//! the connection and force a redial.
+//!
+//! The server side ([`TcpServer`]) runs one listener per hosted shard.
+//! Each accepted connection gets a reader that forwards decoded frames
+//! into the shard's [`Inbox`] — so many requests from one connection can
+//! be outstanding at once — and a writer thread that sends the shard's
+//! replies back under the request's correlation id. The single-threaded
+//! serve loop of [`crate::ps::server`] is shared verbatim with the
+//! simulated transport.
 //!
 //! Delivery semantics are the same **at-most-once** contract the
 //! simulated transport models: any dial/write/read failure or timeout is
-//! reported as a lost message (`Err(())`), the connection is discarded
-//! (a late reply must never desynchronize the framing), and the
-//! retry/exactly-once machinery in `ps/client.rs` takes over unchanged.
+//! reported as a lost message (`Err(())`) and the retry/exactly-once
+//! machinery in `ps/client.rs` takes over unchanged.
 
-use std::io;
-use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::HashMap;
+use std::io::{self, Read};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::error::{Error, Result};
 
-use super::frame::{read_frame, write_frame};
+use super::frame::{parse_tagged_header, read_tagged_frame, write_tagged_frame, TAGGED_HEADER_LEN};
 use super::stats::EndpointStats;
 use super::{Endpoint, EndpointInner, Envelope, Inbox, Transport};
 
-/// Idle connections kept per endpoint for reuse.
-const POOL_CAP: usize = 16;
 /// Dial timeout for new connections (further clamped to the request
 /// timeout).
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
-/// How long a server-side connection handler waits for the shard's reply
+/// How long a server-side connection writer waits for the shard's reply
 /// before abandoning the connection.
 const HANDLER_REPLY_TIMEOUT: Duration = Duration::from_secs(60);
 /// Polling interval of the nonblocking accept loops.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
+/// How often an idle mux reader wakes up to check whether its connection
+/// is still referenced by anyone.
+const MUX_IDLE_POLL: Duration = Duration::from_secs(2);
+/// Consecutive round-trip timeouts (with no frame arriving in between)
+/// before a mux connection is *suspected* wedged. One timeout is always
+/// tolerated — a slow shard reply is normal and matching by correlation
+/// id makes late replies harmless.
+const MUX_SUSPECT_TIMEOUTS: u32 = 2;
+/// A suspected connection is only torn down when, additionally, nothing
+/// at all has arrived on it for this long. A brief server stall under a
+/// deep pipeline trips the strike counter from several waiters at once;
+/// the quiet-period requirement keeps that from aborting every in-flight
+/// request, while a dead-but-open socket (which delivers nothing, ever)
+/// still gets redialed instead of consuming the whole retry budget.
+const MUX_WEDGE_QUIET: Duration = Duration::from_secs(2);
 
-/// Client half of one shard connection: an address plus a pool of
-/// reusable streams. Cheap to clone; clones share the pool.
+/// One multiplexed client connection: a shared write half plus a reader
+/// thread that routes tagged replies to waiters by correlation id.
+struct MuxConn {
+    /// Write half; concurrent requests serialize their frames through
+    /// this lock (one `write_all` per frame keeps frames atomic).
+    writer: Mutex<TcpStream>,
+    /// Dedicated handle for [`MuxConn::kill`] to shut the socket down
+    /// (shutdown acts on the shared underlying socket) without
+    /// contending on the writer mutex — a kill must never wait behind a
+    /// slow in-progress write.
+    closer: TcpStream,
+    /// Reply waiters keyed by correlation id.
+    pending: Mutex<HashMap<u64, mpsc::SyncSender<Vec<u8>>>>,
+    /// Set once the connection is known broken; round-trips then dial a
+    /// replacement.
+    dead: AtomicBool,
+    /// Round-trip timeouts since the last frame arrived (any frame —
+    /// progress proves the connection alive). See
+    /// [`MUX_SUSPECT_TIMEOUTS`].
+    strikes: AtomicU32,
+    /// When the last frame arrived (dial time initially). See
+    /// [`MUX_WEDGE_QUIET`].
+    last_rx: Mutex<Instant>,
+}
+
+impl MuxConn {
+    /// Dial `addr` and start the reader thread.
+    fn dial(addr: &SocketAddr, budget: Duration) -> std::result::Result<Arc<MuxConn>, ()> {
+        let stream = TcpStream::connect_timeout(addr, budget).map_err(|_| ())?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream.try_clone().map_err(|_| ())?;
+        let closer = stream.try_clone().map_err(|_| ())?;
+        let conn = Arc::new(MuxConn {
+            writer: Mutex::new(stream),
+            closer,
+            pending: Mutex::new(HashMap::new()),
+            dead: AtomicBool::new(false),
+            strikes: AtomicU32::new(0),
+            last_rx: Mutex::new(Instant::now()),
+        });
+        let handle = Arc::clone(&conn);
+        if std::thread::Builder::new()
+            .name("glint-tcp-mux".into())
+            .spawn(move || mux_reader_loop(read_half, &handle))
+            .is_err()
+        {
+            return Err(());
+        }
+        Ok(conn)
+    }
+
+    /// Record byte arrival: the connection is alive, however slowly.
+    fn mark_progress(&self) {
+        self.strikes.store(0, Ordering::Relaxed);
+        *self.last_rx.lock().unwrap() = Instant::now();
+    }
+
+    /// Mark the connection broken and close the socket, which wakes the
+    /// reader and errors out any in-progress write (it fails any
+    /// still-parked waiters on exit). Never blocks on the writer mutex.
+    fn kill(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+        let _ = self.closer.shutdown(Shutdown::Both);
+        self.pending.lock().unwrap().clear();
+    }
+}
+
+/// Reader half of a [`MuxConn`]: decode tagged frames and hand each
+/// payload to the waiter registered under its correlation id. Replies
+/// whose waiter already gave up (timed out) are dropped — the retry
+/// machinery owns recovery, and matching by id means a late reply can
+/// never be mistaken for the answer to a different request.
+fn mux_reader_loop(mut stream: TcpStream, conn: &Arc<MuxConn>) {
+    let _ = stream.set_read_timeout(Some(MUX_IDLE_POLL));
+    let mut header = [0u8; TAGGED_HEADER_LEN];
+    loop {
+        if !read_full(&mut stream, &mut header, conn) {
+            break;
+        }
+        let Ok((len, corr)) = parse_tagged_header(&header) else {
+            break; // corrupt prefix: the stream cannot be trusted
+        };
+        let mut payload = vec![0u8; len];
+        if !read_full(&mut stream, &mut payload, conn) {
+            break;
+        }
+        if let Some(tx) = conn.pending.lock().unwrap().remove(&corr) {
+            let _ = tx.try_send(payload);
+        }
+    }
+    conn.dead.store(true, Ordering::SeqCst);
+    // Drop the senders of any still-parked waiters so they fail fast
+    // instead of running out their full timeout.
+    conn.pending.lock().unwrap().clear();
+}
+
+/// Fill `buf` completely from the socket, tolerating read timeouts:
+/// every received byte marks progress (holding off wedge detection —
+/// a large frame trickling in over a slow link is alive), and a timeout
+/// only finishes the connection when it was killed or nothing references
+/// it any more. Active round-trips hold an `Arc`, so a strong count
+/// of 1 means no result could ever be delivered and exiting is always
+/// safe, even mid-frame. Returns `false` when the connection is done
+/// (EOF, I/O error, killed, or unreferenced).
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], conn: &Arc<MuxConn>) -> bool {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                filled += n;
+                conn.mark_progress();
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                if conn.dead.load(Ordering::SeqCst) || Arc::strong_count(conn) <= 1 {
+                    return false;
+                }
+            }
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// True for the error kinds a socket read timeout surfaces as.
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Client half of one shard connection: the address plus the current
+/// multiplexed connection. Cheap to clone; clones share the connection.
 #[derive(Clone)]
 pub(crate) struct TcpEndpoint {
     addr: SocketAddr,
-    pool: Arc<Mutex<Vec<TcpStream>>>,
+    conn: Arc<Mutex<Option<Arc<MuxConn>>>>,
+    /// Correlation-id allocator for this endpoint.
+    next_corr: Arc<AtomicU64>,
 }
 
 impl TcpEndpoint {
     pub(crate) fn new(addr: SocketAddr) -> TcpEndpoint {
-        TcpEndpoint { addr, pool: Arc::new(Mutex::new(Vec::new())) }
-    }
-
-    fn checkout(&self) -> Option<TcpStream> {
-        self.pool.lock().unwrap().pop()
-    }
-
-    fn checkin(&self, stream: TcpStream) {
-        let mut pool = self.pool.lock().unwrap();
-        if pool.len() < POOL_CAP {
-            pool.push(stream);
+        TcpEndpoint {
+            addr,
+            conn: Arc::new(Mutex::new(None)),
+            next_corr: Arc::new(AtomicU64::new(1)),
         }
     }
 
+    /// The live mux connection, dialing a replacement when there is none
+    /// or the current one is dead. The (possibly seconds-long) dial runs
+    /// *outside* the endpoint lock so concurrent round-trips to an
+    /// unreachable shard each fail on their own clock instead of
+    /// serializing behind one another; racing re-dials are resolved by
+    /// keeping whichever connection was installed first.
+    fn connect(
+        &self,
+        started: Instant,
+        timeout: Duration,
+        deadline: Instant,
+    ) -> std::result::Result<Arc<MuxConn>, ()> {
+        {
+            let mut guard = self.conn.lock().unwrap();
+            if let Some(current) = guard.as_ref() {
+                if !current.dead.load(Ordering::SeqCst) {
+                    return Ok(Arc::clone(current));
+                }
+                current.kill();
+                *guard = None;
+            }
+        }
+        let budget = remaining(deadline).max(Duration::from_millis(1));
+        match MuxConn::dial(&self.addr, CONNECT_TIMEOUT.min(budget)) {
+            Ok(fresh) => {
+                let mut guard = self.conn.lock().unwrap();
+                if let Some(current) = guard.as_ref() {
+                    if !current.dead.load(Ordering::SeqCst) {
+                        // Another worker installed a live connection
+                        // while we dialed; use it and close ours.
+                        let winner = Arc::clone(current);
+                        drop(guard);
+                        fresh.kill();
+                        return Ok(winner);
+                    }
+                }
+                *guard = Some(Arc::clone(&fresh));
+                Ok(fresh)
+            }
+            Err(()) => {
+                // Pace refused dials just enough that the caller's retry
+                // loop cannot hot-spin, but capped well below the attempt
+                // timeout: ECONNREFUSED is a definitive answer and a dead
+                // server must not cost the full back-off schedule (~60s
+                // with default PsConfig) to report.
+                std::thread::sleep(
+                    timeout.saturating_sub(started.elapsed()).min(Duration::from_millis(50)),
+                );
+                Err(())
+            }
+        }
+    }
+
+    /// Forget `failed` (if it is still the current connection) and close
+    /// it so the reader exits.
+    fn discard(&self, failed: &Arc<MuxConn>) {
+        let mut guard = self.conn.lock().unwrap();
+        if let Some(current) = guard.as_ref() {
+            if Arc::ptr_eq(current, failed) {
+                *guard = None;
+            }
+        }
+        drop(guard);
+        failed.kill();
+    }
+
     /// One request/reply round-trip bounded by `timeout` as a whole-call
-    /// deadline. Reuses a pooled connection when one is idle, dials
-    /// otherwise; reconnects (via the caller's retry) on any error.
+    /// deadline, multiplexed over the shared connection: any number of
+    /// round-trips may be outstanding concurrently.
     pub(crate) fn roundtrip(
         &self,
         payload: &[u8],
@@ -73,100 +289,62 @@ impl TcpEndpoint {
         // Duration::ZERO means "no timeout" to the socket API; never pass
         // it through.
         let timeout = timeout.max(Duration::from_millis(1));
-        let started = std::time::Instant::now();
+        let started = Instant::now();
         let deadline = started + timeout;
-        if let Some(stream) = self.checkout() {
-            match self.try_stream(stream, payload, deadline) {
-                Ok(reply) => return Ok(reply),
-                Err(()) => {
-                    // An idle stream going stale usually means the server
-                    // restarted or idle connections were reaped — every
-                    // other pooled stream is suspect. Flush them all and
-                    // fall through to a fresh dial *within this attempt*,
-                    // so a poisoned pool cannot consume the caller's
-                    // whole retry budget one dead stream at a time.
-                    self.pool.lock().unwrap().clear();
-                }
-            }
+        let conn = self.connect(started, timeout, deadline)?;
+        let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        conn.pending.lock().unwrap().insert(corr, reply_tx);
+        // Close the registration/death race: `kill` and the reader's
+        // exit path both set `dead` *before* clearing `pending`, so a
+        // waiter registered on a dying connection either sees `dead`
+        // here or had its sender dropped by the clear — never a silent
+        // wait for a reply that cannot come.
+        if conn.dead.load(Ordering::SeqCst) {
+            conn.pending.lock().unwrap().remove(&corr);
+            self.discard(&conn);
+            return Err(());
         }
-        let budget = remaining(deadline).max(Duration::from_millis(1));
-        let stream = match TcpStream::connect_timeout(&self.addr, CONNECT_TIMEOUT.min(budget)) {
-            Ok(s) => {
-                let _ = s.set_nodelay(true);
-                s
-            }
-            Err(_) => {
-                // Pace refused dials just enough that the caller's retry
-                // loop cannot hot-spin, but capped well below the attempt
-                // timeout: ECONNREFUSED is a definitive answer and a dead
-                // server must not cost the full back-off schedule (~60s
-                // with default PsConfig) to report.
-                std::thread::sleep(
-                    timeout
-                        .saturating_sub(started.elapsed())
-                        .min(Duration::from_millis(50)),
-                );
+        {
+            let mut stream = conn.writer.lock().unwrap();
+            let budget = remaining(deadline).max(Duration::from_millis(1));
+            if stream.set_write_timeout(Some(budget)).is_err()
+                || write_tagged_frame(&mut *stream, corr, payload).is_err()
+            {
+                drop(stream);
+                conn.pending.lock().unwrap().remove(&corr);
+                self.discard(&conn);
                 return Err(());
             }
-        };
-        self.try_stream(stream, payload, deadline)
-    }
-
-    /// Write the request and read the reply on one stream under an
-    /// absolute deadline; pools the stream again only on success.
-    fn try_stream(
-        &self,
-        mut stream: TcpStream,
-        payload: &[u8],
-        deadline: std::time::Instant,
-    ) -> std::result::Result<Vec<u8>, ()> {
-        if stream
-            .set_write_timeout(Some(remaining(deadline).max(Duration::from_millis(1))))
-            .is_err()
-        {
-            return Err(());
         }
-        if write_frame(&mut stream, payload).is_err() {
-            return Err(());
-        }
-        // The deadline applies to the whole reply, not per syscall: a
-        // peer trickling bytes must not extend the attempt indefinitely.
-        match read_frame(&mut DeadlineReader { stream: &mut stream, deadline }) {
-            Ok(Some(reply)) => {
-                self.checkin(stream);
-                Ok(reply)
+        match reply_rx.recv_timeout(remaining(deadline).max(Duration::from_millis(1))) {
+            Ok(reply) => Ok(reply),
+            Err(_) => {
+                // Timed out (the reply may arrive later and will be
+                // dropped by correlation-id mismatch — the connection
+                // stays usable), or the reader died and dropped our
+                // sender (then the connection is replaced). A connection
+                // that keeps timing out while delivering *no* frame for
+                // the whole quiet period is presumed wedged and replaced
+                // too, so a stalled socket cannot consume the caller's
+                // whole retry budget.
+                conn.pending.lock().unwrap().remove(&corr);
+                let strikes = conn.strikes.fetch_add(1, Ordering::Relaxed) + 1;
+                let quiet = conn.last_rx.lock().unwrap().elapsed();
+                if conn.dead.load(Ordering::SeqCst)
+                    || (strikes >= MUX_SUSPECT_TIMEOUTS && quiet >= MUX_WEDGE_QUIET)
+                {
+                    self.discard(&conn);
+                }
+                Err(())
             }
-            // EOF, timeout or error: the reply is lost. The stream is
-            // dropped, never reused — a reply arriving after a timeout
-            // must not be mistaken for the answer to a later request.
-            Ok(None) | Err(_) => Err(()),
         }
     }
 }
 
 /// Time left until `deadline` (zero if passed).
-fn remaining(deadline: std::time::Instant) -> Duration {
-    deadline.saturating_duration_since(std::time::Instant::now())
-}
-
-/// Enforces an absolute deadline over a stream of reads: before each
-/// syscall the socket read timeout is shrunk to the remaining budget, so
-/// the *total* read time is bounded even when every individual chunk
-/// arrives "in time".
-struct DeadlineReader<'a> {
-    stream: &'a mut TcpStream,
-    deadline: std::time::Instant,
-}
-
-impl io::Read for DeadlineReader<'_> {
-    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
-        let left = remaining(self.deadline);
-        if left.is_zero() {
-            return Err(io::Error::new(io::ErrorKind::TimedOut, "read deadline exceeded"));
-        }
-        self.stream.set_read_timeout(Some(left))?;
-        self.stream.read(buf)
-    }
+fn remaining(deadline: Instant) -> Duration {
+    deadline.saturating_duration_since(Instant::now())
 }
 
 /// Client-side transport connecting to `n` shard servers over TCP.
@@ -176,7 +354,7 @@ pub struct TcpTransport {
 }
 
 impl TcpTransport {
-    /// One pooled endpoint per shard address, in shard order.
+    /// One multiplexed endpoint per shard address, in shard order.
     pub fn connect(addrs: &[SocketAddr]) -> TcpTransport {
         let endpoints = addrs
             .iter()
@@ -291,9 +469,12 @@ fn accept_loop(listener: &TcpListener, tx: &mpsc::Sender<Envelope>, stop: &Atomi
     }
 }
 
-/// One request/reply at a time per connection, in frame order. The
-/// envelope hop into the shard's inbox preserves the single-threaded
-/// actor model of the serve loop: many connections, one processor.
+/// One accepted connection: frames are read continuously and forwarded
+/// into the shard's inbox, so many requests from this connection can be
+/// outstanding at once (the client's pipelining window); a writer thread
+/// sends the replies back tagged with each request's correlation id.
+/// The envelope hop preserves the single-threaded actor model of the
+/// serve loop: many connections, one processor.
 fn connection_loop(mut stream: TcpStream, tx: &mpsc::Sender<Envelope>) {
     // BSD-derived platforms (macOS included) hand accepted sockets the
     // listener's O_NONBLOCK flag; reads here must block.
@@ -301,25 +482,49 @@ fn connection_loop(mut stream: TcpStream, tx: &mpsc::Sender<Envelope>) {
         return;
     }
     let _ = stream.set_nodelay(true);
-    // Bound reply writes so a peer that stops reading cannot pin this
-    // handler thread forever on a full send buffer.
-    let _ = stream.set_write_timeout(Some(HANDLER_REPLY_TIMEOUT));
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    // Replies are forwarded in request order (the serve loop processes
+    // this connection's envelopes FIFO); the correlation tag — not the
+    // order — is what the client matches on.
+    let (reply_tx, reply_rx) = mpsc::channel::<(u64, mpsc::Receiver<Vec<u8>>)>();
+    let writer = std::thread::Builder::new()
+        .name("glint-tcp-conn-writer".into())
+        .spawn(move || {
+            let mut stream = write_half;
+            // Bound reply waits and writes so a wedged shard or a peer
+            // that stops reading cannot pin this thread forever.
+            let _ = stream.set_write_timeout(Some(HANDLER_REPLY_TIMEOUT));
+            while let Ok((corr, rx)) = reply_rx.recv() {
+                let Ok(reply) = rx.recv_timeout(HANDLER_REPLY_TIMEOUT) else {
+                    break;
+                };
+                if write_tagged_frame(&mut stream, corr, &reply).is_err() {
+                    break;
+                }
+            }
+            // Unblock the read half so the reader side exits too.
+            let _ = stream.shutdown(Shutdown::Both);
+        });
+    let Ok(writer) = writer else {
+        return;
+    };
     loop {
-        let payload = match read_frame(&mut stream) {
-            Ok(Some(p)) => p,
-            Ok(None) | Err(_) => return, // peer closed, or framing error
+        let (corr, payload) = match read_tagged_frame(&mut stream) {
+            Ok(Some(frame)) => frame,
+            Ok(None) | Err(_) => break, // peer closed, or framing error
         };
-        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        if tx.send(Envelope { payload, reply: Some(reply_tx) }).is_err() {
-            return; // the shard's serve loop has exited
+        let (one_tx, one_rx) = mpsc::sync_channel(1);
+        if tx.send(Envelope { payload, reply: Some(one_tx) }).is_err() {
+            break; // the shard's serve loop has exited
         }
-        let Ok(reply) = reply_rx.recv_timeout(HANDLER_REPLY_TIMEOUT) else {
-            return;
-        };
-        if write_frame(&mut stream, &reply).is_err() {
-            return;
+        if reply_tx.send((corr, one_rx)).is_err() {
+            break; // the writer gave up on this connection
         }
     }
+    drop(reply_tx);
+    let _ = writer.join();
 }
 
 /// Resolve `host:port` strings (one per shard) into socket addresses.
@@ -379,7 +584,7 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_clients_share_the_pool() {
+    fn concurrent_clients_share_one_connection() {
         let (mut server, mut inboxes) = TcpServer::bind(&[loopback()]).unwrap();
         let h = spawn_echo(inboxes.remove(0));
         let transport = TcpTransport::connect(server.addrs());
@@ -402,6 +607,35 @@ mod tests {
         assert_eq!(h.join().unwrap(), 8 * 20 + 1);
     }
 
+    /// The multiplexing contract itself: two requests outstanding on one
+    /// connection whose replies come back in *reverse* order must each
+    /// complete with their own response, matched by correlation id.
+    #[test]
+    fn out_of_order_replies_match_by_correlation_id() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let first = read_tagged_frame(&mut stream).unwrap().unwrap();
+            let second = read_tagged_frame(&mut stream).unwrap().unwrap();
+            // Echo both, deliberately last-in-first-out.
+            write_tagged_frame(&mut stream, second.0, &second.1).unwrap();
+            write_tagged_frame(&mut stream, first.0, &first.1).unwrap();
+        });
+        let transport = TcpTransport::connect(&[addr]);
+        let ep_a = transport.endpoint(0);
+        let ep_b = transport.endpoint(0);
+        std::thread::scope(|scope| {
+            let a = scope
+                .spawn(move || ep_a.request(b"alpha".to_vec(), Duration::from_secs(5)).unwrap());
+            let b = scope
+                .spawn(move || ep_b.request(b"bravo".to_vec(), Duration::from_secs(5)).unwrap());
+            assert_eq!(a.join().unwrap(), b"alpha");
+            assert_eq!(b.join().unwrap(), b"bravo");
+        });
+        server.join().unwrap();
+    }
+
     #[test]
     fn unserviced_endpoint_times_out() {
         // Bind a listener whose inbox is never drained: the handler
@@ -414,6 +648,31 @@ mod tests {
         assert!(r.is_err());
         assert_eq!(ep.stats.timeouts(), 1);
         drop(inboxes);
+        server.shutdown();
+    }
+
+    #[test]
+    fn timed_out_connection_remains_usable() {
+        // A slow reply (after the requester gave up) must be dropped by
+        // correlation-id mismatch, and the *same* connection must still
+        // serve the next request correctly.
+        let (mut server, mut inboxes) = TcpServer::bind(&[loopback()]).unwrap();
+        let inbox = inboxes.remove(0);
+        let h = std::thread::spawn(move || {
+            // First request: delay the echo beyond the client timeout.
+            let env = inbox.recv().unwrap();
+            std::thread::sleep(Duration::from_millis(120));
+            respond(&env, env.payload.clone());
+            // Second request: echo immediately.
+            let env = inbox.recv().unwrap();
+            respond(&env, env.payload.clone());
+        });
+        let transport = TcpTransport::connect(server.addrs());
+        let ep = transport.endpoint(0);
+        assert!(ep.request(b"slow".to_vec(), Duration::from_millis(30)).is_err());
+        let got = ep.request(b"fast".to_vec(), Duration::from_secs(2)).unwrap();
+        assert_eq!(got, b"fast");
+        h.join().unwrap();
         server.shutdown();
     }
 

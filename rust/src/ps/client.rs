@@ -1,4 +1,5 @@
-//! Parameter-server client: `BigMatrix` / `BigVector` handles.
+//! Parameter-server client: `BigMatrix` / `BigVector` handles with an
+//! asynchronous, ticket-based operation API.
 //!
 //! The user acts on a *virtual view* of a distributed matrix (paper
 //! Figure 1): `pull` and `push` take global indices; the client splits
@@ -12,11 +13,49 @@
 //!   §2.4/Figure 2 — `GenUid` (retryable), `Push{uid}` (retried until a
 //!   `PushAck`; the shard deduplicates by uid so retries apply at most
 //!   once), `Forget{uid}` (retryable) — giving exactly-once effect.
+//!
+//! # Asynchronous tickets
+//!
+//! Every operation has an `_async` variant returning a ticket
+//! ([`PullTicket`] / [`PushTicket`]) immediately; the operation runs on
+//! per-shard client worker threads. Each shard has a **bounded
+//! in-flight window** ([`PsConfig::pipeline_depth`]): at most that many
+//! operations may be outstanding against a shard, and further
+//! submissions block, giving natural backpressure. The blocking methods
+//! (`pull_rows`, `push_coords`, …) are thin `_async` + [`PullTicket::wait`]
+//! wrappers.
+//!
+//! # Ordering guarantees
+//!
+//! - **Per ticket, exactly-once.** A [`PushTicket`] that resolves `Ok`
+//!   means every shard applied its deltas exactly once, regardless of
+//!   message loss, duplication, or retries underneath.
+//! - **No cross-ticket ordering.** Two tickets issued back-to-back may
+//!   execute against a shard in either order (the window is a pool, not
+//!   a queue of one). This is safe for the counter workloads the server
+//!   hosts — additive deltas commute — but code that needs
+//!   happens-before between two operations must `wait()` the first or
+//!   call [`PsClient::flush`] between them.
+//! - **`flush` is the barrier.** [`PsClient::flush`] (also reachable as
+//!   [`BigMatrix::flush`] / [`BigVector::flush`]) blocks until every
+//!   operation submitted *before* the call has completed on every
+//!   shard, then reports the first error of any fire-and-forget push
+//!   whose ticket was dropped. Pulls issued after a `flush` observe all
+//!   pushes submitted before it. Call it before perplexity evaluation,
+//!   checkpointing, or reading your own writes.
+//! - **Dropped tickets are fire-and-forget, not cancelled.** The
+//!   operation still runs to completion; a dropped [`PushTicket`]'s
+//!   error is parked and surfaced by the next `flush`.
 
+use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
 
+use crate::net::stats::EndpointStats;
 use crate::net::{Endpoint, Transport};
 use crate::ps::config::PsConfig;
 use crate::ps::messages::{Data, Dtype, Request, Response};
@@ -63,13 +102,229 @@ impl Element for f32 {
     }
 }
 
+/// An asynchronous operation executed on a shard dispatcher worker.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Per-shard delivery agent: one endpoint handle plus the retry
+/// configuration, and nothing else — cheap to clone into asynchronous
+/// jobs without keeping the whole client (and its dispatcher threads)
+/// alive from inside their own queue.
+#[derive(Clone)]
+struct Courier {
+    endpoint: Endpoint,
+    shard: usize,
+    config: PsConfig,
+}
+
+impl Courier {
+    /// Send `req` to this courier's shard, retrying with exponential
+    /// back-off.
+    ///
+    /// Only safe for idempotent requests (everything except a raw push
+    /// without uid — which this API cannot express).
+    fn request_retry(&self, req: &Request) -> Result<Response> {
+        let payload = req.encode();
+        let op = match req {
+            Request::PullRows { .. } => "pull",
+            Request::GenUid => "gen-uid",
+            Request::PushCoords { .. } | Request::PushRows { .. } => "push",
+            Request::Forget { .. } => "forget",
+            Request::CreateMatrix { .. } => "create",
+            Request::ShardInfo => "info",
+            Request::Shutdown => "shutdown",
+        };
+        for attempt in 0..self.config.max_retries {
+            let timeout = self.config.timeout_for_attempt(attempt);
+            if let Ok(bytes) = self.endpoint.request(payload.clone(), timeout) {
+                let resp = Response::decode(&bytes)?;
+                if let Response::Error(msg) = resp {
+                    return Err(Error::PsRejected(msg));
+                }
+                return Ok(resp);
+            }
+            // Lost request or lost reply — indistinguishable; retry with a
+            // longer timeout (paper §2.3).
+        }
+        Err(Error::PsTimeout { op, shard: self.shard, attempts: self.config.max_retries })
+    }
+
+    /// The §2.4 hand-shake against this shard: acquire uid, push until
+    /// acknowledged, then release the uid.
+    fn handshake_push(&self, make: impl Fn(u64) -> Request) -> Result<()> {
+        // Phase 1: unique id (safe to retry: ids are cheap and unused ids
+        // are never recorded).
+        let uid = match self.request_retry(&Request::GenUid)? {
+            Response::Uid(u) => u,
+            r => return Err(Error::Decode(format!("unexpected gen-uid response {r:?}"))),
+        };
+        // Phase 2: push, retried until *some* ack arrives. The shard
+        // applies the uid at most once, so duplicates are harmless.
+        let push = make(uid);
+        match self.request_retry(&push)? {
+            Response::PushAck { .. } => {}
+            r => return Err(Error::Decode(format!("unexpected push response {r:?}"))),
+        }
+        // Phase 3: release the dedup record. Idempotent.
+        match self.request_retry(&Request::Forget { uid })? {
+            Response::Ok => Ok(()),
+            r => Err(Error::Decode(format!("unexpected forget response {r:?}"))),
+        }
+    }
+}
+
+/// State behind one shard's dispatch window.
+struct DispatcherState {
+    queue: VecDeque<QueuedJob>,
+    /// Sequence numbers of submitted-but-not-completed ops. Bounded by
+    /// the window depth, so the set stays tiny; its minimum drives the
+    /// flush barrier's "everything submitted before my snapshot"
+    /// semantics.
+    outstanding: std::collections::BTreeSet<u64>,
+    /// Sequence number the next submission will take.
+    next_seq: u64,
+    shutdown: bool,
+}
+
+struct QueuedJob {
+    job: Job,
+    seq: u64,
+    queued_at: Instant,
+}
+
+struct DispatcherShared {
+    state: Mutex<DispatcherState>,
+    /// Workers wait here for jobs.
+    available: Condvar,
+    /// Submitters wait here for window room; `flush` waits here for its
+    /// snapshot of outstanding ops to complete.
+    room: Condvar,
+    depth: usize,
+    stats: Arc<EndpointStats>,
+}
+
+/// One shard's bounded in-flight window: `depth` worker threads drain a
+/// queue whose total outstanding (queued + executing) count is capped at
+/// `depth`, so submission backpressures the producers.
+struct ShardDispatcher {
+    shared: Arc<DispatcherShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ShardDispatcher {
+    fn start(shard: usize, depth: usize, stats: Arc<EndpointStats>) -> ShardDispatcher {
+        let depth = depth.max(1);
+        let shared = Arc::new(DispatcherShared {
+            state: Mutex::new(DispatcherState {
+                queue: VecDeque::new(),
+                outstanding: std::collections::BTreeSet::new(),
+                next_seq: 0,
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+            room: Condvar::new(),
+            depth,
+            stats,
+        });
+        let workers = (0..depth)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("glint-ps-dispatch-{shard}-{i}"))
+                    .spawn(move || dispatcher_worker(&shared))
+                    .expect("spawn ps dispatcher worker")
+            })
+            .collect();
+        ShardDispatcher { shared, workers }
+    }
+
+    /// Enqueue `job`, blocking while this shard's window is full.
+    fn submit(&self, job: Job) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.outstanding.len() >= self.shared.depth {
+            st = self.shared.room.wait(st).unwrap();
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.outstanding.insert(seq);
+        st.queue.push_back(QueuedJob { job, seq, queued_at: Instant::now() });
+        self.shared.stats.record_op_submitted();
+        drop(st);
+        self.shared.available.notify_one();
+    }
+
+    /// This shard's submission frontier: every op submitted before this
+    /// call has a sequence number below the returned value.
+    fn frontier(&self) -> u64 {
+        self.shared.state.lock().unwrap().next_seq
+    }
+
+    /// Block until every op with a sequence number below `frontier` has
+    /// completed. Ops submitted concurrently with or after the
+    /// `frontier` snapshot are not waited for, so this terminates even
+    /// while other threads keep submitting.
+    fn wait_below(&self, frontier: u64) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.outstanding.first().is_some_and(|&min| min < frontier) {
+            st = self.shared.room.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for ShardDispatcher {
+    fn drop(&mut self) {
+        // Workers drain whatever is queued, then exit on the flag.
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn dispatcher_worker(shared: &DispatcherShared) {
+    loop {
+        let queued = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(q) = st.queue.pop_front() {
+                    break q;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.available.wait(st).unwrap();
+            }
+        };
+        shared.stats.record_queue_wait(queued.queued_at.elapsed());
+        (queued.job)();
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.outstanding.remove(&queued.seq);
+        }
+        shared.stats.record_op_completed();
+        shared.room.notify_all();
+    }
+}
+
+/// The client's asynchronous machinery: one dispatcher per shard plus
+/// the parking lot for fire-and-forget push errors. Shared by all
+/// clones of a [`PsClient`]; dropped (joining the worker threads) with
+/// the last clone.
+struct AsyncCore {
+    dispatchers: Vec<ShardDispatcher>,
+    /// Errors from tickets dropped before `wait` (fire-and-forget
+    /// pushes); drained by [`PsClient::flush`].
+    orphan_errors: Arc<Mutex<Vec<Error>>>,
+}
+
 /// Client connection to a parameter-server group. Cheap to clone; clones
-/// share matrix-id allocation.
+/// share matrix-id allocation and the per-shard dispatch windows.
 #[derive(Clone)]
 pub struct PsClient {
     endpoints: Vec<Endpoint>,
     config: PsConfig,
     next_matrix_id: Arc<AtomicU32>,
+    core: Arc<AsyncCore>,
 }
 
 impl PsClient {
@@ -95,10 +350,21 @@ impl PsClient {
             .map(|d| d.subsec_nanos() ^ (d.as_secs() as u32))
             .unwrap_or(0)
             ^ std::process::id().rotate_left(16);
+        let endpoints = transport.endpoints();
+        let depth = config.pipeline_depth.max(1);
+        let dispatchers = endpoints
+            .iter()
+            .enumerate()
+            .map(|(s, ep)| ShardDispatcher::start(s, depth, Arc::clone(&ep.stats)))
+            .collect();
         PsClient {
-            endpoints: transport.endpoints(),
+            endpoints,
             config,
             next_matrix_id: Arc::new(AtomicU32::new(base.max(1))),
+            core: Arc::new(AsyncCore {
+                dispatchers,
+                orphan_errors: Arc::new(Mutex::new(Vec::new())),
+            }),
         }
     }
 
@@ -112,34 +378,60 @@ impl PsClient {
         &self.config
     }
 
+    /// A delivery agent for `shard` that async jobs can own outright.
+    fn courier(&self, shard: usize) -> Courier {
+        Courier {
+            endpoint: self.endpoints[shard].clone(),
+            shard,
+            config: self.config.clone(),
+        }
+    }
+
+    /// Queue `job` into `shard`'s bounded window (blocks when full).
+    fn submit(&self, shard: usize, job: Job) {
+        self.core.dispatchers[shard].submit(job);
+    }
+
     /// Send `req` to `shard`, retrying with exponential back-off.
     ///
-    /// Only safe for idempotent requests (everything except a raw push
-    /// without uid — which this API cannot express).
+    /// Synchronous control-plane path (create, info, shutdown); data
+    /// operations go through the ticket API instead. Only safe for
+    /// idempotent requests (everything except a raw push without uid —
+    /// which this API cannot express).
     pub fn request_retry(&self, shard: usize, req: &Request) -> Result<Response> {
-        let payload = req.encode();
-        let op = match req {
-            Request::PullRows { .. } => "pull",
-            Request::GenUid => "gen-uid",
-            Request::PushCoords { .. } | Request::PushRows { .. } => "push",
-            Request::Forget { .. } => "forget",
-            Request::CreateMatrix { .. } => "create",
-            Request::ShardInfo => "info",
-            Request::Shutdown => "shutdown",
-        };
-        for attempt in 0..self.config.max_retries {
-            let timeout = self.config.timeout_for_attempt(attempt);
-            if let Ok(bytes) = self.endpoints[shard].request(payload.clone(), timeout) {
-                let resp = Response::decode(&bytes)?;
-                if let Response::Error(msg) = resp {
-                    return Err(Error::PsRejected(msg));
-                }
-                return Ok(resp);
-            }
-            // Lost request or lost reply — indistinguishable; retry with a
-            // longer timeout (paper §2.3).
+        self.courier(shard).request_retry(req)
+    }
+
+    /// Barrier: block until every asynchronous operation submitted
+    /// before this call has completed on every shard, then surface the
+    /// first error of any fire-and-forget push whose ticket was dropped.
+    ///
+    /// Required before reading your own writes (perplexity evaluation,
+    /// checkpointing): tickets are unordered with respect to each other
+    /// until flushed. Operations submitted by other threads *while* the
+    /// flush runs are not waited for, so a flushing evaluator cannot be
+    /// starved by a busy producer.
+    pub fn flush(&self) -> Result<()> {
+        // Snapshot every shard's submission frontier first, then wait:
+        // anything submitted before this call is below some frontier.
+        let frontiers: Vec<u64> =
+            self.core.dispatchers.iter().map(|d| d.frontier()).collect();
+        for (d, &frontier) in self.core.dispatchers.iter().zip(&frontiers) {
+            d.wait_below(frontier);
         }
-        Err(Error::PsTimeout { op, shard, attempts: self.config.max_retries })
+        let mut orphans = self.core.orphan_errors.lock().unwrap();
+        if orphans.is_empty() {
+            return Ok(());
+        }
+        let first = orphans.remove(0);
+        if !orphans.is_empty() {
+            crate::log_warn!(
+                "flush: {} further async push error(s) superseded by the first",
+                orphans.len()
+            );
+            orphans.clear();
+        }
+        Err(first)
     }
 
     /// Allocate a distributed `rows x cols` matrix.
@@ -306,6 +598,159 @@ impl<T> CoordDeltas<T> {
     }
 }
 
+/// Handle to an asynchronous pull issued with
+/// [`BigMatrix::pull_rows_async`]. Resolve it with [`PullTicket::wait`].
+/// Dropping the ticket abandons the values (the pull itself still
+/// completes on the shard workers).
+#[must_use = "a pull's values are only delivered through wait()"]
+pub struct PullTicket<T: Element> {
+    /// `(shard, receiver)` per per-shard sub-request.
+    parts: Vec<(usize, mpsc::Receiver<Result<Vec<T>>>)>,
+    /// Requested global rows, for scattering back to request order.
+    rows: Vec<u64>,
+    cols: usize,
+    shards: usize,
+    part: Partitioner,
+    /// Validation failure detected at issue time.
+    early: Option<Error>,
+}
+
+impl<T: Element> PullTicket<T> {
+    /// Block until every shard answered; values come back row-major in
+    /// the order requested (`rows.len() * cols` entries).
+    pub fn wait(mut self) -> Result<Vec<T>> {
+        if let Some(e) = self.early.take() {
+            return Err(e);
+        }
+        let mut shard_data: Vec<Vec<T>> = (0..self.shards).map(|_| Vec::new()).collect();
+        for (shard, rx) in &self.parts {
+            match rx.recv() {
+                Ok(Ok(values)) => shard_data[*shard] = values,
+                Ok(Err(e)) => return Err(e),
+                Err(_) => {
+                    return Err(Error::Config(
+                        "async pull worker disappeared before replying".into(),
+                    ))
+                }
+            }
+        }
+        // Scatter back into request order.
+        let cols = self.cols;
+        let mut cursor = vec![0usize; self.shards];
+        let mut out = vec![T::default(); self.rows.len() * cols];
+        for (i, &r) in self.rows.iter().enumerate() {
+            let s = self.part.shard_of(r);
+            let src = &shard_data[s][cursor[s]..cursor[s] + cols];
+            out[i * cols..(i + 1) * cols].copy_from_slice(src);
+            cursor[s] += cols;
+        }
+        Ok(out)
+    }
+}
+
+/// Completion slot shared between one shard's push job and its ticket.
+///
+/// A mutex-guarded hand-off (rather than a channel) so the error of a
+/// fire-and-forget push can never fall between the cracks: whichever of
+/// {job completion, ticket drop} happens first, the slot's state tells
+/// the other side exactly who owns error reporting.
+struct PushPart {
+    state: Mutex<PushPartState>,
+    done: Condvar,
+}
+
+struct PushPartState {
+    result: Option<Result<()>>,
+    /// The ticket was dropped without `wait`: the job must route an
+    /// error to the client's orphan sink instead.
+    abandoned: bool,
+}
+
+impl PushPart {
+    fn new() -> PushPart {
+        PushPart {
+            state: Mutex::new(PushPartState { result: None, abandoned: false }),
+            done: Condvar::new(),
+        }
+    }
+
+    /// Called by the shard job when the hand-shake finishes.
+    fn complete(&self, orphans: &Mutex<Vec<Error>>, result: Result<()>) {
+        let mut st = self.state.lock().unwrap();
+        if st.abandoned {
+            if let Err(e) = result {
+                orphans.lock().unwrap().push(e);
+            }
+        } else {
+            st.result = Some(result);
+            self.done.notify_all();
+        }
+    }
+}
+
+/// Handle to an asynchronous exactly-once push. [`PushTicket::wait`]
+/// confirms the deltas landed. Dropping the ticket makes the push
+/// fire-and-forget: it still runs to completion, and any error is
+/// parked and reported by the next [`PsClient::flush`].
+pub struct PushTicket {
+    parts: Vec<Arc<PushPart>>,
+    /// Validation failure detected at issue time.
+    early: Option<Error>,
+    /// The client's orphan-error sink, for results this ticket abandons.
+    orphans: Option<Arc<Mutex<Vec<Error>>>>,
+}
+
+impl PushTicket {
+    fn done() -> PushTicket {
+        PushTicket { parts: Vec::new(), early: None, orphans: None }
+    }
+
+    /// Block until every shard's hand-shake finished; first error wins.
+    pub fn wait(mut self) -> Result<()> {
+        if let Some(e) = self.early.take() {
+            return Err(e);
+        }
+        let mut first: Option<Error> = None;
+        for part in &self.parts {
+            let mut st = part.state.lock().unwrap();
+            while st.result.is_none() {
+                st = part.done.wait(st).unwrap();
+            }
+            if let Some(Err(e)) = st.result.take() {
+                first.get_or_insert(e);
+            }
+        }
+        match first {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for PushTicket {
+    fn drop(&mut self) {
+        // Hand any un-consumed results to the orphan sink (results a
+        // `wait` already took are gone; jobs still running see the
+        // abandoned flag and park their own errors). A validation
+        // failure nobody waited for is parked the same way — a
+        // fire-and-forget push must never fail silently.
+        let Some(orphans) = self.orphans.as_ref() else {
+            return;
+        };
+        if let Some(e) = self.early.take() {
+            orphans.lock().unwrap().push(e);
+        }
+        for part in &self.parts {
+            let mut st = part.state.lock().unwrap();
+            match st.result.take() {
+                Some(Err(e)) => orphans.lock().unwrap().push(e),
+                Some(Ok(())) => {}
+                None => st.abandoned = true,
+            }
+        }
+    }
+}
+
 /// Handle to a distributed `rows x cols` matrix of `T`.
 ///
 /// The handle is clonable and thread-safe; concurrent pushes from many
@@ -335,60 +780,126 @@ impl<T: Element> BigMatrix<T> {
         self.id
     }
 
-    /// Pull full rows by global index; returns values row-major in the
-    /// order requested (`rows.len() * cols` entries).
-    pub fn pull_rows(&self, rows: &[u64]) -> Result<Vec<T>> {
+    /// Submit one shard's exactly-once push hand-shake (built by `make`
+    /// from the allocated uid) into that shard's window; the returned
+    /// part completes when the hand-shake does.
+    fn submit_push(
+        &self,
+        shard: usize,
+        make: impl Fn(u64) -> Request + Send + 'static,
+    ) -> Arc<PushPart> {
+        let courier = self.client.courier(shard);
+        let orphans = Arc::clone(&self.client.core.orphan_errors);
+        let part = Arc::new(PushPart::new());
+        let job_part = Arc::clone(&part);
+        self.client.submit(
+            shard,
+            Box::new(move || {
+                let result = courier.handshake_push(&make);
+                job_part.complete(&orphans, result);
+            }),
+        );
+        part
+    }
+
+    /// Assemble the ticket for a set of submitted push parts.
+    fn push_ticket(&self, parts: Vec<Arc<PushPart>>) -> PushTicket {
+        PushTicket {
+            parts,
+            early: None,
+            orphans: Some(Arc::clone(&self.client.core.orphan_errors)),
+        }
+    }
+
+    /// A push ticket that fails immediately with `err` when waited; if
+    /// nobody waits, the error is parked for `flush` instead (dropped
+    /// tickets must never fail silently).
+    fn failed_push(&self, err: Error) -> PushTicket {
+        PushTicket {
+            parts: Vec::new(),
+            early: Some(err),
+            orphans: Some(Arc::clone(&self.client.core.orphan_errors)),
+        }
+    }
+
+    /// A ticket that fails immediately with `err` when waited.
+    fn failed_pull(&self, err: Error) -> PullTicket<T> {
+        PullTicket {
+            parts: Vec::new(),
+            rows: Vec::new(),
+            cols: self.cols as usize,
+            shards: self.client.shards(),
+            part: self.part,
+            early: Some(err),
+        }
+    }
+
+    /// Start pulling full rows by global index; the returned ticket's
+    /// [`PullTicket::wait`] yields the values row-major in the order
+    /// requested. The per-shard sub-requests run inside each shard's
+    /// bounded in-flight window, so several tickets can overlap.
+    pub fn pull_rows_async(&self, rows: &[u64]) -> PullTicket<T> {
+        let shards = self.client.shards();
         if rows.is_empty() {
-            return Ok(Vec::new());
+            return PullTicket {
+                parts: Vec::new(),
+                rows: Vec::new(),
+                cols: self.cols as usize,
+                shards,
+                part: self.part,
+                early: None,
+            };
         }
         for &r in rows {
             if r >= self.part.rows {
-                return Err(Error::Config(format!(
+                return self.failed_pull(Error::Config(format!(
                     "row {r} out of bounds ({} rows)",
                     self.part.rows
                 )));
             }
         }
         // Split into at most one request per shard (§2.3).
-        let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); self.client.shards()];
+        let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); shards];
         for &r in rows {
             per_shard[self.part.shard_of(r)].push(r);
         }
-        // Issue shard requests concurrently; each retries independently.
-        let shard_results: Vec<Result<Vec<T>>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = per_shard
-                .iter()
-                .enumerate()
-                .map(|(s, shard_rows)| {
-                    scope.spawn(move || -> Result<Vec<T>> {
-                        if shard_rows.is_empty() {
-                            return Ok(Vec::new());
-                        }
-                        let req = Request::PullRows { id: self.id, rows: shard_rows.clone() };
-                        match self.client.request_retry(s, &req)? {
-                            Response::Rows(data) => T::unwrap(data),
-                            r => Err(Error::Decode(format!("unexpected pull response {r:?}"))),
-                        }
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("pull worker")).collect()
-        });
-        // Scatter back into request order.
-        let cols = self.cols as usize;
-        let mut shard_data = Vec::with_capacity(shard_results.len());
-        for r in shard_results {
-            shard_data.push(r?);
+        let mut parts = Vec::new();
+        for (s, shard_rows) in per_shard.into_iter().enumerate() {
+            if shard_rows.is_empty() {
+                continue;
+            }
+            let courier = self.client.courier(s);
+            let req = Request::PullRows { id: self.id, rows: shard_rows };
+            let (tx, rx) = mpsc::channel();
+            self.client.submit(
+                s,
+                Box::new(move || {
+                    let result = courier.request_retry(&req).and_then(|resp| match resp {
+                        Response::Rows(data) => T::unwrap(data),
+                        r => Err(Error::Decode(format!("unexpected pull response {r:?}"))),
+                    });
+                    // The ticket may have been dropped; a pull has no
+                    // side effects, so its result can be discarded.
+                    let _ = tx.send(result);
+                }),
+            );
+            parts.push((s, rx));
         }
-        let mut cursor = vec![0usize; self.client.shards()];
-        let mut out = vec![T::default(); rows.len() * cols];
-        for (i, &r) in rows.iter().enumerate() {
-            let s = self.part.shard_of(r);
-            let src = &shard_data[s][cursor[s]..cursor[s] + cols];
-            out[i * cols..(i + 1) * cols].copy_from_slice(src);
-            cursor[s] += cols;
+        PullTicket {
+            parts,
+            rows: rows.to_vec(),
+            cols: self.cols as usize,
+            shards,
+            part: self.part,
+            early: None,
         }
-        Ok(out)
+    }
+
+    /// Pull full rows by global index; returns values row-major in the
+    /// order requested (`rows.len() * cols` entries). Blocking wrapper
+    /// over [`BigMatrix::pull_rows_async`].
+    pub fn pull_rows(&self, rows: &[u64]) -> Result<Vec<T>> {
+        self.pull_rows_async(rows).wait()
     }
 
     /// Pull a single row.
@@ -396,22 +907,25 @@ impl<T: Element> BigMatrix<T> {
         self.pull_rows(&[row])
     }
 
-    /// Push sparse additive deltas with exactly-once semantics.
+    /// Start pushing sparse additive deltas with exactly-once semantics.
     ///
     /// Deltas are grouped per shard; each shard group runs the hand-shake
-    /// independently and concurrently.
-    pub fn push_coords(&self, deltas: &CoordDeltas<T>) -> Result<()> {
+    /// independently inside that shard's in-flight window. Dropping the
+    /// ticket fires-and-forgets; errors then surface at the next
+    /// [`BigMatrix::flush`].
+    pub fn push_coords_async(&self, deltas: &CoordDeltas<T>) -> PushTicket {
         if deltas.is_empty() {
-            return Ok(());
+            return PushTicket::done();
         }
         if deltas.rows.len() != deltas.cols.len() || deltas.rows.len() != deltas.values.len() {
-            return Err(Error::Config("delta arrays must have equal length".into()));
+            return self.failed_push(Error::Config("delta arrays must have equal length".into()));
         }
+        let shards = self.client.shards();
         let mut per_shard: Vec<CoordDeltas<T>> =
-            (0..self.client.shards()).map(|_| CoordDeltas::default()).collect();
+            (0..shards).map(|_| CoordDeltas::default()).collect();
         for ((&r, &c), &v) in deltas.rows.iter().zip(&deltas.cols).zip(&deltas.values) {
             if r >= self.part.rows || c >= self.cols {
-                return Err(Error::Config(format!(
+                return self.failed_push(Error::Config(format!(
                     "delta ({r},{c}) out of bounds for {}x{}",
                     self.part.rows, self.cols
                 )));
@@ -421,42 +935,39 @@ impl<T: Element> BigMatrix<T> {
             per_shard[s].cols.push(c);
             per_shard[s].values.push(v);
         }
-        let results: Vec<Result<()>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = per_shard
-                .iter()
-                .enumerate()
-                .map(|(s, group)| {
-                    scope.spawn(move || -> Result<()> {
-                        if group.is_empty() {
-                            return Ok(());
-                        }
-                        self.handshake_push(s, |uid| Request::PushCoords {
-                            id: self.id,
-                            uid,
-                            rows: group.rows.clone(),
-                            cols: group.cols.clone(),
-                            values: T::wrap(group.values.clone()),
-                        })
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("push worker")).collect()
-        });
-        for r in results {
-            r?;
+        let id = self.id;
+        let mut parts = Vec::new();
+        for (s, group) in per_shard.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            parts.push(self.submit_push(s, move |uid| Request::PushCoords {
+                id,
+                uid,
+                rows: group.rows.clone(),
+                cols: group.cols.clone(),
+                values: T::wrap(group.values.clone()),
+            }));
         }
-        Ok(())
+        self.push_ticket(parts)
     }
 
-    /// Push dense full-row deltas (`rows.len() * cols` values, row-major)
-    /// with exactly-once semantics.
-    pub fn push_rows(&self, rows: &[u64], values: &[T]) -> Result<()> {
+    /// Push sparse additive deltas with exactly-once semantics. Blocking
+    /// wrapper over [`BigMatrix::push_coords_async`].
+    pub fn push_coords(&self, deltas: &CoordDeltas<T>) -> Result<()> {
+        self.push_coords_async(deltas).wait()
+    }
+
+    /// Start pushing dense full-row deltas (`rows.len() * cols` values,
+    /// row-major) with exactly-once semantics. Same ticket semantics as
+    /// [`BigMatrix::push_coords_async`].
+    pub fn push_rows_async(&self, rows: &[u64], values: &[T]) -> PushTicket {
         if rows.is_empty() {
-            return Ok(());
+            return PushTicket::done();
         }
         let cols = self.cols as usize;
         if values.len() != rows.len() * cols {
-            return Err(Error::Config(format!(
+            return self.failed_push(Error::Config(format!(
                 "push_rows shape mismatch: {} values for {} rows x {} cols",
                 values.len(),
                 rows.len(),
@@ -468,59 +979,37 @@ impl<T: Element> BigMatrix<T> {
         let mut shard_vals: Vec<Vec<T>> = vec![Vec::new(); shards];
         for (i, &r) in rows.iter().enumerate() {
             if r >= self.part.rows {
-                return Err(Error::Config(format!("row {r} out of bounds")));
+                return self.failed_push(Error::Config(format!("row {r} out of bounds")));
             }
             let s = self.part.shard_of(r);
             shard_rows[s].push(r);
             shard_vals[s].extend_from_slice(&values[i * cols..(i + 1) * cols]);
         }
-        let results: Vec<Result<()>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..shards)
-                .map(|s| {
-                    let rws = &shard_rows[s];
-                    let vls = &shard_vals[s];
-                    scope.spawn(move || -> Result<()> {
-                        if rws.is_empty() {
-                            return Ok(());
-                        }
-                        self.handshake_push(s, |uid| Request::PushRows {
-                            id: self.id,
-                            uid,
-                            rows: rws.clone(),
-                            values: T::wrap(vls.clone()),
-                        })
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("push worker")).collect()
-        });
-        for r in results {
-            r?;
+        let id = self.id;
+        let mut parts = Vec::new();
+        for (s, (rws, vls)) in shard_rows.into_iter().zip(shard_vals).enumerate() {
+            if rws.is_empty() {
+                continue;
+            }
+            parts.push(self.submit_push(s, move |uid| Request::PushRows {
+                id,
+                uid,
+                rows: rws.clone(),
+                values: T::wrap(vls.clone()),
+            }));
         }
-        Ok(())
+        self.push_ticket(parts)
     }
 
-    /// The §2.4 hand-shake against one shard: acquire uid, push until
-    /// acknowledged, then release the uid.
-    fn handshake_push(&self, shard: usize, make: impl Fn(u64) -> Request) -> Result<()> {
-        // Phase 1: unique id (safe to retry: ids are cheap and unused ids
-        // are never recorded).
-        let uid = match self.client.request_retry(shard, &Request::GenUid)? {
-            Response::Uid(u) => u,
-            r => return Err(Error::Decode(format!("unexpected gen-uid response {r:?}"))),
-        };
-        // Phase 2: push, retried until *some* ack arrives. The shard
-        // applies the uid at most once, so duplicates are harmless.
-        let push = make(uid);
-        match self.client.request_retry(shard, &push)? {
-            Response::PushAck { .. } => {}
-            r => return Err(Error::Decode(format!("unexpected push response {r:?}"))),
-        }
-        // Phase 3: release the dedup record. Idempotent.
-        match self.client.request_retry(shard, &Request::Forget { uid })? {
-            Response::Ok => Ok(()),
-            r => Err(Error::Decode(format!("unexpected forget response {r:?}"))),
-        }
+    /// Push dense full-row deltas with exactly-once semantics. Blocking
+    /// wrapper over [`BigMatrix::push_rows_async`].
+    pub fn push_rows(&self, rows: &[u64], values: &[T]) -> Result<()> {
+        self.push_rows_async(rows, values).wait()
+    }
+
+    /// Barrier over the whole client — see [`PsClient::flush`].
+    pub fn flush(&self) -> Result<()> {
+        self.client.flush()
     }
 }
 
@@ -541,6 +1030,12 @@ impl<T: Element> BigVector<T> {
         self.len() == 0
     }
 
+    /// Start pulling selected entries (ticket semantics of
+    /// [`BigMatrix::pull_rows_async`]).
+    pub fn pull_async(&self, indices: &[u64]) -> PullTicket<T> {
+        self.inner.pull_rows_async(indices)
+    }
+
     /// Pull selected entries.
     pub fn pull(&self, indices: &[u64]) -> Result<Vec<T>> {
         self.inner.pull_rows(indices)
@@ -552,14 +1047,30 @@ impl<T: Element> BigVector<T> {
         self.pull(&indices)
     }
 
-    /// Push sparse additive deltas.
-    pub fn push(&self, indices: &[u64], deltas: &[T]) -> Result<()> {
+    /// Start pushing sparse additive deltas (ticket semantics of
+    /// [`BigMatrix::push_coords_async`]).
+    pub fn push_async(&self, indices: &[u64], deltas: &[T]) -> PushTicket {
+        if indices.len() != deltas.len() {
+            return self.inner.failed_push(Error::Config(
+                "index and delta arrays must have equal length".into(),
+            ));
+        }
         let cd = CoordDeltas {
             rows: indices.to_vec(),
             cols: vec![0; indices.len()],
             values: deltas.to_vec(),
         };
-        self.inner.push_coords(&cd)
+        self.inner.push_coords_async(&cd)
+    }
+
+    /// Push sparse additive deltas.
+    pub fn push(&self, indices: &[u64], deltas: &[T]) -> Result<()> {
+        self.push_async(indices, deltas).wait()
+    }
+
+    /// Barrier over the whole client — see [`PsClient::flush`].
+    pub fn flush(&self) -> Result<()> {
+        self.inner.flush()
     }
 }
 
@@ -693,5 +1204,63 @@ mod tests {
             Err(e) => panic!("unexpected error {e}"),
             Ok(_) => panic!("matrix creation should have timed out"),
         }
+    }
+
+    #[test]
+    fn overlapping_tickets_resolve_independently() {
+        let cfg = PsConfig { pipeline_depth: 4, ..PsConfig::with_shards(2) };
+        let group = ServerGroup::start(cfg.clone(), FaultPlan::reliable(), 17);
+        let client = PsClient::connect(&group.transport(), cfg);
+        let m: BigMatrix<i64> = client.matrix(32, 2).unwrap();
+        // Issue several pushes and pulls without waiting in between.
+        let pushes: Vec<PushTicket> = (0..6)
+            .map(|i| {
+                let deltas = CoordDeltas { rows: vec![i], cols: vec![0], values: vec![1] };
+                m.push_coords_async(&deltas)
+            })
+            .collect();
+        for t in pushes {
+            t.wait().unwrap();
+        }
+        let t_a = m.pull_rows_async(&[0, 1, 2]);
+        let t_b = m.pull_rows_async(&[3, 4, 5]);
+        let b = t_b.wait().unwrap();
+        let a = t_a.wait().unwrap();
+        assert_eq!(a, vec![1, 0, 1, 0, 1, 0]);
+        assert_eq!(b, vec![1, 0, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn fire_and_forget_then_flush_is_a_barrier() {
+        let (_g, client) = setup(3, FaultPlan::reliable());
+        let m: BigMatrix<i64> = client.matrix(24, 1).unwrap();
+        for i in 0..48u64 {
+            // Tickets dropped immediately: fire-and-forget.
+            let _ = m.push_coords_async(&CoordDeltas {
+                rows: vec![i % 24],
+                cols: vec![0],
+                values: vec![1],
+            });
+        }
+        client.flush().unwrap();
+        let all: Vec<u64> = (0..24).collect();
+        let got = m.pull_rows(&all).unwrap();
+        assert_eq!(got.iter().sum::<i64>(), 48);
+    }
+
+    #[test]
+    fn failed_ticket_reports_validation_error() {
+        let (_g, client) = setup(2, FaultPlan::reliable());
+        let m: BigMatrix<i64> = client.matrix(5, 2).unwrap();
+        assert!(m.pull_rows_async(&[99]).wait().is_err());
+        let bad = CoordDeltas { rows: vec![0], cols: vec![9], values: vec![1] };
+        assert!(m.push_coords_async(&bad).wait().is_err());
+        // A waited ticket consumed its error, so flush stays clean...
+        client.flush().unwrap();
+        // ...but a fire-and-forget invalid push must not vanish: its
+        // validation error is parked for the next flush.
+        let _ = m.push_coords_async(&bad);
+        assert!(client.flush().is_err());
+        client.flush().unwrap();
     }
 }

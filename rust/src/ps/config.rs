@@ -51,6 +51,13 @@ pub struct PsConfig {
     pub backoff_factor: f64,
     /// Upper bound on the per-attempt timeout.
     pub max_timeout: Duration,
+    /// Bounded per-shard in-flight window for asynchronous operations:
+    /// each shard gets this many client-side worker threads, and at most
+    /// this many tickets (pulls, exactly-once push hand-shakes) may be
+    /// outstanding against a shard at once — further submissions block
+    /// (backpressure). `1` serializes per-shard traffic (the
+    /// non-pipelined ablation); clamped to at least 1.
+    pub pipeline_depth: usize,
 }
 
 impl Default for PsConfig {
@@ -63,6 +70,7 @@ impl Default for PsConfig {
             max_retries: 12,
             backoff_factor: 2.0,
             max_timeout: Duration::from_secs(10),
+            pipeline_depth: 4,
         }
     }
 }

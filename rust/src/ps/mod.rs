@@ -33,7 +33,7 @@ pub mod partition;
 pub mod server;
 pub mod storage;
 
-pub use client::{BigMatrix, BigVector, PsClient};
+pub use client::{BigMatrix, BigVector, PsClient, PullTicket, PushTicket};
 pub use config::PsConfig;
 pub use messages::{Data, Dtype, Request, Response};
 pub use partition::{PartitionScheme, Partitioner};

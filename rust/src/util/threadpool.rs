@@ -1,10 +1,12 @@
 //! A small work-stealing-free thread pool plus scoped parallel helpers.
 //!
-//! The trainer ("Spark executors") and the benchmark harnesses need
+//! The baselines ("Spark executors") and the benchmark harnesses need
 //! data-parallel loops; external crates are unavailable, so we provide:
 //!
-//! - [`ThreadPool`] — fixed pool with a shared injector queue, used for
-//!   long-lived background work (pipelined pulls, async push flushes).
+//! - [`ThreadPool`] — fixed pool with a shared injector queue, for
+//!   long-lived background work. (The LDA trainer's pipelined pulls and
+//!   asynchronous push flushes now ride the parameter-server client's
+//!   own per-shard dispatch windows — see `ps/client.rs`.)
 //! - [`parallel_chunks`] — scoped fork-join over chunks of a slice, built
 //!   on `std::thread::scope`, used for the per-partition sampling loops.
 

@@ -1,0 +1,143 @@
+//! Integration tests for the asynchronous ticket API: `flush()` as a
+//! true barrier under adversarial fault schedules, ticket `wait()`
+//! surfacing shard errors, fire-and-forget error delivery, and parity of
+//! the compute/communicate-overlapped trainer with the synchronous path.
+
+use std::time::Duration;
+
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::eval::perplexity::holdout_perplexity;
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::net::FaultPlan;
+use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
+use glint_lda::ps::config::PsConfig;
+use glint_lda::ps::server::ServerGroup;
+use glint_lda::util::error::Error;
+use glint_lda::util::rng::Pcg64;
+
+/// Fire-and-forget pushes under a lossy, duplicating fault plan, then a
+/// single `flush()` barrier: every delta must be applied exactly once
+/// and be visible to the first pull after the barrier.
+#[test]
+fn flush_is_a_true_barrier_under_lossy_network() {
+    let cfg = PsConfig {
+        shards: 3,
+        pipeline_depth: 8,
+        timeout: Duration::from_millis(20),
+        ..PsConfig::default()
+    };
+    let group = ServerGroup::start(cfg.clone(), FaultPlan::lossy(0.15, 0.1), 0x5eed);
+    let client = PsClient::connect(&group.transport(), cfg);
+    let m: BigMatrix<i64> = client.matrix(50, 2).unwrap();
+    let mut rng = Pcg64::new(0xa57);
+    let mut expect = vec![0i64; 50 * 2];
+    for _ in 0..40 {
+        let n = 1 + rng.below(30);
+        let mut deltas = CoordDeltas::default();
+        for _ in 0..n {
+            let r = rng.below(50) as u64;
+            let c = rng.below(2) as u32;
+            let v = rng.below(5) as i64 - 2;
+            deltas.rows.push(r);
+            deltas.cols.push(c);
+            deltas.values.push(v);
+            expect[(r * 2 + c as u64) as usize] += v;
+        }
+        // Ticket dropped on purpose: fire-and-forget.
+        let _ = m.push_coords_async(&deltas);
+    }
+    client.flush().unwrap();
+    let all: Vec<u64> = (0..50).collect();
+    let got = m.pull_rows(&all).unwrap();
+    assert_eq!(got, expect, "counts must be exact right after the barrier");
+}
+
+fn dead_server_setup() -> (PsClient, BigMatrix<i64>) {
+    let cfg = PsConfig {
+        shards: 2,
+        max_retries: 2,
+        timeout: Duration::from_millis(5),
+        ..PsConfig::default()
+    };
+    let group = ServerGroup::start(cfg.clone(), FaultPlan::reliable(), 3);
+    let client = PsClient::connect(&group.transport(), cfg);
+    let m: BigMatrix<i64> = client.matrix(8, 1).unwrap();
+    // Kill the shards; subsequent operations exhaust their retry budget.
+    group.shutdown();
+    (client, m)
+}
+
+/// A shard failure reaches the caller through the ticket's `wait()`, as
+/// a typed error — not a panic on some background thread.
+#[test]
+fn ticket_wait_surfaces_shard_errors() {
+    let (_client, m) = dead_server_setup();
+    match m.pull_rows_async(&[0, 5]).wait() {
+        Err(Error::PsTimeout { attempts, .. }) => assert_eq!(attempts, 2),
+        other => panic!("want PsTimeout through wait(), got {other:?}"),
+    }
+    let deltas = CoordDeltas { rows: vec![1], cols: vec![0], values: vec![1] };
+    assert!(matches!(m.push_coords_async(&deltas).wait(), Err(Error::PsTimeout { .. })));
+}
+
+/// A fire-and-forget push whose shard has died must not vanish
+/// silently: the next `flush()` reports it.
+#[test]
+fn flush_reports_orphaned_push_errors() {
+    let (client, m) = dead_server_setup();
+    let deltas = CoordDeltas { rows: vec![2], cols: vec![0], values: vec![3] };
+    let _ = m.push_coords_async(&deltas); // dropped ticket
+    match client.flush() {
+        Err(Error::PsTimeout { .. }) => {}
+        other => panic!("flush must surface the orphaned push error, got {other:?}"),
+    }
+    // The error sink is drained: a second flush is clean.
+    client.flush().unwrap();
+}
+
+fn parity_corpus() -> glint_lda::corpus::dataset::Corpus {
+    generate(&SynthConfig {
+        num_docs: 360,
+        vocab_size: 800,
+        num_topics: 8,
+        avg_doc_len: 45.0,
+        seed: 929,
+        ..Default::default()
+    })
+}
+
+fn train_holdout_perplexity(pipeline_depth: usize) -> f64 {
+    let corpus = parity_corpus();
+    let (train, test) = corpus.split_holdout(5);
+    let cfg = TrainConfig {
+        num_topics: 10,
+        iterations: 8,
+        workers: 3,
+        shards: 2,
+        block_words: 256,
+        buffer_cap: 2000,
+        dense_top_words: 50,
+        pipeline_depth,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(cfg, &train).unwrap();
+    let model = trainer.run(&train).unwrap();
+    holdout_perplexity(&model, &test, 5, 7)
+}
+
+/// The overlapped trainer (deep prefetch + fire-and-forget flushes)
+/// reaches the same held-out perplexity as the synchronous path
+/// (`pipeline_depth = 0`) on the 2-shard sim deployment, within
+/// sampling noise.
+#[test]
+fn overlapped_trainer_matches_synchronous_heldout_perplexity() {
+    let sync = train_holdout_perplexity(0);
+    let overlapped = train_holdout_perplexity(8);
+    assert!(sync.is_finite() && overlapped.is_finite());
+    let ratio = overlapped / sync;
+    assert!(
+        (0.9..1.1).contains(&ratio),
+        "overlapped perplexity {overlapped:.1} diverged from synchronous {sync:.1} \
+         (ratio {ratio:.3})"
+    );
+}

@@ -9,7 +9,7 @@ use std::time::Duration;
 use glint_lda::corpus::synth::{generate, SynthConfig};
 use glint_lda::eval::perplexity::holdout_perplexity;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
-use glint_lda::net::frame::{read_frame, write_frame};
+use glint_lda::net::frame::{read_tagged_frame, write_tagged_frame};
 use glint_lda::net::tcp::TcpTransport;
 use glint_lda::net::Transport;
 use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
@@ -120,16 +120,17 @@ fn dropped_connection_pull_recovers_via_retry() {
         // First connection: swallow one frame, then drop the socket
         // without replying — an at-most-once loss.
         let (mut doomed, _) = listener.accept().unwrap();
-        let _ = read_frame(&mut doomed);
+        let _ = read_tagged_frame(&mut doomed);
         drop(doomed);
-        // After that, behave: serve decoded requests until Shutdown.
+        // After that, behave: serve decoded requests (echoing each
+        // frame's correlation id) until Shutdown.
         loop {
             let (mut stream, _) = listener.accept().unwrap();
-            while let Ok(Some(payload)) = read_frame(&mut stream) {
+            while let Ok(Some((corr, payload))) = read_tagged_frame(&mut stream) {
                 let req = Request::decode(&payload).unwrap();
                 let stop = req == Request::Shutdown;
                 let resp = if stop { Response::Ok } else { state.handle(req) };
-                write_frame(&mut stream, &resp.encode()).unwrap();
+                write_tagged_frame(&mut stream, corr, &resp.encode()).unwrap();
                 if stop {
                     return;
                 }
