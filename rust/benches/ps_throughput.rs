@@ -14,12 +14,16 @@
 //! - `PIPELINE_DEPTH=n` — the per-shard in-flight window used by the
 //!   blocking-API sections (the pipelining section always compares
 //!   depths 1 and 8);
+//! - `LAYOUT=dense|sparse` — storage layout of the matrix used by the
+//!   push/pull throughput sections (the sparse-vs-dense section always
+//!   measures both);
 //! - `BENCH_JSON=path` — where to write the machine-readable summary
 //!   (default `BENCH_ps_throughput.json` in the working directory).
 
 use glint_lda::net::FaultPlan;
 use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
 use glint_lda::ps::config::{PsConfig, TransportMode};
+use glint_lda::ps::messages::Layout;
 use glint_lda::ps::server::ServerGroup;
 use glint_lda::util::rng::Pcg64;
 use glint_lda::util::timer::Stopwatch;
@@ -82,6 +86,20 @@ fn env_pipeline_depth() -> usize {
     std::env::var("PIPELINE_DEPTH").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
 }
 
+fn env_layout() -> (Layout, &'static str) {
+    match std::env::var("LAYOUT") {
+        Err(_) => (Layout::Dense, "dense"),
+        // Fail loudly on a typo: a silent dense fallback would let the
+        // CI sparse leg stop exercising the sparse path while staying
+        // green.
+        Ok(v) => match Layout::parse(&v) {
+            Some(Layout::Sparse) => (Layout::Sparse, "sparse"),
+            Some(Layout::Dense) => (Layout::Dense, "dense"),
+            None => panic!("bad LAYOUT={v} (expected dense|sparse)"),
+        },
+    }
+}
+
 fn setup(
     dims: &Dims,
     shards: usize,
@@ -92,7 +110,9 @@ fn setup(
     let cfg = PsConfig { transport: mode, pipeline_depth, ..PsConfig::with_shards(shards) };
     let group = ServerGroup::start(cfg.clone(), plan, 11);
     let client = PsClient::connect(&*group.transport(), cfg);
-    let m = client.matrix::<i64>(dims.rows, dims.cols).expect("matrix");
+    let m = client
+        .matrix_with_layout::<i64>(dims.rows, dims.cols, env_layout().0)
+        .expect("matrix");
     (group, client, m)
 }
 
@@ -165,6 +185,116 @@ struct PipelineResult {
     avg_queue_wait_us: f64,
 }
 
+/// The sparse-vs-dense comparison at Zipfian row occupancy: reply bytes
+/// on the wire and wall time for pulling the full matrix each way, plus
+/// the server-side column-sum aggregation vs what it replaces.
+struct LayoutCompareResult {
+    rows: u64,
+    cols: u32,
+    /// Non-zero entries in the Zipf workload.
+    pairs: u64,
+    dense_pull_bytes: u64,
+    sparse_pull_bytes: u64,
+    dense_pull_secs: f64,
+    sparse_pull_secs: f64,
+    col_sums_bytes: u64,
+    col_sums_secs: f64,
+}
+
+/// Populate `matrices` with an identical Zipf-occupancy workload
+/// (row `r` holds `max(1, cols/(r+1))` non-zeros — the harmonic shape
+/// of a frequency-ordered vocabulary) and return the pair count.
+fn populate_zipf(dims: &Dims, matrices: &[&BigMatrix<i64>]) -> u64 {
+    let mut deltas = CoordDeltas::default();
+    let mut pairs = 0u64;
+    let flush = |deltas: &mut CoordDeltas<i64>| {
+        for m in matrices {
+            m.push_coords(deltas).expect("zipf populate");
+        }
+        *deltas = CoordDeltas::default();
+    };
+    for r in 0..dims.rows {
+        let nnz = (dims.cols as u64 / (r + 1)).max(1);
+        for j in 0..nnz {
+            let c = ((r + j) % dims.cols as u64) as u32;
+            deltas.rows.push(r);
+            deltas.cols.push(c);
+            deltas.values.push((r % 7 + 1) as i64);
+            pairs += 1;
+        }
+        if deltas.len() >= 100_000 {
+            flush(&mut deltas);
+        }
+    }
+    if !deltas.is_empty() {
+        flush(&mut deltas);
+    }
+    pairs
+}
+
+/// Reply bytes received so far across all shards of `group`.
+fn bytes_received(group: &ServerGroup) -> u64 {
+    group.transport().stats().iter().map(|s| s.bytes_received()).sum()
+}
+
+fn bench_layout_compare(
+    dims: &Dims,
+    shards: usize,
+    mode: TransportMode,
+    depth: usize,
+) -> LayoutCompareResult {
+    let cfg =
+        PsConfig { transport: mode, pipeline_depth: depth, ..PsConfig::with_shards(shards) };
+    let group = ServerGroup::start(cfg.clone(), FaultPlan::reliable(), 13);
+    let client = PsClient::connect(&*group.transport(), cfg);
+    let dense_m = client
+        .matrix_with_layout::<i64>(dims.rows, dims.cols, Layout::Dense)
+        .expect("dense matrix");
+    let sparse_m = client
+        .matrix_with_layout::<i64>(dims.rows, dims.cols, Layout::Sparse)
+        .expect("sparse matrix");
+    let pairs = populate_zipf(dims, &[&dense_m, &sparse_m]);
+
+    let all: Vec<u64> = (0..dims.rows).collect();
+    let chunk = dims.async_pull_rows.max(1);
+
+    let before = bytes_received(&group);
+    let sw = Stopwatch::new();
+    for ids in all.chunks(chunk) {
+        std::hint::black_box(dense_m.pull_rows(ids).expect("dense pull"));
+    }
+    let dense_pull_secs = sw.secs();
+    let dense_pull_bytes = bytes_received(&group) - before;
+
+    let before = bytes_received(&group);
+    let sw = Stopwatch::new();
+    for ids in all.chunks(chunk) {
+        std::hint::black_box(sparse_m.pull_sparse_rows(ids).expect("sparse pull"));
+    }
+    let sparse_pull_secs = sw.secs();
+    let sparse_pull_bytes = bytes_received(&group) - before;
+
+    // The aggregation the trainer runs each iteration: one K-length
+    // vector per shard, instead of pulling every row to sum client-side.
+    let before = bytes_received(&group);
+    let sw = Stopwatch::new();
+    std::hint::black_box(sparse_m.pull_col_sums().expect("col sums"));
+    let col_sums_secs = sw.secs();
+    let col_sums_bytes = bytes_received(&group) - before;
+
+    LayoutCompareResult {
+        rows: dims.rows,
+        cols: dims.cols,
+        pairs,
+        dense_pull_bytes,
+        sparse_pull_bytes,
+        dense_pull_secs,
+        sparse_pull_secs,
+        col_sums_bytes,
+        col_sums_secs,
+    }
+}
+
 fn json_escape_free(s: &str) -> &str {
     // Labels written into the JSON artifact are static identifiers.
     debug_assert!(!s.contains('"') && !s.contains('\\'));
@@ -176,14 +306,18 @@ fn write_json(
     transport: &str,
     smoke: bool,
     depth_env: usize,
+    layout_env: &str,
     results: &[PipelineResult],
+    layout: &LayoutCompareResult,
 ) {
     let mut body = String::new();
     body.push_str("{\n");
     body.push_str("  \"bench\": \"ps_throughput\",\n");
+    body.push_str("  \"source\": \"measured\",\n");
     body.push_str(&format!("  \"transport\": \"{}\",\n", json_escape_free(transport)));
     body.push_str(&format!("  \"smoke\": {smoke},\n"));
     body.push_str(&format!("  \"env_pipeline_depth\": {depth_env},\n"));
+    body.push_str(&format!("  \"env_layout\": \"{}\",\n", json_escape_free(layout_env)));
     body.push_str("  \"pipeline\": [\n");
     for (i, r) in results.iter().enumerate() {
         body.push_str(&format!(
@@ -198,7 +332,31 @@ fn write_json(
             if i + 1 < results.len() { "," } else { "" },
         ));
     }
-    body.push_str("  ]\n}\n");
+    body.push_str("  ],\n");
+    let ratio = if layout.sparse_pull_bytes > 0 {
+        layout.dense_pull_bytes as f64 / layout.sparse_pull_bytes as f64
+    } else {
+        0.0
+    };
+    body.push_str("  \"zipf_layout_compare\": {\n");
+    body.push_str(&format!(
+        "    \"rows\": {}, \"cols\": {}, \"pairs\": {},\n",
+        layout.rows, layout.cols, layout.pairs
+    ));
+    body.push_str(&format!(
+        "    \"dense_pull_bytes\": {}, \"sparse_pull_bytes\": {}, \
+         \"dense_over_sparse_bytes\": {:.2},\n",
+        layout.dense_pull_bytes, layout.sparse_pull_bytes, ratio
+    ));
+    body.push_str(&format!(
+        "    \"dense_pull_secs\": {:.4}, \"sparse_pull_secs\": {:.4},\n",
+        layout.dense_pull_secs, layout.sparse_pull_secs
+    ));
+    body.push_str(&format!(
+        "    \"col_sums_bytes\": {}, \"col_sums_secs\": {:.6}\n",
+        layout.col_sums_bytes, layout.col_sums_secs
+    ));
+    body.push_str("  }\n}\n");
     match std::fs::write(path, body) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => println!("could not write {path}: {e}"),
@@ -209,9 +367,11 @@ fn main() {
     let (mode, label) = transport_mode();
     let smoke = is_smoke();
     let depth_env = env_pipeline_depth();
+    let (_, layout_label) = env_layout();
     let dims = if smoke { &SMOKE } else { &FULL };
     println!(
-        "== ps_throughput: transport={label}, smoke={smoke}, pipeline_depth={depth_env} =="
+        "== ps_throughput: transport={label}, smoke={smoke}, pipeline_depth={depth_env}, \
+         layout={layout_label} =="
     );
 
     println!("== push throughput (deltas/s) vs shards, batch={} ==", dims.big_batch);
@@ -279,6 +439,36 @@ fn main() {
         );
     }
 
+    // The tentpole comparison: how many reply bytes (and how long) a
+    // full-model pull costs dense vs sparse at Zipfian row occupancy,
+    // plus the server-side column-sum aggregation the trainer now uses
+    // for the global topic vector.
+    println!(
+        "== sparse vs dense at Zipf occupancy ({mid_shards} shards, {}x{}) ==",
+        dims.rows, dims.cols
+    );
+    let layout_result = bench_layout_compare(dims, mid_shards, mode.clone(), depth_env);
+    println!(
+        "  workload: {} non-zero pairs ({:.2}% fill)",
+        layout_result.pairs,
+        100.0 * layout_result.pairs as f64
+            / (layout_result.rows as f64 * layout_result.cols as f64)
+    );
+    println!(
+        "  dense  pull: {:>12} reply bytes, {:.3}s",
+        layout_result.dense_pull_bytes, layout_result.dense_pull_secs
+    );
+    println!(
+        "  sparse pull: {:>12} reply bytes, {:.3}s ({:.1}x fewer bytes)",
+        layout_result.sparse_pull_bytes,
+        layout_result.sparse_pull_secs,
+        layout_result.dense_pull_bytes as f64 / layout_result.sparse_pull_bytes.max(1) as f64
+    );
+    println!(
+        "  col sums   : {:>12} reply bytes, {:.6}s (vs pulling the matrix to sum it)",
+        layout_result.col_sums_bytes, layout_result.col_sums_secs
+    );
+
     if mode == TransportMode::Sim {
         println!(
             "== exactly-once overhead under loss ({mid_shards} shards, batch={}) ==",
@@ -299,5 +489,5 @@ fn main() {
 
     let json_path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_ps_throughput.json".to_string());
-    write_json(&json_path, label, smoke, depth_env, &results);
+    write_json(&json_path, label, smoke, depth_env, layout_label, &results, &layout_result);
 }

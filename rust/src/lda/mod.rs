@@ -14,12 +14,15 @@
 //! stationary distribution is the true collapsed Gibbs posterior.
 //!
 //! The sampler runs data-parallel over corpus partitions ([`trainer`]);
-//! the shared state — the word-topic matrix `n_wk` and the topic vector
-//! `n_k` — lives on the parameter server. Document-topic counts `n_dk`
-//! are local to each partition ([`sparse_counts`]). Updates stream out
-//! through [`buffer`] (≈100 k-reassignment messages, with a dense local
+//! the shared state — the word-topic matrix `n_wk`, stored sparsely on
+//! the shards by default — lives on the parameter server, and the topic
+//! vector `n_k` is derived from it server-side (column sums) rather
+//! than kept as a second table. Document-topic counts `n_dk` are local
+//! to each partition ([`sparse_counts`]). Updates stream out through
+//! [`buffer`] (≈100 k-reassignment messages, with a dense local
 //! aggregate for the most frequent words, §3.3) while model rows are
-//! pulled ahead of the sampler by [`pipeline`] (§3.4). [`checkpoint`]
+//! pulled ahead of the sampler by [`pipeline`] (§3.4, sparse pulls for
+//! the sparse layout). [`checkpoint`]
 //! provides the §3.5 fault-tolerance path. [`gibbs`] is the exact O(K)
 //! collapsed Gibbs baseline used for correctness and for the O(1)-vs-O(K)
 //! scaling benchmark.

@@ -2,9 +2,16 @@
 //!
 //! Workers pull the word-topic matrix in fixed-size row blocks. While a
 //! block is being resampled (compute-bound), the next `depth` blocks are
-//! already in flight as asynchronous [`PullTicket`]s riding each shard's
+//! already in flight as asynchronous tickets riding each shard's
 //! bounded window, so the sampler never waits on the network once the
 //! pipeline is warm.
+//!
+//! Blocks can be pulled **dense** (full `rows x K` slabs over
+//! [`crate::ps::client::PullTicket`]) or **sparse** (`(col, val)` pairs
+//! over [`crate::ps::client::SparsePullTicket`], densified client-side
+//! into the same [`Block`] shape). Sparse mode ships bytes proportional
+//! to row occupancy — for the Zipf-tail vocabulary that is a fraction
+//! of the dense slab — while the sampler still sees contiguous rows.
 //!
 //! Shard errors propagate through the ticket into
 //! [`PullPipeline::next_block`]'s `Result` — there is no background
@@ -13,8 +20,8 @@
 
 use std::collections::VecDeque;
 
-use crate::ps::client::{BigMatrix, PullTicket};
-use crate::util::error::Result;
+use crate::ps::client::{BigMatrix, PullTicket, SparsePullTicket, SparseRow};
+use crate::util::error::{Error, Result};
 
 /// A pulled model block: the block index, the global row ids, and their
 /// values (row-major, `rows.len() x K`).
@@ -27,27 +34,75 @@ pub struct Block {
     pub values: Vec<i64>,
 }
 
+/// How the pipeline pulls its blocks off the parameter server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PullMode {
+    /// Full rows ([`BigMatrix::pull_rows_async`]).
+    Dense,
+    /// Sparse `(col, val)` pairs ([`BigMatrix::pull_sparse_rows_async`]),
+    /// densified client-side.
+    Sparse,
+}
+
+/// An issued-but-not-consumed block pull, in either mode.
+enum Inflight {
+    Dense(PullTicket<i64>),
+    Sparse(SparsePullTicket<i64>),
+}
+
+/// Scatter per-row pair lists into a dense row-major `rows x k` slab.
+/// A column id at or beyond `k` is a malformed reply and surfaces as a
+/// decode error rather than a panic on the sampling thread.
+fn densify(pairs: Vec<SparseRow<i64>>, k: usize) -> Result<Vec<i64>> {
+    let mut values = vec![0i64; pairs.len() * k];
+    for (i, row) in pairs.into_iter().enumerate() {
+        let base = i * k;
+        for (c, v) in row {
+            if c as usize >= k {
+                return Err(Error::Decode(format!(
+                    "sparse pull returned column {c} for a {k}-column matrix"
+                )));
+            }
+            values[base + c as usize] = v;
+        }
+    }
+    Ok(values)
+}
+
 /// Iterator over model blocks, prefetched `depth` blocks ahead through
 /// asynchronous pull tickets.
 pub struct PullPipeline {
     matrix: BigMatrix<i64>,
+    mode: PullMode,
     /// Blocks not yet issued, front first.
     remaining: VecDeque<Vec<u64>>,
     /// Issued-but-not-consumed pulls, in issue order.
-    inflight: VecDeque<(usize, Vec<u64>, PullTicket<i64>)>,
+    inflight: VecDeque<(usize, Vec<u64>, Inflight)>,
     depth: usize,
     next_index: usize,
 }
 
 impl PullPipeline {
-    /// Start pulling `blocks` (each a list of global rows) from `matrix`.
+    /// Start pulling `blocks` (each a list of global rows) from `matrix`
+    /// as dense slabs.
     ///
     /// `depth = 0` disables prefetching (each `next_block` pulls
     /// synchronously — the non-pipelined ablation); `depth >= 1` keeps
     /// that many block pulls in flight ahead of the consumer.
     pub fn start(matrix: BigMatrix<i64>, blocks: Vec<Vec<u64>>, depth: usize) -> PullPipeline {
+        PullPipeline::start_with_mode(matrix, blocks, depth, PullMode::Dense)
+    }
+
+    /// Start pulling `blocks` with an explicit [`PullMode`].
+    pub fn start_with_mode(
+        matrix: BigMatrix<i64>,
+        blocks: Vec<Vec<u64>>,
+        depth: usize,
+        mode: PullMode,
+    ) -> PullPipeline {
         let mut pipeline = PullPipeline {
             matrix,
+            mode,
             remaining: blocks.into(),
             inflight: VecDeque::new(),
             depth,
@@ -57,6 +112,20 @@ impl PullPipeline {
         pipeline
     }
 
+    fn issue(&self, rows: &[u64]) -> Inflight {
+        match self.mode {
+            PullMode::Dense => Inflight::Dense(self.matrix.pull_rows_async(rows)),
+            PullMode::Sparse => Inflight::Sparse(self.matrix.pull_sparse_rows_async(rows)),
+        }
+    }
+
+    fn resolve(&self, ticket: Inflight) -> Result<Vec<i64>> {
+        match ticket {
+            Inflight::Dense(t) => t.wait(),
+            Inflight::Sparse(t) => densify(t.wait()?, self.matrix.cols() as usize),
+        }
+    }
+
     /// Issue pulls until `depth` tickets are in flight (or no blocks
     /// remain).
     fn fill(&mut self) {
@@ -64,7 +133,7 @@ impl PullPipeline {
             let Some(rows) = self.remaining.pop_front() else {
                 return;
             };
-            let ticket = self.matrix.pull_rows_async(&rows);
+            let ticket = self.issue(&rows);
             self.inflight.push_back((self.next_index, rows, ticket));
             self.next_index += 1;
         }
@@ -78,10 +147,11 @@ impl PullPipeline {
             let rows = self.remaining.pop_front()?;
             let index = self.next_index;
             self.next_index += 1;
-            return Some(self.matrix.pull_rows(&rows).map(|values| Block { index, rows, values }));
+            let ticket = self.issue(&rows);
+            return Some(self.resolve(ticket).map(|values| Block { index, rows, values }));
         }
         let (index, rows, ticket) = self.inflight.pop_front()?;
-        let result = ticket.wait().map(|values| Block { index, rows, values });
+        let result = self.resolve(ticket).map(|values| Block { index, rows, values });
         // Keep the window full while the caller samples this block.
         self.fill();
         Some(result)
@@ -113,13 +183,14 @@ mod tests {
     use crate::net::FaultPlan;
     use crate::ps::client::{CoordDeltas, PsClient};
     use crate::ps::config::PsConfig;
+    use crate::ps::messages::Layout;
     use crate::ps::server::ServerGroup;
 
-    fn setup() -> (ServerGroup, BigMatrix<i64>) {
+    fn setup_with_layout(layout: Layout) -> (ServerGroup, BigMatrix<i64>) {
         let cfg = PsConfig::with_shards(3);
         let group = ServerGroup::start(cfg.clone(), FaultPlan::reliable(), 9);
         let client = PsClient::connect(&group.transport(), cfg);
-        let m: BigMatrix<i64> = client.matrix(64, 4).unwrap();
+        let m: BigMatrix<i64> = client.matrix_with_layout(64, 4, layout).unwrap();
         // Mark each row with its id in column 0.
         let deltas = CoordDeltas {
             rows: (0..64).collect(),
@@ -128,6 +199,10 @@ mod tests {
         };
         m.push_coords(&deltas).expect("seed rows");
         (group, m)
+    }
+
+    fn setup() -> (ServerGroup, BigMatrix<i64>) {
+        setup_with_layout(Layout::Dense)
     }
 
     #[test]
@@ -158,10 +233,38 @@ mod tests {
     }
 
     #[test]
+    fn sparse_mode_yields_identical_blocks() {
+        for layout in [Layout::Dense, Layout::Sparse] {
+            let (_g, m) = setup_with_layout(layout);
+            let blocks = vec![vec![0u64, 1, 2], vec![10, 20], vec![63]];
+            let mut dense_p =
+                PullPipeline::start_with_mode(m.clone(), blocks.clone(), 2, PullMode::Dense);
+            let mut sparse_p =
+                PullPipeline::start_with_mode(m, blocks, 2, PullMode::Sparse);
+            loop {
+                match (dense_p.next_block(), sparse_p.next_block()) {
+                    (None, None) => break,
+                    (Some(d), Some(s)) => {
+                        let (d, s) = (d.unwrap(), s.unwrap());
+                        assert_eq!(d.index, s.index);
+                        assert_eq!(d.rows, s.rows);
+                        assert_eq!(d.values, s.values, "layout {layout:?}");
+                    }
+                    (d, s) => panic!(
+                        "pipelines diverged: dense ended={}, sparse ended={}",
+                        d.is_none(),
+                        s.is_none()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
     fn depth_zero_is_synchronous_but_complete() {
         let (_g, m) = setup();
         let blocks = vec![vec![5u64], vec![6]];
-        let mut p = PullPipeline::start(m, blocks, 0);
+        let mut p = PullPipeline::start_with_mode(m, blocks, 0, PullMode::Sparse);
         assert_eq!(p.next_block().unwrap().unwrap().rows, vec![5]);
         assert_eq!(p.next_block().unwrap().unwrap().rows, vec![6]);
         assert!(p.next_block().is_none());
@@ -173,7 +276,7 @@ mod tests {
         // window: everything must still arrive exactly once, in order.
         let (_g, m) = setup();
         let blocks: Vec<Vec<u64>> = (0..16).map(|i| vec![i as u64 * 4]).collect();
-        let mut p = PullPipeline::start(m, blocks, 32);
+        let mut p = PullPipeline::start_with_mode(m, blocks, 32, PullMode::Sparse);
         let mut count = 0;
         while let Some(b) = p.next_block() {
             let b = b.unwrap();

@@ -5,22 +5,29 @@
 //! worker thread running the LightLDA Metropolis–Hastings kernel against
 //! shared state on the parameter server:
 //!
-//! - `n_wk` — `V x K` word-topic counts, a [`BigMatrix<i64>`];
-//! - `n_k`  — `K` topic totals, a [`BigVector<i64>`];
+//! - `n_wk` — `V x K` word-topic counts, a [`BigMatrix<i64>`] stored
+//!   `Layout::Sparse` by default (Zipf-shaped rows; see
+//!   [`TrainConfig::wt_layout`]);
+//! - `n_k`  — `K` topic totals, **derived server-side**: pulled as the
+//!   column sums of `n_wk`
+//!   ([`crate::ps::client::BigMatrix::pull_col_sums`]) instead of being
+//!   maintained as a second table and double-pushed;
 //! - `n_dk` — document-topic counts, local to each worker.
 //!
 //! Per iteration, each worker walks the model in word blocks: rows are
 //! **pulled in fixed-size sets** with the next sets prefetched as
 //! asynchronous pull tickets while the current one is being sampled
-//! (§3.4, [`crate::lda::pipeline`]); alias tables are built per pulled
-//! word; all of the partition's occurrences of those words are
-//! resampled; updates stream out through the [`crate::lda::buffer`]
-//! (§3.3) as **fire-and-forget push tickets** riding each shard's
-//! bounded in-flight window while sampling continues. The iteration
-//! barrier is [`crate::ps::client::PsClient::flush`]: it drains every
-//! outstanding push (exactly-once, §2.4) — and surfaces any push error —
-//! before the next iteration pulls, before perplexity evaluation, and
-//! before checkpointing.
+//! (§3.4, [`crate::lda::pipeline`]) — sparse `(col, val)` pulls when the
+//! matrix layout is sparse, so bandwidth tracks row occupancy; alias
+//! tables are built per pulled word; all of the partition's occurrences
+//! of those words are resampled; updates stream out through the
+//! [`crate::lda::buffer`] (§3.3) as **fire-and-forget push tickets**
+//! riding each shard's bounded in-flight window while sampling
+//! continues. The iteration barrier is
+//! [`crate::ps::client::PsClient::flush`]: it drains every outstanding
+//! push (exactly-once, §2.4) — and surfaces any push error — before the
+//! next iteration pulls, before perplexity evaluation, and before
+//! checkpointing.
 //!
 //! Fault tolerance (§3.5): assignments are checkpointed after each
 //! iteration; [`Trainer::restore`] rebuilds the parameter-server count
@@ -35,14 +42,15 @@ use crate::lda::buffer::UpdateBuffer;
 use crate::lda::checkpoint::Checkpoint;
 use crate::lda::hyper::LdaHyper;
 use crate::lda::lightlda::{resample_token, word_alias, TokenView};
-use crate::lda::pipeline::{word_blocks, PullPipeline};
+use crate::lda::pipeline::{word_blocks, PullMode, PullPipeline};
 use crate::lda::sparse_counts::DocTopicCounts;
 use crate::log_info;
 use crate::metrics::{Report, Row};
 use crate::net::tcp::{resolve_addrs, TcpTransport};
 use crate::net::{FaultPlan, Transport};
-use crate::ps::client::{BigMatrix, BigVector, PsClient};
+use crate::ps::client::{BigMatrix, PsClient};
 use crate::ps::config::{PsConfig, TransportMode};
+use crate::ps::messages::Layout;
 use crate::ps::partition::PartitionScheme;
 use crate::ps::server::ServerGroup;
 use crate::util::error::{Error, Result};
@@ -80,6 +88,11 @@ pub struct TrainConfig {
     pub pipeline_depth: usize,
     /// Row partitioning scheme on the servers (paper: cyclic).
     pub scheme: PartitionScheme,
+    /// Storage layout of the word-topic matrix on the shards. `Sparse`
+    /// (the default) stores rows as sorted `(col, val)` pairs and pulls
+    /// them as pairs, so memory and bandwidth track the Zipfian row
+    /// occupancy; `Dense` is the full-slab ablation.
+    pub wt_layout: Layout,
     /// Transport between trainer and parameter servers. `Sim` and
     /// `TcpLoopback` start the servers in-process; `Connect` attaches to
     /// externally running `serve` processes (and overrides `shards` with
@@ -110,6 +123,7 @@ impl Default for TrainConfig {
             dense_top_words: 2000,
             pipeline_depth: 1,
             scheme: PartitionScheme::Cyclic,
+            wt_layout: Layout::Sparse,
             transport: TransportMode::Sim,
             fault: FaultPlan::reliable(),
             seed: 0x1da,
@@ -217,7 +231,6 @@ pub struct Trainer {
     transport: Arc<dyn Transport>,
     client: PsClient,
     n_wk: BigMatrix<i64>,
-    n_k: BigVector<i64>,
     workers: Vec<WorkerState>,
     vocab_size: u32,
     completed_iterations: u32,
@@ -235,8 +248,7 @@ impl Trainer {
         }
         let (group, transport, client) = start_parameter_servers(&cfg)?;
         let n_wk: BigMatrix<i64> =
-            client.matrix(corpus.vocab_size as u64, cfg.num_topics)?;
-        let n_k: BigVector<i64> = client.vector(cfg.num_topics as u64)?;
+            client.matrix_with_layout(corpus.vocab_size as u64, cfg.num_topics, cfg.wt_layout)?;
 
         let mut trainer = Trainer {
             hyper: cfg.hyper(),
@@ -244,7 +256,6 @@ impl Trainer {
             transport,
             client,
             n_wk,
-            n_k,
             workers: Vec::new(),
             vocab_size: corpus.vocab_size,
             completed_iterations: 0,
@@ -287,8 +298,8 @@ impl Trainer {
         }
 
         let (group, transport, client) = start_parameter_servers(&cfg)?;
-        let n_wk: BigMatrix<i64> = client.matrix(corpus.vocab_size as u64, cfg.num_topics)?;
-        let n_k: BigVector<i64> = client.vector(cfg.num_topics as u64)?;
+        let n_wk: BigMatrix<i64> =
+            client.matrix_with_layout(corpus.vocab_size as u64, cfg.num_topics, cfg.wt_layout)?;
         let completed = ckpt.iteration;
         let assignments = std::cell::RefCell::new(ckpt.assignments);
 
@@ -298,7 +309,6 @@ impl Trainer {
             transport,
             client,
             n_wk,
-            n_k,
             workers: Vec::new(),
             vocab_size: corpus.vocab_size,
             completed_iterations: completed,
@@ -377,17 +387,13 @@ impl Trainer {
 
     /// Push every worker's initial counts to the parameter server
     /// (buffered fire-and-forget tickets, same path as training updates;
-    /// the trailing `flush` is the completion barrier).
+    /// the trailing `flush` is the completion barrier). Only `n_wk` is
+    /// pushed — the topic totals are its column sums, aggregated
+    /// server-side on demand.
     fn push_initial_counts(&mut self) -> Result<()> {
         let k = self.cfg.num_topics;
-        let mut nk_local = vec![0i64; k as usize];
         let mut buffer = UpdateBuffer::new(self.cfg.buffer_cap, self.cfg.dense_top_words, k);
         for ws in &self.workers {
-            for (doc_z, _) in ws.assignments.iter().zip(&ws.doc_counts) {
-                for &z in doc_z {
-                    nk_local[z as usize] += 1;
-                }
-            }
             for (w, occs) in ws.occurrences.iter().enumerate() {
                 for &(local, pos) in occs {
                     let z = ws.assignments[local as usize][pos as usize];
@@ -401,9 +407,12 @@ impl Trainer {
         let _ = self.n_wk.push_coords_async(&rest);
         let (rows, values) = buffer.take_dense();
         let _ = self.n_wk.push_rows_async(&rows, &values);
-        let idx: Vec<u64> = (0..k as u64).collect();
-        let _ = self.n_k.push_async(&idx, &nk_local);
         self.client.flush()
+    }
+
+    /// Pull mode matching the word-topic matrix's storage layout.
+    fn pull_mode(&self) -> PullMode {
+        pull_mode_for(self.n_wk.layout())
     }
 
     /// Run the configured number of iterations; returns the final model
@@ -449,12 +458,13 @@ impl Trainer {
     pub fn run_iteration(&mut self) -> Result<IterStats> {
         let sw = Stopwatch::new();
         let k = self.cfg.num_topics;
-        // Iteration-start snapshot of n_k, shared read-only by workers;
-        // each worker maintains its own local drift copy (LightLDA's
-        // bounded-staleness model).
-        let nk_snapshot = self.n_k.pull_all()?;
+        // Iteration-start snapshot of the topic totals, shared read-only
+        // by workers; each worker maintains its own local drift copy
+        // (LightLDA's bounded-staleness model). The totals are the
+        // column sums of n_wk, aggregated server-side — one K-length
+        // vector per shard instead of pulling any rows.
+        let nk_snapshot = self.n_wk.pull_col_sums()?;
         let n_wk = &self.n_wk;
-        let n_k_handle = &self.n_k;
         let cfg = &self.cfg;
         let hyper = self.hyper;
         let v = self.vocab_size;
@@ -467,7 +477,7 @@ impl Trainer {
                 let errors = &errors;
                 let totals = &totals;
                 scope.spawn(move || {
-                    match worker_iteration(ws, cfg, hyper, v, k, nk_snapshot, n_wk, n_k_handle) {
+                    match worker_iteration(ws, cfg, hyper, v, k, nk_snapshot, n_wk) {
                         Ok(stats) => {
                             let mut t = totals.lock().unwrap();
                             t.tokens += stats.tokens;
@@ -512,20 +522,26 @@ impl Trainer {
     /// Pull the full model off the parameter server.
     pub fn pull_model(&self) -> Result<TopicModel> {
         // Pull in 8192-row chunks through the same bounded prefetch
-        // pipeline (and at the same depth) the sampler uses (§3.4):
-        // later chunks are in flight while earlier ones are copied out,
-        // without unbounded result buffering — and `pipeline_depth = 0`
-        // keeps the synchronous ablation truly synchronous here too.
+        // pipeline (at the same depth and in the same pull mode) the
+        // sampler uses (§3.4): later chunks are in flight while earlier
+        // ones are copied out, without unbounded result buffering — and
+        // `pipeline_depth = 0` keeps the synchronous ablation truly
+        // synchronous here too. In sparse mode the Zipf tail crosses the
+        // wire as pairs, not slabs.
         let k = self.cfg.num_topics as usize;
         let rows: Vec<u64> = (0..self.vocab_size as u64).collect();
         let chunks: Vec<Vec<u64>> = rows.chunks(8192).map(|c| c.to_vec()).collect();
-        let mut pipeline =
-            PullPipeline::start(self.n_wk.clone(), chunks, self.cfg.pipeline_depth);
+        let mut pipeline = PullPipeline::start_with_mode(
+            self.n_wk.clone(),
+            chunks,
+            self.cfg.pipeline_depth,
+            self.pull_mode(),
+        );
         let mut n_wk = Vec::with_capacity(self.vocab_size as usize * k);
         while let Some(block) = pipeline.next_block() {
             n_wk.extend(block?.values);
         }
-        let n_k = self.n_k.pull_all()?;
+        let n_k = self.n_wk.pull_col_sums()?;
         Ok(TopicModel { k: self.cfg.num_topics, v: self.vocab_size, n_wk, n_k, hyper: self.hyper })
     }
 
@@ -594,13 +610,23 @@ impl Trainer {
     }
 }
 
+/// Single source of truth for how a storage layout is pulled.
+fn pull_mode_for(layout: Layout) -> PullMode {
+    match layout {
+        Layout::Sparse => PullMode::Sparse,
+        Layout::Dense => PullMode::Dense,
+    }
+}
+
 /// One worker's full sweep over its partition.
 ///
 /// Sparse batches leave as fire-and-forget push tickets the moment the
 /// buffer fills; the shard windows backpressure the sampler if the
 /// network falls behind, and the iteration-end `flush` in
-/// [`Trainer::run_iteration`] is where their errors surface.
-#[allow(clippy::too_many_arguments)]
+/// [`Trainer::run_iteration`] is where their errors surface. Topic
+/// totals need no pushes of their own: every reassignment is already in
+/// the `n_wk` deltas, and the next iteration's snapshot re-derives the
+/// totals as server-side column sums.
 fn worker_iteration(
     ws: &mut WorkerState,
     cfg: &TrainConfig,
@@ -609,15 +635,18 @@ fn worker_iteration(
     k: u32,
     mut nk_local: Vec<i64>,
     n_wk: &BigMatrix<i64>,
-    n_k: &BigVector<i64>,
 ) -> Result<IterStats> {
     let kk = k as usize;
     let mut stats = IterStats::default();
     let mut buffer = UpdateBuffer::new(cfg.buffer_cap, cfg.dense_top_words, k);
-    let mut nk_delta = vec![0i64; kk];
 
     let blocks = word_blocks(&ws.present, cfg.block_words);
-    let mut pipeline = PullPipeline::start(n_wk.clone(), blocks, cfg.pipeline_depth);
+    let mut pipeline = PullPipeline::start_with_mode(
+        n_wk.clone(),
+        blocks,
+        cfg.pipeline_depth,
+        pull_mode_for(n_wk.layout()),
+    );
 
     while let Some(block) = pipeline.next_block() {
         let mut block = block?;
@@ -654,8 +683,6 @@ fn worker_iteration(
                     nk_local[z_new as usize] += 1;
                     ws.assignments[local][pos] = z_new;
                     stats.changed += 1;
-                    nk_delta[z_old as usize] -= 1;
-                    nk_delta[z_new as usize] += 1;
                     if let Some(batch) = buffer.add(wu, z_old, -1) {
                         let _ = n_wk.push_coords_async(&batch);
                         stats.sparse_batches += 1;
@@ -669,9 +696,9 @@ fn worker_iteration(
         }
     }
 
-    // End-of-iteration flushes: remaining sparse triples, the dense
-    // hot-word aggregate (§3.3), and this worker's n_k drift — all
-    // fire-and-forget; run_iteration's flush() barrier collects them.
+    // End-of-iteration flushes: remaining sparse triples and the dense
+    // hot-word aggregate (§3.3) — all fire-and-forget; run_iteration's
+    // flush() barrier collects them.
     let rest = buffer.take_sparse();
     if !rest.is_empty() {
         let _ = n_wk.push_coords_async(&rest);
@@ -680,10 +707,6 @@ fn worker_iteration(
     let (rows, values) = buffer.take_dense();
     if !rows.is_empty() {
         let _ = n_wk.push_rows_async(&rows, &values);
-    }
-    if nk_delta.iter().any(|&d| d != 0) {
-        let idx: Vec<u64> = (0..kk as u64).collect();
-        let _ = n_k.push_async(&idx, &nk_delta);
     }
     Ok(stats)
 }
@@ -786,6 +809,20 @@ mod tests {
         let mut cfg = fast_cfg();
         cfg.pipeline_depth = 4;
         cfg.buffer_cap = 100;
+        let mut t = Trainer::new(cfg, &c).unwrap();
+        t.run_iteration().unwrap();
+        t.run_iteration().unwrap();
+        t.verify_counts().unwrap();
+    }
+
+    #[test]
+    fn dense_layout_ablation_also_works() {
+        // The default word-topic layout is sparse; the dense ablation
+        // must keep counts exactly consistent too.
+        let c = corpus();
+        let mut cfg = fast_cfg();
+        cfg.wt_layout = Layout::Dense;
+        cfg.iterations = 2;
         let mut t = Trainer::new(cfg, &c).unwrap();
         t.run_iteration().unwrap();
         t.run_iteration().unwrap();

@@ -8,13 +8,16 @@
 //! - [`ps`] — **Glint**, an asynchronous parameter server: distributed
 //!   matrices/vectors with ticket-based `pull`/`push` (`_async` variants
 //!   return wait()-able tickets riding bounded per-shard in-flight
-//!   windows, with `flush()` as the cross-ticket barrier), cyclic row
-//!   partitioning, retrying pulls with exponential back-off and an
-//!   *exactly-once* hand-shake protocol for pushes, running over
-//!   pluggable at-most-once transports ([`net`]): an in-process
-//!   fault-injectable simulator and a real TCP backend
-//!   (correlation-tagged frames multiplexed over one connection per
-//!   shard, `serve`/`--connect` multi-process deployments).
+//!   windows, with `flush()` as the cross-ticket barrier), pluggable
+//!   `Dense`/`Sparse` storage layouts with typed server-side operations
+//!   (sparse row pulls, per-row top-k, column sums) executed by an
+//!   op-dispatch shard executor (concurrent reads, serialized pushes),
+//!   cyclic row partitioning, retrying pulls with exponential back-off
+//!   and an *exactly-once* hand-shake protocol for pushes (bounded
+//!   dedup window), running over pluggable at-most-once transports
+//!   ([`net`]): an in-process fault-injectable simulator and a real TCP
+//!   backend (correlation-tagged frames multiplexed over one connection
+//!   per shard, `serve`/`--connect` multi-process deployments).
 //! - [`lda`] — a distributed **LightLDA** sampler (Metropolis–Hastings
 //!   collapsed Gibbs with amortized O(1) per-token complexity) built on
 //!   the parameter server, with push buffering, prefetched model pulls

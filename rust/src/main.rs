@@ -27,6 +27,7 @@ use glint_lda::log_info;
 use glint_lda::net::tcp::{resolve_addrs, TcpTransport};
 use glint_lda::ps::client::PsClient;
 use glint_lda::ps::config::{PsConfig, TransportMode};
+use glint_lda::ps::messages::Layout;
 use glint_lda::ps::partition::PartitionScheme;
 use glint_lda::ps::server::TcpShardServer;
 use glint_lda::util::cli::Args;
@@ -156,6 +157,8 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
         pipeline_depth: args.get_as("pipeline-depth", 1usize)?,
         scheme: PartitionScheme::parse(&args.str_or("scheme", "cyclic"))
             .ok_or_else(|| Error::Config("bad --scheme (cyclic|range)".into()))?,
+        wt_layout: Layout::parse(&args.str_or("wt-layout", "sparse"))
+            .ok_or_else(|| Error::Config("bad --wt-layout (dense|sparse)".into()))?,
         transport: transport_mode(args)?,
         seed: args.get_as("seed", 0x1dau64)?,
         eval_every: args.get_as("eval-every", 5u32)?,

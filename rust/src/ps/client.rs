@@ -58,12 +58,22 @@ use std::time::Instant;
 use crate::net::stats::EndpointStats;
 use crate::net::{Endpoint, Transport};
 use crate::ps::config::PsConfig;
-use crate::ps::messages::{Data, Dtype, Request, Response};
+use crate::ps::messages::{Data, Dtype, Layout, Request, Response};
 use crate::ps::partition::Partitioner;
 use crate::util::error::{Error, Result};
 
 /// Element types storable on the parameter server.
-pub trait Element: Copy + Default + Send + Sync + std::fmt::Debug + 'static {
+pub trait Element:
+    Copy
+    + Default
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + PartialEq
+    + PartialOrd
+    + std::ops::AddAssign
+    + 'static
+{
     /// Corresponding wire dtype.
     const DTYPE: Dtype;
     /// Wrap a vector into a typed payload.
@@ -126,6 +136,9 @@ impl Courier {
         let payload = req.encode();
         let op = match req {
             Request::PullRows { .. } => "pull",
+            Request::PullSparseRows { .. } => "pull-sparse",
+            Request::PullTopK { .. } => "pull-topk",
+            Request::PullColSums { .. } => "pull-col-sums",
             Request::GenUid => "gen-uid",
             Request::PushCoords { .. } | Request::PushRows { .. } => "push",
             Request::Forget { .. } => "forget",
@@ -434,13 +447,29 @@ impl PsClient {
         Err(first)
     }
 
-    /// Allocate a distributed `rows x cols` matrix.
+    /// Allocate a distributed `rows x cols` matrix with dense shard
+    /// storage (see [`PsClient::matrix_with_layout`] for sparse).
     pub fn matrix<T: Element>(&self, rows: u64, cols: u32) -> Result<BigMatrix<T>> {
+        self.matrix_with_layout(rows, cols, Layout::Dense)
+    }
+
+    /// Allocate a distributed `rows x cols` matrix whose shard slices
+    /// use the given storage [`Layout`]. `Layout::Sparse` stores each
+    /// row as sorted `(col, val)` pairs (promoted to dense slabs above
+    /// a fill threshold) — the right choice for Zipf-shaped matrices
+    /// like LDA's word-topic counts, where it makes resident bytes and
+    /// sparse-pull payloads proportional to occupancy.
+    pub fn matrix_with_layout<T: Element>(
+        &self,
+        rows: u64,
+        cols: u32,
+        layout: Layout,
+    ) -> Result<BigMatrix<T>> {
         if rows == 0 || cols == 0 {
             return Err(Error::Config("matrix dimensions must be positive".into()));
         }
         let id = self.next_matrix_id.fetch_add(1, Ordering::SeqCst);
-        let req = Request::CreateMatrix { id, rows, cols, dtype: T::DTYPE };
+        let req = Request::CreateMatrix { id, rows, cols, dtype: T::DTYPE, layout };
         // Broadcast creation to every shard, in parallel.
         let results: Vec<Result<Response>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..self.shards())
@@ -459,6 +488,7 @@ impl PsClient {
             id,
             part: Partitioner::new(rows, self.config.shards, self.config.scheme),
             cols,
+            layout,
             _t: PhantomData,
         })
     }
@@ -508,6 +538,7 @@ impl PsClient {
                     local_rows,
                     bytes,
                     pending_uids,
+                    dedup_evictions,
                 } => Ok(ShardInfo {
                     shard_id,
                     shards,
@@ -516,6 +547,7 @@ impl PsClient {
                     local_rows,
                     bytes,
                     pending_uids,
+                    dedup_evictions,
                 }),
                 r => Err(Error::Decode(format!("unexpected info response {r:?}"))),
             })
@@ -572,6 +604,9 @@ pub struct ShardInfo {
     pub bytes: u64,
     /// Outstanding (un-forgotten) push uids.
     pub pending_uids: u64,
+    /// Dedup records evicted by the server's bounded window before
+    /// their `Forget` arrived (abandoned hand-shakes).
+    pub dedup_evictions: u64,
 }
 
 /// Sparse additive deltas destined for one matrix, grouped per shard by
@@ -643,6 +678,120 @@ impl<T: Element> PullTicket<T> {
             let src = &shard_data[s][cursor[s]..cursor[s] + cols];
             out[i * cols..(i + 1) * cols].copy_from_slice(src);
             cursor[s] += cols;
+        }
+        Ok(out)
+    }
+}
+
+/// One pulled sparse row: `(col, value)` pairs, columns ascending for
+/// plain sparse pulls, value-descending for top-k pulls.
+pub type SparseRow<T> = Vec<(u32, T)>;
+
+/// Per-shard reply of a sparse pull: `(lens, cols, values)` in the
+/// shard's request order.
+type SparseShardReply<T> = (Vec<u32>, Vec<u32>, Vec<T>);
+
+/// Handle to an asynchronous sparse pull issued with
+/// [`BigMatrix::pull_sparse_rows_async`] or
+/// [`BigMatrix::pull_topk_async`]. Resolve it with
+/// [`SparsePullTicket::wait`]; dropping the ticket abandons the values
+/// (the pull itself still completes on the shard workers).
+#[must_use = "a pull's values are only delivered through wait()"]
+pub struct SparsePullTicket<T: Element> {
+    /// `(shard, receiver)` per per-shard sub-request.
+    parts: Vec<(usize, mpsc::Receiver<Result<SparseShardReply<T>>>)>,
+    /// Requested global rows, for scattering back to request order.
+    rows: Vec<u64>,
+    shards: usize,
+    part: Partitioner,
+    /// Validation failure detected at issue time.
+    early: Option<Error>,
+}
+
+impl<T: Element> SparsePullTicket<T> {
+    /// Block until every shard answered; one pair list per requested
+    /// row, in request order.
+    pub fn wait(mut self) -> Result<Vec<SparseRow<T>>> {
+        if let Some(e) = self.early.take() {
+            return Err(e);
+        }
+        let mut shard_data: Vec<SparseShardReply<T>> =
+            (0..self.shards).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+        for (shard, rx) in &self.parts {
+            match rx.recv() {
+                Ok(Ok(reply)) => shard_data[*shard] = reply,
+                Ok(Err(e)) => return Err(e),
+                Err(_) => {
+                    return Err(Error::Config(
+                        "async sparse pull worker disappeared before replying".into(),
+                    ))
+                }
+            }
+        }
+        // Scatter back into request order.
+        let mut row_cursor = vec![0usize; self.shards];
+        let mut pair_cursor = vec![0usize; self.shards];
+        let mut out: Vec<SparseRow<T>> = Vec::with_capacity(self.rows.len());
+        for &r in &self.rows {
+            let s = self.part.shard_of(r);
+            let (lens, cols, vals) = &shard_data[s];
+            let Some(&n) = lens.get(row_cursor[s]) else {
+                return Err(Error::Decode("sparse pull reply is missing rows".into()));
+            };
+            row_cursor[s] += 1;
+            let (start, end) = (pair_cursor[s], pair_cursor[s] + n as usize);
+            if end > cols.len() || end > vals.len() {
+                return Err(Error::Decode("sparse pull reply is missing pairs".into()));
+            }
+            out.push(
+                cols[start..end].iter().copied().zip(vals[start..end].iter().copied()).collect(),
+            );
+            pair_cursor[s] = end;
+        }
+        Ok(out)
+    }
+}
+
+/// Handle to an asynchronous server-side column-sum aggregation issued
+/// with [`BigMatrix::pull_col_sums_async`]. [`ColSumsTicket::wait`]
+/// adds the per-shard partial sums into the global `cols`-length total.
+#[must_use = "the sums are only delivered through wait()"]
+pub struct ColSumsTicket<T: Element> {
+    parts: Vec<mpsc::Receiver<Result<Vec<T>>>>,
+    cols: usize,
+    /// Validation failure detected at issue time.
+    early: Option<Error>,
+}
+
+impl<T: Element> ColSumsTicket<T> {
+    /// Block until every shard answered; returns the global column sums
+    /// (`cols` entries).
+    pub fn wait(mut self) -> Result<Vec<T>> {
+        if let Some(e) = self.early.take() {
+            return Err(e);
+        }
+        let mut out = vec![T::default(); self.cols];
+        for rx in &self.parts {
+            match rx.recv() {
+                Ok(Ok(partial)) => {
+                    if partial.len() != self.cols {
+                        return Err(Error::Decode(format!(
+                            "col-sum reply has {} entries, want {}",
+                            partial.len(),
+                            self.cols
+                        )));
+                    }
+                    for (o, v) in out.iter_mut().zip(partial) {
+                        *o += v;
+                    }
+                }
+                Ok(Err(e)) => return Err(e),
+                Err(_) => {
+                    return Err(Error::Config(
+                        "async col-sum worker disappeared before replying".into(),
+                    ))
+                }
+            }
         }
         Ok(out)
     }
@@ -761,6 +910,7 @@ pub struct BigMatrix<T: Element> {
     id: u32,
     part: Partitioner,
     cols: u32,
+    layout: Layout,
     _t: PhantomData<T>,
 }
 
@@ -778,6 +928,11 @@ impl<T: Element> BigMatrix<T> {
     /// Matrix id (diagnostics).
     pub fn id(&self) -> u32 {
         self.id
+    }
+
+    /// Shard storage layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
     }
 
     /// Submit one shard's exactly-once push hand-shake (built by `make`
@@ -905,6 +1060,144 @@ impl<T: Element> BigMatrix<T> {
     /// Pull a single row.
     pub fn pull_row(&self, row: u64) -> Result<Vec<T>> {
         self.pull_rows(&[row])
+    }
+
+    /// A sparse ticket that fails immediately with `err` when waited.
+    fn failed_sparse_pull(&self, err: Error) -> SparsePullTicket<T> {
+        SparsePullTicket {
+            parts: Vec::new(),
+            rows: Vec::new(),
+            shards: self.client.shards(),
+            part: self.part,
+            early: Some(err),
+        }
+    }
+
+    /// Issue one sparse pull sub-request per shard; `make` builds the
+    /// shard request from that shard's row subset. Shared machinery of
+    /// [`BigMatrix::pull_sparse_rows_async`] and
+    /// [`BigMatrix::pull_topk_async`].
+    fn sparse_pull_async(
+        &self,
+        rows: &[u64],
+        make: impl Fn(u32, Vec<u64>) -> Request,
+    ) -> SparsePullTicket<T> {
+        let shards = self.client.shards();
+        if rows.is_empty() {
+            return SparsePullTicket {
+                parts: Vec::new(),
+                rows: Vec::new(),
+                shards,
+                part: self.part,
+                early: None,
+            };
+        }
+        for &r in rows {
+            if r >= self.part.rows {
+                return self.failed_sparse_pull(Error::Config(format!(
+                    "row {r} out of bounds ({} rows)",
+                    self.part.rows
+                )));
+            }
+        }
+        // Split into at most one request per shard (§2.3).
+        let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        for &r in rows {
+            per_shard[self.part.shard_of(r)].push(r);
+        }
+        let mut parts = Vec::new();
+        for (s, shard_rows) in per_shard.into_iter().enumerate() {
+            if shard_rows.is_empty() {
+                continue;
+            }
+            let courier = self.client.courier(s);
+            let req = make(self.id, shard_rows);
+            let (tx, rx) = mpsc::channel();
+            self.client.submit(
+                s,
+                Box::new(move || {
+                    let result = courier.request_retry(&req).and_then(|resp| match resp {
+                        Response::SparseRows(d) => {
+                            let vals = T::unwrap(d.values)?;
+                            Ok((d.lens, d.cols, vals))
+                        }
+                        r => Err(Error::Decode(format!("unexpected sparse pull response {r:?}"))),
+                    });
+                    // The ticket may have been dropped; a pull has no
+                    // side effects, so its result can be discarded.
+                    let _ = tx.send(result);
+                }),
+            );
+            parts.push((s, rx));
+        }
+        SparsePullTicket { parts, rows: rows.to_vec(), shards, part: self.part, early: None }
+    }
+
+    /// Start pulling rows as `(col, value)` pair lists — only the
+    /// non-zero entries cross the wire, so bandwidth is proportional to
+    /// row occupancy rather than `cols`. The ticket's wait() yields one
+    /// column-ascending pair list per requested row, in request order.
+    /// Works on either storage layout (dense shards scan for non-zero
+    /// entries server-side).
+    pub fn pull_sparse_rows_async(&self, rows: &[u64]) -> SparsePullTicket<T> {
+        self.sparse_pull_async(rows, |id, shard_rows| Request::PullSparseRows {
+            id,
+            rows: shard_rows,
+        })
+    }
+
+    /// Pull rows as sparse pair lists. Blocking wrapper over
+    /// [`BigMatrix::pull_sparse_rows_async`].
+    pub fn pull_sparse_rows(&self, rows: &[u64]) -> Result<Vec<SparseRow<T>>> {
+        self.pull_sparse_rows_async(rows).wait()
+    }
+
+    /// Start a server-side top-k pull: each requested row comes back as
+    /// its `k` largest `(col, value)` pairs (value descending, ties by
+    /// column ascending) — topic inspection without shipping full rows.
+    pub fn pull_topk_async(&self, rows: &[u64], k: u32) -> SparsePullTicket<T> {
+        self.sparse_pull_async(rows, move |id, shard_rows| Request::PullTopK {
+            id,
+            rows: shard_rows,
+            k,
+        })
+    }
+
+    /// Server-side top-k per row. Blocking wrapper over
+    /// [`BigMatrix::pull_topk_async`].
+    pub fn pull_topk(&self, rows: &[u64], k: u32) -> Result<Vec<SparseRow<T>>> {
+        self.pull_topk_async(rows, k).wait()
+    }
+
+    /// Start a server-side column-sum aggregation: every shard sums its
+    /// local rows and ships one `cols`-length vector; the ticket adds
+    /// the partials. For LDA this replaces pulling the whole word-topic
+    /// matrix just to recompute the global topic-count vector.
+    pub fn pull_col_sums_async(&self) -> ColSumsTicket<T> {
+        let mut parts = Vec::with_capacity(self.client.shards());
+        for s in 0..self.client.shards() {
+            let courier = self.client.courier(s);
+            let req = Request::PullColSums { id: self.id };
+            let (tx, rx) = mpsc::channel();
+            self.client.submit(
+                s,
+                Box::new(move || {
+                    let result = courier.request_retry(&req).and_then(|resp| match resp {
+                        Response::Rows(data) => T::unwrap(data),
+                        r => Err(Error::Decode(format!("unexpected col-sum response {r:?}"))),
+                    });
+                    let _ = tx.send(result);
+                }),
+            );
+            parts.push(rx);
+        }
+        ColSumsTicket { parts, cols: self.cols as usize, early: None }
+    }
+
+    /// Global column sums. Blocking wrapper over
+    /// [`BigMatrix::pull_col_sums_async`].
+    pub fn pull_col_sums(&self) -> Result<Vec<T>> {
+        self.pull_col_sums_async().wait()
     }
 
     /// Start pushing sparse additive deltas with exactly-once semantics.
@@ -1246,6 +1539,82 @@ mod tests {
         let all: Vec<u64> = (0..24).collect();
         let got = m.pull_rows(&all).unwrap();
         assert_eq!(got.iter().sum::<i64>(), 48);
+    }
+
+    #[test]
+    fn sparse_pull_matches_dense_on_both_layouts() {
+        let (_g, client) = setup(3, FaultPlan::reliable());
+        for layout in [Layout::Dense, Layout::Sparse] {
+            let m: BigMatrix<i64> = client.matrix_with_layout(40, 6, layout).unwrap();
+            assert_eq!(m.layout(), layout);
+            let deltas = CoordDeltas {
+                rows: vec![0, 0, 7, 13, 39],
+                cols: vec![2, 5, 0, 3, 5],
+                values: vec![4, -1, 2, 8, 3],
+            };
+            m.push_coords(&deltas).unwrap();
+            let rows = [0u64, 7, 8, 13, 39];
+            let dense = m.pull_rows(&rows).unwrap();
+            let sparse = m.pull_sparse_rows(&rows).unwrap();
+            assert_eq!(sparse.len(), rows.len());
+            for (i, pairs) in sparse.iter().enumerate() {
+                let mut densified = vec![0i64; 6];
+                for &(c, v) in pairs {
+                    assert_ne!(v, 0, "sparse pulls must not ship zeros");
+                    densified[c as usize] = v;
+                }
+                assert_eq!(densified, dense[i * 6..(i + 1) * 6], "row {i} {layout:?}");
+                // Columns ascend within a row.
+                for w in pairs.windows(2) {
+                    assert!(w[0].0 < w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topk_returns_k_largest_pairs() {
+        let (_g, client) = setup(2, FaultPlan::reliable());
+        let m: BigMatrix<i64> = client.matrix_with_layout(10, 8, Layout::Sparse).unwrap();
+        let deltas = CoordDeltas {
+            rows: vec![3, 3, 3, 3, 4],
+            cols: vec![0, 2, 5, 7, 1],
+            values: vec![5, 9, 2, 9, 1],
+        };
+        m.push_coords(&deltas).unwrap();
+        let got = m.pull_topk(&[3, 4, 5], 2).unwrap();
+        assert_eq!(got[0], vec![(2, 9), (7, 9)]);
+        assert_eq!(got[1], vec![(1, 1)]);
+        assert!(got[2].is_empty());
+    }
+
+    #[test]
+    fn col_sums_match_client_side_sum() {
+        let (_g, client) = setup(3, FaultPlan::reliable());
+        let m: BigMatrix<i64> = client.matrix_with_layout(25, 4, Layout::Sparse).unwrap();
+        let deltas = CoordDeltas {
+            rows: (0..25).collect(),
+            cols: (0..25).map(|i| (i % 4) as u32).collect(),
+            values: (0..25).map(|i| i as i64 + 1).collect(),
+        };
+        m.push_coords(&deltas).unwrap();
+        let sums = m.pull_col_sums().unwrap();
+        let all: Vec<u64> = (0..25).collect();
+        let full = m.pull_rows(&all).unwrap();
+        let mut expect = vec![0i64; 4];
+        for (i, &v) in full.iter().enumerate() {
+            expect[i % 4] += v;
+        }
+        assert_eq!(sums, expect);
+    }
+
+    #[test]
+    fn sparse_tickets_respect_bounds_and_empty() {
+        let (_g, client) = setup(2, FaultPlan::reliable());
+        let m: BigMatrix<i64> = client.matrix_with_layout(5, 2, Layout::Sparse).unwrap();
+        assert!(m.pull_sparse_rows(&[5]).is_err());
+        assert!(m.pull_topk(&[99], 3).is_err());
+        assert_eq!(m.pull_sparse_rows(&[]).unwrap(), Vec::<Vec<(u32, i64)>>::new());
     }
 
     #[test]

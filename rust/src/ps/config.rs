@@ -58,6 +58,18 @@ pub struct PsConfig {
     /// (backpressure). `1` serializes per-shard traffic (the
     /// non-pipelined ablation); clamped to at least 1.
     pub pipeline_depth: usize,
+    /// Bounded dedup window per shard: the maximum number of
+    /// applied-but-not-forgotten push uids a shard remembers for
+    /// exactly-once deduplication. When full, the oldest record is
+    /// evicted (and counted in `ShardInfo::dedup_evictions`) — so a
+    /// client that dies between its push ack and `Forget` no longer
+    /// leaks an entry forever. `0` disables the bound.
+    pub dedup_window: usize,
+    /// Reader threads per shard in the server's op-dispatch executor:
+    /// read ops (pulls, top-k, column sums, shard info) run concurrently
+    /// on this many threads while pushes stay serialized on the shard's
+    /// inbox thread. Clamped to at least 1.
+    pub read_concurrency: usize,
 }
 
 impl Default for PsConfig {
@@ -71,6 +83,8 @@ impl Default for PsConfig {
             backoff_factor: 2.0,
             max_timeout: Duration::from_secs(10),
             pipeline_depth: 4,
+            dedup_window: 1 << 16,
+            read_concurrency: 4,
         }
     }
 }

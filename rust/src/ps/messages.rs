@@ -35,6 +35,51 @@ impl Dtype {
     }
 }
 
+/// Physical storage layout of a matrix's shard slices.
+///
+/// Declared at [`Request::CreateMatrix`] time and honored by every
+/// shard: `Dense` backs rows with contiguous `cols`-length slabs (fast
+/// random updates, the paper's §2.1 choice); `Sparse` backs rows with
+/// sorted `(col, val)` pair lists that adaptively promote to dense
+/// above a fill threshold — the right shape for Zipfian word-topic
+/// matrices where most vocabulary rows touch a handful of topics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Layout {
+    /// Row-major dense slabs.
+    #[default]
+    Dense,
+    /// Per-row sorted `(col, val)` pairs with adaptive dense promotion.
+    Sparse,
+}
+
+impl Layout {
+    /// Wire tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            Layout::Dense => 0,
+            Layout::Sparse => 1,
+        }
+    }
+
+    /// Inverse of [`Layout::tag`].
+    pub fn from_tag(t: u8) -> Result<Layout> {
+        match t {
+            0 => Ok(Layout::Dense),
+            1 => Ok(Layout::Sparse),
+            _ => Err(Error::Decode(format!("bad layout tag {t}"))),
+        }
+    }
+
+    /// Parse a CLI/env layout name (`dense` | `sparse`).
+    pub fn parse(s: &str) -> Option<Layout> {
+        match s {
+            "dense" => Some(Layout::Dense),
+            "sparse" => Some(Layout::Sparse),
+            _ => None,
+        }
+    }
+}
+
 /// A typed payload of matrix values.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Data {
@@ -85,6 +130,85 @@ impl Data {
             Dtype::F32 => Ok(Data::F32(r.slice_f32()?)),
         }
     }
+
+    /// Compact encoding for sparse payloads: i64 count values are almost
+    /// always tiny, so they go out as zigzag varints (~1 byte) instead
+    /// of fixed 8-byte words; f32 has no cheap variable-width form and
+    /// stays raw.
+    fn encode_compact(&self, w: &mut Writer) {
+        match self {
+            Data::I64(v) => {
+                w.u8(Dtype::I64.tag());
+                w.slice_zigzag(v);
+            }
+            Data::F32(v) => {
+                w.u8(Dtype::F32.tag());
+                w.slice_f32(v);
+            }
+        }
+    }
+
+    fn decode_compact(r: &mut Reader) -> Result<Data> {
+        match Dtype::from_tag(r.u8()?)? {
+            Dtype::I64 => Ok(Data::I64(r.slice_zigzag()?)),
+            Dtype::F32 => Ok(Data::F32(r.slice_f32()?)),
+        }
+    }
+}
+
+/// Sparse row payload: for a set of requested rows, the per-row pair
+/// counts plus the concatenated `(col, value)` pairs in request order.
+///
+/// Columns ride as varints (bounded by K, usually one byte) and i64
+/// values as zigzag varints, so a Zipf-tail row costs a few bytes
+/// instead of a full `cols`-length slab.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseData {
+    /// Number of `(col, value)` pairs for each requested row, in
+    /// request order.
+    pub lens: Vec<u32>,
+    /// Concatenated column ids. Within each row the order is
+    /// op-defined: strictly ascending for sparse pulls, value-descending
+    /// (ties by ascending column) for top-k replies.
+    pub cols: Vec<u32>,
+    /// Concatenated values, `cols.len()` entries.
+    pub values: Data,
+}
+
+impl SparseData {
+    /// Total `(col, value)` pairs.
+    pub fn pairs(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Validate internal consistency (lengths agree).
+    pub fn check(&self) -> Result<()> {
+        let total: u64 = self.lens.iter().map(|&l| l as u64).sum();
+        if total != self.cols.len() as u64 || self.cols.len() != self.values.len() {
+            return Err(Error::Decode(format!(
+                "sparse payload inconsistent: lens sum {total}, {} cols, {} values",
+                self.cols.len(),
+                self.values.len()
+            )));
+        }
+        Ok(())
+    }
+
+    fn encode(&self, w: &mut Writer) {
+        w.slice_varint_u32(&self.lens);
+        w.slice_varint_u32(&self.cols);
+        self.values.encode_compact(w);
+    }
+
+    fn decode(r: &mut Reader) -> Result<SparseData> {
+        let data = SparseData {
+            lens: r.slice_varint_u32()?,
+            cols: r.slice_varint_u32()?,
+            values: Data::decode_compact(r)?,
+        };
+        data.check()?;
+        Ok(data)
+    }
 }
 
 /// Client → shard server requests.
@@ -101,6 +225,8 @@ pub enum Request {
         cols: u32,
         /// Element type.
         dtype: Dtype,
+        /// Shard storage layout.
+        layout: Layout,
     },
     /// Read full rows (global row ids owned by this shard).
     PullRows {
@@ -108,6 +234,34 @@ pub enum Request {
         id: u32,
         /// Global row indices.
         rows: Vec<u64>,
+    },
+    /// Read rows as `(col, value)` pairs (non-default entries only) —
+    /// the bandwidth-proportional-to-occupancy pull for Zipf-shaped
+    /// matrices. Works on either layout.
+    PullSparseRows {
+        /// Matrix id.
+        id: u32,
+        /// Global row indices.
+        rows: Vec<u64>,
+    },
+    /// Server-side top-k per row: the `k` largest `(col, value)` pairs
+    /// of each requested row, by value descending (ties by column
+    /// ascending). Topic inspection without shipping full rows.
+    PullTopK {
+        /// Matrix id.
+        id: u32,
+        /// Global row indices.
+        rows: Vec<u64>,
+        /// Pairs to keep per row.
+        k: u32,
+    },
+    /// Server-side aggregation: the column sums over every local row of
+    /// this shard. Summing the per-shard replies client-side yields the
+    /// global column totals (for LDA: the topic-count vector) without
+    /// pulling the matrix.
+    PullColSums {
+        /// Matrix id.
+        id: u32,
     },
     /// Phase 1 of the push hand-shake: acquire a unique push id.
     /// Idempotent to retry — an orphaned id is never pushed and costs one
@@ -160,6 +314,8 @@ pub enum Response {
     Uid(u64),
     /// Pulled row values, concatenated in request order.
     Rows(Data),
+    /// Pulled sparse rows (or top-k pairs), in request order.
+    SparseRows(SparseData),
     /// Push applied (`fresh == true`) or deduplicated (`fresh == false`).
     PushAck {
         /// Whether this delivery performed the mutation.
@@ -182,6 +338,10 @@ pub enum Response {
         bytes: u64,
         /// Outstanding (un-forgotten) push uids.
         pending_uids: u64,
+        /// Dedup records evicted by the bounded window before their
+        /// `Forget` arrived (each is a client that died mid-hand-shake;
+        /// a retry after eviction would re-apply).
+        dedup_evictions: u64,
     },
     /// Request failed server-side.
     Error(String),
@@ -197,23 +357,42 @@ const T_PUSH_ROWS: u8 = 5;
 const T_FORGET: u8 = 6;
 const T_INFO: u8 = 7;
 const T_SHUTDOWN: u8 = 8;
+const T_PULL_SPARSE_ROWS: u8 = 9;
+const T_PULL_TOPK: u8 = 10;
+const T_PULL_COL_SUMS: u8 = 11;
 
 impl Request {
     /// Serialize to wire bytes.
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
-            Request::CreateMatrix { id, rows, cols, dtype } => {
+            Request::CreateMatrix { id, rows, cols, dtype, layout } => {
                 w.u8(T_CREATE);
                 w.u32(*id);
                 w.u64(*rows);
                 w.u32(*cols);
                 w.u8(dtype.tag());
+                w.u8(layout.tag());
             }
             Request::PullRows { id, rows } => {
                 w.u8(T_PULL_ROWS);
                 w.u32(*id);
                 w.slice_varint(rows);
+            }
+            Request::PullSparseRows { id, rows } => {
+                w.u8(T_PULL_SPARSE_ROWS);
+                w.u32(*id);
+                w.slice_varint(rows);
+            }
+            Request::PullTopK { id, rows, k } => {
+                w.u8(T_PULL_TOPK);
+                w.u32(*id);
+                w.slice_varint(rows);
+                w.u32(*k);
+            }
+            Request::PullColSums { id } => {
+                w.u8(T_PULL_COL_SUMS);
+                w.u32(*id);
             }
             Request::GenUid => w.u8(T_GEN_UID),
             Request::PushCoords { id, uid, rows, cols, values } => {
@@ -250,8 +429,16 @@ impl Request {
                 rows: r.u64()?,
                 cols: r.u32()?,
                 dtype: Dtype::from_tag(r.u8()?)?,
+                layout: Layout::from_tag(r.u8()?)?,
             },
             T_PULL_ROWS => Request::PullRows { id: r.u32()?, rows: r.slice_varint()? },
+            T_PULL_SPARSE_ROWS => {
+                Request::PullSparseRows { id: r.u32()?, rows: r.slice_varint()? }
+            }
+            T_PULL_TOPK => {
+                Request::PullTopK { id: r.u32()?, rows: r.slice_varint()?, k: r.u32()? }
+            }
+            T_PULL_COL_SUMS => Request::PullColSums { id: r.u32()? },
             T_GEN_UID => Request::GenUid,
             T_PUSH_COORDS => Request::PushCoords {
                 id: r.u32()?,
@@ -281,6 +468,7 @@ const R_ROWS: u8 = 3;
 const R_PUSH_ACK: u8 = 4;
 const R_INFO: u8 = 5;
 const R_ERROR: u8 = 6;
+const R_SPARSE_ROWS: u8 = 7;
 
 impl Response {
     /// Serialize to wire bytes.
@@ -296,6 +484,10 @@ impl Response {
                 w.u8(R_ROWS);
                 data.encode(&mut w);
             }
+            Response::SparseRows(data) => {
+                w.u8(R_SPARSE_ROWS);
+                data.encode(&mut w);
+            }
             Response::PushAck { fresh } => {
                 w.u8(R_PUSH_ACK);
                 w.u8(u8::from(*fresh));
@@ -308,6 +500,7 @@ impl Response {
                 local_rows,
                 bytes,
                 pending_uids,
+                dedup_evictions,
             } => {
                 w.u8(R_INFO);
                 w.u32(*shard_id);
@@ -317,6 +510,7 @@ impl Response {
                 w.u64(*local_rows);
                 w.u64(*bytes);
                 w.u64(*pending_uids);
+                w.u64(*dedup_evictions);
             }
             Response::Error(msg) => {
                 w.u8(R_ERROR);
@@ -333,6 +527,7 @@ impl Response {
             R_OK => Response::Ok,
             R_UID => Response::Uid(r.u64()?),
             R_ROWS => Response::Rows(Data::decode(&mut r)?),
+            R_SPARSE_ROWS => Response::SparseRows(SparseData::decode(&mut r)?),
             R_PUSH_ACK => Response::PushAck { fresh: r.u8()? != 0 },
             R_INFO => Response::Info {
                 shard_id: r.u32()?,
@@ -346,6 +541,7 @@ impl Response {
                 local_rows: r.u64()?,
                 bytes: r.u64()?,
                 pending_uids: r.u64()?,
+                dedup_evictions: r.u64()?,
             },
             R_ERROR => Response::Error(r.str()?),
             t => return Err(Error::Decode(format!("bad response tag {t}"))),
@@ -372,8 +568,24 @@ mod tests {
 
     #[test]
     fn roundtrip_all_request_variants() {
-        roundtrip_req(Request::CreateMatrix { id: 1, rows: 100, cols: 8, dtype: Dtype::I64 });
+        roundtrip_req(Request::CreateMatrix {
+            id: 1,
+            rows: 100,
+            cols: 8,
+            dtype: Dtype::I64,
+            layout: Layout::Dense,
+        });
+        roundtrip_req(Request::CreateMatrix {
+            id: 9,
+            rows: 1 << 40,
+            cols: 1000,
+            dtype: Dtype::F32,
+            layout: Layout::Sparse,
+        });
         roundtrip_req(Request::PullRows { id: 2, rows: vec![0, 5, 99] });
+        roundtrip_req(Request::PullSparseRows { id: 2, rows: vec![3, 1, 4, 1] });
+        roundtrip_req(Request::PullTopK { id: 2, rows: vec![0, 7], k: 10 });
+        roundtrip_req(Request::PullColSums { id: 2 });
         roundtrip_req(Request::GenUid);
         roundtrip_req(Request::PushCoords {
             id: 3,
@@ -399,6 +611,16 @@ mod tests {
         roundtrip_resp(Response::Uid(99));
         roundtrip_resp(Response::Rows(Data::F32(vec![1.0, 2.0])));
         roundtrip_resp(Response::Rows(Data::I64(vec![-5, 5])));
+        roundtrip_resp(Response::SparseRows(SparseData {
+            lens: vec![2, 0, 1],
+            cols: vec![1, 7, 3],
+            values: Data::I64(vec![5, -2, 1]),
+        }));
+        roundtrip_resp(Response::SparseRows(SparseData {
+            lens: vec![1],
+            cols: vec![0],
+            values: Data::F32(vec![0.5]),
+        }));
         roundtrip_resp(Response::PushAck { fresh: true });
         roundtrip_resp(Response::PushAck { fresh: false });
         roundtrip_resp(Response::Info {
@@ -409,6 +631,7 @@ mod tests {
             local_rows: 10,
             bytes: 160,
             pending_uids: 1,
+            dedup_evictions: 4,
         });
         roundtrip_resp(Response::Info {
             shard_id: 0,
@@ -418,8 +641,58 @@ mod tests {
             local_rows: 0,
             bytes: 0,
             pending_uids: 0,
+            dedup_evictions: 0,
         });
         roundtrip_resp(Response::Error("boom".into()));
+    }
+
+    #[test]
+    fn inconsistent_sparse_payload_rejected() {
+        // lens say 3 pairs but only 2 are present.
+        let bad = Response::SparseRows(SparseData {
+            lens: vec![3],
+            cols: vec![1, 2],
+            values: Data::I64(vec![1, 1]),
+        });
+        assert!(Response::decode(&bad.encode()).is_err());
+    }
+
+    #[test]
+    fn sparse_rows_encoding_is_compact() {
+        // A Zipf-tail pull: 1000 rows with 2 small-count pairs each must
+        // cost a few bytes per pair, not a dense slab per row.
+        let n_rows = 1000usize;
+        let resp = Response::SparseRows(SparseData {
+            lens: vec![2; n_rows],
+            cols: (0..2 * n_rows).map(|i| (i % 100) as u32).collect(),
+            values: Data::I64(vec![3; 2 * n_rows]),
+        });
+        let bytes = resp.encode().len();
+        assert!(bytes < 8 * n_rows, "sparse pull of {n_rows} rows is {bytes} bytes");
+    }
+
+    #[test]
+    fn roundtrip_random_sparse_rows() {
+        forall(
+            "sparse rows roundtrip",
+            100,
+            |rng: &mut Pcg64| {
+                let n_rows = rng.below(40);
+                let lens: Vec<u32> = (0..n_rows).map(|_| rng.below(6) as u32).collect();
+                let pairs: usize = lens.iter().map(|&l| l as usize).sum();
+                SparseData {
+                    lens,
+                    cols: (0..pairs).map(|_| rng.next_u32() >> 20).collect(),
+                    values: Data::I64(
+                        (0..pairs).map(|_| rng.below(100) as i64 - 50).collect(),
+                    ),
+                }
+            },
+            |data| {
+                let resp = Response::SparseRows(data.clone());
+                Response::decode(&resp.encode()).unwrap() == resp
+            },
+        );
     }
 
     #[test]

@@ -33,8 +33,10 @@ pub mod partition;
 pub mod server;
 pub mod storage;
 
-pub use client::{BigMatrix, BigVector, PsClient, PullTicket, PushTicket};
+pub use client::{
+    BigMatrix, BigVector, ColSumsTicket, PsClient, PullTicket, PushTicket, SparsePullTicket,
+};
 pub use config::PsConfig;
-pub use messages::{Data, Dtype, Request, Response};
+pub use messages::{Data, Dtype, Layout, Request, Response, SparseData};
 pub use partition::{PartitionScheme, Partitioner};
 pub use server::ServerGroup;

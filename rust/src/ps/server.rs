@@ -1,133 +1,498 @@
 //! Shard server: the process that owns a slice of every distributed
 //! matrix and serves pull/push requests.
 //!
-//! Each shard runs a single-threaded event loop over its inbox (the Akka
-//! actor model of the original: one actor per partial matrix, serialized
-//! message processing). Exactly-once pushes are enforced with a
-//! seen-uid set: a `PushCoords`/`PushRows` whose uid was already applied
-//! acknowledges without re-applying (paper §2.4, Figure 2).
+//! # Op-dispatch executor
+//!
+//! The original seed processed every request on one thread per shard
+//! (the Akka actor model of the paper: serialized message processing).
+//! Requests are now classified by their operation type and dispatched
+//! accordingly:
+//!
+//! - **Read ops** ([`Request::PullRows`], [`Request::PullSparseRows`],
+//!   [`Request::PullTopK`], [`Request::PullColSums`],
+//!   [`Request::ShardInfo`]) run concurrently on a small reader pool,
+//!   each under that matrix's `RwLock` read guard — many pulls against
+//!   the same (or different) matrices overlap freely.
+//! - **Write ops** (`CreateMatrix`, `GenUid`, `Push*`, `Forget`) stay
+//!   serialized on the shard's inbox thread, exactly as before. The
+//!   dedup check → apply → record sequence of a push is therefore never
+//!   concurrent with another push, preserving the exactly-once
+//!   semantics of §2.4 without any per-uid locking; a push briefly
+//!   write-locks its matrix to keep readers consistent.
+//!
+//! # Bounded dedup window
+//!
+//! Exactly-once pushes are enforced with a seen-uid record: a
+//! `PushCoords`/`PushRows` whose uid was already applied acknowledges
+//! without re-applying (paper §2.4, Figure 2). The seed kept those
+//! records in an unbounded set, so a client that died between its push
+//! ack and the `Forget` leaked an entry forever. The record is now a
+//! bounded FIFO window ([`PsConfig::dedup_window`]): when full, the
+//! oldest un-forgotten uid is evicted and counted, and the eviction
+//! total is reported through [`Response::Info`] so operators can see
+//! abandoned hand-shakes. An eviction weakens exactly-once only for a
+//! push that is retried *after* its record ages out of the window —
+//! with the default 65k-entry window and in-flight counts bounded by
+//! `pipeline_depth`, that takes tens of thousands of interleaved
+//! pushes, far beyond any retry horizon.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::SocketAddr;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 
 use crate::log_warn;
 use crate::net::tcp::{TcpServer, TcpTransport};
-use crate::net::{respond, FaultPlan, Inbox, SimTransport, Transport};
+use crate::net::{respond, Envelope, FaultPlan, Inbox, SimTransport, Transport};
 use crate::ps::config::{PsConfig, TransportMode};
-use crate::ps::messages::{Data, Dtype, Request, Response};
+use crate::ps::messages::{Data, Dtype, Layout, Request, Response, SparseData};
 use crate::ps::partition::Partitioner;
-use crate::ps::storage::DenseShard;
-use crate::util::error::Result;
+use crate::ps::storage::{DenseShard, SparseShard, StorageElement};
+use crate::util::error::{Error, Result};
+
+/// Layout-dispatched storage for one matrix's local slice.
+enum Store<T> {
+    Dense(DenseShard<T>),
+    Sparse(SparseShard<T>),
+}
+
+impl<T: StorageElement> Store<T> {
+    fn new(layout: Layout, local_rows: u64, cols: u32) -> Store<T> {
+        match layout {
+            Layout::Dense => Store::Dense(DenseShard::new(local_rows, cols)),
+            Layout::Sparse => Store::Sparse(SparseShard::new(local_rows, cols)),
+        }
+    }
+
+    fn layout(&self) -> Layout {
+        match self {
+            Store::Dense(_) => Layout::Dense,
+            Store::Sparse(_) => Layout::Sparse,
+        }
+    }
+
+    fn local_rows(&self) -> u64 {
+        match self {
+            Store::Dense(s) => s.local_rows(),
+            Store::Sparse(s) => s.local_rows(),
+        }
+    }
+
+    fn cols(&self) -> u32 {
+        match self {
+            Store::Dense(s) => s.cols(),
+            Store::Sparse(s) => s.cols(),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            Store::Dense(s) => s.bytes(),
+            Store::Sparse(s) => s.bytes(),
+        }
+    }
+
+    fn read_row(&self, local_row: u64, out: &mut Vec<T>) -> Result<()> {
+        match self {
+            Store::Dense(s) => s.read_row(local_row, out),
+            Store::Sparse(s) => s.read_row(local_row, out),
+        }
+    }
+
+    fn read_row_sparse(
+        &self,
+        local_row: u64,
+        cols_out: &mut Vec<u32>,
+        vals_out: &mut Vec<T>,
+    ) -> Result<u32> {
+        match self {
+            Store::Dense(s) => s.read_row_sparse(local_row, cols_out, vals_out),
+            Store::Sparse(s) => s.read_row_sparse(local_row, cols_out, vals_out),
+        }
+    }
+
+    fn read_row_topk(
+        &self,
+        local_row: u64,
+        k: usize,
+        cols_out: &mut Vec<u32>,
+        vals_out: &mut Vec<T>,
+    ) -> Result<u32> {
+        match self {
+            Store::Dense(s) => s.read_row_topk(local_row, k, cols_out, vals_out),
+            Store::Sparse(s) => s.read_row_topk(local_row, k, cols_out, vals_out),
+        }
+    }
+
+    fn col_sums(&self, sums: &mut [T]) {
+        match self {
+            Store::Dense(s) => s.col_sums(sums),
+            Store::Sparse(s) => s.col_sums(sums),
+        }
+    }
+
+    fn add(&mut self, local_row: u64, col: u32, delta: T) -> Result<()> {
+        match self {
+            Store::Dense(s) => s.add(local_row, col, delta),
+            Store::Sparse(s) => s.add(local_row, col, delta),
+        }
+    }
+
+    fn add_row(&mut self, local_row: u64, deltas: &[T]) -> Result<()> {
+        match self {
+            Store::Dense(s) => s.add_row(local_row, deltas),
+            Store::Sparse(s) => s.add_row(local_row, deltas),
+        }
+    }
+}
 
 /// One matrix's slice on this shard.
 enum MatrixSlice {
-    I64 { part: Partitioner, shard: DenseShard<i64> },
-    F32 { part: Partitioner, shard: DenseShard<f32> },
+    I64 { part: Partitioner, store: Store<i64> },
+    F32 { part: Partitioner, store: Store<f32> },
+}
+
+/// Pull `rows` out of `store` as one dense, concatenated payload.
+fn pull_rows_from<T: StorageElement>(
+    part: &Partitioner,
+    store: &Store<T>,
+    rows: &[u64],
+) -> Result<Vec<T>> {
+    let mut out = Vec::with_capacity(rows.len() * store.cols() as usize);
+    for &r in rows {
+        store.read_row(part.local_index(r), &mut out)?;
+    }
+    Ok(out)
+}
+
+/// Pull `rows` as `(lens, cols, values)` pair lists; `k = None` returns
+/// every non-default pair, `k = Some(n)` the per-row top-n.
+fn pull_sparse_from<T: StorageElement>(
+    part: &Partitioner,
+    store: &Store<T>,
+    rows: &[u64],
+    k: Option<usize>,
+) -> Result<(Vec<u32>, Vec<u32>, Vec<T>)> {
+    let mut lens = Vec::with_capacity(rows.len());
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for &r in rows {
+        let local = part.local_index(r);
+        let n = match k {
+            None => store.read_row_sparse(local, &mut cols, &mut vals)?,
+            Some(k) => store.read_row_topk(local, k, &mut cols, &mut vals)?,
+        };
+        lens.push(n);
+    }
+    Ok((lens, cols, vals))
 }
 
 impl MatrixSlice {
     fn local_rows(&self) -> u64 {
         match self {
-            MatrixSlice::I64 { shard, .. } => shard.local_rows(),
-            MatrixSlice::F32 { shard, .. } => shard.local_rows(),
+            MatrixSlice::I64 { store, .. } => store.local_rows(),
+            MatrixSlice::F32 { store, .. } => store.local_rows(),
         }
     }
 
     fn bytes(&self) -> u64 {
         match self {
-            MatrixSlice::I64 { shard, .. } => shard.bytes() as u64,
-            MatrixSlice::F32 { shard, .. } => shard.bytes() as u64,
+            MatrixSlice::I64 { store, .. } => store.bytes() as u64,
+            MatrixSlice::F32 { store, .. } => store.bytes() as u64,
+        }
+    }
+
+    fn shape(&self) -> (u64, u32, Dtype, Layout) {
+        match self {
+            MatrixSlice::I64 { part, store } => {
+                (part.rows, store.cols(), Dtype::I64, store.layout())
+            }
+            MatrixSlice::F32 { part, store } => {
+                (part.rows, store.cols(), Dtype::F32, store.layout())
+            }
+        }
+    }
+
+    fn pull_rows(&self, rows: &[u64]) -> Result<Data> {
+        match self {
+            MatrixSlice::I64 { part, store } => {
+                pull_rows_from(part, store, rows).map(Data::I64)
+            }
+            MatrixSlice::F32 { part, store } => {
+                pull_rows_from(part, store, rows).map(Data::F32)
+            }
+        }
+    }
+
+    fn pull_sparse(&self, rows: &[u64], k: Option<usize>) -> Result<SparseData> {
+        match self {
+            MatrixSlice::I64 { part, store } => {
+                let (lens, cols, vals) = pull_sparse_from(part, store, rows, k)?;
+                Ok(SparseData { lens, cols, values: Data::I64(vals) })
+            }
+            MatrixSlice::F32 { part, store } => {
+                let (lens, cols, vals) = pull_sparse_from(part, store, rows, k)?;
+                Ok(SparseData { lens, cols, values: Data::F32(vals) })
+            }
+        }
+    }
+
+    fn pull_col_sums(&self) -> Data {
+        match self {
+            MatrixSlice::I64 { store, .. } => {
+                let mut sums = vec![0i64; store.cols() as usize];
+                store.col_sums(&mut sums);
+                Data::I64(sums)
+            }
+            MatrixSlice::F32 { store, .. } => {
+                let mut sums = vec![0f32; store.cols() as usize];
+                store.col_sums(&mut sums);
+                Data::F32(sums)
+            }
+        }
+    }
+
+    fn apply_coords(&mut self, rows: &[u64], cols: &[u32], values: &Data) -> Result<()> {
+        match (self, values) {
+            (MatrixSlice::I64 { part, store }, Data::I64(vals)) => {
+                for ((&r, &c), &v) in rows.iter().zip(cols).zip(vals) {
+                    store.add(part.local_index(r), c, v)?;
+                }
+                Ok(())
+            }
+            (MatrixSlice::F32 { part, store }, Data::F32(vals)) => {
+                for ((&r, &c), &v) in rows.iter().zip(cols).zip(vals) {
+                    store.add(part.local_index(r), c, v)?;
+                }
+                Ok(())
+            }
+            _ => Err(Error::PsRejected("dtype mismatch pushing coords".into())),
+        }
+    }
+
+    fn apply_rows(&mut self, rows: &[u64], values: &Data) -> Result<()> {
+        match (self, values) {
+            (MatrixSlice::I64 { part, store }, Data::I64(vals)) => {
+                let cols = store.cols() as usize;
+                if vals.len() != rows.len() * cols {
+                    return Err(Error::PsRejected("row push shape mismatch".into()));
+                }
+                for (&r, chunk) in rows.iter().zip(vals.chunks_exact(cols)) {
+                    store.add_row(part.local_index(r), chunk)?;
+                }
+                Ok(())
+            }
+            (MatrixSlice::F32 { part, store }, Data::F32(vals)) => {
+                let cols = store.cols() as usize;
+                if vals.len() != rows.len() * cols {
+                    return Err(Error::PsRejected("row push shape mismatch".into()));
+                }
+                for (&r, chunk) in rows.iter().zip(vals.chunks_exact(cols)) {
+                    store.add_row(part.local_index(r), chunk)?;
+                }
+                Ok(())
+            }
+            _ => Err(Error::PsRejected("dtype mismatch pushing rows".into())),
         }
     }
 }
 
-/// State of one shard server.
-pub struct ShardState {
+/// Bounded FIFO record of applied-but-not-forgotten push uids.
+struct DedupWindow {
+    seen: HashSet<u64>,
+    /// Insertion order of un-forgotten uids; may contain stale entries
+    /// for uids already forgotten (skipped lazily at eviction time).
+    order: VecDeque<u64>,
+    /// Maximum `seen` size; `0` means unbounded (the seed's behavior).
+    cap: usize,
+    evictions: u64,
+}
+
+impl DedupWindow {
+    fn new(cap: usize) -> DedupWindow {
+        DedupWindow { seen: HashSet::new(), order: VecDeque::new(), cap, evictions: 0 }
+    }
+
+    fn contains(&self, uid: u64) -> bool {
+        self.seen.contains(&uid)
+    }
+
+    /// Record an applied uid, evicting the oldest un-forgotten records
+    /// once the window overflows.
+    fn record(&mut self, uid: u64) {
+        if !self.seen.insert(uid) {
+            return;
+        }
+        if self.cap == 0 {
+            // Unbounded (the seed's behavior): no eviction order needed.
+            return;
+        }
+        self.order.push_back(uid);
+        while self.seen.len() > self.cap {
+            match self.order.pop_front() {
+                // Stale entries (already forgotten) cost nothing.
+                Some(old) => {
+                    if self.seen.remove(&old) {
+                        self.evictions += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        // Stale entries (forgotten uids) accumulate in `order` faster
+        // than eviction reclaims them in the healthy push→ack→forget
+        // workflow (where `seen` never overflows); compact before the
+        // queue outgrows the window it serves. Amortized O(1) per push.
+        if self.order.len() > self.cap.saturating_mul(2) {
+            let seen = &self.seen;
+            self.order.retain(|u| seen.contains(u));
+        }
+    }
+
+    /// Release a uid after the client's ack (phase 3). Its `order`
+    /// entry goes stale and is skipped at eviction or compaction time.
+    fn forget(&mut self, uid: u64) {
+        self.seen.remove(&uid);
+    }
+
+    fn pending(&self) -> u64 {
+        self.seen.len() as u64
+    }
+}
+
+/// Shared state of one shard server, lock-partitioned so read ops can
+/// run concurrently with each other while pushes stay serialized on the
+/// inbox thread.
+struct ShardCore {
     shard_id: usize,
     config: PsConfig,
-    matrices: HashMap<u32, MatrixSlice>,
-    /// Applied-but-not-forgotten push ids (exactly-once dedup set).
-    seen_uids: HashSet<u64>,
-    next_uid: u64,
+    /// Matrix registry; write-locked only by `CreateMatrix`. Each slice
+    /// has its own `RwLock` so pulls of one matrix overlap pushes to
+    /// another.
+    matrices: RwLock<HashMap<u32, Arc<RwLock<MatrixSlice>>>>,
+    dedup: Mutex<DedupWindow>,
+    next_uid: AtomicU64,
 }
 
-impl ShardState {
-    /// Fresh state for shard `shard_id`.
-    pub fn new(shard_id: usize, config: PsConfig) -> ShardState {
-        ShardState {
-            shard_id,
-            config,
-            matrices: HashMap::new(),
-            seen_uids: HashSet::new(),
-            // Uids carry the shard id in the top bits so they are unique
-            // across shards (useful in traces); dedup is per-shard anyway.
-            next_uid: (shard_id as u64) << 48,
+impl ShardCore {
+    fn slice(&self, id: u32) -> Result<Arc<RwLock<MatrixSlice>>> {
+        self.matrices
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::PsRejected(format!("unknown matrix {id}")))
+    }
+
+    /// Handle a read-only operation (safe to run concurrently).
+    fn handle_read(&self, req: &Request) -> Response {
+        match req {
+            Request::PullRows { id, rows } => self
+                .slice(*id)
+                .and_then(|m| m.read().unwrap().pull_rows(rows))
+                .map_or_else(|e| Response::Error(e.to_string()), Response::Rows),
+            Request::PullSparseRows { id, rows } => self
+                .slice(*id)
+                .and_then(|m| m.read().unwrap().pull_sparse(rows, None))
+                .map_or_else(|e| Response::Error(e.to_string()), Response::SparseRows),
+            Request::PullTopK { id, rows, k } => self
+                .slice(*id)
+                .and_then(|m| m.read().unwrap().pull_sparse(rows, Some(*k as usize)))
+                .map_or_else(|e| Response::Error(e.to_string()), Response::SparseRows),
+            Request::PullColSums { id } => self
+                .slice(*id)
+                .map(|m| m.read().unwrap().pull_col_sums())
+                .map_or_else(|e| Response::Error(e.to_string()), Response::Rows),
+            Request::ShardInfo => {
+                let reg = self.matrices.read().unwrap();
+                let (mut local_rows, mut bytes) = (0u64, 0u64);
+                for m in reg.values() {
+                    let m = m.read().unwrap();
+                    local_rows += m.local_rows();
+                    bytes += m.bytes();
+                }
+                let matrices = reg.len() as u32;
+                drop(reg);
+                let dedup = self.dedup.lock().unwrap();
+                Response::Info {
+                    shard_id: self.shard_id as u32,
+                    shards: self.config.shards as u32,
+                    scheme: self.config.scheme,
+                    matrices,
+                    local_rows,
+                    bytes,
+                    pending_uids: dedup.pending(),
+                    dedup_evictions: dedup.evictions,
+                }
+            }
+            other => Response::Error(format!("not a read op: {other:?}")),
         }
     }
 
-    /// Handle one decoded request.
-    pub fn handle(&mut self, req: Request) -> Response {
+    /// Handle a state-mutating operation. Must be called from a single
+    /// thread per shard (the inbox loop): exactly-once dedup relies on
+    /// pushes being serialized.
+    fn handle_write(&self, req: Request) -> Response {
         match req {
-            Request::CreateMatrix { id, rows, cols, dtype } => {
-                self.create(id, rows, cols, dtype)
+            Request::CreateMatrix { id, rows, cols, dtype, layout } => {
+                self.create(id, rows, cols, dtype, layout)
             }
-            Request::PullRows { id, rows } => self.pull_rows(id, &rows),
             Request::GenUid => {
-                self.next_uid += 1;
-                Response::Uid(self.next_uid)
+                Response::Uid(self.next_uid.fetch_add(1, Ordering::Relaxed) + 1)
             }
             Request::PushCoords { id, uid, rows, cols, values } => {
-                if self.seen_uids.contains(&uid) {
+                if self.dedup.lock().unwrap().contains(uid) {
                     return Response::PushAck { fresh: false };
                 }
-                match self.apply_coords(id, &rows, &cols, &values) {
+                if rows.len() != cols.len() || rows.len() != values.len() {
+                    return Response::Error(format!(
+                        "coord push length mismatch: {} rows, {} cols, {} values",
+                        rows.len(),
+                        cols.len(),
+                        values.len()
+                    ));
+                }
+                let result = self
+                    .slice(id)
+                    .and_then(|m| m.write().unwrap().apply_coords(&rows, &cols, &values));
+                match result {
                     Ok(()) => {
-                        self.seen_uids.insert(uid);
+                        self.dedup.lock().unwrap().record(uid);
                         Response::PushAck { fresh: true }
                     }
                     Err(e) => Response::Error(e.to_string()),
                 }
             }
             Request::PushRows { id, uid, rows, values } => {
-                if self.seen_uids.contains(&uid) {
+                if self.dedup.lock().unwrap().contains(uid) {
                     return Response::PushAck { fresh: false };
                 }
-                match self.apply_rows(id, &rows, &values) {
+                let result =
+                    self.slice(id).and_then(|m| m.write().unwrap().apply_rows(&rows, &values));
+                match result {
                     Ok(()) => {
-                        self.seen_uids.insert(uid);
+                        self.dedup.lock().unwrap().record(uid);
                         Response::PushAck { fresh: true }
                     }
                     Err(e) => Response::Error(e.to_string()),
                 }
             }
             Request::Forget { uid } => {
-                self.seen_uids.remove(&uid);
+                self.dedup.lock().unwrap().forget(uid);
                 Response::Ok
             }
-            Request::ShardInfo => Response::Info {
-                shard_id: self.shard_id as u32,
-                shards: self.config.shards as u32,
-                scheme: self.config.scheme,
-                matrices: self.matrices.len() as u32,
-                local_rows: self.matrices.values().map(|m| m.local_rows()).sum(),
-                bytes: self.matrices.values().map(|m| m.bytes()).sum(),
-                pending_uids: self.seen_uids.len() as u64,
-            },
             Request::Shutdown => Response::Ok,
+            other => Response::Error(format!("not a write op: {other:?}")),
         }
     }
 
-    fn create(&mut self, id: u32, rows: u64, cols: u32, dtype: Dtype) -> Response {
+    fn create(&self, id: u32, rows: u64, cols: u32, dtype: Dtype, layout: Layout) -> Response {
+        let mut reg = self.matrices.write().unwrap();
         // Idempotent: re-creating the same id with the same shape is a
         // no-op (a retried CreateMatrix must not wipe data).
-        if let Some(existing) = self.matrices.get(&id) {
-            let (erows, ecols, edtype) = match existing {
-                MatrixSlice::I64 { part, shard } => (part.rows, shard.cols(), Dtype::I64),
-                MatrixSlice::F32 { part, shard } => (part.rows, shard.cols(), Dtype::F32),
-            };
-            return if (erows, ecols, edtype) == (rows, cols, dtype) {
+        if let Some(existing) = reg.get(&id) {
+            return if existing.read().unwrap().shape() == (rows, cols, dtype, layout) {
                 Response::Ok
             } else {
                 Response::Error(format!("matrix {id} already exists with different shape"))
@@ -136,116 +501,127 @@ impl ShardState {
         let part = Partitioner::new(rows, self.config.shards, self.config.scheme);
         let local = part.rows_on_shard(self.shard_id);
         let slice = match dtype {
-            Dtype::I64 => MatrixSlice::I64 { part, shard: DenseShard::new(local, cols) },
-            Dtype::F32 => MatrixSlice::F32 { part, shard: DenseShard::new(local, cols) },
+            Dtype::I64 => MatrixSlice::I64 { part, store: Store::new(layout, local, cols) },
+            Dtype::F32 => MatrixSlice::F32 { part, store: Store::new(layout, local, cols) },
         };
-        self.matrices.insert(id, slice);
+        reg.insert(id, Arc::new(RwLock::new(slice)));
         Response::Ok
     }
+}
 
-    fn pull_rows(&self, id: u32, rows: &[u64]) -> Response {
-        let Some(slice) = self.matrices.get(&id) else {
-            return Response::Error(format!("unknown matrix {id}"));
-        };
-        let result: Result<Data> = match slice {
-            MatrixSlice::I64 { part, shard } => {
-                let mut out = Vec::with_capacity(rows.len() * shard.cols() as usize);
-                rows.iter()
-                    .try_for_each(|&r| shard.read_row(part.local_index(r), &mut out))
-                    .map(|()| Data::I64(out))
-            }
-            MatrixSlice::F32 { part, shard } => {
-                let mut out = Vec::with_capacity(rows.len() * shard.cols() as usize);
-                rows.iter()
-                    .try_for_each(|&r| shard.read_row(part.local_index(r), &mut out))
-                    .map(|()| Data::F32(out))
-            }
-        };
-        match result {
-            Ok(data) => Response::Rows(data),
-            Err(e) => Response::Error(e.to_string()),
+/// True for operations that only read shard state and may run on the
+/// concurrent reader pool.
+fn is_read_op(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::PullRows { .. }
+            | Request::PullSparseRows { .. }
+            | Request::PullTopK { .. }
+            | Request::PullColSums { .. }
+            | Request::ShardInfo
+    )
+}
+
+/// State of one shard server. Cheap handle over the lock-partitioned
+/// core; [`ShardState::handle`] processes any request inline (the
+/// single-threaded path used by tests and embedded servers), while
+/// [`serve`] dispatches reads onto a concurrent pool.
+pub struct ShardState {
+    core: Arc<ShardCore>,
+}
+
+impl ShardState {
+    /// Fresh state for shard `shard_id`.
+    pub fn new(shard_id: usize, config: PsConfig) -> ShardState {
+        let dedup_window = config.dedup_window;
+        ShardState {
+            core: Arc::new(ShardCore {
+                shard_id,
+                config,
+                matrices: RwLock::new(HashMap::new()),
+                dedup: Mutex::new(DedupWindow::new(dedup_window)),
+                // Uids carry the shard id in the top bits so they are
+                // unique across shards (useful in traces); dedup is
+                // per-shard anyway.
+                next_uid: AtomicU64::new((shard_id as u64) << 48),
+            }),
         }
     }
 
-    fn apply_coords(&mut self, id: u32, rows: &[u64], cols: &[u32], values: &Data) -> Result<()> {
-        if rows.len() != cols.len() || rows.len() != values.len() {
-            return Err(crate::util::error::Error::PsRejected(format!(
-                "coord push length mismatch: {} rows, {} cols, {} values",
-                rows.len(),
-                cols.len(),
-                values.len()
-            )));
-        }
-        let slice = self.matrices.get_mut(&id).ok_or_else(|| {
-            crate::util::error::Error::PsRejected(format!("unknown matrix {id}"))
-        })?;
-        match (slice, values) {
-            (MatrixSlice::I64 { part, shard }, Data::I64(vals)) => {
-                for ((&r, &c), &v) in rows.iter().zip(cols).zip(vals) {
-                    shard.add(part.local_index(r), c, v)?;
-                }
-                Ok(())
-            }
-            (MatrixSlice::F32 { part, shard }, Data::F32(vals)) => {
-                for ((&r, &c), &v) in rows.iter().zip(cols).zip(vals) {
-                    shard.add(part.local_index(r), c, v)?;
-                }
-                Ok(())
-            }
-            _ => Err(crate::util::error::Error::PsRejected(format!(
-                "dtype mismatch pushing to matrix {id}"
-            ))),
-        }
-    }
-
-    fn apply_rows(&mut self, id: u32, rows: &[u64], values: &Data) -> Result<()> {
-        let slice = self.matrices.get_mut(&id).ok_or_else(|| {
-            crate::util::error::Error::PsRejected(format!("unknown matrix {id}"))
-        })?;
-        match (slice, values) {
-            (MatrixSlice::I64 { part, shard }, Data::I64(vals)) => {
-                let cols = shard.cols() as usize;
-                if vals.len() != rows.len() * cols {
-                    return Err(crate::util::error::Error::PsRejected(
-                        "row push shape mismatch".into(),
-                    ));
-                }
-                for (&r, chunk) in rows.iter().zip(vals.chunks_exact(cols)) {
-                    shard.add_row(part.local_index(r), chunk)?;
-                }
-                Ok(())
-            }
-            (MatrixSlice::F32 { part, shard }, Data::F32(vals)) => {
-                let cols = shard.cols() as usize;
-                if vals.len() != rows.len() * cols {
-                    return Err(crate::util::error::Error::PsRejected(
-                        "row push shape mismatch".into(),
-                    ));
-                }
-                for (&r, chunk) in rows.iter().zip(vals.chunks_exact(cols)) {
-                    shard.add_row(part.local_index(r), chunk)?;
-                }
-                Ok(())
-            }
-            _ => Err(crate::util::error::Error::PsRejected(format!(
-                "dtype mismatch pushing to matrix {id}"
-            ))),
+    /// Handle one decoded request inline.
+    pub fn handle(&mut self, req: Request) -> Response {
+        if is_read_op(&req) {
+            self.core.handle_read(&req)
+        } else {
+            self.core.handle_write(req)
         }
     }
 }
 
-/// Event loop for one shard server thread.
-fn serve(mut state: ShardState, inbox: Inbox) {
+/// Concurrent executor for read ops: a fixed pool of reader threads
+/// draining a shared queue. Dropping the pool closes the queue and
+/// joins the workers after they finish (and respond to) whatever is
+/// still queued.
+struct ReadPool {
+    tx: Option<mpsc::Sender<(Envelope, Request)>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ReadPool {
+    fn start(core: Arc<ShardCore>, threads: usize) -> ReadPool {
+        let (tx, rx) = mpsc::channel::<(Envelope, Request)>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let core = Arc::clone(&core);
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("glint-shard-{}-read-{i}", core.shard_id))
+                    .spawn(move || loop {
+                        let item = rx.lock().unwrap().recv();
+                        match item {
+                            Ok((env, req)) => {
+                                respond(&env, core.handle_read(&req).encode());
+                            }
+                            Err(_) => return,
+                        }
+                    })
+                    .expect("spawn shard reader")
+            })
+            .collect();
+        ReadPool { tx: Some(tx), workers }
+    }
+
+    fn submit(&self, env: Envelope, req: Request) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send((env, req));
+        }
+    }
+}
+
+impl Drop for ReadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Event loop for one shard server thread: write ops inline (serialized
+/// — the exactly-once invariant), read ops onto the reader pool.
+fn serve(state: ShardState, inbox: Inbox) {
+    let readers = ReadPool::start(Arc::clone(&state.core), state.core.config.read_concurrency);
     while let Some(env) = inbox.recv() {
-        let resp = match Request::decode(&env.payload) {
+        match Request::decode(&env.payload) {
             Ok(Request::Shutdown) => {
                 respond(&env, Response::Ok.encode());
-                return;
+                return; // drops the pool: queued reads drain first
             }
-            Ok(req) => state.handle(req),
-            Err(e) => Response::Error(e.to_string()),
-        };
-        respond(&env, resp.encode());
+            Ok(req) if is_read_op(&req) => readers.submit(env, req),
+            Ok(req) => respond(&env, state.core.handle_write(req).encode()),
+            Err(e) => respond(&env, Response::Error(e.to_string()).encode()),
+        }
     }
 }
 
@@ -424,37 +800,40 @@ mod tests {
         ShardState::new(0, PsConfig::with_shards(1))
     }
 
+    fn create(rows: u64, cols: u32, dtype: Dtype, layout: Layout) -> Request {
+        Request::CreateMatrix { id: 1, rows, cols, dtype, layout }
+    }
+
     #[test]
     fn create_pull_push_cycle() {
-        let mut s = state();
-        assert_eq!(
-            s.handle(Request::CreateMatrix { id: 1, rows: 4, cols: 3, dtype: Dtype::I64 }),
-            Response::Ok
-        );
-        let uid = match s.handle(Request::GenUid) {
-            Response::Uid(u) => u,
-            r => panic!("want uid, got {r:?}"),
-        };
-        assert_eq!(
-            s.handle(Request::PushCoords {
-                id: 1,
-                uid,
-                rows: vec![0, 0, 3],
-                cols: vec![0, 1, 2],
-                values: Data::I64(vec![5, 7, -2]),
-            }),
-            Response::PushAck { fresh: true }
-        );
-        match s.handle(Request::PullRows { id: 1, rows: vec![0, 3] }) {
-            Response::Rows(Data::I64(v)) => assert_eq!(v, vec![5, 7, 0, 0, 0, -2]),
-            r => panic!("unexpected {r:?}"),
+        for layout in [Layout::Dense, Layout::Sparse] {
+            let mut s = state();
+            assert_eq!(s.handle(create(4, 3, Dtype::I64, layout)), Response::Ok);
+            let uid = match s.handle(Request::GenUid) {
+                Response::Uid(u) => u,
+                r => panic!("want uid, got {r:?}"),
+            };
+            assert_eq!(
+                s.handle(Request::PushCoords {
+                    id: 1,
+                    uid,
+                    rows: vec![0, 0, 3],
+                    cols: vec![0, 1, 2],
+                    values: Data::I64(vec![5, 7, -2]),
+                }),
+                Response::PushAck { fresh: true }
+            );
+            match s.handle(Request::PullRows { id: 1, rows: vec![0, 3] }) {
+                Response::Rows(Data::I64(v)) => assert_eq!(v, vec![5, 7, 0, 0, 0, -2]),
+                r => panic!("unexpected {r:?}"),
+            }
         }
     }
 
     #[test]
     fn duplicate_push_not_reapplied() {
         let mut s = state();
-        s.handle(Request::CreateMatrix { id: 1, rows: 1, cols: 1, dtype: Dtype::I64 });
+        s.handle(create(1, 1, Dtype::I64, Layout::Dense));
         let push = Request::PushCoords {
             id: 1,
             uid: 7,
@@ -474,7 +853,7 @@ mod tests {
     #[test]
     fn forget_releases_uid() {
         let mut s = state();
-        s.handle(Request::CreateMatrix { id: 1, rows: 1, cols: 1, dtype: Dtype::I64 });
+        s.handle(create(1, 1, Dtype::I64, Layout::Dense));
         let push = Request::PushCoords {
             id: 1,
             uid: 9,
@@ -498,7 +877,7 @@ mod tests {
     #[test]
     fn recreate_same_shape_is_idempotent() {
         let mut s = state();
-        let create = Request::CreateMatrix { id: 1, rows: 2, cols: 2, dtype: Dtype::I64 };
+        let create = create(2, 2, Dtype::I64, Layout::Sparse);
         s.handle(create.clone());
         s.handle(Request::PushCoords {
             id: 1,
@@ -516,10 +895,26 @@ mod tests {
     }
 
     #[test]
-    fn recreate_different_shape_rejected() {
+    fn recreate_different_shape_or_layout_rejected() {
         let mut s = state();
-        s.handle(Request::CreateMatrix { id: 1, rows: 2, cols: 2, dtype: Dtype::I64 });
-        match s.handle(Request::CreateMatrix { id: 1, rows: 3, cols: 2, dtype: Dtype::I64 }) {
+        s.handle(create(2, 2, Dtype::I64, Layout::Dense));
+        match s.handle(Request::CreateMatrix {
+            id: 1,
+            rows: 3,
+            cols: 2,
+            dtype: Dtype::I64,
+            layout: Layout::Dense,
+        }) {
+            Response::Error(_) => {}
+            r => panic!("unexpected {r:?}"),
+        }
+        match s.handle(Request::CreateMatrix {
+            id: 1,
+            rows: 2,
+            cols: 2,
+            dtype: Dtype::I64,
+            layout: Layout::Sparse,
+        }) {
             Response::Error(_) => {}
             r => panic!("unexpected {r:?}"),
         }
@@ -532,7 +927,11 @@ mod tests {
             Response::Error(m) => assert!(m.contains("unknown")),
             r => panic!("unexpected {r:?}"),
         }
-        s.handle(Request::CreateMatrix { id: 1, rows: 1, cols: 1, dtype: Dtype::I64 });
+        match s.handle(Request::PullColSums { id: 99 }) {
+            Response::Error(m) => assert!(m.contains("unknown")),
+            r => panic!("unexpected {r:?}"),
+        }
+        s.handle(create(1, 1, Dtype::I64, Layout::Dense));
         match s.handle(Request::PushCoords {
             id: 1,
             uid: 1,
@@ -548,7 +947,7 @@ mod tests {
     #[test]
     fn failed_push_does_not_consume_uid() {
         let mut s = state();
-        s.handle(Request::CreateMatrix { id: 1, rows: 1, cols: 1, dtype: Dtype::I64 });
+        s.handle(create(1, 1, Dtype::I64, Layout::Dense));
         // Out-of-bounds column: rejected, uid stays unused, so a corrected
         // retry under the same uid can still apply.
         match s.handle(Request::PushCoords {
@@ -571,5 +970,143 @@ mod tests {
             }),
             Response::PushAck { fresh: true }
         );
+    }
+
+    #[test]
+    fn sparse_pull_and_topk_and_col_sums() {
+        let mut s = state();
+        s.handle(create(4, 8, Dtype::I64, Layout::Sparse));
+        s.handle(Request::PushCoords {
+            id: 1,
+            uid: 1,
+            rows: vec![0, 0, 2, 2, 2],
+            cols: vec![3, 5, 1, 4, 6],
+            values: Data::I64(vec![9, 2, 1, 8, 8]),
+        });
+        match s.handle(Request::PullSparseRows { id: 1, rows: vec![0, 1, 2] }) {
+            Response::SparseRows(d) => {
+                assert_eq!(d.lens, vec![2, 0, 3]);
+                assert_eq!(d.cols, vec![3, 5, 1, 4, 6]);
+                assert_eq!(d.values, Data::I64(vec![9, 2, 1, 8, 8]));
+            }
+            r => panic!("unexpected {r:?}"),
+        }
+        match s.handle(Request::PullTopK { id: 1, rows: vec![2], k: 2 }) {
+            Response::SparseRows(d) => {
+                assert_eq!(d.lens, vec![2]);
+                // Value ties break by ascending column.
+                assert_eq!(d.cols, vec![4, 6]);
+                assert_eq!(d.values, Data::I64(vec![8, 8]));
+            }
+            r => panic!("unexpected {r:?}"),
+        }
+        match s.handle(Request::PullColSums { id: 1 }) {
+            Response::Rows(Data::I64(v)) => {
+                assert_eq!(v, vec![0, 1, 0, 9, 8, 2, 8, 0]);
+            }
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn dedup_window_evicts_oldest_and_reports() {
+        let cfg = PsConfig { dedup_window: 4, ..PsConfig::with_shards(1) };
+        let mut s = ShardState::new(0, cfg);
+        s.handle(Request::CreateMatrix {
+            id: 1,
+            rows: 1,
+            cols: 1,
+            dtype: Dtype::I64,
+            layout: Layout::Dense,
+        });
+        // Six un-forgotten pushes through a 4-entry window: the two
+        // oldest records must be evicted.
+        for uid in 1..=6u64 {
+            let resp = s.handle(Request::PushCoords {
+                id: 1,
+                uid,
+                rows: vec![0],
+                cols: vec![0],
+                values: Data::I64(vec![1]),
+            });
+            assert_eq!(resp, Response::PushAck { fresh: true });
+        }
+        match s.handle(Request::ShardInfo) {
+            Response::Info { pending_uids, dedup_evictions, .. } => {
+                assert_eq!(pending_uids, 4);
+                assert_eq!(dedup_evictions, 2);
+            }
+            r => panic!("unexpected {r:?}"),
+        }
+        // An evicted uid re-applies (the documented weakening)...
+        assert_eq!(
+            s.handle(Request::PushCoords {
+                id: 1,
+                uid: 1,
+                rows: vec![0],
+                cols: vec![0],
+                values: Data::I64(vec![1]),
+            }),
+            Response::PushAck { fresh: true }
+        );
+        // ...while a uid still inside the window deduplicates.
+        assert_eq!(
+            s.handle(Request::PushCoords {
+                id: 1,
+                uid: 6,
+                rows: vec![0],
+                cols: vec![0],
+                values: Data::I64(vec![1]),
+            }),
+            Response::PushAck { fresh: false }
+        );
+    }
+
+    #[test]
+    fn dedup_order_queue_is_compacted_in_healthy_workflow() {
+        // Healthy push→ack→forget cycles never overflow `seen`, so the
+        // eviction loop alone would let the order queue grow by one
+        // entry per push forever; compaction must keep it bounded.
+        let mut w = DedupWindow::new(8);
+        for uid in 0..10_000u64 {
+            assert!(!w.contains(uid));
+            w.record(uid);
+            w.forget(uid);
+        }
+        assert!(w.order.len() <= 16, "order queue grew to {}", w.order.len());
+        assert_eq!(w.evictions, 0);
+        assert_eq!(w.pending(), 0);
+    }
+
+    #[test]
+    fn forgotten_uids_do_not_count_as_evictions() {
+        let cfg = PsConfig { dedup_window: 2, ..PsConfig::with_shards(1) };
+        let mut s = ShardState::new(0, cfg);
+        s.handle(Request::CreateMatrix {
+            id: 1,
+            rows: 1,
+            cols: 1,
+            dtype: Dtype::I64,
+            layout: Layout::Dense,
+        });
+        // Full hand-shakes: push then forget, many times over a tiny
+        // window. Nothing is abandoned, so nothing may count as evicted.
+        for uid in 1..=10u64 {
+            s.handle(Request::PushCoords {
+                id: 1,
+                uid,
+                rows: vec![0],
+                cols: vec![0],
+                values: Data::I64(vec![1]),
+            });
+            s.handle(Request::Forget { uid });
+        }
+        match s.handle(Request::ShardInfo) {
+            Response::Info { pending_uids, dedup_evictions, .. } => {
+                assert_eq!(pending_uids, 0);
+                assert_eq!(dedup_evictions, 0);
+            }
+            r => panic!("unexpected {r:?}"),
+        }
     }
 }

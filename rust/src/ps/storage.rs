@@ -1,15 +1,79 @@
-//! Dense in-memory shard storage.
+//! In-memory shard storage: pluggable row layouts.
 //!
 //! The paper (§2.1) stores partial matrices as dense two-dimensional
 //! arrays of JVM primitives in row-major order, chosen for fast random
 //! updates and to avoid boxing/garbage-collection overhead. The rust
-//! equivalent is a flat `Vec<T>` of `Copy` primitives — contiguous, no
-//! indirection, no GC by construction.
+//! equivalent is [`DenseShard`]: a flat `Vec<T>` of `Copy` primitives —
+//! contiguous, no indirection, no GC by construction.
+//!
+//! The word-topic matrix, however, is Zipf-shaped (§3, Figure 4): the
+//! overwhelming majority of vocabulary rows have mass in only a handful
+//! of topics. [`SparseShard`] stores each row as a sorted `(col, val)`
+//! pair list, so resident bytes and sparse-pull payloads are
+//! proportional to occupancy instead of `cols`. Rows whose fill crosses
+//! [`PROMOTE_FILL`] (the Zipf head) are adaptively promoted to dense
+//! slabs, keeping hot-row updates O(1).
+//!
+//! Both layouts expose the same operation set — dense reads, sparse
+//! reads, per-row top-k, column sums, coordinate/row adds — so the
+//! server's op executor is layout-agnostic.
 
 use crate::util::error::{Error, Result};
 
+/// Element bound shared by shard storage: the primitive kinds the wire
+/// protocol ships (i64 counters, f32 weights).
+pub trait StorageElement:
+    Copy + Default + PartialEq + PartialOrd + std::ops::AddAssign + 'static
+{
+}
+
+impl<T: Copy + Default + PartialEq + PartialOrd + std::ops::AddAssign + 'static> StorageElement
+    for T
+{
+}
+
+/// Order two values descending with a *total* order: `sort_unstable_by`
+/// requires one, and mapping unordered (NaN) comparisons to `Equal`
+/// would create cycles once the column tiebreak kicks in (a panic since
+/// rust 1.81). NaNs form their own equivalence class ranked after every
+/// ordered value, so they sink to the tail deterministically.
+fn cmp_desc<T: PartialOrd>(a: &T, b: &T) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match b.partial_cmp(a) {
+        Some(o) => o,
+        None => {
+            let a_unordered = a.partial_cmp(a).is_none();
+            let b_unordered = b.partial_cmp(b).is_none();
+            match (a_unordered, b_unordered) {
+                (true, false) => Ordering::Greater,
+                (false, true) => Ordering::Less,
+                _ => Ordering::Equal,
+            }
+        }
+    }
+}
+
+/// Select the top-`k` `(col, val)` pairs from `candidates` by value
+/// descending, ties by column ascending; appends to the output vecs and
+/// returns the number of pairs kept.
+fn select_topk<T: StorageElement>(
+    mut candidates: Vec<(u32, T)>,
+    k: usize,
+    cols_out: &mut Vec<u32>,
+    vals_out: &mut Vec<T>,
+) -> u32 {
+    candidates.sort_unstable_by(|a, b| cmp_desc(&a.1, &b.1).then(a.0.cmp(&b.0)));
+    candidates.truncate(k);
+    let kept = candidates.len() as u32;
+    for (c, v) in candidates {
+        cols_out.push(c);
+        vals_out.push(v);
+    }
+    kept
+}
+
 /// A shard's slice of one distributed matrix: `local_rows x cols`,
-/// row-major.
+/// row-major, dense.
 #[derive(Debug, Clone)]
 pub struct DenseShard<T> {
     data: Vec<T>,
@@ -17,7 +81,7 @@ pub struct DenseShard<T> {
     cols: u32,
 }
 
-impl<T: Copy + Default + std::ops::AddAssign> DenseShard<T> {
+impl<T: StorageElement> DenseShard<T> {
     /// Allocate a zeroed shard.
     pub fn new(local_rows: u64, cols: u32) -> DenseShard<T> {
         let len = local_rows as usize * cols as usize;
@@ -50,6 +114,17 @@ impl<T: Copy + Default + std::ops::AddAssign> DenseShard<T> {
         Ok(local_row as usize * self.cols as usize + col as usize)
     }
 
+    #[inline]
+    fn check_row(&self, local_row: u64) -> Result<()> {
+        if local_row >= self.local_rows {
+            return Err(Error::PsRejected(format!(
+                "row {local_row} out of bounds ({} rows)",
+                self.local_rows
+            )));
+        }
+        Ok(())
+    }
+
     /// Read one entry.
     pub fn get(&self, local_row: u64, col: u32) -> Result<T> {
         Ok(self.data[self.offset(local_row, col)?])
@@ -57,15 +132,61 @@ impl<T: Copy + Default + std::ops::AddAssign> DenseShard<T> {
 
     /// Copy a full row into `out`.
     pub fn read_row(&self, local_row: u64, out: &mut Vec<T>) -> Result<()> {
-        if local_row >= self.local_rows {
-            return Err(Error::PsRejected(format!(
-                "row {local_row} out of bounds ({} rows)",
-                self.local_rows
-            )));
-        }
+        self.check_row(local_row)?;
         let start = local_row as usize * self.cols as usize;
         out.extend_from_slice(&self.data[start..start + self.cols as usize]);
         Ok(())
+    }
+
+    /// Append the row's non-default `(col, val)` pairs (columns
+    /// ascending); returns the pair count.
+    pub fn read_row_sparse(
+        &self,
+        local_row: u64,
+        cols_out: &mut Vec<u32>,
+        vals_out: &mut Vec<T>,
+    ) -> Result<u32> {
+        self.check_row(local_row)?;
+        let start = local_row as usize * self.cols as usize;
+        let mut n = 0u32;
+        for (c, &v) in self.data[start..start + self.cols as usize].iter().enumerate() {
+            if v != T::default() {
+                cols_out.push(c as u32);
+                vals_out.push(v);
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Append the row's top-`k` pairs by value descending (ties by
+    /// column ascending); returns the pair count (`<= k`).
+    pub fn read_row_topk(
+        &self,
+        local_row: u64,
+        k: usize,
+        cols_out: &mut Vec<u32>,
+        vals_out: &mut Vec<T>,
+    ) -> Result<u32> {
+        self.check_row(local_row)?;
+        let start = local_row as usize * self.cols as usize;
+        let candidates: Vec<(u32, T)> = self.data[start..start + self.cols as usize]
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != T::default())
+            .map(|(c, &v)| (c as u32, v))
+            .collect();
+        Ok(select_topk(candidates, k, cols_out, vals_out))
+    }
+
+    /// Sum every local row into `sums` (length `cols`).
+    pub fn col_sums(&self, sums: &mut [T]) {
+        debug_assert_eq!(sums.len(), self.cols as usize);
+        for row in self.data.chunks_exact(self.cols.max(1) as usize) {
+            for (s, &v) in sums.iter_mut().zip(row) {
+                *s += v;
+            }
+        }
     }
 
     /// Add `delta` to one entry.
@@ -98,9 +219,291 @@ impl<T: Copy + Default + std::ops::AddAssign> DenseShard<T> {
     }
 }
 
+/// Fill fraction above which a sparse row promotes to a dense slab:
+/// promote when `nnz * PROMOTE_FILL_DEN >= cols * PROMOTE_FILL_NUM`.
+/// At 1/2 fill the pair list is already within ~25% of the slab's size
+/// for i64 and costs a binary search per update; the slab wins on both.
+const PROMOTE_FILL_NUM: usize = 1;
+const PROMOTE_FILL_DEN: usize = 2;
+
+/// One row of a [`SparseShard`].
+#[derive(Debug, Clone)]
+enum SparseRow<T> {
+    /// Sorted-by-column `(col, val)` pairs; no default-valued entries.
+    Pairs(Vec<(u32, T)>),
+    /// Promoted dense slab (`cols` entries).
+    Slab(Vec<T>),
+}
+
+/// A shard's slice of one distributed matrix stored sparsely: each row
+/// is a sorted `(col, val)` pair list, adaptively promoted to a dense
+/// slab once its fill crosses the promotion threshold.
+#[derive(Debug, Clone)]
+pub struct SparseShard<T> {
+    rows: Vec<SparseRow<T>>,
+    cols: u32,
+}
+
+impl<T: StorageElement> SparseShard<T> {
+    /// Allocate an all-empty (all-zero) shard.
+    pub fn new(local_rows: u64, cols: u32) -> SparseShard<T> {
+        SparseShard { rows: vec![SparseRow::Pairs(Vec::new()); local_rows as usize], cols }
+    }
+
+    /// Rows stored locally.
+    pub fn local_rows(&self) -> u64 {
+        self.rows.len() as u64
+    }
+
+    /// Columns (global — every shard stores full rows).
+    pub fn cols(&self) -> u32 {
+        self.cols
+    }
+
+    /// Bytes of payload storage (pair lists + promoted slabs).
+    pub fn bytes(&self) -> usize {
+        let pair = std::mem::size_of::<(u32, T)>();
+        self.rows
+            .iter()
+            .map(|r| match r {
+                SparseRow::Pairs(p) => p.len() * pair,
+                SparseRow::Slab(s) => s.len() * std::mem::size_of::<T>(),
+            })
+            .sum()
+    }
+
+    /// Non-default entries resident (slab rows count exactly).
+    pub fn nnz(&self) -> u64 {
+        self.rows
+            .iter()
+            .map(|r| match r {
+                SparseRow::Pairs(p) => p.len() as u64,
+                SparseRow::Slab(s) => s.iter().filter(|&&v| v != T::default()).count() as u64,
+            })
+            .sum()
+    }
+
+    /// Rows currently promoted to dense slabs.
+    pub fn promoted_rows(&self) -> u64 {
+        self.rows.iter().filter(|r| matches!(r, SparseRow::Slab(_))).count() as u64
+    }
+
+    #[inline]
+    fn check(&self, local_row: u64, col: u32) -> Result<()> {
+        if local_row >= self.local_rows() || col >= self.cols {
+            return Err(Error::PsRejected(format!(
+                "index ({local_row},{col}) out of bounds for {}x{} shard",
+                self.local_rows(),
+                self.cols
+            )));
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn check_row(&self, local_row: u64) -> Result<()> {
+        if local_row >= self.local_rows() {
+            return Err(Error::PsRejected(format!(
+                "row {local_row} out of bounds ({} rows)",
+                self.local_rows()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Read one entry (default where no pair exists).
+    pub fn get(&self, local_row: u64, col: u32) -> Result<T> {
+        self.check(local_row, col)?;
+        Ok(match &self.rows[local_row as usize] {
+            SparseRow::Pairs(p) => match p.binary_search_by_key(&col, |&(c, _)| c) {
+                Ok(i) => p[i].1,
+                Err(_) => T::default(),
+            },
+            SparseRow::Slab(s) => s[col as usize],
+        })
+    }
+
+    /// Copy a full (densified) row into `out`.
+    pub fn read_row(&self, local_row: u64, out: &mut Vec<T>) -> Result<()> {
+        self.check_row(local_row)?;
+        match &self.rows[local_row as usize] {
+            SparseRow::Pairs(p) => {
+                let start = out.len();
+                out.resize(start + self.cols as usize, T::default());
+                for &(c, v) in p {
+                    out[start + c as usize] = v;
+                }
+            }
+            SparseRow::Slab(s) => out.extend_from_slice(s),
+        }
+        Ok(())
+    }
+
+    /// Append the row's non-default `(col, val)` pairs (columns
+    /// ascending); returns the pair count.
+    pub fn read_row_sparse(
+        &self,
+        local_row: u64,
+        cols_out: &mut Vec<u32>,
+        vals_out: &mut Vec<T>,
+    ) -> Result<u32> {
+        self.check_row(local_row)?;
+        match &self.rows[local_row as usize] {
+            SparseRow::Pairs(p) => {
+                for &(c, v) in p {
+                    cols_out.push(c);
+                    vals_out.push(v);
+                }
+                Ok(p.len() as u32)
+            }
+            SparseRow::Slab(s) => {
+                let mut n = 0u32;
+                for (c, &v) in s.iter().enumerate() {
+                    if v != T::default() {
+                        cols_out.push(c as u32);
+                        vals_out.push(v);
+                        n += 1;
+                    }
+                }
+                Ok(n)
+            }
+        }
+    }
+
+    /// Append the row's top-`k` pairs by value descending (ties by
+    /// column ascending); returns the pair count (`<= k`).
+    pub fn read_row_topk(
+        &self,
+        local_row: u64,
+        k: usize,
+        cols_out: &mut Vec<u32>,
+        vals_out: &mut Vec<T>,
+    ) -> Result<u32> {
+        self.check_row(local_row)?;
+        let candidates: Vec<(u32, T)> = match &self.rows[local_row as usize] {
+            SparseRow::Pairs(p) => p.clone(),
+            SparseRow::Slab(s) => s
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != T::default())
+                .map(|(c, &v)| (c as u32, v))
+                .collect(),
+        };
+        Ok(select_topk(candidates, k, cols_out, vals_out))
+    }
+
+    /// Sum every local row into `sums` (length `cols`).
+    pub fn col_sums(&self, sums: &mut [T]) {
+        debug_assert_eq!(sums.len(), self.cols as usize);
+        for row in &self.rows {
+            match row {
+                SparseRow::Pairs(p) => {
+                    for &(c, v) in p {
+                        sums[c as usize] += v;
+                    }
+                }
+                SparseRow::Slab(s) => {
+                    for (sum, &v) in sums.iter_mut().zip(s) {
+                        *sum += v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Add `delta` to one entry; entries that land exactly on the
+    /// default value are dropped from the pair list (counts that return
+    /// to zero stop costing memory and bandwidth), and rows whose fill
+    /// crosses the promotion threshold become dense slabs.
+    pub fn add(&mut self, local_row: u64, col: u32, delta: T) -> Result<()> {
+        self.check(local_row, col)?;
+        if delta == T::default() {
+            return Ok(());
+        }
+        let cols = self.cols as usize;
+        let row = &mut self.rows[local_row as usize];
+        match row {
+            SparseRow::Pairs(p) => {
+                match p.binary_search_by_key(&col, |&(c, _)| c) {
+                    Ok(i) => {
+                        p[i].1 += delta;
+                        if p[i].1 == T::default() {
+                            p.remove(i);
+                        }
+                    }
+                    Err(i) => p.insert(i, (col, delta)),
+                }
+                if p.len() * PROMOTE_FILL_DEN >= cols * PROMOTE_FILL_NUM {
+                    let mut slab = vec![T::default(); cols];
+                    for &(c, v) in p.iter() {
+                        slab[c as usize] = v;
+                    }
+                    *row = SparseRow::Slab(slab);
+                }
+            }
+            SparseRow::Slab(s) => s[col as usize] += delta,
+        }
+        Ok(())
+    }
+
+    /// Add a full row of deltas: one O(cols) sorted merge of the pair
+    /// list with the dense delta row (per-entry `add` would shift the
+    /// vec on every insert — O(cols²) for a filling row, and this path
+    /// carries the trainer's dense hot-word aggregates).
+    pub fn add_row(&mut self, local_row: u64, deltas: &[T]) -> Result<()> {
+        let cols = self.cols as usize;
+        if deltas.len() != cols {
+            return Err(Error::PsRejected(format!(
+                "row delta has {} entries, want {}",
+                deltas.len(),
+                self.cols
+            )));
+        }
+        self.check_row(local_row)?;
+        let row = &mut self.rows[local_row as usize];
+        let merged = match row {
+            SparseRow::Slab(s) => {
+                for (slot, &d) in s.iter_mut().zip(deltas) {
+                    *slot += d;
+                }
+                return Ok(());
+            }
+            SparseRow::Pairs(p) => {
+                let mut merged: Vec<(u32, T)> = Vec::with_capacity(p.len());
+                let mut existing = p.iter().peekable();
+                for (c, &d) in deltas.iter().enumerate() {
+                    let c = c as u32;
+                    let mut v = d;
+                    if let Some(&&(pc, pv)) = existing.peek() {
+                        if pc == c {
+                            v += pv;
+                            existing.next();
+                        }
+                    }
+                    if v != T::default() {
+                        merged.push((c, v));
+                    }
+                }
+                merged
+            }
+        };
+        if merged.len() * PROMOTE_FILL_DEN >= cols * PROMOTE_FILL_NUM {
+            let mut slab = vec![T::default(); cols];
+            for &(c, v) in &merged {
+                slab[c as usize] = v;
+            }
+            *row = SparseRow::Slab(slab);
+        } else {
+            *row = SparseRow::Pairs(merged);
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn zero_initialized() {
@@ -148,5 +551,163 @@ mod tests {
         let s: DenseShard<i64> = DenseShard::new(0, 10);
         assert_eq!(s.local_rows(), 0);
         assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn dense_sparse_read_skips_zeros() {
+        let mut s: DenseShard<i64> = DenseShard::new(1, 5);
+        s.add(0, 1, 7).unwrap();
+        s.add(0, 4, -3).unwrap();
+        let (mut cols, mut vals) = (Vec::new(), Vec::new());
+        let n = s.read_row_sparse(0, &mut cols, &mut vals).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(cols, vec![1, 4]);
+        assert_eq!(vals, vec![7, -3]);
+    }
+
+    #[test]
+    fn sparse_add_get_read_row() {
+        let mut s: SparseShard<i64> = SparseShard::new(3, 100);
+        s.add(1, 42, 5).unwrap();
+        s.add(1, 7, 2).unwrap();
+        s.add(1, 42, 1).unwrap();
+        assert_eq!(s.get(1, 42).unwrap(), 6);
+        assert_eq!(s.get(1, 0).unwrap(), 0);
+        let mut out = Vec::new();
+        s.read_row(1, &mut out).unwrap();
+        assert_eq!(out.len(), 100);
+        assert_eq!(out[7], 2);
+        assert_eq!(out[42], 6);
+        assert_eq!(out.iter().filter(|&&v| v != 0).count(), 2);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn sparse_entries_returning_to_zero_are_dropped() {
+        let mut s: SparseShard<i64> = SparseShard::new(1, 10);
+        s.add(0, 3, 4).unwrap();
+        s.add(0, 3, -4).unwrap();
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.bytes(), 0);
+        assert_eq!(s.get(0, 3).unwrap(), 0);
+    }
+
+    #[test]
+    fn sparse_promotes_to_dense_above_fill_threshold() {
+        let cols = 16u32;
+        let mut s: SparseShard<i64> = SparseShard::new(2, cols);
+        // Fill row 0 past half occupancy; row 1 stays sparse.
+        for c in 0..cols {
+            s.add(0, c, 1).unwrap();
+        }
+        s.add(1, 3, 1).unwrap();
+        assert_eq!(s.promoted_rows(), 1);
+        // Semantics unchanged after promotion.
+        for c in 0..cols {
+            assert_eq!(s.get(0, c).unwrap(), 1);
+        }
+        let (mut pc, mut pv) = (Vec::new(), Vec::new());
+        assert_eq!(s.read_row_sparse(0, &mut pc, &mut pv).unwrap(), cols);
+        assert_eq!(s.get(1, 3).unwrap(), 1);
+        assert_eq!(s.promoted_rows(), 1);
+    }
+
+    #[test]
+    fn sparse_matches_dense_reference_randomized() {
+        let mut rng = Pcg64::new(0x57a);
+        for case in 0..20 {
+            let rows = 1 + rng.below(8) as u64;
+            let cols = 1 + rng.below(24) as u32;
+            let mut dense: DenseShard<i64> = DenseShard::new(rows, cols);
+            let mut sparse: SparseShard<i64> = SparseShard::new(rows, cols);
+            for _ in 0..200 {
+                let r = rng.below(rows as usize) as u64;
+                let c = rng.below(cols as usize) as u32;
+                let v = rng.below(7) as i64 - 3;
+                dense.add(r, c, v).unwrap();
+                sparse.add(r, c, v).unwrap();
+            }
+            for r in 0..rows {
+                let (mut dv, mut sv) = (Vec::new(), Vec::new());
+                dense.read_row(r, &mut dv).unwrap();
+                sparse.read_row(r, &mut sv).unwrap();
+                assert_eq!(dv, sv, "row {r} case {case}");
+                let (mut dc, mut dvals) = (Vec::new(), Vec::new());
+                let (mut sc, mut svals) = (Vec::new(), Vec::new());
+                dense.read_row_sparse(r, &mut dc, &mut dvals).unwrap();
+                sparse.read_row_sparse(r, &mut sc, &mut svals).unwrap();
+                assert_eq!((dc, dvals), (sc, svals), "sparse read row {r} case {case}");
+            }
+            let mut dsums = vec![0i64; cols as usize];
+            let mut ssums = vec![0i64; cols as usize];
+            dense.col_sums(&mut dsums);
+            sparse.col_sums(&mut ssums);
+            assert_eq!(dsums, ssums, "col sums case {case}");
+        }
+    }
+
+    #[test]
+    fn topk_orders_by_value_then_col() {
+        let mut s: SparseShard<i64> = SparseShard::new(1, 50);
+        s.add(0, 10, 5).unwrap();
+        s.add(0, 3, 9).unwrap();
+        s.add(0, 20, 5).unwrap();
+        s.add(0, 30, 1).unwrap();
+        let (mut cols, mut vals) = (Vec::new(), Vec::new());
+        let n = s.read_row_topk(0, 3, &mut cols, &mut vals).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(cols, vec![3, 10, 20]);
+        assert_eq!(vals, vec![9, 5, 5]);
+        // k larger than occupancy returns everything.
+        let (mut cols, mut vals) = (Vec::new(), Vec::new());
+        assert_eq!(s.read_row_topk(0, 100, &mut cols, &mut vals).unwrap(), 4);
+    }
+
+    #[test]
+    fn topk_with_nan_values_does_not_panic() {
+        // The comparator must stay a total order even with NaNs in the
+        // row (sort_unstable_by panics on non-total comparators).
+        let mut s: DenseShard<f32> = DenseShard::new(1, 6);
+        s.add(0, 0, 1.0).unwrap();
+        s.add(0, 1, f32::NAN).unwrap();
+        s.add(0, 2, 2.0).unwrap();
+        s.add(0, 3, f32::NAN).unwrap();
+        s.add(0, 4, 0.5).unwrap();
+        let (mut cols, mut vals) = (Vec::new(), Vec::new());
+        let n = s.read_row_topk(0, 3, &mut cols, &mut vals).unwrap();
+        assert_eq!(n, 3);
+        // Ordered values rank first (descending); NaNs sink to the tail.
+        assert_eq!(cols, vec![2, 0, 4]);
+        assert_eq!(vals, vec![2.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn sparse_add_row_merges_with_existing_pairs() {
+        let mut s: SparseShard<i64> = SparseShard::new(1, 8);
+        s.add(0, 2, 5).unwrap();
+        s.add(0, 6, 1).unwrap();
+        s.add_row(0, &[1, 0, -5, 0, 0, 0, 2, 0]).unwrap();
+        let mut out = Vec::new();
+        s.read_row(0, &mut out).unwrap();
+        assert_eq!(out, vec![1, 0, 0, 0, 0, 0, 3, 0]);
+        // (2, 5) + (-5) cancelled to zero and was dropped.
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.promoted_rows(), 0);
+    }
+
+    #[test]
+    fn sparse_add_row_and_bounds() {
+        let mut s: SparseShard<i64> = SparseShard::new(2, 4);
+        s.add_row(0, &[1, 0, -2, 0]).unwrap();
+        let mut out = Vec::new();
+        s.read_row(0, &mut out).unwrap();
+        assert_eq!(out, vec![1, 0, -2, 0]);
+        assert!(s.add_row(0, &[1, 2]).is_err());
+        assert!(s.add(2, 0, 1).is_err());
+        assert!(s.add(0, 4, 1).is_err());
+        let mut out = Vec::new();
+        assert!(s.read_row(5, &mut out).is_err());
+        assert!(s.read_row_sparse(5, &mut Vec::new(), &mut Vec::new()).is_err());
+        assert!(s.read_row_topk(5, 1, &mut Vec::new(), &mut Vec::new()).is_err());
     }
 }

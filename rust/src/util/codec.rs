@@ -87,6 +87,14 @@ impl Writer {
         self.varint(v as u64);
     }
 
+    /// Zigzag-mapped LEB128 varint for signed values: small magnitudes
+    /// (positive *or* negative) encode in one byte. The sparse data
+    /// plane ships count deltas and count values, which are almost
+    /// always tiny — fixed 8-byte i64s would waste ~7 bytes per value.
+    pub fn zigzag(&mut self, v: i64) {
+        self.varint(((v << 1) ^ (v >> 63)) as u64);
+    }
+
     /// Length-prefixed UTF-8 string.
     pub fn str(&mut self, s: &str) {
         self.usize(s.len());
@@ -112,6 +120,24 @@ impl Writer {
         self.usize(v.len());
         for &x in v {
             self.varint(x);
+        }
+    }
+
+    /// Length-prefixed slice of u32 varints (good for column ids and
+    /// per-row pair counts, which are bounded by K and thus usually fit
+    /// in one byte).
+    pub fn slice_varint_u32(&mut self, v: &[u32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.varint(x as u64);
+        }
+    }
+
+    /// Length-prefixed slice of zigzag varints (sparse count values).
+    pub fn slice_zigzag(&mut self, v: &[i64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.zigzag(x);
         }
     }
 
@@ -241,6 +267,12 @@ impl<'a> Reader<'a> {
         Ok(self.varint()? as usize)
     }
 
+    /// Zigzag-mapped varint back to i64.
+    pub fn zigzag(&mut self) -> Result<i64> {
+        let z = self.varint()?;
+        Ok(((z >> 1) as i64) ^ -((z & 1) as i64))
+    }
+
     /// Length-prefixed string.
     pub fn str(&mut self) -> Result<String> {
         let n = self.usize()?;
@@ -270,6 +302,30 @@ impl<'a> Reader<'a> {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.varint()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed u32 varint slice.
+    pub fn slice_varint_u32(&mut self) -> Result<Vec<u32>> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = self.varint()?;
+            if v > u32::MAX as u64 {
+                return Err(Error::Decode(format!("u32 varint out of range: {v}")));
+            }
+            out.push(v as u32);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed zigzag varint slice.
+    pub fn slice_zigzag(&mut self) -> Result<Vec<i64>> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.zigzag()?);
         }
         Ok(out)
     }
@@ -390,6 +446,52 @@ mod tests {
             assert_eq!(r.slice_f32().unwrap(), f32s);
             assert_eq!(r.slice_varint().unwrap(), idx);
         }
+    }
+
+    #[test]
+    fn zigzag_boundaries() {
+        for v in [0i64, 1, -1, 63, -64, 64, -65, i32::MAX as i64, i64::MIN, i64::MAX] {
+            let mut w = Writer::new();
+            w.zigzag(v);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            assert_eq!(r.zigzag().unwrap(), v, "value {v}");
+        }
+        // Small magnitudes must be single-byte regardless of sign.
+        for v in [0i64, 1, -1, 63, -64] {
+            let mut w = Writer::new();
+            w.zigzag(v);
+            assert_eq!(w.len(), 1, "zigzag({v}) should be 1 byte");
+        }
+    }
+
+    #[test]
+    fn roundtrip_sparse_slices_random() {
+        let mut rng = Pcg64::new(7);
+        for _ in 0..50 {
+            let n = rng.below(300);
+            let cols: Vec<u32> = (0..n).map(|_| rng.next_u32() >> rng.below(32) as u32).collect();
+            let vals: Vec<i64> =
+                (0..n).map(|_| rng.below(9) as i64 - 4).collect();
+            let mut w = Writer::new();
+            w.slice_varint_u32(&cols);
+            w.slice_zigzag(&vals);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            assert_eq!(r.slice_varint_u32().unwrap(), cols);
+            assert_eq!(r.slice_zigzag().unwrap(), vals);
+            assert!(r.is_done());
+        }
+    }
+
+    #[test]
+    fn oversized_u32_varint_rejected() {
+        let mut w = Writer::new();
+        w.usize(1);
+        w.varint(u32::MAX as u64 + 1);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.slice_varint_u32().is_err());
     }
 
     #[test]

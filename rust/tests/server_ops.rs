@@ -1,0 +1,275 @@
+//! Integration tests for the sparse-aware server-side operation
+//! protocol: pluggable storage layouts (`Layout::Dense` vs
+//! `Layout::Sparse`), the typed pull ops (`PullSparseRows`, `PullTopK`,
+//! `PullColSums`) against naive references, exactly-once semantics on
+//! the sparse store, and end-to-end training parity between the two
+//! word-topic layouts.
+
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::eval::perplexity::holdout_perplexity;
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::net::FaultPlan;
+use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
+use glint_lda::ps::config::PsConfig;
+use glint_lda::ps::messages::Layout;
+use glint_lda::ps::server::ServerGroup;
+use glint_lda::util::rng::Pcg64;
+
+fn setup(shards: usize, plan: FaultPlan, seed: u64) -> (ServerGroup, PsClient) {
+    let cfg = PsConfig {
+        shards,
+        timeout: std::time::Duration::from_millis(20),
+        ..PsConfig::default()
+    };
+    let group = ServerGroup::start(cfg.clone(), plan, seed);
+    let client = PsClient::connect(&group.transport(), cfg);
+    (group, client)
+}
+
+/// Apply an identical random workload to a dense-layout and a
+/// sparse-layout matrix; every read op must agree between the two, and
+/// the sparse results must agree with references computed client-side
+/// from the dense pull.
+#[test]
+fn sparse_ops_match_dense_reference_over_random_workloads() {
+    for case in 0..8u64 {
+        let mut rng = Pcg64::new(0x0b5 + case);
+        let shards = 1 + rng.below(4);
+        let rows = 10 + rng.below(60) as u64;
+        let cols = 2 + rng.below(30) as u32;
+        let (_g, client) = setup(shards, FaultPlan::reliable(), 0xce + case);
+        let dense: BigMatrix<i64> = client.matrix_with_layout(rows, cols, Layout::Dense).unwrap();
+        let sparse: BigMatrix<i64> =
+            client.matrix_with_layout(rows, cols, Layout::Sparse).unwrap();
+        for _ in 0..6 {
+            let n = 1 + rng.below(120);
+            let mut deltas = CoordDeltas::default();
+            for _ in 0..n {
+                deltas.rows.push(rng.below(rows as usize) as u64);
+                deltas.cols.push(rng.below(cols as usize) as u32);
+                deltas.values.push(rng.below(7) as i64 - 3);
+            }
+            dense.push_coords(&deltas).unwrap();
+            sparse.push_coords(&deltas).unwrap();
+        }
+
+        let all: Vec<u64> = (0..rows).collect();
+        let reference = dense.pull_rows(&all).unwrap();
+        assert_eq!(sparse.pull_rows(&all).unwrap(), reference, "dense pulls, case {case}");
+
+        // Sparse pulls: densify and compare; pairs must be sorted by
+        // column and free of explicit zeros.
+        for (m, label) in [(&dense, "dense-layout"), (&sparse, "sparse-layout")] {
+            let pulled = m.pull_sparse_rows(&all).unwrap();
+            assert_eq!(pulled.len(), rows as usize);
+            for (r, pairs) in pulled.iter().enumerate() {
+                let mut densified = vec![0i64; cols as usize];
+                for &(c, v) in pairs {
+                    assert_ne!(v, 0, "{label} shipped a zero, case {case}");
+                    densified[c as usize] = v;
+                }
+                assert_eq!(
+                    densified,
+                    reference[r * cols as usize..(r + 1) * cols as usize],
+                    "{label} sparse pull row {r}, case {case}"
+                );
+                for w in pairs.windows(2) {
+                    assert!(w[0].0 < w[1].0, "{label} columns not ascending, case {case}");
+                }
+            }
+        }
+    }
+}
+
+/// `PullTopK` must agree with the naive client-side reference: sort the
+/// row's non-zero entries by value descending (ties by column
+/// ascending) and truncate to k.
+#[test]
+fn topk_matches_naive_sort() {
+    let mut rng = Pcg64::new(0x70b);
+    let (_g, client) = setup(3, FaultPlan::reliable(), 0x70c);
+    let rows = 40u64;
+    let cols = 24u32;
+    for layout in [Layout::Dense, Layout::Sparse] {
+        let m: BigMatrix<i64> = client.matrix_with_layout(rows, cols, layout).unwrap();
+        let mut deltas = CoordDeltas::default();
+        for _ in 0..600 {
+            deltas.rows.push(rng.below(rows as usize) as u64);
+            deltas.cols.push(rng.below(cols as usize) as u32);
+            deltas.values.push(rng.below(9) as i64 - 4);
+        }
+        m.push_coords(&deltas).unwrap();
+
+        let all: Vec<u64> = (0..rows).collect();
+        let reference = m.pull_rows(&all).unwrap();
+        for k in [1u32, 3, 7, 100] {
+            let got = m.pull_topk(&all, k).unwrap();
+            for r in 0..rows as usize {
+                let mut expect: Vec<(u32, i64)> = reference
+                    [r * cols as usize..(r + 1) * cols as usize]
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0)
+                    .map(|(c, &v)| (c as u32, v))
+                    .collect();
+                expect.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                expect.truncate(k as usize);
+                assert_eq!(got[r], expect, "row {r} k {k} layout {layout:?}");
+            }
+        }
+    }
+}
+
+/// `PullColSums` must equal summing a full client-side pull, for both
+/// layouts and several shard counts.
+#[test]
+fn col_sums_match_client_side_reference() {
+    let mut rng = Pcg64::new(0xc01);
+    for shards in [1usize, 3, 5] {
+        let (_g, client) = setup(shards, FaultPlan::reliable(), 0xc02 + shards as u64);
+        for layout in [Layout::Dense, Layout::Sparse] {
+            let rows = 57u64;
+            let cols = 9u32;
+            let m: BigMatrix<i64> = client.matrix_with_layout(rows, cols, layout).unwrap();
+            let mut deltas = CoordDeltas::default();
+            for _ in 0..400 {
+                deltas.rows.push(rng.below(rows as usize) as u64);
+                deltas.cols.push(rng.below(cols as usize) as u32);
+                deltas.values.push(rng.below(11) as i64 - 5);
+            }
+            m.push_coords(&deltas).unwrap();
+
+            let all: Vec<u64> = (0..rows).collect();
+            let full = m.pull_rows(&all).unwrap();
+            let mut expect = vec![0i64; cols as usize];
+            for (i, &v) in full.iter().enumerate() {
+                expect[i % cols as usize] += v;
+            }
+            assert_eq!(
+                m.pull_col_sums().unwrap(),
+                expect,
+                "{shards} shards, layout {layout:?}"
+            );
+        }
+    }
+}
+
+/// The exactly-once push protocol holds on the sparse store under an
+/// adversarial fault schedule, and sparse pulls see the same state.
+#[test]
+fn sparse_layout_exactly_once_under_loss() {
+    let (_g, client) = setup(3, FaultPlan::lossy(0.2, 0.12), 0x1055);
+    let rows = 30u64;
+    let cols = 4u32;
+    let m: BigMatrix<i64> = client.matrix_with_layout(rows, cols, Layout::Sparse).unwrap();
+    let mut rng = Pcg64::new(0x10c);
+    let mut expect = vec![0i64; (rows * cols as u64) as usize];
+    for _ in 0..15 {
+        let n = 1 + rng.below(40);
+        let mut deltas = CoordDeltas::default();
+        for _ in 0..n {
+            let r = rng.below(rows as usize) as u64;
+            let c = rng.below(cols as usize) as u32;
+            let v = rng.below(5) as i64 - 2;
+            deltas.rows.push(r);
+            deltas.cols.push(c);
+            deltas.values.push(v);
+            expect[(r * cols as u64 + c as u64) as usize] += v;
+        }
+        m.push_coords(&deltas).unwrap();
+    }
+    let all: Vec<u64> = (0..rows).collect();
+    assert_eq!(m.pull_rows(&all).unwrap(), expect);
+    // The sparse view agrees entry-by-entry too.
+    let pulled = m.pull_sparse_rows(&all).unwrap();
+    let mut densified = vec![0i64; expect.len()];
+    for (r, pairs) in pulled.iter().enumerate() {
+        for &(c, v) in pairs {
+            densified[r * cols as usize + c as usize] = v;
+        }
+    }
+    assert_eq!(densified, expect);
+}
+
+/// A Zipf-occupancy sparse matrix must be resident-smaller than its
+/// dense twin (the §3/Figure 4 premise made measurable via ShardInfo).
+#[test]
+fn sparse_layout_uses_fewer_resident_bytes_at_zipf_occupancy() {
+    let rows = 500u64;
+    let cols = 64u32;
+    let mut bytes = Vec::new();
+    for layout in [Layout::Dense, Layout::Sparse] {
+        let (_g, client) = setup(2, FaultPlan::reliable(), 0x21f);
+        let m: BigMatrix<i64> = client.matrix_with_layout(rows, cols, layout).unwrap();
+        let mut deltas = CoordDeltas::default();
+        for r in 0..rows {
+            let nnz = (cols as u64 / (r + 1)).max(1);
+            for j in 0..nnz {
+                deltas.rows.push(r);
+                deltas.cols.push(((r + j) % cols as u64) as u32);
+                deltas.values.push(1);
+            }
+        }
+        m.push_coords(&deltas).unwrap();
+        let infos = client.shard_infos().unwrap();
+        bytes.push(infos.iter().map(|i| i.bytes).sum::<u64>());
+        assert_eq!(infos.iter().map(|i| i.dedup_evictions).sum::<u64>(), 0);
+    }
+    assert!(
+        bytes[1] * 4 < bytes[0],
+        "sparse layout resident bytes {} should be well under dense {}",
+        bytes[1],
+        bytes[0]
+    );
+}
+
+fn parity_corpus() -> glint_lda::corpus::dataset::Corpus {
+    generate(&SynthConfig {
+        num_docs: 360,
+        vocab_size: 800,
+        num_topics: 8,
+        avg_doc_len: 45.0,
+        seed: 727,
+        ..Default::default()
+    })
+}
+
+fn train_holdout_perplexity(layout: Layout) -> f64 {
+    let corpus = parity_corpus();
+    let (train, test) = corpus.split_holdout(5);
+    let cfg = TrainConfig {
+        num_topics: 10,
+        iterations: 8,
+        workers: 3,
+        shards: 2,
+        block_words: 256,
+        buffer_cap: 2000,
+        dense_top_words: 50,
+        pipeline_depth: 4,
+        wt_layout: layout,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(cfg, &train).unwrap();
+    trainer.verify_counts().unwrap();
+    let model = trainer.run(&train).unwrap();
+    // The server-side tables must match the assignments exactly under
+    // either storage layout.
+    trainer.verify_counts().unwrap();
+    holdout_perplexity(&model, &test, 5, 7)
+}
+
+/// Training with the sparse word-topic layout reaches the same held-out
+/// perplexity as the dense layout on the 2-shard sim deployment: the
+/// storage/protocol change must be quality-neutral.
+#[test]
+fn sparse_and_dense_layout_training_reach_parity() {
+    let dense = train_holdout_perplexity(Layout::Dense);
+    let sparse = train_holdout_perplexity(Layout::Sparse);
+    assert!(dense.is_finite() && sparse.is_finite());
+    let ratio = sparse / dense;
+    assert!(
+        (0.9..1.1).contains(&ratio),
+        "sparse-layout perplexity {sparse:.1} diverged from dense-layout {dense:.1} \
+         (ratio {ratio:.3})"
+    );
+}
