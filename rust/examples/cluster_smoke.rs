@@ -1,0 +1,90 @@
+//! Cluster smoke run: 1 coordinator + 2 workers + 2 TCP shard servers,
+//! all in-process (the exact topology of a multi-machine deployment,
+//! minus the machines), trained to completion on a small synthetic
+//! corpus. The per-iteration aggregate metrics (tokens/sec, perplexity
+//! at evaluation points, parameter-server health) are written as a CSV
+//! for CI to archive.
+//!
+//! ```sh
+//! cargo run --release --example cluster_smoke
+//! # env knobs: CLUSTER_CSV=path (default CLUSTER_smoke_metrics.csv)
+//! ```
+
+use std::net::SocketAddr;
+
+use glint_lda::cluster::{run_worker, Coordinator, CorpusSpec, WorkerOptions};
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::lda::trainer::TrainConfig;
+use glint_lda::ps::config::{PsConfig, TransportMode};
+use glint_lda::ps::server::TcpShardServer;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let corpus = generate(&SynthConfig {
+        num_docs: 600,
+        vocab_size: 1500,
+        num_topics: 10,
+        avg_doc_len: 50.0,
+        seed: 0x5307e,
+        ..Default::default()
+    });
+
+    // 2 parameter-server shards on loopback TCP.
+    let want: Vec<SocketAddr> = (0..2).map(|_| "127.0.0.1:0".parse().unwrap()).collect();
+    let shards = TcpShardServer::bind(PsConfig::with_shards(2), 0, &want)?;
+    let shard_addrs: Vec<String> = shards.addrs().iter().map(|a| a.to_string()).collect();
+    println!("shards up on {shard_addrs:?}");
+
+    let cfg = TrainConfig {
+        num_topics: 10,
+        iterations: 8,
+        workers: 2,
+        shards: 2,
+        block_words: 256,
+        buffer_cap: 2000,
+        dense_top_words: 50,
+        eval_every: 2,
+        transport: TransportMode::Connect(shard_addrs),
+        heartbeat_ms: 200,
+        ..TrainConfig::default()
+    };
+
+    let coordinator = Coordinator::bind("127.0.0.1:0", cfg, &corpus, CorpusSpec::Provided)?;
+    let join_addr = coordinator.addr().to_string();
+    println!("coordinator up on {join_addr}");
+    let coord = std::thread::spawn(move || coordinator.run());
+
+    let mut workers = Vec::new();
+    for i in 0..2 {
+        let opts = WorkerOptions {
+            join: join_addr.clone(),
+            corpus: Some(corpus.clone()),
+            ..WorkerOptions::default()
+        };
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("smoke-worker-{i}"))
+                .spawn(move || run_worker(opts))?,
+        );
+    }
+
+    let outcome = coord.join().expect("coordinator thread")?;
+    for w in workers {
+        let summary = w.join().expect("worker thread")?;
+        println!("worker {} completed {} sweeps", summary.worker_id, summary.sweeps);
+    }
+
+    println!("{}", outcome.report.to_table());
+    let perplexity = outcome
+        .final_perplexity
+        .ok_or("no evaluation point produced a perplexity")?;
+    println!("final training perplexity: {perplexity:.1}");
+    assert!(perplexity.is_finite() && perplexity > 1.0, "nonsense perplexity");
+    assert_eq!(outcome.epochs, 0, "smoke run must not trip failure recovery");
+    assert_eq!(outcome.report.len(), 8, "one aggregate row per iteration");
+
+    let csv = std::env::var("CLUSTER_CSV").unwrap_or_else(|_| "CLUSTER_smoke_metrics.csv".into());
+    std::fs::write(&csv, outcome.report.to_csv())?;
+    println!("metrics written to {csv}");
+    println!("cluster_smoke OK");
+    Ok(())
+}

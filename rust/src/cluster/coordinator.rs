@@ -1,0 +1,717 @@
+//! The cluster coordinator: the driver of a multi-process LightLDA run
+//! (the analog of the paper's Spark driver dispatching APS-LDA tasks).
+//!
+//! The coordinator owns the run's control state — corpus partitions,
+//! worker registrations, the per-iteration barrier — while the *data*
+//! (count tables) lives on the parameter-server shards and the *work*
+//! (sampling) happens in worker processes. It is a single-threaded
+//! actor draining one tagged-frame TCP inbox, exactly like a shard
+//! serve loop: workers drive the protocol by polling, so no state here
+//! is ever touched concurrently.
+//!
+//! # Iteration loop
+//!
+//! A partition may start iteration `t+1` once (a) every partition has
+//! pushed its counts for the current epoch (the `Ready` barrier — the
+//! column-sum topic totals are meaningless before that) and (b) it is
+//! at most [`TrainConfig::max_staleness`] iterations ahead of the
+//! slowest partition — the asynchronous bounded-staleness barrier.
+//! Workers flush their pushes and checkpoint *before* reporting, so
+//! when every partition has reported iteration `t`, the tables on the
+//! shards are exactly the counts of the reported assignments.
+//!
+//! # Failure recovery (paper §3.5, per-partition form)
+//!
+//! A worker silent for [`TrainConfig::straggler_timeout_ms`] is
+//! declared dead. Its partial pushes have already contaminated the
+//! epoch's count table, so the coordinator *rolls the epoch*: it bumps
+//! the epoch counter, creates a **fresh** count table (a new matrix id
+//! — which also fences off any zombie worker still pushing to the old
+//! one), and reissues every partition's [`JobSpec`]. Each worker —
+//! survivors included — reloads its partition's last valid checkpoint
+//! (or re-initializes, if none), pushes those counts into the new
+//! table, and resumes from its checkpointed iteration. The dead
+//! partition itself is handed to the next worker that registers.
+
+use std::collections::{BTreeMap, HashMap};
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cluster::protocol::{
+    CorpusSpec, CtrlRequest, CtrlResponse, JobSpec, SweepKnobs, SweepReport,
+};
+use crate::corpus::dataset::Corpus;
+use crate::eval::perplexity::{perplexity_from_loglik, TopicModel};
+use crate::lda::sweep::pull_full_model;
+use crate::lda::trainer::TrainConfig;
+use crate::metrics::{Report, Row};
+use crate::net::tcp::{resolve_addrs, TcpServer, TcpTransport};
+use crate::net::{respond, Inbox, Transport};
+use crate::ps::client::{BigMatrix, PsClient};
+use crate::ps::config::{PsConfig, TransportMode};
+use crate::util::error::{Error, Result};
+use crate::{log_info, log_warn};
+
+/// How long the coordinator's inbox waits per tick before re-checking
+/// worker liveness and completion.
+const TICK: Duration = Duration::from_millis(50);
+/// Back-off suggested to a worker parked at a barrier.
+const BARRIER_WAIT_MS: u64 = 100;
+/// Back-off suggested to a worker the cluster has no partition for.
+const SPARE_WAIT_MS: u64 = 500;
+/// How long the coordinator keeps answering `Done` after completion so
+/// workers can exit cleanly before it tears the listener down.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// One corpus partition's control state.
+struct Slot {
+    /// Absolute document range.
+    range: Range<usize>,
+    /// Worker currently assigned, if any.
+    worker: Option<u64>,
+    /// Epoch of the last `JobSpec` delivered to that worker.
+    delivered_epoch: Option<u32>,
+    /// Whether the worker confirmed `Ready` for the current epoch.
+    ready: bool,
+    /// Iterations completed (absolute, survives epochs).
+    completed: u32,
+    /// Newest iteration known checkpointed on disk.
+    checkpointed: u32,
+    /// A previous owner died or left; the next registration that picks
+    /// this slot up counts as a reassignment.
+    orphaned: bool,
+}
+
+/// One iteration's aggregate across partitions (only built once every
+/// partition has reported it).
+struct IterAgg {
+    tokens: u64,
+    changed: u64,
+    /// Wall-clock of the slowest partition.
+    secs: f64,
+    partitions: usize,
+    /// Summed perplexity when every partition evaluated this iteration.
+    perplexity: Option<f64>,
+}
+
+/// Fold a complete report set into its aggregate; `None` while any
+/// partition is missing.
+fn aggregate(reports: &[Option<SweepReport>]) -> Option<IterAgg> {
+    if !reports.iter().all(|r| r.is_some()) {
+        return None;
+    }
+    let tokens = reports.iter().flatten().map(|r| r.tokens).sum();
+    let changed = reports.iter().flatten().map(|r| r.changed).sum();
+    let secs = reports.iter().flatten().map(|r| r.seconds).fold(0.0f64, f64::max);
+    let perplexity = if reports.iter().flatten().all(|r| r.evaluated) {
+        let ll: f64 = reports.iter().flatten().map(|r| r.log_likelihood).sum();
+        let n: u64 = reports.iter().flatten().map(|r| r.ll_tokens).sum();
+        Some(perplexity_from_loglik(ll, n))
+    } else {
+        None
+    };
+    Some(IterAgg { tokens, changed, secs, partitions: reports.len(), perplexity })
+}
+
+/// A registered worker.
+struct WorkerEntry {
+    /// Partition index it drives.
+    slot: usize,
+    /// Last time any request arrived from it.
+    last_seen: Instant,
+}
+
+/// What a finished cluster run produced.
+pub struct ClusterOutcome {
+    /// Per-iteration aggregate rows (tokens, seconds, perplexity at
+    /// evaluation points, parameter-server health).
+    pub report: Report,
+    /// The final model pulled off the parameter servers.
+    pub model: TopicModel,
+    /// Perplexity of the last evaluated iteration, if any was scheduled.
+    pub final_perplexity: Option<f64>,
+    /// Recovery epochs the run went through (0 = no failures).
+    pub epochs: u32,
+    /// Partitions handed to a replacement worker after a failure.
+    pub reassignments: u32,
+}
+
+/// The coordinator half of a cluster run. Construct with
+/// [`Coordinator::bind`], hand out [`Coordinator::addr`] to workers
+/// (`glint-lda work --join <addr>`), then [`Coordinator::run`] to
+/// completion.
+pub struct Coordinator {
+    cfg: TrainConfig,
+    corpus_spec: CorpusSpec,
+    shard_addrs: Vec<String>,
+    vocab_size: u32,
+    server: TcpServer,
+    inbox: Inbox,
+    /// The PS-facing transport backing `client`/`n_wk` (epoch-table
+    /// creation, health sampling, final model pull).
+    _transport: Arc<dyn Transport>,
+    client: PsClient,
+    n_wk: BigMatrix<i64>,
+    slots: Vec<Slot>,
+    workers: HashMap<u64, WorkerEntry>,
+    next_worker: u64,
+    epoch: u32,
+    reassignments: u32,
+    /// Per-iteration, per-partition reports (overwritten on re-runs
+    /// after a rollback).
+    agg: BTreeMap<u32, Vec<Option<SweepReport>>>,
+    /// Parameter-server health sampled when an iteration completes:
+    /// `(resident bytes, dedup evictions)` summed over shards.
+    ps_health: BTreeMap<u32, (u64, u64)>,
+    /// Iterations already announced in the log.
+    announced: u32,
+    /// Set when recovery is impossible (e.g. no fresh count table could
+    /// be created); the run loop aborts with this error.
+    fatal: Option<Error>,
+    /// Token → worker id of successful registrations, so a retried
+    /// `Register` whose reply was lost re-receives its assignment
+    /// instead of being seated twice.
+    registrations: HashMap<u64, u64>,
+}
+
+impl Coordinator {
+    /// Bind the control listener on `bind` (`host:port`; port 0 picks an
+    /// ephemeral port), connect to the parameter-server shards named by
+    /// `cfg.transport` (`TransportMode::Connect` required), create the
+    /// epoch-0 count table and compute the partition table for
+    /// `corpus`. `corpus_spec` is what workers are told about where to
+    /// find that same corpus.
+    pub fn bind(
+        bind: &str,
+        cfg: TrainConfig,
+        corpus: &Corpus,
+        corpus_spec: CorpusSpec,
+    ) -> Result<Coordinator> {
+        cfg.hyper().validate()?;
+        if corpus.num_docs() == 0 {
+            return Err(Error::Config("empty corpus".into()));
+        }
+        let TransportMode::Connect(addrs) = &cfg.transport else {
+            return Err(Error::Config(
+                "cluster mode needs --connect shard addresses (start `serve` first)".into(),
+            ));
+        };
+        let shard_addrs = addrs.clone();
+        let resolved = resolve_addrs(&shard_addrs)?;
+        let ps_cfg = PsConfig::deployment(
+            resolved.len(),
+            cfg.scheme,
+            cfg.transport.clone(),
+            cfg.pipeline_depth,
+        );
+        let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
+        let client = PsClient::connect(&*transport, ps_cfg);
+        client.validate_deployment()?;
+        let n_wk: BigMatrix<i64> = client.matrix_with_layout(
+            corpus.vocab_size as u64,
+            cfg.num_topics,
+            cfg.wt_layout,
+        )?;
+
+        let bind_addr = resolve_addrs(&[bind.to_string()])?[0];
+        let (server, mut inboxes) = TcpServer::bind(&[bind_addr])?;
+        let inbox = inboxes.remove(0);
+
+        let slots = corpus
+            .partitions(cfg.workers)
+            .into_iter()
+            .map(|range| Slot {
+                range,
+                worker: None,
+                delivered_epoch: None,
+                ready: false,
+                completed: 0,
+                checkpointed: 0,
+                orphaned: false,
+            })
+            .collect();
+
+        Ok(Coordinator {
+            vocab_size: corpus.vocab_size,
+            corpus_spec,
+            shard_addrs,
+            server,
+            inbox,
+            _transport: transport,
+            client,
+            n_wk,
+            slots,
+            workers: HashMap::new(),
+            next_worker: 1,
+            epoch: 0,
+            reassignments: 0,
+            agg: BTreeMap::new(),
+            ps_health: BTreeMap::new(),
+            announced: 0,
+            fatal: None,
+            registrations: HashMap::new(),
+            cfg,
+        })
+    }
+
+    /// The control-plane address workers join at.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.addrs()[0]
+    }
+
+    /// Drive the run to completion: serve the control plane, detect dead
+    /// workers, roll epochs on failure, and return the aggregated
+    /// report plus the final model.
+    pub fn run(mut self) -> Result<ClusterOutcome> {
+        let total = self.cfg.iterations;
+        let straggler = Duration::from_millis(self.cfg.straggler_timeout_ms.max(1));
+        log_info!(
+            "coordinator up on {} ({} partitions, {} iterations, staleness {})",
+            self.addr(),
+            self.slots.len(),
+            total,
+            self.cfg.max_staleness
+        );
+        while !self.finished() {
+            if let Some(env) = self.inbox.recv_timeout(TICK) {
+                self.serve_one(env);
+                // Drain everything already queued before judging
+                // liveness: a brief stall in this loop (e.g. creating an
+                // epoch's table) must not let queued-but-unread
+                // heartbeats read as worker silence.
+                while let Some(env) = self.inbox.recv_timeout(Duration::ZERO) {
+                    self.serve_one(env);
+                }
+            }
+            self.reap_dead(straggler);
+            if let Some(e) = self.fatal.take() {
+                self.server.shutdown();
+                return Err(e);
+            }
+        }
+        log_info!("all {} iterations complete; draining workers", total);
+        // Keep answering (with Done) until every registered worker said
+        // goodbye AND the line has been quiet long enough for parked
+        // standbys (which re-register every SPARE_WAIT_MS) to hear the
+        // verdict too — bounded by a hard grace deadline.
+        let drain_deadline = Instant::now() + DRAIN_GRACE;
+        let quiet_needed = Duration::from_millis(SPARE_WAIT_MS + 200);
+        let mut last_request = Instant::now();
+        while Instant::now() < drain_deadline
+            && (!self.workers.is_empty() || last_request.elapsed() < quiet_needed)
+        {
+            if let Some(env) = self.inbox.recv_timeout(TICK) {
+                last_request = Instant::now();
+                self.serve_one(env);
+            }
+        }
+        self.server.shutdown();
+
+        let model = pull_full_model(
+            &self.n_wk,
+            self.vocab_size,
+            self.cfg.pipeline_depth,
+            self.cfg.hyper(),
+        )?;
+        let (report, final_perplexity) = self.build_report();
+        Ok(ClusterOutcome {
+            report,
+            model,
+            final_perplexity,
+            epochs: self.epoch,
+            reassignments: self.reassignments,
+        })
+    }
+
+    /// Decode, dispatch and answer one inbound control envelope.
+    fn serve_one(&mut self, env: crate::net::Envelope) {
+        let resp = match CtrlRequest::decode(&env.payload) {
+            Ok(req) => self.handle(req),
+            Err(e) => CtrlResponse::Error(e.to_string()),
+        };
+        respond(&env, resp.encode());
+    }
+
+    /// True once every partition has completed every iteration.
+    fn finished(&self) -> bool {
+        self.slots.iter().all(|s| s.completed >= self.cfg.iterations)
+    }
+
+    /// Smallest completed-iteration count across partitions.
+    fn min_completed(&self) -> u32 {
+        self.slots.iter().map(|s| s.completed).min().unwrap_or(0)
+    }
+
+    /// True once every partition's worker confirmed `Ready` for the
+    /// current epoch.
+    fn all_ready(&self) -> bool {
+        self.slots.iter().all(|s| s.ready)
+    }
+
+    /// Build the `JobSpec` for `slot` under the current epoch.
+    fn spec_for(&self, slot: usize, worker: u64) -> JobSpec {
+        let s = &self.slots[slot];
+        let hyper = self.cfg.hyper();
+        JobSpec {
+            worker,
+            partition: slot as u32,
+            doc_start: s.range.start as u64,
+            doc_end: s.range.end as u64,
+            epoch: self.epoch,
+            matrix_id: self.n_wk.id(),
+            iterations: self.cfg.iterations,
+            shard_addrs: self.shard_addrs.clone(),
+            corpus: self.corpus_spec.clone(),
+            knobs: SweepKnobs {
+                num_topics: self.cfg.num_topics,
+                alpha: hyper.alpha,
+                beta: hyper.beta,
+                mh_steps: self.cfg.mh_steps,
+                block_words: self.cfg.block_words as u64,
+                buffer_cap: self.cfg.buffer_cap as u64,
+                dense_top_words: self.cfg.dense_top_words,
+                pipeline_depth: self.cfg.pipeline_depth as u64,
+                scheme: self.cfg.scheme,
+                wt_layout: self.cfg.wt_layout,
+                seed: self.cfg.seed,
+                eval_every: self.cfg.eval_every,
+                checkpoint_dir: self
+                    .cfg
+                    .checkpoint_dir
+                    .as_ref()
+                    .map(|p| p.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+                keep_checkpoints: self.cfg.keep_checkpoints as u32,
+                heartbeat_ms: self.cfg.heartbeat_ms,
+            },
+        }
+    }
+
+    /// Handle one control request, returning the reply.
+    fn handle(&mut self, req: CtrlRequest) -> CtrlResponse {
+        match req {
+            CtrlRequest::Register { token } => self.handle_register(token),
+            CtrlRequest::Ready { worker, epoch, iteration } => {
+                self.touch(worker);
+                self.handle_ready(worker, epoch, iteration)
+            }
+            CtrlRequest::Poll { worker } => {
+                self.touch(worker);
+                self.handle_poll(worker)
+            }
+            CtrlRequest::Report { worker, epoch, iteration, stats } => {
+                self.touch(worker);
+                self.handle_report(worker, epoch, iteration, stats)
+            }
+            CtrlRequest::Heartbeat { worker } => {
+                if self.touch(worker) {
+                    CtrlResponse::Ack
+                } else {
+                    CtrlResponse::Error(format!("unknown worker {worker}"))
+                }
+            }
+            CtrlRequest::Leave { worker } => self.handle_leave(worker),
+        }
+    }
+
+    /// Refresh a worker's liveness stamp. False when unknown.
+    fn touch(&mut self, worker: u64) -> bool {
+        match self.workers.get_mut(&worker) {
+            Some(entry) => {
+                entry.last_seen = Instant::now();
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn handle_register(&mut self, token: u64) -> CtrlResponse {
+        if self.finished() {
+            return CtrlResponse::Done;
+        }
+        // Idempotency: a retried Register whose reply was lost must not
+        // seat the same process twice (the ghost seat would never
+        // heartbeat, get reaped, and force a spurious epoch roll).
+        if let Some(&worker) = self.registrations.get(&token) {
+            if let Some(entry) = self.workers.get(&worker) {
+                let slot = entry.slot;
+                self.slots[slot].delivered_epoch = Some(self.epoch);
+                return CtrlResponse::Job(Box::new(self.spec_for(slot, worker)));
+            }
+            // The original seat was reaped meanwhile; register afresh.
+            self.registrations.remove(&token);
+        }
+        let Some(slot) = self.slots.iter().position(|s| s.worker.is_none()) else {
+            // Fully staffed: the joiner becomes a standby. It retries
+            // Register and picks a partition up the moment a failure
+            // frees one.
+            return CtrlResponse::Wait { millis: SPARE_WAIT_MS };
+        };
+        let worker = self.next_worker;
+        self.next_worker += 1;
+        self.registrations.insert(token, worker);
+        if self.slots[slot].orphaned {
+            // This partition lost its owner: a replacement pickup.
+            self.reassignments += 1;
+            self.slots[slot].orphaned = false;
+        }
+        self.slots[slot].worker = Some(worker);
+        self.slots[slot].delivered_epoch = Some(self.epoch);
+        self.slots[slot].ready = false;
+        self.workers.insert(worker, WorkerEntry { slot, last_seen: Instant::now() });
+        log_info!(
+            "worker {worker} registered; assigned partition {slot} (epoch {})",
+            self.epoch
+        );
+        CtrlResponse::Job(Box::new(self.spec_for(slot, worker)))
+    }
+
+    fn handle_ready(&mut self, worker: u64, epoch: u32, iteration: u32) -> CtrlResponse {
+        let Some(slot) = self.workers.get(&worker).map(|e| e.slot) else {
+            return CtrlResponse::Error(format!("unknown worker {worker}"));
+        };
+        if epoch != self.epoch {
+            // Raced a rollback; hand out the fresh spec. Marking it
+            // delivered here matters: otherwise the worker's next Poll
+            // would see a stale delivered_epoch, get the job AGAIN, and
+            // push its partition counts into the epoch's table twice
+            // (pushes are additive deltas, not idempotent).
+            self.slots[slot].delivered_epoch = Some(self.epoch);
+            self.slots[slot].ready = false;
+            return CtrlResponse::Job(Box::new(self.spec_for(slot, worker)));
+        }
+        let s = &mut self.slots[slot];
+        s.ready = true;
+        // The worker's disk is the authority on the resume point: its
+        // restored state *is* a checkpoint at `iteration`.
+        s.completed = iteration;
+        s.checkpointed = iteration;
+        log_info!(
+            "partition {slot} ready at iteration {iteration} (epoch {epoch}, worker {worker})"
+        );
+        CtrlResponse::Ack
+    }
+
+    fn handle_poll(&mut self, worker: u64) -> CtrlResponse {
+        if self.finished() {
+            return CtrlResponse::Done;
+        }
+        let Some(slot) = self.workers.get(&worker).map(|e| e.slot) else {
+            return CtrlResponse::Error(format!("unknown worker {worker} (re-register)"));
+        };
+        if self.slots[slot].delivered_epoch != Some(self.epoch) {
+            // A rollback happened since this worker's last instruction:
+            // reissue the assignment under the new epoch.
+            self.slots[slot].delivered_epoch = Some(self.epoch);
+            self.slots[slot].ready = false;
+            return CtrlResponse::Job(Box::new(self.spec_for(slot, worker)));
+        }
+        if !self.slots[slot].ready || !self.all_ready() {
+            // Either this worker polled before confirming Ready (odd but
+            // harmless) or some partition is still rebuilding. The
+            // column-sum totals are not meaningful yet.
+            return CtrlResponse::Wait { millis: BARRIER_WAIT_MS };
+        }
+        let s = &self.slots[slot];
+        if s.completed >= self.cfg.iterations {
+            // This partition is done; idle until the rest catch up.
+            return CtrlResponse::Wait { millis: BARRIER_WAIT_MS };
+        }
+        if s.completed > self.min_completed() + self.cfg.max_staleness {
+            // Bounded-staleness barrier: too far ahead of the slowest.
+            return CtrlResponse::Wait { millis: BARRIER_WAIT_MS };
+        }
+        let iteration = s.completed + 1;
+        let evaluate = self.cfg.eval_every > 0 && iteration % self.cfg.eval_every == 0;
+        CtrlResponse::Run { iteration, evaluate }
+    }
+
+    fn handle_report(
+        &mut self,
+        worker: u64,
+        epoch: u32,
+        iteration: u32,
+        stats: SweepReport,
+    ) -> CtrlResponse {
+        let Some(slot) = self.workers.get(&worker).map(|e| e.slot) else {
+            return CtrlResponse::Error(format!("unknown worker {worker} (re-register)"));
+        };
+        if epoch != self.epoch {
+            // The sweep ran under a rolled-back epoch: its pushes went to
+            // the fenced-off old table. Discard and reissue the job.
+            self.slots[slot].delivered_epoch = Some(self.epoch);
+            self.slots[slot].ready = false;
+            return CtrlResponse::Job(Box::new(self.spec_for(slot, worker)));
+        }
+        let checkpointing = self.cfg.checkpoint_dir.is_some();
+        {
+            let s = &mut self.slots[slot];
+            s.completed = iteration;
+            if checkpointing {
+                // Workers checkpoint before they report.
+                s.checkpointed = iteration;
+            }
+        }
+        let parts = self.slots.len();
+        self.agg.entry(iteration).or_insert_with(|| vec![None; parts])[slot] = Some(stats);
+        self.announce_progress();
+        CtrlResponse::Ack
+    }
+
+    fn handle_leave(&mut self, worker: u64) -> CtrlResponse {
+        if let Some(entry) = self.workers.remove(&worker) {
+            if !self.finished() {
+                // A mid-run goodbye is a failure for recovery purposes:
+                // the partition's pushes stop at an arbitrary point.
+                log_warn!("worker {worker} left mid-run; rolling epoch");
+                self.slots[entry.slot].worker = None;
+                self.slots[entry.slot].orphaned = true;
+                self.roll_epoch();
+            } else {
+                self.slots[entry.slot].worker = None;
+            }
+        }
+        CtrlResponse::Ack
+    }
+
+    /// Declare workers dead after the straggler timeout and roll the
+    /// epoch if any held a partition.
+    fn reap_dead(&mut self, straggler: Duration) {
+        let now = Instant::now();
+        let dead: Vec<u64> = self
+            .workers
+            .iter()
+            .filter(|(_, e)| now.duration_since(e.last_seen) > straggler)
+            .map(|(&id, _)| id)
+            .collect();
+        if dead.is_empty() {
+            return;
+        }
+        for id in dead {
+            if let Some(entry) = self.workers.remove(&id) {
+                log_warn!(
+                    "worker {id} (partition {}) missed the straggler timeout; presumed dead",
+                    entry.slot
+                );
+                self.slots[entry.slot].worker = None;
+                self.slots[entry.slot].orphaned = true;
+            }
+        }
+        self.roll_epoch();
+    }
+
+    /// Start a fresh epoch after a failure: new count table (fencing off
+    /// the old one), everyone rebuilds from checkpoints.
+    fn roll_epoch(&mut self) {
+        self.epoch += 1;
+        match self.client.matrix_with_layout::<i64>(
+            self.vocab_size as u64,
+            self.cfg.num_topics,
+            self.cfg.wt_layout,
+        ) {
+            Ok(m) => self.n_wk = m,
+            Err(e) => {
+                // Without a fresh table there is no consistent recovery:
+                // directing workers to re-push their checkpoint counts
+                // into the old (contaminated) table would double every
+                // surviving partition. The create already ran the full
+                // retry/back-off budget, so the shards are genuinely
+                // unreachable — abort the run instead of corrupting it.
+                log_warn!(
+                    "could not create epoch {} count table ({e}); aborting the run",
+                    self.epoch
+                );
+                self.fatal = Some(e);
+                return;
+            }
+        }
+        for s in self.slots.iter_mut() {
+            s.ready = false;
+            s.delivered_epoch = None;
+            // Resume point: the newest checkpoint we know of. The
+            // worker's Ready confirms (or corrects) this from disk.
+            s.completed = s.checkpointed;
+        }
+        // Drop aggregate rows beyond the common resume point: partitions
+        // behind it will re-report those iterations under the new table,
+        // while partitions ahead will not — a mix that would produce
+        // rows (and perplexities) spanning two different count tables.
+        // Dropped iterations simply re-complete (or stay absent, which
+        // is honest) rather than reporting a silently wrong metric.
+        let base = self.min_completed();
+        self.agg.retain(|&it, _| it <= base);
+        self.ps_health.retain(|&it, _| it <= base);
+        self.announced = self.announced.min(base);
+        log_info!(
+            "epoch rolled to {} (matrix {}); partitions resume from their checkpoints",
+            self.epoch,
+            self.n_wk.id()
+        );
+    }
+
+    /// Log iterations as they become fully reported, in order, and
+    /// sample parameter-server health for the iteration's report row.
+    fn announce_progress(&mut self) {
+        loop {
+            let next = self.announced + 1;
+            let Some(agg) = self.agg.get(&next).and_then(|r| aggregate(r)) else {
+                return;
+            };
+            if self.min_completed() < next {
+                return;
+            }
+            let rate = agg.tokens as f64 / agg.secs.max(1e-9);
+            match agg.perplexity {
+                Some(p) => log_info!("iter {next}: perplexity {p:.1}, {rate:.0} tokens/s"),
+                None => log_info!(
+                    "iter {next}: {rate:.0} tokens/s across {} partitions",
+                    agg.partitions
+                ),
+            }
+            self.announced = next;
+            if let Ok(infos) = self.client.shard_infos() {
+                self.ps_health.insert(
+                    next,
+                    (
+                        infos.iter().map(|i| i.bytes).sum(),
+                        infos.iter().map(|i| i.dedup_evictions).sum(),
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Assemble the final per-iteration report (and the last evaluated
+    /// perplexity) from the aggregation map.
+    fn build_report(&self) -> (Report, Option<f64>) {
+        let report = Report::new();
+        let mut final_perplexity = None;
+        for (&iter, reports) in &self.agg {
+            let Some(agg) = aggregate(reports) else {
+                continue;
+            };
+            let mut row = Row::new()
+                .set("iter", iter as f64)
+                .set("seconds", agg.secs)
+                .set("tokens", agg.tokens as f64)
+                .set(
+                    "tokens_per_sec",
+                    if agg.secs > 0.0 { agg.tokens as f64 / agg.secs } else { 0.0 },
+                )
+                .set("changed_frac", agg.changed as f64 / agg.tokens.max(1) as f64)
+                .set("partitions", agg.partitions as f64);
+            if let Some(p) = agg.perplexity {
+                row = row.set("perplexity", p);
+                final_perplexity = Some(p);
+            }
+            if let Some(&(bytes, evictions)) = self.ps_health.get(&iter) {
+                row = row
+                    .set("ps_resident_bytes", bytes as f64)
+                    .set("ps_dedup_evictions", evictions as f64);
+            }
+            report.push(row);
+        }
+        (report, final_perplexity)
+    }
+}

@@ -1,0 +1,42 @@
+//! Cluster runtime: a coordinator process plus remote worker processes
+//! for multi-process LightLDA (the driver/executor analog of the
+//! paper's Spark integration).
+//!
+//! PR 1 distributed the parameter-server *shards* across processes
+//! (`serve` / `--connect`); this module distributes the *samplers*. A
+//! deployment is three kinds of processes wired over the same
+//! tagged-frame TCP layer:
+//!
+//! ```text
+//!                        ┌─────────────┐  control plane
+//!          ┌────────────►│ coordinator │◄────────────┐
+//!          │ register/   │ (coordinate)│  poll/report│
+//!          │ heartbeat   └─────────────┘             │
+//!          ▼                                         ▼
+//!   ┌────────────┐                            ┌────────────┐
+//!   │  worker 0  │                            │  worker 1  │
+//!   │   (work)   │                            │   (work)   │
+//!   └─────┬──────┘                            └─────┬──────┘
+//!         │      pulls / pushes (data plane)        │
+//!         ▼                                         ▼
+//!   ┌────────────┐   ┌────────────┐   ┌────────────┐
+//!   │  shard 0   │   │  shard 1   │   │  shard …   │
+//!   │  (serve)   │   │  (serve)   │   │  (serve)   │
+//!   └────────────┘   └────────────┘   └────────────┘
+//! ```
+//!
+//! - [`protocol`] — the control-plane messages (register / assign /
+//!   run / report / heartbeat), codec-serialized like the data plane.
+//! - [`coordinator`] — partition assignment, the `Ready` barrier, the
+//!   bounded-staleness iteration gate, heartbeat liveness, and
+//!   epoch-rolling failure recovery over per-partition checkpoints.
+//! - [`worker`] — the remote executor driving the shared
+//!   [`crate::lda::sweep::SweepRunner`] kernel.
+
+pub mod coordinator;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{ClusterOutcome, Coordinator};
+pub use protocol::{CorpusSpec, JobSpec};
+pub use worker::{run_worker, WorkerOptions, WorkerSummary};

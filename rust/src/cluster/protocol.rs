@@ -1,0 +1,617 @@
+//! Control-plane wire messages between the cluster coordinator and its
+//! worker processes.
+//!
+//! The control plane is worker-driven, matching the request/reply shape
+//! of the tagged-frame TCP layer: workers *pull* their instructions
+//! ([`CtrlRequest::Poll`]) instead of the coordinator pushing them, so
+//! the coordinator stays a single-threaded actor over one inbox — the
+//! same serve-loop model as a parameter-server shard — and a worker
+//! behind a NAT or a slow link needs no listening socket of its own.
+//!
+//! Everything rides [`crate::util::codec`], like the data-plane
+//! messages in [`crate::ps::messages`], so message sizes are faithful
+//! and the two planes are wire-compatible with the same transports.
+
+use crate::ps::messages::Layout;
+use crate::ps::partition::PartitionScheme;
+use crate::util::codec::{Reader, Writer};
+use crate::util::error::{Error, Result};
+
+/// Where a worker should get the training corpus.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CorpusSpec {
+    /// Load from this path (shared storage or a per-machine copy).
+    File(String),
+    /// Regenerate the synthetic ClueWeb12 analogue deterministically
+    /// from these parameters ([`crate::corpus::synth::generate`]).
+    Synth {
+        /// Documents.
+        num_docs: u64,
+        /// Vocabulary size.
+        vocab_size: u32,
+        /// Generative topics.
+        num_topics: u32,
+        /// Average document length.
+        avg_doc_len: f64,
+        /// Zipf exponent of the word distribution.
+        zipf_exponent: f64,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// The worker was handed the corpus out-of-band (in-process workers
+    /// in tests and examples). A standalone `work` process receiving
+    /// this must have been given `--corpus` explicitly.
+    Provided,
+}
+
+/// The sampling/deployment knobs a worker needs to run its partition —
+/// the cluster projection of [`crate::lda::trainer::TrainConfig`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepKnobs {
+    /// Number of topics K.
+    pub num_topics: u32,
+    /// Document-topic concentration (resolved, not the `<= 0` sentinel).
+    pub alpha: f64,
+    /// Topic-word concentration.
+    pub beta: f64,
+    /// Metropolis–Hastings proposal cycles per token.
+    pub mh_steps: u32,
+    /// Words per pulled model block.
+    pub block_words: u64,
+    /// Sparse push-buffer flush threshold.
+    pub buffer_cap: u64,
+    /// Most-frequent words aggregated densely.
+    pub dense_top_words: u64,
+    /// Prefetch depth for model pulls.
+    pub pipeline_depth: u64,
+    /// Row partitioning scheme on the shards.
+    pub scheme: PartitionScheme,
+    /// Storage layout of the word-topic matrix.
+    pub wt_layout: Layout,
+    /// Cluster-wide RNG seed.
+    pub seed: u64,
+    /// Evaluate perplexity every N iterations (0 = never).
+    pub eval_every: u32,
+    /// Per-partition checkpoint directory (empty = checkpointing off).
+    pub checkpoint_dir: String,
+    /// Checkpoints retained per partition (0 keeps everything).
+    pub keep_checkpoints: u32,
+    /// Worker heartbeat period, milliseconds.
+    pub heartbeat_ms: u64,
+}
+
+/// A worker's marching orders: which partition of which corpus to
+/// sample, against which shards, into which count table. Reissued in
+/// full whenever the assignment changes (a new epoch after a failure, or
+/// a partition handed to a replacement worker).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// The coordinator-assigned worker id (echoed in every subsequent
+    /// request).
+    pub worker: u64,
+    /// Partition index within the run.
+    pub partition: u32,
+    /// First document (absolute corpus index) of the partition.
+    pub doc_start: u64,
+    /// One past the last document of the partition.
+    pub doc_end: u64,
+    /// Recovery epoch: bumped on every failure rollback. Each epoch has
+    /// its own count table on the parameter servers.
+    pub epoch: u32,
+    /// Matrix id of this epoch's word-topic table (attach with
+    /// [`crate::ps::client::PsClient::attach_matrix`]).
+    pub matrix_id: u32,
+    /// Total sweeps the run performs.
+    pub iterations: u32,
+    /// Parameter-server shard addresses, in shard order.
+    pub shard_addrs: Vec<String>,
+    /// Where the worker gets the corpus.
+    pub corpus: CorpusSpec,
+    /// Sampling and deployment knobs.
+    pub knobs: SweepKnobs,
+}
+
+/// Per-sweep counters a worker reports back, plus its log-likelihood
+/// contribution when the iteration was an evaluation point.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SweepReport {
+    /// Tokens resampled.
+    pub tokens: u64,
+    /// Topic reassignments.
+    pub changed: u64,
+    /// Sparse delta messages pushed.
+    pub sparse_batches: u64,
+    /// Wall-clock seconds of the sweep.
+    pub seconds: f64,
+    /// Whether `log_likelihood`/`ll_tokens` carry an evaluation.
+    pub evaluated: bool,
+    /// Partition log-likelihood (additive across partitions).
+    pub log_likelihood: f64,
+    /// Tokens the log-likelihood covers.
+    pub ll_tokens: u64,
+}
+
+/// Worker → coordinator requests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CtrlRequest {
+    /// Join the cluster. The reply is a [`CtrlResponse::Job`] when a
+    /// partition is free, [`CtrlResponse::Wait`] when the cluster is
+    /// fully staffed (retry later — a failure may free a partition), or
+    /// [`CtrlResponse::Done`] when training already finished.
+    Register {
+        /// Client-chosen idempotency token: a retried `Register` whose
+        /// original reply was lost re-receives the same assignment
+        /// instead of being seated as a second (ghost) worker.
+        token: u64,
+    },
+    /// The worker rebuilt its partition state for `epoch` (pushed its
+    /// counts into the epoch's table) and is resuming *after* completed
+    /// iteration `iteration` (0 = fresh start).
+    Ready {
+        /// Worker id from the [`JobSpec`].
+        worker: u64,
+        /// Epoch the worker rebuilt for.
+        epoch: u32,
+        /// Iteration its restored state corresponds to.
+        iteration: u32,
+    },
+    /// Ask for the next instruction.
+    Poll {
+        /// Worker id.
+        worker: u64,
+    },
+    /// One sweep finished (pushes flushed, checkpoint written).
+    Report {
+        /// Worker id.
+        worker: u64,
+        /// Epoch the sweep ran under.
+        epoch: u32,
+        /// Iteration completed.
+        iteration: u32,
+        /// Sweep counters (and evaluation, when scheduled).
+        stats: SweepReport,
+    },
+    /// Liveness signal, sent on a side thread during long sweeps.
+    Heartbeat {
+        /// Worker id.
+        worker: u64,
+    },
+    /// Graceful goodbye (after [`CtrlResponse::Done`]).
+    Leave {
+        /// Worker id.
+        worker: u64,
+    },
+}
+
+/// Coordinator → worker responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CtrlResponse {
+    /// A (re)assignment: rebuild partition state per this spec, then
+    /// send [`CtrlRequest::Ready`].
+    Job(Box<JobSpec>),
+    /// Run one sweep.
+    Run {
+        /// Iteration to run (1-based).
+        iteration: u32,
+        /// Whether to also evaluate the partition log-likelihood.
+        evaluate: bool,
+    },
+    /// Nothing to do yet (barrier, staleness bound, or full cluster);
+    /// poll again after roughly this long.
+    Wait {
+        /// Suggested back-off, milliseconds.
+        millis: u64,
+    },
+    /// Training is complete; send [`CtrlRequest::Leave`] and exit.
+    Done,
+    /// Acknowledged (reports, heartbeats, ready, leave).
+    Ack,
+    /// The coordinator rejected the request (e.g. an unknown worker id
+    /// after the worker was presumed dead — re-register to rejoin).
+    Error(String),
+}
+
+// --- encoding ----------------------------------------------------------
+
+const C_REGISTER: u8 = 1;
+const C_READY: u8 = 2;
+const C_POLL: u8 = 3;
+const C_REPORT: u8 = 4;
+const C_HEARTBEAT: u8 = 5;
+const C_LEAVE: u8 = 6;
+
+const R_JOB: u8 = 1;
+const R_RUN: u8 = 2;
+const R_WAIT: u8 = 3;
+const R_DONE: u8 = 4;
+const R_ACK: u8 = 5;
+const R_ERROR: u8 = 6;
+
+const CORPUS_FILE: u8 = 1;
+const CORPUS_SYNTH: u8 = 2;
+const CORPUS_PROVIDED: u8 = 3;
+
+impl CorpusSpec {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            CorpusSpec::File(path) => {
+                w.u8(CORPUS_FILE);
+                w.str(path);
+            }
+            CorpusSpec::Synth {
+                num_docs,
+                vocab_size,
+                num_topics,
+                avg_doc_len,
+                zipf_exponent,
+                seed,
+            } => {
+                w.u8(CORPUS_SYNTH);
+                w.u64(*num_docs);
+                w.u32(*vocab_size);
+                w.u32(*num_topics);
+                w.f64(*avg_doc_len);
+                w.f64(*zipf_exponent);
+                w.u64(*seed);
+            }
+            CorpusSpec::Provided => w.u8(CORPUS_PROVIDED),
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<CorpusSpec> {
+        match r.u8()? {
+            CORPUS_FILE => Ok(CorpusSpec::File(r.str()?)),
+            CORPUS_SYNTH => Ok(CorpusSpec::Synth {
+                num_docs: r.u64()?,
+                vocab_size: r.u32()?,
+                num_topics: r.u32()?,
+                avg_doc_len: r.f64()?,
+                zipf_exponent: r.f64()?,
+                seed: r.u64()?,
+            }),
+            CORPUS_PROVIDED => Ok(CorpusSpec::Provided),
+            t => Err(Error::Decode(format!("bad corpus spec tag {t}"))),
+        }
+    }
+}
+
+impl SweepKnobs {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.num_topics);
+        w.f64(self.alpha);
+        w.f64(self.beta);
+        w.u32(self.mh_steps);
+        w.u64(self.block_words);
+        w.u64(self.buffer_cap);
+        w.u64(self.dense_top_words);
+        w.u64(self.pipeline_depth);
+        w.u8(self.scheme.tag());
+        w.u8(self.wt_layout.tag());
+        w.u64(self.seed);
+        w.u32(self.eval_every);
+        w.str(&self.checkpoint_dir);
+        w.u32(self.keep_checkpoints);
+        w.u64(self.heartbeat_ms);
+    }
+
+    fn decode(r: &mut Reader) -> Result<SweepKnobs> {
+        Ok(SweepKnobs {
+            num_topics: r.u32()?,
+            alpha: r.f64()?,
+            beta: r.f64()?,
+            mh_steps: r.u32()?,
+            block_words: r.u64()?,
+            buffer_cap: r.u64()?,
+            dense_top_words: r.u64()?,
+            pipeline_depth: r.u64()?,
+            scheme: {
+                let t = r.u8()?;
+                PartitionScheme::from_tag(t)
+                    .ok_or_else(|| Error::Decode(format!("bad scheme tag {t}")))?
+            },
+            wt_layout: Layout::from_tag(r.u8()?)?,
+            seed: r.u64()?,
+            eval_every: r.u32()?,
+            checkpoint_dir: r.str()?,
+            keep_checkpoints: r.u32()?,
+            heartbeat_ms: r.u64()?,
+        })
+    }
+}
+
+impl JobSpec {
+    fn encode(&self, w: &mut Writer) {
+        w.u64(self.worker);
+        w.u32(self.partition);
+        w.u64(self.doc_start);
+        w.u64(self.doc_end);
+        w.u32(self.epoch);
+        w.u32(self.matrix_id);
+        w.u32(self.iterations);
+        w.usize(self.shard_addrs.len());
+        for addr in &self.shard_addrs {
+            w.str(addr);
+        }
+        self.corpus.encode(w);
+        self.knobs.encode(w);
+    }
+
+    fn decode(r: &mut Reader) -> Result<JobSpec> {
+        let worker = r.u64()?;
+        let partition = r.u32()?;
+        let doc_start = r.u64()?;
+        let doc_end = r.u64()?;
+        let epoch = r.u32()?;
+        let matrix_id = r.u32()?;
+        let iterations = r.u32()?;
+        let n = r.usize()?;
+        let mut shard_addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            shard_addrs.push(r.str()?);
+        }
+        Ok(JobSpec {
+            worker,
+            partition,
+            doc_start,
+            doc_end,
+            epoch,
+            matrix_id,
+            iterations,
+            shard_addrs,
+            corpus: CorpusSpec::decode(r)?,
+            knobs: SweepKnobs::decode(r)?,
+        })
+    }
+}
+
+impl SweepReport {
+    fn encode(&self, w: &mut Writer) {
+        w.u64(self.tokens);
+        w.u64(self.changed);
+        w.u64(self.sparse_batches);
+        w.f64(self.seconds);
+        w.u8(u8::from(self.evaluated));
+        w.f64(self.log_likelihood);
+        w.u64(self.ll_tokens);
+    }
+
+    fn decode(r: &mut Reader) -> Result<SweepReport> {
+        Ok(SweepReport {
+            tokens: r.u64()?,
+            changed: r.u64()?,
+            sparse_batches: r.u64()?,
+            seconds: r.f64()?,
+            evaluated: r.u8()? != 0,
+            log_likelihood: r.f64()?,
+            ll_tokens: r.u64()?,
+        })
+    }
+}
+
+impl CtrlRequest {
+    /// Serialize to wire bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            CtrlRequest::Register { token } => {
+                w.u8(C_REGISTER);
+                w.u64(*token);
+            }
+            CtrlRequest::Ready { worker, epoch, iteration } => {
+                w.u8(C_READY);
+                w.u64(*worker);
+                w.u32(*epoch);
+                w.u32(*iteration);
+            }
+            CtrlRequest::Poll { worker } => {
+                w.u8(C_POLL);
+                w.u64(*worker);
+            }
+            CtrlRequest::Report { worker, epoch, iteration, stats } => {
+                w.u8(C_REPORT);
+                w.u64(*worker);
+                w.u32(*epoch);
+                w.u32(*iteration);
+                stats.encode(&mut w);
+            }
+            CtrlRequest::Heartbeat { worker } => {
+                w.u8(C_HEARTBEAT);
+                w.u64(*worker);
+            }
+            CtrlRequest::Leave { worker } => {
+                w.u8(C_LEAVE);
+                w.u64(*worker);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Parse from wire bytes.
+    pub fn decode(bytes: &[u8]) -> Result<CtrlRequest> {
+        let mut r = Reader::new(bytes);
+        let req = match r.u8()? {
+            C_REGISTER => CtrlRequest::Register { token: r.u64()? },
+            C_READY => CtrlRequest::Ready {
+                worker: r.u64()?,
+                epoch: r.u32()?,
+                iteration: r.u32()?,
+            },
+            C_POLL => CtrlRequest::Poll { worker: r.u64()? },
+            C_REPORT => CtrlRequest::Report {
+                worker: r.u64()?,
+                epoch: r.u32()?,
+                iteration: r.u32()?,
+                stats: SweepReport::decode(&mut r)?,
+            },
+            C_HEARTBEAT => CtrlRequest::Heartbeat { worker: r.u64()? },
+            C_LEAVE => CtrlRequest::Leave { worker: r.u64()? },
+            t => return Err(Error::Decode(format!("bad control request tag {t}"))),
+        };
+        Ok(req)
+    }
+}
+
+impl CtrlResponse {
+    /// Serialize to wire bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            CtrlResponse::Job(spec) => {
+                w.u8(R_JOB);
+                spec.encode(&mut w);
+            }
+            CtrlResponse::Run { iteration, evaluate } => {
+                w.u8(R_RUN);
+                w.u32(*iteration);
+                w.u8(u8::from(*evaluate));
+            }
+            CtrlResponse::Wait { millis } => {
+                w.u8(R_WAIT);
+                w.u64(*millis);
+            }
+            CtrlResponse::Done => w.u8(R_DONE),
+            CtrlResponse::Ack => w.u8(R_ACK),
+            CtrlResponse::Error(msg) => {
+                w.u8(R_ERROR);
+                w.str(msg);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Parse from wire bytes.
+    pub fn decode(bytes: &[u8]) -> Result<CtrlResponse> {
+        let mut r = Reader::new(bytes);
+        let resp = match r.u8()? {
+            R_JOB => CtrlResponse::Job(Box::new(JobSpec::decode(&mut r)?)),
+            R_RUN => CtrlResponse::Run { iteration: r.u32()?, evaluate: r.u8()? != 0 },
+            R_WAIT => CtrlResponse::Wait { millis: r.u64()? },
+            R_DONE => CtrlResponse::Done,
+            R_ACK => CtrlResponse::Ack,
+            R_ERROR => CtrlResponse::Error(r.str()?),
+            t => return Err(Error::Decode(format!("bad control response tag {t}"))),
+        };
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knobs() -> SweepKnobs {
+        SweepKnobs {
+            num_topics: 20,
+            alpha: 2.5,
+            beta: 0.01,
+            mh_steps: 2,
+            block_words: 2048,
+            buffer_cap: 100_000,
+            dense_top_words: 2000,
+            pipeline_depth: 4,
+            scheme: PartitionScheme::Cyclic,
+            wt_layout: Layout::Sparse,
+            seed: 0x1da,
+            eval_every: 5,
+            checkpoint_dir: "/tmp/ckpt".into(),
+            keep_checkpoints: 3,
+            heartbeat_ms: 500,
+        }
+    }
+
+    fn job() -> JobSpec {
+        JobSpec {
+            worker: 7,
+            partition: 1,
+            doc_start: 1000,
+            doc_end: 2000,
+            epoch: 2,
+            matrix_id: 0xdead,
+            iterations: 50,
+            shard_addrs: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
+            corpus: CorpusSpec::File("corpus.bin".into()),
+            knobs: knobs(),
+        }
+    }
+
+    fn roundtrip_req(req: CtrlRequest) {
+        assert_eq!(CtrlRequest::decode(&req.encode()).unwrap(), req);
+    }
+
+    fn roundtrip_resp(resp: CtrlResponse) {
+        assert_eq!(CtrlResponse::decode(&resp.encode()).unwrap(), resp);
+    }
+
+    #[test]
+    fn roundtrip_all_request_variants() {
+        roundtrip_req(CtrlRequest::Register { token: 0xfeed_beef });
+        roundtrip_req(CtrlRequest::Ready { worker: 3, epoch: 1, iteration: 12 });
+        roundtrip_req(CtrlRequest::Poll { worker: u64::MAX });
+        roundtrip_req(CtrlRequest::Report {
+            worker: 3,
+            epoch: 0,
+            iteration: 9,
+            stats: SweepReport {
+                tokens: 120_000,
+                changed: 40_000,
+                sparse_batches: 12,
+                seconds: 1.75,
+                evaluated: true,
+                log_likelihood: -987654.25,
+                ll_tokens: 120_000,
+            },
+        });
+        roundtrip_req(CtrlRequest::Heartbeat { worker: 0 });
+        roundtrip_req(CtrlRequest::Leave { worker: 9 });
+    }
+
+    #[test]
+    fn roundtrip_all_response_variants() {
+        roundtrip_resp(CtrlResponse::Job(Box::new(job())));
+        roundtrip_resp(CtrlResponse::Run { iteration: 17, evaluate: false });
+        roundtrip_resp(CtrlResponse::Run { iteration: 20, evaluate: true });
+        roundtrip_resp(CtrlResponse::Wait { millis: 250 });
+        roundtrip_resp(CtrlResponse::Done);
+        roundtrip_resp(CtrlResponse::Ack);
+        roundtrip_resp(CtrlResponse::Error("no such worker".into()));
+    }
+
+    #[test]
+    fn roundtrip_corpus_specs() {
+        for corpus in [
+            CorpusSpec::File("/data/clueweb.bin".into()),
+            CorpusSpec::Synth {
+                num_docs: 1 << 20,
+                vocab_size: 100_000,
+                num_topics: 1000,
+                avg_doc_len: 380.5,
+                zipf_exponent: 1.07,
+                seed: 42,
+            },
+            CorpusSpec::Provided,
+        ] {
+            let mut spec = job();
+            spec.corpus = corpus;
+            roundtrip_resp(CtrlResponse::Job(Box::new(spec)));
+        }
+    }
+
+    #[test]
+    fn empty_checkpoint_dir_means_disabled() {
+        let mut k = knobs();
+        k.checkpoint_dir = String::new();
+        let mut spec = job();
+        spec.knobs = k;
+        roundtrip_resp(CtrlResponse::Job(Box::new(spec)));
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(CtrlRequest::decode(&[]).is_err());
+        assert!(CtrlRequest::decode(&[0xfe]).is_err());
+        assert!(CtrlResponse::decode(&[0xfe]).is_err());
+        // A truncated JobSpec payload must error, not panic.
+        let bytes = CtrlResponse::Job(Box::new(job())).encode();
+        assert!(CtrlResponse::decode(&bytes[..bytes.len() - 3]).is_err());
+    }
+}

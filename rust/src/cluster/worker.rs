@@ -1,0 +1,482 @@
+//! A remote cluster worker: joins a coordinator, receives a partition
+//! assignment, and drives the shared per-partition sweep
+//! ([`crate::lda::sweep::SweepRunner`]) against the parameter-server
+//! shards — the same kernel the in-process trainer's worker threads run,
+//! so the two deployment modes are numerically equivalent.
+//!
+//! Lifecycle (all worker-initiated; see [`crate::cluster::protocol`]):
+//!
+//! 1. `Register` → a [`JobSpec`]: partition range, epoch, matrix id,
+//!    shard addresses, corpus spec, knobs.
+//! 2. Rebuild partition state — from the partition's latest valid
+//!    checkpoint when one exists, else a fresh seeded random
+//!    initialization — push its counts into the epoch's table, `Ready`.
+//! 3. `Poll` → `Run`: pull the topic totals (server-side column sums),
+//!    sweep, flush, optionally evaluate, **checkpoint, then report**.
+//!    The checkpoint-before-report order is what makes the
+//!    coordinator's recovery arithmetic sound.
+//! 4. On `Job` replies (any time): a rollback happened — rebuild from
+//!    checkpoint under the new epoch and matrix id. On `Done`: `Leave`.
+//!
+//! A heartbeat thread pings the coordinator every
+//! [`crate::cluster::protocol::SweepKnobs::heartbeat_ms`] for the life
+//! of the process, so a long sweep or corpus load is never mistaken for
+//! a death.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::protocol::{CorpusSpec, CtrlRequest, CtrlResponse, JobSpec, SweepReport};
+use crate::corpus::dataset::Corpus;
+use crate::corpus::synth::{generate, SynthConfig};
+use crate::lda::checkpoint::{Checkpoint, PartitionCheckpoint};
+use crate::lda::hyper::LdaHyper;
+use crate::lda::sweep::{partition_rng, pull_full_model, SweepConfig, SweepRunner};
+use crate::net::tcp::{resolve_addrs, TcpTransport};
+use crate::net::{Endpoint, Transport};
+use crate::ps::client::{BigMatrix, PsClient};
+use crate::ps::config::{PsConfig, TransportMode};
+use crate::util::error::{Error, Result};
+use crate::util::timer::Stopwatch;
+use crate::{log_info, log_warn};
+
+/// Per-attempt control round-trip timeout.
+const CTRL_TIMEOUT: Duration = Duration::from_secs(2);
+/// Control-plane retries before giving the coordinator up for dead.
+const CTRL_RETRIES: u32 = 5;
+/// Ceiling on honored `Wait` back-off (the coordinator's suggestions
+/// are already small; this bounds a corrupt value).
+const MAX_WAIT: Duration = Duration::from_secs(2);
+
+/// How a worker process is launched.
+#[derive(Default)]
+pub struct WorkerOptions {
+    /// Coordinator control address (`host:port`).
+    pub join: String,
+    /// Pre-loaded corpus (in-process workers, or `work --corpus`); when
+    /// `None` the corpus comes from the job's [`CorpusSpec`].
+    pub corpus: Option<Corpus>,
+    /// Fault-injection hook for tests and demos: after *sweeping* this
+    /// iteration (pushes flushed, nothing checkpointed or reported —
+    /// i.e. mid-iteration from the control plane's view), the worker
+    /// vanishes without a goodbye, exactly like a crashed process.
+    pub crash_at_iteration: Option<u32>,
+}
+
+/// What a worker did before exiting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// Coordinator-assigned id (0 if the run was already over at
+    /// registration time).
+    pub worker_id: u64,
+    /// Sweeps completed (across epochs).
+    pub sweeps: u32,
+    /// True when the crash hook fired.
+    pub crashed: bool,
+}
+
+/// Retrying request/reply channel to the coordinator. Cloning shares
+/// the underlying multiplexed connection, so the heartbeat thread rides
+/// the same socket as the main loop.
+#[derive(Clone)]
+struct CtrlChannel {
+    ep: Endpoint,
+}
+
+impl CtrlChannel {
+    fn connect(addr: &str) -> Result<CtrlChannel> {
+        let resolved = resolve_addrs(&[addr.to_string()])?;
+        let transport = TcpTransport::connect(&resolved);
+        Ok(CtrlChannel { ep: transport.endpoint(0) })
+    }
+
+    fn call(&self, req: &CtrlRequest) -> Result<CtrlResponse> {
+        let payload = req.encode();
+        for attempt in 0..CTRL_RETRIES {
+            match self.ep.request(payload.clone(), CTRL_TIMEOUT) {
+                Ok(bytes) => return CtrlResponse::decode(&bytes),
+                Err(()) => {
+                    std::thread::sleep(Duration::from_millis(50 << attempt.min(4)));
+                }
+            }
+        }
+        Err(Error::PsTimeout { op: "control", shard: 0, attempts: CTRL_RETRIES })
+    }
+}
+
+/// Everything bound to one `JobSpec`: the PS connection, the epoch's
+/// count table, and the rebuilt partition state.
+struct ActiveJob {
+    /// Keeps the shard connections alive for `client`/`n_wk`.
+    _transport: Arc<dyn Transport>,
+    client: PsClient,
+    n_wk: BigMatrix<i64>,
+    runner: SweepRunner,
+    scfg: SweepConfig,
+    hyper: LdaHyper,
+    /// Iteration the restored state corresponds to (0 = fresh).
+    resumed: u32,
+}
+
+/// Load the corpus a job names (when the caller didn't supply one).
+pub fn load_corpus(spec: &CorpusSpec) -> Result<Corpus> {
+    match spec {
+        CorpusSpec::File(path) => {
+            log_info!("loading corpus from {path}");
+            Corpus::load(std::path::Path::new(path))
+        }
+        CorpusSpec::Synth {
+            num_docs,
+            vocab_size,
+            num_topics,
+            avg_doc_len,
+            zipf_exponent,
+            seed,
+        } => {
+            log_info!("generating synthetic corpus ({num_docs} docs, V={vocab_size})");
+            Ok(generate(&SynthConfig {
+                num_docs: *num_docs as usize,
+                vocab_size: *vocab_size,
+                num_topics: *num_topics as usize,
+                avg_doc_len: *avg_doc_len,
+                zipf_exponent: *zipf_exponent,
+                seed: *seed,
+                ..SynthConfig::default()
+            }))
+        }
+        CorpusSpec::Provided => Err(Error::Config(
+            "job says the corpus is provided out-of-band; pass --corpus to this worker".into(),
+        )),
+    }
+}
+
+/// Rebuild all state for `spec`: connect to the shards, attach the
+/// epoch's table, restore the partition (checkpoint or fresh), push its
+/// counts and flush.
+fn setup_job(spec: &JobSpec, corpus: &Corpus) -> Result<ActiveJob> {
+    let knobs = &spec.knobs;
+    let hyper = LdaHyper { alpha: knobs.alpha, beta: knobs.beta };
+    hyper.validate()?;
+    let (start, end) = (spec.doc_start as usize, spec.doc_end as usize);
+    if start > end || end > corpus.num_docs() {
+        return Err(Error::Config(format!(
+            "partition {}..{} exceeds the {}-doc corpus (wrong corpus?)",
+            start,
+            end,
+            corpus.num_docs()
+        )));
+    }
+
+    let resolved = resolve_addrs(&spec.shard_addrs)?;
+    let ps_cfg = PsConfig::deployment(
+        resolved.len(),
+        knobs.scheme,
+        TransportMode::Connect(spec.shard_addrs.clone()),
+        knobs.pipeline_depth as usize,
+    );
+    let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
+    let client = PsClient::connect(&*transport, ps_cfg);
+    client.validate_deployment()?;
+    let n_wk: BigMatrix<i64> = client.attach_matrix(
+        spec.matrix_id,
+        corpus.vocab_size as u64,
+        knobs.num_topics,
+        knobs.wt_layout,
+    )?;
+
+    let scfg = SweepConfig {
+        num_topics: knobs.num_topics,
+        mh_steps: knobs.mh_steps,
+        block_words: knobs.block_words as usize,
+        buffer_cap: knobs.buffer_cap as usize,
+        dense_top_words: knobs.dense_top_words,
+        pipeline_depth: knobs.pipeline_depth as usize,
+        hyper,
+        vocab_size: corpus.vocab_size,
+    };
+
+    // Epoch 0's fresh initialization uses the bare cluster seed, so it
+    // is the exact stream the in-process trainer would hand partition
+    // `p`; later epochs and checkpoint resumes mix in distinguishers
+    // (mirroring Trainer::restore's `^ 0xc4`) so no epoch replays
+    // another's proposals.
+    let epoch_salt = (spec.epoch as u64) << 32;
+    let range = start..end;
+    let (runner, resumed) = match load_partition_checkpoint(spec, corpus) {
+        Some(ckpt) => {
+            let rng = partition_rng(
+                knobs.seed ^ 0xc4 ^ epoch_salt,
+                spec.partition as usize,
+                spec.doc_start,
+            );
+            let iteration = ckpt.inner.iteration;
+            let assignments = std::cell::RefCell::new(ckpt.inner.assignments);
+            let next = std::cell::Cell::new(0usize);
+            let runner = SweepRunner::build(corpus, range, rng, |_, _| {
+                let i = next.get();
+                next.set(i + 1);
+                assignments.borrow_mut()[i].clone()
+            });
+            log_info!(
+                "partition {} restored from checkpoint at iteration {iteration}",
+                spec.partition
+            );
+            (runner, iteration)
+        }
+        None => {
+            let rng = partition_rng(
+                knobs.seed ^ epoch_salt,
+                spec.partition as usize,
+                spec.doc_start,
+            );
+            let k = knobs.num_topics;
+            (SweepRunner::build_random(corpus, range, k, rng), 0)
+        }
+    };
+
+    runner.push_counts(&scfg, &n_wk);
+    client.flush()?;
+    Ok(ActiveJob { _transport: transport, client, n_wk, runner, scfg, hyper, resumed })
+}
+
+/// The partition's latest valid checkpoint, if checkpointing is on and
+/// a compatible one exists. Shape mismatches (different corpus, topic
+/// count, or partition bounds) are treated as "no checkpoint" — a fresh
+/// start is always a safe recovery.
+fn load_partition_checkpoint(spec: &JobSpec, corpus: &Corpus) -> Option<PartitionCheckpoint> {
+    if spec.knobs.checkpoint_dir.is_empty() {
+        return None;
+    }
+    let dir = std::path::Path::new(&spec.knobs.checkpoint_dir);
+    let ckpt = match PartitionCheckpoint::load_latest(dir, spec.partition) {
+        Ok(found) => found?,
+        Err(e) => {
+            log_warn!("cannot scan checkpoints in {dir:?}: {e}");
+            return None;
+        }
+    };
+    let (start, end) = (spec.doc_start as usize, spec.doc_end as usize);
+    if ckpt.doc_start != spec.doc_start
+        || ckpt.inner.num_topics != spec.knobs.num_topics
+        || ckpt.inner.assignments.len() != end - start
+    {
+        log_warn!(
+            "partition {} checkpoint does not match the assignment (doc_start {} vs {}, \
+             K {} vs {}, {} docs vs {}); starting fresh",
+            spec.partition,
+            ckpt.doc_start,
+            spec.doc_start,
+            ckpt.inner.num_topics,
+            spec.knobs.num_topics,
+            ckpt.inner.assignments.len(),
+            end - start
+        );
+        return None;
+    }
+    for (i, doc) in corpus.docs[start..end].iter().enumerate() {
+        if ckpt.inner.assignments[i].len() != doc.tokens.len() {
+            log_warn!(
+                "partition {} checkpoint doc {i} length mismatch; starting fresh",
+                spec.partition
+            );
+            return None;
+        }
+    }
+    Some(ckpt)
+}
+
+/// Join the coordinator at `opts.join` and work until the run
+/// completes (or the crash hook fires). Blocks for the life of the
+/// membership.
+pub fn run_worker(opts: WorkerOptions) -> Result<WorkerSummary> {
+    let ctrl = CtrlChannel::connect(&opts.join)?;
+    // Idempotency token for registration: entropy-seeded like the PS
+    // client's matrix ids, so a retried Register (lost reply) re-reads
+    // its assignment instead of being seated twice.
+    let token = {
+        let now = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default();
+        (now.as_nanos() as u64) ^ ((std::process::id() as u64) << 32)
+    };
+    // Register, waiting out a fully staffed cluster (a failure may free
+    // a partition for us at any time).
+    let mut spec: JobSpec = loop {
+        match ctrl.call(&CtrlRequest::Register { token })? {
+            CtrlResponse::Job(spec) => break *spec,
+            CtrlResponse::Wait { millis } => {
+                std::thread::sleep(Duration::from_millis(millis).min(MAX_WAIT));
+            }
+            CtrlResponse::Done => {
+                log_info!("training already complete; nothing to do");
+                return Ok(WorkerSummary { worker_id: 0, sweeps: 0, crashed: false });
+            }
+            CtrlResponse::Error(e) => return Err(Error::Config(e)),
+            other => {
+                return Err(Error::Decode(format!("unexpected register reply {other:?}")))
+            }
+        }
+    };
+    let worker_id = spec.worker;
+    log_info!(
+        "joined as worker {worker_id}: partition {} (docs {}..{}), epoch {}",
+        spec.partition,
+        spec.doc_start,
+        spec.doc_end,
+        spec.epoch
+    );
+
+    // Heartbeats start before the (possibly slow) corpus load so the
+    // coordinator never mistakes setup time for death.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let ctrl = ctrl.clone();
+        let stop = Arc::clone(&stop);
+        let period = Duration::from_millis(spec.knobs.heartbeat_ms.max(10));
+        std::thread::Builder::new()
+            .name("glint-worker-heartbeat".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let _ = ctrl.call(&CtrlRequest::Heartbeat { worker: worker_id });
+                    std::thread::sleep(period);
+                }
+            })
+            .expect("spawn heartbeat thread")
+    };
+
+    // Every exit path below must stop the heartbeat thread — a leaked
+    // heartbeat would keep a failed worker "alive" forever and wedge
+    // the Ready barrier.
+    let result = match &opts.corpus {
+        Some(c) => drive(&ctrl, spec, c, &opts, worker_id),
+        None => match load_corpus(&spec.corpus) {
+            Ok(c) => drive(&ctrl, spec, &c, &opts, worker_id),
+            Err(e) => Err(e),
+        },
+    };
+    stop.store(true, Ordering::SeqCst);
+    let _ = hb.join();
+    result
+}
+
+/// The worker's main loop: rebuild per job spec, then poll/sweep/report
+/// until done (or crashed, or re-specced into a new epoch).
+fn drive(
+    ctrl: &CtrlChannel,
+    mut spec: JobSpec,
+    corpus: &Corpus,
+    opts: &WorkerOptions,
+    worker_id: u64,
+) -> Result<WorkerSummary> {
+    let mut sweeps = 0u32;
+    'job: loop {
+        let mut job = setup_job(&spec, corpus)?;
+        match ctrl.call(&CtrlRequest::Ready {
+            worker: worker_id,
+            epoch: spec.epoch,
+            iteration: job.resumed,
+        })? {
+            CtrlResponse::Ack => {}
+            CtrlResponse::Job(new) => {
+                spec = *new;
+                continue 'job;
+            }
+            CtrlResponse::Done => break 'job,
+            other => return Err(Error::Decode(format!("unexpected ready reply {other:?}"))),
+        }
+
+        loop {
+            match ctrl.call(&CtrlRequest::Poll { worker: worker_id })? {
+                CtrlResponse::Run { iteration, evaluate } => {
+                    let sw = Stopwatch::new();
+                    let nk = job.n_wk.pull_col_sums()?;
+                    let stats = job.runner.sweep(&job.scfg, nk, &job.n_wk)?;
+                    // The flush barrier: every push of this sweep has
+                    // landed (exactly-once) before we evaluate,
+                    // checkpoint or report.
+                    job.client.flush()?;
+                    sweeps += 1;
+                    if opts.crash_at_iteration.is_some_and(|at| iteration >= at) {
+                        log_warn!(
+                            "worker {worker_id}: simulated crash mid-iteration {iteration}"
+                        );
+                        return Ok(WorkerSummary { worker_id, sweeps, crashed: true });
+                    }
+                    let mut report = SweepReport {
+                        tokens: stats.tokens,
+                        changed: stats.changed,
+                        sparse_batches: stats.sparse_batches,
+                        seconds: sw.secs(),
+                        ..SweepReport::default()
+                    };
+                    if evaluate {
+                        let model = pull_full_model(
+                            &job.n_wk,
+                            corpus.vocab_size,
+                            job.scfg.pipeline_depth,
+                            job.hyper,
+                        )?;
+                        let (ll, n) = job.runner.log_likelihood(&model, corpus);
+                        report.evaluated = true;
+                        report.log_likelihood = ll;
+                        report.ll_tokens = n;
+                    }
+                    if !spec.knobs.checkpoint_dir.is_empty() {
+                        let ckpt = PartitionCheckpoint {
+                            partition: spec.partition,
+                            doc_start: spec.doc_start,
+                            inner: Checkpoint {
+                                iteration,
+                                num_topics: spec.knobs.num_topics,
+                                assignments: job.runner.assignments().to_vec(),
+                            },
+                        };
+                        ckpt.save(
+                            std::path::Path::new(&spec.knobs.checkpoint_dir),
+                            spec.knobs.keep_checkpoints as usize,
+                        )?;
+                    }
+                    match ctrl.call(&CtrlRequest::Report {
+                        worker: worker_id,
+                        epoch: spec.epoch,
+                        iteration,
+                        stats: report,
+                    })? {
+                        CtrlResponse::Ack => {}
+                        CtrlResponse::Job(new) => {
+                            spec = *new;
+                            continue 'job;
+                        }
+                        CtrlResponse::Done => break 'job,
+                        other => {
+                            return Err(Error::Decode(format!(
+                                "unexpected report reply {other:?}"
+                            )))
+                        }
+                    }
+                }
+                CtrlResponse::Wait { millis } => {
+                    std::thread::sleep(Duration::from_millis(millis).min(MAX_WAIT));
+                }
+                CtrlResponse::Job(new) => {
+                    spec = *new;
+                    continue 'job;
+                }
+                CtrlResponse::Done => break 'job,
+                CtrlResponse::Error(e) => {
+                    // Typically "unknown worker": we were presumed dead
+                    // (e.g. a long stall). Our partition may already be
+                    // reassigned; restart the process to rejoin cleanly.
+                    return Err(Error::Config(format!("evicted by coordinator: {e}")));
+                }
+                CtrlResponse::Ack => {
+                    return Err(Error::Decode("unexpected bare ack to poll".into()))
+                }
+            }
+        }
+    }
+    let _ = ctrl.call(&CtrlRequest::Leave { worker: worker_id });
+    log_info!("worker {worker_id} done after {sweeps} sweeps");
+    Ok(WorkerSummary { worker_id, sweeps, crashed: false })
+}

@@ -78,14 +78,26 @@ fn theta_of(counts: &DocTopicCounts, total: u64, k: u32, hyper: &LdaHyper, k_top
     (counts.get(k) as f64 + hyper.alpha) / (total as f64 + k_topics as f64 * hyper.alpha)
 }
 
-/// Log-likelihood of `docs` given the model and per-document topic
-/// counts; returns `(total_log_lik, token_count)`.
+/// Log-likelihood of a whole corpus given the model and per-document
+/// topic counts; returns `(total_log_lik, token_count)`.
 pub fn log_likelihood(
     model: &TopicModel,
     corpus: &Corpus,
     doc_counts: &[DocTopicCounts],
 ) -> (f64, u64) {
-    assert_eq!(corpus.docs.len(), doc_counts.len());
+    log_likelihood_docs(model, &corpus.docs, doc_counts)
+}
+
+/// Log-likelihood of a document slice (e.g. one cluster partition's
+/// docs) given the model and that slice's topic counts; returns
+/// `(total_log_lik, token_count)`. Contributions are additive, so
+/// partition results can be summed into the corpus total.
+pub fn log_likelihood_docs(
+    model: &TopicModel,
+    docs: &[crate::corpus::dataset::Document],
+    doc_counts: &[DocTopicCounts],
+) -> (f64, u64) {
+    assert_eq!(docs.len(), doc_counts.len());
     let mut total = 0.0;
     let mut tokens = 0u64;
     let kk = model.k;
@@ -94,7 +106,7 @@ pub fn log_likelihood(
     let inv_nk: Vec<f64> =
         model.n_k.iter().map(|&n| 1.0 / (n as f64 + vbeta)).collect();
     let mut theta = vec![0.0f64; kk as usize];
-    for (doc, counts) in corpus.docs.iter().zip(doc_counts) {
+    for (doc, counts) in docs.iter().zip(doc_counts) {
         let ctotal = counts.total();
         for k in 0..kk {
             theta[k as usize] = theta_of(counts, ctotal, k, &model.hyper, kk);

@@ -5,9 +5,24 @@
 //! iteration to durable storage; on failure the most recent checkpoint is
 //! loaded and the count tables are **rebuilt** on (fresh) parameter
 //! servers from the assignments, after which training continues.
+//!
+//! Two granularities share the same binary format:
+//!
+//! - whole-corpus [`Checkpoint`]s, written by the single-process
+//!   [`crate::lda::trainer::Trainer`];
+//! - per-partition [`PartitionCheckpoint`]s, written by cluster workers
+//!   ([`crate::cluster::worker`]) so a lost partition can be rebuilt on
+//!   a replacement worker without touching the other partitions.
+//!
+//! Loading is corruption-tolerant: a truncated or garbled newest file is
+//! skipped (with a warning) and the next-newest valid checkpoint is used
+//! instead, so one bad write never makes a whole run unrecoverable.
+//! Retention pruning ([`prune_checkpoints`]) keeps long runs from
+//! accumulating unbounded snapshots.
 
 use std::path::{Path, PathBuf};
 
+use crate::log_warn;
 use crate::util::codec::{Reader, Writer};
 use crate::util::error::{Error, Result};
 
@@ -93,29 +108,174 @@ impl Checkpoint {
     }
 
     /// Find and load the latest checkpoint in `dir`, if any.
+    ///
+    /// Corruption-tolerant: a newest file that fails to read or decode
+    /// (truncated write, bad disk) is skipped with a warning and the
+    /// next-newest valid checkpoint is returned instead. `Ok(None)` only
+    /// when no candidate file decodes.
     pub fn load_latest(dir: &Path) -> Result<Option<Checkpoint>> {
-        if !dir.exists() {
-            return Ok(None);
-        }
-        let mut best: Option<(u32, PathBuf)> = None;
-        for entry in std::fs::read_dir(dir)? {
-            let entry = entry?;
-            let name = entry.file_name();
-            let name = name.to_string_lossy();
-            if let Some(num) = name
-                .strip_prefix("checkpoint-")
-                .and_then(|s| s.strip_suffix(".bin"))
-                .and_then(|s| s.parse::<u32>().ok())
-            {
-                if best.as_ref().map(|(b, _)| num > *b).unwrap_or(true) {
-                    best = Some((num, entry.path()));
+        let mut found = list_checkpoints(dir, "checkpoint-")?;
+        // Newest first: fall back down the list past corrupt files.
+        found.sort_by(|a, b| b.0.cmp(&a.0));
+        for (iter, path) in found {
+            match Checkpoint::load(&path) {
+                Ok(ckpt) => return Ok(Some(ckpt)),
+                Err(e) => {
+                    log_warn!(
+                        "checkpoint {path:?} (iteration {iter}) is unreadable ({e}); \
+                         falling back to the next-newest"
+                    );
                 }
             }
         }
-        match best {
-            Some((_, path)) => Ok(Some(Checkpoint::load(&path)?)),
-            None => Ok(None),
+        Ok(None)
+    }
+
+    /// Delete all but the newest `keep` whole-corpus checkpoints in
+    /// `dir`. `keep == 0` disables pruning.
+    pub fn prune(dir: &Path, keep: usize) -> Result<()> {
+        prune_checkpoints(dir, "checkpoint-", keep)
+    }
+}
+
+/// Enumerate `{prefix}{number}.bin` files in `dir` as `(number, path)`
+/// pairs, in no particular order. Missing dir is an empty list.
+fn list_checkpoints(dir: &Path, prefix: &str) -> Result<Vec<(u32, PathBuf)>> {
+    if !dir.exists() {
+        return Ok(Vec::new());
+    }
+    let mut found = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(num) = name
+            .strip_prefix(prefix)
+            .and_then(|s| s.strip_suffix(".bin"))
+            .and_then(|s| s.parse::<u32>().ok())
+        {
+            found.push((num, entry.path()));
         }
+    }
+    Ok(found)
+}
+
+/// Retention pruning shared by both granularities: keep the newest
+/// `keep` files matching `{prefix}{number}.bin`, delete the rest.
+/// Best-effort per file (a checkpoint that cannot be deleted is only
+/// warned about); `keep == 0` disables pruning.
+pub fn prune_checkpoints(dir: &Path, prefix: &str, keep: usize) -> Result<()> {
+    if keep == 0 {
+        return Ok(());
+    }
+    let mut found = list_checkpoints(dir, prefix)?;
+    if found.len() <= keep {
+        return Ok(());
+    }
+    found.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, path) in found.into_iter().skip(keep) {
+        if let Err(e) = std::fs::remove_file(&path) {
+            log_warn!("could not prune checkpoint {path:?}: {e}");
+        }
+    }
+    Ok(())
+}
+
+/// One corpus partition's checkpoint, written by a cluster worker: the
+/// partition id and its absolute document range pin which slice of the
+/// corpus the assignments belong to, so a replacement worker can verify
+/// it is rebuilding the right slice (paper §3.5, per-partition form).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionCheckpoint {
+    /// Partition index within the cluster run.
+    pub partition: u32,
+    /// First document (absolute corpus index) of the partition.
+    pub doc_start: u64,
+    /// Assignments and iteration counter for this partition's docs.
+    pub inner: Checkpoint,
+}
+
+const PART_MAGIC: u32 = 0x474c_5050; // "GLPP"
+
+impl PartitionCheckpoint {
+    /// Serialize.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(PART_MAGIC);
+        w.u32(self.partition);
+        w.u64(self.doc_start);
+        w.bytes(&self.inner.encode());
+        w.into_bytes()
+    }
+
+    /// Deserialize and validate.
+    pub fn decode(bytes: &[u8]) -> Result<PartitionCheckpoint> {
+        let mut r = Reader::new(bytes);
+        if r.u32()? != PART_MAGIC {
+            return Err(Error::Checkpoint("bad magic (not a partition checkpoint)".into()));
+        }
+        let partition = r.u32()?;
+        let doc_start = r.u64()?;
+        let inner = Checkpoint::decode(&r.bytes()?)?;
+        Ok(PartitionCheckpoint { partition, doc_start, inner })
+    }
+
+    /// File-name prefix for partition `p` (the iteration number and
+    /// `.bin` suffix follow).
+    pub fn prefix(partition: u32) -> String {
+        format!("part-{partition:04}-")
+    }
+
+    /// Path of partition `p`'s checkpoint file for `iteration`.
+    pub fn path_for(dir: &Path, partition: u32, iteration: u32) -> PathBuf {
+        dir.join(format!("{}{iteration:06}.bin", Self::prefix(partition)))
+    }
+
+    /// Write atomically (temp + rename), then prune this partition's
+    /// files down to the newest `keep` (0 disables pruning).
+    pub fn save(&self, dir: &Path, keep: usize) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let final_path = Self::path_for(dir, self.partition, self.inner.iteration);
+        let tmp = dir.join(format!(
+            ".part-{:04}-{:06}.tmp",
+            self.partition, self.inner.iteration
+        ));
+        std::fs::write(&tmp, self.encode())?;
+        std::fs::rename(&tmp, &final_path)?;
+        prune_checkpoints(dir, &Self::prefix(self.partition), keep)?;
+        Ok(final_path)
+    }
+
+    /// Load a specific partition checkpoint file.
+    pub fn load(path: &Path) -> Result<PartitionCheckpoint> {
+        let bytes = std::fs::read(path)?;
+        PartitionCheckpoint::decode(&bytes)
+    }
+
+    /// Latest valid checkpoint for `partition` in `dir`, skipping
+    /// corrupt files like [`Checkpoint::load_latest`].
+    pub fn load_latest(dir: &Path, partition: u32) -> Result<Option<PartitionCheckpoint>> {
+        let mut found = list_checkpoints(dir, &Self::prefix(partition))?;
+        found.sort_by(|a, b| b.0.cmp(&a.0));
+        for (iter, path) in found {
+            match PartitionCheckpoint::load(&path) {
+                Ok(ckpt) if ckpt.partition == partition => return Ok(Some(ckpt)),
+                Ok(ckpt) => {
+                    log_warn!(
+                        "checkpoint {path:?} claims partition {} (expected {partition}); \
+                         skipping",
+                        ckpt.partition
+                    );
+                }
+                Err(e) => {
+                    log_warn!(
+                        "partition checkpoint {path:?} (iteration {iter}) is unreadable \
+                         ({e}); falling back to the next-newest"
+                    );
+                }
+            }
+        }
+        Ok(None)
     }
 }
 
@@ -176,6 +336,103 @@ mod tests {
         assert!(Checkpoint::load_latest(&dir).unwrap().is_none());
         std::fs::create_dir_all(&dir).unwrap();
         assert!(Checkpoint::load_latest(&dir).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous() {
+        let dir = tmpdir("corrupt");
+        let mut c = sample();
+        c.iteration = 1;
+        c.save(&dir).unwrap();
+        c.iteration = 2;
+        c.save(&dir).unwrap();
+        // Truncate the newest file mid-payload: recovery must fall back
+        // to iteration 1, not fail outright.
+        let newest = Checkpoint::path_for(&dir, 2);
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+        let latest = Checkpoint::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.iteration, 1);
+        // Garbage-only dir still reports "nothing usable".
+        std::fs::write(Checkpoint::path_for(&dir, 1), b"junk").unwrap();
+        std::fs::remove_file(&newest).unwrap();
+        assert!(Checkpoint::load_latest(&dir).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_prunes_oldest() {
+        let dir = tmpdir("prune");
+        let mut c = sample();
+        for i in 1..=5 {
+            c.iteration = i;
+            c.save(&dir).unwrap();
+        }
+        Checkpoint::prune(&dir, 3).unwrap();
+        assert!(!Checkpoint::path_for(&dir, 1).exists());
+        assert!(!Checkpoint::path_for(&dir, 2).exists());
+        for i in 3..=5 {
+            assert!(Checkpoint::path_for(&dir, i).exists(), "iteration {i} kept");
+        }
+        // keep = 0 disables pruning.
+        Checkpoint::prune(&dir, 0).unwrap();
+        assert!(Checkpoint::path_for(&dir, 3).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partition_checkpoint_roundtrip_and_isolation() {
+        let dir = tmpdir("part");
+        let a = PartitionCheckpoint {
+            partition: 0,
+            doc_start: 0,
+            inner: Checkpoint {
+                iteration: 3,
+                num_topics: 10,
+                assignments: vec![vec![1, 2], vec![0]],
+            },
+        };
+        let b = PartitionCheckpoint {
+            partition: 1,
+            doc_start: 2,
+            inner: Checkpoint { iteration: 4, num_topics: 10, assignments: vec![vec![9]] },
+        };
+        assert_eq!(PartitionCheckpoint::decode(&a.encode()).unwrap(), a);
+        a.save(&dir, 0).unwrap();
+        b.save(&dir, 0).unwrap();
+        // Each partition only sees its own files.
+        let la = PartitionCheckpoint::load_latest(&dir, 0).unwrap().unwrap();
+        let lb = PartitionCheckpoint::load_latest(&dir, 1).unwrap().unwrap();
+        assert_eq!(la, a);
+        assert_eq!(lb, b);
+        assert!(PartitionCheckpoint::load_latest(&dir, 7).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partition_save_applies_retention() {
+        let dir = tmpdir("part_keep");
+        let mut p = PartitionCheckpoint {
+            partition: 2,
+            doc_start: 5,
+            inner: Checkpoint { iteration: 0, num_topics: 4, assignments: vec![vec![0]] },
+        };
+        for i in 1..=6 {
+            p.inner.iteration = i;
+            p.save(&dir, 3).unwrap();
+        }
+        for i in 1..=3 {
+            assert!(!PartitionCheckpoint::path_for(&dir, 2, i).exists());
+        }
+        for i in 4..=6 {
+            assert!(PartitionCheckpoint::path_for(&dir, 2, i).exists());
+        }
+        // A corrupt newest partition file falls back too.
+        let newest = PartitionCheckpoint::path_for(&dir, 2, 6);
+        std::fs::write(&newest, b"bad").unwrap();
+        let latest = PartitionCheckpoint::load_latest(&dir, 2).unwrap().unwrap();
+        assert_eq!(latest.inner.iteration, 5);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -13,7 +13,11 @@
 //! each followed by its exact acceptance probability, so the chain's
 //! stationary distribution is the true collapsed Gibbs posterior.
 //!
-//! The sampler runs data-parallel over corpus partitions ([`trainer`]);
+//! The sampler runs data-parallel over corpus partitions: the
+//! per-partition pass lives in [`sweep`] ([`sweep::SweepRunner`]) and is
+//! driven either by in-process worker threads ([`trainer`]) or by remote
+//! worker processes ([`crate::cluster`]) — one code path, two
+//! deployment modes;
 //! the shared state — the word-topic matrix `n_wk`, stored sparsely on
 //! the shards by default — lives on the parameter server, and the topic
 //! vector `n_k` is derived from it server-side (column sums) rather
@@ -35,6 +39,7 @@ pub mod hyper;
 pub mod lightlda;
 pub mod pipeline;
 pub mod sparse_counts;
+pub mod sweep;
 pub mod trainer;
 
 pub use hyper::LdaHyper;

@@ -1,0 +1,387 @@
+//! The per-partition sweep: one executor's full pass over its corpus
+//! slice (paper §3.1–§3.4), shared by the in-process trainer and the
+//! cluster worker.
+//!
+//! [`SweepRunner`] owns exactly one partition's sampler state — topic
+//! assignments, doc-topic counts, the word → occurrence inverted index —
+//! and knows how to (a) push the counts implied by its assignments to
+//! the parameter server and (b) run one LightLDA sweep against a
+//! [`BigMatrix`] through the prefetching [`PullPipeline`], streaming
+//! updates out through the [`UpdateBuffer`] as fire-and-forget push
+//! tickets. [`crate::lda::trainer::Trainer`] drives one runner per
+//! worker thread inside a single process; [`crate::cluster::worker`]
+//! drives a single runner in a remote process. Keeping this the *same
+//! code path* is what makes the two deployment modes numerically
+//! equivalent.
+
+use std::ops::Range;
+
+use crate::corpus::dataset::{Corpus, Document};
+use crate::eval::perplexity::{log_likelihood_docs, TopicModel};
+use crate::lda::buffer::UpdateBuffer;
+use crate::lda::hyper::LdaHyper;
+use crate::lda::lightlda::{resample_token, word_alias, TokenView};
+use crate::lda::pipeline::{word_blocks, PullMode, PullPipeline};
+use crate::lda::sparse_counts::DocTopicCounts;
+use crate::ps::client::BigMatrix;
+use crate::ps::messages::Layout;
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+
+/// The sampling knobs a sweep needs, extracted from
+/// [`crate::lda::trainer::TrainConfig`] (or a cluster
+/// [`crate::cluster::protocol::JobSpec`]) so the kernel itself never
+/// depends on how the run was deployed.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Number of topics K.
+    pub num_topics: u32,
+    /// Metropolis–Hastings proposal cycles per token.
+    pub mh_steps: u32,
+    /// Words per pulled model block (§3.4).
+    pub block_words: usize,
+    /// Sparse push-buffer flush threshold (§3.3).
+    pub buffer_cap: usize,
+    /// Most-frequent words aggregated densely (§3.3).
+    pub dense_top_words: u64,
+    /// Prefetch depth for model pulls (0 = synchronous).
+    pub pipeline_depth: usize,
+    /// Resolved hyper-parameters.
+    pub hyper: LdaHyper,
+    /// Vocabulary size V.
+    pub vocab_size: u32,
+}
+
+/// Counters published by one sweep (or one training iteration when
+/// aggregated over partitions).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterStats {
+    /// Tokens resampled.
+    pub tokens: u64,
+    /// Topic reassignments (z changed).
+    pub changed: u64,
+    /// Sparse delta messages pushed.
+    pub sparse_batches: u64,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+}
+
+/// The deterministic per-partition RNG: partition `p` gets the `p`-th
+/// fork of a parent generator seeded with `seed`, salted with the
+/// partition's first document index.
+///
+/// [`Pcg64::fork`] advances the parent stream once per call, so the
+/// remote worker for partition `p` can reconstruct *exactly* the stream
+/// the in-process trainer would have handed its `p`-th worker thread
+/// without knowing the other partitions' ranges.
+pub fn partition_rng(seed: u64, partition: usize, doc_start: u64) -> Pcg64 {
+    let mut parent = Pcg64::new(seed);
+    for _ in 0..partition {
+        parent.next_u64();
+    }
+    parent.fork(doc_start)
+}
+
+/// Single source of truth for how a storage layout is pulled.
+pub fn pull_mode_for(layout: Layout) -> PullMode {
+    match layout {
+        Layout::Sparse => PullMode::Sparse,
+        Layout::Dense => PullMode::Dense,
+    }
+}
+
+/// Pull the full `v x k` model (plus the derived topic totals) off the
+/// parameter server, in 8192-row chunks through the same bounded
+/// prefetch pipeline the sampler uses (§3.4): later chunks are in
+/// flight while earlier ones are copied out, and `depth == 0` keeps the
+/// synchronous ablation truly synchronous. In sparse mode the Zipf tail
+/// crosses the wire as pairs, not slabs.
+pub fn pull_full_model(
+    n_wk: &BigMatrix<i64>,
+    vocab_size: u32,
+    depth: usize,
+    hyper: LdaHyper,
+) -> Result<TopicModel> {
+    let k = n_wk.cols() as usize;
+    let rows: Vec<u64> = (0..vocab_size as u64).collect();
+    let chunks: Vec<Vec<u64>> = rows.chunks(8192).map(|c| c.to_vec()).collect();
+    let mut pipeline = PullPipeline::start_with_mode(
+        n_wk.clone(),
+        chunks,
+        depth,
+        pull_mode_for(n_wk.layout()),
+    );
+    let mut values = Vec::with_capacity(vocab_size as usize * k);
+    while let Some(block) = pipeline.next_block() {
+        values.extend(block?.values);
+    }
+    let n_k = n_wk.pull_col_sums()?;
+    Ok(TopicModel { k: n_wk.cols(), v: vocab_size, n_wk: values, n_k, hyper })
+}
+
+/// One partition's sampler state (the executor's slice of the RDD).
+pub struct SweepRunner {
+    /// Document index range in the corpus (absolute).
+    doc_range: Range<usize>,
+    /// Topic assignments for the partition's docs.
+    assignments: Vec<Vec<u32>>,
+    /// Doc-topic counts for the partition's docs.
+    doc_counts: Vec<DocTopicCounts>,
+    /// Inverted index: word -> occurrences as (local doc idx, position),
+    /// grouped so all of a word's tokens are sampled while its alias
+    /// table is fresh.
+    occurrences: Vec<Vec<(u32, u32)>>,
+    /// Which words occur in this partition at all.
+    present: Vec<bool>,
+    /// Worker RNG.
+    rng: Pcg64,
+}
+
+impl SweepRunner {
+    /// Build the partition state for `doc_range` of `corpus`, calling
+    /// `init_doc` once per document (in range order) for its initial
+    /// assignment vector.
+    pub fn build(
+        corpus: &Corpus,
+        doc_range: Range<usize>,
+        mut rng: Pcg64,
+        mut init_doc: impl FnMut(&Document, &mut Pcg64) -> Vec<u32>,
+    ) -> SweepRunner {
+        let v = corpus.vocab_size as usize;
+        let mut assignments = Vec::with_capacity(doc_range.len());
+        let mut doc_counts = Vec::with_capacity(doc_range.len());
+        let mut occurrences: Vec<Vec<(u32, u32)>> = vec![Vec::new(); v];
+        let mut present = vec![false; v];
+        for (local, d) in doc_range.clone().enumerate() {
+            let doc = &corpus.docs[d];
+            let z = init_doc(doc, &mut rng);
+            debug_assert_eq!(z.len(), doc.tokens.len());
+            for (pos, &w) in doc.tokens.iter().enumerate() {
+                occurrences[w as usize].push((local as u32, pos as u32));
+                present[w as usize] = true;
+            }
+            doc_counts.push(DocTopicCounts::from_assignments(&z));
+            assignments.push(z);
+        }
+        SweepRunner { doc_range, assignments, doc_counts, occurrences, present, rng }
+    }
+
+    /// Fresh random initialization at iteration 0.
+    pub fn build_random(
+        corpus: &Corpus,
+        doc_range: Range<usize>,
+        num_topics: u32,
+        rng: Pcg64,
+    ) -> SweepRunner {
+        SweepRunner::build(corpus, doc_range, rng, |doc, rng| {
+            doc.tokens.iter().map(|_| rng.below(num_topics as usize) as u32).collect()
+        })
+    }
+
+    /// Document range (absolute corpus indices).
+    pub fn doc_range(&self) -> Range<usize> {
+        self.doc_range.clone()
+    }
+
+    /// Per-document topic assignments, in range order.
+    pub fn assignments(&self) -> &[Vec<u32>] {
+        &self.assignments
+    }
+
+    /// Per-document topic counts, in range order.
+    pub fn doc_counts(&self) -> &[DocTopicCounts] {
+        &self.doc_counts
+    }
+
+    /// Visit every `(word, topic)` pair implied by the current
+    /// assignments, grouped by word (the inverted-index order used for
+    /// count pushes and consistency checks).
+    pub fn for_each_word_topic(&self, mut f: impl FnMut(u64, u32)) {
+        for (w, occs) in self.occurrences.iter().enumerate() {
+            for &(local, pos) in occs {
+                f(w as u64, self.assignments[local as usize][pos as usize]);
+            }
+        }
+    }
+
+    /// Push the counts implied by this partition's current assignments
+    /// to the parameter server (buffered fire-and-forget tickets, the
+    /// same path as training updates). The caller owns the completion
+    /// barrier: call `flush()` on the client afterwards.
+    pub fn push_counts(&self, cfg: &SweepConfig, n_wk: &BigMatrix<i64>) {
+        let mut buffer =
+            UpdateBuffer::new(cfg.buffer_cap, cfg.dense_top_words, cfg.num_topics);
+        self.for_each_word_topic(|w, z| {
+            if let Some(batch) = buffer.add(w, z, 1) {
+                let _ = n_wk.push_coords_async(&batch);
+            }
+        });
+        let rest = buffer.take_sparse();
+        let _ = n_wk.push_coords_async(&rest);
+        let (rows, values) = buffer.take_dense();
+        let _ = n_wk.push_rows_async(&rows, &values);
+    }
+
+    /// Log-likelihood contribution of this partition under `model`;
+    /// returns `(total_log_lik, token_count)`. `corpus` is the full
+    /// corpus the runner was built over.
+    pub fn log_likelihood(&self, model: &TopicModel, corpus: &Corpus) -> (f64, u64) {
+        log_likelihood_docs(model, &corpus.docs[self.doc_range.clone()], &self.doc_counts)
+    }
+
+    /// One full sweep over the partition (§3.2–§3.4).
+    ///
+    /// `nk_local` is the iteration-start snapshot of the global topic
+    /// totals; the runner maintains its own local drift copy (LightLDA's
+    /// bounded-staleness model). Sparse batches leave as fire-and-forget
+    /// push tickets the moment the buffer fills; the shard windows
+    /// backpressure the sampler if the network falls behind, and the
+    /// caller's iteration-end `flush` is where their errors surface.
+    /// Topic totals need no pushes of their own: every reassignment is
+    /// already in the `n_wk` deltas, and the next iteration's snapshot
+    /// re-derives the totals as server-side column sums.
+    pub fn sweep(
+        &mut self,
+        cfg: &SweepConfig,
+        mut nk_local: Vec<i64>,
+        n_wk: &BigMatrix<i64>,
+    ) -> Result<IterStats> {
+        let k = cfg.num_topics;
+        let kk = k as usize;
+        let v = cfg.vocab_size;
+        let hyper = cfg.hyper;
+        let mut stats = IterStats::default();
+        let mut buffer = UpdateBuffer::new(cfg.buffer_cap, cfg.dense_top_words, k);
+
+        let blocks = word_blocks(&self.present, cfg.block_words);
+        let mut pipeline = PullPipeline::start_with_mode(
+            n_wk.clone(),
+            blocks,
+            cfg.pipeline_depth,
+            pull_mode_for(n_wk.layout()),
+        );
+
+        while let Some(block) = pipeline.next_block() {
+            let mut block = block?;
+            // Sample all occurrences of each word in the block while its
+            // alias table (built from the just-pulled, stale row) is
+            // fresh.
+            for (bi, &wu) in block.rows.clone().iter().enumerate() {
+                let w = wu as usize;
+                let row_range = bi * kk..(bi + 1) * kk;
+                let alias = word_alias(&block.values[row_range.clone()], hyper.beta);
+                for &(local, pos) in &self.occurrences[w] {
+                    let (local, pos) = (local as usize, pos as usize);
+                    let z_old = self.assignments[local][pos];
+                    // Inclusive counts; the kernel excludes on the fly,
+                    // so the no-change path below is entirely read-only.
+                    let z_new = {
+                        let view = TokenView {
+                            word_row: &block.values[row_range.clone()],
+                            n_k: &nk_local,
+                            doc_counts: &self.doc_counts[local],
+                            doc_assignments: &self.assignments[local],
+                            word_alias: &alias,
+                            v,
+                            hyper,
+                        };
+                        resample_token(z_old, &view, k, cfg.mh_steps, &mut self.rng)
+                    };
+                    stats.tokens += 1;
+                    if z_new != z_old {
+                        self.doc_counts[local].decrement(z_old);
+                        self.doc_counts[local].increment(z_new);
+                        block.values[bi * kk + z_old as usize] -= 1;
+                        block.values[bi * kk + z_new as usize] += 1;
+                        nk_local[z_old as usize] -= 1;
+                        nk_local[z_new as usize] += 1;
+                        self.assignments[local][pos] = z_new;
+                        stats.changed += 1;
+                        if let Some(batch) = buffer.add(wu, z_old, -1) {
+                            let _ = n_wk.push_coords_async(&batch);
+                            stats.sparse_batches += 1;
+                        }
+                        if let Some(batch) = buffer.add(wu, z_new, 1) {
+                            let _ = n_wk.push_coords_async(&batch);
+                            stats.sparse_batches += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // End-of-sweep flushes: remaining sparse triples and the dense
+        // hot-word aggregate (§3.3) — all fire-and-forget; the caller's
+        // flush() barrier collects them.
+        let rest = buffer.take_sparse();
+        if !rest.is_empty() {
+            let _ = n_wk.push_coords_async(&rest);
+            stats.sparse_batches += 1;
+        }
+        let (rows, values) = buffer.take_dense();
+        if !rows.is_empty() {
+            let _ = n_wk.push_rows_async(&rows, &values);
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_rng_is_position_independent() {
+        // The trainer's sequential fork pattern and the remote worker's
+        // skip-ahead reconstruction must produce identical streams.
+        let seed = 0x5eed;
+        let starts = [0u64, 37, 120];
+        let mut parent = Pcg64::new(seed);
+        let sequential: Vec<Vec<u64>> = starts
+            .iter()
+            .map(|&s| {
+                let mut r = parent.fork(s);
+                (0..8).map(|_| r.next_u64()).collect()
+            })
+            .collect();
+        for (p, &s) in starts.iter().enumerate() {
+            let mut r = partition_rng(seed, p, s);
+            let stream: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+            assert_eq!(stream, sequential[p], "partition {p}");
+        }
+    }
+
+    #[test]
+    fn runner_counts_match_assignments() {
+        use crate::corpus::synth::{generate, SynthConfig};
+        let corpus = generate(&SynthConfig {
+            num_docs: 40,
+            vocab_size: 100,
+            num_topics: 4,
+            avg_doc_len: 12.0,
+            seed: 5,
+            ..Default::default()
+        });
+        let runner =
+            SweepRunner::build_random(&corpus, 10..30, 6, partition_rng(1, 0, 10));
+        assert_eq!(runner.assignments().len(), 20);
+        assert_eq!(runner.doc_counts().len(), 20);
+        // Every token appears exactly once in the inverted index, with
+        // the topic its assignment says.
+        let mut total = 0u64;
+        let mut by_topic = vec![0u64; 6];
+        runner.for_each_word_topic(|_, z| {
+            total += 1;
+            by_topic[z as usize] += 1;
+        });
+        let expect: u64 =
+            corpus.docs[10..30].iter().map(|d| d.tokens.len() as u64).sum();
+        assert_eq!(total, expect);
+        let from_docs: u64 = runner
+            .doc_counts()
+            .iter()
+            .map(|c| (0..6).map(|k| c.get(k) as u64).sum::<u64>())
+            .sum();
+        assert_eq!(by_topic.iter().sum::<u64>(), from_docs);
+    }
+}

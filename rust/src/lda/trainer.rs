@@ -38,12 +38,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::corpus::dataset::Corpus;
 use crate::eval::perplexity::{log_likelihood, perplexity_from_loglik, TopicModel};
-use crate::lda::buffer::UpdateBuffer;
 use crate::lda::checkpoint::Checkpoint;
 use crate::lda::hyper::LdaHyper;
-use crate::lda::lightlda::{resample_token, word_alias, TokenView};
-use crate::lda::pipeline::{word_blocks, PullMode, PullPipeline};
 use crate::lda::sparse_counts::DocTopicCounts;
+use crate::lda::sweep::{partition_rng, pull_full_model, SweepConfig, SweepRunner};
 use crate::log_info;
 use crate::metrics::{Report, Row};
 use crate::net::tcp::{resolve_addrs, TcpTransport};
@@ -56,6 +54,8 @@ use crate::ps::server::ServerGroup;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
+
+pub use crate::lda::sweep::IterStats;
 
 /// Trainer configuration.
 #[derive(Debug, Clone)]
@@ -106,6 +106,20 @@ pub struct TrainConfig {
     pub eval_every: u32,
     /// Checkpoint directory (None disables checkpointing).
     pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoints retained per granularity (whole-corpus files for the
+    /// in-process trainer, per-partition files for cluster workers);
+    /// older snapshots are pruned after each save. `0` keeps everything.
+    pub keep_checkpoints: usize,
+    /// Cluster mode: how often workers heartbeat the coordinator.
+    pub heartbeat_ms: u64,
+    /// Cluster mode: a worker silent for this long (no heartbeat, poll
+    /// or report) is declared dead; its partition is reassigned and the
+    /// run rolls back to the last per-partition checkpoints.
+    pub straggler_timeout_ms: u64,
+    /// Cluster mode: the asynchronous barrier's staleness bound — a fast
+    /// worker may run at most this many iterations ahead of the slowest
+    /// partition (`0` = lockstep).
+    pub max_staleness: u32,
 }
 
 impl Default for TrainConfig {
@@ -129,6 +143,10 @@ impl Default for TrainConfig {
             seed: 0x1da,
             eval_every: 0,
             checkpoint_dir: None,
+            keep_checkpoints: 3,
+            heartbeat_ms: 1000,
+            straggler_timeout_ms: 10_000,
+            max_staleness: 1,
         }
     }
 }
@@ -139,24 +157,21 @@ impl TrainConfig {
         let alpha = if self.alpha > 0.0 { self.alpha } else { 50.0 / self.num_topics as f64 };
         LdaHyper { alpha, beta: self.beta }
     }
-}
 
-/// Per-partition worker state (the executor's slice of the RDD).
-struct WorkerState {
-    /// Document index range in the corpus.
-    doc_range: std::ops::Range<usize>,
-    /// Topic assignments for the partition's docs.
-    assignments: Vec<Vec<u32>>,
-    /// Doc-topic counts for the partition's docs.
-    doc_counts: Vec<DocTopicCounts>,
-    /// Inverted index: word -> occurrences as (local doc idx, position),
-    /// grouped so all of a word's tokens are sampled while its alias
-    /// table is fresh.
-    occurrences: Vec<Vec<(u32, u32)>>,
-    /// Which words occur in this partition at all.
-    present: Vec<bool>,
-    /// Worker RNG.
-    rng: Pcg64,
+    /// The sampling knobs a [`SweepRunner`] needs, for a corpus with
+    /// `vocab_size` words.
+    pub fn sweep_config(&self, vocab_size: u32) -> SweepConfig {
+        SweepConfig {
+            num_topics: self.num_topics,
+            mh_steps: self.mh_steps,
+            block_words: self.block_words,
+            buffer_cap: self.buffer_cap,
+            dense_top_words: self.dense_top_words,
+            pipeline_depth: self.pipeline_depth,
+            hyper: self.hyper(),
+            vocab_size,
+        }
+    }
 }
 
 /// Bring up (or connect to) the parameter servers for a training run.
@@ -177,13 +192,12 @@ fn start_parameter_servers(
                     cfg.shards
                 );
             }
-            let ps_cfg = PsConfig {
-                shards: resolved.len(),
-                scheme: cfg.scheme,
-                transport: cfg.transport.clone(),
-                pipeline_depth: cfg.pipeline_depth.max(2),
-                ..PsConfig::default()
-            };
+            let ps_cfg = PsConfig::deployment(
+                resolved.len(),
+                cfg.scheme,
+                cfg.transport.clone(),
+                cfg.pipeline_depth,
+            );
             let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
             let client = PsClient::connect(&*transport, ps_cfg);
             // A shard-count / scheme / address-order mismatch against the
@@ -193,32 +207,18 @@ fn start_parameter_servers(
             Ok((None, transport, client))
         }
         _ => {
-            let ps_cfg = PsConfig {
-                shards: cfg.shards,
-                scheme: cfg.scheme,
-                transport: cfg.transport.clone(),
-                pipeline_depth: cfg.pipeline_depth.max(2),
-                ..PsConfig::default()
-            };
+            let ps_cfg = PsConfig::deployment(
+                cfg.shards,
+                cfg.scheme,
+                cfg.transport.clone(),
+                cfg.pipeline_depth,
+            );
             let group = ServerGroup::start(ps_cfg.clone(), cfg.fault.clone(), cfg.seed ^ 0x9d);
             let transport = group.transport();
             let client = PsClient::connect(&*transport, ps_cfg);
             Ok((Some(group), transport, client))
         }
     }
-}
-
-/// Counters published by one training iteration.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct IterStats {
-    /// Tokens resampled.
-    pub tokens: u64,
-    /// Topic reassignments (z changed).
-    pub changed: u64,
-    /// Sparse delta messages pushed.
-    pub sparse_batches: u64,
-    /// Wall-clock seconds.
-    pub seconds: f64,
 }
 
 /// Distributed LightLDA trainer bound to one corpus layout.
@@ -231,7 +231,7 @@ pub struct Trainer {
     transport: Arc<dyn Transport>,
     client: PsClient,
     n_wk: BigMatrix<i64>,
-    workers: Vec<WorkerState>,
+    workers: Vec<SweepRunner>,
     vocab_size: u32,
     completed_iterations: u32,
     /// Per-iteration report (perplexity curve, throughput).
@@ -262,12 +262,11 @@ impl Trainer {
             report: Report::new(),
             cfg,
         };
-        let mut seed_rng = Pcg64::new(trainer.cfg.seed);
         let k = trainer.cfg.num_topics;
-        let init = |_: &Corpus, doc: &crate::corpus::dataset::Document, rng: &mut Pcg64| {
+        let seed = trainer.cfg.seed;
+        trainer.build_workers(corpus, seed, |doc, rng| {
             doc.tokens.iter().map(|_| rng.below(k as usize) as u32).collect::<Vec<u32>>()
-        };
-        trainer.build_workers(corpus, |c, d, r| init(c, d, r), &mut seed_rng)?;
+        });
         trainer.push_initial_counts()?;
         Ok(trainer)
     }
@@ -315,19 +314,15 @@ impl Trainer {
             report: Report::new(),
             cfg,
         };
-        let mut seed_rng = Pcg64::new(trainer.cfg.seed ^ 0xc4);
+        let seed = trainer.cfg.seed ^ 0xc4;
         // Hand each doc its checkpointed assignment. Docs are visited in
         // order, so drain front-to-back.
         let next = std::cell::Cell::new(0usize);
-        trainer.build_workers(
-            corpus,
-            |_, _, _| {
-                let i = next.get();
-                next.set(i + 1);
-                assignments.borrow_mut()[i].clone()
-            },
-            &mut seed_rng,
-        )?;
+        trainer.build_workers(corpus, seed, |_, _| {
+            let i = next.get();
+            next.set(i + 1);
+            assignments.borrow_mut()[i].clone()
+        });
         trainer.push_initial_counts()?;
         log_info!(
             "restored from checkpoint at iteration {} ({} docs)",
@@ -348,41 +343,20 @@ impl Trainer {
         self.group.as_ref()
     }
 
+    /// One [`SweepRunner`] per worker thread, each over its contiguous
+    /// corpus partition, with the deterministic per-partition RNG
+    /// ([`partition_rng`]) — the same stream a remote cluster worker
+    /// would reconstruct for the same partition index and seed.
     fn build_workers(
         &mut self,
         corpus: &Corpus,
-        mut init_doc: impl FnMut(&Corpus, &crate::corpus::dataset::Document, &mut Pcg64) -> Vec<u32>,
-        seed_rng: &mut Pcg64,
-    ) -> Result<()> {
-        let ranges = corpus.partitions(self.cfg.workers);
-        let v = corpus.vocab_size as usize;
-        for range in ranges {
-            let mut assignments = Vec::with_capacity(range.len());
-            let mut doc_counts = Vec::with_capacity(range.len());
-            let mut occurrences: Vec<Vec<(u32, u32)>> = vec![Vec::new(); v];
-            let mut present = vec![false; v];
-            let mut rng = seed_rng.fork(range.start as u64);
-            for (local, d) in range.clone().enumerate() {
-                let doc = &corpus.docs[d];
-                let z = init_doc(corpus, doc, &mut rng);
-                debug_assert_eq!(z.len(), doc.tokens.len());
-                for (pos, &w) in doc.tokens.iter().enumerate() {
-                    occurrences[w as usize].push((local as u32, pos as u32));
-                    present[w as usize] = true;
-                }
-                doc_counts.push(DocTopicCounts::from_assignments(&z));
-                assignments.push(z);
-            }
-            self.workers.push(WorkerState {
-                doc_range: range,
-                assignments,
-                doc_counts,
-                occurrences,
-                present,
-                rng,
-            });
+        seed: u64,
+        mut init_doc: impl FnMut(&crate::corpus::dataset::Document, &mut Pcg64) -> Vec<u32>,
+    ) {
+        for (p, range) in corpus.partitions(self.cfg.workers).into_iter().enumerate() {
+            let rng = partition_rng(seed, p, range.start as u64);
+            self.workers.push(SweepRunner::build(corpus, range, rng, &mut init_doc));
         }
-        Ok(())
     }
 
     /// Push every worker's initial counts to the parameter server
@@ -391,28 +365,11 @@ impl Trainer {
     /// pushed — the topic totals are its column sums, aggregated
     /// server-side on demand.
     fn push_initial_counts(&mut self) -> Result<()> {
-        let k = self.cfg.num_topics;
-        let mut buffer = UpdateBuffer::new(self.cfg.buffer_cap, self.cfg.dense_top_words, k);
+        let scfg = self.cfg.sweep_config(self.vocab_size);
         for ws in &self.workers {
-            for (w, occs) in ws.occurrences.iter().enumerate() {
-                for &(local, pos) in occs {
-                    let z = ws.assignments[local as usize][pos as usize];
-                    if let Some(batch) = buffer.add(w as u64, z, 1) {
-                        let _ = self.n_wk.push_coords_async(&batch);
-                    }
-                }
-            }
+            ws.push_counts(&scfg, &self.n_wk);
         }
-        let rest = buffer.take_sparse();
-        let _ = self.n_wk.push_coords_async(&rest);
-        let (rows, values) = buffer.take_dense();
-        let _ = self.n_wk.push_rows_async(&rows, &values);
         self.client.flush()
-    }
-
-    /// Pull mode matching the word-topic matrix's storage layout.
-    fn pull_mode(&self) -> PullMode {
-        pull_mode_for(self.n_wk.layout())
     }
 
     /// Run the configured number of iterations; returns the final model
@@ -431,6 +388,27 @@ impl Trainer {
                     if stats.seconds > 0.0 { stats.tokens as f64 / stats.seconds } else { 0.0 },
                 )
                 .set("changed_frac", stats.changed as f64 / stats.tokens.max(1) as f64);
+            // Parameter-server health, folded into the same row so long
+            // and multi-process runs are observable from the CSV alone:
+            // resident bytes and dedup evictions from every shard's
+            // introspection op, cumulative wire traffic from the
+            // transport counters.
+            if let Ok(infos) = self.client.shard_infos() {
+                row = row
+                    .set(
+                        "ps_resident_bytes",
+                        infos.iter().map(|i| i.bytes).sum::<u64>() as f64,
+                    )
+                    .set(
+                        "ps_dedup_evictions",
+                        infos.iter().map(|i| i.dedup_evictions).sum::<u64>() as f64,
+                    )
+                    .set(
+                        "ps_pending_uids",
+                        infos.iter().map(|i| i.pending_uids).sum::<u64>() as f64,
+                    );
+            }
+            row = row.set("net_tx_bytes", self.bytes_pushed() as f64);
             if self.cfg.eval_every > 0 && iter % self.cfg.eval_every == 0 {
                 let model = self.pull_model()?;
                 let perplexity = self.training_perplexity(&model, corpus);
@@ -457,7 +435,6 @@ impl Trainer {
     /// Execute one full sweep (all workers, all partitions).
     pub fn run_iteration(&mut self) -> Result<IterStats> {
         let sw = Stopwatch::new();
-        let k = self.cfg.num_topics;
         // Iteration-start snapshot of the topic totals, shared read-only
         // by workers; each worker maintains its own local drift copy
         // (LightLDA's bounded-staleness model). The totals are the
@@ -465,27 +442,24 @@ impl Trainer {
         // vector per shard instead of pulling any rows.
         let nk_snapshot = self.n_wk.pull_col_sums()?;
         let n_wk = &self.n_wk;
-        let cfg = &self.cfg;
-        let hyper = self.hyper;
-        let v = self.vocab_size;
+        let scfg = self.cfg.sweep_config(self.vocab_size);
         let errors: Mutex<Vec<Error>> = Mutex::new(Vec::new());
         let totals = Mutex::new(IterStats::default());
 
         std::thread::scope(|scope| {
             for ws in self.workers.iter_mut() {
                 let nk_snapshot = nk_snapshot.clone();
+                let scfg = &scfg;
                 let errors = &errors;
                 let totals = &totals;
-                scope.spawn(move || {
-                    match worker_iteration(ws, cfg, hyper, v, k, nk_snapshot, n_wk) {
-                        Ok(stats) => {
-                            let mut t = totals.lock().unwrap();
-                            t.tokens += stats.tokens;
-                            t.changed += stats.changed;
-                            t.sparse_batches += stats.sparse_batches;
-                        }
-                        Err(e) => errors.lock().unwrap().push(e),
+                scope.spawn(move || match ws.sweep(scfg, nk_snapshot, n_wk) {
+                    Ok(stats) => {
+                        let mut t = totals.lock().unwrap();
+                        t.tokens += stats.tokens;
+                        t.changed += stats.changed;
+                        t.sparse_batches += stats.sparse_batches;
                     }
+                    Err(e) => errors.lock().unwrap().push(e),
                 });
             }
         });
@@ -504,11 +478,12 @@ impl Trainer {
         Ok(stats)
     }
 
-    /// Write a checkpoint of all assignments (gathered from workers).
+    /// Write a checkpoint of all assignments (gathered from workers),
+    /// then prune snapshots beyond [`TrainConfig::keep_checkpoints`].
     pub fn checkpoint(&self, dir: &std::path::Path) -> Result<()> {
         let mut assignments = Vec::new();
         for ws in &self.workers {
-            assignments.extend(ws.assignments.iter().cloned());
+            assignments.extend(ws.assignments().iter().cloned());
         }
         let ckpt = Checkpoint {
             iteration: self.completed_iterations,
@@ -516,33 +491,15 @@ impl Trainer {
             assignments,
         };
         ckpt.save(dir)?;
+        Checkpoint::prune(dir, self.cfg.keep_checkpoints)?;
         Ok(())
     }
 
-    /// Pull the full model off the parameter server.
+    /// Pull the full model off the parameter server (pipelined chunk
+    /// pulls plus the server-side column sums; see
+    /// [`crate::lda::sweep::pull_full_model`]).
     pub fn pull_model(&self) -> Result<TopicModel> {
-        // Pull in 8192-row chunks through the same bounded prefetch
-        // pipeline (at the same depth and in the same pull mode) the
-        // sampler uses (§3.4): later chunks are in flight while earlier
-        // ones are copied out, without unbounded result buffering — and
-        // `pipeline_depth = 0` keeps the synchronous ablation truly
-        // synchronous here too. In sparse mode the Zipf tail crosses the
-        // wire as pairs, not slabs.
-        let k = self.cfg.num_topics as usize;
-        let rows: Vec<u64> = (0..self.vocab_size as u64).collect();
-        let chunks: Vec<Vec<u64>> = rows.chunks(8192).map(|c| c.to_vec()).collect();
-        let mut pipeline = PullPipeline::start_with_mode(
-            self.n_wk.clone(),
-            chunks,
-            self.cfg.pipeline_depth,
-            self.pull_mode(),
-        );
-        let mut n_wk = Vec::with_capacity(self.vocab_size as usize * k);
-        while let Some(block) = pipeline.next_block() {
-            n_wk.extend(block?.values);
-        }
-        let n_k = self.n_wk.pull_col_sums()?;
-        Ok(TopicModel { k: self.cfg.num_topics, v: self.vocab_size, n_wk, n_k, hyper: self.hyper })
+        pull_full_model(&self.n_wk, self.vocab_size, self.cfg.pipeline_depth, self.hyper)
     }
 
     /// All documents' topic counts in corpus order (gathered from the
@@ -550,7 +507,7 @@ impl Trainer {
     pub fn doc_counts(&self) -> Vec<DocTopicCounts> {
         let mut counts: Vec<DocTopicCounts> = Vec::new();
         for ws in &self.workers {
-            counts.extend(ws.doc_counts.iter().cloned());
+            counts.extend(ws.doc_counts().iter().cloned());
         }
         counts
     }
@@ -587,18 +544,10 @@ impl Trainer {
         let mut expect_wk = vec![0i64; self.vocab_size as usize * k];
         let mut expect_k = vec![0i64; k];
         for ws in &self.workers {
-            for (local, doc_z) in ws.assignments.iter().enumerate() {
-                let _ = local;
-                for &z in doc_z {
-                    expect_k[z as usize] += 1;
-                }
-            }
-            for (w, occs) in ws.occurrences.iter().enumerate() {
-                for &(local, pos) in occs {
-                    let z = ws.assignments[local as usize][pos as usize];
-                    expect_wk[w * k + z as usize] += 1;
-                }
-            }
+            ws.for_each_word_topic(|w, z| {
+                expect_wk[w as usize * k + z as usize] += 1;
+                expect_k[z as usize] += 1;
+            });
         }
         if expect_wk != model.n_wk {
             return Err(Error::Config("n_wk on server diverged from assignments".into()));
@@ -608,107 +557,6 @@ impl Trainer {
         }
         Ok(())
     }
-}
-
-/// Single source of truth for how a storage layout is pulled.
-fn pull_mode_for(layout: Layout) -> PullMode {
-    match layout {
-        Layout::Sparse => PullMode::Sparse,
-        Layout::Dense => PullMode::Dense,
-    }
-}
-
-/// One worker's full sweep over its partition.
-///
-/// Sparse batches leave as fire-and-forget push tickets the moment the
-/// buffer fills; the shard windows backpressure the sampler if the
-/// network falls behind, and the iteration-end `flush` in
-/// [`Trainer::run_iteration`] is where their errors surface. Topic
-/// totals need no pushes of their own: every reassignment is already in
-/// the `n_wk` deltas, and the next iteration's snapshot re-derives the
-/// totals as server-side column sums.
-fn worker_iteration(
-    ws: &mut WorkerState,
-    cfg: &TrainConfig,
-    hyper: LdaHyper,
-    v: u32,
-    k: u32,
-    mut nk_local: Vec<i64>,
-    n_wk: &BigMatrix<i64>,
-) -> Result<IterStats> {
-    let kk = k as usize;
-    let mut stats = IterStats::default();
-    let mut buffer = UpdateBuffer::new(cfg.buffer_cap, cfg.dense_top_words, k);
-
-    let blocks = word_blocks(&ws.present, cfg.block_words);
-    let mut pipeline = PullPipeline::start_with_mode(
-        n_wk.clone(),
-        blocks,
-        cfg.pipeline_depth,
-        pull_mode_for(n_wk.layout()),
-    );
-
-    while let Some(block) = pipeline.next_block() {
-        let mut block = block?;
-        // Sample all occurrences of each word in the block while its
-        // alias table (built from the just-pulled, stale row) is fresh.
-        for (bi, &wu) in block.rows.clone().iter().enumerate() {
-            let w = wu as usize;
-            let row_range = bi * kk..(bi + 1) * kk;
-            let alias = word_alias(&block.values[row_range.clone()], hyper.beta);
-            for &(local, pos) in &ws.occurrences[w] {
-                let (local, pos) = (local as usize, pos as usize);
-                let z_old = ws.assignments[local][pos];
-                // Inclusive counts; the kernel excludes on the fly, so
-                // the no-change path below is entirely read-only.
-                let z_new = {
-                    let view = TokenView {
-                        word_row: &block.values[row_range.clone()],
-                        n_k: &nk_local,
-                        doc_counts: &ws.doc_counts[local],
-                        doc_assignments: &ws.assignments[local],
-                        word_alias: &alias,
-                        v,
-                        hyper,
-                    };
-                    resample_token(z_old, &view, k, cfg.mh_steps, &mut ws.rng)
-                };
-                stats.tokens += 1;
-                if z_new != z_old {
-                    ws.doc_counts[local].decrement(z_old);
-                    ws.doc_counts[local].increment(z_new);
-                    block.values[bi * kk + z_old as usize] -= 1;
-                    block.values[bi * kk + z_new as usize] += 1;
-                    nk_local[z_old as usize] -= 1;
-                    nk_local[z_new as usize] += 1;
-                    ws.assignments[local][pos] = z_new;
-                    stats.changed += 1;
-                    if let Some(batch) = buffer.add(wu, z_old, -1) {
-                        let _ = n_wk.push_coords_async(&batch);
-                        stats.sparse_batches += 1;
-                    }
-                    if let Some(batch) = buffer.add(wu, z_new, 1) {
-                        let _ = n_wk.push_coords_async(&batch);
-                        stats.sparse_batches += 1;
-                    }
-                }
-            }
-        }
-    }
-
-    // End-of-iteration flushes: remaining sparse triples and the dense
-    // hot-word aggregate (§3.3) — all fire-and-forget; run_iteration's
-    // flush() barrier collects them.
-    let rest = buffer.take_sparse();
-    if !rest.is_empty() {
-        let _ = n_wk.push_coords_async(&rest);
-        stats.sparse_batches += 1;
-    }
-    let (rows, values) = buffer.take_dense();
-    if !rows.is_empty() {
-        let _ = n_wk.push_rows_async(&rows, &values);
-    }
-    Ok(stats)
 }
 
 #[cfg(test)]

@@ -23,6 +23,12 @@
 //!   the parameter server, with push buffering, prefetched model pulls
 //!   overlapping sampling with communication, and checkpoint-based fault
 //!   tolerance.
+//! - [`cluster`] — the multi-process control plane: a coordinator
+//!   (`coordinate`) assigning corpus partitions to remote worker
+//!   processes (`work --join`), with heartbeat liveness detection, a
+//!   bounded-staleness iteration barrier, and failure recovery that
+//!   rolls the run onto a fresh count table rebuilt from per-partition
+//!   checkpoints.
 //! - [`baselines`] — faithful re-implementations of Spark MLlib's
 //!   variational EM LDA and Online LDA, with a shuffle-write accounting
 //!   model, used as comparison points for the paper's Table 1.
@@ -39,6 +45,7 @@
 //! binary is self-contained afterwards.
 
 pub mod baselines;
+pub mod cluster;
 pub mod corpus;
 pub mod eval;
 pub mod experiments;

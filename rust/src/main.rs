@@ -7,6 +7,9 @@
 //!   `--connect host:port,...` to use external `serve` processes)
 //! - `serve`      — host parameter-server shards over TCP for
 //!   multi-process deployments
+//! - `coordinate` — run the cluster coordinator: partition the corpus
+//!   and drive remote `work` processes against `serve` shards
+//! - `work`       — join a coordinator as a remote sampler process
 //! - `shutdown`   — stop external `serve` processes
 //! - `em`         — Spark-MLlib-style variational EM baseline
 //! - `online`     — Spark-MLlib-style Online VB baseline
@@ -18,6 +21,7 @@
 use std::path::PathBuf;
 
 use glint_lda::baselines::{em, online};
+use glint_lda::cluster::{run_worker, Coordinator, CorpusSpec, WorkerOptions};
 use glint_lda::corpus::dataset::Corpus;
 use glint_lda::corpus::synth::{generate, SynthConfig};
 use glint_lda::eval::topics::summarize;
@@ -57,6 +61,8 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("train") => cmd_train(args),
         Some("serve") => cmd_serve(args),
+        Some("coordinate") => cmd_coordinate(args),
+        Some("work") => cmd_work(args),
         Some("shutdown") => cmd_shutdown(args),
         Some("em") => cmd_em(args),
         Some("online") => cmd_online(args),
@@ -71,7 +77,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!(
                 "glint-lda — web-scale topic models with an asynchronous parameter server\n\
                  \n\
-                 usage: glint-lda <train|serve|shutdown|em|online|gen-corpus|eval|table1|fig4|fig5|fig6> [--opt value]...\n\
+                 usage: glint-lda <train|serve|coordinate|work|shutdown|em|online|gen-corpus|eval|table1|fig4|fig5|fig6> [--opt value]...\n\
                  \n\
                  common options:\n\
                  --topics N      number of topics (default 20/100 depending on command)\n\
@@ -93,6 +99,20 @@ fn dispatch(args: &Args) -> Result<()> {
                  --bind LIST     host:port,... to listen on, one per hosted shard\n\
                  --first-shard N global id of the first hosted shard (default 0)\n\
                  --shards N      total shards in the deployment (default: hosted count)\n\
+                 \n\
+                 coordinate options (plus the train options above):\n\
+                 --bind ADDR          control-plane listen address (default 127.0.0.1:7600)\n\
+                 --connect LIST       host:port,... of running `serve` shards (required)\n\
+                 --workers N          corpus partitions / expected `work` processes\n\
+                 --checkpoint-dir D   per-partition checkpoints (enables failure recovery)\n\
+                 --keep-checkpoints N snapshots retained per partition (default 3)\n\
+                 --heartbeat-ms N     worker heartbeat period (default 1000)\n\
+                 --straggler-ms N     silence before a worker is declared dead (default 10000)\n\
+                 --max-staleness N    iterations a fast worker may run ahead (default 1)\n\
+                 \n\
+                 work options:\n\
+                 --join ADDR     coordinator host:port (required)\n\
+                 --corpus PATH   corpus override (else the coordinator's spec is used)\n\
                  \n\
                  shutdown options:\n\
                  --connect LIST  host:port,... of the shards to stop"
@@ -163,6 +183,10 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
         seed: args.get_as("seed", 0x1dau64)?,
         eval_every: args.get_as("eval-every", 5u32)?,
         checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
+        keep_checkpoints: args.get_as("keep-checkpoints", 3usize)?,
+        heartbeat_ms: args.get_as("heartbeat-ms", 1000u64)?,
+        straggler_timeout_ms: args.get_as("straggler-ms", 10_000u64)?,
+        max_staleness: args.get_as("max-staleness", 1u32)?,
         ..TrainConfig::default()
     })
 }
@@ -228,6 +252,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
     log_info!("serving; stop with `glint-lda shutdown --connect <addrs>`");
     server.join();
     log_info!("all hosted shards shut down");
+    Ok(())
+}
+
+/// Run the cluster coordinator: partition the corpus, serve the control
+/// plane for `work` processes, aggregate per-iteration stats, recover
+/// from worker failures. Requires running `serve` shards (`--connect`).
+fn cmd_coordinate(args: &Args) -> Result<()> {
+    let corpus = load_or_generate(args)?;
+    let cfg = train_config(args)?;
+    // What we tell workers about the corpus: an explicit file wins; a
+    // synthetic corpus is described by its generator parameters so each
+    // worker regenerates it deterministically.
+    let corpus_spec = match args.get("corpus") {
+        Some(path) => CorpusSpec::File(path.to_string()),
+        None => CorpusSpec::Synth {
+            num_docs: args.get_as("docs", 8000usize)? as u64,
+            vocab_size: args.get_as("vocab", 8000u32)?,
+            num_topics: args.get_as("gen-topics", 50usize)? as u32,
+            avg_doc_len: args.get_as("avg-len", 80.0f64)?,
+            zipf_exponent: args.get_as("zipf", 1.07f64)?,
+            seed: args.get_as("seed", 0xc1e0u64)?,
+        },
+    };
+    let bind = args.str_or("bind", "127.0.0.1:7600");
+    let coordinator = Coordinator::bind(&bind, cfg, &corpus, corpus_spec)?;
+    log_info!(
+        "coordinator listening on {}; join workers with: glint-lda work --join {}",
+        coordinator.addr(),
+        coordinator.addr()
+    );
+    let outcome = coordinator.run()?;
+    if let Some(p) = outcome.final_perplexity {
+        log_info!("final training perplexity: {p:.1}");
+    }
+    log_info!(
+        "run complete: {} epoch roll(s), {} reassignment(s)",
+        outcome.epochs,
+        outcome.reassignments
+    );
+    for line in summarize(&outcome.model, &corpus.vocab, args.get_as("top-words", 8usize)?)
+        .into_iter()
+        .take(args.get_as("show-topics", 10usize)?)
+    {
+        println!("{line}");
+    }
+    maybe_save(args, outcome.report.to_csv())
+}
+
+/// Join a coordinator as a remote sampler process.
+fn cmd_work(args: &Args) -> Result<()> {
+    let join = args
+        .get("join")
+        .ok_or_else(|| Error::Config("missing required option --join host:port".into()))?
+        .to_string();
+    let corpus = match args.get("corpus") {
+        Some(path) => Some(Corpus::load(&PathBuf::from(path))?),
+        None => None,
+    };
+    // Fault-injection hook for demos and tests: crash (exit without
+    // reporting) right after sweeping this iteration.
+    let crash_at = args.get_as("crash-at", 0u32)?;
+    let summary = run_worker(WorkerOptions {
+        join,
+        corpus,
+        crash_at_iteration: (crash_at > 0).then_some(crash_at),
+    })?;
+    log_info!(
+        "worker {} exiting after {} sweep(s){}",
+        summary.worker_id,
+        summary.sweeps,
+        if summary.crashed { " (simulated crash)" } else { "" }
+    );
     Ok(())
 }
 

@@ -465,10 +465,26 @@ impl PsClient {
         cols: u32,
         layout: Layout,
     ) -> Result<BigMatrix<T>> {
+        let id = self.next_matrix_id.fetch_add(1, Ordering::SeqCst);
+        self.attach_matrix(id, rows, cols, layout)
+    }
+
+    /// Attach to (or create) the matrix with an explicit, externally
+    /// agreed `id` — the multi-client path: a cluster coordinator
+    /// creates the epoch's count table and broadcasts the id to its
+    /// workers, whose `CreateMatrix` under the same id and shape is an
+    /// idempotent no-op on every shard. A shape/layout mismatch against
+    /// an existing matrix of that id is rejected server-side.
+    pub fn attach_matrix<T: Element>(
+        &self,
+        id: u32,
+        rows: u64,
+        cols: u32,
+        layout: Layout,
+    ) -> Result<BigMatrix<T>> {
         if rows == 0 || cols == 0 {
             return Err(Error::Config("matrix dimensions must be positive".into()));
         }
-        let id = self.next_matrix_id.fetch_add(1, Ordering::SeqCst);
         let req = Request::CreateMatrix { id, rows, cols, dtype: T::DTYPE, layout };
         // Broadcast creation to every shard, in parallel.
         let results: Vec<Result<Response>> = std::thread::scope(|scope| {

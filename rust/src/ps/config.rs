@@ -95,6 +95,25 @@ impl PsConfig {
         PsConfig { shards, ..PsConfig::default() }
     }
 
+    /// Config for a full deployment as the trainer, the cluster
+    /// coordinator and cluster workers all build it: the client's
+    /// per-shard in-flight window is the pull prefetch depth floored at
+    /// 2 so push flushes still overlap sampling.
+    pub fn deployment(
+        shards: usize,
+        scheme: PartitionScheme,
+        transport: TransportMode,
+        pipeline_depth: usize,
+    ) -> PsConfig {
+        PsConfig {
+            shards,
+            scheme,
+            transport,
+            pipeline_depth: pipeline_depth.max(2),
+            ..PsConfig::default()
+        }
+    }
+
     /// Timeout for attempt `attempt` (0-based), growing exponentially and
     /// clamped to `max_timeout`.
     pub fn timeout_for_attempt(&self, attempt: u32) -> Duration {

@@ -1,0 +1,274 @@
+//! Integration tests for the cluster runtime: an in-process deployment
+//! of 1 coordinator + N worker threads + TCP shard servers — the same
+//! processes a real multi-machine run would use, minus the machines.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+use glint_lda::cluster::{run_worker, ClusterOutcome, Coordinator, CorpusSpec, WorkerOptions};
+use glint_lda::corpus::dataset::Corpus;
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::eval::perplexity::holdout_perplexity;
+use glint_lda::lda::checkpoint::PartitionCheckpoint;
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::ps::config::{PsConfig, TransportMode};
+use glint_lda::ps::server::TcpShardServer;
+
+fn spawn_shards(n: usize) -> (TcpShardServer, Vec<String>) {
+    let want: Vec<SocketAddr> = (0..n).map(|_| "127.0.0.1:0".parse().unwrap()).collect();
+    let server = TcpShardServer::bind(PsConfig::with_shards(n), 0, &want).unwrap();
+    let addrs = server.addrs().iter().map(|a| a.to_string()).collect();
+    (server, addrs)
+}
+
+fn parity_corpus() -> Corpus {
+    generate(&SynthConfig {
+        num_docs: 360,
+        vocab_size: 800,
+        num_topics: 8,
+        avg_doc_len: 45.0,
+        seed: 424,
+        ..Default::default()
+    })
+}
+
+fn cluster_cfg(shard_addrs: Vec<String>) -> TrainConfig {
+    TrainConfig {
+        num_topics: 10,
+        iterations: 8,
+        workers: 2,
+        shards: 2,
+        block_words: 256,
+        buffer_cap: 2000,
+        dense_top_words: 50,
+        eval_every: 0,
+        transport: TransportMode::Connect(shard_addrs),
+        heartbeat_ms: 100,
+        straggler_timeout_ms: 5000,
+        max_staleness: 1,
+        ..Default::default()
+    }
+}
+
+/// Run a full cluster training: coordinator thread + `workers` worker
+/// threads (each handed the corpus in-process), against 2 TCP shards.
+fn run_cluster(
+    cfg: TrainConfig,
+    train: &Corpus,
+    worker_opts: Vec<WorkerOptions>,
+) -> ClusterOutcome {
+    let coordinator =
+        Coordinator::bind("127.0.0.1:0", cfg, train, CorpusSpec::Provided).unwrap();
+    let addr = coordinator.addr().to_string();
+    let coord = thread::spawn(move || coordinator.run().unwrap());
+    let mut workers = Vec::new();
+    for mut opts in worker_opts {
+        opts.join = addr.clone();
+        if opts.corpus.is_none() {
+            opts.corpus = Some(train.clone());
+        }
+        workers.push(thread::spawn(move || run_worker(opts)));
+        // Stagger spawns so partition assignment follows spawn order
+        // (tests rely on which worker holds a partition vs stands by).
+        thread::sleep(Duration::from_millis(150));
+    }
+    let outcome = coord.join().unwrap();
+    for w in workers {
+        // Workers either finish cleanly or (in kill tests) crashed on
+        // purpose; both are Ok summaries.
+        w.join().unwrap().unwrap();
+    }
+    outcome
+}
+
+/// Acceptance: a multi-process run (coordinator + 2 workers + 2 TCP
+/// shards) reaches held-out perplexity within noise of the in-process
+/// trainer on the same corpus and seed.
+#[test]
+fn cluster_matches_in_process_heldout_perplexity() {
+    let corpus = parity_corpus();
+    let (train, test) = corpus.split_holdout(5);
+
+    // In-process reference: same partitioning (workers == 2), same
+    // sampler, simulated transport.
+    let mut single_cfg = cluster_cfg(Vec::new());
+    single_cfg.transport = TransportMode::Sim;
+    let mut trainer = Trainer::new(single_cfg, &train).unwrap();
+    let single_model = trainer.run(&train).unwrap();
+    let single = holdout_perplexity(&single_model, &test, 5, 7);
+
+    let (_shards, addrs) = spawn_shards(2);
+    let outcome = run_cluster(
+        cluster_cfg(addrs),
+        &train,
+        vec![WorkerOptions::default(), WorkerOptions::default()],
+    );
+    let cluster = holdout_perplexity(&outcome.model, &test, 5, 7);
+
+    assert!(single.is_finite() && cluster.is_finite());
+    assert_eq!(outcome.epochs, 0, "no failures expected");
+    let ratio = cluster / single;
+    assert!(
+        (0.9..1.1).contains(&ratio),
+        "cluster perplexity {cluster:.1} diverged from in-process {single:.1} \
+         (ratio {ratio:.3})"
+    );
+}
+
+/// Acceptance: a worker killed mid-iteration is detected by heartbeat
+/// silence, its partition is reassigned to a standby worker, the run
+/// rolls onto a fresh count table rebuilt from per-partition
+/// checkpoints, completes — and the final table exactly equals the
+/// counts recomputed from the final checkpoints.
+#[test]
+fn worker_kill_recovers_via_partition_reassignment() {
+    let corpus = parity_corpus();
+    let (train, _test) = corpus.split_holdout(5);
+    let dir = std::env::temp_dir()
+        .join(format!("glint_cluster_kill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let (_shards, addrs) = spawn_shards(2);
+    let mut cfg = cluster_cfg(addrs);
+    cfg.iterations = 6;
+    cfg.checkpoint_dir = Some(PathBuf::from(&dir));
+    cfg.heartbeat_ms = 100;
+    // Long enough that a loaded CI box cannot spuriously reap a healthy
+    // worker (15 missed heartbeats), short enough to keep the test fast.
+    cfg.straggler_timeout_ms = 1500;
+    let k = cfg.num_topics;
+
+    let outcome = run_cluster(
+        cfg,
+        &train,
+        vec![
+            // Victim: vanishes right after sweeping iteration 2 —
+            // pushes flushed, nothing reported, table contaminated.
+            WorkerOptions { crash_at_iteration: Some(2), ..WorkerOptions::default() },
+            // Healthy peer.
+            WorkerOptions::default(),
+            // Standby: parked with Wait until the victim's partition
+            // frees up, then picks it up and rebuilds from checkpoint.
+            WorkerOptions::default(),
+        ],
+    );
+
+    assert!(outcome.epochs >= 1, "a failure must roll the epoch");
+    assert!(outcome.reassignments >= 1, "the lost partition must be reassigned");
+
+    // Rebuilt-count consistency: the final model on the (post-recovery)
+    // parameter servers must exactly equal the counts recomputed from
+    // the final per-partition checkpoints.
+    let ranges = train.partitions(2);
+    let kk = k as usize;
+    let mut expect_wk = vec![0i64; train.vocab_size as usize * kk];
+    let mut expect_k = vec![0i64; kk];
+    for (p, range) in ranges.iter().enumerate() {
+        let ckpt = PartitionCheckpoint::load_latest(&dir, p as u32)
+            .unwrap()
+            .expect("final checkpoint per partition");
+        assert_eq!(ckpt.inner.iteration, 6, "partition {p} must finish all iterations");
+        assert_eq!(ckpt.doc_start as usize, range.start);
+        assert_eq!(ckpt.inner.assignments.len(), range.len());
+        for (local, d) in range.clone().enumerate() {
+            let doc = &train.docs[d];
+            let z = &ckpt.inner.assignments[local];
+            assert_eq!(z.len(), doc.tokens.len());
+            for (pos, &w) in doc.tokens.iter().enumerate() {
+                expect_wk[w as usize * kk + z[pos] as usize] += 1;
+                expect_k[z[pos] as usize] += 1;
+            }
+        }
+    }
+    assert_eq!(
+        expect_wk, outcome.model.n_wk,
+        "final count table must equal the checkpointed assignments"
+    );
+    assert_eq!(expect_k, outcome.model.n_k);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The bounded-staleness knob at 0 forces lockstep and still completes;
+/// the report covers every iteration exactly once.
+#[test]
+fn lockstep_staleness_zero_completes_with_full_report() {
+    let corpus = generate(&SynthConfig {
+        num_docs: 150,
+        vocab_size: 400,
+        num_topics: 5,
+        avg_doc_len: 30.0,
+        seed: 33,
+        ..Default::default()
+    });
+    let (_shards, addrs) = spawn_shards(2);
+    let mut cfg = cluster_cfg(addrs);
+    cfg.iterations = 4;
+    cfg.max_staleness = 0;
+    cfg.eval_every = 2;
+    let outcome = run_cluster(
+        cfg,
+        &corpus,
+        vec![WorkerOptions::default(), WorkerOptions::default()],
+    );
+    let rows = outcome.report.rows();
+    assert_eq!(rows.len(), 4, "one aggregate row per iteration");
+    let iters: Vec<f64> = rows.iter().map(|r| r.get("iter").unwrap()).collect();
+    assert_eq!(iters, vec![1.0, 2.0, 3.0, 4.0]);
+    // Evaluation points carry an aggregated perplexity; PS health rides
+    // every completed row.
+    assert!(rows[1].get("perplexity").is_some());
+    assert!(rows[3].get("perplexity").is_some());
+    assert!(rows[0].get("perplexity").is_none());
+    assert!(rows.iter().all(|r| r.get("ps_resident_bytes").is_some()));
+    assert!(outcome.final_perplexity.is_some());
+}
+
+/// A late worker joining a fully staffed cluster parks as a standby
+/// (Wait) and exits cleanly at Done without ever holding a partition.
+#[test]
+fn standby_worker_exits_cleanly_when_never_needed() {
+    let corpus = generate(&SynthConfig {
+        num_docs: 100,
+        vocab_size: 300,
+        num_topics: 4,
+        avg_doc_len: 25.0,
+        seed: 7,
+        ..Default::default()
+    });
+    let (_shards, addrs) = spawn_shards(2);
+    let mut cfg = cluster_cfg(addrs);
+    cfg.iterations = 3;
+    let coordinator =
+        Coordinator::bind("127.0.0.1:0", cfg, &corpus, CorpusSpec::Provided).unwrap();
+    let addr = coordinator.addr().to_string();
+    let coord = thread::spawn(move || coordinator.run().unwrap());
+    let mut handles = Vec::new();
+    for _ in 0..2 {
+        let opts = WorkerOptions {
+            join: addr.clone(),
+            corpus: Some(corpus.clone()),
+            ..WorkerOptions::default()
+        };
+        handles.push(thread::spawn(move || run_worker(opts)));
+    }
+    // The standby joins slightly later so the two real workers hold the
+    // partitions.
+    thread::sleep(Duration::from_millis(200));
+    let standby_opts = WorkerOptions {
+        join: addr.clone(),
+        corpus: Some(corpus.clone()),
+        ..WorkerOptions::default()
+    };
+    let standby = thread::spawn(move || run_worker(standby_opts));
+    let outcome = coord.join().unwrap();
+    for h in handles {
+        let summary = h.join().unwrap().unwrap();
+        assert!(summary.sweeps >= 3);
+    }
+    let standby_summary = standby.join().unwrap().unwrap();
+    assert_eq!(standby_summary.sweeps, 0);
+    assert!(!standby_summary.crashed);
+    assert_eq!(outcome.reassignments, 0);
+}
