@@ -1,17 +1,173 @@
 //! The paper's amortized-O(1) claim (§3): per-token sampling cost of
-//! LightLDA (MH + alias) vs exact collapsed Gibbs as K grows.
+//! LightLDA (MH + alias) vs exact collapsed Gibbs as K grows, plus the
+//! Zipf K-scaling of the sampler hot path itself — word-proposal build
+//! time and tokens/sec with the dense alias vs the hybrid
+//! sparse-mixture alias ([`glint_lda::lda::alias::AliasBuilder`]).
 //!
 //! Expected shape: Gibbs tokens/s degrades ~linearly with K; LightLDA
-//! stays (nearly) flat — this is what makes K=1000 on 27 TB feasible.
+//! stays (nearly) flat — this is what makes K=1000 on 27 TB feasible —
+//! and the hybrid build stays flat in K for Zipf-tail words while the
+//! dense build grows linearly.
+//!
+//! Environment knobs (used by CI):
+//!
+//! - `SMOKE=1` — fast regression path: skips the (slow) Gibbs-vs-
+//!   LightLDA corpus sweeps and shrinks the token counts; the K-scaling
+//!   section still covers K ∈ {64, 1024, 16384};
+//! - `BENCH_JSON=path` — where to write the machine-readable summary
+//!   (default `BENCH_sampler.json` in the working directory).
 
 use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::lda::alias::{AliasBuilder, WordProposal};
 use glint_lda::lda::gibbs::{sweep, LocalModel};
 use glint_lda::lda::hyper::LdaHyper;
-use glint_lda::lda::lightlda::sweep_light;
+use glint_lda::lda::lightlda::{resample_token, sweep_light, TokenView};
+use glint_lda::lda::sparse_counts::DocTopicCounts;
 use glint_lda::util::rng::Pcg64;
-use glint_lda::util::timer::Stopwatch;
+use glint_lda::util::timer::{bench, Stopwatch};
 
-fn main() {
+/// One K's measurements for the Zipf K-scaling section.
+struct KScale {
+    k: usize,
+    /// Nonzero topics of the tail word under test.
+    nnz_tail: usize,
+    /// Slots the two constructions actually table (K vs nnz) — exact
+    /// structural numbers, useful for the analytic baseline.
+    dense_tabled_slots: usize,
+    hybrid_tabled_slots: usize,
+    dense_build_secs: f64,
+    hybrid_build_secs: f64,
+    tail_build_speedup: f64,
+    dense_tokens_per_sec: f64,
+    hybrid_tokens_per_sec: f64,
+    /// Whether the production 0.5 fill threshold picks the hybrid
+    /// construction for this tail word.
+    threshold_selects_hybrid: bool,
+}
+
+/// Token-resampling throughput for a prepared [`TokenView`] (one word
+/// row plus its document context).
+fn tokens_per_sec<P: WordProposal>(view: &TokenView<'_, P>, k: u32, tokens: usize) -> f64 {
+    let doc_len = view.doc_assignments.len();
+    let mut rng = Pcg64::new(8);
+    let sw = Stopwatch::new();
+    let mut acc = 0u64;
+    for i in 0..tokens {
+        acc += resample_token(view.doc_assignments[i % doc_len], view, k, 2, &mut rng) as u64;
+    }
+    std::hint::black_box(acc);
+    tokens as f64 / sw.secs()
+}
+
+fn k_scaling(smoke: bool) -> Vec<KScale> {
+    let beta = 0.01;
+    let hyper = LdaHyper { alpha: 0.1, beta };
+    let build_iters = if smoke { 15 } else { 40 };
+    let tokens = if smoke { 50_000 } else { 400_000 };
+    let mut out = Vec::new();
+    println!("\nZipf K-scaling: tail-word hot path, dense vs hybrid proposal");
+    println!(
+        "{:>8} {:>9} {:>15} {:>15} {:>9} {:>14} {:>14}",
+        "K", "nnz_tail", "dense build", "hybrid build", "speedup", "dense tok/s", "hybrid tok/s"
+    );
+    for &k in &[64usize, 1024, 16384] {
+        let nnz = 16.min(k / 2);
+        // A Zipf-tail row: a handful of nonzero topics spread over K.
+        let pairs: Vec<(u32, i64)> =
+            (0..nnz).map(|i| ((i * (k / nnz)) as u32, 1 + (i % 7) as i64)).collect();
+        let mut row = vec![0i64; k];
+        for &(c, v) in &pairs {
+            row[c as usize] = v;
+        }
+        // The sampled document assigns its tokens to the row's nonzero
+        // topics, matching the invariant the real sweep maintains
+        // (a token's inclusive count is always >= 1).
+        let assignments: Vec<u32> = (0..128).map(|i| pairs[i % nnz].0).collect();
+        let counts = DocTopicCounts::from_assignments(&assignments);
+        let n_k: Vec<i64> = vec![1000; k];
+
+        let mut builder = AliasBuilder::new();
+        let hybrid_build = bench(3, build_iters, || {
+            let t = builder.build_hybrid(&pairs, k as u32, beta, 2.0);
+            std::hint::black_box(t.total_weight())
+        });
+        let dense_build = bench(3, build_iters, || {
+            let t = builder.build_dense(&row, beta);
+            std::hint::black_box(t.total_weight())
+        });
+
+        let hybrid_rate = {
+            let t = builder.build_hybrid(&pairs, k as u32, beta, 2.0);
+            let view = TokenView {
+                word_row: &row,
+                n_k: &n_k,
+                doc_counts: &counts,
+                doc_assignments: &assignments,
+                word_alias: &t,
+                v: 100_000,
+                hyper,
+            };
+            tokens_per_sec(&view, k as u32, tokens)
+        };
+        let dense_rate = {
+            let t = builder.build_dense(&row, beta);
+            let view = TokenView {
+                word_row: &row,
+                n_k: &n_k,
+                doc_counts: &counts,
+                doc_assignments: &assignments,
+                word_alias: &t,
+                v: 100_000,
+                hyper,
+            };
+            tokens_per_sec(&view, k as u32, tokens)
+        };
+        let (dense_slots, hybrid_slots, threshold_selects_hybrid) = {
+            let dense = builder.build_dense(&row, beta).tabled_slots();
+            let hybrid = builder.build_hybrid(&pairs, k as u32, beta, 2.0).tabled_slots();
+            let selected = builder.build_hybrid(&pairs, k as u32, beta, 0.5).is_hybrid();
+            (dense, hybrid, selected)
+        };
+
+        let speedup = dense_build.mean / hybrid_build.mean;
+        println!(
+            "{k:>8} {nnz:>9} {:>15} {:>15} {:>8.1}x {:>14.0} {:>14.0}",
+            glint_lda::util::timer::fmt_secs(dense_build.mean),
+            glint_lda::util::timer::fmt_secs(hybrid_build.mean),
+            speedup,
+            dense_rate,
+            hybrid_rate
+        );
+        out.push(KScale {
+            k,
+            nnz_tail: nnz,
+            dense_tabled_slots: dense_slots,
+            hybrid_tabled_slots: hybrid_slots,
+            dense_build_secs: dense_build.mean,
+            hybrid_build_secs: hybrid_build.mean,
+            tail_build_speedup: speedup,
+            dense_tokens_per_sec: dense_rate,
+            hybrid_tokens_per_sec: hybrid_rate,
+            threshold_selects_hybrid,
+        });
+    }
+    // The tentpole claim: at web-scale K the tail-word build must track
+    // nnz, not K — at least an order of magnitude over the dense build
+    // (the raw work ratio at K=16384 / nnz=16 is 1024x).
+    let last = out.last().unwrap();
+    assert!(
+        last.tail_build_speedup > 10.0,
+        "hybrid tail build should be >=10x faster than dense at K={} (got {:.1}x)",
+        last.k,
+        last.tail_build_speedup
+    );
+    assert!(last.threshold_selects_hybrid, "0.5 fill threshold must keep tail words sparse");
+    out
+}
+
+/// The classic Gibbs-vs-LightLDA corpus sweep comparison (full mode
+/// only — minutes of sweeping).
+fn o1_vs_ok() -> Vec<(u32, f64, f64)> {
     let corpus = generate(&SynthConfig {
         num_docs: 1500,
         vocab_size: 4000,
@@ -25,8 +181,7 @@ fn main() {
         "{:>6} {:>16} {:>16} {:>8}",
         "K", "gibbs tok/s", "lightlda tok/s", "speedup"
     );
-    let mut gibbs_rates = Vec::new();
-    let mut light_rates = Vec::new();
+    let mut rows = Vec::new();
     for &k in &[20u32, 40, 80, 160, 320, 640] {
         let hyper = LdaHyper::default_for(k as usize);
         // Exact Gibbs.
@@ -47,16 +202,71 @@ fn main() {
             "{k:>6} {gibbs_rate:>16.0} {light_rate:>16.0} {:>7.1}x",
             light_rate / gibbs_rate
         );
-        gibbs_rates.push(gibbs_rate);
-        light_rates.push(light_rate);
+        rows.push((k, gibbs_rate, light_rate));
     }
     // Shape assertions: Gibbs must degrade strongly with K (>=8x from
     // K=20 to K=640); LightLDA must stay within 4x.
-    let g_drop = gibbs_rates[0] / gibbs_rates[gibbs_rates.len() - 1];
-    let l_drop = light_rates[0] / light_rates[light_rates.len() - 1];
+    let g_drop = rows[0].1 / rows[rows.len() - 1].1;
+    let l_drop = rows[0].2 / rows[rows.len() - 1].2;
     println!("\ngibbs slowdown 20->640: {g_drop:.1}x; lightlda: {l_drop:.1}x");
     // Thresholds leave headroom for machine-load noise: the contrast to
     // verify is a ~32x linear degradation vs a small constant-ish factor.
     assert!(g_drop > 8.0, "gibbs should be ~linear in K (got {g_drop:.1}x)");
     assert!(l_drop < g_drop / 3.0, "lightlda should be ~flat in K (got {l_drop:.1}x)");
+    rows
+}
+
+fn write_json(path: &str, smoke: bool, scaling: &[KScale], o1: &[(u32, f64, f64)]) {
+    let mut body = String::from("{\n");
+    body.push_str("  \"bench\": \"sampler\",\n");
+    body.push_str(&format!("  \"smoke\": {smoke},\n"));
+    body.push_str("  \"k_scaling\": [\n");
+    for (i, r) in scaling.iter().enumerate() {
+        let sep = if i + 1 < scaling.len() { "," } else { "" };
+        body.push_str(&format!(
+            "    {{\"k\": {}, \"nnz_tail\": {}, \"dense_tabled_slots\": {}, \
+             \"hybrid_tabled_slots\": {}, \"dense_build_secs\": {:.9}, \
+             \"hybrid_build_secs\": {:.9}, \"tail_build_speedup\": {:.2}, \
+             \"dense_tokens_per_sec\": {:.0}, \"hybrid_tokens_per_sec\": {:.0}, \
+             \"threshold_selects_hybrid\": {}}}{sep}\n",
+            r.k,
+            r.nnz_tail,
+            r.dense_tabled_slots,
+            r.hybrid_tabled_slots,
+            r.dense_build_secs,
+            r.hybrid_build_secs,
+            r.tail_build_speedup,
+            r.dense_tokens_per_sec,
+            r.hybrid_tokens_per_sec,
+            r.threshold_selects_hybrid,
+        ));
+    }
+    body.push_str("  ],\n");
+    body.push_str("  \"gibbs_vs_lightlda\": [\n");
+    for (i, &(k, g, l)) in o1.iter().enumerate() {
+        let sep = if i + 1 < o1.len() { "," } else { "" };
+        body.push_str(&format!(
+            "    {{\"k\": {k}, \"gibbs_tokens_per_sec\": {g:.0}, \
+             \"lightlda_tokens_per_sec\": {l:.0}}}{sep}\n"
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("SMOKE").is_ok();
+    let o1 = if smoke {
+        println!("SMOKE=1: skipping the Gibbs-vs-LightLDA corpus sweeps");
+        Vec::new()
+    } else {
+        o1_vs_ok()
+    };
+    let scaling = k_scaling(smoke);
+    let json_path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_sampler.json".to_string());
+    write_json(&json_path, smoke, &scaling, &o1);
 }

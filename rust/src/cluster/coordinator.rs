@@ -90,6 +90,10 @@ struct IterAgg {
     changed: u64,
     /// Wall-clock of the slowest partition.
     secs: f64,
+    /// Alias-construction seconds summed over partitions.
+    alias_build_secs: f64,
+    /// Pipeline-stall seconds summed over partitions.
+    block_wait_secs: f64,
     partitions: usize,
     /// Summed perplexity when every partition evaluated this iteration.
     perplexity: Option<f64>,
@@ -104,6 +108,8 @@ fn aggregate(reports: &[Option<SweepReport>]) -> Option<IterAgg> {
     let tokens = reports.iter().flatten().map(|r| r.tokens).sum();
     let changed = reports.iter().flatten().map(|r| r.changed).sum();
     let secs = reports.iter().flatten().map(|r| r.seconds).fold(0.0f64, f64::max);
+    let alias_build_secs = reports.iter().flatten().map(|r| r.alias_build_secs).sum();
+    let block_wait_secs = reports.iter().flatten().map(|r| r.block_wait_secs).sum();
     let perplexity = if reports.iter().flatten().all(|r| r.evaluated) {
         let ll: f64 = reports.iter().flatten().map(|r| r.log_likelihood).sum();
         let n: u64 = reports.iter().flatten().map(|r| r.ll_tokens).sum();
@@ -111,7 +117,15 @@ fn aggregate(reports: &[Option<SweepReport>]) -> Option<IterAgg> {
     } else {
         None
     };
-    Some(IterAgg { tokens, changed, secs, partitions: reports.len(), perplexity })
+    Some(IterAgg {
+        tokens,
+        changed,
+        secs,
+        alias_build_secs,
+        block_wait_secs,
+        partitions: reports.len(),
+        perplexity,
+    })
 }
 
 /// A registered worker.
@@ -372,6 +386,7 @@ impl Coordinator {
                 buffer_cap: self.cfg.buffer_cap as u64,
                 dense_top_words: self.cfg.dense_top_words,
                 pipeline_depth: self.cfg.pipeline_depth as u64,
+                alias_dense_threshold: self.cfg.alias_dense_threshold,
                 scheme: self.cfg.scheme,
                 wt_layout: self.cfg.wt_layout,
                 seed: self.cfg.seed,
@@ -700,6 +715,8 @@ impl Coordinator {
                     if agg.secs > 0.0 { agg.tokens as f64 / agg.secs } else { 0.0 },
                 )
                 .set("changed_frac", agg.changed as f64 / agg.tokens.max(1) as f64)
+                .set("alias_build_secs", agg.alias_build_secs)
+                .set("block_wait_secs", agg.block_wait_secs)
                 .set("partitions", agg.partitions as f64);
             if let Some(p) = agg.perplexity {
                 row = row.set("perplexity", p);

@@ -64,6 +64,9 @@ pub struct SweepKnobs {
     pub dense_top_words: u64,
     /// Prefetch depth for model pulls.
     pub pipeline_depth: u64,
+    /// Row fill fraction (nnz/K) at or above which a word's proposal
+    /// table is built dense instead of as the sparse hybrid mixture.
+    pub alias_dense_threshold: f64,
     /// Row partitioning scheme on the shards.
     pub scheme: PartitionScheme,
     /// Storage layout of the word-topic matrix.
@@ -123,6 +126,11 @@ pub struct SweepReport {
     pub sparse_batches: u64,
     /// Wall-clock seconds of the sweep.
     pub seconds: f64,
+    /// Seconds spent densifying rows and building word-proposal tables.
+    pub alias_build_secs: f64,
+    /// Seconds the sampler waited on the pull pipeline for its next
+    /// block.
+    pub block_wait_secs: f64,
     /// Whether `log_likelihood`/`ll_tokens` carry an evaluation.
     pub evaluated: bool,
     /// Partition log-likelihood (additive across partitions).
@@ -285,6 +293,7 @@ impl SweepKnobs {
         w.u64(self.buffer_cap);
         w.u64(self.dense_top_words);
         w.u64(self.pipeline_depth);
+        w.f64(self.alias_dense_threshold);
         w.u8(self.scheme.tag());
         w.u8(self.wt_layout.tag());
         w.u64(self.seed);
@@ -304,6 +313,7 @@ impl SweepKnobs {
             buffer_cap: r.u64()?,
             dense_top_words: r.u64()?,
             pipeline_depth: r.u64()?,
+            alias_dense_threshold: r.f64()?,
             scheme: {
                 let t = r.u8()?;
                 PartitionScheme::from_tag(t)
@@ -370,6 +380,8 @@ impl SweepReport {
         w.u64(self.changed);
         w.u64(self.sparse_batches);
         w.f64(self.seconds);
+        w.f64(self.alias_build_secs);
+        w.f64(self.block_wait_secs);
         w.u8(u8::from(self.evaluated));
         w.f64(self.log_likelihood);
         w.u64(self.ll_tokens);
@@ -381,6 +393,8 @@ impl SweepReport {
             changed: r.u64()?,
             sparse_batches: r.u64()?,
             seconds: r.f64()?,
+            alias_build_secs: r.f64()?,
+            block_wait_secs: r.f64()?,
             evaluated: r.u8()? != 0,
             log_likelihood: r.f64()?,
             ll_tokens: r.u64()?,
@@ -509,6 +523,7 @@ mod tests {
             buffer_cap: 100_000,
             dense_top_words: 2000,
             pipeline_depth: 4,
+            alias_dense_threshold: 0.5,
             scheme: PartitionScheme::Cyclic,
             wt_layout: Layout::Sparse,
             seed: 0x1da,
@@ -556,6 +571,8 @@ mod tests {
                 changed: 40_000,
                 sparse_batches: 12,
                 seconds: 1.75,
+                alias_build_secs: 0.125,
+                block_wait_secs: 0.0625,
                 evaluated: true,
                 log_likelihood: -987654.25,
                 ll_tokens: 120_000,

@@ -192,6 +192,7 @@ fn setup_job(spec: &JobSpec, corpus: &Corpus) -> Result<ActiveJob> {
         buffer_cap: knobs.buffer_cap as usize,
         dense_top_words: knobs.dense_top_words,
         pipeline_depth: knobs.pipeline_depth as usize,
+        alias_dense_threshold: knobs.alias_dense_threshold,
         hyper,
         vocab_size: corpus.vocab_size,
     };
@@ -408,6 +409,8 @@ fn drive(
                         changed: stats.changed,
                         sparse_batches: stats.sparse_batches,
                         seconds: sw.secs(),
+                        alias_build_secs: stats.alias_build_secs,
+                        block_wait_secs: stats.block_wait_secs,
                         ..SweepReport::default()
                     };
                     if evaluate {

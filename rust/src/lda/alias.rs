@@ -1,13 +1,90 @@
-//! Vose alias tables (Vose, 1991) — O(K) construction, O(1) sampling.
+//! Alias tables for the LightLDA word proposal `q_w(k) ∝ n̂_wk + β`.
 //!
-//! LightLDA's word proposal `q_w(k) ∝ n_wk + β` must be drawn in O(1) to
-//! reach amortized O(1) per-token sampling (paper §3 / [14]). An alias
-//! table is built once per word per iteration and reused for all of that
-//! word's occurrences in the partition.
+//! Two constructions share one sampling contract ([`WordProposal`]):
+//!
+//! - [`AliasTable`] — the classic owned Vose table (Vose, 1991): O(K)
+//!   build over arbitrary weights, O(1) sampling. Used where many
+//!   tables must stay alive at once (the single-machine
+//!   [`crate::lda::lightlda::sweep_light`]) and by the micro-benchmarks.
+//! - [`AliasBuilder`] → [`WordAlias`] — the distributed sampler's hot
+//!   path. LightLDA (Yuan et al., 2015) decomposes the word proposal
+//!   into a mixture of a **sparse** mass over the row's nonzero topics
+//!   and a **uniform** βK smoothing component:
+//!
+//!   ```text
+//!   q_w(k) ∝ n̂_wk + β  =  S_w · (n̂_wk / S_w)  +  βK · (1/K)
+//!   ```
+//!
+//!   so a Vose table is needed only over the `nnz_w` nonzeros — an
+//!   O(nnz_w) build — while the β branch is drawn uniformly in O(1)
+//!   with mixture weight `βK / (S_w + βK)`. Zipf-tail words (the vast
+//!   majority of the vocabulary) build in time proportional to their
+//!   occupancy, not to K. Hot rows past a fill threshold are built
+//!   dense instead (mirroring the shards' adaptive promotion in
+//!   [`crate::ps::storage`]), where the plain O(K) table is both
+//!   cheaper to clear and faster to draw from. The builder owns every
+//!   buffer involved (prob/alias/scaled/worklists plus the stale-weight
+//!   slab behind `weight()`), so steady-state construction performs no
+//!   heap allocation at all.
+//!
+//! Either way the table retains the **stale** build-time masses:
+//! LightLDA's Metropolis–Hastings acceptance ratio needs exactly the
+//! proposal mass `q(k) = n̂_wk + β` the table was built from, looked up
+//! in O(1) through [`WordProposal::weight`].
 
 use crate::util::rng::Pcg64;
 
-/// A frozen alias table over `K` outcomes.
+/// The word-proposal contract the MH kernel
+/// ([`crate::lda::lightlda::resample_token`]) samples against: an O(1)
+/// draw plus O(1) access to the exact (stale, unnormalized) build-time
+/// mass of any outcome.
+pub trait WordProposal {
+    /// Draw one outcome.
+    fn sample(&self, rng: &mut Pcg64) -> u32;
+    /// Build-time (stale) unnormalized weight of outcome `k`.
+    fn weight(&self, k: u32) -> f64;
+    /// Sum of build-time weights.
+    fn total_weight(&self) -> f64;
+}
+
+/// Fill `prob[..n]` / `alias[..n]` from `scaled[..n]` (weights already
+/// scaled to mean 1) with Vose's two-worklist construction. `scaled` is
+/// consumed as scratch; `small`/`large` are cleared worklists.
+fn vose(
+    n: usize,
+    scaled: &mut [f64],
+    prob: &mut [f64],
+    alias: &mut [u32],
+    small: &mut Vec<u32>,
+    large: &mut Vec<u32>,
+) {
+    small.clear();
+    large.clear();
+    for (i, &s) in scaled[..n].iter().enumerate() {
+        if s < 1.0 {
+            small.push(i as u32);
+        } else {
+            large.push(i as u32);
+        }
+    }
+    while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+        small.pop();
+        prob[s as usize] = scaled[s as usize];
+        alias[s as usize] = l;
+        scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+        if scaled[l as usize] < 1.0 {
+            large.pop();
+            small.push(l);
+        }
+    }
+    // Numerical leftovers: everything remaining takes prob 1.
+    for &i in small.iter().chain(large.iter()) {
+        prob[i as usize] = 1.0;
+        alias[i as usize] = i;
+    }
+}
+
+/// A frozen owned alias table over `K` outcomes.
 ///
 /// Retains the (unnormalized) build-time weights: LightLDA's
 /// Metropolis–Hastings acceptance ratio needs the *stale* proposal mass
@@ -36,32 +113,10 @@ impl AliasTable {
 
         let mut prob = vec![0.0f64; k];
         let mut alias = vec![0u32; k];
-        // Scaled probabilities; "small" (< 1) and "large" (>= 1) worklists.
         let mut scaled: Vec<f64> = weights.iter().map(|&w| w * scale).collect();
         let mut small: Vec<u32> = Vec::with_capacity(k);
         let mut large: Vec<u32> = Vec::with_capacity(k);
-        for (i, &s) in scaled.iter().enumerate() {
-            if s < 1.0 {
-                small.push(i as u32);
-            } else {
-                large.push(i as u32);
-            }
-        }
-        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
-            small.pop();
-            prob[s as usize] = scaled[s as usize];
-            alias[s as usize] = l;
-            scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
-            if scaled[l as usize] < 1.0 {
-                large.pop();
-                small.push(l);
-            }
-        }
-        // Numerical leftovers: everything remaining takes prob 1.
-        for &i in small.iter().chain(large.iter()) {
-            prob[i as usize] = 1.0;
-            alias[i as usize] = i;
-        }
+        vose(k, &mut scaled, &mut prob, &mut alias, &mut small, &mut large);
         AliasTable { prob, alias, weights: weights.to_vec(), total }
     }
 
@@ -99,6 +154,302 @@ impl AliasTable {
     }
 }
 
+impl WordProposal for AliasTable {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> u32 {
+        AliasTable::sample(self, rng)
+    }
+
+    #[inline]
+    fn weight(&self, k: u32) -> f64 {
+        AliasTable::weight(self, k)
+    }
+
+    #[inline]
+    fn total_weight(&self) -> f64 {
+        AliasTable::total_weight(self)
+    }
+}
+
+/// How the stale-weight slab was last written, so the next build can
+/// clear it in time proportional to what was touched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+enum StaleDirty {
+    /// Already all zeros.
+    #[default]
+    Clean,
+    /// Only the columns in `stale_touched` are nonzero.
+    Touched,
+    /// A full-row build wrote everywhere.
+    Full,
+}
+
+/// Reusable construction workspace for per-word proposal tables.
+///
+/// One builder per sampling thread; every sweep reuses the same
+/// buffers, so after warm-up the per-word build performs **zero heap
+/// allocations**. Exactly one [`WordAlias`] view is alive at a time
+/// (it borrows the builder's buffers); building the next word's table
+/// recycles them.
+#[derive(Debug, Default)]
+pub struct AliasBuilder {
+    /// Acceptance probability per slot.
+    prob: Vec<f64>,
+    /// Alternative slot per slot.
+    alias: Vec<u32>,
+    /// Scaled-weight scratch consumed by the Vose worklists.
+    scaled: Vec<f64>,
+    /// Vose worklists.
+    small: Vec<u32>,
+    large: Vec<u32>,
+    /// Hybrid tables: topic id per slot (the row's nonzero topics).
+    topics: Vec<u32>,
+    /// K-length stale counts behind `weight()`; zero outside the last
+    /// build's footprint.
+    stale: Vec<f64>,
+    /// Columns of `stale` written by the last sparse-footprint build.
+    stale_touched: Vec<u32>,
+    /// How `stale` was last written.
+    dirty: StaleDirty,
+}
+
+impl AliasBuilder {
+    /// A fresh builder; buffers grow on first use and are reused after.
+    pub fn new() -> AliasBuilder {
+        AliasBuilder::default()
+    }
+
+    /// Zero the stale slab (proportional to the previous footprint) and
+    /// make sure every buffer covers `k` outcomes.
+    fn reset(&mut self, k: usize) {
+        match self.dirty {
+            StaleDirty::Clean => {}
+            StaleDirty::Touched => {
+                for &c in &self.stale_touched {
+                    self.stale[c as usize] = 0.0;
+                }
+            }
+            StaleDirty::Full => self.stale.fill(0.0),
+        }
+        self.stale_touched.clear();
+        self.dirty = StaleDirty::Clean;
+        if self.stale.len() < k {
+            self.stale.resize(k, 0.0);
+        }
+        if self.prob.len() < k {
+            self.prob.resize(k, 0.0);
+            self.alias.resize(k, 0);
+            self.scaled.resize(k, 0.0);
+            self.topics.resize(k, 0);
+        }
+    }
+
+    /// Build the word proposal from a full dense `K`-length count row:
+    /// weights `row[k] + beta`. O(K).
+    pub fn build_dense(&mut self, row: &[i64], beta: f64) -> WordAlias<'_> {
+        let k = row.len();
+        assert!(k > 0, "alias table needs at least one outcome");
+        assert!(beta > 0.0, "beta must be positive");
+        self.reset(k);
+        let mut mass = 0.0f64;
+        for (c, &v) in row.iter().enumerate() {
+            self.stale[c] = v as f64;
+            mass += v as f64;
+        }
+        self.dirty = StaleDirty::Full;
+        let total = mass + beta * k as f64;
+        let scale = k as f64 / total;
+        for (s, st) in self.scaled[..k].iter_mut().zip(&self.stale[..k]) {
+            *s = (st + beta) * scale;
+        }
+        vose(
+            k,
+            &mut self.scaled,
+            &mut self.prob,
+            &mut self.alias,
+            &mut self.small,
+            &mut self.large,
+        );
+        WordAlias {
+            prob: &self.prob[..k],
+            alias: &self.alias[..k],
+            topics: None,
+            stale: &self.stale[..k],
+            beta,
+            k: k as u32,
+            sparse_mass: total,
+            total,
+        }
+    }
+
+    /// Build the word proposal from a sparse `(topic, count)` pair list
+    /// over `k` topics — the LightLDA mixture decomposition. O(nnz)
+    /// when the row stays below `dense_threshold` fill; rows at or
+    /// above it get the classic dense table (O(k)), which draws faster
+    /// once most slots are occupied anyway.
+    ///
+    /// `dense_threshold` is the nnz/K fill fraction at which to promote
+    /// (0.0 = always dense, > 1.0 = never).
+    pub fn build_hybrid(
+        &mut self,
+        pairs: &[(u32, i64)],
+        k: u32,
+        beta: f64,
+        dense_threshold: f64,
+    ) -> WordAlias<'_> {
+        let kk = k as usize;
+        assert!(kk > 0, "alias table needs at least one outcome");
+        assert!(beta > 0.0, "beta must be positive");
+        self.reset(kk);
+        let nnz = pairs.len();
+        let mut mass = 0.0f64;
+        for &(c, v) in pairs {
+            assert!((c as usize) < kk, "pair column {c} out of range for K={k}");
+            self.stale[c as usize] = v as f64;
+            self.stale_touched.push(c);
+            mass += v as f64;
+        }
+        self.dirty = StaleDirty::Touched;
+        let total = mass + beta * kk as f64;
+
+        if nnz as f64 >= dense_threshold * kk as f64 {
+            // Hot row: the dense table over all K outcomes (stale is
+            // already the scattered row; zeros contribute just β).
+            let scale = kk as f64 / total;
+            for (s, st) in self.scaled[..kk].iter_mut().zip(&self.stale[..kk]) {
+                *s = (st + beta) * scale;
+            }
+            vose(
+                kk,
+                &mut self.scaled,
+                &mut self.prob,
+                &mut self.alias,
+                &mut self.small,
+                &mut self.large,
+            );
+            return WordAlias {
+                prob: &self.prob[..kk],
+                alias: &self.alias[..kk],
+                topics: None,
+                stale: &self.stale[..kk],
+                beta,
+                k,
+                sparse_mass: total,
+                total,
+            };
+        }
+
+        // Tail row: Vose only over the nonzeros; the β component is the
+        // uniform branch of the mixture, never tabled.
+        if mass > 0.0 {
+            let scale = nnz as f64 / mass;
+            for (i, &(c, v)) in pairs.iter().enumerate() {
+                self.topics[i] = c;
+                self.scaled[i] = v as f64 * scale;
+            }
+            vose(
+                nnz,
+                &mut self.scaled,
+                &mut self.prob,
+                &mut self.alias,
+                &mut self.small,
+                &mut self.large,
+            );
+        }
+        let tabled = if mass > 0.0 { nnz } else { 0 };
+        WordAlias {
+            prob: &self.prob[..tabled],
+            alias: &self.alias[..tabled],
+            topics: Some(&self.topics[..tabled]),
+            stale: &self.stale[..kk],
+            beta,
+            k,
+            sparse_mass: mass,
+            total,
+        }
+    }
+}
+
+/// A per-word proposal table borrowed from an [`AliasBuilder`] — either
+/// the dense Vose table over all `K` outcomes or the hybrid
+/// sparse-plus-uniform mixture. Alive only while its word's occurrences
+/// are being sampled; the next build reuses the buffers.
+#[derive(Debug)]
+pub struct WordAlias<'a> {
+    prob: &'a [f64],
+    alias: &'a [u32],
+    /// `Some(topic ids)` for the hybrid table (slot → topic); `None`
+    /// when slots are the topics `0..k` themselves.
+    topics: Option<&'a [u32]>,
+    /// K-length stale counts (zero-default); `weight(k)` adds β.
+    stale: &'a [f64],
+    beta: f64,
+    k: u32,
+    /// Mass of the tabled (sparse) component, `S_w`. Equal to `total`
+    /// for dense tables (the mixture branch is never taken).
+    sparse_mass: f64,
+    /// `S_w + βK`.
+    total: f64,
+}
+
+impl WordAlias<'_> {
+    /// True when this table used the sparse mixture construction.
+    pub fn is_hybrid(&self) -> bool {
+        self.topics.is_some()
+    }
+
+    /// Number of tabled slots (nnz for hybrid, K for dense) — the
+    /// build-cost proxy the benches report.
+    pub fn tabled_slots(&self) -> usize {
+        match self.topics {
+            Some(t) => t.len(),
+            None => self.prob.len(),
+        }
+    }
+}
+
+impl WordProposal for WordAlias<'_> {
+    /// O(1): for hybrid tables one mixture coin, then either a Vose
+    /// draw over the nonzeros or a uniform topic.
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> u32 {
+        match self.topics {
+            None => {
+                let slot = rng.below(self.prob.len());
+                if rng.f64() < self.prob[slot] {
+                    slot as u32
+                } else {
+                    self.alias[slot]
+                }
+            }
+            Some(topics) => {
+                if rng.f64() * self.total < self.sparse_mass {
+                    let slot = rng.below(topics.len());
+                    let idx = if rng.f64() < self.prob[slot] {
+                        slot
+                    } else {
+                        self.alias[slot] as usize
+                    };
+                    topics[idx]
+                } else {
+                    rng.below(self.k as usize) as u32
+                }
+            }
+        }
+    }
+
+    /// Exact stale proposal mass `n̂_wk + β`, O(1) for any topic.
+    #[inline]
+    fn weight(&self, k: u32) -> f64 {
+        self.stale[k as usize] + self.beta
+    }
+
+    #[inline]
+    fn total_weight(&self) -> f64 {
+        self.total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +459,15 @@ mod tests {
         let table = AliasTable::new(weights);
         let mut rng = Pcg64::new(seed);
         let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    fn empirical_of(table: &impl WordProposal, k: usize, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        let mut counts = vec![0usize; k];
         for _ in 0..draws {
             counts[table.sample(&mut rng) as usize] += 1;
         }
@@ -182,5 +542,164 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Random Zipf-ish sparse rows: the hybrid table's empirical draw
+    /// frequencies must match the exact masses `(n̂_wk + β) / (S_w + βK)`
+    /// — i.e. the identical distribution a dense table over the
+    /// densified row would sample — and `weight()`/`total_weight()`
+    /// must agree with the dense construction to within float rounding.
+    #[test]
+    fn hybrid_matches_dense_distribution_property() {
+        forall_explain(
+            "hybrid matches the n̂+β mixture",
+            12,
+            |rng| {
+                let k = 8 + rng.below(56);
+                let nnz = 1 + rng.below(k / 2);
+                let mut cols: Vec<u32> = (0..k as u32).collect();
+                rng.shuffle(&mut cols);
+                let mut pairs: Vec<(u32, i64)> =
+                    cols[..nnz].iter().map(|&c| (c, 1 + rng.below(40) as i64)).collect();
+                pairs.sort_unstable();
+                (k, pairs)
+            },
+            |(k, pairs)| {
+                let beta = 0.05;
+                let kk = *k;
+                let mut builder = AliasBuilder::new();
+                // Force the sparse construction regardless of fill.
+                let table = builder.build_hybrid(pairs, kk as u32, beta, 2.0);
+                assert!(table.is_hybrid());
+                let mut row = vec![0i64; kk];
+                for &(c, v) in pairs {
+                    row[c as usize] = v;
+                }
+                let mass: i64 = row.iter().sum();
+                let total = mass as f64 + beta * kk as f64;
+                // weight() is the exact stale mass for every topic.
+                for c in 0..kk {
+                    let want = row[c] as f64 + beta;
+                    let got = table.weight(c as u32);
+                    if (got - want).abs() > 1e-12 * want {
+                        return Err(format!("weight({c}) = {got}, want {want}"));
+                    }
+                }
+                if (table.total_weight() - total).abs() > 1e-9 * total {
+                    return Err(format!("total_weight {} vs {}", table.total_weight(), total));
+                }
+                let draws = 200_000;
+                let freq = empirical_of(&table, kk, draws, 0xa1d);
+                let mut chi2 = 0.0;
+                for c in 0..kk {
+                    let expect = (row[c] as f64 + beta) / total;
+                    let diff = freq[c] - expect;
+                    chi2 += diff * diff / expect;
+                }
+                let dof = (kk - 1) as f64;
+                if chi2 * draws as f64 > dof * 4.0 * draws as f64 / 1000.0 + 30.0 * dof {
+                    return Err(format!("chi2 statistic too large: {}", chi2 * draws as f64));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The fill threshold selects the construction: 0.0 forces dense,
+    /// anything above 1.0 forces the sparse mixture — and both sample
+    /// the same distribution.
+    #[test]
+    fn dense_promotion_threshold_selects_construction() {
+        let pairs: Vec<(u32, i64)> = vec![(1, 5), (3, 2), (7, 9)];
+        let beta = 0.1;
+        let mut builder = AliasBuilder::new();
+        let dense_freq = {
+            let t = builder.build_hybrid(&pairs, 8, beta, 0.0);
+            assert!(!t.is_hybrid());
+            assert_eq!(t.tabled_slots(), 8);
+            empirical_of(&t, 8, 200_000, 21)
+        };
+        let hybrid_freq = {
+            let t = builder.build_hybrid(&pairs, 8, beta, 2.0);
+            assert!(t.is_hybrid());
+            assert_eq!(t.tabled_slots(), 3);
+            empirical_of(&t, 8, 200_000, 22)
+        };
+        let total = 16.0 + beta * 8.0;
+        for c in 0..8usize {
+            let count = pairs.iter().find(|&&(pc, _)| pc == c as u32).map_or(0, |&(_, v)| v);
+            let expect = (count as f64 + beta) / total;
+            assert!((dense_freq[c] - expect).abs() < 0.01, "dense topic {c}");
+            assert!((hybrid_freq[c] - expect).abs() < 0.01, "hybrid topic {c}");
+        }
+        // The default promotion point mirrors the shards' 1/2-fill rule:
+        // 3/8 fill stays sparse, 5/8 goes dense.
+        let t = builder.build_hybrid(&pairs, 8, beta, 0.5);
+        assert!(t.is_hybrid());
+        let hot: Vec<(u32, i64)> = (0..5).map(|c| (c, 1)).collect();
+        let t = builder.build_hybrid(&hot, 8, beta, 0.5);
+        assert!(!t.is_hybrid());
+    }
+
+    /// Reusing one builder across many rows must not leak state between
+    /// builds: rebuilding the same row after unrelated builds (dense and
+    /// sparse, wider and narrower) reproduces bit-identical draws and
+    /// weights.
+    #[test]
+    fn builder_reuse_is_deterministic() {
+        fn draw(t: &WordAlias<'_>, seed: u64) -> (Vec<u32>, Vec<f64>, f64) {
+            let mut rng = Pcg64::new(seed);
+            let draws = (0..512).map(|_| t.sample(&mut rng)).collect();
+            let weights = (0..16).map(|c| t.weight(c)).collect();
+            (draws, weights, t.total_weight())
+        }
+        let pairs: Vec<(u32, i64)> = vec![(0, 3), (4, 1), (9, 12)];
+        let beta = 0.01;
+        let mut builder = AliasBuilder::new();
+        let before = draw(&builder.build_hybrid(&pairs, 16, beta, 0.5), 77);
+        // Interleave unrelated builds that dirty every buffer: a wider
+        // dense row, a different sparse row, an all-zero row.
+        let wide: Vec<i64> = (0..64).map(|i| (i % 7) as i64).collect();
+        let _ = builder.build_dense(&wide, beta);
+        let _ = builder.build_hybrid(&[(2, 8), (3, 8)], 16, beta, 2.0);
+        let _ = builder.build_hybrid(&[], 16, beta, 0.5);
+        let after = draw(&builder.build_hybrid(&pairs, 16, beta, 0.5), 77);
+        assert_eq!(before, after);
+    }
+
+    /// An all-zero row (possible under staleness only defensively) must
+    /// sample uniformly from the β smoothing component.
+    #[test]
+    fn hybrid_zero_row_samples_uniformly() {
+        let mut builder = AliasBuilder::new();
+        let t = builder.build_hybrid(&[], 10, 0.5, 0.5);
+        assert!(t.is_hybrid());
+        assert_eq!(t.tabled_slots(), 0);
+        assert_eq!(t.weight(3), 0.5);
+        assert!((t.total_weight() - 5.0).abs() < 1e-12);
+        let freq = empirical_of(&t, 10, 100_000, 31);
+        for f in freq {
+            assert!((f - 0.1).abs() < 0.01, "{f}");
+        }
+    }
+
+    /// The owned table and the builder's dense construction agree on
+    /// weights and distribution (they share the Vose core).
+    #[test]
+    fn owned_and_builder_dense_tables_agree() {
+        let row: Vec<i64> = vec![4, 0, 1, 7, 0, 2];
+        let beta = 0.2;
+        let weights: Vec<f64> = row.iter().map(|&c| c as f64 + beta).collect();
+        let owned = AliasTable::new(&weights);
+        let mut builder = AliasBuilder::new();
+        let built = builder.build_dense(&row, beta);
+        for c in 0..row.len() as u32 {
+            assert!((owned.weight(c) - WordProposal::weight(&built, c)).abs() < 1e-12);
+        }
+        let a = empirical_of(&owned, row.len(), 200_000, 41);
+        let b = empirical_of(&built, row.len(), 200_000, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 0.01, "{x} vs {y}");
+        }
     }
 }

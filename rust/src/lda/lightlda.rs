@@ -19,7 +19,7 @@
 //! target density and the proposal's own (stale/inclusive) masses for
 //! the `q` terms, exactly as in Yuan et al. (2015), eqs. (3)–(4).
 
-use crate::lda::alias::AliasTable;
+use crate::lda::alias::{AliasTable, WordProposal};
 use crate::lda::hyper::LdaHyper;
 use crate::lda::sparse_counts::DocTopicCounts;
 use crate::util::rng::Pcg64;
@@ -31,7 +31,12 @@ use crate::util::rng::Pcg64;
 /// on the fly. This keeps the common no-change path read-only — the
 /// caller mutates state only when the topic actually changes, which the
 /// perf profile showed is worth ~20% of end-to-end iteration time.
-pub struct TokenView<'a> {
+///
+/// Generic over the word-proposal table `P` so the distributed sweep's
+/// borrowed hybrid tables ([`crate::lda::alias::WordAlias`]) and the
+/// single-machine sweep's owned [`AliasTable`]s share one monomorphized
+/// kernel with no dynamic dispatch in the hot loop.
+pub struct TokenView<'a, P> {
     /// Live (inclusive) word-topic row `n_wk[w, ·]`.
     pub word_row: &'a [i64],
     /// Live (inclusive) global topic totals `n_k`.
@@ -42,7 +47,7 @@ pub struct TokenView<'a> {
     /// still carrying its old topic (used by the O(1) doc proposal).
     pub doc_assignments: &'a [u32],
     /// Stale alias table for the word proposal (weights = `n̂_wk + β`).
-    pub word_alias: &'a AliasTable,
+    pub word_alias: &'a P,
     /// Vocabulary size.
     pub v: u32,
     /// Hyper-parameters.
@@ -53,7 +58,7 @@ pub struct TokenView<'a> {
 /// assigning this token to topic `k`, excluding the token itself
 /// (`n^{-dw}` = inclusive counts minus the `k == z_old` indicator).
 #[inline]
-fn posterior_mass(view: &TokenView<'_>, k: u32, z_old: u32) -> f64 {
+fn posterior_mass<P>(view: &TokenView<'_, P>, k: u32, z_old: u32) -> f64 {
     let excl = f64::from(k == z_old);
     let vbeta = view.v as f64 * view.hyper.beta;
     (view.doc_counts.get(k) as f64 - excl + view.hyper.alpha)
@@ -66,7 +71,7 @@ fn posterior_mass(view: &TokenView<'_>, k: u32, z_old: u32) -> f64 {
 /// Total mass `L_d + αK` splits into the histogram part (pick a random
 /// token's topic) and the smoothing part (uniform topic).
 #[inline]
-fn doc_propose(view: &TokenView<'_>, k_topics: u32, rng: &mut Pcg64) -> u32 {
+fn doc_propose<P>(view: &TokenView<'_, P>, k_topics: u32, rng: &mut Pcg64) -> u32 {
     let len = view.doc_assignments.len() as f64;
     let alpha_mass = view.hyper.alpha * k_topics as f64;
     if rng.f64() * (len + alpha_mass) < len {
@@ -80,7 +85,7 @@ fn doc_propose(view: &TokenView<'_>, k_topics: u32, rng: &mut Pcg64) -> u32 {
 /// `n_dk^{inclusive} + α` (the assignments array still holds `z_old`, so
 /// the inclusive counts are exactly what the proposal samples from).
 #[inline]
-fn doc_proposal_mass(view: &TokenView<'_>, k: u32) -> f64 {
+fn doc_proposal_mass<P>(view: &TokenView<'_, P>, k: u32) -> f64 {
     view.doc_counts.get(k) as f64 + view.hyper.alpha
 }
 
@@ -90,9 +95,9 @@ fn doc_proposal_mass(view: &TokenView<'_>, k: u32) -> f64 {
 /// `p(z)` is cached across proposals and refreshed only when a proposal
 /// is accepted (the profile showed `posterior_mass` as the single
 /// hottest function; this halves its call count).
-pub fn resample_token(
+pub fn resample_token<P: WordProposal>(
     z_old: u32,
-    view: &TokenView<'_>,
+    view: &TokenView<'_, P>,
     k_topics: u32,
     mh_steps: u32,
     rng: &mut Pcg64,
@@ -128,7 +133,11 @@ pub fn resample_token(
     z
 }
 
-/// Build the word-proposal alias table from a (stale) word-topic row.
+/// Build an **owned** word-proposal alias table from a (stale) dense
+/// word-topic row. Used where many tables stay alive at once
+/// ([`sweep_light`] keeps one per word for the whole sweep); the
+/// distributed sweep instead rebuilds per word through the reusable
+/// [`crate::lda::alias::AliasBuilder`] workspace.
 pub fn word_alias(row: &[i64], beta: f64) -> AliasTable {
     let weights: Vec<f64> = row.iter().map(|&c| c as f64 + beta).collect();
     AliasTable::new(&weights)

@@ -8,10 +8,13 @@
 //!
 //! Blocks can be pulled **dense** (full `rows x K` slabs over
 //! [`crate::ps::client::PullTicket`]) or **sparse** (`(col, val)` pairs
-//! over [`crate::ps::client::SparsePullTicket`], densified client-side
-//! into the same [`Block`] shape). Sparse mode ships bytes proportional
-//! to row occupancy — for the Zipf-tail vocabulary that is a fraction
-//! of the dense slab — while the sampler still sees contiguous rows.
+//! over [`crate::ps::client::SparsePullTicket`], handed to the consumer
+//! **as pair lists** — [`BlockData::Sparse`] — never densified here).
+//! Sparse mode ships bytes *and block memory* proportional to row
+//! occupancy: a block costs O(pairs) instead of `rows x K x 8` bytes,
+//! and the sampler densifies at most one row at a time into its own
+//! reused scratch slab. Consumers that genuinely need the slab (the
+//! full-model pull) call [`Block::into_dense`].
 //!
 //! Shard errors propagate through the ticket into
 //! [`PullPipeline::next_block`]'s `Result` — there is no background
@@ -24,14 +27,37 @@ use crate::ps::client::{BigMatrix, PullTicket, SparsePullTicket, SparseRow};
 use crate::util::error::{Error, Result};
 
 /// A pulled model block: the block index, the global row ids, and their
-/// values (row-major, `rows.len() x K`).
+/// values in whichever shape the pull mode produced.
 pub struct Block {
     /// Index into the block list.
     pub index: usize,
     /// Global row (word) ids.
     pub rows: Vec<u64>,
-    /// Pulled values.
-    pub values: Vec<i64>,
+    /// Pulled values, dense or sparse per [`PullMode`].
+    pub data: BlockData,
+}
+
+/// The values of one pulled block.
+pub enum BlockData {
+    /// Row-major `rows.len() x K` slab.
+    Dense(Vec<i64>),
+    /// One `(col, val)` pair list per row, in row order — exactly the
+    /// wire shape of [`BigMatrix::pull_sparse_rows_async`], O(pairs)
+    /// memory.
+    Sparse(Vec<SparseRow<i64>>),
+}
+
+impl Block {
+    /// The block's values as a dense row-major `rows.len() x k` slab,
+    /// scattering pair lists when the block is sparse. A column id at
+    /// or beyond `k` is a malformed reply and surfaces as a decode
+    /// error rather than a panic.
+    pub fn into_dense(self, k: usize) -> Result<Vec<i64>> {
+        match self.data {
+            BlockData::Dense(values) => Ok(values),
+            BlockData::Sparse(pairs) => densify(pairs, k),
+        }
+    }
 }
 
 /// How the pipeline pulls its blocks off the parameter server.
@@ -40,7 +66,7 @@ pub enum PullMode {
     /// Full rows ([`BigMatrix::pull_rows_async`]).
     Dense,
     /// Sparse `(col, val)` pairs ([`BigMatrix::pull_sparse_rows_async`]),
-    /// densified client-side.
+    /// delivered as pair lists ([`BlockData::Sparse`]).
     Sparse,
 }
 
@@ -119,10 +145,10 @@ impl PullPipeline {
         }
     }
 
-    fn resolve(&self, ticket: Inflight) -> Result<Vec<i64>> {
+    fn resolve(&self, ticket: Inflight) -> Result<BlockData> {
         match ticket {
-            Inflight::Dense(t) => t.wait(),
-            Inflight::Sparse(t) => densify(t.wait()?, self.matrix.cols() as usize),
+            Inflight::Dense(t) => Ok(BlockData::Dense(t.wait()?)),
+            Inflight::Sparse(t) => Ok(BlockData::Sparse(t.wait()?)),
         }
     }
 
@@ -148,10 +174,10 @@ impl PullPipeline {
             let index = self.next_index;
             self.next_index += 1;
             let ticket = self.issue(&rows);
-            return Some(self.resolve(ticket).map(|values| Block { index, rows, values }));
+            return Some(self.resolve(ticket).map(|data| Block { index, rows, data }));
         }
         let (index, rows, ticket) = self.inflight.pop_front()?;
-        let result = self.resolve(ticket).map(|values| Block { index, rows, values });
+        let result = self.resolve(ticket).map(|data| Block { index, rows, data });
         // Keep the window full while the caller samples this block.
         self.fill();
         Some(result)
@@ -225,8 +251,10 @@ mod tests {
             let b = b.unwrap();
             seen.push(b.index);
             // Check pulled values match what we pushed.
-            for (i, &r) in b.rows.iter().enumerate() {
-                assert_eq!(b.values[i * 4], r as i64 + 1, "row {r}");
+            let rows = b.rows.clone();
+            let values = b.into_dense(4).unwrap();
+            for (i, &r) in rows.iter().enumerate() {
+                assert_eq!(values[i * 4], r as i64 + 1, "row {r}");
             }
         }
         assert_eq!(seen, vec![0, 1, 2]);
@@ -248,7 +276,11 @@ mod tests {
                         let (d, s) = (d.unwrap(), s.unwrap());
                         assert_eq!(d.index, s.index);
                         assert_eq!(d.rows, s.rows);
-                        assert_eq!(d.values, s.values, "layout {layout:?}");
+                        assert_eq!(
+                            d.into_dense(4).unwrap(),
+                            s.into_dense(4).unwrap(),
+                            "layout {layout:?}"
+                        );
                     }
                     (d, s) => panic!(
                         "pipelines diverged: dense ended={}, sparse ended={}",
@@ -258,6 +290,25 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sparse_mode_hands_over_pair_lists_without_densify() {
+        // The zero-densify contract: a sparse pull must surface as the
+        // raw pair lists (O(pairs) memory), with exactly the nonzeros.
+        let (_g, m) = setup_with_layout(Layout::Sparse);
+        let mut p = PullPipeline::start_with_mode(m, vec![vec![3u64, 7]], 1, PullMode::Sparse);
+        let b = p.next_block().unwrap().unwrap();
+        match &b.data {
+            BlockData::Sparse(rows) => {
+                // Each seeded row holds its id+1 in column 0, nothing else.
+                assert_eq!(rows.len(), 2);
+                assert_eq!(rows[0], vec![(0u32, 4i64)]);
+                assert_eq!(rows[1], vec![(0u32, 8i64)]);
+            }
+            BlockData::Dense(_) => panic!("sparse pull was densified in the pipeline"),
+        }
+        assert!(p.next_block().is_none());
     }
 
     #[test]

@@ -13,20 +13,33 @@
 //! drives a single runner in a remote process. Keeping this the *same
 //! code path* is what makes the two deployment modes numerically
 //! equivalent.
+//!
+//! The sweep's inner loop is sparse end to end: sparse blocks arrive as
+//! `(col, val)` pair lists ([`crate::lda::pipeline::BlockData::Sparse`])
+//! and only the *current* word's row is densified — into a reused
+//! scratch slab cleared through a touched-column list, so per-word cost
+//! is O(nnz_w + reassignments), not O(K). Word-proposal tables are
+//! built through a reusable [`AliasBuilder`] (the LightLDA hybrid
+//! mixture, O(nnz_w) for tail words, dense above
+//! [`SweepConfig::alias_dense_threshold`] fill), and the runner owns
+//! all scratch, so the steady-state loop performs **no heap
+//! allocations** per word or per token.
 
 use std::ops::Range;
 
 use crate::corpus::dataset::{Corpus, Document};
 use crate::eval::perplexity::{log_likelihood_docs, TopicModel};
+use crate::lda::alias::AliasBuilder;
 use crate::lda::buffer::UpdateBuffer;
 use crate::lda::hyper::LdaHyper;
-use crate::lda::lightlda::{resample_token, word_alias, TokenView};
-use crate::lda::pipeline::{word_blocks, PullMode, PullPipeline};
+use crate::lda::lightlda::{resample_token, TokenView};
+use crate::lda::pipeline::{word_blocks, BlockData, PullMode, PullPipeline};
 use crate::lda::sparse_counts::DocTopicCounts;
 use crate::ps::client::BigMatrix;
 use crate::ps::messages::Layout;
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
 
 /// The sampling knobs a sweep needs, extracted from
 /// [`crate::lda::trainer::TrainConfig`] (or a cluster
@@ -46,6 +59,10 @@ pub struct SweepConfig {
     pub dense_top_words: u64,
     /// Prefetch depth for model pulls (0 = synchronous).
     pub pipeline_depth: usize,
+    /// Row fill fraction (nnz/K) at or above which a word's proposal
+    /// table is built dense instead of as the sparse hybrid mixture
+    /// (0.0 = always dense — the ablation; > 1.0 = never).
+    pub alias_dense_threshold: f64,
     /// Resolved hyper-parameters.
     pub hyper: LdaHyper,
     /// Vocabulary size V.
@@ -64,6 +81,11 @@ pub struct IterStats {
     pub sparse_batches: u64,
     /// Wall-clock seconds.
     pub seconds: f64,
+    /// Seconds spent densifying rows and building word-proposal tables.
+    pub alias_build_secs: f64,
+    /// Seconds the sampler sat waiting on the pull pipeline for its
+    /// next block (pipeline stalls; ~0 when prefetch keeps up).
+    pub block_wait_secs: f64,
 }
 
 /// The deterministic per-partition RNG: partition `p` gets the `p`-th
@@ -95,7 +117,8 @@ pub fn pull_mode_for(layout: Layout) -> PullMode {
 /// prefetch pipeline the sampler uses (§3.4): later chunks are in
 /// flight while earlier ones are copied out, and `depth == 0` keeps the
 /// synchronous ablation truly synchronous. In sparse mode the Zipf tail
-/// crosses the wire as pairs, not slabs.
+/// crosses the wire as pairs, not slabs; the model slab itself is dense,
+/// so this is the one consumer that densifies whole blocks.
 pub fn pull_full_model(
     n_wk: &BigMatrix<i64>,
     vocab_size: u32,
@@ -113,10 +136,81 @@ pub fn pull_full_model(
     );
     let mut values = Vec::with_capacity(vocab_size as usize * k);
     while let Some(block) = pipeline.next_block() {
-        values.extend(block?.values);
+        values.extend(block?.into_dense(k)?);
     }
     let n_k = n_wk.pull_col_sums()?;
     Ok(TopicModel { k: n_wk.cols(), v: vocab_size, n_wk: values, n_k, hyper })
+}
+
+/// Reusable one-row densification scratch: the live row of the word
+/// currently being sampled, zero outside `touched`. Clearing walks the
+/// touched list, so a Zipf-tail word costs O(nnz + reassignments) — the
+/// slab itself is written once and never re-zeroed wholesale.
+#[derive(Debug, Default)]
+struct RowScratch {
+    /// K-length slab (grown once, then reused).
+    values: Vec<i64>,
+    /// Columns of `values` that may be nonzero.
+    touched: Vec<u32>,
+}
+
+impl RowScratch {
+    /// Grow the slab to cover `k` columns (new columns are zero).
+    fn ensure(&mut self, k: usize) {
+        if self.values.len() < k {
+            self.values.resize(k, 0);
+        }
+    }
+
+    /// Zero everything the previous word wrote.
+    fn clear(&mut self) {
+        for &c in &self.touched {
+            self.values[c as usize] = 0;
+        }
+        self.touched.clear();
+    }
+
+    /// Load a dense row (dense pull mode): records the nonzeros so the
+    /// next clear stays proportional to occupancy.
+    fn load_dense(&mut self, row: &[i64]) {
+        self.clear();
+        for (c, &v) in row.iter().enumerate() {
+            if v != 0 {
+                self.values[c] = v;
+                self.touched.push(c as u32);
+            }
+        }
+    }
+
+    /// Scatter a sparse pair list (sparse pull mode). A column at or
+    /// beyond `k` is a malformed reply and surfaces as a decode error
+    /// rather than a panic on the sampling thread.
+    fn load_sparse(&mut self, pairs: &[(u32, i64)], k: usize) -> Result<()> {
+        self.clear();
+        for &(c, v) in pairs {
+            if c as usize >= k {
+                return Err(Error::Decode(format!(
+                    "sparse pull returned column {c} for a {k}-column matrix"
+                )));
+            }
+            self.values[c as usize] = v;
+            self.touched.push(c);
+        }
+        Ok(())
+    }
+
+    /// Apply a reassignment to the live row, keeping the touched list
+    /// aware of both columns. `from` is normally already tracked (the
+    /// token's inclusive count makes it nonzero in the pulled row), but
+    /// re-pushing it is one cheap duplicate and keeps the clear exact
+    /// even if a stale reply ever understates a count.
+    #[inline]
+    fn shift(&mut self, from: u32, to: u32) {
+        self.values[from as usize] -= 1;
+        self.values[to as usize] += 1;
+        self.touched.push(from);
+        self.touched.push(to);
+    }
 }
 
 /// One partition's sampler state (the executor's slice of the RDD).
@@ -135,6 +229,11 @@ pub struct SweepRunner {
     present: Vec<bool>,
     /// Worker RNG.
     rng: Pcg64,
+    /// Reusable word-proposal construction workspace (zero per-word
+    /// allocations in the steady state).
+    builder: AliasBuilder,
+    /// Reusable live-row scratch for the word under sampling.
+    row: RowScratch,
 }
 
 impl SweepRunner {
@@ -163,7 +262,16 @@ impl SweepRunner {
             doc_counts.push(DocTopicCounts::from_assignments(&z));
             assignments.push(z);
         }
-        SweepRunner { doc_range, assignments, doc_counts, occurrences, present, rng }
+        SweepRunner {
+            doc_range,
+            assignments,
+            doc_counts,
+            occurrences,
+            present,
+            rng,
+            builder: AliasBuilder::new(),
+            row: RowScratch::default(),
+        }
     }
 
     /// Fresh random initialization at iteration 0.
@@ -240,6 +348,15 @@ impl SweepRunner {
     /// Topic totals need no pushes of their own: every reassignment is
     /// already in the `n_wk` deltas, and the next iteration's snapshot
     /// re-derives the totals as server-side column sums.
+    ///
+    /// Per word: the row is densified (sparse blocks: scattered from
+    /// its pair list) into the runner's reused scratch slab, the
+    /// proposal table is built through the reused [`AliasBuilder`]
+    /// (hybrid for tail words, dense at/above
+    /// [`SweepConfig::alias_dense_threshold`] fill), all occurrences
+    /// are resampled against the scratch row, and the scratch is
+    /// cleared through its touched-column list — no per-word or
+    /// per-token heap allocation anywhere on this path.
     pub fn sweep(
         &mut self,
         cfg: &SweepConfig,
@@ -252,6 +369,7 @@ impl SweepRunner {
         let hyper = cfg.hyper;
         let mut stats = IterStats::default();
         let mut buffer = UpdateBuffer::new(cfg.buffer_cap, cfg.dense_top_words, k);
+        self.row.ensure(kk);
 
         let blocks = word_blocks(&self.present, cfg.block_words);
         let mut pipeline = PullPipeline::start_with_mode(
@@ -261,15 +379,37 @@ impl SweepRunner {
             pull_mode_for(n_wk.layout()),
         );
 
-        while let Some(block) = pipeline.next_block() {
-            let mut block = block?;
+        loop {
+            // Attribute time blocked on the pipeline separately from
+            // compute: nonzero wait means prefetch is not keeping up.
+            let wait = Stopwatch::new();
+            let Some(block) = pipeline.next_block() else {
+                stats.block_wait_secs += wait.secs();
+                break;
+            };
+            stats.block_wait_secs += wait.secs();
+            let block = block?;
             // Sample all occurrences of each word in the block while its
-            // alias table (built from the just-pulled, stale row) is
-            // fresh.
-            for (bi, &wu) in block.rows.clone().iter().enumerate() {
+            // proposal table (built from the just-pulled, stale row) is
+            // fresh. The block itself is never mutated: the live row
+            // lives in `self.row`, so no clone of the row list is
+            // needed to appease the borrow checker.
+            for (bi, &wu) in block.rows.iter().enumerate() {
                 let w = wu as usize;
-                let row_range = bi * kk..(bi + 1) * kk;
-                let alias = word_alias(&block.values[row_range.clone()], hyper.beta);
+                let build = Stopwatch::new();
+                let alias = match &block.data {
+                    BlockData::Dense(values) => {
+                        let src = &values[bi * kk..(bi + 1) * kk];
+                        self.row.load_dense(src);
+                        self.builder.build_dense(src, hyper.beta)
+                    }
+                    BlockData::Sparse(rows) => {
+                        let pairs = &rows[bi];
+                        self.row.load_sparse(pairs, kk)?;
+                        self.builder.build_hybrid(pairs, k, hyper.beta, cfg.alias_dense_threshold)
+                    }
+                };
+                stats.alias_build_secs += build.secs();
                 for &(local, pos) in &self.occurrences[w] {
                     let (local, pos) = (local as usize, pos as usize);
                     let z_old = self.assignments[local][pos];
@@ -277,7 +417,7 @@ impl SweepRunner {
                     // so the no-change path below is entirely read-only.
                     let z_new = {
                         let view = TokenView {
-                            word_row: &block.values[row_range.clone()],
+                            word_row: &self.row.values[..kk],
                             n_k: &nk_local,
                             doc_counts: &self.doc_counts[local],
                             doc_assignments: &self.assignments[local],
@@ -291,8 +431,7 @@ impl SweepRunner {
                     if z_new != z_old {
                         self.doc_counts[local].decrement(z_old);
                         self.doc_counts[local].increment(z_new);
-                        block.values[bi * kk + z_old as usize] -= 1;
-                        block.values[bi * kk + z_new as usize] += 1;
+                        self.row.shift(z_old, z_new);
                         nk_local[z_old as usize] -= 1;
                         nk_local[z_new as usize] += 1;
                         self.assignments[local][pos] = z_new;
@@ -309,6 +448,8 @@ impl SweepRunner {
                 }
             }
         }
+        // Leave the scratch zeroed for the next sweep.
+        self.row.clear();
 
         // End-of-sweep flushes: remaining sparse triples and the dense
         // hot-word aggregate (§3.3) — all fire-and-forget; the caller's
@@ -383,5 +524,27 @@ mod tests {
             .map(|c| (0..6).map(|k| c.get(k) as u64).sum::<u64>())
             .sum();
         assert_eq!(by_topic.iter().sum::<u64>(), from_docs);
+    }
+
+    #[test]
+    fn row_scratch_clears_exactly_what_was_written() {
+        let mut s = RowScratch::default();
+        s.ensure(8);
+        s.load_sparse(&[(1, 3), (6, 2)], 8).unwrap();
+        assert_eq!(s.values[..8], [0, 3, 0, 0, 0, 0, 2, 0]);
+        // A reassignment into a previously-zero column must survive the
+        // touched-list bookkeeping.
+        s.shift(1, 4);
+        assert_eq!(s.values[..8], [0, 2, 0, 0, 1, 0, 2, 0]);
+        s.clear();
+        assert!(s.values.iter().all(|&x| x == 0));
+        // Out-of-range columns surface as decode errors, not panics.
+        assert!(s.load_sparse(&[(8, 1)], 8).is_err());
+        // Dense loads track nonzeros precisely.
+        s.load_dense(&[0, 5, 0, 0, 0, 0, 0, 1]);
+        assert_eq!(s.values[1], 5);
+        assert_eq!(s.values[7], 1);
+        s.clear();
+        assert!(s.values.iter().all(|&x| x == 0));
     }
 }

@@ -86,6 +86,12 @@ pub struct TrainConfig {
     /// in-flight window ([`PsConfig::pipeline_depth`], floored at 2 so
     /// push flushes still overlap sampling).
     pub pipeline_depth: usize,
+    /// Row fill fraction (nnz/K) at or above which a word's proposal
+    /// table is built dense instead of as the LightLDA sparse hybrid
+    /// mixture. The 1/2 default mirrors the shards' adaptive promotion;
+    /// `0.0` forces every table dense (the ablation), `> 1.0` forces
+    /// every table hybrid.
+    pub alias_dense_threshold: f64,
     /// Row partitioning scheme on the servers (paper: cyclic).
     pub scheme: PartitionScheme,
     /// Storage layout of the word-topic matrix on the shards. `Sparse`
@@ -136,6 +142,7 @@ impl Default for TrainConfig {
             buffer_cap: 100_000,
             dense_top_words: 2000,
             pipeline_depth: 1,
+            alias_dense_threshold: 0.5,
             scheme: PartitionScheme::Cyclic,
             wt_layout: Layout::Sparse,
             transport: TransportMode::Sim,
@@ -168,6 +175,7 @@ impl TrainConfig {
             buffer_cap: self.buffer_cap,
             dense_top_words: self.dense_top_words,
             pipeline_depth: self.pipeline_depth,
+            alias_dense_threshold: self.alias_dense_threshold,
             hyper: self.hyper(),
             vocab_size,
         }
@@ -387,7 +395,12 @@ impl Trainer {
                     "tokens_per_sec",
                     if stats.seconds > 0.0 { stats.tokens as f64 / stats.seconds } else { 0.0 },
                 )
-                .set("changed_frac", stats.changed as f64 / stats.tokens.max(1) as f64);
+                .set("changed_frac", stats.changed as f64 / stats.tokens.max(1) as f64)
+                // Hot-path visibility: cumulative seconds (summed over
+                // workers) spent building word-proposal tables and
+                // waiting on the pull pipeline for the next block.
+                .set("alias_build_secs", stats.alias_build_secs)
+                .set("block_wait_secs", stats.block_wait_secs);
             // Parameter-server health, folded into the same row so long
             // and multi-process runs are observable from the CSV alone:
             // resident bytes and dedup evictions from every shard's
@@ -458,6 +471,8 @@ impl Trainer {
                         t.tokens += stats.tokens;
                         t.changed += stats.changed;
                         t.sparse_batches += stats.sparse_batches;
+                        t.alias_build_secs += stats.alias_build_secs;
+                        t.block_wait_secs += stats.block_wait_secs;
                     }
                     Err(e) => errors.lock().unwrap().push(e),
                 });

@@ -90,6 +90,11 @@ fn dispatch(args: &Args) -> Result<()> {
                  --out PATH      write the report CSV here\n\
                  --log LEVEL     error|warn|info|debug|trace\n\
                  \n\
+                 sampler options (train/coordinate):\n\
+                 --alias-dense-threshold F  row fill (nnz/K) at which word-proposal tables\n\
+                 switch from the sparse hybrid mixture to a dense build\n\
+                 (default 0.5; 0 = always dense, >1 = always hybrid)\n\
+                 \n\
                  transports (train):\n\
                  --transport T   sim (in-process, default) | tcp (loopback TCP)\n\
                  --connect LIST  host:port,... of running `serve` shards\n\
@@ -175,6 +180,7 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
         buffer_cap: args.get_as("buffer-cap", 100_000usize)?,
         dense_top_words: args.get_as("dense-top", 2000u64)?,
         pipeline_depth: args.get_as("pipeline-depth", 1usize)?,
+        alias_dense_threshold: args.get_as("alias-dense-threshold", 0.5f64)?,
         scheme: PartitionScheme::parse(&args.str_or("scheme", "cyclic"))
             .ok_or_else(|| Error::Config("bad --scheme (cyclic|range)".into()))?,
         wt_layout: Layout::parse(&args.str_or("wt-layout", "sparse"))

@@ -1152,7 +1152,11 @@ impl<T: Element> BigMatrix<T> {
     /// Start pulling rows as `(col, value)` pair lists — only the
     /// non-zero entries cross the wire, so bandwidth is proportional to
     /// row occupancy rather than `cols`. The ticket's wait() yields one
-    /// column-ascending pair list per requested row, in request order.
+    /// column-ascending pair list per requested row, in request order —
+    /// the pair lists are the end product, never densified by this
+    /// layer: the sampler's pull pipeline
+    /// ([`crate::lda::pipeline::BlockData::Sparse`]) hands them to the
+    /// sweep as-is, so client-side block memory is O(pairs) too.
     /// Works on either storage layout (dense shards scan for non-zero
     /// entries server-side).
     pub fn pull_sparse_rows_async(&self, rows: &[u64]) -> SparsePullTicket<T> {

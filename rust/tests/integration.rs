@@ -195,6 +195,49 @@ fn trainer_report_records_curve() {
     let rows = t.report.rows();
     assert_eq!(rows.len(), 6);
     assert!(rows.iter().filter(|r| r.get("perplexity").is_some()).count() >= 3);
+    // Hot-path observability: every row carries the alias-build and
+    // pipeline-stall timers.
+    assert!(rows.iter().all(|r| r.get("alias_build_secs").is_some()));
+    assert!(rows.iter().all(|r| r.get("block_wait_secs").is_some()));
     let csv = t.report.to_csv();
     assert!(csv.contains("tokens_per_sec"));
+    assert!(csv.contains("alias_build_secs"));
+    assert!(csv.contains("block_wait_secs"));
+}
+
+fn alias_ablation_holdout_perplexity(alias_dense_threshold: f64) -> f64 {
+    let c = corpus();
+    let (train, test) = c.split_holdout(5);
+    let cfg = TrainConfig {
+        iterations: 8,
+        shards: 2,
+        pipeline_depth: 4,
+        alias_dense_threshold,
+        ..base_cfg()
+    };
+    let mut t = Trainer::new(cfg, &train).unwrap();
+    let model = t.run(&train).unwrap();
+    // Whatever the proposal construction, the server tables must equal
+    // the assignments exactly.
+    t.verify_counts().unwrap();
+    holdout_perplexity(&model, &test, 5, 7)
+}
+
+/// The hybrid sparse-plus-uniform word proposal must be
+/// quality-neutral: training with every table built through the
+/// LightLDA mixture (threshold > 1) reaches the same held-out
+/// perplexity as the dense-alias ablation (threshold 0) on the 2-shard
+/// sim — the two constructions sample the identical `n̂_wk + β`
+/// distribution, so only the build cost may differ.
+#[test]
+fn hybrid_and_dense_alias_training_reach_parity() {
+    let dense = alias_ablation_holdout_perplexity(0.0);
+    let hybrid = alias_ablation_holdout_perplexity(2.0);
+    assert!(dense.is_finite() && hybrid.is_finite());
+    let ratio = hybrid / dense;
+    assert!(
+        (0.9..1.1).contains(&ratio),
+        "hybrid-alias perplexity {hybrid:.1} diverged from dense-alias {dense:.1} \
+         (ratio {ratio:.3})"
+    );
 }
