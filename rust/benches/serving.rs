@@ -1,0 +1,303 @@
+//! Serve-model latency/throughput benchmark: the full serving topology
+//! on loopback — two TCP parameter-server shards, a brief LightLDA
+//! training run to freeze a model onto them, one serving replica
+//! attached read-mostly by matrix id, and N concurrent [`InferClient`]s
+//! firing single-document inference requests so the replica's batching
+//! window actually coalesces traffic from different connections.
+//!
+//! Reported: per-request latency percentiles (p50/p99) and aggregate
+//! QPS across all clients, plus the replica's own counters (cache hits,
+//! coalesced sparse pulls, average docs per batch).
+//!
+//! Environment knobs (used by CI):
+//!
+//! - `SMOKE=1` — tiny corpus, 3 training iterations, 4 clients; finishes
+//!   in seconds while exercising train → freeze → attach → serve →
+//!   concurrent inference end to end;
+//! - `CLIENTS=n` — override the concurrent client count;
+//! - `BENCH_JSON=path` — where to write the machine-readable summary
+//!   (default `BENCH_serving.json` in the working directory).
+
+use std::sync::Arc;
+
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::lda::infer::{FoldInBudget, InferConfig, InferEngine};
+use glint_lda::lda::sweep::SamplerParams;
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::net::infer::ServeStats;
+use glint_lda::net::tcp::TcpTransport;
+use glint_lda::ps::client::PsClient;
+use glint_lda::ps::config::{PsConfig, TransportMode};
+use glint_lda::ps::messages::Layout;
+use glint_lda::ps::partition::PartitionScheme;
+use glint_lda::ps::server::TcpShardServer;
+use glint_lda::serving::{InferClient, InferServer, DEFAULT_BATCH_WINDOW};
+use glint_lda::util::rng::Pcg64;
+use glint_lda::util::timer::Stopwatch;
+
+/// Parameter-server shards backing the frozen model.
+const SHARDS: usize = 2;
+
+/// Workload dimensions, scaled down under SMOKE=1.
+struct Dims {
+    num_docs: usize,
+    vocab_size: u32,
+    gen_topics: usize,
+    avg_doc_len: f64,
+    num_topics: u32,
+    iterations: u32,
+    clients: usize,
+    requests_per_client: usize,
+}
+
+const FULL: Dims = Dims {
+    num_docs: 4_000,
+    vocab_size: 4_000,
+    gen_topics: 20,
+    avg_doc_len: 60.0,
+    num_topics: 40,
+    iterations: 15,
+    clients: 8,
+    requests_per_client: 250,
+};
+
+const SMOKE: Dims = Dims {
+    num_docs: 360,
+    vocab_size: 800,
+    gen_topics: 8,
+    avg_doc_len: 45.0,
+    num_topics: 10,
+    iterations: 3,
+    clients: 4,
+    requests_per_client: 40,
+};
+
+fn is_smoke() -> bool {
+    std::env::var("SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn env_clients(default: usize) -> usize {
+    std::env::var("CLIENTS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// `p`-th percentile (0..=1) of an ascending-sorted sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &str,
+    smoke: bool,
+    clients: usize,
+    requests_per_client: usize,
+    unique_docs: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    qps: f64,
+    wall_secs: f64,
+    stats: &ServeStats,
+) {
+    let requests = (clients * requests_per_client) as u64;
+    let avg_batch_docs =
+        if stats.batches > 0 { stats.docs as f64 / stats.batches as f64 } else { 0.0 };
+    let mut body = String::new();
+    body.push_str("{\n");
+    body.push_str("  \"bench\": \"serving\",\n");
+    body.push_str("  \"source\": \"measured\",\n");
+    body.push_str(&format!("  \"smoke\": {smoke},\n"));
+    body.push_str(&format!("  \"shards\": {SHARDS},\n"));
+    body.push_str(&format!("  \"clients\": {clients},\n"));
+    body.push_str(&format!("  \"requests_per_client\": {requests_per_client},\n"));
+    body.push_str(&format!("  \"requests\": {requests},\n"));
+    body.push_str(&format!("  \"unique_docs\": {unique_docs},\n"));
+    body.push_str(&format!(
+        "  \"batch_window_ms\": {:.3},\n",
+        DEFAULT_BATCH_WINDOW.as_secs_f64() * 1e3
+    ));
+    body.push_str(&format!("  \"p50_latency_ms\": {p50_ms:.3},\n"));
+    body.push_str(&format!("  \"p99_latency_ms\": {p99_ms:.3},\n"));
+    body.push_str(&format!("  \"qps\": {qps:.1},\n"));
+    body.push_str(&format!("  \"wall_secs\": {wall_secs:.3},\n"));
+    body.push_str("  \"server\": {\n");
+    body.push_str(&format!("    \"requests\": {},\n", stats.requests));
+    body.push_str(&format!("    \"docs\": {},\n", stats.docs));
+    body.push_str(&format!("    \"cache_hits\": {},\n", stats.cache_hits));
+    body.push_str(&format!("    \"words_pulled\": {},\n", stats.words_pulled));
+    body.push_str(&format!("    \"sparse_pulls\": {},\n", stats.sparse_pulls));
+    body.push_str(&format!("    \"batches\": {},\n", stats.batches));
+    body.push_str(&format!("    \"avg_batch_docs\": {avg_batch_docs:.2}\n"));
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let smoke = is_smoke();
+    let dims = if smoke { &SMOKE } else { &FULL };
+    let clients = env_clients(dims.clients);
+    println!("== serving: smoke={smoke}, shards={SHARDS}, clients={clients} ==");
+
+    // Corpus: train on one split, serve the held-out split as "unseen"
+    // documents (they never entered the frozen counts).
+    let corpus = generate(&SynthConfig {
+        num_docs: dims.num_docs,
+        vocab_size: dims.vocab_size,
+        num_topics: dims.gen_topics,
+        avg_doc_len: dims.avg_doc_len,
+        seed: 0x5e21_2026,
+        ..Default::default()
+    });
+    let (train, test) = corpus.split_holdout(5);
+
+    // Two real TCP shard servers, the `glint-lda serve` code path.
+    let binds: Vec<std::net::SocketAddr> =
+        (0..SHARDS).map(|_| "127.0.0.1:0".parse().unwrap()).collect();
+    let shard_server =
+        TcpShardServer::bind(PsConfig::with_shards(SHARDS), 0, &binds).expect("bind shards");
+    let shard_addrs: Vec<String> =
+        shard_server.addrs().iter().map(|a| a.to_string()).collect();
+
+    // Brief training run to freeze a model onto the shards.
+    let cfg = TrainConfig {
+        num_topics: dims.num_topics,
+        iterations: dims.iterations,
+        workers: 3,
+        shards: SHARDS,
+        sampler: SamplerParams {
+            block_words: 512,
+            buffer_cap: 20_000,
+            dense_top_words: 100,
+            ..Default::default()
+        },
+        transport: TransportMode::Connect(shard_addrs.clone()),
+        ..Default::default()
+    };
+    let hyper = cfg.hyper();
+    let sw = Stopwatch::new();
+    let mut trainer = Trainer::new(cfg, &train).expect("trainer");
+    trainer.run(&train).expect("train");
+    println!(
+        "== trained {} iterations (K={}, V={}) in {:.1}s ==",
+        dims.iterations,
+        dims.num_topics,
+        train.vocab_size,
+        sw.secs()
+    );
+
+    // Serving replica: its own read-mostly PS connection, attached to
+    // the frozen table by the trainer's matrix id.
+    let serve_cfg =
+        PsConfig::serving(SHARDS, PartitionScheme::Cyclic, TransportMode::Connect(shard_addrs));
+    let transport = TcpTransport::connect(shard_server.addrs());
+    let ps_client = PsClient::connect(&transport, serve_cfg);
+    let engine = InferEngine::attach(
+        &ps_client,
+        trainer.matrix_id(),
+        train.vocab_size,
+        dims.num_topics,
+        Layout::Sparse,
+        hyper,
+        InferConfig { budget: FoldInBudget { sweeps: 5, mh_steps: 2 }, ..Default::default() },
+    )
+    .expect("attach");
+    let replica =
+        InferServer::start(engine, "127.0.0.1:0", DEFAULT_BATCH_WINDOW).expect("replica");
+    let replica_addr = replica.addr().to_string();
+
+    // Unseen-document pool shared by every client.
+    let pool: Arc<Vec<Vec<u32>>> = Arc::new(
+        test.docs.iter().map(|d| d.tokens.clone()).filter(|t| !t.is_empty()).collect(),
+    );
+    assert!(!pool.is_empty(), "held-out pool must not be empty");
+
+    println!(
+        "== {clients} concurrent clients x {} single-doc requests ({} unique docs) ==",
+        dims.requests_per_client,
+        pool.len()
+    );
+    let wall = Stopwatch::new();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let pool = Arc::clone(&pool);
+            let addr = replica_addr.clone();
+            let requests = dims.requests_per_client;
+            std::thread::spawn(move || {
+                let client = InferClient::connect(&addr).expect("connect replica");
+                let mut rng = Pcg64::new(0xc11e47 + c as u64);
+                let mut latencies = Vec::with_capacity(requests);
+                for _ in 0..requests {
+                    let doc = &pool[rng.below(pool.len())];
+                    let sw = Stopwatch::new();
+                    let topics = client.infer_one(doc).expect("infer");
+                    latencies.push(sw.secs());
+                    let answered: usize = topics.iter().map(|&(_, n)| n as usize).sum();
+                    assert_eq!(answered, doc.len(), "topic counts must sum to doc length");
+                }
+                latencies
+            })
+        })
+        .collect();
+    let mut latencies: Vec<f64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().expect("client thread"))
+        .collect();
+    let wall_secs = wall.secs();
+    latencies.sort_by(f64::total_cmp);
+
+    let total = clients * dims.requests_per_client;
+    let p50_ms = percentile(&latencies, 0.50) * 1e3;
+    let p99_ms = percentile(&latencies, 0.99) * 1e3;
+    let qps = total as f64 / wall_secs;
+    println!(
+        "  p50 {p50_ms:.2} ms, p99 {p99_ms:.2} ms, {qps:.0} req/s ({total} requests in \
+         {wall_secs:.2}s)"
+    );
+
+    let ctl = InferClient::connect(&replica_addr).expect("stats client");
+    let stats = ctl.stats().expect("stats");
+    assert_eq!(stats.requests, total as u64, "replica must have answered every request");
+    assert!(stats.sparse_pulls >= 1, "serving must have pulled the model at least once");
+    assert!(
+        stats.sparse_pulls <= stats.batches,
+        "at most one coalesced pull per batch"
+    );
+    println!(
+        "  replica: {} batches (avg {:.2} docs), {} cache hits / {} docs, {} words over {} \
+         sparse pulls",
+        stats.batches,
+        stats.docs as f64 / stats.batches.max(1) as f64,
+        stats.cache_hits,
+        stats.docs,
+        stats.words_pulled,
+        stats.sparse_pulls
+    );
+
+    // Orderly teardown: replica first (its engine holds the shard
+    // connection), then the shards.
+    ctl.shutdown().expect("replica shutdown");
+    replica.join();
+    trainer.shutdown_servers().expect("shard shutdown");
+    shard_server.join();
+
+    let json_path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    write_json(
+        &json_path,
+        smoke,
+        clients,
+        dims.requests_per_client,
+        pool.len(),
+        p50_ms,
+        p99_ms,
+        qps,
+        wall_secs,
+        &stats,
+    );
+}

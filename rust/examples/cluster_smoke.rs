@@ -14,6 +14,7 @@ use std::net::SocketAddr;
 
 use glint_lda::cluster::{run_worker, Coordinator, CorpusSpec, WorkerOptions};
 use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::lda::sweep::SamplerParams;
 use glint_lda::lda::trainer::TrainConfig;
 use glint_lda::ps::config::{PsConfig, TransportMode};
 use glint_lda::ps::server::TcpShardServer;
@@ -39,9 +40,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         iterations: 8,
         workers: 2,
         shards: 2,
-        block_words: 256,
-        buffer_cap: 2000,
-        dense_top_words: 50,
+        sampler: SamplerParams {
+            block_words: 256,
+            buffer_cap: 2000,
+            dense_top_words: 50,
+            ..Default::default()
+        },
         eval_every: 2,
         transport: TransportMode::Connect(shard_addrs),
         heartbeat_ms: 200,

@@ -9,6 +9,7 @@ use glint_lda::corpus::synth::{generate, SynthConfig};
 use glint_lda::corpus::tokenizer::TokenizerConfig;
 use glint_lda::corpus::vocab::corpus_from_texts;
 use glint_lda::eval::topics::summarize;
+use glint_lda::lda::sweep::SamplerParams;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
 
 /// A handful of themed snippets: enough for the real-text pipeline
@@ -44,7 +45,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         iterations: 60,
         workers: 2,
         shards: 2,
-        block_words: 64,
+        sampler: SamplerParams { block_words: 64, ..Default::default() },
         eval_every: 0,
         ..TrainConfig::default()
     };

@@ -217,7 +217,7 @@ impl Coordinator {
             resolved.len(),
             cfg.scheme,
             cfg.transport.clone(),
-            cfg.pipeline_depth,
+            cfg.sampler.pipeline_depth,
         );
         let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
         let client = PsClient::connect(&*transport, ps_cfg);
@@ -325,7 +325,7 @@ impl Coordinator {
         let model = pull_full_model(
             &self.n_wk,
             self.vocab_size,
-            self.cfg.pipeline_depth,
+            self.cfg.sampler.pipeline_depth,
             self.cfg.hyper(),
         )?;
         let (report, final_perplexity) = self.build_report();
@@ -363,10 +363,11 @@ impl Coordinator {
         self.slots.iter().all(|s| s.ready)
     }
 
-    /// Build the `JobSpec` for `slot` under the current epoch.
+    /// Build the `JobSpec` for `slot` under the current epoch. The
+    /// knobs are the one canonical projection of the trainer config
+    /// (`SweepKnobs::from`), so coordinator and wire can never drift.
     fn spec_for(&self, slot: usize, worker: u64) -> JobSpec {
         let s = &self.slots[slot];
-        let hyper = self.cfg.hyper();
         JobSpec {
             worker,
             partition: slot as u32,
@@ -377,29 +378,7 @@ impl Coordinator {
             iterations: self.cfg.iterations,
             shard_addrs: self.shard_addrs.clone(),
             corpus: self.corpus_spec.clone(),
-            knobs: SweepKnobs {
-                num_topics: self.cfg.num_topics,
-                alpha: hyper.alpha,
-                beta: hyper.beta,
-                mh_steps: self.cfg.mh_steps,
-                block_words: self.cfg.block_words as u64,
-                buffer_cap: self.cfg.buffer_cap as u64,
-                dense_top_words: self.cfg.dense_top_words,
-                pipeline_depth: self.cfg.pipeline_depth as u64,
-                alias_dense_threshold: self.cfg.alias_dense_threshold,
-                scheme: self.cfg.scheme,
-                wt_layout: self.cfg.wt_layout,
-                seed: self.cfg.seed,
-                eval_every: self.cfg.eval_every,
-                checkpoint_dir: self
-                    .cfg
-                    .checkpoint_dir
-                    .as_ref()
-                    .map(|p| p.to_string_lossy().into_owned())
-                    .unwrap_or_default(),
-                keep_checkpoints: self.cfg.keep_checkpoints as u32,
-                heartbeat_ms: self.cfg.heartbeat_ms,
-            },
+            knobs: SweepKnobs::from(&self.cfg),
         }
     }
 

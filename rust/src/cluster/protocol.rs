@@ -12,6 +12,8 @@
 //! messages in [`crate::ps::messages`], so message sizes are faithful
 //! and the two planes are wire-compatible with the same transports.
 
+use crate::lda::sweep::SamplerParams;
+use crate::lda::trainer::TrainConfig;
 use crate::ps::messages::Layout;
 use crate::ps::partition::PartitionScheme;
 use crate::util::codec::{Reader, Writer};
@@ -54,19 +56,9 @@ pub struct SweepKnobs {
     pub alpha: f64,
     /// Topic-word concentration.
     pub beta: f64,
-    /// Metropolis–Hastings proposal cycles per token.
-    pub mh_steps: u32,
-    /// Words per pulled model block.
-    pub block_words: u64,
-    /// Sparse push-buffer flush threshold.
-    pub buffer_cap: u64,
-    /// Most-frequent words aggregated densely.
-    pub dense_top_words: u64,
-    /// Prefetch depth for model pulls.
-    pub pipeline_depth: u64,
-    /// Row fill fraction (nnz/K) at or above which a word's proposal
-    /// table is built dense instead of as the sparse hybrid mixture.
-    pub alias_dense_threshold: f64,
+    /// Sampler-performance knobs, embedded verbatim from
+    /// [`TrainConfig::sampler`].
+    pub sampler: SamplerParams,
     /// Row partitioning scheme on the shards.
     pub scheme: PartitionScheme,
     /// Storage layout of the word-topic matrix.
@@ -81,6 +73,33 @@ pub struct SweepKnobs {
     pub keep_checkpoints: u32,
     /// Worker heartbeat period, milliseconds.
     pub heartbeat_ms: u64,
+}
+
+impl From<&TrainConfig> for SweepKnobs {
+    /// Project a trainer configuration onto the wire: hyper-parameters
+    /// are resolved (the `<= 0` alpha sentinel never crosses the
+    /// network) and the checkpoint path flattens to a string (empty =
+    /// checkpointing off).
+    fn from(cfg: &TrainConfig) -> SweepKnobs {
+        let hyper = cfg.hyper();
+        SweepKnobs {
+            num_topics: cfg.num_topics,
+            alpha: hyper.alpha,
+            beta: hyper.beta,
+            sampler: cfg.sampler,
+            scheme: cfg.scheme,
+            wt_layout: cfg.wt_layout,
+            seed: cfg.seed,
+            eval_every: cfg.eval_every,
+            checkpoint_dir: cfg
+                .checkpoint_dir
+                .as_ref()
+                .map(|d| d.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            keep_checkpoints: cfg.keep_checkpoints as u32,
+            heartbeat_ms: cfg.heartbeat_ms,
+        }
+    }
 }
 
 /// A worker's marching orders: which partition of which corpus to
@@ -288,12 +307,12 @@ impl SweepKnobs {
         w.u32(self.num_topics);
         w.f64(self.alpha);
         w.f64(self.beta);
-        w.u32(self.mh_steps);
-        w.u64(self.block_words);
-        w.u64(self.buffer_cap);
-        w.u64(self.dense_top_words);
-        w.u64(self.pipeline_depth);
-        w.f64(self.alias_dense_threshold);
+        w.u32(self.sampler.mh_steps);
+        w.usize(self.sampler.block_words);
+        w.usize(self.sampler.buffer_cap);
+        w.u64(self.sampler.dense_top_words);
+        w.usize(self.sampler.pipeline_depth);
+        w.f64(self.sampler.alias_dense_threshold);
         w.u8(self.scheme.tag());
         w.u8(self.wt_layout.tag());
         w.u64(self.seed);
@@ -308,12 +327,14 @@ impl SweepKnobs {
             num_topics: r.u32()?,
             alpha: r.f64()?,
             beta: r.f64()?,
-            mh_steps: r.u32()?,
-            block_words: r.u64()?,
-            buffer_cap: r.u64()?,
-            dense_top_words: r.u64()?,
-            pipeline_depth: r.u64()?,
-            alias_dense_threshold: r.f64()?,
+            sampler: SamplerParams {
+                mh_steps: r.u32()?,
+                block_words: r.usize()?,
+                buffer_cap: r.usize()?,
+                dense_top_words: r.u64()?,
+                pipeline_depth: r.usize()?,
+                alias_dense_threshold: r.f64()?,
+            },
             scheme: {
                 let t = r.u8()?;
                 PartitionScheme::from_tag(t)
@@ -518,12 +539,7 @@ mod tests {
             num_topics: 20,
             alpha: 2.5,
             beta: 0.01,
-            mh_steps: 2,
-            block_words: 2048,
-            buffer_cap: 100_000,
-            dense_top_words: 2000,
-            pipeline_depth: 4,
-            alias_dense_threshold: 0.5,
+            sampler: SamplerParams { pipeline_depth: 4, ..Default::default() },
             scheme: PartitionScheme::Cyclic,
             wt_layout: Layout::Sparse,
             seed: 0x1da,

@@ -173,7 +173,7 @@ fn setup_job(spec: &JobSpec, corpus: &Corpus) -> Result<ActiveJob> {
         resolved.len(),
         knobs.scheme,
         TransportMode::Connect(spec.shard_addrs.clone()),
-        knobs.pipeline_depth as usize,
+        knobs.sampler.pipeline_depth,
     );
     let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
     let client = PsClient::connect(&*transport, ps_cfg);
@@ -187,12 +187,7 @@ fn setup_job(spec: &JobSpec, corpus: &Corpus) -> Result<ActiveJob> {
 
     let scfg = SweepConfig {
         num_topics: knobs.num_topics,
-        mh_steps: knobs.mh_steps,
-        block_words: knobs.block_words as usize,
-        buffer_cap: knobs.buffer_cap as usize,
-        dense_top_words: knobs.dense_top_words,
-        pipeline_depth: knobs.pipeline_depth as usize,
-        alias_dense_threshold: knobs.alias_dense_threshold,
+        sampler: knobs.sampler,
         hyper,
         vocab_size: corpus.vocab_size,
     };
@@ -417,7 +412,7 @@ fn drive(
                         let model = pull_full_model(
                             &job.n_wk,
                             corpus.vocab_size,
-                            job.scfg.pipeline_depth,
+                            job.scfg.sampler.pipeline_depth,
                             job.hyper,
                         )?;
                         let (ll, n) = job.runner.log_likelihood(&model, corpus);

@@ -11,6 +11,7 @@
 //! run over the parameter server.
 
 use crate::corpus::synth::generate;
+use crate::lda::sweep::SamplerParams;
 use crate::lda::trainer::{TrainConfig, Trainer};
 use crate::metrics::{Report, Row};
 use crate::ps::partition::{PartitionScheme, Partitioner};
@@ -87,7 +88,7 @@ pub fn run(cfg: &Fig5Config) -> Result<Fig5Result> {
             iterations: 2,
             workers: 4,
             shards: cfg.machines,
-            block_words: 512,
+            sampler: SamplerParams { block_words: 512, ..Default::default() },
             ..TrainConfig::default()
         };
         let sub = corpus.subset(0.25, 0x515);

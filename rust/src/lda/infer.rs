@@ -1,0 +1,505 @@
+//! Fold-in inference for **unseen** documents against a frozen model —
+//! the kernel of the `serve-model` tier.
+//!
+//! A serving replica attaches read-only to the live shards' word-topic
+//! table and answers topic-inference requests by *folding in* each
+//! document: a few fixed-budget sweeps of the LightLDA
+//! Metropolis–Hastings kernel with the model tables frozen. The training
+//! kernel ([`crate::lda::lightlda::resample_token`]) excludes the token
+//! under resampling from *all* counts, because the training state
+//! includes it; here the frozen `n̂_wk` / `n̂_k` never contained the
+//! unseen document at all, so only the document-topic factor is
+//! excluded on the fly — a different acceptance ratio, hence a separate
+//! kernel.
+//!
+//! The word proposal reuses the Vose [`AliasTable`] machinery: weights
+//! `n̂_wk + β` are exactly the frozen word factor of the target density,
+//! so the word-row terms cancel out of the acceptance ratio. Tables are
+//! built once per word from a single batched sparse pull
+//! ([`InferEngine::infer_batch`] coalesces all of a batch's unique
+//! words into one pull) and cached in a bounded LRU; fold-in *results*
+//! are cached in a second LRU keyed by a hash of the token stream.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
+
+use crate::lda::alias::{AliasTable, WordProposal};
+use crate::lda::hyper::LdaHyper;
+use crate::lda::sparse_counts::DocTopicCounts;
+use crate::ps::client::{BigMatrix, PsClient, SparseRow};
+use crate::ps::messages::Layout;
+use crate::util::error::{Error, Result};
+use crate::util::lru::LruCache;
+use crate::util::rng::Pcg64;
+
+/// Fixed sampling budget of one fold-in request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FoldInBudget {
+    /// Full passes over the document.
+    pub sweeps: u32,
+    /// Metropolis–Hastings proposal cycles per token per pass.
+    pub mh_steps: u32,
+}
+
+impl Default for FoldInBudget {
+    fn default() -> FoldInBudget {
+        FoldInBudget { sweeps: 5, mh_steps: 2 }
+    }
+}
+
+/// Serving-engine knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InferConfig {
+    /// Sampling budget per document.
+    pub budget: FoldInBudget,
+    /// Fold-in results cached, keyed by [`doc_hash`].
+    pub cache_docs: usize,
+    /// Word alias tables cached (each is O(K) memory).
+    pub cache_words: usize,
+    /// Seed of the engine's sampling stream.
+    pub seed: u64,
+}
+
+impl Default for InferConfig {
+    fn default() -> InferConfig {
+        InferConfig {
+            budget: FoldInBudget::default(),
+            cache_docs: 4096,
+            cache_words: 100_000,
+            seed: 0x5e21,
+        }
+    }
+}
+
+/// Cumulative engine counters (exposed to the serving stats endpoint
+/// and the coalescing/cache tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Documents answered (cached or folded in).
+    pub docs: u64,
+    /// Documents answered straight from the result cache.
+    pub cache_hits: u64,
+    /// Word rows fetched from the shards.
+    pub words_pulled: u64,
+    /// Batched sparse pulls issued (one per batch with any misses).
+    pub sparse_pulls: u64,
+    /// Batches processed.
+    pub batches: u64,
+}
+
+/// FNV-1a over the token stream: the fold-in result cache key. Order
+/// sensitive on purpose — the sampler is, too.
+pub fn doc_hash(tokens: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Collapsed posterior mass (up to a constant) of topic `k` for the
+/// token under resampling, against the frozen model: the document
+/// factor excludes the token itself, the model factors exclude nothing
+/// (the unseen document was never in them). `alias.weight(k)` is the
+/// frozen `n̂_wk + β`.
+#[inline]
+fn frozen_mass<P: WordProposal>(
+    alias: &P,
+    counts: &DocTopicCounts,
+    inv_nk: &[f64],
+    alpha: f64,
+    k: u32,
+    z_old: u32,
+) -> f64 {
+    let excl = f64::from(k == z_old);
+    (counts.get(k) as f64 - excl + alpha) * alias.weight(k) * inv_nk[k as usize]
+}
+
+/// Resample one token of a fold-in document: `mh_steps` cycles of the
+/// word proposal (frozen alias table) and the O(1) doc proposal, each
+/// corrected by its exact acceptance probability.
+#[allow(clippy::too_many_arguments)]
+fn infer_token<P: WordProposal>(
+    z_old: u32,
+    alias: &P,
+    counts: &DocTopicCounts,
+    assignments: &[u32],
+    inv_nk: &[f64],
+    k_topics: u32,
+    hyper: LdaHyper,
+    mh_steps: u32,
+    rng: &mut Pcg64,
+) -> u32 {
+    let mut z = z_old;
+    let mut p_z = frozen_mass(alias, counts, inv_nk, hyper.alpha, z, z_old);
+    for _ in 0..mh_steps {
+        // Word proposal `q_w(k) = n̂_wk + β`: the proposal mass equals the
+        // frozen word factor of the target, so the acceptance reduces to
+        // the document and topic-total factors.
+        let t = alias.sample(rng);
+        if t != z {
+            let p_t = frozen_mass(alias, counts, inv_nk, hyper.alpha, t, z_old);
+            let accept = p_t * alias.weight(z) / (p_z * alias.weight(t));
+            if accept >= 1.0 || rng.f64() < accept {
+                z = t;
+                p_z = p_t;
+            }
+        }
+        // Doc proposal `q_d(k) ∝ n_dk + α` (inclusive counts — the
+        // assignments array still carries z_old), drawn in O(1) from the
+        // document's own assignments plus the α-uniform branch.
+        let len = assignments.len() as f64;
+        let alpha_mass = hyper.alpha * k_topics as f64;
+        let t = if rng.f64() * (len + alpha_mass) < len {
+            assignments[rng.below(assignments.len())]
+        } else {
+            rng.below(k_topics as usize) as u32
+        };
+        if t != z {
+            let p_t = frozen_mass(alias, counts, inv_nk, hyper.alpha, t, z_old);
+            let accept = p_t * (counts.get(z) as f64 + hyper.alpha)
+                / (p_z * (counts.get(t) as f64 + hyper.alpha));
+            if accept >= 1.0 || rng.f64() < accept {
+                z = t;
+                p_z = p_t;
+            }
+        }
+    }
+    z
+}
+
+/// Fold in one unseen document with a fixed budget of MH sweeps over
+/// frozen per-word alias tables, returning its topic counts. `tables`
+/// must hold a table for every distinct token; `inv_nk[k]` is
+/// `1 / (n̂_k + Vβ)`.
+pub fn fold_in_frozen(
+    tokens: &[u32],
+    tables: &HashMap<u32, Arc<AliasTable>>,
+    inv_nk: &[f64],
+    k_topics: u32,
+    hyper: LdaHyper,
+    budget: &FoldInBudget,
+    rng: &mut Pcg64,
+) -> DocTopicCounts {
+    let mut z: Vec<u32> =
+        tokens.iter().map(|_| rng.below(k_topics as usize) as u32).collect();
+    let mut counts = DocTopicCounts::from_assignments(&z);
+    for _ in 0..budget.sweeps {
+        for (pos, &w) in tokens.iter().enumerate() {
+            let alias = &tables[&w];
+            let z_old = z[pos];
+            let z_new = infer_token(
+                z_old,
+                alias.as_ref(),
+                &counts,
+                &z,
+                inv_nk,
+                k_topics,
+                hyper,
+                budget.mh_steps,
+                rng,
+            );
+            if z_new != z_old {
+                counts.decrement(z_old);
+                counts.increment(z_new);
+                z[pos] = z_new;
+            }
+        }
+    }
+    counts
+}
+
+/// The serve-model inference engine: a read-mostly view of the live
+/// shards' word-topic table plus the frozen topic-total snapshot, the
+/// two LRU caches, and the per-replica sampling stream.
+pub struct InferEngine {
+    n_wk: BigMatrix<i64>,
+    /// `1 / (n̂_k + Vβ)` from the attach-time column-sum snapshot.
+    inv_nk: Vec<f64>,
+    k: u32,
+    v: u32,
+    hyper: LdaHyper,
+    cfg: InferConfig,
+    /// Fold-in results keyed by [`doc_hash`].
+    docs: LruCache<u64, Vec<(u32, u32)>>,
+    /// Frozen per-word proposal tables.
+    words: LruCache<u32, Arc<AliasTable>>,
+    rng: Pcg64,
+    docs_answered: u64,
+    words_pulled: u64,
+    sparse_pulls: u64,
+    batches: u64,
+}
+
+impl InferEngine {
+    /// Attach to a frozen model on live shards: reach the count table by
+    /// its externally agreed id (the freeze/attach handshake — see
+    /// [`crate::lda::trainer::Trainer::matrix_id`]), snapshot the topic
+    /// totals server-side, and refuse a table with no mass (an id typo
+    /// would otherwise create a fresh empty matrix and silently serve
+    /// uniform topics).
+    pub fn attach(
+        client: &PsClient,
+        matrix_id: u32,
+        vocab_size: u32,
+        num_topics: u32,
+        layout: Layout,
+        hyper: LdaHyper,
+        cfg: InferConfig,
+    ) -> Result<InferEngine> {
+        hyper.validate()?;
+        if cfg.budget.sweeps == 0 || cfg.budget.mh_steps == 0 {
+            return Err(Error::Config("fold-in budget must be positive".into()));
+        }
+        let n_wk: BigMatrix<i64> =
+            client.attach_matrix(matrix_id, vocab_size as u64, num_topics, layout)?;
+        let n_k = n_wk.pull_col_sums()?;
+        if n_k.iter().sum::<i64>() <= 0 {
+            return Err(Error::Config(format!(
+                "matrix {matrix_id} holds no counts; serve-model needs a trained, frozen model"
+            )));
+        }
+        let vbeta = vocab_size as f64 * hyper.beta;
+        let inv_nk = n_k.iter().map(|&n| 1.0 / (n as f64 + vbeta)).collect();
+        Ok(InferEngine {
+            n_wk,
+            inv_nk,
+            k: num_topics,
+            v: vocab_size,
+            hyper,
+            cfg,
+            docs: LruCache::new(cfg.cache_docs),
+            words: LruCache::new(cfg.cache_words),
+            rng: Pcg64::new(cfg.seed),
+            docs_answered: 0,
+            words_pulled: 0,
+            sparse_pulls: 0,
+            batches: 0,
+        })
+    }
+
+    /// Vocabulary size of the attached model.
+    pub fn vocab_size(&self) -> u32 {
+        self.v
+    }
+
+    /// Topic count of the attached model.
+    pub fn num_topics(&self) -> u32 {
+        self.k
+    }
+
+    /// Cumulative counters.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            docs: self.docs_answered,
+            cache_hits: self.docs.hits(),
+            words_pulled: self.words_pulled,
+            sparse_pulls: self.sparse_pulls,
+            batches: self.batches,
+        }
+    }
+
+    /// Infer topic counts for one document.
+    pub fn infer_one(&mut self, tokens: &[u32]) -> Result<Vec<(u32, u32)>> {
+        Ok(self.infer_batch(&[tokens])?.pop().expect("one result per doc"))
+    }
+
+    /// Infer topic counts for a batch of documents, coalescing the model
+    /// reads: across the whole batch, every distinct uncached word is
+    /// fetched exactly once, in a single sparse pull. Returns one
+    /// `(topic, count)` list per document, topics ascending, counts
+    /// summing to the document length.
+    pub fn infer_batch(&mut self, docs: &[&[u32]]) -> Result<Vec<Vec<(u32, u32)>>> {
+        self.batches += 1;
+        self.docs_answered += docs.len() as u64;
+        let hashes: Vec<u64> = docs.iter().map(|d| doc_hash(d)).collect();
+        let mut out: Vec<Option<Vec<(u32, u32)>>> =
+            hashes.iter().map(|h| self.docs.get(h).cloned()).collect();
+
+        // Collect the batch's proposal tables: resident ones are pinned
+        // (Arc) immediately so later cache churn cannot drop them, and
+        // the missing words form the one coalesced pull.
+        let mut tables: HashMap<u32, Arc<AliasTable>> = HashMap::new();
+        let mut need: BTreeSet<u32> = BTreeSet::new();
+        for (i, doc) in docs.iter().enumerate() {
+            if out[i].is_some() {
+                continue;
+            }
+            for &w in doc.iter() {
+                if w >= self.v {
+                    return Err(Error::Config(format!(
+                        "token id {w} out of vocabulary (V = {})",
+                        self.v
+                    )));
+                }
+                if tables.contains_key(&w) || need.contains(&w) {
+                    continue;
+                }
+                match self.words.get(&w) {
+                    Some(t) => {
+                        tables.insert(w, Arc::clone(t));
+                    }
+                    None => {
+                        need.insert(w);
+                    }
+                }
+            }
+        }
+        if !need.is_empty() {
+            let rows: Vec<u64> = need.iter().map(|&w| w as u64).collect();
+            let pulled = self.n_wk.pull_sparse_rows(&rows)?;
+            self.sparse_pulls += 1;
+            self.words_pulled += rows.len() as u64;
+            for (&w, pairs) in need.iter().zip(&pulled) {
+                let table = Arc::new(self.build_table(pairs));
+                tables.insert(w, Arc::clone(&table));
+                self.words.insert(w, table);
+            }
+        }
+
+        for (i, doc) in docs.iter().enumerate() {
+            if out[i].is_some() {
+                continue;
+            }
+            let counts = fold_in_frozen(
+                doc,
+                &tables,
+                &self.inv_nk,
+                self.k,
+                self.hyper,
+                &self.cfg.budget,
+                &mut self.rng,
+            );
+            let pairs: Vec<(u32, u32)> = counts.iter().collect();
+            self.docs.insert(hashes[i], pairs.clone());
+            out[i] = Some(pairs);
+        }
+        Ok(out.into_iter().map(|o| o.expect("every doc answered")).collect())
+    }
+
+    /// Frozen word-proposal table from a pulled sparse row: weights
+    /// `n̂_wk + β` (all positive for β > 0, so the Vose construction
+    /// never sees an all-zero weight vector).
+    fn build_table(&self, pairs: &SparseRow<i64>) -> AliasTable {
+        let mut weights = vec![self.hyper.beta; self.k as usize];
+        for &(c, v) in pairs {
+            weights[c as usize] += v as f64;
+        }
+        AliasTable::new(&weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doc_hash_is_deterministic_and_order_sensitive() {
+        let a = doc_hash(&[1, 2, 3]);
+        assert_eq!(a, doc_hash(&[1, 2, 3]));
+        assert_ne!(a, doc_hash(&[3, 2, 1]));
+        assert_ne!(a, doc_hash(&[1, 2]));
+        assert_ne!(doc_hash(&[]), doc_hash(&[0]));
+    }
+
+    /// Build frozen tables for a sharply peaked model: word `w` belongs
+    /// to topic `w % k` with mass `peak`.
+    fn peaked_tables(
+        v: u32,
+        k: u32,
+        peak: i64,
+        beta: f64,
+    ) -> (HashMap<u32, Arc<AliasTable>>, Vec<f64>) {
+        let mut tables = HashMap::new();
+        let mut n_k = vec![0i64; k as usize];
+        for w in 0..v {
+            let mut weights = vec![beta; k as usize];
+            weights[(w % k) as usize] += peak as f64;
+            n_k[(w % k) as usize] += peak;
+            tables.insert(w, Arc::new(AliasTable::new(&weights)));
+        }
+        let vbeta = v as f64 * beta;
+        let inv_nk = n_k.iter().map(|&n| 1.0 / (n as f64 + vbeta)).collect();
+        (tables, inv_nk)
+    }
+
+    #[test]
+    fn fold_in_concentrates_on_the_generating_topic() {
+        let (k, v) = (4u32, 40u32);
+        let hyper = LdaHyper { alpha: 0.1, beta: 0.01 };
+        let (tables, inv_nk) = peaked_tables(v, k, 500, hyper.beta);
+        let mut rng = Pcg64::new(42);
+        // A document entirely of words from topic 2.
+        let tokens: Vec<u32> = (0..30).map(|i| 2 + (i % 10) * k).collect();
+        let budget = FoldInBudget { sweeps: 10, mh_steps: 2 };
+        let counts =
+            fold_in_frozen(&tokens, &tables, &inv_nk, k, hyper, &budget, &mut rng);
+        assert_eq!(counts.total(), tokens.len() as u64);
+        assert!(
+            counts.get(2) as usize > tokens.len() * 8 / 10,
+            "topic 2 should dominate: {:?}",
+            counts.iter().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fold_in_preserves_token_count_and_topic_range() {
+        let (k, v) = (8u32, 100u32);
+        let hyper = LdaHyper::default_for(k as usize);
+        let (tables, inv_nk) = peaked_tables(v, k, 50, hyper.beta);
+        let mut rng = Pcg64::new(7);
+        for len in [1usize, 2, 17, 64] {
+            let tokens: Vec<u32> = (0..len).map(|i| (i as u32 * 13) % v).collect();
+            let counts = fold_in_frozen(
+                &tokens,
+                &tables,
+                &inv_nk,
+                k,
+                hyper,
+                &FoldInBudget::default(),
+                &mut rng,
+            );
+            assert_eq!(counts.total(), len as u64);
+            assert!(counts.iter().all(|(t, c)| t < k && c > 0));
+        }
+    }
+
+    #[test]
+    fn fold_in_matches_exact_gibbs_fold_in() {
+        // Same frozen model, same scoring: the MH fold-in's theta must
+        // land near the exact-Gibbs fold-in's
+        // ([`crate::eval::perplexity::fold_in`]) on a mixed document.
+        let (k, v) = (4u32, 60u32);
+        let hyper = LdaHyper { alpha: 0.5, beta: 0.01 };
+        let peak = 200i64;
+        let (tables, inv_nk) = peaked_tables(v, k, peak, hyper.beta);
+        // The equivalent dense model for the exact reference.
+        let mut n_wk = vec![0i64; (v * k) as usize];
+        let mut n_k = vec![0i64; k as usize];
+        for w in 0..v {
+            n_wk[(w * k + w % k) as usize] = peak;
+            n_k[(w % k) as usize] += peak;
+        }
+        let model = crate::eval::perplexity::TopicModel { k, v, n_wk, n_k, hyper };
+        // 2/3 topic-1 words, 1/3 topic-3 words.
+        let tokens: Vec<u32> = (0..60u32)
+            .map(|i| if i % 3 == 2 { 3 + (i % 5) * k } else { 1 + (i % 7) * k })
+            .collect();
+        let mut rng = Pcg64::new(11);
+        let budget = FoldInBudget { sweeps: 20, mh_steps: 4 };
+        let mh = fold_in_frozen(&tokens, &tables, &inv_nk, k, hyper, &budget, &mut rng);
+        let mut rng2 = Pcg64::new(12);
+        let exact = crate::eval::perplexity::fold_in(&model, &tokens, 20, &mut rng2);
+        for topic in 0..k {
+            let a = mh.get(topic) as f64 / tokens.len() as f64;
+            let b = exact.get(topic) as f64 / tokens.len() as f64;
+            assert!(
+                (a - b).abs() < 0.15,
+                "topic {topic}: mh theta {a:.3} vs exact {b:.3}"
+            );
+        }
+    }
+}

@@ -36,6 +36,7 @@ pub mod buffer;
 pub mod checkpoint;
 pub mod gibbs;
 pub mod hyper;
+pub mod infer;
 pub mod lightlda;
 pub mod pipeline;
 pub mod sparse_counts;
@@ -43,4 +44,5 @@ pub mod sweep;
 pub mod trainer;
 
 pub use hyper::LdaHyper;
+pub use sweep::SamplerParams;
 pub use trainer::{TrainConfig, Trainer};

@@ -6,9 +6,9 @@
 //! bounded window, so the sampler never waits on the network once the
 //! pipeline is warm.
 //!
-//! Blocks can be pulled **dense** (full `rows x K` slabs over
-//! [`crate::ps::client::PullTicket`]) or **sparse** (`(col, val)` pairs
-//! over [`crate::ps::client::SparsePullTicket`], handed to the consumer
+//! Blocks can be pulled **dense** (full `rows x K` slabs over a
+//! `Ticket<Vec<i64>>`) or **sparse** (`(col, val)` pairs over a
+//! `Ticket<Vec<SparseRow<i64>>>`, handed to the consumer
 //! **as pair lists** — [`BlockData::Sparse`] — never densified here).
 //! Sparse mode ships bytes *and block memory* proportional to row
 //! occupancy: a block costs O(pairs) instead of `rows x K x 8` bytes,
@@ -23,7 +23,7 @@
 
 use std::collections::VecDeque;
 
-use crate::ps::client::{BigMatrix, PullTicket, SparsePullTicket, SparseRow};
+use crate::ps::client::{BigMatrix, SparseRow, Ticket};
 use crate::util::error::{Error, Result};
 
 /// A pulled model block: the block index, the global row ids, and their
@@ -72,8 +72,8 @@ pub enum PullMode {
 
 /// An issued-but-not-consumed block pull, in either mode.
 enum Inflight {
-    Dense(PullTicket<i64>),
-    Sparse(SparsePullTicket<i64>),
+    Dense(Ticket<Vec<i64>>),
+    Sparse(Ticket<Vec<SparseRow<i64>>>),
 }
 
 /// Scatter per-row pair lists into a dense row-major `rows x k` slab.

@@ -28,6 +28,24 @@ impl DocTopicCounts {
         c
     }
 
+    /// Rebuild counts from `(topic, count)` pairs (e.g. an inference
+    /// reply off the wire). Pairs need not arrive sorted; duplicates
+    /// accumulate and zero counts are dropped.
+    pub fn from_pairs(pairs: &[(u32, u32)]) -> DocTopicCounts {
+        let mut entries: Vec<(u32, u32)> =
+            pairs.iter().copied().filter(|&(_, c)| c > 0).collect();
+        entries.sort_by_key(|e| e.0);
+        entries.dedup_by(|b, a| {
+            if a.0 == b.0 {
+                a.1 += b.1;
+                true
+            } else {
+                false
+            }
+        });
+        DocTopicCounts { entries }
+    }
+
     /// Count for one topic.
     #[inline]
     pub fn get(&self, topic: u32) -> u32 {

@@ -21,7 +21,7 @@
 //! is O(nnz_w + reassignments), not O(K). Word-proposal tables are
 //! built through a reusable [`AliasBuilder`] (the LightLDA hybrid
 //! mixture, O(nnz_w) for tail words, dense above
-//! [`SweepConfig::alias_dense_threshold`] fill), and the runner owns
+//! [`SamplerParams::alias_dense_threshold`] fill), and the runner owns
 //! all scratch, so the steady-state loop performs **no heap
 //! allocations** per word or per token.
 
@@ -41,14 +41,15 @@ use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
-/// The sampling knobs a sweep needs, extracted from
-/// [`crate::lda::trainer::TrainConfig`] (or a cluster
-/// [`crate::cluster::protocol::JobSpec`]) so the kernel itself never
-/// depends on how the run was deployed.
-#[derive(Debug, Clone)]
-pub struct SweepConfig {
-    /// Number of topics K.
-    pub num_topics: u32,
+/// The sampler-performance knobs, the *single* source of truth shared
+/// by [`crate::lda::trainer::TrainConfig`], [`SweepConfig`], and the
+/// wire-side [`crate::cluster::protocol::SweepKnobs`]: each embeds this
+/// struct instead of re-declaring the fields, so adding a knob is a
+/// one-struct change. Model-level quantities (topic count,
+/// hyper-parameters) deliberately stay out — these are *how* to sample,
+/// not *what*.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplerParams {
     /// Metropolis–Hastings proposal cycles per token.
     pub mh_steps: u32,
     /// Words per pulled model block (§3.4).
@@ -63,6 +64,31 @@ pub struct SweepConfig {
     /// table is built dense instead of as the sparse hybrid mixture
     /// (0.0 = always dense — the ablation; > 1.0 = never).
     pub alias_dense_threshold: f64,
+}
+
+impl Default for SamplerParams {
+    fn default() -> SamplerParams {
+        SamplerParams {
+            mh_steps: 2,
+            block_words: 2048,
+            buffer_cap: 100_000,
+            dense_top_words: 2000,
+            pipeline_depth: 1,
+            alias_dense_threshold: 0.5,
+        }
+    }
+}
+
+/// The knobs a sweep needs, extracted from
+/// [`crate::lda::trainer::TrainConfig`] (or a cluster
+/// [`crate::cluster::protocol::JobSpec`]) so the kernel itself never
+/// depends on how the run was deployed.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Number of topics K.
+    pub num_topics: u32,
+    /// Sampler-performance knobs.
+    pub sampler: SamplerParams,
     /// Resolved hyper-parameters.
     pub hyper: LdaHyper,
     /// Vocabulary size V.
@@ -317,8 +343,11 @@ impl SweepRunner {
     /// same path as training updates). The caller owns the completion
     /// barrier: call `flush()` on the client afterwards.
     pub fn push_counts(&self, cfg: &SweepConfig, n_wk: &BigMatrix<i64>) {
-        let mut buffer =
-            UpdateBuffer::new(cfg.buffer_cap, cfg.dense_top_words, cfg.num_topics);
+        let mut buffer = UpdateBuffer::new(
+            cfg.sampler.buffer_cap,
+            cfg.sampler.dense_top_words,
+            cfg.num_topics,
+        );
         self.for_each_word_topic(|w, z| {
             if let Some(batch) = buffer.add(w, z, 1) {
                 let _ = n_wk.push_coords_async(&batch);
@@ -353,7 +382,7 @@ impl SweepRunner {
     /// its pair list) into the runner's reused scratch slab, the
     /// proposal table is built through the reused [`AliasBuilder`]
     /// (hybrid for tail words, dense at/above
-    /// [`SweepConfig::alias_dense_threshold`] fill), all occurrences
+    /// [`SamplerParams::alias_dense_threshold`] fill), all occurrences
     /// are resampled against the scratch row, and the scratch is
     /// cleared through its touched-column list — no per-word or
     /// per-token heap allocation anywhere on this path.
@@ -368,14 +397,15 @@ impl SweepRunner {
         let v = cfg.vocab_size;
         let hyper = cfg.hyper;
         let mut stats = IterStats::default();
-        let mut buffer = UpdateBuffer::new(cfg.buffer_cap, cfg.dense_top_words, k);
+        let mut buffer =
+            UpdateBuffer::new(cfg.sampler.buffer_cap, cfg.sampler.dense_top_words, k);
         self.row.ensure(kk);
 
-        let blocks = word_blocks(&self.present, cfg.block_words);
+        let blocks = word_blocks(&self.present, cfg.sampler.block_words);
         let mut pipeline = PullPipeline::start_with_mode(
             n_wk.clone(),
             blocks,
-            cfg.pipeline_depth,
+            cfg.sampler.pipeline_depth,
             pull_mode_for(n_wk.layout()),
         );
 
@@ -406,7 +436,12 @@ impl SweepRunner {
                     BlockData::Sparse(rows) => {
                         let pairs = &rows[bi];
                         self.row.load_sparse(pairs, kk)?;
-                        self.builder.build_hybrid(pairs, k, hyper.beta, cfg.alias_dense_threshold)
+                        self.builder.build_hybrid(
+                            pairs,
+                            k,
+                            hyper.beta,
+                            cfg.sampler.alias_dense_threshold,
+                        )
                     }
                 };
                 stats.alias_build_secs += build.secs();
@@ -425,7 +460,7 @@ impl SweepRunner {
                             v,
                             hyper,
                         };
-                        resample_token(z_old, &view, k, cfg.mh_steps, &mut self.rng)
+                        resample_token(z_old, &view, k, cfg.sampler.mh_steps, &mut self.rng)
                     };
                     stats.tokens += 1;
                     if z_new != z_old {

@@ -41,7 +41,7 @@ use crate::eval::perplexity::{log_likelihood, perplexity_from_loglik, TopicModel
 use crate::lda::checkpoint::Checkpoint;
 use crate::lda::hyper::LdaHyper;
 use crate::lda::sparse_counts::DocTopicCounts;
-use crate::lda::sweep::{partition_rng, pull_full_model, SweepConfig, SweepRunner};
+use crate::lda::sweep::{partition_rng, pull_full_model, SamplerParams, SweepConfig, SweepRunner};
 use crate::log_info;
 use crate::metrics::{Report, Row};
 use crate::net::tcp::{resolve_addrs, TcpTransport};
@@ -68,30 +68,17 @@ pub struct TrainConfig {
     pub alpha: f64,
     /// Topic-word concentration.
     pub beta: f64,
-    /// Metropolis–Hastings proposal cycles per token (paper/LightLDA: 2).
-    pub mh_steps: u32,
+    /// Sampler-performance knobs (MH steps, block size, push buffering,
+    /// prefetch depth, alias threshold) — shared verbatim with
+    /// [`SweepConfig`] and the cluster wire protocol. `pipeline_depth`
+    /// also sizes the parameter-server client's per-shard in-flight
+    /// window ([`PsConfig::pipeline_depth`], floored at 2 so push
+    /// flushes still overlap sampling).
+    pub sampler: SamplerParams,
     /// Sampling worker threads ("executors").
     pub workers: usize,
     /// Parameter-server shards (paper cluster: 30).
     pub shards: usize,
-    /// Words per pulled model block (§3.4 "fixed-size sets").
-    pub block_words: usize,
-    /// Sparse push-buffer flush threshold (§3.3; paper: 100,000).
-    pub buffer_cap: usize,
-    /// Number of most-frequent words aggregated densely (§3.3; paper:
-    /// 2,000).
-    pub dense_top_words: u64,
-    /// Prefetch depth for model pulls (0 disables pipelining — §3.4
-    /// ablation). Also sizes the parameter-server client's per-shard
-    /// in-flight window ([`PsConfig::pipeline_depth`], floored at 2 so
-    /// push flushes still overlap sampling).
-    pub pipeline_depth: usize,
-    /// Row fill fraction (nnz/K) at or above which a word's proposal
-    /// table is built dense instead of as the LightLDA sparse hybrid
-    /// mixture. The 1/2 default mirrors the shards' adaptive promotion;
-    /// `0.0` forces every table dense (the ablation), `> 1.0` forces
-    /// every table hybrid.
-    pub alias_dense_threshold: f64,
     /// Row partitioning scheme on the servers (paper: cyclic).
     pub scheme: PartitionScheme,
     /// Storage layout of the word-topic matrix on the shards. `Sparse`
@@ -135,14 +122,9 @@ impl Default for TrainConfig {
             iterations: 50,
             alpha: 0.0,
             beta: 0.01,
-            mh_steps: 2,
+            sampler: SamplerParams::default(),
             workers: 4,
             shards: 4,
-            block_words: 2048,
-            buffer_cap: 100_000,
-            dense_top_words: 2000,
-            pipeline_depth: 1,
-            alias_dense_threshold: 0.5,
             scheme: PartitionScheme::Cyclic,
             wt_layout: Layout::Sparse,
             transport: TransportMode::Sim,
@@ -170,12 +152,7 @@ impl TrainConfig {
     pub fn sweep_config(&self, vocab_size: u32) -> SweepConfig {
         SweepConfig {
             num_topics: self.num_topics,
-            mh_steps: self.mh_steps,
-            block_words: self.block_words,
-            buffer_cap: self.buffer_cap,
-            dense_top_words: self.dense_top_words,
-            pipeline_depth: self.pipeline_depth,
-            alias_dense_threshold: self.alias_dense_threshold,
+            sampler: self.sampler,
             hyper: self.hyper(),
             vocab_size,
         }
@@ -204,7 +181,7 @@ fn start_parameter_servers(
                 resolved.len(),
                 cfg.scheme,
                 cfg.transport.clone(),
-                cfg.pipeline_depth,
+                cfg.sampler.pipeline_depth,
             );
             let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
             let client = PsClient::connect(&*transport, ps_cfg);
@@ -219,7 +196,7 @@ fn start_parameter_servers(
                 cfg.shards,
                 cfg.scheme,
                 cfg.transport.clone(),
-                cfg.pipeline_depth,
+                cfg.sampler.pipeline_depth,
             );
             let group = ServerGroup::start(ps_cfg.clone(), cfg.fault.clone(), cfg.seed ^ 0x9d);
             let transport = group.transport();
@@ -343,6 +320,14 @@ impl Trainer {
     /// Iterations completed so far (nonzero after restore).
     pub fn completed_iterations(&self) -> u32 {
         self.completed_iterations
+    }
+
+    /// Server-side id of the word-topic count table — the freeze/attach
+    /// handshake token a serving replica passes to
+    /// [`crate::lda::infer::InferEngine::attach`] to reach this model on
+    /// the same shards.
+    pub fn matrix_id(&self) -> u32 {
+        self.n_wk.id()
     }
 
     /// The in-process server group, when this trainer started one
@@ -514,7 +499,7 @@ impl Trainer {
     /// pulls plus the server-side column sums; see
     /// [`crate::lda::sweep::pull_full_model`]).
     pub fn pull_model(&self) -> Result<TopicModel> {
-        pull_full_model(&self.n_wk, self.vocab_size, self.cfg.pipeline_depth, self.hyper)
+        pull_full_model(&self.n_wk, self.vocab_size, self.cfg.sampler.pipeline_depth, self.hyper)
     }
 
     /// All documents' topic counts in corpus order (gathered from the
@@ -596,9 +581,12 @@ mod tests {
             iterations: 3,
             workers: 3,
             shards: 3,
-            block_words: 64,
-            buffer_cap: 500,
-            dense_top_words: 20,
+            sampler: SamplerParams {
+                block_words: 64,
+                buffer_cap: 500,
+                dense_top_words: 20,
+                ..Default::default()
+            },
             ..Default::default()
         }
     }
@@ -670,8 +658,8 @@ mod tests {
         // server tables exactly equal to the assignments.
         let c = corpus();
         let mut cfg = fast_cfg();
-        cfg.pipeline_depth = 4;
-        cfg.buffer_cap = 100;
+        cfg.sampler.pipeline_depth = 4;
+        cfg.sampler.buffer_cap = 100;
         let mut t = Trainer::new(cfg, &c).unwrap();
         t.run_iteration().unwrap();
         t.run_iteration().unwrap();

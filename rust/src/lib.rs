@@ -29,6 +29,12 @@
 //!   bounded-staleness iteration barrier, and failure recovery that
 //!   rolls the run onto a fresh count table rebuilt from per-partition
 //!   checkpoints.
+//! - [`serving`] — the serve-model inference tier: serving replicas
+//!   that attach read-mostly to the live shards' frozen count table and
+//!   answer topic inference for *unseen* documents by fixed-budget
+//!   fold-in, with request batching (one coalesced sparse pull per
+//!   batch) and LRU result caching, plus the [`serving::InferClient`]
+//!   line-protocol client.
 //! - [`baselines`] — faithful re-implementations of Spark MLlib's
 //!   variational EM LDA and Online LDA, with a shuffle-write accounting
 //!   model, used as comparison points for the paper's Table 1.
@@ -54,6 +60,7 @@ pub mod metrics;
 pub mod net;
 pub mod ps;
 pub mod runtime;
+pub mod serving;
 pub mod util;
 
 pub use util::error::{Error, Result};

@@ -1,24 +1,24 @@
 //! glint-lda launcher.
 //!
-//! Subcommands:
+//! Every mode is one entry in the [`CommandSet`] dispatch table below —
+//! name, one-line summary, usage text and handler live together, and
+//! `glint-lda help <command>` / `<command> --help` render from the same
+//! data. Modes:
 //!
-//! - `train`      — distributed LightLDA over the parameter server
-//!   (in-process by default; `--transport tcp` for loopback TCP;
-//!   `--connect host:port,...` to use external `serve` processes)
-//! - `serve`      — host parameter-server shards over TCP for
-//!   multi-process deployments
-//! - `coordinate` — run the cluster coordinator: partition the corpus
-//!   and drive remote `work` processes against `serve` shards
-//! - `work`       — join a coordinator as a remote sampler process
-//! - `shutdown`   — stop external `serve` processes
-//! - `em`         — Spark-MLlib-style variational EM baseline
-//! - `online`     — Spark-MLlib-style Online VB baseline
-//! - `gen-corpus` — generate + save a synthetic ClueWeb12 analogue
-//! - `eval`       — perplexity via both the rust and XLA evaluators
-//! - `table1` / `fig4` / `fig5` / `fig6` — reproduce the paper's
-//!   evaluation artifacts (also available as `cargo bench` targets)
+//! - `train`       — distributed LightLDA over the parameter server
+//! - `serve`       — host parameter-server shards over TCP
+//! - `serve-model` — serve topic inference for unseen documents off
+//!   live shards (fixed-budget fold-in, request batching, LRU caches)
+//! - `infer`       — query a `serve-model` replica
+//! - `coordinate` / `work` — the multi-process cluster control plane
+//! - `shutdown`    — stop external `serve` processes
+//! - `em` / `online` — Spark-MLlib-style baselines
+//! - `gen-corpus` / `eval` — corpus generation and model evaluation
+//! - `table1` / `fig4` / `fig5` / `fig6` — the paper's evaluation
+//!   artifacts (also available as `cargo bench` targets)
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use glint_lda::baselines::{em, online};
 use glint_lda::cluster::{run_worker, Coordinator, CorpusSpec, WorkerOptions};
@@ -26,6 +26,9 @@ use glint_lda::corpus::dataset::Corpus;
 use glint_lda::corpus::synth::{generate, SynthConfig};
 use glint_lda::eval::topics::summarize;
 use glint_lda::experiments::{fig4, fig5, fig6, table1};
+use glint_lda::lda::hyper::LdaHyper;
+use glint_lda::lda::infer::{FoldInBudget, InferConfig, InferEngine};
+use glint_lda::lda::sweep::SamplerParams;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
 use glint_lda::log_info;
 use glint_lda::net::tcp::{resolve_addrs, TcpTransport};
@@ -34,9 +37,270 @@ use glint_lda::ps::config::{PsConfig, TransportMode};
 use glint_lda::ps::messages::Layout;
 use glint_lda::ps::partition::PartitionScheme;
 use glint_lda::ps::server::TcpShardServer;
-use glint_lda::util::cli::Args;
+use glint_lda::serving::{InferClient, InferServer, DEFAULT_BATCH_WINDOW};
+use glint_lda::util::cli::{Args, Command, CommandSet};
 use glint_lda::util::error::{Error, Result};
 use glint_lda::util::logger;
+
+const COMMON_USAGE: &str = "common options:
+  --log LEVEL     error|warn|info|debug|trace (default info)
+  --out PATH      write the mode's report CSV here (where applicable)
+
+corpus options (modes that read a corpus):
+  --corpus PATH   corpus file (default: generate synthetic)
+  --docs N        synthetic corpus size (default 8000)
+  --vocab N       synthetic vocabulary size (default 8000)
+  --gen-topics N  synthetic generator topics (default 50)
+  --avg-len F     synthetic mean document length (default 80)
+  --zipf F        synthetic Zipf exponent (default 1.07)
+  --seed N        RNG seed
+";
+
+const TRAIN_USAGE: &str = "model options:
+  --topics N        number of topics K (default 20)
+  --iters N         Gibbs iterations (default 20)
+  --alpha F         doc-topic concentration (default 50/K)
+  --beta F          topic-word concentration (default 0.01)
+
+sampler options:
+  --mh-steps N               Metropolis-Hastings cycles per token (default 2)
+  --block-words N            words pulled per model block (default 2048)
+  --buffer-cap N             buffered push deltas per worker (default 100000)
+  --dense-top N              frequent words pulled dense (default 2000)
+  --pipeline-depth N         prefetched blocks / per-shard window (default 1)
+  --alias-dense-threshold F  row fill (nnz/K) at which word-proposal tables
+                             switch from the sparse hybrid mixture to a dense
+                             build (default 0.5; 0 = always dense,
+                             >1 = always hybrid)
+
+deployment options:
+  --workers N       sampler threads (default 4)
+  --shards N        parameter-server shards (default 4)
+  --scheme S        cyclic|range row partitioning (default cyclic)
+  --wt-layout L     dense|sparse word-topic storage (default sparse)
+  --transport T     sim (in-process, default) | tcp (loopback TCP)
+  --connect LIST    host:port,... of running `serve` shards
+                    (wins over --transport)
+  --shutdown        stop the connected `serve` shards after training
+
+run options:
+  --eval-every N        training perplexity every N iterations (default 5)
+  --checkpoint-dir D    checkpoint directory (enables --resume)
+  --keep-checkpoints N  snapshots retained (default 3)
+  --resume              restore from the latest checkpoint
+  --top-words N         words shown per topic (default 8)
+  --show-topics N       topics printed after training (default 10)
+";
+
+const SERVE_USAGE: &str = "options:
+  --bind LIST      host:port,... to listen on, one per hosted shard
+                   (default 127.0.0.1:0)
+  --first-shard N  global id of the first hosted shard (default 0)
+  --shards N       total shards in the deployment (default: hosted count)
+  --scheme S       cyclic|range row partitioning (default cyclic)
+";
+
+const SERVE_MODEL_USAGE: &str = "options:
+  --connect LIST       host:port,... of the live `serve` shards (required)
+  --vocab N            vocabulary size V of the frozen model (required)
+  --topics N           topic count K of the frozen model (required)
+  --matrix-id N        server-side id of the frozen word-topic table
+                       (default 1: the id the trainer's model gets)
+  --alpha F            doc-topic concentration (default 50/K)
+  --beta F             topic-word concentration (default 0.01)
+  --wt-layout L        dense|sparse table layout (default sparse)
+  --scheme S           cyclic|range row partitioning (default cyclic)
+  --bind ADDR          listen address for inference clients
+                       (default 127.0.0.1:0)
+  --sweeps N           fold-in sweeps per document (default 5)
+  --mh-steps N         MH cycles per token per sweep (default 2)
+  --cache-docs N       fold-in results cached (default 4096)
+  --cache-words N      word alias tables cached (default 100000)
+  --batch-window-ms F  inbox-drain window for request coalescing (default 2)
+";
+
+const INFER_USAGE: &str = "options:
+  --connect ADDR  host:port of the serve-model replica (required)
+  --doc LIST      one document as comma-separated token ids; further
+                  documents may follow as positional arguments
+  --stats         print the replica's serving counters instead
+  --shutdown      stop the replica instead
+
+examples:
+  glint-lda infer --connect 127.0.0.1:7700 --doc 12,7,7,3 40,41,42
+  glint-lda infer --connect 127.0.0.1:7700 --stats
+";
+
+const COORDINATE_USAGE: &str = "train options apply (see `glint-lda help train`), plus:
+  --bind ADDR           control-plane listen address (default 127.0.0.1:7600)
+  --connect LIST        host:port,... of running `serve` shards (required)
+  --workers N           corpus partitions / expected `work` processes
+  --checkpoint-dir D    per-partition checkpoints (enables failure recovery)
+  --keep-checkpoints N  snapshots retained per partition (default 3)
+  --heartbeat-ms N      worker heartbeat period (default 1000)
+  --straggler-ms N      silence before a worker is declared dead
+                        (default 10000)
+  --max-staleness N     iterations a fast worker may run ahead (default 1)
+";
+
+const WORK_USAGE: &str = "options:
+  --join ADDR     coordinator host:port (required)
+  --corpus PATH   corpus override (else the coordinator's spec is used)
+  --crash-at N    fault injection: exit right after sweeping iteration N
+";
+
+const SHUTDOWN_USAGE: &str = "options:
+  --connect LIST  host:port,... of the shards to stop (required)
+";
+
+const EM_USAGE: &str = "options:
+  --topics N      number of topics (default 20)
+  --iters N       EM iterations (default 20)
+  --workers N     simulated executors (default 4)
+";
+
+const ONLINE_USAGE: &str = "options:
+  --topics N      number of topics (default 20)
+  --epochs N      corpus passes (default 2)
+  --batch N       minibatch size (default 256)
+  --workers N     simulated executors (default 4)
+";
+
+const GEN_CORPUS_USAGE: &str = "options:
+  --out PATH      destination file (default corpus.bin)
+
+The corpus options above control the generator.
+";
+
+const EVAL_USAGE: &str = "train options apply (a brief run produces the model), plus:
+  --artifacts DIR  AOT-compiled XLA artifacts (default artifacts)
+";
+
+const TABLE1_USAGE: &str = "options:
+  --scale F       corpus scale factor (default 1.0)
+  --iters N       iterations (default 20)
+  --workers N     sampler threads (default 4)
+  --shards N      parameter-server shards (default 4)
+";
+
+const FIG4_USAGE: &str = "options:
+  --scale F       corpus scale factor (default 1.0)
+  --top N         ranks plotted (default 5000)
+  --stride N      rank sampling stride (default 10)
+";
+
+const FIG5_USAGE: &str = "options:
+  --scale F       corpus scale factor (default 1.0)
+  --machines N    simulated shard machines (default 30)
+  --no-measure    skip the timing measurements
+";
+
+const FIG6_USAGE: &str = "options:
+  --scale F       corpus scale factor (default 2.0)
+  --topics N      number of topics (default 100)
+  --iters N       iterations (default 30)
+  --workers N     sampler threads (default 4)
+  --shards N      parameter-server shards (default 8)
+  --eval-every N  perplexity cadence (default 1)
+";
+
+const LAUNCHER: CommandSet = CommandSet {
+    program: "glint-lda",
+    about: "web-scale topic models with an asynchronous parameter server",
+    common: COMMON_USAGE,
+    commands: &[
+        Command {
+            name: "train",
+            summary: "distributed LightLDA over the parameter server",
+            usage: TRAIN_USAGE,
+            run: cmd_train,
+        },
+        Command {
+            name: "serve",
+            summary: "host parameter-server shards over TCP",
+            usage: SERVE_USAGE,
+            run: cmd_serve,
+        },
+        Command {
+            name: "serve-model",
+            summary: "serve topic inference for unseen documents off live shards",
+            usage: SERVE_MODEL_USAGE,
+            run: cmd_serve_model,
+        },
+        Command {
+            name: "infer",
+            summary: "query a serve-model replica",
+            usage: INFER_USAGE,
+            run: cmd_infer,
+        },
+        Command {
+            name: "coordinate",
+            summary: "run the cluster coordinator for remote `work` processes",
+            usage: COORDINATE_USAGE,
+            run: cmd_coordinate,
+        },
+        Command {
+            name: "work",
+            summary: "join a coordinator as a remote sampler process",
+            usage: WORK_USAGE,
+            run: cmd_work,
+        },
+        Command {
+            name: "shutdown",
+            summary: "stop external `serve` processes",
+            usage: SHUTDOWN_USAGE,
+            run: cmd_shutdown,
+        },
+        Command {
+            name: "em",
+            summary: "Spark-MLlib-style variational EM baseline",
+            usage: EM_USAGE,
+            run: cmd_em,
+        },
+        Command {
+            name: "online",
+            summary: "Spark-MLlib-style Online VB baseline",
+            usage: ONLINE_USAGE,
+            run: cmd_online,
+        },
+        Command {
+            name: "gen-corpus",
+            summary: "generate + save a synthetic ClueWeb12 analogue",
+            usage: GEN_CORPUS_USAGE,
+            run: cmd_gen_corpus,
+        },
+        Command {
+            name: "eval",
+            summary: "perplexity via both the rust and XLA evaluators",
+            usage: EVAL_USAGE,
+            run: cmd_eval,
+        },
+        Command {
+            name: "table1",
+            summary: "reproduce the paper's Table 1",
+            usage: TABLE1_USAGE,
+            run: cmd_table1,
+        },
+        Command {
+            name: "fig4",
+            summary: "reproduce the paper's Figure 4 (Zipf fit)",
+            usage: FIG4_USAGE,
+            run: cmd_fig4,
+        },
+        Command {
+            name: "fig5",
+            summary: "reproduce the paper's Figure 5 (load balance)",
+            usage: FIG5_USAGE,
+            run: cmd_fig5,
+        },
+        Command {
+            name: "fig6",
+            summary: "reproduce the paper's Figure 6 (convergence)",
+            usage: FIG6_USAGE,
+            run: cmd_fig6,
+        },
+    ],
+};
 
 fn main() {
     let args = match Args::from_env() {
@@ -47,7 +311,7 @@ fn main() {
         }
     };
     logger::set_level_str(&args.str_or("log", "info"));
-    let code = match dispatch(&args) {
+    let code = match LAUNCHER.dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
@@ -55,76 +319,6 @@ fn main() {
         }
     };
     std::process::exit(code);
-}
-
-fn dispatch(args: &Args) -> Result<()> {
-    match args.command.as_deref() {
-        Some("train") => cmd_train(args),
-        Some("serve") => cmd_serve(args),
-        Some("coordinate") => cmd_coordinate(args),
-        Some("work") => cmd_work(args),
-        Some("shutdown") => cmd_shutdown(args),
-        Some("em") => cmd_em(args),
-        Some("online") => cmd_online(args),
-        Some("gen-corpus") => cmd_gen_corpus(args),
-        Some("eval") => cmd_eval(args),
-        Some("table1") => cmd_table1(args),
-        Some("fig4") => cmd_fig4(args),
-        Some("fig5") => cmd_fig5(args),
-        Some("fig6") => cmd_fig6(args),
-        Some(other) => Err(Error::Config(format!("unknown subcommand {other:?}"))),
-        None => {
-            println!(
-                "glint-lda — web-scale topic models with an asynchronous parameter server\n\
-                 \n\
-                 usage: glint-lda <train|serve|coordinate|work|shutdown|em|online|gen-corpus|eval|table1|fig4|fig5|fig6> [--opt value]...\n\
-                 \n\
-                 common options:\n\
-                 --topics N      number of topics (default 20/100 depending on command)\n\
-                 --iters N       iterations (default 20)\n\
-                 --workers N     sampler threads (default 4)\n\
-                 --shards N      parameter-server shards (default 4)\n\
-                 --corpus PATH   corpus file (default: generate synthetic)\n\
-                 --docs N        synthetic corpus size (default 8000)\n\
-                 --vocab N       synthetic vocabulary size (default 8000)\n\
-                 --out PATH      write the report CSV here\n\
-                 --log LEVEL     error|warn|info|debug|trace\n\
-                 \n\
-                 sampler options (train/coordinate):\n\
-                 --alias-dense-threshold F  row fill (nnz/K) at which word-proposal tables\n\
-                 switch from the sparse hybrid mixture to a dense build\n\
-                 (default 0.5; 0 = always dense, >1 = always hybrid)\n\
-                 \n\
-                 transports (train):\n\
-                 --transport T   sim (in-process, default) | tcp (loopback TCP)\n\
-                 --connect LIST  host:port,... of running `serve` shards\n\
-                 --shutdown      stop the connected `serve` shards after training\n\
-                 \n\
-                 serve options:\n\
-                 --bind LIST     host:port,... to listen on, one per hosted shard\n\
-                 --first-shard N global id of the first hosted shard (default 0)\n\
-                 --shards N      total shards in the deployment (default: hosted count)\n\
-                 \n\
-                 coordinate options (plus the train options above):\n\
-                 --bind ADDR          control-plane listen address (default 127.0.0.1:7600)\n\
-                 --connect LIST       host:port,... of running `serve` shards (required)\n\
-                 --workers N          corpus partitions / expected `work` processes\n\
-                 --checkpoint-dir D   per-partition checkpoints (enables failure recovery)\n\
-                 --keep-checkpoints N snapshots retained per partition (default 3)\n\
-                 --heartbeat-ms N     worker heartbeat period (default 1000)\n\
-                 --straggler-ms N     silence before a worker is declared dead (default 10000)\n\
-                 --max-staleness N    iterations a fast worker may run ahead (default 1)\n\
-                 \n\
-                 work options:\n\
-                 --join ADDR     coordinator host:port (required)\n\
-                 --corpus PATH   corpus override (else the coordinator's spec is used)\n\
-                 \n\
-                 shutdown options:\n\
-                 --connect LIST  host:port,... of the shards to stop"
-            );
-            Ok(())
-        }
-    }
 }
 
 fn load_or_generate(args: &Args) -> Result<Corpus> {
@@ -167,24 +361,34 @@ fn transport_mode(args: &Args) -> Result<TransportMode> {
         .ok_or_else(|| Error::Config("bad --transport (sim|tcp)".into()))
 }
 
+fn parse_scheme(args: &Args) -> Result<PartitionScheme> {
+    PartitionScheme::parse(&args.str_or("scheme", "cyclic"))
+        .ok_or_else(|| Error::Config("bad --scheme (cyclic|range)".into()))
+}
+
+fn parse_layout(args: &Args) -> Result<Layout> {
+    Layout::parse(&args.str_or("wt-layout", "sparse"))
+        .ok_or_else(|| Error::Config("bad --wt-layout (dense|sparse)".into()))
+}
+
 fn train_config(args: &Args) -> Result<TrainConfig> {
     Ok(TrainConfig {
         num_topics: args.get_as("topics", 20u32)?,
         iterations: args.get_as("iters", 20u32)?,
         alpha: args.get_as("alpha", 0.0f64)?,
         beta: args.get_as("beta", 0.01f64)?,
-        mh_steps: args.get_as("mh-steps", 2u32)?,
+        sampler: SamplerParams {
+            mh_steps: args.get_as("mh-steps", 2u32)?,
+            block_words: args.get_as("block-words", 2048usize)?,
+            buffer_cap: args.get_as("buffer-cap", 100_000usize)?,
+            dense_top_words: args.get_as("dense-top", 2000u64)?,
+            pipeline_depth: args.get_as("pipeline-depth", 1usize)?,
+            alias_dense_threshold: args.get_as("alias-dense-threshold", 0.5f64)?,
+        },
         workers: args.get_as("workers", 4usize)?,
         shards: args.get_as("shards", 4usize)?,
-        block_words: args.get_as("block-words", 2048usize)?,
-        buffer_cap: args.get_as("buffer-cap", 100_000usize)?,
-        dense_top_words: args.get_as("dense-top", 2000u64)?,
-        pipeline_depth: args.get_as("pipeline-depth", 1usize)?,
-        alias_dense_threshold: args.get_as("alias-dense-threshold", 0.5f64)?,
-        scheme: PartitionScheme::parse(&args.str_or("scheme", "cyclic"))
-            .ok_or_else(|| Error::Config("bad --scheme (cyclic|range)".into()))?,
-        wt_layout: Layout::parse(&args.str_or("wt-layout", "sparse"))
-            .ok_or_else(|| Error::Config("bad --wt-layout (dense|sparse)".into()))?,
+        scheme: parse_scheme(args)?,
+        wt_layout: parse_layout(args)?,
         transport: transport_mode(args)?,
         seed: args.get_as("seed", 0x1dau64)?,
         eval_every: args.get_as("eval-every", 5u32)?,
@@ -216,6 +420,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let model = trainer.run(&corpus)?;
     let perplexity = trainer.training_perplexity(&model, &corpus);
     log_info!("final training perplexity: {perplexity:.1}");
+    log_info!(
+        "frozen word-topic table: matrix id {} (serve it with `glint-lda serve-model`)",
+        trainer.matrix_id()
+    );
     for line in summarize(&model, &corpus.vocab, args.get_as("top-words", 8usize)?)
         .into_iter()
         .take(args.get_as("show-topics", 10usize)?)
@@ -245,12 +453,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => first_shard + addrs.len(),
         n => n,
     };
-    let cfg = PsConfig {
-        shards: total,
-        scheme: PartitionScheme::parse(&args.str_or("scheme", "cyclic"))
-            .ok_or_else(|| Error::Config("bad --scheme (cyclic|range)".into()))?,
-        ..PsConfig::default()
-    };
+    let cfg = PsConfig { shards: total, scheme: parse_scheme(args)?, ..PsConfig::default() };
     let server = TcpShardServer::bind(cfg, first_shard, &addrs)?;
     for (i, addr) in server.addrs().iter().enumerate() {
         log_info!("shard {}/{} listening on {addr}", first_shard + i, total);
@@ -258,6 +461,117 @@ fn cmd_serve(args: &Args) -> Result<()> {
     log_info!("serving; stop with `glint-lda shutdown --connect <addrs>`");
     server.join();
     log_info!("all hosted shards shut down");
+    Ok(())
+}
+
+/// Serve topic inference for unseen documents off live shards: attach
+/// the frozen word-topic table read-mostly by its matrix id, then answer
+/// `infer` clients with fixed-budget fold-in until one sends
+/// `--shutdown`.
+fn cmd_serve_model(args: &Args) -> Result<()> {
+    let list = args
+        .get("connect")
+        .ok_or_else(|| Error::Config("missing required option --connect".into()))?;
+    let addrs = split_addr_list(list);
+    let resolved = resolve_addrs(&addrs)?;
+    let vocab = args.require::<u32>("vocab")?;
+    let topics = args.require::<u32>("topics")?;
+    let alpha = args.get_as("alpha", 0.0f64)?;
+    let hyper = LdaHyper {
+        alpha: if alpha > 0.0 { alpha } else { 50.0 / f64::from(topics) },
+        beta: args.get_as("beta", 0.01f64)?,
+    };
+    let cfg = PsConfig::serving(
+        resolved.len(),
+        parse_scheme(args)?,
+        TransportMode::Connect(addrs),
+    );
+    let transport = TcpTransport::connect(&resolved);
+    let client = PsClient::connect(&transport, cfg);
+    let engine = InferEngine::attach(
+        &client,
+        args.get_as("matrix-id", 1u32)?,
+        vocab,
+        topics,
+        parse_layout(args)?,
+        hyper,
+        InferConfig {
+            budget: FoldInBudget {
+                sweeps: args.get_as("sweeps", 5u32)?,
+                mh_steps: args.get_as("mh-steps", 2u32)?,
+            },
+            cache_docs: args.get_as("cache-docs", 4096usize)?,
+            cache_words: args.get_as("cache-words", 100_000usize)?,
+            seed: args.get_as("seed", 0x5e21u64)?,
+        },
+    )?;
+    let window_ms =
+        args.get_as("batch-window-ms", DEFAULT_BATCH_WINDOW.as_secs_f64() * 1e3)?;
+    let window = Duration::from_secs_f64(window_ms.max(0.0) / 1e3);
+    let server = InferServer::start(engine, &args.str_or("bind", "127.0.0.1:0"), window)?;
+    log_info!(
+        "serve-model replica on {} (V={vocab}, K={topics}, {} shard(s))",
+        server.addr(),
+        resolved.len()
+    );
+    log_info!("stop with `glint-lda infer --connect {} --shutdown`", server.addr());
+    server.join();
+    log_info!("serve-model replica stopped");
+    Ok(())
+}
+
+/// One document per `--doc`/positional argument, comma-separated ids.
+fn parse_doc(raw: &str) -> Result<Vec<u32>> {
+    raw.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<u32>()
+                .map_err(|_| Error::Config(format!("bad token id {t:?} in document {raw:?}")))
+        })
+        .collect()
+}
+
+/// Query a serve-model replica: infer documents, print its serving
+/// counters, or stop it.
+fn cmd_infer(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| Error::Config("missing required option --connect host:port".into()))?;
+    let client = InferClient::connect(addr)?;
+    if args.flag("shutdown") {
+        client.shutdown()?;
+        log_info!("serve-model replica at {addr} stopped");
+        return Ok(());
+    }
+    if args.flag("stats") {
+        let s = client.stats()?;
+        println!(
+            "requests {}, docs {} ({} cache hits), batches {}, {} words over {} sparse pulls",
+            s.requests, s.docs, s.cache_hits, s.batches, s.words_pulled, s.sparse_pulls
+        );
+        return Ok(());
+    }
+    let mut docs: Vec<Vec<u32>> = Vec::new();
+    if let Some(d) = args.get("doc") {
+        docs.push(parse_doc(d)?);
+    }
+    for p in &args.positional {
+        docs.push(parse_doc(p)?);
+    }
+    if docs.is_empty() {
+        return Err(Error::Config(
+            "no documents; pass --doc 1,2,3 (and further comma-separated lists \
+             as positional arguments)"
+                .into(),
+        ));
+    }
+    let answers = client.infer(&docs)?;
+    for (doc, pairs) in docs.iter().zip(&answers) {
+        let rendered: Vec<String> =
+            pairs.iter().map(|&(t, c)| format!("{t}:{c}")).collect();
+        println!("{} token(s) -> {}", doc.len(), rendered.join(" "));
+    }
     Ok(())
 }
 

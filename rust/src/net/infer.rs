@@ -1,0 +1,255 @@
+//! Wire messages of the serve-model line protocol.
+//!
+//! Inference requests and replies ride the same correlation-tagged,
+//! length-prefixed frames as the parameter-server data plane
+//! ([`super::tcp`]); the payloads here are the frame bodies. Token ids,
+//! topics and counts are varint-coded — a typical request is a few
+//! bytes per token, and a reply is bounded by `min(len, K)` pairs per
+//! document.
+
+use crate::util::codec::{Reader, Writer};
+use crate::util::error::{Error, Result};
+
+const Q_INFER: u8 = 1;
+const Q_STATS: u8 = 2;
+const Q_SHUTDOWN: u8 = 3;
+
+const A_TOPICS: u8 = 1;
+const A_STATS: u8 = 2;
+const A_OK: u8 = 3;
+const A_ERROR: u8 = 4;
+
+/// Client → serving replica.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferRequest {
+    /// Fold in each document (a token-id list) and return its topics.
+    Infer {
+        /// One token-id list per document.
+        docs: Vec<Vec<u32>>,
+    },
+    /// Report the replica's cumulative serving counters.
+    Stats,
+    /// Ask the replica to exit its serve loop.
+    Shutdown,
+}
+
+/// Serving replica → client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InferResponse {
+    /// One `(topic, count)` list per requested document, topics
+    /// ascending, counts summing to the document's length.
+    Topics {
+        /// Per-document topic counts, in request order.
+        docs: Vec<Vec<(u32, u32)>>,
+    },
+    /// Cumulative serving counters.
+    Stats(ServeStats),
+    /// Acknowledged (shutdown).
+    Ok,
+    /// The replica could not serve the request.
+    Error(String),
+}
+
+/// Cumulative counters of one serving replica.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Inference requests served.
+    pub requests: u64,
+    /// Documents answered.
+    pub docs: u64,
+    /// Documents answered from the fold-in result cache.
+    pub cache_hits: u64,
+    /// Word rows pulled from the shards.
+    pub words_pulled: u64,
+    /// Batched sparse pulls issued.
+    pub sparse_pulls: u64,
+    /// Coalesced batches executed.
+    pub batches: u64,
+}
+
+impl InferRequest {
+    /// Serialize to frame-body bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            InferRequest::Infer { docs } => {
+                w.u8(Q_INFER);
+                w.usize(docs.len());
+                for doc in docs {
+                    w.slice_varint_u32(doc);
+                }
+            }
+            InferRequest::Stats => w.u8(Q_STATS),
+            InferRequest::Shutdown => w.u8(Q_SHUTDOWN),
+        }
+        w.into_bytes()
+    }
+
+    /// Parse from frame-body bytes.
+    pub fn decode(bytes: &[u8]) -> Result<InferRequest> {
+        let mut r = Reader::new(bytes);
+        let req = match r.u8()? {
+            Q_INFER => {
+                let n = r.usize()?;
+                let mut docs = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    docs.push(r.slice_varint_u32()?);
+                }
+                InferRequest::Infer { docs }
+            }
+            Q_STATS => InferRequest::Stats,
+            Q_SHUTDOWN => InferRequest::Shutdown,
+            t => return Err(Error::Decode(format!("unknown infer request tag {t}"))),
+        };
+        if !r.is_done() {
+            return Err(Error::Decode("trailing bytes after infer request".into()));
+        }
+        Ok(req)
+    }
+}
+
+impl InferResponse {
+    /// Serialize to frame-body bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            InferResponse::Topics { docs } => {
+                w.u8(A_TOPICS);
+                w.usize(docs.len());
+                for pairs in docs {
+                    w.usize(pairs.len());
+                    for &(t, c) in pairs {
+                        w.varint(t as u64);
+                        w.varint(c as u64);
+                    }
+                }
+            }
+            InferResponse::Stats(s) => {
+                w.u8(A_STATS);
+                w.varint(s.requests);
+                w.varint(s.docs);
+                w.varint(s.cache_hits);
+                w.varint(s.words_pulled);
+                w.varint(s.sparse_pulls);
+                w.varint(s.batches);
+            }
+            InferResponse::Ok => w.u8(A_OK),
+            InferResponse::Error(m) => {
+                w.u8(A_ERROR);
+                w.str(m);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Parse from frame-body bytes.
+    pub fn decode(bytes: &[u8]) -> Result<InferResponse> {
+        let mut r = Reader::new(bytes);
+        let resp = match r.u8()? {
+            A_TOPICS => {
+                let n = r.usize()?;
+                let mut docs = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    let pairs = r.usize()?;
+                    let mut doc = Vec::with_capacity(pairs.min(1 << 16));
+                    for _ in 0..pairs {
+                        let t = varint_u32(&mut r, "topic")?;
+                        let c = varint_u32(&mut r, "count")?;
+                        doc.push((t, c));
+                    }
+                    docs.push(doc);
+                }
+                InferResponse::Topics { docs }
+            }
+            A_STATS => InferResponse::Stats(ServeStats {
+                requests: r.varint()?,
+                docs: r.varint()?,
+                cache_hits: r.varint()?,
+                words_pulled: r.varint()?,
+                sparse_pulls: r.varint()?,
+                batches: r.varint()?,
+            }),
+            A_OK => InferResponse::Ok,
+            A_ERROR => InferResponse::Error(r.str()?),
+            t => return Err(Error::Decode(format!("unknown infer response tag {t}"))),
+        };
+        if !r.is_done() {
+            return Err(Error::Decode("trailing bytes after infer response".into()));
+        }
+        Ok(resp)
+    }
+}
+
+/// Varint bounded to u32 (topics and counts are 32-bit on the wire).
+fn varint_u32(r: &mut Reader<'_>, what: &str) -> Result<u32> {
+    let v = r.varint()?;
+    u32::try_from(v).map_err(|_| Error::Decode(format!("{what} out of range: {v}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: &InferRequest) {
+        let bytes = req.encode();
+        assert_eq!(&InferRequest::decode(&bytes).unwrap(), req);
+    }
+
+    fn roundtrip_resp(resp: &InferResponse) {
+        let bytes = resp.encode();
+        assert_eq!(&InferResponse::decode(&bytes).unwrap(), resp);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(&InferRequest::Infer { docs: vec![] });
+        roundtrip_req(&InferRequest::Infer {
+            docs: vec![vec![0, 1, u32::MAX], vec![], vec![42; 300]],
+        });
+        roundtrip_req(&InferRequest::Stats);
+        roundtrip_req(&InferRequest::Shutdown);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        roundtrip_resp(&InferResponse::Topics { docs: vec![] });
+        roundtrip_resp(&InferResponse::Topics {
+            docs: vec![vec![(0, 3), (7, 1), (u32::MAX, 2)], vec![]],
+        });
+        roundtrip_resp(&InferResponse::Stats(ServeStats {
+            requests: 1,
+            docs: 2,
+            cache_hits: 3,
+            words_pulled: u64::MAX,
+            sparse_pulls: 5,
+            batches: 6,
+        }));
+        roundtrip_resp(&InferResponse::Ok);
+        roundtrip_resp(&InferResponse::Error("shard down".into()));
+    }
+
+    #[test]
+    fn garbage_and_truncation_are_errors_not_panics() {
+        assert!(InferRequest::decode(&[]).is_err());
+        assert!(InferRequest::decode(&[0xee]).is_err());
+        assert!(InferResponse::decode(&[0xee]).is_err());
+        let good = InferRequest::Infer { docs: vec![vec![1, 2, 3]] }.encode();
+        for cut in 1..good.len() {
+            assert!(InferRequest::decode(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        let good = InferResponse::Topics { docs: vec![vec![(1, 2)]] }.encode();
+        for cut in 1..good.len() {
+            assert!(InferResponse::decode(&good[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = InferRequest::Stats.encode();
+        bytes.push(0);
+        assert!(InferRequest::decode(&bytes).is_err());
+        let mut bytes = InferResponse::Ok.encode();
+        bytes.push(9);
+        assert!(InferResponse::decode(&bytes).is_err());
+    }
+}

@@ -25,6 +25,7 @@
 //! two transports are wire-compatible.
 
 pub mod frame;
+pub mod infer;
 pub mod stats;
 pub mod tcp;
 

@@ -16,20 +16,23 @@
 //!
 //! # Asynchronous tickets
 //!
-//! Every operation has an `_async` variant returning a ticket
-//! ([`PullTicket`] / [`PushTicket`]) immediately; the operation runs on
-//! per-shard client worker threads. Each shard has a **bounded
-//! in-flight window** ([`PsConfig::pipeline_depth`]): at most that many
+//! Every operation has an `_async` variant returning a [`Ticket`]
+//! immediately; the operation runs on per-shard client worker threads.
+//! The ticket is generic over its result — `Ticket<Vec<T>>` for dense
+//! pulls and column sums, `Ticket<Vec<SparseRow<T>>>` for sparse and
+//! top-k pulls, `Ticket<()>` for pushes — with one [`Ticket::wait`]
+//! contract for all of them. Each shard has a **bounded in-flight
+//! window** ([`PsConfig::pipeline_depth`]): at most that many
 //! operations may be outstanding against a shard, and further
 //! submissions block, giving natural backpressure. The blocking methods
-//! (`pull_rows`, `push_coords`, …) are thin `_async` + [`PullTicket::wait`]
+//! (`pull_rows`, `push_coords`, …) are thin `_async` + [`Ticket::wait`]
 //! wrappers.
 //!
 //! # Ordering guarantees
 //!
-//! - **Per ticket, exactly-once.** A [`PushTicket`] that resolves `Ok`
-//!   means every shard applied its deltas exactly once, regardless of
-//!   message loss, duplication, or retries underneath.
+//! - **Per ticket, exactly-once.** A push `Ticket<()>` that resolves
+//!   `Ok` means every shard applied its deltas exactly once, regardless
+//!   of message loss, duplication, or retries underneath.
 //! - **No cross-ticket ordering.** Two tickets issued back-to-back may
 //!   execute against a shard in either order (the window is a pool, not
 //!   a queue of one). This is safe for the counter workloads the server
@@ -44,7 +47,7 @@
 //!   pushes submitted before it. Call it before perplexity evaluation,
 //!   checkpointing, or reading your own writes.
 //! - **Dropped tickets are fire-and-forget, not cancelled.** The
-//!   operation still runs to completion; a dropped [`PushTicket`]'s
+//!   operation still runs to completion; a dropped push ticket's
 //!   error is parked and surfaced by the next `flush`.
 
 use std::collections::VecDeque;
@@ -649,56 +652,6 @@ impl<T> CoordDeltas<T> {
     }
 }
 
-/// Handle to an asynchronous pull issued with
-/// [`BigMatrix::pull_rows_async`]. Resolve it with [`PullTicket::wait`].
-/// Dropping the ticket abandons the values (the pull itself still
-/// completes on the shard workers).
-#[must_use = "a pull's values are only delivered through wait()"]
-pub struct PullTicket<T: Element> {
-    /// `(shard, receiver)` per per-shard sub-request.
-    parts: Vec<(usize, mpsc::Receiver<Result<Vec<T>>>)>,
-    /// Requested global rows, for scattering back to request order.
-    rows: Vec<u64>,
-    cols: usize,
-    shards: usize,
-    part: Partitioner,
-    /// Validation failure detected at issue time.
-    early: Option<Error>,
-}
-
-impl<T: Element> PullTicket<T> {
-    /// Block until every shard answered; values come back row-major in
-    /// the order requested (`rows.len() * cols` entries).
-    pub fn wait(mut self) -> Result<Vec<T>> {
-        if let Some(e) = self.early.take() {
-            return Err(e);
-        }
-        let mut shard_data: Vec<Vec<T>> = (0..self.shards).map(|_| Vec::new()).collect();
-        for (shard, rx) in &self.parts {
-            match rx.recv() {
-                Ok(Ok(values)) => shard_data[*shard] = values,
-                Ok(Err(e)) => return Err(e),
-                Err(_) => {
-                    return Err(Error::Config(
-                        "async pull worker disappeared before replying".into(),
-                    ))
-                }
-            }
-        }
-        // Scatter back into request order.
-        let cols = self.cols;
-        let mut cursor = vec![0usize; self.shards];
-        let mut out = vec![T::default(); self.rows.len() * cols];
-        for (i, &r) in self.rows.iter().enumerate() {
-            let s = self.part.shard_of(r);
-            let src = &shard_data[s][cursor[s]..cursor[s] + cols];
-            out[i * cols..(i + 1) * cols].copy_from_slice(src);
-            cursor[s] += cols;
-        }
-        Ok(out)
-    }
-}
-
 /// One pulled sparse row: `(col, value)` pairs, columns ascending for
 /// plain sparse pulls, value-descending for top-k pulls.
 pub type SparseRow<T> = Vec<(u32, T)>;
@@ -707,109 +660,134 @@ pub type SparseRow<T> = Vec<(u32, T)>;
 /// shard's request order.
 type SparseShardReply<T> = (Vec<u32>, Vec<u32>, Vec<T>);
 
-/// Handle to an asynchronous sparse pull issued with
-/// [`BigMatrix::pull_sparse_rows_async`] or
-/// [`BigMatrix::pull_topk_async`]. Resolve it with
-/// [`SparsePullTicket::wait`]; dropping the ticket abandons the values
-/// (the pull itself still completes on the shard workers).
-#[must_use = "a pull's values are only delivered through wait()"]
-pub struct SparsePullTicket<T: Element> {
-    /// `(shard, receiver)` per per-shard sub-request.
-    parts: Vec<(usize, mpsc::Receiver<Result<SparseShardReply<T>>>)>,
-    /// Requested global rows, for scattering back to request order.
-    rows: Vec<u64>,
-    shards: usize,
-    part: Partitioner,
-    /// Validation failure detected at issue time.
-    early: Option<Error>,
-}
-
-impl<T: Element> SparsePullTicket<T> {
-    /// Block until every shard answered; one pair list per requested
-    /// row, in request order.
-    pub fn wait(mut self) -> Result<Vec<SparseRow<T>>> {
-        if let Some(e) = self.early.take() {
-            return Err(e);
-        }
-        let mut shard_data: Vec<SparseShardReply<T>> =
-            (0..self.shards).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
-        for (shard, rx) in &self.parts {
-            match rx.recv() {
-                Ok(Ok(reply)) => shard_data[*shard] = reply,
-                Ok(Err(e)) => return Err(e),
-                Err(_) => {
-                    return Err(Error::Config(
-                        "async sparse pull worker disappeared before replying".into(),
-                    ))
-                }
-            }
-        }
-        // Scatter back into request order.
-        let mut row_cursor = vec![0usize; self.shards];
-        let mut pair_cursor = vec![0usize; self.shards];
-        let mut out: Vec<SparseRow<T>> = Vec::with_capacity(self.rows.len());
-        for &r in &self.rows {
-            let s = self.part.shard_of(r);
-            let (lens, cols, vals) = &shard_data[s];
-            let Some(&n) = lens.get(row_cursor[s]) else {
-                return Err(Error::Decode("sparse pull reply is missing rows".into()));
-            };
-            row_cursor[s] += 1;
-            let (start, end) = (pair_cursor[s], pair_cursor[s] + n as usize);
-            if end > cols.len() || end > vals.len() {
-                return Err(Error::Decode("sparse pull reply is missing pairs".into()));
-            }
-            out.push(
-                cols[start..end].iter().copied().zip(vals[start..end].iter().copied()).collect(),
-            );
-            pair_cursor[s] = end;
-        }
-        Ok(out)
+/// Receive one shard's reply off an async worker channel; a hung-up
+/// channel means the dispatcher died before replying.
+fn recv_part<V>(rx: &mpsc::Receiver<Result<V>>, what: &str) -> Result<V> {
+    match rx.recv() {
+        Ok(r) => r,
+        Err(_) => Err(Error::Config(format!("async {what} worker disappeared before replying"))),
     }
 }
 
-/// Handle to an asynchronous server-side column-sum aggregation issued
-/// with [`BigMatrix::pull_col_sums_async`]. [`ColSumsTicket::wait`]
-/// adds the per-shard partial sums into the global `cols`-length total.
-#[must_use = "the sums are only delivered through wait()"]
-pub struct ColSumsTicket<T: Element> {
-    parts: Vec<mpsc::Receiver<Result<Vec<T>>>>,
-    cols: usize,
-    /// Validation failure detected at issue time.
-    early: Option<Error>,
+/// How a [`Ticket`] resolves at `wait` time.
+enum TicketState<R> {
+    /// Resolved at issue time: trivial operations (nothing to send) and
+    /// validation failures of side-effect-free operations.
+    Ready(Option<Result<R>>),
+    /// Pull-style: a deferred gather that receives every shard's reply
+    /// and scatters them back into request order. Dropping it abandons
+    /// the values (the pulls still complete on the shard workers).
+    Gather(Option<Box<dyn FnOnce() -> Result<R> + Send>>),
+    /// Push-style: per-shard exactly-once hand-shake completion slots.
+    /// Dropping it fires-and-forgets — errors are parked in the orphan
+    /// sink for the next flush.
+    Push { parts: Vec<Arc<PushPart>>, early: Option<Error>, ok: Option<R> },
 }
 
-impl<T: Element> ColSumsTicket<T> {
-    /// Block until every shard answered; returns the global column sums
-    /// (`cols` entries).
-    pub fn wait(mut self) -> Result<Vec<T>> {
-        if let Some(e) = self.early.take() {
-            return Err(e);
-        }
-        let mut out = vec![T::default(); self.cols];
-        for rx in &self.parts {
-            match rx.recv() {
-                Ok(Ok(partial)) => {
-                    if partial.len() != self.cols {
-                        return Err(Error::Decode(format!(
-                            "col-sum reply has {} entries, want {}",
-                            partial.len(),
-                            self.cols
-                        )));
+/// Handle to an asynchronous parameter-server operation. One type for
+/// every operation, generic over the result it delivers:
+///
+/// - `Ticket<Vec<T>>` — dense row pulls ([`BigMatrix::pull_rows_async`])
+///   and column sums ([`BigMatrix::pull_col_sums_async`]);
+/// - `Ticket<Vec<SparseRow<T>>>` — sparse and top-k pulls;
+/// - `Ticket<()>` — exactly-once pushes.
+///
+/// [`Ticket::wait`] is the one resolution contract: block until every
+/// per-shard sub-operation finished, first error wins. Dropping a pull
+/// ticket abandons its values (the pull still completes inside the
+/// shard windows); dropping a push ticket makes the push
+/// fire-and-forget — it still runs to completion and any error is
+/// parked for the next [`PsClient::flush`].
+#[must_use = "an operation's outcome is only delivered through wait()"]
+pub struct Ticket<R> {
+    state: TicketState<R>,
+    /// The client's orphan-error sink (push-style tickets only).
+    orphans: Option<Arc<Mutex<Vec<Error>>>>,
+}
+
+impl<R> Ticket<R> {
+    /// A ticket resolved at issue time (trivial or invalid operation).
+    fn ready(result: Result<R>) -> Ticket<R> {
+        Ticket { state: TicketState::Ready(Some(result)), orphans: None }
+    }
+
+    /// A ticket that resolves by running `gather` (receive per-shard
+    /// replies + scatter) when waited.
+    fn gather(f: impl FnOnce() -> Result<R> + Send + 'static) -> Ticket<R> {
+        Ticket { state: TicketState::Gather(Some(Box::new(f))), orphans: None }
+    }
+
+    /// Block until the operation completed on every shard; first error
+    /// wins. Pulls yield their values; pushes yield `()` once every
+    /// shard's hand-shake confirmed exactly-once application.
+    pub fn wait(mut self) -> Result<R> {
+        match std::mem::replace(&mut self.state, TicketState::Ready(None)) {
+            TicketState::Ready(result) => result.expect("ticket waited twice"),
+            TicketState::Gather(f) => (f.expect("ticket waited twice"))(),
+            TicketState::Push { parts, early, ok } => {
+                if let Some(e) = early {
+                    // Constructors never pair an early error with
+                    // submitted parts, but keep the never-silent
+                    // invariant anyway: park whatever exists.
+                    park_push_parts(&parts, self.orphans.as_deref());
+                    return Err(e);
+                }
+                let mut first: Option<Error> = None;
+                for part in &parts {
+                    let mut st = part.state.lock().unwrap();
+                    while st.result.is_none() {
+                        st = part.done.wait(st).unwrap();
                     }
-                    for (o, v) in out.iter_mut().zip(partial) {
-                        *o += v;
+                    if let Some(Err(e)) = st.result.take() {
+                        first.get_or_insert(e);
                     }
                 }
-                Ok(Err(e)) => return Err(e),
-                Err(_) => {
-                    return Err(Error::Config(
-                        "async col-sum worker disappeared before replying".into(),
-                    ))
+                match first {
+                    Some(e) => Err(e),
+                    None => Ok(ok.expect("ticket waited twice")),
                 }
             }
         }
-        Ok(out)
+    }
+}
+
+impl<R> Drop for Ticket<R> {
+    fn drop(&mut self) {
+        // Pull-style states need no cleanup: dropping the gather closure
+        // drops its receivers, and the shard jobs discard their sends.
+        // A dropped push must never fail silently: hand any un-consumed
+        // results to the orphan sink (results a `wait` already took are
+        // gone; jobs still running see the abandoned flag and park their
+        // own errors). A validation failure nobody waited for is parked
+        // the same way.
+        let TicketState::Push { parts, early, .. } =
+            std::mem::replace(&mut self.state, TicketState::Ready(None))
+        else {
+            return;
+        };
+        if let Some(e) = early {
+            if let Some(orphans) = self.orphans.as_deref() {
+                orphans.lock().unwrap().push(e);
+            }
+        }
+        park_push_parts(&parts, self.orphans.as_deref());
+    }
+}
+
+/// Route every un-consumed push-part outcome into the orphan sink: an
+/// error is parked for the next flush, a still-running hand-shake is
+/// flagged abandoned so its job parks its own error when it completes.
+fn park_push_parts(parts: &[Arc<PushPart>], orphans: Option<&Mutex<Vec<Error>>>) {
+    let Some(orphans) = orphans else {
+        return;
+    };
+    for part in parts {
+        let mut st = part.state.lock().unwrap();
+        match st.result.take() {
+            Some(Err(e)) => orphans.lock().unwrap().push(e),
+            Some(Ok(())) => {}
+            None => st.abandoned = true,
+        }
     }
 }
 
@@ -849,69 +827,6 @@ impl PushPart {
         } else {
             st.result = Some(result);
             self.done.notify_all();
-        }
-    }
-}
-
-/// Handle to an asynchronous exactly-once push. [`PushTicket::wait`]
-/// confirms the deltas landed. Dropping the ticket makes the push
-/// fire-and-forget: it still runs to completion, and any error is
-/// parked and reported by the next [`PsClient::flush`].
-pub struct PushTicket {
-    parts: Vec<Arc<PushPart>>,
-    /// Validation failure detected at issue time.
-    early: Option<Error>,
-    /// The client's orphan-error sink, for results this ticket abandons.
-    orphans: Option<Arc<Mutex<Vec<Error>>>>,
-}
-
-impl PushTicket {
-    fn done() -> PushTicket {
-        PushTicket { parts: Vec::new(), early: None, orphans: None }
-    }
-
-    /// Block until every shard's hand-shake finished; first error wins.
-    pub fn wait(mut self) -> Result<()> {
-        if let Some(e) = self.early.take() {
-            return Err(e);
-        }
-        let mut first: Option<Error> = None;
-        for part in &self.parts {
-            let mut st = part.state.lock().unwrap();
-            while st.result.is_none() {
-                st = part.done.wait(st).unwrap();
-            }
-            if let Some(Err(e)) = st.result.take() {
-                first.get_or_insert(e);
-            }
-        }
-        match first {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
-    }
-}
-
-impl Drop for PushTicket {
-    fn drop(&mut self) {
-        // Hand any un-consumed results to the orphan sink (results a
-        // `wait` already took are gone; jobs still running see the
-        // abandoned flag and park their own errors). A validation
-        // failure nobody waited for is parked the same way — a
-        // fire-and-forget push must never fail silently.
-        let Some(orphans) = self.orphans.as_ref() else {
-            return;
-        };
-        if let Some(e) = self.early.take() {
-            orphans.lock().unwrap().push(e);
-        }
-        for part in &self.parts {
-            let mut st = part.state.lock().unwrap();
-            match st.result.take() {
-                Some(Err(e)) => orphans.lock().unwrap().push(e),
-                Some(Ok(())) => {}
-                None => st.abandoned = true,
-            }
         }
     }
 }
@@ -974,10 +889,9 @@ impl<T: Element> BigMatrix<T> {
     }
 
     /// Assemble the ticket for a set of submitted push parts.
-    fn push_ticket(&self, parts: Vec<Arc<PushPart>>) -> PushTicket {
-        PushTicket {
-            parts,
-            early: None,
+    fn push_ticket(&self, parts: Vec<Arc<PushPart>>) -> Ticket<()> {
+        Ticket {
+            state: TicketState::Push { parts, early: None, ok: Some(()) },
             orphans: Some(Arc::clone(&self.client.core.orphan_errors)),
         }
     }
@@ -985,48 +899,28 @@ impl<T: Element> BigMatrix<T> {
     /// A push ticket that fails immediately with `err` when waited; if
     /// nobody waits, the error is parked for `flush` instead (dropped
     /// tickets must never fail silently).
-    fn failed_push(&self, err: Error) -> PushTicket {
-        PushTicket {
-            parts: Vec::new(),
-            early: Some(err),
+    fn failed_push(&self, err: Error) -> Ticket<()> {
+        Ticket {
+            state: TicketState::Push { parts: Vec::new(), early: Some(err), ok: Some(()) },
             orphans: Some(Arc::clone(&self.client.core.orphan_errors)),
         }
     }
 
-    /// A ticket that fails immediately with `err` when waited.
-    fn failed_pull(&self, err: Error) -> PullTicket<T> {
-        PullTicket {
-            parts: Vec::new(),
-            rows: Vec::new(),
-            cols: self.cols as usize,
-            shards: self.client.shards(),
-            part: self.part,
-            early: Some(err),
-        }
-    }
-
     /// Start pulling full rows by global index; the returned ticket's
-    /// [`PullTicket::wait`] yields the values row-major in the order
+    /// [`Ticket::wait`] yields the values row-major in the order
     /// requested. The per-shard sub-requests run inside each shard's
     /// bounded in-flight window, so several tickets can overlap.
-    pub fn pull_rows_async(&self, rows: &[u64]) -> PullTicket<T> {
+    pub fn pull_rows_async(&self, rows: &[u64]) -> Ticket<Vec<T>> {
         let shards = self.client.shards();
         if rows.is_empty() {
-            return PullTicket {
-                parts: Vec::new(),
-                rows: Vec::new(),
-                cols: self.cols as usize,
-                shards,
-                part: self.part,
-                early: None,
-            };
+            return Ticket::ready(Ok(Vec::new()));
         }
         for &r in rows {
             if r >= self.part.rows {
-                return self.failed_pull(Error::Config(format!(
+                return Ticket::ready(Err(Error::Config(format!(
                     "row {r} out of bounds ({} rows)",
                     self.part.rows
-                )));
+                ))));
             }
         }
         // Split into at most one request per shard (§2.3).
@@ -1056,14 +950,25 @@ impl<T: Element> BigMatrix<T> {
             );
             parts.push((s, rx));
         }
-        PullTicket {
-            parts,
-            rows: rows.to_vec(),
-            cols: self.cols as usize,
-            shards,
-            part: self.part,
-            early: None,
-        }
+        let rows = rows.to_vec();
+        let cols = self.cols as usize;
+        let part = self.part;
+        Ticket::gather(move || {
+            let mut shard_data: Vec<Vec<T>> = (0..shards).map(|_| Vec::new()).collect();
+            for (shard, rx) in &parts {
+                shard_data[*shard] = recv_part(rx, "pull")?;
+            }
+            // Scatter back into request order.
+            let mut cursor = vec![0usize; shards];
+            let mut out = vec![T::default(); rows.len() * cols];
+            for (i, &r) in rows.iter().enumerate() {
+                let s = part.shard_of(r);
+                let src = &shard_data[s][cursor[s]..cursor[s] + cols];
+                out[i * cols..(i + 1) * cols].copy_from_slice(src);
+                cursor[s] += cols;
+            }
+            Ok(out)
+        })
     }
 
     /// Pull full rows by global index; returns values row-major in the
@@ -1078,17 +983,6 @@ impl<T: Element> BigMatrix<T> {
         self.pull_rows(&[row])
     }
 
-    /// A sparse ticket that fails immediately with `err` when waited.
-    fn failed_sparse_pull(&self, err: Error) -> SparsePullTicket<T> {
-        SparsePullTicket {
-            parts: Vec::new(),
-            rows: Vec::new(),
-            shards: self.client.shards(),
-            part: self.part,
-            early: Some(err),
-        }
-    }
-
     /// Issue one sparse pull sub-request per shard; `make` builds the
     /// shard request from that shard's row subset. Shared machinery of
     /// [`BigMatrix::pull_sparse_rows_async`] and
@@ -1097,23 +991,17 @@ impl<T: Element> BigMatrix<T> {
         &self,
         rows: &[u64],
         make: impl Fn(u32, Vec<u64>) -> Request,
-    ) -> SparsePullTicket<T> {
+    ) -> Ticket<Vec<SparseRow<T>>> {
         let shards = self.client.shards();
         if rows.is_empty() {
-            return SparsePullTicket {
-                parts: Vec::new(),
-                rows: Vec::new(),
-                shards,
-                part: self.part,
-                early: None,
-            };
+            return Ticket::ready(Ok(Vec::new()));
         }
         for &r in rows {
             if r >= self.part.rows {
-                return self.failed_sparse_pull(Error::Config(format!(
+                return Ticket::ready(Err(Error::Config(format!(
                     "row {r} out of bounds ({} rows)",
                     self.part.rows
-                )));
+                ))));
             }
         }
         // Split into at most one request per shard (§2.3).
@@ -1146,7 +1034,40 @@ impl<T: Element> BigMatrix<T> {
             );
             parts.push((s, rx));
         }
-        SparsePullTicket { parts, rows: rows.to_vec(), shards, part: self.part, early: None }
+        let rows = rows.to_vec();
+        let part = self.part;
+        Ticket::gather(move || {
+            let mut shard_data: Vec<SparseShardReply<T>> =
+                (0..shards).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+            for (shard, rx) in &parts {
+                shard_data[*shard] = recv_part(rx, "sparse pull")?;
+            }
+            // Scatter back into request order.
+            let mut row_cursor = vec![0usize; shards];
+            let mut pair_cursor = vec![0usize; shards];
+            let mut out: Vec<SparseRow<T>> = Vec::with_capacity(rows.len());
+            for &r in &rows {
+                let s = part.shard_of(r);
+                let (lens, cols, vals) = &shard_data[s];
+                let Some(&n) = lens.get(row_cursor[s]) else {
+                    return Err(Error::Decode("sparse pull reply is missing rows".into()));
+                };
+                row_cursor[s] += 1;
+                let (start, end) = (pair_cursor[s], pair_cursor[s] + n as usize);
+                if end > cols.len() || end > vals.len() {
+                    return Err(Error::Decode("sparse pull reply is missing pairs".into()));
+                }
+                out.push(
+                    cols[start..end]
+                        .iter()
+                        .copied()
+                        .zip(vals[start..end].iter().copied())
+                        .collect(),
+                );
+                pair_cursor[s] = end;
+            }
+            Ok(out)
+        })
     }
 
     /// Start pulling rows as `(col, value)` pair lists — only the
@@ -1159,7 +1080,7 @@ impl<T: Element> BigMatrix<T> {
     /// sweep as-is, so client-side block memory is O(pairs) too.
     /// Works on either storage layout (dense shards scan for non-zero
     /// entries server-side).
-    pub fn pull_sparse_rows_async(&self, rows: &[u64]) -> SparsePullTicket<T> {
+    pub fn pull_sparse_rows_async(&self, rows: &[u64]) -> Ticket<Vec<SparseRow<T>>> {
         self.sparse_pull_async(rows, |id, shard_rows| Request::PullSparseRows {
             id,
             rows: shard_rows,
@@ -1175,7 +1096,7 @@ impl<T: Element> BigMatrix<T> {
     /// Start a server-side top-k pull: each requested row comes back as
     /// its `k` largest `(col, value)` pairs (value descending, ties by
     /// column ascending) — topic inspection without shipping full rows.
-    pub fn pull_topk_async(&self, rows: &[u64], k: u32) -> SparsePullTicket<T> {
+    pub fn pull_topk_async(&self, rows: &[u64], k: u32) -> Ticket<Vec<SparseRow<T>>> {
         self.sparse_pull_async(rows, move |id, shard_rows| Request::PullTopK {
             id,
             rows: shard_rows,
@@ -1193,7 +1114,7 @@ impl<T: Element> BigMatrix<T> {
     /// local rows and ships one `cols`-length vector; the ticket adds
     /// the partials. For LDA this replaces pulling the whole word-topic
     /// matrix just to recompute the global topic-count vector.
-    pub fn pull_col_sums_async(&self) -> ColSumsTicket<T> {
+    pub fn pull_col_sums_async(&self) -> Ticket<Vec<T>> {
         let mut parts = Vec::with_capacity(self.client.shards());
         for s in 0..self.client.shards() {
             let courier = self.client.courier(s);
@@ -1211,7 +1132,23 @@ impl<T: Element> BigMatrix<T> {
             );
             parts.push(rx);
         }
-        ColSumsTicket { parts, cols: self.cols as usize, early: None }
+        let cols = self.cols as usize;
+        Ticket::gather(move || {
+            let mut out = vec![T::default(); cols];
+            for rx in &parts {
+                let partial = recv_part(rx, "col-sum")?;
+                if partial.len() != cols {
+                    return Err(Error::Decode(format!(
+                        "col-sum reply has {} entries, want {cols}",
+                        partial.len()
+                    )));
+                }
+                for (o, v) in out.iter_mut().zip(partial) {
+                    *o += v;
+                }
+            }
+            Ok(out)
+        })
     }
 
     /// Global column sums. Blocking wrapper over
@@ -1226,9 +1163,9 @@ impl<T: Element> BigMatrix<T> {
     /// independently inside that shard's in-flight window. Dropping the
     /// ticket fires-and-forgets; errors then surface at the next
     /// [`BigMatrix::flush`].
-    pub fn push_coords_async(&self, deltas: &CoordDeltas<T>) -> PushTicket {
+    pub fn push_coords_async(&self, deltas: &CoordDeltas<T>) -> Ticket<()> {
         if deltas.is_empty() {
-            return PushTicket::done();
+            return Ticket::ready(Ok(()));
         }
         if deltas.rows.len() != deltas.cols.len() || deltas.rows.len() != deltas.values.len() {
             return self.failed_push(Error::Config("delta arrays must have equal length".into()));
@@ -1274,9 +1211,9 @@ impl<T: Element> BigMatrix<T> {
     /// Start pushing dense full-row deltas (`rows.len() * cols` values,
     /// row-major) with exactly-once semantics. Same ticket semantics as
     /// [`BigMatrix::push_coords_async`].
-    pub fn push_rows_async(&self, rows: &[u64], values: &[T]) -> PushTicket {
+    pub fn push_rows_async(&self, rows: &[u64], values: &[T]) -> Ticket<()> {
         if rows.is_empty() {
-            return PushTicket::done();
+            return Ticket::ready(Ok(()));
         }
         let cols = self.cols as usize;
         if values.len() != rows.len() * cols {
@@ -1345,7 +1282,7 @@ impl<T: Element> BigVector<T> {
 
     /// Start pulling selected entries (ticket semantics of
     /// [`BigMatrix::pull_rows_async`]).
-    pub fn pull_async(&self, indices: &[u64]) -> PullTicket<T> {
+    pub fn pull_async(&self, indices: &[u64]) -> Ticket<Vec<T>> {
         self.inner.pull_rows_async(indices)
     }
 
@@ -1362,7 +1299,7 @@ impl<T: Element> BigVector<T> {
 
     /// Start pushing sparse additive deltas (ticket semantics of
     /// [`BigMatrix::push_coords_async`]).
-    pub fn push_async(&self, indices: &[u64], deltas: &[T]) -> PushTicket {
+    pub fn push_async(&self, indices: &[u64], deltas: &[T]) -> Ticket<()> {
         if indices.len() != deltas.len() {
             return self.inner.failed_push(Error::Config(
                 "index and delta arrays must have equal length".into(),
@@ -1526,7 +1463,7 @@ mod tests {
         let client = PsClient::connect(&group.transport(), cfg);
         let m: BigMatrix<i64> = client.matrix(32, 2).unwrap();
         // Issue several pushes and pulls without waiting in between.
-        let pushes: Vec<PushTicket> = (0..6)
+        let pushes: Vec<Ticket<()>> = (0..6)
             .map(|i| {
                 let deltas = CoordDeltas { rows: vec![i], cols: vec![0], values: vec![1] };
                 m.push_coords_async(&deltas)

@@ -114,6 +114,26 @@ impl PsConfig {
         }
     }
 
+    /// Read-mostly client config for a serve-model replica attached to
+    /// live shards: same deployment shape as the trainer's, but with an
+    /// interactive failure budget — a dead shard should surface within a
+    /// couple of seconds instead of riding out the training back-off
+    /// schedule (~1 minute with the defaults).
+    pub fn serving(
+        shards: usize,
+        scheme: PartitionScheme,
+        transport: TransportMode,
+    ) -> PsConfig {
+        PsConfig {
+            shards,
+            scheme,
+            transport,
+            max_retries: 8,
+            max_timeout: Duration::from_secs(2),
+            ..PsConfig::default()
+        }
+    }
+
     /// Timeout for attempt `attempt` (0-based), growing exponentially and
     /// clamped to `max_timeout`.
     pub fn timeout_for_attempt(&self, attempt: u32) -> Duration {

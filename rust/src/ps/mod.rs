@@ -33,9 +33,7 @@ pub mod partition;
 pub mod server;
 pub mod storage;
 
-pub use client::{
-    BigMatrix, BigVector, ColSumsTicket, PsClient, PullTicket, PushTicket, SparsePullTicket,
-};
+pub use client::{BigMatrix, BigVector, PsClient, SparseRow, Ticket};
 pub use config::PsConfig;
 pub use messages::{Data, Dtype, Layout, Request, Response, SparseData};
 pub use partition::{PartitionScheme, Partitioner};

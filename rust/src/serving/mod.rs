@@ -1,0 +1,234 @@
+//! The serve-model inference tier: a serving front-end answering
+//! topic-inference requests for unseen documents **directly off live
+//! parameter-server shards**.
+//!
+//! Topology: clients ([`InferClient`]) speak the line protocol of
+//! [`crate::net::infer`] to one or more serving replicas
+//! ([`InferServer`]); each replica holds a read-mostly PS connection to
+//! the shards, attaches the frozen word-topic table by its agreed id and
+//! answers each request with a fixed-budget fold-in
+//! ([`crate::lda::infer::InferEngine`]).
+//!
+//! A replica's serve loop is single-threaded on purpose: throughput
+//! comes from **batching**, not thread fan-out. After the first request
+//! of a batch arrives, the loop keeps draining its inbox for one
+//! batching window so requests from concurrent clients coalesce — the
+//! whole batch's distinct words are fetched in a *single* sparse pull,
+//! and repeat documents are answered from the fold-in LRU without
+//! touching the shards at all.
+
+use std::net::SocketAddr;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::lda::infer::InferEngine;
+use crate::net::infer::{InferRequest, InferResponse, ServeStats};
+use crate::net::tcp::{resolve_addrs, TcpServer, TcpTransport};
+use crate::net::{respond, Endpoint, Envelope, Inbox, Transport};
+use crate::util::error::{Error, Result};
+
+/// Default inbox-drain window for request coalescing.
+pub const DEFAULT_BATCH_WINDOW: Duration = Duration::from_millis(2);
+
+/// Reply timeout of one client round-trip (a batch may hold many
+/// documents' fold-ins plus one model pull).
+const INFER_TIMEOUT: Duration = Duration::from_secs(5);
+/// Client attempts before giving up on a replica.
+const INFER_RETRIES: u32 = 5;
+
+/// One serving replica: a TCP listener plus the serve-loop thread that
+/// owns the [`InferEngine`].
+pub struct InferServer {
+    addr: SocketAddr,
+    server: TcpServer,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl InferServer {
+    /// Bind `bind` (`host:port`; port 0 picks an ephemeral port) and
+    /// start serving `engine`. The engine's shard connection stays alive
+    /// for the life of the replica.
+    pub fn start(
+        engine: InferEngine,
+        bind: &str,
+        batch_window: Duration,
+    ) -> Result<InferServer> {
+        let addr = resolve_addrs(&[bind.to_string()])?[0];
+        let (server, mut inboxes) = TcpServer::bind(&[addr])?;
+        let inbox = inboxes.remove(0);
+        let addr = server.addrs()[0];
+        let handle = std::thread::Builder::new()
+            .name("glint-serve-model".into())
+            .spawn(move || serve_loop(&inbox, engine, batch_window))
+            .map_err(Error::Io)?;
+        Ok(InferServer { addr, server, handle: Some(handle) })
+    }
+
+    /// The address clients connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the serve loop exits (a client sent `Shutdown`), then
+    /// stop accepting connections.
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.server.shutdown();
+    }
+}
+
+/// The replica's serve loop: block for the first request, drain the
+/// inbox for one batching window, answer the coalesced batch, repeat.
+fn serve_loop(inbox: &Inbox, mut engine: InferEngine, window: Duration) {
+    let mut requests = 0u64;
+    loop {
+        let Some(first) = inbox.recv() else {
+            return; // listener gone
+        };
+        let mut batch: Vec<(Envelope, Vec<Vec<u32>>)> = Vec::new();
+        let mut stop: Option<Envelope> = None;
+        sort_envelope(first, &mut batch, &mut stop, &mut requests, &engine);
+        // Coalescing window: requests arriving while the first is still
+        // on the table join its batch and share one model pull.
+        while stop.is_none() {
+            match inbox.recv_timeout(window) {
+                Some(env) => sort_envelope(env, &mut batch, &mut stop, &mut requests, &engine),
+                None => break,
+            }
+        }
+        if !batch.is_empty() {
+            let docs: Vec<&[u32]> = batch
+                .iter()
+                .flat_map(|(_, docs)| docs.iter().map(|d| d.as_slice()))
+                .collect();
+            match engine.infer_batch(&docs) {
+                Ok(mut results) => {
+                    for (env, docs) in &batch {
+                        let answered: Vec<Vec<(u32, u32)>> =
+                            results.drain(..docs.len()).collect();
+                        respond(env, InferResponse::Topics { docs: answered }.encode());
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for (env, _) in &batch {
+                        respond(env, InferResponse::Error(msg.clone()).encode());
+                    }
+                }
+            }
+        }
+        if let Some(env) = stop {
+            respond(&env, InferResponse::Ok.encode());
+            return;
+        }
+    }
+}
+
+/// Classify one envelope: inference work joins the batch; stats and
+/// malformed requests are answered immediately; shutdown is deferred
+/// until the in-flight batch has been answered.
+fn sort_envelope(
+    env: Envelope,
+    batch: &mut Vec<(Envelope, Vec<Vec<u32>>)>,
+    stop: &mut Option<Envelope>,
+    requests: &mut u64,
+    engine: &InferEngine,
+) {
+    match InferRequest::decode(&env.payload) {
+        Ok(InferRequest::Infer { docs }) => {
+            *requests += 1;
+            batch.push((env, docs));
+        }
+        Ok(InferRequest::Stats) => {
+            let s = engine.stats();
+            let stats = ServeStats {
+                requests: *requests,
+                docs: s.docs,
+                cache_hits: s.cache_hits,
+                words_pulled: s.words_pulled,
+                sparse_pulls: s.sparse_pulls,
+                batches: s.batches,
+            };
+            respond(&env, InferResponse::Stats(stats).encode());
+        }
+        Ok(InferRequest::Shutdown) => *stop = Some(env),
+        Err(e) => respond(&env, InferResponse::Error(e.to_string()).encode()),
+    }
+}
+
+/// Line-protocol client of a serving replica. Cloning shares the
+/// underlying multiplexed connection, so any number of threads can have
+/// requests outstanding at once (and coalesce server-side).
+#[derive(Clone)]
+pub struct InferClient {
+    ep: Endpoint,
+}
+
+impl InferClient {
+    /// Connect to a serving replica at `addr` (`host:port`).
+    pub fn connect(addr: &str) -> Result<InferClient> {
+        let resolved = resolve_addrs(&[addr.to_string()])?;
+        let transport = TcpTransport::connect(&resolved);
+        Ok(InferClient { ep: transport.endpoint(0) })
+    }
+
+    /// One retrying round-trip. Retries are safe: inference is read-only
+    /// against the frozen model, and a re-run of a lost reply hits the
+    /// replica's fold-in cache.
+    fn call(&self, req: &InferRequest) -> Result<InferResponse> {
+        let payload = req.encode();
+        for attempt in 0..INFER_RETRIES {
+            match self.ep.request(payload.clone(), INFER_TIMEOUT) {
+                Ok(bytes) => return InferResponse::decode(&bytes),
+                Err(()) => {
+                    std::thread::sleep(Duration::from_millis(50 << attempt.min(4)));
+                }
+            }
+        }
+        Err(Error::PsTimeout { op: "infer", shard: 0, attempts: INFER_RETRIES })
+    }
+
+    /// Infer topic counts for a batch of documents. Returns one
+    /// `(topic, count)` list per document, in request order.
+    pub fn infer(&self, docs: &[Vec<u32>]) -> Result<Vec<Vec<(u32, u32)>>> {
+        match self.call(&InferRequest::Infer { docs: docs.to_vec() })? {
+            InferResponse::Topics { docs: answered } => {
+                if answered.len() != docs.len() {
+                    return Err(Error::Decode(format!(
+                        "serving replica answered {} of {} documents",
+                        answered.len(),
+                        docs.len()
+                    )));
+                }
+                Ok(answered)
+            }
+            InferResponse::Error(m) => Err(Error::PsRejected(m)),
+            other => Err(Error::Decode(format!("unexpected inference response {other:?}"))),
+        }
+    }
+
+    /// Infer topic counts for a single document.
+    pub fn infer_one(&self, tokens: &[u32]) -> Result<Vec<(u32, u32)>> {
+        Ok(self.infer(&[tokens.to_vec()])?.pop().expect("one result per doc"))
+    }
+
+    /// The replica's cumulative serving counters.
+    pub fn stats(&self) -> Result<ServeStats> {
+        match self.call(&InferRequest::Stats)? {
+            InferResponse::Stats(s) => Ok(s),
+            InferResponse::Error(m) => Err(Error::PsRejected(m)),
+            other => Err(Error::Decode(format!("unexpected stats response {other:?}"))),
+        }
+    }
+
+    /// Ask the replica to exit its serve loop.
+    pub fn shutdown(&self) -> Result<()> {
+        match self.call(&InferRequest::Shutdown)? {
+            InferResponse::Ok => Ok(()),
+            InferResponse::Error(m) => Err(Error::PsRejected(m)),
+            other => Err(Error::Decode(format!("unexpected shutdown response {other:?}"))),
+        }
+    }
+}

@@ -1,8 +1,13 @@
-//! Minimal command-line argument parser.
+//! Minimal command-line argument parser and subcommand dispatch table.
 //!
-//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and a
-//! positional subcommand, which is all the launcher needs. No external
-//! crates are available offline, so this replaces `clap`.
+//! [`Args`] supports `--flag value`, `--flag=value`, boolean `--flag`,
+//! and a positional subcommand, which is all the launcher needs. No
+//! external crates are available offline, so this replaces `clap`.
+//!
+//! [`CommandSet`] is the launcher's dispatch table: each mode is one
+//! [`Command`] entry (name, one-line summary, usage text, handler), and
+//! the table renders the top-level help, per-command help (`help <cmd>`
+//! or `<cmd> --help`) and the unknown-command error from the same data.
 
 use std::collections::BTreeMap;
 
@@ -90,6 +95,109 @@ impl Args {
     }
 }
 
+/// One launcher subcommand: dispatch-table entry plus its help text.
+pub struct Command {
+    /// Name as typed on the command line (`glint-lda <name> ...`).
+    pub name: &'static str,
+    /// One-line summary shown in the top-level command list.
+    pub summary: &'static str,
+    /// Option/usage text shown by `help <name>` and `<name> --help`.
+    pub usage: &'static str,
+    /// The mode implementation.
+    pub run: fn(&Args) -> Result<()>,
+}
+
+/// The launcher's subcommand table. All help output — the top-level
+/// listing, per-command usage, and the unknown-command error — is
+/// rendered from the same entries, so a mode cannot exist without help
+/// text or be documented without existing.
+pub struct CommandSet {
+    /// Binary name used in usage lines.
+    pub program: &'static str,
+    /// One-line description of the whole binary.
+    pub about: &'static str,
+    /// Options every command accepts, appended to the top-level help.
+    pub common: &'static str,
+    /// The modes, in help-listing order.
+    pub commands: &'static [Command],
+}
+
+impl CommandSet {
+    /// Look up a command by name.
+    pub fn find(&self, name: &str) -> Option<&Command> {
+        self.commands.iter().find(|c| c.name == name)
+    }
+
+    /// The top-level help: usage, command list, common options.
+    pub fn render_help(&self) -> String {
+        let width = self.commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+        let mut out = format!("{} — {}\n\n", self.program, self.about);
+        out.push_str(&format!(
+            "usage: {} <command> [--opt value]...\n       {} help <command>\n\ncommands:\n",
+            self.program, self.program
+        ));
+        for c in self.commands {
+            out.push_str(&format!("  {:width$}  {}\n", c.name, c.summary));
+        }
+        out.push('\n');
+        out.push_str(self.common);
+        out
+    }
+
+    /// Per-command help: usage line, summary, option text.
+    pub fn render_command_help(&self, cmd: &Command) -> String {
+        format!(
+            "usage: {} {} [--opt value]...\n\n{}\n\n{}",
+            self.program, cmd.name, cmd.summary, cmd.usage
+        )
+    }
+
+    /// The unknown-command error, listing what exists.
+    fn unknown(&self, name: &str) -> Error {
+        let names: Vec<&str> = self.commands.iter().map(|c| c.name).collect();
+        Error::Config(format!(
+            "unknown subcommand {name:?} (expected one of: {}; see `{} help`)",
+            names.join(", "),
+            self.program
+        ))
+    }
+
+    /// Dispatch parsed arguments: no command or `help` prints help,
+    /// `<cmd> --help` prints that command's usage, anything else runs
+    /// the matching handler.
+    pub fn dispatch(&self, args: &Args) -> Result<()> {
+        match args.command.as_deref() {
+            None => {
+                println!("{}", self.render_help());
+                Ok(())
+            }
+            Some("help") => match args.positional.first() {
+                None => {
+                    println!("{}", self.render_help());
+                    Ok(())
+                }
+                Some(name) => match self.find(name) {
+                    Some(cmd) => {
+                        println!("{}", self.render_command_help(cmd));
+                        Ok(())
+                    }
+                    None => Err(self.unknown(name)),
+                },
+            },
+            Some(name) => match self.find(name) {
+                Some(cmd) => {
+                    if args.flag("help") {
+                        println!("{}", self.render_command_help(cmd));
+                        return Ok(());
+                    }
+                    (cmd.run)(args)
+                }
+                None => Err(self.unknown(name)),
+            },
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,5 +246,63 @@ mod tests {
         let a = parse(&["x", "--pipeline", "false", "--buffered", "true"]);
         assert!(!a.flag("pipeline"));
         assert!(a.flag("buffered"));
+    }
+
+    const DEMO: CommandSet = CommandSet {
+        program: "demo",
+        about: "a demo binary",
+        common: "common options:\n  --log LEVEL\n",
+        commands: &[
+            Command {
+                name: "ok",
+                summary: "always succeeds",
+                usage: "no options",
+                run: |_| Ok(()),
+            },
+            Command {
+                name: "fail",
+                summary: "always fails",
+                usage: "no options",
+                run: |_| Err(Error::Config("handler ran".into())),
+            },
+        ],
+    };
+
+    #[test]
+    fn dispatch_runs_the_matching_handler() {
+        assert!(DEMO.dispatch(&parse(&["ok"])).is_ok());
+        let err = DEMO.dispatch(&parse(&["fail"])).unwrap_err();
+        assert!(err.to_string().contains("handler ran"));
+    }
+
+    #[test]
+    fn unknown_command_lists_what_exists() {
+        let err = DEMO.dispatch(&parse(&["frobnicate"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("frobnicate") && msg.contains("ok") && msg.contains("fail"));
+    }
+
+    #[test]
+    fn no_command_and_help_are_ok() {
+        assert!(DEMO.dispatch(&parse(&[])).is_ok());
+        assert!(DEMO.dispatch(&parse(&["help"])).is_ok());
+        assert!(DEMO.dispatch(&parse(&["help", "ok"])).is_ok());
+        assert!(DEMO.dispatch(&parse(&["help", "nope"])).is_err());
+    }
+
+    #[test]
+    fn help_flag_short_circuits_the_handler() {
+        // `fail --help` must print usage instead of running the handler.
+        assert!(DEMO.dispatch(&parse(&["fail", "--help"])).is_ok());
+    }
+
+    #[test]
+    fn help_renders_every_command() {
+        let help = DEMO.render_help();
+        assert!(help.contains("ok") && help.contains("always succeeds"));
+        assert!(help.contains("fail") && help.contains("always fails"));
+        assert!(help.contains("common options"));
+        let cmd_help = DEMO.render_command_help(DEMO.find("ok").unwrap());
+        assert!(cmd_help.contains("demo ok") && cmd_help.contains("no options"));
     }
 }

@@ -1,0 +1,261 @@
+//! Fixed-capacity LRU cache on a slab-allocated doubly-linked list.
+//!
+//! The serving tier keys fold-in results by document hash and alias
+//! tables by word id; both caches must be bounded (a serving replica
+//! runs indefinitely) and O(1) per operation (they sit on the request
+//! path). Entries live in a slab (`Vec`) and the recency order is a
+//! doubly-linked list of slab indices, so there is no per-entry
+//! allocation after the cache fills and eviction reuses slots in place.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Sentinel slab index for "no neighbor".
+const NIL: usize = usize::MAX;
+
+struct Slot<K, V> {
+    key: K,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// Bounded map with least-recently-used eviction and hit/miss counters.
+pub struct LruCache<K, V> {
+    map: HashMap<K, usize>,
+    slots: Vec<Slot<K, V>>,
+    /// Most recently used slot (NIL when empty).
+    head: usize,
+    /// Least recently used slot (NIL when empty).
+    tail: usize,
+    cap: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// Cache holding at most `cap` entries (clamped to at least 1).
+    pub fn new(cap: usize) -> LruCache<K, V> {
+        let cap = cap.max(1);
+        LruCache {
+            map: HashMap::with_capacity(cap),
+            slots: Vec::with_capacity(cap),
+            head: NIL,
+            tail: NIL,
+            cap,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Maximum resident entries.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Look up `key`, marking it most recently used and counting the
+    /// outcome toward the hit/miss statistics.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        match self.map.get(key).copied() {
+            Some(i) => {
+                self.hits += 1;
+                self.unlink(i);
+                self.push_front(i);
+                Some(&self.slots[i].value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Look up `key` without touching recency or the statistics.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|&i| &self.slots[i].value)
+    }
+
+    /// True when `key` is resident (no recency or statistics effect).
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert (or refresh) `key`, marking it most recently used. When a
+    /// full cache takes a new key, the least-recently-used entry is
+    /// evicted and returned.
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        if let Some(&i) = self.map.get(&key) {
+            self.slots[i].value = value;
+            self.unlink(i);
+            self.push_front(i);
+            return None;
+        }
+        if self.slots.len() < self.cap {
+            let i = self.slots.len();
+            self.slots.push(Slot { key: key.clone(), value, prev: NIL, next: NIL });
+            self.map.insert(key, i);
+            self.push_front(i);
+            return None;
+        }
+        // Full: evict the tail and reuse its slot in place.
+        let i = self.tail;
+        self.unlink(i);
+        let old_key = std::mem::replace(&mut self.slots[i].key, key.clone());
+        let old_value = std::mem::replace(&mut self.slots[i].value, value);
+        self.map.remove(&old_key);
+        self.map.insert(key, i);
+        self.push_front(i);
+        self.evictions += 1;
+        Some((old_key, old_value))
+    }
+
+    /// Lookups that found their key.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that missed.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Entries displaced by inserts into a full cache.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Detach slot `i` from the recency list.
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    /// Attach slot `i` as the most recently used entry.
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        } else {
+            self.tail = i;
+        }
+        self.head = i;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used_in_order() {
+        let mut c: LruCache<u32, &str> = LruCache::new(3);
+        assert!(c.insert(1, "a").is_none());
+        assert!(c.insert(2, "b").is_none());
+        assert!(c.insert(3, "c").is_none());
+        assert_eq!(c.insert(4, "d"), Some((1, "a")));
+        assert_eq!(c.insert(5, "e"), Some((2, "b")));
+        assert_eq!(c.len(), 3);
+        assert!(!c.contains(&1));
+        assert!(!c.contains(&2));
+        assert!(c.contains(&3) && c.contains(&4) && c.contains(&5));
+        assert_eq!(c.evictions(), 2);
+    }
+
+    #[test]
+    fn get_refreshes_recency() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        // Touch 1 so 2 becomes the LRU entry.
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.insert(3, 30), Some((2, 20)));
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.get(&3), Some(&30));
+        assert_eq!(c.get(&2), None);
+    }
+
+    #[test]
+    fn reinsert_updates_value_and_recency_without_evicting() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert!(c.insert(1, 11).is_none());
+        assert_eq!(c.len(), 2);
+        // 2 is now least recent despite being inserted after 1.
+        assert_eq!(c.insert(3, 30), Some((2, 20)));
+        assert_eq!(c.peek(&1), Some(&11));
+    }
+
+    #[test]
+    fn capacity_one_and_stats() {
+        let mut c: LruCache<u32, u32> = LruCache::new(0); // clamps to 1
+        assert_eq!(c.capacity(), 1);
+        assert!(c.is_empty());
+        c.insert(7, 70);
+        assert_eq!(c.get(&7), Some(&70));
+        assert_eq!(c.get(&8), None);
+        assert_eq!(c.insert(8, 80), Some((7, 70)));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert_eq!(c.evictions(), 1);
+        // peek leaves the statistics alone.
+        assert_eq!(c.peek(&8), Some(&80));
+        assert_eq!(c.hits(), 1);
+    }
+
+    #[test]
+    fn random_workload_matches_reference_model() {
+        // Exercise the slab list against a naive Vec-based LRU model.
+        let mut c: LruCache<u32, u32> = LruCache::new(8);
+        let mut model: Vec<(u32, u32)> = Vec::new(); // most recent first
+        let mut rng = crate::util::rng::Pcg64::new(0x10c4);
+        for _ in 0..2000 {
+            let k = rng.below(24) as u32;
+            if rng.bernoulli(0.5) {
+                let v = rng.next_u32();
+                let evicted = c.insert(k, v);
+                if let Some(pos) = model.iter().position(|e| e.0 == k) {
+                    model.remove(pos);
+                    assert!(evicted.is_none());
+                } else if model.len() == 8 {
+                    let lru = model.pop().unwrap();
+                    assert_eq!(evicted, Some(lru));
+                } else {
+                    assert!(evicted.is_none());
+                }
+                model.insert(0, (k, v));
+            } else {
+                let got = c.get(&k).copied();
+                let want = model.iter().position(|e| e.0 == k).map(|pos| {
+                    let e = model.remove(pos);
+                    model.insert(0, e);
+                    e.1
+                });
+                assert_eq!(got, want);
+            }
+            assert_eq!(c.len(), model.len());
+        }
+    }
+}

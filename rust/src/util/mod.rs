@@ -11,6 +11,7 @@ pub mod codec;
 pub mod error;
 pub mod json;
 pub mod logger;
+pub mod lru;
 pub mod math;
 pub mod proptest;
 pub mod rng;

@@ -12,6 +12,7 @@ use glint_lda::corpus::dataset::Corpus;
 use glint_lda::corpus::synth::{generate, SynthConfig};
 use glint_lda::eval::perplexity::holdout_perplexity;
 use glint_lda::lda::checkpoint::PartitionCheckpoint;
+use glint_lda::lda::sweep::SamplerParams;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
 use glint_lda::ps::config::{PsConfig, TransportMode};
 use glint_lda::ps::server::TcpShardServer;
@@ -40,9 +41,12 @@ fn cluster_cfg(shard_addrs: Vec<String>) -> TrainConfig {
         iterations: 8,
         workers: 2,
         shards: 2,
-        block_words: 256,
-        buffer_cap: 2000,
-        dense_top_words: 50,
+        sampler: SamplerParams {
+            block_words: 256,
+            buffer_cap: 2000,
+            dense_top_words: 50,
+            ..Default::default()
+        },
         eval_every: 0,
         transport: TransportMode::Connect(shard_addrs),
         heartbeat_ms: 100,

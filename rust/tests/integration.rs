@@ -8,6 +8,7 @@ use glint_lda::corpus::tokenizer::TokenizerConfig;
 use glint_lda::corpus::vocab::corpus_from_texts;
 use glint_lda::eval::coherence::{mean_umass, DocFreq};
 use glint_lda::eval::perplexity::holdout_perplexity;
+use glint_lda::lda::sweep::SamplerParams;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
 use glint_lda::net::FaultPlan;
 use glint_lda::ps::partition::PartitionScheme;
@@ -29,9 +30,12 @@ fn base_cfg() -> TrainConfig {
         iterations: 10,
         workers: 3,
         shards: 4,
-        block_words: 256,
-        buffer_cap: 2000,
-        dense_top_words: 50,
+        sampler: SamplerParams {
+            block_words: 256,
+            buffer_cap: 2000,
+            dense_top_words: 50,
+            ..Default::default()
+        },
         ..Default::default()
     }
 }
@@ -114,12 +118,16 @@ fn pipelining_and_buffering_do_not_change_counts() {
     for (pipeline_depth, buffer_cap, dense_top) in
         [(0usize, 100usize, 0u64), (2, 1_000_000, 900), (3, 7, 10)]
     {
+        let base = base_cfg();
         let cfg = TrainConfig {
-            pipeline_depth,
-            buffer_cap,
-            dense_top_words: dense_top,
+            sampler: SamplerParams {
+                pipeline_depth,
+                buffer_cap,
+                dense_top_words: dense_top,
+                ..base.sampler
+            },
             iterations: 2,
-            ..base_cfg()
+            ..base
         };
         let mut t = Trainer::new(cfg, &c).unwrap();
         t.run_iteration().unwrap();
@@ -171,7 +179,7 @@ fn real_text_pipeline_to_model() {
         iterations: 30,
         workers: 2,
         shards: 2,
-        block_words: 32,
+        sampler: SamplerParams { block_words: 32, ..Default::default() },
         ..Default::default()
     };
     let mut t = Trainer::new(cfg, &c).unwrap();
@@ -208,12 +216,12 @@ fn trainer_report_records_curve() {
 fn alias_ablation_holdout_perplexity(alias_dense_threshold: f64) -> f64 {
     let c = corpus();
     let (train, test) = c.split_holdout(5);
+    let base = base_cfg();
     let cfg = TrainConfig {
         iterations: 8,
         shards: 2,
-        pipeline_depth: 4,
-        alias_dense_threshold,
-        ..base_cfg()
+        sampler: SamplerParams { pipeline_depth: 4, alias_dense_threshold, ..base.sampler },
+        ..base
     };
     let mut t = Trainer::new(cfg, &train).unwrap();
     let model = t.run(&train).unwrap();

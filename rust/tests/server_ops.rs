@@ -7,6 +7,7 @@
 
 use glint_lda::corpus::synth::{generate, SynthConfig};
 use glint_lda::eval::perplexity::holdout_perplexity;
+use glint_lda::lda::sweep::SamplerParams;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
 use glint_lda::net::FaultPlan;
 use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
@@ -242,10 +243,13 @@ fn train_holdout_perplexity(layout: Layout) -> f64 {
         iterations: 8,
         workers: 3,
         shards: 2,
-        block_words: 256,
-        buffer_cap: 2000,
-        dense_top_words: 50,
-        pipeline_depth: 4,
+        sampler: SamplerParams {
+            block_words: 256,
+            buffer_cap: 2000,
+            dense_top_words: 50,
+            pipeline_depth: 4,
+            ..Default::default()
+        },
         wt_layout: layout,
         ..Default::default()
     };

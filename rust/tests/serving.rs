@@ -1,0 +1,295 @@
+//! Serve-model integration tests: fold-in parity against the exact
+//! evaluation path, request batching/coalescing and cache behavior of
+//! the inference engine, and the full replica/client topology over TCP
+//! with concurrent clients.
+
+use std::sync::Arc;
+
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::eval::perplexity::{
+    holdout_perplexity, log_likelihood_docs, perplexity_from_loglik,
+};
+use glint_lda::lda::hyper::LdaHyper;
+use glint_lda::lda::infer::{FoldInBudget, InferConfig, InferEngine};
+use glint_lda::lda::sparse_counts::DocTopicCounts;
+use glint_lda::lda::sweep::SamplerParams;
+use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::net::tcp::TcpTransport;
+use glint_lda::net::FaultPlan;
+use glint_lda::ps::client::{BigMatrix, CoordDeltas, PsClient};
+use glint_lda::ps::config::{PsConfig, TransportMode};
+use glint_lda::ps::messages::Layout;
+use glint_lda::ps::partition::PartitionScheme;
+use glint_lda::ps::server::{ServerGroup, TcpShardServer};
+use glint_lda::serving::{InferClient, InferServer, DEFAULT_BATCH_WINDOW};
+
+fn parity_corpus() -> glint_lda::corpus::dataset::Corpus {
+    generate(&SynthConfig {
+        num_docs: 360,
+        vocab_size: 800,
+        num_topics: 8,
+        avg_doc_len: 45.0,
+        seed: 525,
+        ..Default::default()
+    })
+}
+
+/// The acceptance bar for the fold-in kernel: held-out perplexity of the
+/// serve-model answers (MH fold-in over frozen alias tables, computed
+/// through the engine against live 2-shard state) must match the exact
+/// Gibbs fold-in of the evaluation path on the same frozen model.
+#[test]
+fn serve_model_heldout_perplexity_matches_exact_fold_in() {
+    let corpus = parity_corpus();
+    let (train, test) = corpus.split_holdout(5);
+    let cfg = TrainConfig {
+        num_topics: 10,
+        iterations: 8,
+        workers: 3,
+        shards: 2,
+        sampler: SamplerParams {
+            block_words: 256,
+            buffer_cap: 2000,
+            dense_top_words: 50,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let hyper = cfg.hyper();
+    let mut trainer = Trainer::new(cfg, &train).unwrap();
+    let model = trainer.run(&train).unwrap();
+
+    // A second, serving-profile client against the same live shards —
+    // the freeze/attach handshake is the trainer's matrix id.
+    let group = trainer.server_group().expect("in-process servers");
+    let serve_cfg = PsConfig::serving(2, PartitionScheme::Cyclic, TransportMode::Sim);
+    let client = PsClient::connect(&*group.transport(), serve_cfg);
+    let mut engine = InferEngine::attach(
+        &client,
+        trainer.matrix_id(),
+        train.vocab_size,
+        10,
+        Layout::Sparse,
+        hyper,
+        InferConfig { budget: FoldInBudget { sweeps: 5, mh_steps: 2 }, ..Default::default() },
+    )
+    .unwrap();
+
+    // Answer the held-out set in batches, then score the answers with
+    // the evaluation path's own likelihood.
+    let mut counts: Vec<DocTopicCounts> = Vec::new();
+    for chunk in test.docs.chunks(16) {
+        let refs: Vec<&[u32]> = chunk.iter().map(|d| d.tokens.as_slice()).collect();
+        for pairs in engine.infer_batch(&refs).unwrap() {
+            counts.push(DocTopicCounts::from_pairs(&pairs));
+        }
+    }
+    let (ll, tokens) = log_likelihood_docs(&model, &test.docs, &counts);
+    let served = perplexity_from_loglik(ll, tokens);
+    let exact = holdout_perplexity(&model, &test, 5, 7);
+    assert!(served.is_finite() && exact.is_finite());
+    let ratio = served / exact;
+    assert!(
+        (0.85..1.15).contains(&ratio),
+        "serve-model perplexity {served:.1} diverged from exact fold-in {exact:.1} \
+         (ratio {ratio:.3})"
+    );
+
+    let stats = engine.stats();
+    assert_eq!(stats.docs, test.docs.len() as u64);
+    assert!(stats.sparse_pulls <= stats.batches);
+    assert!(stats.words_pulled <= u64::from(train.vocab_size));
+}
+
+/// A frozen peaked model pushed straight onto 2 sim shards: word `w`
+/// belongs to topic `w % k` with mass `peak`.
+fn peaked_group(
+    v: u32,
+    k: u32,
+    peak: i64,
+) -> (ServerGroup, PsClient, BigMatrix<i64>, LdaHyper) {
+    let cfg = PsConfig::with_shards(2);
+    let group = ServerGroup::start(cfg.clone(), FaultPlan::reliable(), 17);
+    let client = PsClient::connect(&*group.transport(), cfg);
+    let m: BigMatrix<i64> = client.matrix_with_layout(u64::from(v), k, Layout::Sparse).unwrap();
+    let deltas = CoordDeltas {
+        rows: (0..v).map(u64::from).collect(),
+        cols: (0..v).map(|w| w % k).collect(),
+        values: vec![peak; v as usize],
+    };
+    m.push_coords(&deltas).unwrap();
+    (group, client, m, LdaHyper { alpha: 0.1, beta: 0.01 })
+}
+
+fn attach(client: &PsClient, id: u32, v: u32, k: u32, hyper: LdaHyper) -> InferEngine {
+    InferEngine::attach(client, id, v, k, Layout::Sparse, hyper, InferConfig::default())
+        .unwrap()
+}
+
+/// Batching must coalesce the model reads: across a whole batch, every
+/// distinct word is pulled exactly once, in one sparse pull — duplicate
+/// words across documents cost nothing extra.
+#[test]
+fn batch_coalesces_duplicate_words_into_one_pull() {
+    let (v, k) = (60u32, 4u32);
+    let (_group, client, m, hyper) = peaked_group(v, k, 300);
+    let mut engine = attach(&client, m.id(), v, k, hyper);
+
+    // Three documents with heavy word overlap: 8 distinct words total.
+    let docs: Vec<&[u32]> = vec![
+        &[0, 4, 8, 12, 0, 4, 8, 12],
+        &[0, 4, 16, 20, 16, 20, 0, 4],
+        &[8, 12, 24, 28, 24, 28, 8, 12],
+    ];
+    engine.infer_batch(&docs).unwrap();
+    let s = engine.stats();
+    assert_eq!(s.batches, 1);
+    assert_eq!(s.sparse_pulls, 1, "one coalesced pull per batch");
+    assert_eq!(s.words_pulled, 8, "each distinct word pulled once");
+
+    // A second batch re-using cached words only pulls the new ones.
+    let docs2: Vec<&[u32]> = vec![&[0, 4, 32, 36], &[8, 12, 32, 36]];
+    engine.infer_batch(&docs2).unwrap();
+    let s = engine.stats();
+    assert_eq!(s.sparse_pulls, 2);
+    assert_eq!(s.words_pulled, 10, "only words 32 and 36 are new");
+}
+
+/// Repeat documents are answered from the fold-in LRU without touching
+/// the shards, and the answer is byte-identical.
+#[test]
+fn repeat_documents_hit_the_fold_in_cache() {
+    let (v, k) = (40u32, 4u32);
+    let (_group, client, m, hyper) = peaked_group(v, k, 300);
+    let mut engine = attach(&client, m.id(), v, k, hyper);
+
+    let doc: Vec<u32> = vec![1, 5, 9, 13, 1, 5, 9, 13, 1, 5];
+    let first = engine.infer_one(&doc).unwrap();
+    let pulls_after_first = engine.stats().sparse_pulls;
+    let second = engine.infer_one(&doc).unwrap();
+    let s = engine.stats();
+    assert_eq!(first, second);
+    assert_eq!(s.cache_hits, 1);
+    assert_eq!(s.sparse_pulls, pulls_after_first, "cached answer pulls nothing");
+    assert_eq!(s.docs, 2);
+}
+
+/// Answers are well-formed: topics ascending and in range, counts
+/// summing to the document length; out-of-vocabulary tokens are a
+/// loud error, not a crash.
+#[test]
+fn answers_are_well_formed_and_oov_is_rejected() {
+    let (v, k) = (40u32, 4u32);
+    let (_group, client, m, hyper) = peaked_group(v, k, 300);
+    let mut engine = attach(&client, m.id(), v, k, hyper);
+
+    let doc: Vec<u32> = (0..25).map(|i| (i * 7) % v).collect();
+    let pairs = engine.infer_one(&doc).unwrap();
+    assert!(pairs.windows(2).all(|w| w[0].0 < w[1].0), "topics ascending");
+    assert!(pairs.iter().all(|&(t, c)| t < k && c > 0));
+    assert_eq!(pairs.iter().map(|&(_, c)| u64::from(c)).sum::<u64>(), doc.len() as u64);
+
+    assert!(engine.infer_one(&[v]).is_err(), "token id == V is out of vocabulary");
+}
+
+/// Attaching to an id that holds no counts must fail loudly: an id typo
+/// would otherwise create a fresh empty matrix server-side and silently
+/// serve uniform topics.
+#[test]
+fn attach_rejects_an_empty_model() {
+    let cfg = PsConfig::with_shards(2);
+    let group = ServerGroup::start(cfg.clone(), FaultPlan::reliable(), 19);
+    let client = PsClient::connect(&*group.transport(), cfg);
+    let err = InferEngine::attach(
+        &client,
+        77,
+        40,
+        4,
+        Layout::Sparse,
+        LdaHyper { alpha: 0.1, beta: 0.01 },
+        InferConfig::default(),
+    );
+    assert!(err.is_err(), "an empty table is not a frozen model");
+}
+
+/// The full serving topology over real sockets: 2 TCP shards holding the
+/// frozen model, one replica, 4 concurrent clients. Every request must
+/// be answered correctly, and the replica's counters must account for
+/// every document.
+#[test]
+fn serve_model_answers_concurrent_clients_over_tcp() {
+    let (v, k) = (80u32, 4u32);
+    let cfg = PsConfig::with_shards(2);
+    let binds: Vec<std::net::SocketAddr> =
+        (0..2).map(|_| "127.0.0.1:0".parse().unwrap()).collect();
+    let shard_server = TcpShardServer::bind(cfg.clone(), 0, &binds).unwrap();
+    let transport = TcpTransport::connect(shard_server.addrs());
+    let client = PsClient::connect(&transport, cfg);
+    let m: BigMatrix<i64> = client.matrix_with_layout(u64::from(v), k, Layout::Sparse).unwrap();
+    let deltas = CoordDeltas {
+        rows: (0..v).map(u64::from).collect(),
+        cols: (0..v).map(|w| w % k).collect(),
+        values: vec![250; v as usize],
+    };
+    m.push_coords(&deltas).unwrap();
+
+    let hyper = LdaHyper { alpha: 0.1, beta: 0.01 };
+    let serve_transport = TcpTransport::connect(shard_server.addrs());
+    let serve_client = PsClient::connect(
+        &serve_transport,
+        PsConfig::serving(
+            2,
+            PartitionScheme::Cyclic,
+            TransportMode::Connect(shard_server.addrs().iter().map(|a| a.to_string()).collect()),
+        ),
+    );
+    let engine = InferEngine::attach(
+        &serve_client,
+        m.id(),
+        v,
+        k,
+        Layout::Sparse,
+        hyper,
+        InferConfig::default(),
+    )
+    .unwrap();
+    let replica = InferServer::start(engine, "127.0.0.1:0", DEFAULT_BATCH_WINDOW).unwrap();
+    let addr = replica.addr().to_string();
+
+    let pool: Arc<Vec<Vec<u32>>> = Arc::new(
+        (0..10u32).map(|d| (0..12u32).map(|i| (d * 3 + i * 5) % v).collect()).collect(),
+    );
+    let requests_per_client = 10usize;
+    let handles: Vec<_> = (0..4)
+        .map(|c| {
+            let pool = Arc::clone(&pool);
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let client = InferClient::connect(&addr).unwrap();
+                for i in 0..requests_per_client {
+                    let doc = &pool[(c + i) % pool.len()];
+                    let pairs = client.infer_one(doc).unwrap();
+                    let total: u64 = pairs.iter().map(|&(_, n)| u64::from(n)).sum();
+                    assert_eq!(total, doc.len() as u64);
+                    assert!(pairs.iter().all(|&(t, _)| t < k));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let ctl = InferClient::connect(&addr).unwrap();
+    let stats = ctl.stats().unwrap();
+    assert_eq!(stats.requests, 40);
+    assert_eq!(stats.docs, 40);
+    assert!(stats.sparse_pulls >= 1);
+    assert!(stats.sparse_pulls <= stats.batches);
+    assert!(stats.cache_hits > 0, "10 unique docs over 40 requests must hit the cache");
+
+    ctl.shutdown().unwrap();
+    replica.join();
+    client.shutdown_servers().unwrap();
+    shard_server.join();
+}

@@ -8,6 +8,7 @@ use std::time::Duration;
 
 use glint_lda::corpus::synth::{generate, SynthConfig};
 use glint_lda::eval::perplexity::holdout_perplexity;
+use glint_lda::lda::sweep::SamplerParams;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
 use glint_lda::net::frame::{read_tagged_frame, write_tagged_frame};
 use glint_lda::net::tcp::TcpTransport;
@@ -173,9 +174,12 @@ fn train_holdout_perplexity(transport: TransportMode) -> f64 {
         iterations: 8,
         workers: 3,
         shards: 2,
-        block_words: 256,
-        buffer_cap: 2000,
-        dense_top_words: 50,
+        sampler: SamplerParams {
+            block_words: 256,
+            buffer_cap: 2000,
+            dense_top_words: 50,
+            ..Default::default()
+        },
         transport,
         ..Default::default()
     };
@@ -210,9 +214,12 @@ fn tcp_training_counts_stay_consistent() {
         iterations: 2,
         workers: 3,
         shards: 3,
-        block_words: 128,
-        buffer_cap: 1000,
-        dense_top_words: 30,
+        sampler: SamplerParams {
+            block_words: 128,
+            buffer_cap: 1000,
+            dense_top_words: 30,
+            ..Default::default()
+        },
         transport: TransportMode::TcpLoopback,
         ..Default::default()
     };
