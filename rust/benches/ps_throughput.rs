@@ -1,8 +1,9 @@
 //! Parameter-server micro-benchmarks: pull/push throughput vs shard
 //! count and delta batch size, the cost of the exactly-once hand-shake
-//! under message loss, and the win from the asynchronous ticket API
+//! under message loss, the win from the asynchronous ticket API
 //! (`pipeline_depth` 1 vs 8) with per-shard in-flight / queue-wait
-//! stats.
+//! stats, and the cost of durability (push throughput with the
+//! write-ahead log on vs off).
 //!
 //! Environment knobs (used by CI):
 //!
@@ -295,12 +296,72 @@ fn bench_layout_compare(
     }
 }
 
+/// WAL-on vs WAL-off push throughput: what durable group commit costs
+/// on the synchronous and fire-and-forget push paths, plus the log's
+/// own accounting from `ShardInfo`.
+struct WalCompareResult {
+    off_push_rate: f64,
+    on_push_rate: f64,
+    off_async_rate: f64,
+    on_async_rate: f64,
+    wal_records: u64,
+    wal_bytes: u64,
+    wal_commit_batches: u64,
+}
+
+fn bench_wal_compare(
+    dims: &Dims,
+    shards: usize,
+    mode: TransportMode,
+    depth: usize,
+) -> WalCompareResult {
+    let run = |wal_dir: Option<std::path::PathBuf>| {
+        let cfg = PsConfig {
+            transport: mode.clone(),
+            pipeline_depth: depth,
+            wal_dir,
+            ..PsConfig::with_shards(shards)
+        };
+        let group = ServerGroup::start(cfg.clone(), FaultPlan::reliable(), 17);
+        let client = PsClient::connect(&*group.transport(), cfg);
+        let m = client
+            .matrix_with_layout::<i64>(dims.rows, dims.cols, Layout::Dense)
+            .expect("wal bench matrix");
+        let push_rate = bench_push(dims, &m, dims.async_batch, dims.rounds);
+        let async_rate = bench_push_async(dims, &client, &m, dims.async_batch, dims.rounds);
+        let infos = client.shard_infos().expect("shard infos");
+        (
+            push_rate,
+            async_rate,
+            infos.iter().map(|i| i.wal_records).sum(),
+            infos.iter().map(|i| i.wal_bytes).sum(),
+            infos.iter().map(|i| i.wal_commit_batches).sum(),
+        )
+    };
+    let (off_push_rate, off_async_rate, ..) = run(None);
+    let dir = std::env::temp_dir().join(format!("glint-bench-wal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (on_push_rate, on_async_rate, wal_records, wal_bytes, wal_commit_batches) =
+        run(Some(dir.clone()));
+    let _ = std::fs::remove_dir_all(&dir);
+    WalCompareResult {
+        off_push_rate,
+        on_push_rate,
+        off_async_rate,
+        on_async_rate,
+        wal_records,
+        wal_bytes,
+        wal_commit_batches,
+    }
+}
+
 fn json_escape_free(s: &str) -> &str {
     // Labels written into the JSON artifact are static identifiers.
     debug_assert!(!s.contains('"') && !s.contains('\\'));
     s
 }
 
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     path: &str,
     transport: &str,
@@ -309,6 +370,7 @@ fn write_json(
     layout_env: &str,
     results: &[PipelineResult],
     layout: &LayoutCompareResult,
+    wal: &WalCompareResult,
 ) {
     let mut body = String::new();
     body.push_str("{\n");
@@ -355,6 +417,27 @@ fn write_json(
     body.push_str(&format!(
         "    \"col_sums_bytes\": {}, \"col_sums_secs\": {:.6}\n",
         layout.col_sums_bytes, layout.col_sums_secs
+    ));
+    body.push_str("  },\n");
+    let on_over_off = |on: f64, off: f64| if off > 0.0 { on / off } else { 0.0 };
+    body.push_str("  \"wal_compare\": {\n");
+    body.push_str(&format!(
+        "    \"push_deltas_per_sec_wal_off\": {:.1}, \"push_deltas_per_sec_wal_on\": {:.1}, \
+         \"push_wal_on_over_off\": {:.3},\n",
+        wal.off_push_rate,
+        wal.on_push_rate,
+        on_over_off(wal.on_push_rate, wal.off_push_rate)
+    ));
+    body.push_str(&format!(
+        "    \"async_push_deltas_per_sec_wal_off\": {:.1}, \
+         \"async_push_deltas_per_sec_wal_on\": {:.1}, \"async_push_wal_on_over_off\": {:.3},\n",
+        wal.off_async_rate,
+        wal.on_async_rate,
+        on_over_off(wal.on_async_rate, wal.off_async_rate)
+    ));
+    body.push_str(&format!(
+        "    \"wal_records\": {}, \"wal_bytes\": {}, \"wal_commit_batches\": {}\n",
+        wal.wal_records, wal.wal_bytes, wal.wal_commit_batches
     ));
     body.push_str("  }\n}\n");
     match std::fs::write(path, body) {
@@ -469,6 +552,31 @@ fn main() {
         layout_result.col_sums_bytes, layout_result.col_sums_secs
     );
 
+    // What durability costs: the same push workloads against shards
+    // with and without a write-ahead log (group commit amortizes the
+    // fsyncs, so the async path should hide most of it).
+    println!(
+        "== WAL on vs off ({mid_shards} shards, batch={}, {} rounds) ==",
+        dims.async_batch, dims.rounds
+    );
+    let wal_result = bench_wal_compare(dims, mid_shards, mode.clone(), depth_env);
+    println!(
+        "  sync  push: {:>12.0} deltas/s off, {:>12.0} deltas/s on ({:.2}x)",
+        wal_result.off_push_rate,
+        wal_result.on_push_rate,
+        wal_result.on_push_rate / wal_result.off_push_rate.max(1e-9)
+    );
+    println!(
+        "  async push: {:>12.0} deltas/s off, {:>12.0} deltas/s on ({:.2}x)",
+        wal_result.off_async_rate,
+        wal_result.on_async_rate,
+        wal_result.on_async_rate / wal_result.off_async_rate.max(1e-9)
+    );
+    println!(
+        "  wal: {} records, {} bytes, {} commit batches",
+        wal_result.wal_records, wal_result.wal_bytes, wal_result.wal_commit_batches
+    );
+
     if mode == TransportMode::Sim {
         println!(
             "== exactly-once overhead under loss ({mid_shards} shards, batch={}) ==",
@@ -489,5 +597,14 @@ fn main() {
 
     let json_path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_ps_throughput.json".to_string());
-    write_json(&json_path, label, smoke, depth_env, layout_label, &results, &layout_result);
+    write_json(
+        &json_path,
+        label,
+        smoke,
+        depth_env,
+        layout_label,
+        &results,
+        &layout_result,
+        &wal_result,
+    );
 }

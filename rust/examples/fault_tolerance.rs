@@ -12,17 +12,27 @@
 //!    triggers detection, the partition is reassigned to a standby, the
 //!    epoch rolls onto a fresh count table rebuilt from per-partition
 //!    checkpoints, and training completes anyway.
+//! 3. **Replicated shards**: WAL-backed primaries with backup replicas
+//!    tailing their logs; one *shard* (not a worker) is killed
+//!    mid-training. The workers' clients fail over, the coordinator
+//!    promotes the backup and rolls the epoch, and training converges
+//!    on the survivors.
 //!
 //! ```sh
 //! cargo run --release --example fault_tolerance
+//! # env knobs: SMOKE=1 runs only the replicated-shard scenario;
+//! #            DURABILITY_CSV=path writes its metrics for CI
 //! ```
 
 use std::net::SocketAddr;
 
 use glint_lda::cluster::{run_worker, Coordinator, CorpusSpec, WorkerOptions};
 use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::lda::checkpoint::PartitionCheckpoint;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::net::tcp::{resolve_addrs, TcpTransport};
 use glint_lda::net::FaultPlan;
+use glint_lda::ps::client::PsClient;
 use glint_lda::ps::config::{PsConfig, TransportMode};
 use glint_lda::ps::server::TcpShardServer;
 
@@ -37,6 +47,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         avg_doc_len: 60.0,
         ..Default::default()
     });
+    if std::env::var("SMOKE").is_ok() {
+        // CI's durability leg: just the shard-kill scenario.
+        replica_demo(&corpus)?;
+        println!("fault_tolerance OK");
+        return Ok(());
+    }
     let cfg = TrainConfig {
         num_topics: 20,
         iterations: 6,
@@ -82,6 +98,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("fault_tolerance (single process) OK\n");
 
     cluster_demo(&corpus)?;
+    replica_demo(&corpus)?;
     println!("fault_tolerance OK");
     Ok(())
 }
@@ -153,5 +170,135 @@ fn cluster_demo(
 
     let _ = std::fs::remove_dir_all(&ckpt);
     println!("fault_tolerance (cluster) OK");
+    Ok(())
+}
+
+/// The replicated-shard path: WAL-backed primaries, backup replicas
+/// tailing their committed logs, and a shard killed mid-training. The
+/// workers' clients fail over to the backup, the coordinator's probe
+/// sees an un-promoted backup answering the shard's route (the
+/// dead-primary signal), promotes it, repoints the shard address and
+/// rolls the epoch — and training converges on the survivors.
+fn replica_demo(
+    corpus: &glint_lda::corpus::dataset::Corpus,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let ckpt = std::env::temp_dir().join("glint_ft_replica_ckpt");
+    let wal = std::env::temp_dir().join("glint_ft_replica_wal");
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let _ = std::fs::remove_dir_all(&wal);
+
+    println!("replica phase 1: 2 WAL-backed primaries + 2 backups + coordinator");
+    // Each primary is its own server object so one can die alone.
+    let one: Vec<SocketAddr> = vec!["127.0.0.1:0".parse().unwrap()];
+    let mut pcfg = PsConfig::with_shards(2);
+    pcfg.wal_dir = Some(wal.clone());
+    let p0 = TcpShardServer::bind(pcfg.clone(), 0, &one)?;
+    let p1 = TcpShardServer::bind(pcfg, 1, &one)?;
+    let primary_addrs =
+        vec![p0.addrs()[0].to_string(), p1.addrs()[0].to_string()];
+
+    // One process hosts both backup shards, each polling its primary.
+    let mut bcfg = PsConfig::with_shards(2);
+    bcfg.backup_of = Some(primary_addrs.clone());
+    let two: Vec<SocketAddr> = (0..2).map(|_| "127.0.0.1:0".parse().unwrap()).collect();
+    let backups = TcpShardServer::bind(bcfg, 0, &two)?;
+    let backup_addrs: Vec<String> = backups.addrs().iter().map(|a| a.to_string()).collect();
+
+    let cfg = TrainConfig {
+        num_topics: 20,
+        iterations: 8,
+        workers: 2,
+        shards: 2,
+        eval_every: 2,
+        checkpoint_dir: Some(ckpt.clone()),
+        transport: TransportMode::Connect(primary_addrs.clone()),
+        backups: backup_addrs,
+        heartbeat_ms: 100,
+        straggler_timeout_ms: 1500,
+        ..TrainConfig::default()
+    };
+    let coordinator = Coordinator::bind("127.0.0.1:0", cfg, corpus, CorpusSpec::Provided)?;
+    let join = coordinator.addr().to_string();
+    let coord = std::thread::spawn(move || coordinator.run());
+
+    println!("replica phase 2: workers join; shard 0 dies at iteration 3");
+    let mut workers = Vec::new();
+    for _ in 0..3 {
+        let opts = WorkerOptions {
+            join: join.clone(),
+            corpus: Some(corpus.clone()),
+            crash_at_iteration: None,
+        };
+        workers.push(std::thread::spawn(move || run_worker(opts)));
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+
+    // The assassin: wait until partition 0 has checkpointed iteration 3
+    // (training is provably mid-run), then stop shard 0's primary — to
+    // every client it looks like a kill -9: the socket goes away and
+    // requests start timing out.
+    let victim = primary_addrs[0].clone();
+    let watch = ckpt.clone();
+    let assassin =
+        std::thread::spawn(move || -> Result<(), glint_lda::util::error::Error> {
+            loop {
+                match PartitionCheckpoint::load_latest(&watch, 0) {
+                    Ok(Some(c)) if c.inner.iteration >= 3 => break,
+                    _ => std::thread::sleep(std::time::Duration::from_millis(50)),
+                }
+            }
+            println!("replica phase 3: killing primary {victim}");
+            let resolved = resolve_addrs(&[victim.clone()])?;
+            let kcfg = PsConfig {
+                shards: 1,
+                transport: TransportMode::Connect(vec![victim]),
+                ..PsConfig::default()
+            };
+            let transport = TcpTransport::connect(&resolved);
+            let killer = PsClient::connect(&transport, kcfg);
+            killer.shutdown_servers()
+        });
+
+    let outcome = coord.join().expect("coordinator thread")?;
+    assassin.join().expect("assassin thread")?;
+    // Failover can (rarely) cost a worker; the standby absorbs that.
+    let finished = workers
+        .into_iter()
+        .filter_map(|w| w.join().expect("worker thread").ok())
+        .count();
+    assert!(finished >= 2, "at least two workers must finish cleanly");
+
+    println!(
+        "replica phase 4: survived via {} promotion(s), {} epoch roll(s)",
+        outcome.promotions, outcome.epochs
+    );
+    assert!(outcome.promotions >= 1, "the shard kill must promote its backup");
+    assert!(outcome.epochs >= 1, "promotion must roll the epoch");
+    assert_eq!(
+        outcome.model.n_k.iter().sum::<i64>(),
+        corpus.num_tokens() as i64,
+        "rebuilt count table must cover every token exactly once"
+    );
+    let perplexity = outcome
+        .final_perplexity
+        .ok_or("no evaluation point produced a perplexity")?;
+    assert!(perplexity.is_finite() && perplexity > 1.0, "nonsense perplexity");
+    println!("  final training perplexity: {perplexity:.1}");
+
+    if let Ok(csv) = std::env::var("DURABILITY_CSV") {
+        let mut out = String::from("metric,value\n");
+        out.push_str(&format!("promotions,{}\n", outcome.promotions));
+        out.push_str(&format!("epoch_rolls,{}\n", outcome.epochs));
+        out.push_str(&format!("reassignments,{}\n", outcome.reassignments));
+        out.push_str(&format!("workers_finished,{finished}\n"));
+        out.push_str(&format!("final_perplexity,{perplexity:.3}\n"));
+        out.push_str(&format!("tokens_covered,{}\n", corpus.num_tokens()));
+        std::fs::write(&csv, out)?;
+        println!("durability metrics written to {csv}");
+    }
+
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let _ = std::fs::remove_dir_all(&wal);
+    println!("fault_tolerance (replicated shards) OK");
     Ok(())
 }

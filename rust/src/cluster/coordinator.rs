@@ -32,6 +32,20 @@
 //! (or re-initializes, if none), pushes those counts into the new
 //! table, and resumes from its checkpointed iteration. The dead
 //! partition itself is handed to the next worker that registers.
+//!
+//! # Shard failure (replicated deployments)
+//!
+//! With backups (`serve --backup-of` processes named by
+//! [`TrainConfig::backups`]), worker and coordinator clients fail over
+//! to a shard's backup automatically after repeated delivery failures.
+//! The coordinator additionally *probes* every shard's
+//! `ShardInfo`: an answer from an un-promoted backup means its own
+//! route abandoned the primary — the shard-death signal. It then
+//! promotes the backup, repoints the shard address in future
+//! [`JobSpec`]s, and rolls the epoch, so every partition re-pushes its
+//! checkpoint counts into a fresh table on the surviving replica set —
+//! healing whatever the group-commit window or replication lag lost at
+//! the moment of death.
 
 use std::collections::{BTreeMap, HashMap};
 use std::ops::Range;
@@ -63,6 +77,9 @@ const SPARE_WAIT_MS: u64 = 500;
 /// How long the coordinator keeps answering `Done` after completion so
 /// workers can exit cleanly before it tears the listener down.
 const DRAIN_GRACE: Duration = Duration::from_secs(5);
+/// How often the coordinator probes shard roles for primary death
+/// (replicated deployments only).
+const REPLICA_PROBE: Duration = Duration::from_millis(500);
 
 /// One corpus partition's control state.
 struct Slot {
@@ -136,6 +153,16 @@ struct WorkerEntry {
     last_seen: Instant,
 }
 
+/// Parameter-server health sampled when an iteration completes, summed
+/// over shards.
+#[derive(Clone, Copy)]
+struct PsHealth {
+    bytes: u64,
+    dedup_evictions: u64,
+    wal_bytes: u64,
+    repl_lag: u64,
+}
+
 /// What a finished cluster run produced.
 pub struct ClusterOutcome {
     /// Per-iteration aggregate rows (tokens, seconds, perplexity at
@@ -149,6 +176,8 @@ pub struct ClusterOutcome {
     pub epochs: u32,
     /// Partitions handed to a replacement worker after a failure.
     pub reassignments: u32,
+    /// Shard backups promoted to primary after a shard death.
+    pub promotions: u32,
 }
 
 /// The coordinator half of a cluster run. Construct with
@@ -159,6 +188,9 @@ pub struct Coordinator {
     cfg: TrainConfig,
     corpus_spec: CorpusSpec,
     shard_addrs: Vec<String>,
+    /// Backup replica addresses parallel to `shard_addrs` (empty =
+    /// unreplicated deployment).
+    backup_addrs: Vec<String>,
     vocab_size: u32,
     server: TcpServer,
     inbox: Inbox,
@@ -172,12 +204,18 @@ pub struct Coordinator {
     next_worker: u64,
     epoch: u32,
     reassignments: u32,
+    promotions: u32,
+    /// Count table fenced off by the last epoch roll, retired (deleted
+    /// on the shards) at the *next* roll — the one-epoch grace lets
+    /// mid-sweep pushes that still reference it land harmlessly.
+    fenced: Option<u32>,
+    /// Last shard-role probe (rate-limits `probe_replicas`).
+    last_probe: Instant,
     /// Per-iteration, per-partition reports (overwritten on re-runs
     /// after a rollback).
     agg: BTreeMap<u32, Vec<Option<SweepReport>>>,
-    /// Parameter-server health sampled when an iteration completes:
-    /// `(resident bytes, dedup evictions)` summed over shards.
-    ps_health: BTreeMap<u32, (u64, u64)>,
+    /// Parameter-server health sampled when an iteration completes.
+    ps_health: BTreeMap<u32, PsHealth>,
     /// Iterations already announced in the log.
     announced: u32,
     /// Set when recovery is impossible (e.g. no fresh count table could
@@ -213,12 +251,21 @@ impl Coordinator {
         };
         let shard_addrs = addrs.clone();
         let resolved = resolve_addrs(&shard_addrs)?;
-        let ps_cfg = PsConfig::deployment(
+        let backup_addrs = cfg.backups.clone();
+        if !backup_addrs.is_empty() && backup_addrs.len() != shard_addrs.len() {
+            return Err(Error::Config(format!(
+                "--backups needs one address per shard ({}), got {}",
+                shard_addrs.len(),
+                backup_addrs.len()
+            )));
+        }
+        let mut ps_cfg = PsConfig::deployment(
             resolved.len(),
             cfg.scheme,
             cfg.transport.clone(),
             cfg.sampler.pipeline_depth,
         );
+        ps_cfg.backups = backup_addrs.clone();
         let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
         let client = PsClient::connect(&*transport, ps_cfg);
         client.validate_deployment()?;
@@ -250,6 +297,7 @@ impl Coordinator {
             vocab_size: corpus.vocab_size,
             corpus_spec,
             shard_addrs,
+            backup_addrs,
             server,
             inbox,
             _transport: transport,
@@ -260,6 +308,9 @@ impl Coordinator {
             next_worker: 1,
             epoch: 0,
             reassignments: 0,
+            promotions: 0,
+            fenced: None,
+            last_probe: Instant::now(),
             agg: BTreeMap::new(),
             ps_health: BTreeMap::new(),
             announced: 0,
@@ -299,6 +350,7 @@ impl Coordinator {
                 }
             }
             self.reap_dead(straggler);
+            self.probe_replicas();
             if let Some(e) = self.fatal.take() {
                 self.server.shutdown();
                 return Err(e);
@@ -335,6 +387,7 @@ impl Coordinator {
             final_perplexity,
             epochs: self.epoch,
             reassignments: self.reassignments,
+            promotions: self.promotions,
         })
     }
 
@@ -377,6 +430,7 @@ impl Coordinator {
             matrix_id: self.n_wk.id(),
             iterations: self.cfg.iterations,
             shard_addrs: self.shard_addrs.clone(),
+            backup_addrs: self.backup_addrs.clone(),
             corpus: self.corpus_spec.clone(),
             knobs: SweepKnobs::from(&self.cfg),
         }
@@ -595,16 +649,71 @@ impl Coordinator {
         self.roll_epoch();
     }
 
+    /// Watch replicated shards for primary death. The detector is the
+    /// client's own failover: `ShardInfo` rides the shard's route, so
+    /// an answer from an *un-promoted backup* (role 1) means the route
+    /// already abandoned an unresponsive primary. Recovery is then
+    /// promote → repoint the address future `JobSpec`s carry → roll the
+    /// epoch, so every partition re-pushes its checkpoint counts into a
+    /// fresh table on the survivor (healing the group-commit window and
+    /// any replication lag lost with the primary).
+    fn probe_replicas(&mut self) {
+        if self.backup_addrs.is_empty() || self.last_probe.elapsed() < REPLICA_PROBE {
+            return;
+        }
+        self.last_probe = Instant::now();
+        for s in 0..self.client.shards() {
+            let info = match self.client.shard_info(s) {
+                Ok(info) => info,
+                Err(e) => {
+                    log_warn!("replica probe of shard {s} failed: {e}");
+                    continue;
+                }
+            };
+            if info.role != crate::ps::server::ROLE_BACKUP {
+                continue;
+            }
+            log_warn!("shard {s}: primary presumed dead; promoting its backup");
+            match self.client.promote_backup(s) {
+                Ok(()) => {
+                    self.shard_addrs[s] = self.backup_addrs[s].clone();
+                    self.promotions += 1;
+                    self.roll_epoch();
+                }
+                Err(e) => log_warn!("promotion of shard {s}'s backup failed: {e}"),
+            }
+        }
+    }
+
     /// Start a fresh epoch after a failure: new count table (fencing off
     /// the old one), everyone rebuilds from checkpoints.
     fn roll_epoch(&mut self) {
         self.epoch += 1;
+        let fenced = self.n_wk.id();
         match self.client.matrix_with_layout::<i64>(
             self.vocab_size as u64,
             self.cfg.num_topics,
             self.cfg.wt_layout,
         ) {
-            Ok(m) => self.n_wk = m,
+            Ok(m) => {
+                self.n_wk = m;
+                // Retire the table fenced off by the *previous* roll.
+                // The just-fenced table gets one epoch of grace: live
+                // workers may still be mid-sweep with pushes referencing
+                // it, and those must land in the abandoned table (and be
+                // ignored) rather than bounce with "unknown matrix" and
+                // kill an otherwise healthy worker. One roll later no
+                // sweep can reference it, so shards free its resident
+                // rows and their WAL compactions stop carrying it.
+                // Best-effort — a shard that misses the delete only
+                // wastes memory (a zombie push to the deleted id is
+                // rejected, which is also what fencing wants).
+                if let Some(old) = self.fenced.replace(fenced) {
+                    if let Err(e) = self.client.delete_matrix(old) {
+                        log_warn!("could not retire fenced count table {old}: {e}");
+                    }
+                }
+            }
             Err(e) => {
                 // Without a fresh table there is no consistent recovery:
                 // directing workers to re-push their checkpoint counts
@@ -667,10 +776,12 @@ impl Coordinator {
             if let Ok(infos) = self.client.shard_infos() {
                 self.ps_health.insert(
                     next,
-                    (
-                        infos.iter().map(|i| i.bytes).sum(),
-                        infos.iter().map(|i| i.dedup_evictions).sum(),
-                    ),
+                    PsHealth {
+                        bytes: infos.iter().map(|i| i.bytes).sum(),
+                        dedup_evictions: infos.iter().map(|i| i.dedup_evictions).sum(),
+                        wal_bytes: infos.iter().map(|i| i.wal_bytes).sum(),
+                        repl_lag: infos.iter().map(|i| i.repl_lag).sum(),
+                    },
                 );
             }
         }
@@ -701,10 +812,12 @@ impl Coordinator {
                 row = row.set("perplexity", p);
                 final_perplexity = Some(p);
             }
-            if let Some(&(bytes, evictions)) = self.ps_health.get(&iter) {
+            if let Some(&h) = self.ps_health.get(&iter) {
                 row = row
-                    .set("ps_resident_bytes", bytes as f64)
-                    .set("ps_dedup_evictions", evictions as f64);
+                    .set("ps_resident_bytes", h.bytes as f64)
+                    .set("ps_dedup_evictions", h.dedup_evictions as f64)
+                    .set("ps_wal_bytes", h.wal_bytes as f64)
+                    .set("ps_repl_lag", h.repl_lag as f64);
             }
             report.push(row);
         }

@@ -127,6 +127,11 @@ pub struct JobSpec {
     pub iterations: u32,
     /// Parameter-server shard addresses, in shard order.
     pub shard_addrs: Vec<String>,
+    /// Backup replica addresses, parallel to `shard_addrs` (empty when
+    /// the deployment runs without replication). Workers hand these to
+    /// their [`crate::ps::client::PsClient`] so pushes fail over to a
+    /// promoted backup instead of dying with the primary.
+    pub backup_addrs: Vec<String>,
     /// Where the worker gets the corpus.
     pub corpus: CorpusSpec,
     /// Sampling and deployment knobs.
@@ -363,6 +368,10 @@ impl JobSpec {
         for addr in &self.shard_addrs {
             w.str(addr);
         }
+        w.usize(self.backup_addrs.len());
+        for addr in &self.backup_addrs {
+            w.str(addr);
+        }
         self.corpus.encode(w);
         self.knobs.encode(w);
     }
@@ -380,6 +389,11 @@ impl JobSpec {
         for _ in 0..n {
             shard_addrs.push(r.str()?);
         }
+        let n = r.usize()?;
+        let mut backup_addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            backup_addrs.push(r.str()?);
+        }
         Ok(JobSpec {
             worker,
             partition,
@@ -389,6 +403,7 @@ impl JobSpec {
             matrix_id,
             iterations,
             shard_addrs,
+            backup_addrs,
             corpus: CorpusSpec::decode(r)?,
             knobs: SweepKnobs::decode(r)?,
         })
@@ -560,6 +575,7 @@ mod tests {
             matrix_id: 0xdead,
             iterations: 50,
             shard_addrs: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
+            backup_addrs: vec!["127.0.0.1:8001".into(), "127.0.0.1:8002".into()],
             corpus: CorpusSpec::File("corpus.bin".into()),
             knobs: knobs(),
         }

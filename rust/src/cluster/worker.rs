@@ -169,12 +169,15 @@ fn setup_job(spec: &JobSpec, corpus: &Corpus) -> Result<ActiveJob> {
     }
 
     let resolved = resolve_addrs(&spec.shard_addrs)?;
-    let ps_cfg = PsConfig::deployment(
+    let mut ps_cfg = PsConfig::deployment(
         resolved.len(),
         knobs.scheme,
         TransportMode::Connect(spec.shard_addrs.clone()),
         knobs.sampler.pipeline_depth,
     );
+    // Replica failover: pushes outlive a dying primary by routing to
+    // its (promoted) backup.
+    ps_cfg.backups = spec.backup_addrs.clone();
     let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
     let client = PsClient::connect(&*transport, ps_cfg);
     client.validate_deployment()?;

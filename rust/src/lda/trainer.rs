@@ -113,6 +113,11 @@ pub struct TrainConfig {
     /// worker may run at most this many iterations ahead of the slowest
     /// partition (`0` = lockstep).
     pub max_staleness: u32,
+    /// Cluster mode: backup replica addresses, one per shard and
+    /// parallel to the `Connect` primaries (started with
+    /// `serve --backup-of`). Empty disables replication: no client
+    /// failover, no promotion on shard death.
+    pub backups: Vec<String>,
 }
 
 impl Default for TrainConfig {
@@ -136,6 +141,7 @@ impl Default for TrainConfig {
             heartbeat_ms: 1000,
             straggler_timeout_ms: 10_000,
             max_staleness: 1,
+            backups: Vec::new(),
         }
     }
 }
@@ -177,12 +183,13 @@ fn start_parameter_servers(
                     cfg.shards
                 );
             }
-            let ps_cfg = PsConfig::deployment(
+            let mut ps_cfg = PsConfig::deployment(
                 resolved.len(),
                 cfg.scheme,
                 cfg.transport.clone(),
                 cfg.sampler.pipeline_depth,
             );
+            ps_cfg.backups = cfg.backups.clone();
             let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
             let client = PsClient::connect(&*transport, ps_cfg);
             // A shard-count / scheme / address-order mismatch against the

@@ -45,6 +45,10 @@
 //!   and topic inspection utilities.
 //! - [`runtime`] — a PJRT/XLA engine that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from rust.
+//! - [`wal`] — per-shard durability: a group-committed, segmented
+//!   write-ahead log with snapshot compaction, powering crash recovery
+//!   (`serve --wal-dir`) and primary→backup chain replication
+//!   (`serve --backup-of`) with client-side failover.
 //!
 //! Python (JAX + Pallas) participates only at *build* time: `make
 //! artifacts` lowers the evaluation graphs to HLO text once; the rust
@@ -62,5 +66,6 @@ pub mod ps;
 pub mod runtime;
 pub mod serving;
 pub mod util;
+pub mod wal;
 
 pub use util::error::{Error, Result};

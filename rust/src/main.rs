@@ -81,6 +81,9 @@ deployment options:
   --transport T     sim (in-process, default) | tcp (loopback TCP)
   --connect LIST    host:port,... of running `serve` shards
                     (wins over --transport)
+  --backups LIST    host:port,... of `serve --backup-of` replicas, one
+                    per shard and parallel to --connect; enables client
+                    failover when a primary dies
   --shutdown        stop the connected `serve` shards after training
 
 run options:
@@ -98,6 +101,20 @@ const SERVE_USAGE: &str = "options:
   --first-shard N  global id of the first hosted shard (default 0)
   --shards N       total shards in the deployment (default: hosted count)
   --scheme S       cyclic|range row partitioning (default cyclic)
+
+durability options:
+  --wal-dir PATH         write-ahead log directory; each hosted shard
+                         logs under <PATH>/shard-NNNN/ and replays it
+                         on restart (default: no durability)
+  --wal-segment-bytes N  rotate log segments past this size
+                         (default 1048576)
+
+replication options:
+  --backup-of LIST  run every hosted shard as a *backup*: poll the
+                    primary at the corresponding address (indexed by
+                    shard id) for committed WAL records and refuse
+                    data ops until promoted. The list names ALL
+                    primaries in the deployment, shard order.
 ";
 
 const SERVE_MODEL_USAGE: &str = "options:
@@ -134,6 +151,10 @@ examples:
 const COORDINATE_USAGE: &str = "train options apply (see `glint-lda help train`), plus:
   --bind ADDR           control-plane listen address (default 127.0.0.1:7600)
   --connect LIST        host:port,... of running `serve` shards (required)
+  --backups LIST        host:port,... of `serve --backup-of` replicas,
+                        one per shard and parallel to --connect; the
+                        coordinator promotes a backup when its primary
+                        dies and rolls the epoch to heal lost pushes
   --workers N           corpus partitions / expected `work` processes
   --checkpoint-dir D    per-partition checkpoints (enables failure recovery)
   --keep-checkpoints N  snapshots retained per partition (default 3)
@@ -397,6 +418,7 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
         heartbeat_ms: args.get_as("heartbeat-ms", 1000u64)?,
         straggler_timeout_ms: args.get_as("straggler-ms", 10_000u64)?,
         max_staleness: args.get_as("max-staleness", 1u32)?,
+        backups: args.get("backups").map(split_addr_list).unwrap_or_default(),
         ..TrainConfig::default()
     })
 }
@@ -453,10 +475,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => first_shard + addrs.len(),
         n => n,
     };
-    let cfg = PsConfig { shards: total, scheme: parse_scheme(args)?, ..PsConfig::default() };
-    let server = TcpShardServer::bind(cfg, first_shard, &addrs)?;
+    let mut cfg = PsConfig { shards: total, scheme: parse_scheme(args)?, ..PsConfig::default() };
+    cfg.wal_dir = args.get("wal-dir").map(PathBuf::from);
+    cfg.wal_segment_bytes = args.get_as("wal-segment-bytes", cfg.wal_segment_bytes)?;
+    cfg.backup_of = args.get("backup-of").map(split_addr_list);
+    if let Some(primaries) = &cfg.backup_of {
+        if primaries.len() < total {
+            return Err(Error::Config(format!(
+                "--backup-of names {} primaries for a {total}-shard deployment",
+                primaries.len()
+            )));
+        }
+    }
+    let server = TcpShardServer::bind(cfg.clone(), first_shard, &addrs)?;
+    let role = if cfg.backup_of.is_some() { "backup for shard" } else { "shard" };
     for (i, addr) in server.addrs().iter().enumerate() {
-        log_info!("shard {}/{} listening on {addr}", first_shard + i, total);
+        log_info!("{role} {}/{} listening on {addr}", first_shard + i, total);
+    }
+    if let Some(dir) = &cfg.wal_dir {
+        log_info!("write-ahead logging under {}", dir.display());
     }
     log_info!("serving; stop with `glint-lda shutdown --connect <addrs>`");
     server.join();

@@ -30,6 +30,9 @@ pub struct EndpointStats {
     queue_wait_nanos: AtomicU64,
     /// Ops whose queue wait has been recorded.
     dispatched_ops: AtomicU64,
+    /// Times the client's route for this shard failed over to another
+    /// replica after repeated delivery failures.
+    failovers: AtomicU64,
 }
 
 impl EndpointStats {
@@ -103,6 +106,16 @@ impl EndpointStats {
     /// Client-observed timeouts.
     pub fn timeouts(&self) -> u64 {
         self.timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Record a client-side failover to another replica of this shard.
+    pub fn record_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Route failovers triggered against this shard.
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
     }
 
     /// Record an async op entering this shard's in-flight window.

@@ -395,6 +395,10 @@ pub struct TcpServer {
     addrs: Vec<SocketAddr>,
     stop: Arc<AtomicBool>,
     accepts: Vec<JoinHandle<()>>,
+    /// One sender per inbox (in address order), so server-local threads
+    /// — the replication pollers — can enqueue requests through a
+    /// shard's serialized inbox exactly like a remote connection would.
+    injectors: Vec<mpsc::Sender<Envelope>>,
 }
 
 impl TcpServer {
@@ -416,9 +420,11 @@ impl TcpServer {
         let stop = Arc::new(AtomicBool::new(false));
         let mut inboxes = Vec::with_capacity(addrs.len());
         let mut accepts = Vec::with_capacity(addrs.len());
+        let mut injectors = Vec::with_capacity(addrs.len());
         for (i, listener) in listeners.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel();
             inboxes.push(Inbox { rx });
+            injectors.push(tx.clone());
             let stop = Arc::clone(&stop);
             let handle = std::thread::Builder::new()
                 .name(format!("glint-tcp-accept-{i}"))
@@ -426,12 +432,19 @@ impl TcpServer {
                 .expect("spawn tcp accept loop");
             accepts.push(handle);
         }
-        Ok((TcpServer { addrs: local, stop, accepts }, inboxes))
+        Ok((TcpServer { addrs: local, stop, accepts, injectors }, inboxes))
     }
 
     /// Local addresses of the listeners, in shard order.
     pub fn addrs(&self) -> &[SocketAddr] {
         &self.addrs
+    }
+
+    /// A sender feeding listener `i`'s inbox directly (bypassing TCP).
+    /// Requests injected this way are processed by the shard's serve
+    /// loop in arrival order, preserving the single-writer model.
+    pub(crate) fn injector(&self, i: usize) -> mpsc::Sender<Envelope> {
+        self.injectors[i].clone()
     }
 
     /// Stop accepting new connections and join the accept threads.

@@ -49,14 +49,27 @@
 //! - **Dropped tickets are fire-and-forget, not cancelled.** The
 //!   operation still runs to completion; a dropped push ticket's
 //!   error is parked and surfaced by the next `flush`.
+//!
+//! # Replica failover
+//!
+//! When [`PsConfig::backups`] lists one backup address per shard, each
+//! shard's requests travel through a shared route: deliveries go to the
+//! route's *active* replica, and after `FAILOVER_AFTER` consecutive
+//! failures (timeouts, or `Unavailable` answers from an un-promoted
+//! backup) the route advances to the next replica and keeps retrying
+//! there. The route is shared by every clone of the client, so one
+//! courier discovering a dead primary moves the whole client. The
+//! cluster coordinator completes the switch by promoting the backup
+//! ([`PsClient::promote_backup`]), after which it serves reads and
+//! writes through the same exactly-once machinery.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::net::stats::EndpointStats;
 use crate::net::{Endpoint, Transport};
@@ -118,20 +131,90 @@ impl Element for f32 {
 /// An asynchronous operation executed on a shard dispatcher worker.
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Per-shard delivery agent: one endpoint handle plus the retry
+/// Consecutive delivery failures against a shard's active replica
+/// before its route advances to the next one.
+const FAILOVER_AFTER: usize = 3;
+
+/// Longest pause after an `Unavailable` answer before retrying: the
+/// replica is alive but gated (an un-promoted backup), so burning the
+/// full back-off ladder on it would only delay the coordinator's
+/// promotion from taking effect.
+const UNAVAILABLE_PAUSE: Duration = Duration::from_millis(100);
+
+/// One shard's replica set: the primary endpoint first, then any
+/// backups. Requests go to the `active` replica; repeated failures
+/// advance it (round-robin). Shared — via `Arc` — by every courier and
+/// clone of the client, so whichever courier trips the threshold fails
+/// the whole client over at once.
+struct ShardRoute {
+    eps: Vec<Endpoint>,
+    active: AtomicUsize,
+    /// Consecutive failures against the active replica.
+    fails: AtomicUsize,
+}
+
+impl ShardRoute {
+    fn new(eps: Vec<Endpoint>) -> ShardRoute {
+        assert!(!eps.is_empty());
+        ShardRoute { eps, active: AtomicUsize::new(0), fails: AtomicUsize::new(0) }
+    }
+
+    /// Index of the replica currently serving this shard.
+    fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed) % self.eps.len()
+    }
+
+    /// The endpoint requests should go to right now.
+    fn endpoint(&self) -> &Endpoint {
+        &self.eps[self.active()]
+    }
+
+    /// A delivery succeeded: the active replica is healthy.
+    fn record_success(&self) {
+        self.fails.store(0, Ordering::Relaxed);
+    }
+
+    /// A delivery failed (timeout or gated replica). After
+    /// [`FAILOVER_AFTER`] consecutive failures the route advances to
+    /// the next replica; with a single replica there is nowhere to go.
+    fn record_failure(&self, shard: usize) {
+        if self.eps.len() < 2 {
+            return;
+        }
+        if self.fails.fetch_add(1, Ordering::Relaxed) + 1 < FAILOVER_AFTER {
+            return;
+        }
+        self.fails.store(0, Ordering::Relaxed);
+        let from = self.active();
+        let to = (from + 1) % self.eps.len();
+        self.active.store(to, Ordering::Relaxed);
+        // Account the event against the shard's primary stats object so
+        // per-shard counters stay in one place regardless of direction.
+        self.eps[0].stats.record_failover();
+        crate::log_warn!("shard {shard}: replica {from} unresponsive, failing over to {to}");
+    }
+
+    /// Pin the route to replica `idx` (coordinator-driven promotion).
+    fn force(&self, idx: usize) {
+        self.fails.store(0, Ordering::Relaxed);
+        self.active.store(idx % self.eps.len(), Ordering::Relaxed);
+    }
+}
+
+/// Per-shard delivery agent: the shard's replica route plus the retry
 /// configuration, and nothing else — cheap to clone into asynchronous
 /// jobs without keeping the whole client (and its dispatcher threads)
 /// alive from inside their own queue.
 #[derive(Clone)]
 struct Courier {
-    endpoint: Endpoint,
+    route: Arc<ShardRoute>,
     shard: usize,
     config: PsConfig,
 }
 
 impl Courier {
     /// Send `req` to this courier's shard, retrying with exponential
-    /// back-off.
+    /// back-off and failing over between replicas.
     ///
     /// Only safe for idempotent requests (everything except a raw push
     /// without uid — which this API cannot express).
@@ -146,20 +229,39 @@ impl Courier {
             Request::PushCoords { .. } | Request::PushRows { .. } => "push",
             Request::Forget { .. } => "forget",
             Request::CreateMatrix { .. } => "create",
+            Request::DeleteMatrix { .. } => "delete-matrix",
             Request::ShardInfo => "info",
+            Request::ReplPoll { .. } => "repl-poll",
+            Request::Promote => "promote",
+            Request::ReplApply { .. } => "repl-apply",
             Request::Shutdown => "shutdown",
         };
         for attempt in 0..self.config.max_retries {
             let timeout = self.config.timeout_for_attempt(attempt);
-            if let Ok(bytes) = self.endpoint.request(payload.clone(), timeout) {
-                let resp = Response::decode(&bytes)?;
-                if let Response::Error(msg) = resp {
-                    return Err(Error::PsRejected(msg));
-                }
-                return Ok(resp);
+            match self.route.endpoint().request(payload.clone(), timeout) {
+                Ok(bytes) => match Response::decode(&bytes)? {
+                    Response::Error(msg) => {
+                        // The replica answered: it is healthy, the
+                        // request is what it rejects.
+                        self.route.record_success();
+                        return Err(Error::PsRejected(msg));
+                    }
+                    Response::Unavailable(_) => {
+                        // Alive but gated (un-promoted backup): counts
+                        // toward failover, retried after a short pause
+                        // rather than the full back-off step.
+                        self.route.record_failure(self.shard);
+                        std::thread::sleep(timeout.min(UNAVAILABLE_PAUSE));
+                    }
+                    resp => {
+                        self.route.record_success();
+                        return Ok(resp);
+                    }
+                },
+                // Lost request or lost reply — indistinguishable; retry
+                // with a longer timeout (paper §2.3).
+                Err(()) => self.route.record_failure(self.shard),
             }
-            // Lost request or lost reply — indistinguishable; retry with a
-            // longer timeout (paper §2.3).
         }
         Err(Error::PsTimeout { op, shard: self.shard, attempts: self.config.max_retries })
     }
@@ -337,7 +439,7 @@ struct AsyncCore {
 /// share matrix-id allocation and the per-shard dispatch windows.
 #[derive(Clone)]
 pub struct PsClient {
-    endpoints: Vec<Endpoint>,
+    routes: Vec<Arc<ShardRoute>>,
     config: PsConfig,
     next_matrix_id: Arc<AtomicU32>,
     core: Arc<AsyncCore>,
@@ -367,14 +469,48 @@ impl PsClient {
             .unwrap_or(0)
             ^ std::process::id().rotate_left(16);
         let endpoints = transport.endpoints();
+        // One backup endpoint per shard when configured: the route then
+        // holds [primary, backup] and fails over between them.
+        let backup_eps: Option<Vec<Endpoint>> = if config.backups.is_empty() {
+            None
+        } else {
+            match crate::net::tcp::resolve_addrs(&config.backups) {
+                Ok(addrs) if addrs.len() == endpoints.len() => {
+                    Some(crate::net::tcp::TcpTransport::connect(&addrs).endpoints())
+                }
+                Ok(addrs) => {
+                    crate::log_warn!(
+                        "ignoring backups: {} address(es) for {} shard(s)",
+                        addrs.len(),
+                        endpoints.len()
+                    );
+                    None
+                }
+                Err(e) => {
+                    crate::log_warn!("ignoring unresolvable backup addresses: {e}");
+                    None
+                }
+            }
+        };
+        let routes: Vec<Arc<ShardRoute>> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(s, ep)| {
+                let mut eps = vec![ep];
+                if let Some(backups) = &backup_eps {
+                    eps.push(backups[s].clone());
+                }
+                Arc::new(ShardRoute::new(eps))
+            })
+            .collect();
         let depth = config.pipeline_depth.max(1);
-        let dispatchers = endpoints
+        let dispatchers = routes
             .iter()
             .enumerate()
-            .map(|(s, ep)| ShardDispatcher::start(s, depth, Arc::clone(&ep.stats)))
+            .map(|(s, route)| ShardDispatcher::start(s, depth, Arc::clone(&route.eps[0].stats)))
             .collect();
         PsClient {
-            endpoints,
+            routes,
             config,
             next_matrix_id: Arc::new(AtomicU32::new(base.max(1))),
             core: Arc::new(AsyncCore {
@@ -386,7 +522,7 @@ impl PsClient {
 
     /// Number of shards.
     pub fn shards(&self) -> usize {
-        self.endpoints.len()
+        self.routes.len()
     }
 
     /// Deployment config.
@@ -397,7 +533,7 @@ impl PsClient {
     /// A delivery agent for `shard` that async jobs can own outright.
     fn courier(&self, shard: usize) -> Courier {
         Courier {
-            endpoint: self.endpoints[shard].clone(),
+            route: Arc::clone(&self.routes[shard]),
             shard,
             config: self.config.clone(),
         }
@@ -544,33 +680,99 @@ impl PsClient {
         }
     }
 
-    /// Query every shard's info (deployment layout, matrix count,
-    /// resident bytes, pending uids).
+    /// Query one shard's info (deployment layout, matrix count,
+    /// resident bytes, pending uids, durability/replication state).
+    /// Goes through the shard's route, so after a failover this reports
+    /// on whichever replica currently serves the shard.
+    pub fn shard_info(&self, shard: usize) -> Result<ShardInfo> {
+        match self.request_retry(shard, &Request::ShardInfo)? {
+            Response::Info {
+                shard_id,
+                shards,
+                scheme,
+                matrices,
+                local_rows,
+                bytes,
+                pending_uids,
+                dedup_evictions,
+                role,
+                wal_records,
+                wal_bytes,
+                wal_commit_batches,
+                repl_applied,
+                repl_lag,
+            } => Ok(ShardInfo {
+                shard_id,
+                shards,
+                scheme,
+                matrices,
+                local_rows,
+                bytes,
+                pending_uids,
+                dedup_evictions,
+                role,
+                wal_records,
+                wal_bytes,
+                wal_commit_batches,
+                repl_applied,
+                repl_lag,
+            }),
+            r => Err(Error::Decode(format!("unexpected info response {r:?}"))),
+        }
+    }
+
+    /// Query every shard's info.
     pub fn shard_infos(&self) -> Result<Vec<ShardInfo>> {
-        (0..self.shards())
-            .map(|s| match self.request_retry(s, &Request::ShardInfo)? {
-                Response::Info {
-                    shard_id,
-                    shards,
-                    scheme,
-                    matrices,
-                    local_rows,
-                    bytes,
-                    pending_uids,
-                    dedup_evictions,
-                } => Ok(ShardInfo {
-                    shard_id,
-                    shards,
-                    scheme,
-                    matrices,
-                    local_rows,
-                    bytes,
-                    pending_uids,
-                    dedup_evictions,
-                }),
-                r => Err(Error::Decode(format!("unexpected info response {r:?}"))),
-            })
-            .collect()
+        (0..self.shards()).map(|s| self.shard_info(s)).collect()
+    }
+
+    /// Drop the matrix with `id` on every shard, releasing its resident
+    /// bytes (and, with a WAL, letting the next compaction reclaim its
+    /// log bytes). Idempotent — deleting an unknown id is a no-op — so
+    /// the coordinator can retire a fenced-off epoch table best-effort.
+    pub fn delete_matrix(&self, id: u32) -> Result<()> {
+        let mut first_err = None;
+        for s in 0..self.shards() {
+            let result = match self.request_retry(s, &Request::DeleteMatrix { matrix: id }) {
+                Ok(Response::Ok) => Ok(()),
+                Ok(r) => Err(Error::Decode(format!("unexpected delete response {r:?}"))),
+                Err(e) => Err(e),
+            };
+            if let Err(e) = result {
+                crate::log_warn!("delete of matrix {id} on shard {s} failed: {e}");
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Promote `shard`'s backup replica to serve reads and writes, then
+    /// pin this client's route to it. The failure-detection path is the
+    /// route's automatic failover; this is the *recovery* path a
+    /// coordinator drives once it decides the primary is gone.
+    pub fn promote_backup(&self, shard: usize) -> Result<()> {
+        let route = &self.routes[shard];
+        if route.eps.len() < 2 {
+            return Err(Error::Config(format!("shard {shard} has no backup replica configured")));
+        }
+        let backup = route.eps.len() - 1;
+        // A courier pinned to the backup alone: the shared route may
+        // still point at the dead primary.
+        let pinned = Courier {
+            route: Arc::new(ShardRoute::new(vec![route.eps[backup].clone()])),
+            shard,
+            config: self.config.clone(),
+        };
+        match pinned.request_retry(&Request::Promote)? {
+            Response::Ok => {
+                route.force(backup);
+                Ok(())
+            }
+            r => Err(Error::Decode(format!("unexpected promote response {r:?}"))),
+        }
     }
 
     /// Verify this client's deployment view against what every shard
@@ -626,6 +828,19 @@ pub struct ShardInfo {
     /// Dedup records evicted by the server's bounded window before
     /// their `Forget` arrived (abandoned hand-shakes).
     pub dedup_evictions: u64,
+    /// Replication role: 0 = primary, 1 = un-promoted backup,
+    /// 2 = promoted backup (see `crate::ps::server::ROLE_PRIMARY` etc.).
+    pub role: u8,
+    /// Records appended to the shard's write-ahead log (0 without one).
+    pub wal_records: u64,
+    /// Bytes across the WAL's segments.
+    pub wal_bytes: u64,
+    /// Group-commit fsync batches the WAL has written.
+    pub wal_commit_batches: u64,
+    /// Highest replicated log sequence this shard has applied (backups).
+    pub repl_applied: u64,
+    /// Known committed primary records not yet applied here (backups).
+    pub repl_lag: u64,
 }
 
 /// Sparse additive deltas destined for one matrix, grouped per shard by

@@ -1,5 +1,6 @@
 //! Parameter-server deployment configuration.
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::ps::partition::PartitionScheme;
@@ -70,6 +71,28 @@ pub struct PsConfig {
     /// on this many threads while pushes stay serialized on the shard's
     /// inbox thread. Clamped to at least 1.
     pub read_concurrency: usize,
+    /// Durability: when set, each hosted shard keeps a write-ahead log
+    /// under `<wal_dir>/shard-NNNN/` and replays it on start. `None`
+    /// (the default) keeps the PR-6-and-earlier in-memory-only behavior.
+    pub wal_dir: Option<PathBuf>,
+    /// WAL: rotate the active log segment past this many bytes.
+    pub wal_segment_bytes: u64,
+    /// WAL: group-commit window — the longest a queued record waits
+    /// before the committer fsyncs it anyway. Push acks do *not* wait
+    /// for the fsync, so a crash can lose at most this window.
+    pub wal_commit_window: Duration,
+    /// WAL: sealed log segments that trigger folding the shard state
+    /// into a snapshot segment (reclaiming deleted matrices' bytes).
+    pub wal_compact_after: usize,
+    /// Replication (client side): backup addresses, one per shard and
+    /// parallel to a `Connect` transport's primaries. The client fails
+    /// over to `backups[s]` after repeated failures against shard `s`.
+    pub backups: Vec<String>,
+    /// Replication (server side): when set, every shard this server
+    /// hosts runs as a *backup*, polling the corresponding primary
+    /// address (indexed by shard id) for committed WAL records and
+    /// refusing data ops until promoted.
+    pub backup_of: Option<Vec<String>>,
 }
 
 impl Default for PsConfig {
@@ -85,6 +108,12 @@ impl Default for PsConfig {
             pipeline_depth: 4,
             dedup_window: 1 << 16,
             read_concurrency: 4,
+            wal_dir: None,
+            wal_segment_bytes: 1 << 20,
+            wal_commit_window: Duration::from_millis(2),
+            wal_compact_after: 4,
+            backups: Vec::new(),
+            backup_of: None,
         }
     }
 }

@@ -111,7 +111,7 @@ impl Data {
         }
     }
 
-    fn encode(&self, w: &mut Writer) {
+    pub(crate) fn encode(&self, w: &mut Writer) {
         match self {
             Data::I64(v) => {
                 w.u8(Dtype::I64.tag());
@@ -124,7 +124,7 @@ impl Data {
         }
     }
 
-    fn decode(r: &mut Reader) -> Result<Data> {
+    pub(crate) fn decode(r: &mut Reader) -> Result<Data> {
         match Dtype::from_tag(r.u8()?)? {
             Dtype::I64 => Ok(Data::I64(r.slice_i64()?)),
             Dtype::F32 => Ok(Data::F32(r.slice_f32()?)),
@@ -299,6 +299,35 @@ pub enum Request {
         /// Push id to release.
         uid: u64,
     },
+    /// Drop a whole matrix and reclaim its memory (and, with a WAL, its
+    /// log bytes at the next compaction). Broadcast to all shards; used
+    /// by the coordinator to fence off contaminated epoch tables.
+    DeleteMatrix {
+        /// Matrix id to drop. Deleting an unknown id is a no-op.
+        matrix: u32,
+    },
+    /// Replication: a backup asks its primary for committed WAL records
+    /// starting at sequence `from`. Served from the read pool.
+    ReplPoll {
+        /// First sequence number wanted (1 on a cold start).
+        from: u64,
+    },
+    /// Promote a backup shard to primary (issued by the coordinator
+    /// when the primary goes silent). Idempotent.
+    Promote,
+    /// Replication: apply a batch of WAL records to a backup. `reset`
+    /// means the records are a full snapshot and existing state must be
+    /// discarded first. Applied through the same dedup path as live
+    /// pushes, so re-delivery is safe.
+    ReplApply {
+        /// Discard current state before applying (snapshot batch).
+        reset: bool,
+        /// The primary's committed tip at poll time, so the backup can
+        /// report how far it trails (`Info::repl_lag`).
+        tip: u64,
+        /// `(seq, wal payload bytes)` in order.
+        records: Vec<(u64, Vec<u8>)>,
+    },
     /// Shard introspection (row count, bytes, matrices).
     ShardInfo,
     /// Stop the shard server thread.
@@ -342,7 +371,38 @@ pub enum Response {
         /// `Forget` arrived (each is a client that died mid-hand-shake;
         /// a retry after eviction would re-apply).
         dedup_evictions: u64,
+        /// Replication role: 0 = primary, 1 = backup, 2 = promoted
+        /// backup now serving as primary.
+        role: u8,
+        /// WAL records appended (0 when the WAL is off).
+        wal_records: u64,
+        /// WAL bytes resident on disk.
+        wal_bytes: u64,
+        /// Group-commit fsync batches written.
+        wal_commit_batches: u64,
+        /// Replication: WAL sequences applied on this replica.
+        repl_applied: u64,
+        /// Replication: primary's committed tip minus `repl_applied`
+        /// at the last poll (how far this replica trails).
+        repl_lag: u64,
     },
+    /// Replication batch (reply to [`Request::ReplPoll`]); mirrors
+    /// `wal::WalSlice`.
+    ReplBatch {
+        /// Records are a full snapshot; rebuild from scratch.
+        reset: bool,
+        /// Cursor for the next poll.
+        next: u64,
+        /// Primary's committed tip at read time.
+        tip: u64,
+        /// `(seq, wal payload bytes)` in order.
+        records: Vec<(u64, Vec<u8>)>,
+    },
+    /// The shard cannot serve this request in its current role (e.g. a
+    /// data op sent to an un-promoted backup). Unlike
+    /// [`Response::Error`], this is retryable — the client's courier
+    /// treats it as a failure and advances its failover route.
+    Unavailable(String),
     /// Request failed server-side.
     Error(String),
 }
@@ -360,6 +420,29 @@ const T_SHUTDOWN: u8 = 8;
 const T_PULL_SPARSE_ROWS: u8 = 9;
 const T_PULL_TOPK: u8 = 10;
 const T_PULL_COL_SUMS: u8 = 11;
+const T_DELETE_MATRIX: u8 = 12;
+const T_REPL_POLL: u8 = 13;
+const T_PROMOTE: u8 = 14;
+const T_REPL_APPLY: u8 = 15;
+
+/// Encode `(seq, payload)` record lists shared by `ReplApply` and
+/// `ReplBatch`.
+fn encode_records(w: &mut Writer, records: &[(u64, Vec<u8>)]) {
+    w.usize(records.len());
+    for (seq, payload) in records {
+        w.u64(*seq);
+        w.bytes(payload);
+    }
+}
+
+fn decode_records(r: &mut Reader) -> Result<Vec<(u64, Vec<u8>)>> {
+    let n = r.usize()?;
+    let mut records = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        records.push((r.u64()?, r.bytes()?));
+    }
+    Ok(records)
+}
 
 impl Request {
     /// Serialize to wire bytes.
@@ -414,6 +497,21 @@ impl Request {
                 w.u8(T_FORGET);
                 w.u64(*uid);
             }
+            Request::DeleteMatrix { matrix } => {
+                w.u8(T_DELETE_MATRIX);
+                w.u32(*matrix);
+            }
+            Request::ReplPoll { from } => {
+                w.u8(T_REPL_POLL);
+                w.u64(*from);
+            }
+            Request::Promote => w.u8(T_PROMOTE),
+            Request::ReplApply { reset, tip, records } => {
+                w.u8(T_REPL_APPLY);
+                w.u8(u8::from(*reset));
+                w.u64(*tip);
+                encode_records(&mut w, records);
+            }
             Request::ShardInfo => w.u8(T_INFO),
             Request::Shutdown => w.u8(T_SHUTDOWN),
         }
@@ -454,6 +552,14 @@ impl Request {
                 values: Data::decode(&mut r)?,
             },
             T_FORGET => Request::Forget { uid: r.u64()? },
+            T_DELETE_MATRIX => Request::DeleteMatrix { matrix: r.u32()? },
+            T_REPL_POLL => Request::ReplPoll { from: r.u64()? },
+            T_PROMOTE => Request::Promote,
+            T_REPL_APPLY => Request::ReplApply {
+                reset: r.u8()? != 0,
+                tip: r.u64()?,
+                records: decode_records(&mut r)?,
+            },
             T_INFO => Request::ShardInfo,
             T_SHUTDOWN => Request::Shutdown,
             t => return Err(Error::Decode(format!("bad request tag {t}"))),
@@ -469,6 +575,8 @@ const R_PUSH_ACK: u8 = 4;
 const R_INFO: u8 = 5;
 const R_ERROR: u8 = 6;
 const R_SPARSE_ROWS: u8 = 7;
+const R_REPL_BATCH: u8 = 8;
+const R_UNAVAILABLE: u8 = 9;
 
 impl Response {
     /// Serialize to wire bytes.
@@ -501,6 +609,12 @@ impl Response {
                 bytes,
                 pending_uids,
                 dedup_evictions,
+                role,
+                wal_records,
+                wal_bytes,
+                wal_commit_batches,
+                repl_applied,
+                repl_lag,
             } => {
                 w.u8(R_INFO);
                 w.u32(*shard_id);
@@ -511,6 +625,23 @@ impl Response {
                 w.u64(*bytes);
                 w.u64(*pending_uids);
                 w.u64(*dedup_evictions);
+                w.u8(*role);
+                w.u64(*wal_records);
+                w.u64(*wal_bytes);
+                w.u64(*wal_commit_batches);
+                w.u64(*repl_applied);
+                w.u64(*repl_lag);
+            }
+            Response::ReplBatch { reset, next, tip, records } => {
+                w.u8(R_REPL_BATCH);
+                w.u8(u8::from(*reset));
+                w.u64(*next);
+                w.u64(*tip);
+                encode_records(&mut w, records);
+            }
+            Response::Unavailable(msg) => {
+                w.u8(R_UNAVAILABLE);
+                w.str(msg);
             }
             Response::Error(msg) => {
                 w.u8(R_ERROR);
@@ -542,7 +673,20 @@ impl Response {
                 bytes: r.u64()?,
                 pending_uids: r.u64()?,
                 dedup_evictions: r.u64()?,
+                role: r.u8()?,
+                wal_records: r.u64()?,
+                wal_bytes: r.u64()?,
+                wal_commit_batches: r.u64()?,
+                repl_applied: r.u64()?,
+                repl_lag: r.u64()?,
             },
+            R_REPL_BATCH => Response::ReplBatch {
+                reset: r.u8()? != 0,
+                next: r.u64()?,
+                tip: r.u64()?,
+                records: decode_records(&mut r)?,
+            },
+            R_UNAVAILABLE => Response::Unavailable(r.str()?),
             R_ERROR => Response::Error(r.str()?),
             t => return Err(Error::Decode(format!("bad response tag {t}"))),
         };
@@ -601,6 +745,15 @@ mod tests {
             values: Data::F32(vec![0.5, 1.5]),
         });
         roundtrip_req(Request::Forget { uid: 44 });
+        roundtrip_req(Request::DeleteMatrix { matrix: 7 });
+        roundtrip_req(Request::ReplPoll { from: 1 << 50 });
+        roundtrip_req(Request::Promote);
+        roundtrip_req(Request::ReplApply { reset: true, tip: 0, records: vec![] });
+        roundtrip_req(Request::ReplApply {
+            reset: false,
+            tip: 1 << 40,
+            records: vec![(1, vec![1, 2, 3]), (2, vec![]), (u64::MAX, vec![0; 64])],
+        });
         roundtrip_req(Request::ShardInfo);
         roundtrip_req(Request::Shutdown);
     }
@@ -632,6 +785,12 @@ mod tests {
             bytes: 160,
             pending_uids: 1,
             dedup_evictions: 4,
+            role: 2,
+            wal_records: 1 << 33,
+            wal_bytes: 9999,
+            wal_commit_batches: 17,
+            repl_applied: 40,
+            repl_lag: 3,
         });
         roundtrip_resp(Response::Info {
             shard_id: 0,
@@ -642,7 +801,26 @@ mod tests {
             bytes: 0,
             pending_uids: 0,
             dedup_evictions: 0,
+            role: 0,
+            wal_records: 0,
+            wal_bytes: 0,
+            wal_commit_batches: 0,
+            repl_applied: 0,
+            repl_lag: 0,
         });
+        roundtrip_resp(Response::ReplBatch {
+            reset: true,
+            next: 51,
+            tip: 60,
+            records: vec![(50, vec![5; 8]), (50, vec![])],
+        });
+        roundtrip_resp(Response::ReplBatch {
+            reset: false,
+            next: 1,
+            tip: 0,
+            records: vec![],
+        });
+        roundtrip_resp(Response::Unavailable("backup".into()));
         roundtrip_resp(Response::Error("boom".into()));
     }
 

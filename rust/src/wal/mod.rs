@@ -1,0 +1,918 @@
+//! Durable per-shard write-ahead log with group commit and compaction.
+//!
+//! Every state-mutating request a shard applies (`CreateMatrix`,
+//! `Push*`, `Forget`, `DeleteMatrix`) is appended to this log before the
+//! server acknowledges, so a `kill -9`'d shard process recovers its
+//! count tables by replaying the log on restart — the exactly-once push
+//! uids recorded in the log flow through the same dedup window on
+//! replay, so recovery is idempotent by construction.
+//!
+//! # Group commit
+//!
+//! [`ShardWal::append`] never touches the disk: it assigns the record a
+//! sequence number and enqueues it for a dedicated **committer thread**,
+//! which drains whatever accumulated, writes it as one batch and fsyncs
+//! once ([`WalOptions::commit_window`] bounds how long a lone record
+//! waits for company). Push acknowledgements do *not* wait for the
+//! fsync — durability is window-bounded (a crash can lose at most the
+//! last un-synced window), which keeps hot-path push latency flat while
+//! replication and recovery only ever observe the *committed* prefix
+//! ([`ShardWal::committed`]). [`ShardWal::sync`] is the explicit
+//! barrier, used at snapshot and shutdown time.
+//!
+//! # Segments and compaction
+//!
+//! The log is segmented into bounded files
+//! ([`WalOptions::segment_bytes`]); once enough sealed segments pile up,
+//! the shard folds the *entire current state* (count matrices + dedup
+//! window + uid counter) into one snapshot segment and deletes every
+//! log segment behind it — replay cost and disk footprint stay
+//! proportional to live state, not to history. Cold epoch tables the
+//! coordinator fences off are reclaimed through the `DeleteMatrix`
+//! op, which is itself logged, so compaction drops their bytes
+//! entirely.
+//!
+//! # Replication feed
+//!
+//! [`ShardWal::read_from`] serves the committed prefix to a backup
+//! replica: a poller that is behind the compaction horizon receives a
+//! `reset` batch carrying the newest snapshot, then streams log records
+//! from there (see `ps::server`'s `ReplPoll`/`ReplApply` handling).
+
+pub mod segment;
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::log_warn;
+use crate::ps::messages::{Data, Dtype, Layout};
+use crate::util::codec::{Reader, Writer};
+use crate::util::error::{Error, Result};
+use segment::{
+    log_name, parse_name, scan, write_snapshot, RawRecord, SegmentHeader, SegmentKind,
+    SegmentWriter, RECORD_OVERHEAD,
+};
+
+/// Knobs of one shard's WAL.
+#[derive(Debug, Clone)]
+pub struct WalOptions {
+    /// Rotate the active log segment once it exceeds this many bytes.
+    pub segment_bytes: u64,
+    /// Longest a lone queued record waits before the committer fsyncs
+    /// it anyway (the durability window).
+    pub commit_window: Duration,
+    /// Sealed log segments that trigger a compaction into a snapshot.
+    pub compact_after: usize,
+}
+
+impl Default for WalOptions {
+    fn default() -> Self {
+        WalOptions {
+            segment_bytes: 1 << 20,
+            commit_window: Duration::from_millis(2),
+            compact_after: 4,
+        }
+    }
+}
+
+/// One logical WAL record.
+///
+/// `Write` carries a verbatim-encoded [`crate::ps::messages::Request`]
+/// (the apply path re-decodes it on replay, so log replay and live
+/// traffic share one code path). The `Snap*` variants are emitted only
+/// by the compactor and describe a full shard state as of the
+/// snapshot's sequence number.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalPayload {
+    /// A state-mutating request, encoded exactly as it came off the wire.
+    Write(Vec<u8>),
+    /// Snapshot: a matrix exists with this shape.
+    SnapMatrix {
+        /// Matrix id.
+        id: u32,
+        /// Global row count.
+        rows: u64,
+        /// Column count.
+        cols: u32,
+        /// Element type.
+        dtype: Dtype,
+        /// Storage layout.
+        layout: Layout,
+    },
+    /// Snapshot: a chunk of one matrix's non-zero entries, as absolute
+    /// values at global `(row, col)` coordinates.
+    SnapRows {
+        /// Matrix id.
+        matrix: u32,
+        /// Global rows (one per entry).
+        rows: Vec<u64>,
+        /// Columns (one per entry).
+        cols: Vec<u32>,
+        /// Absolute values.
+        values: Data,
+    },
+    /// Snapshot: the dedup window's un-forgotten uids in FIFO order.
+    SnapDedup {
+        /// Applied-but-not-forgotten push uids, oldest first.
+        uids: Vec<u64>,
+    },
+    /// Snapshot terminal marker: the shard's next-uid counter. Always
+    /// the last record of a snapshot — its presence is how recovery
+    /// tells a complete snapshot from a torn one.
+    SnapNextUid(u64),
+}
+
+const P_WRITE: u8 = 1;
+const P_SNAP_MATRIX: u8 = 2;
+const P_SNAP_ROWS: u8 = 3;
+const P_SNAP_DEDUP: u8 = 4;
+const P_SNAP_NEXT_UID: u8 = 5;
+
+impl WalPayload {
+    /// Serialize to record bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            WalPayload::Write(req) => {
+                w.u8(P_WRITE);
+                w.bytes(req);
+            }
+            WalPayload::SnapMatrix { id, rows, cols, dtype, layout } => {
+                w.u8(P_SNAP_MATRIX);
+                w.u32(*id);
+                w.u64(*rows);
+                w.u32(*cols);
+                w.u8(match dtype {
+                    Dtype::I64 => 0,
+                    Dtype::F32 => 1,
+                });
+                w.u8(layout.tag());
+            }
+            WalPayload::SnapRows { matrix, rows, cols, values } => {
+                w.u8(P_SNAP_ROWS);
+                w.u32(*matrix);
+                w.slice_varint(rows);
+                w.slice_varint_u32(cols);
+                values.encode(&mut w);
+            }
+            WalPayload::SnapDedup { uids } => {
+                w.u8(P_SNAP_DEDUP);
+                w.slice_varint(uids);
+            }
+            WalPayload::SnapNextUid(v) => {
+                w.u8(P_SNAP_NEXT_UID);
+                w.u64(*v);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Parse from record bytes.
+    pub fn decode(bytes: &[u8]) -> Result<WalPayload> {
+        let mut r = Reader::new(bytes);
+        let payload = match r.u8()? {
+            P_WRITE => WalPayload::Write(r.bytes()?),
+            P_SNAP_MATRIX => WalPayload::SnapMatrix {
+                id: r.u32()?,
+                rows: r.u64()?,
+                cols: r.u32()?,
+                dtype: match r.u8()? {
+                    0 => Dtype::I64,
+                    1 => Dtype::F32,
+                    t => return Err(Error::Decode(format!("bad wal dtype tag {t}"))),
+                },
+                layout: Layout::from_tag(r.u8()?)?,
+            },
+            P_SNAP_ROWS => WalPayload::SnapRows {
+                matrix: r.u32()?,
+                rows: r.slice_varint()?,
+                cols: r.slice_varint_u32()?,
+                values: Data::decode(&mut r)?,
+            },
+            P_SNAP_DEDUP => WalPayload::SnapDedup { uids: r.slice_varint()? },
+            P_SNAP_NEXT_UID => WalPayload::SnapNextUid(r.u64()?),
+            t => return Err(Error::Decode(format!("bad wal payload tag {t}"))),
+        };
+        Ok(payload)
+    }
+}
+
+/// True when `bytes` encode the snapshot terminal marker.
+fn is_terminal_marker(bytes: &[u8]) -> bool {
+    bytes.first() == Some(&P_SNAP_NEXT_UID)
+}
+
+/// WAL counters surfaced through `ShardInfo`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WalStats {
+    /// Records appended (recovered + new).
+    pub records: u64,
+    /// Bytes resident on disk across all segments.
+    pub bytes: u64,
+    /// fsync batches the committer has written (group-commit count).
+    pub commit_batches: u64,
+}
+
+/// A slice of the committed log served to a replication poller.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalSlice {
+    /// The poller's cursor predates the compaction horizon: `records`
+    /// carry the full newest snapshot and the replica must rebuild from
+    /// scratch before streaming on.
+    pub reset: bool,
+    /// Cursor for the next poll (first sequence not included here).
+    pub next: u64,
+    /// Highest committed sequence at read time (lag = `tip + 1 - next`).
+    pub tip: u64,
+    /// `(seq, payload)` records in order.
+    pub records: Vec<RawRecord>,
+}
+
+struct Queue {
+    pending: VecDeque<(u64, Vec<u8>)>,
+    next_seq: u64,
+    shutdown: bool,
+}
+
+struct FileState {
+    active: SegmentWriter,
+    sealed: Vec<(u64, PathBuf)>,
+    snapshot: Option<(u64, PathBuf)>,
+}
+
+struct Inner {
+    shard: u32,
+    dir: PathBuf,
+    opts: WalOptions,
+    queue: Mutex<Queue>,
+    /// Committer waits here for work.
+    work: Condvar,
+    /// `sync` callers wait here for the committed frontier to advance.
+    durable: Condvar,
+    committed: AtomicU64,
+    files: Mutex<FileState>,
+    records: AtomicU64,
+    bytes: AtomicU64,
+    batches: AtomicU64,
+}
+
+/// One shard's write-ahead log. Appends are non-blocking (queued for
+/// the group-commit thread); reads ([`ShardWal::read_from`]) see only
+/// the committed prefix.
+pub struct ShardWal {
+    inner: Arc<Inner>,
+    committer: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ShardWal {
+    /// Open (or create) the WAL at `dir`, recovering whatever a previous
+    /// life left behind: the newest *valid* snapshot (corrupt or torn
+    /// ones are skipped with a warning, mirroring checkpoint loading)
+    /// plus every committed log record after it, in order. Returns the
+    /// ready-to-append WAL and the records to replay.
+    pub fn open(dir: &Path, shard: u32, opts: WalOptions) -> Result<(ShardWal, Vec<RawRecord>)> {
+        std::fs::create_dir_all(dir)?;
+        let mut logs: Vec<(u64, PathBuf)> = Vec::new();
+        let mut snaps: Vec<(u64, PathBuf)> = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            match parse_name(name) {
+                Some((SegmentKind::Log, seq)) => logs.push((seq, entry.path())),
+                Some((SegmentKind::Snapshot, seq)) => snaps.push((seq, entry.path())),
+                None => {}
+            }
+        }
+        logs.sort_by_key(|&(seq, _)| seq);
+        snaps.sort_by_key(|&(seq, _)| std::cmp::Reverse(seq));
+
+        // Newest snapshot whose scan is clean and terminal-marked wins;
+        // older ones are fallbacks, mirroring Checkpoint::load_latest.
+        let mut replay: Vec<RawRecord> = Vec::new();
+        let mut snapshot: Option<(u64, PathBuf)> = None;
+        for (upto, path) in &snaps {
+            match scan(path) {
+                Ok(s)
+                    if s.clean
+                        && s.header.shard == shard
+                        && s.records.last().is_some_and(|(_, p)| is_terminal_marker(p)) =>
+                {
+                    replay = s.records;
+                    snapshot = Some((*upto, path.clone()));
+                    break;
+                }
+                Ok(_) => {
+                    log_warn!(
+                        "wal snapshot {} is torn or foreign; falling back to an older one",
+                        path.display()
+                    );
+                }
+                Err(e) => {
+                    log_warn!(
+                        "wal snapshot {} is unreadable ({e}); falling back to an older one",
+                        path.display()
+                    );
+                }
+            }
+        }
+        let horizon = snapshot.as_ref().map(|&(upto, _)| upto).unwrap_or(0);
+
+        // Log records strictly after the snapshot. Segments are walked
+        // in base order and records must *chain* (each seq exactly one
+        // past the last applied): duplicates are skipped, and a gap —
+        // a torn tail whose lost records were never re-written by a
+        // later life — ends the replay, because applying anything past
+        // missing mutations would corrupt the counts. A previous
+        // recovery leaves its predecessor's torn tail on disk and opens
+        // a fresh segment at the next seq, so the common case chains
+        // straight across segment boundaries.
+        let mut last_seq = horizon;
+        let mut sealed: Vec<(u64, PathBuf)> = Vec::new();
+        let mut disk_bytes: u64 =
+            snapshot.as_ref().map(|(_, p)| file_len(p)).unwrap_or(0);
+        'segments: for (base, path) in &logs {
+            let scanned = match scan(path) {
+                Ok(s) if s.header.shard == shard && s.header.kind == SegmentKind::Log => s,
+                Ok(_) => {
+                    log_warn!(
+                        "wal segment {} belongs to another shard; skipping it",
+                        path.display()
+                    );
+                    continue;
+                }
+                Err(e) => {
+                    log_warn!("wal segment {} is unreadable ({e}); skipping it", path.display());
+                    continue;
+                }
+            };
+            sealed.push((*base, path.clone()));
+            disk_bytes += file_len(path);
+            for (seq, payload) in scanned.records {
+                if seq <= last_seq {
+                    continue; // duplicate coverage (stale pre-compaction file)
+                }
+                if seq != last_seq + 1 {
+                    log_warn!(
+                        "wal shard {shard}: sequence gap {} -> {seq}; replay stops at \
+                         the gap",
+                        last_seq + 1
+                    );
+                    break 'segments;
+                }
+                last_seq = seq;
+                replay.push((seq, payload));
+            }
+        }
+
+        let next_seq = last_seq + 1;
+        // A crash between creating a segment and appending to it can
+        // leave an empty (or unreachable-suspect) file at exactly this
+        // name; it holds nothing replayable, so reclaim the name.
+        let active_path = dir.join(log_name(next_seq));
+        if active_path.exists() {
+            sealed.retain(|(_, p)| p != &active_path);
+            std::fs::remove_file(&active_path)?;
+        }
+        let active = SegmentWriter::create(
+            &active_path,
+            SegmentHeader { kind: SegmentKind::Log, shard, base_seq: next_seq },
+        )?;
+        let inner = Arc::new(Inner {
+            shard,
+            dir: dir.to_path_buf(),
+            opts,
+            queue: Mutex::new(Queue {
+                pending: VecDeque::new(),
+                next_seq,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            durable: Condvar::new(),
+            committed: AtomicU64::new(last_seq),
+            files: Mutex::new(FileState { active, sealed, snapshot }),
+            records: AtomicU64::new(replay.len() as u64),
+            bytes: AtomicU64::new(disk_bytes),
+            batches: AtomicU64::new(0),
+        });
+        let committer = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name(format!("glint-wal-{shard}"))
+                .spawn(move || committer_loop(&inner))
+                .expect("spawn wal committer")
+        };
+        Ok((ShardWal { inner, committer: Mutex::new(Some(committer)) }, replay))
+    }
+
+    /// Enqueue one record for the committer; returns its sequence
+    /// number. Never blocks on disk.
+    pub fn append(&self, payload: &WalPayload) -> u64 {
+        let bytes = payload.encode();
+        let mut q = self.inner.queue.lock().unwrap();
+        let seq = q.next_seq;
+        q.next_seq += 1;
+        q.pending.push_back((seq, bytes));
+        drop(q);
+        self.inner.work.notify_one();
+        seq
+    }
+
+    /// Block until everything appended before this call is fsynced.
+    /// Gives up (with a warning) if the committer stops making progress
+    /// for ~10s — a failing disk must not wedge the shard forever.
+    pub fn sync(&self) {
+        let mut q = self.inner.queue.lock().unwrap();
+        let target = q.next_seq - 1;
+        let mut stalls = 0u32;
+        while self.inner.committed.load(Ordering::Acquire) < target {
+            if q.shutdown {
+                break;
+            }
+            let before = self.inner.committed.load(Ordering::Acquire);
+            let (guard, _) = self
+                .inner
+                .durable
+                .wait_timeout(q, Duration::from_millis(20))
+                .unwrap();
+            q = guard;
+            if self.inner.committed.load(Ordering::Acquire) > before {
+                stalls = 0;
+            } else {
+                stalls += 1;
+                if stalls > 500 {
+                    log_warn!(
+                        "wal shard {} sync stalled at seq {} (want {target}); giving up",
+                        self.inner.shard,
+                        before
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Highest durably committed sequence number (0 = nothing yet).
+    pub fn committed(&self) -> u64 {
+        self.inner.committed.load(Ordering::Acquire)
+    }
+
+    /// Sealed log segments currently behind the active one (the
+    /// compaction trigger input).
+    pub fn sealed_segments(&self) -> usize {
+        self.inner.files.lock().unwrap().sealed.len()
+    }
+
+    /// Counters for `ShardInfo`.
+    pub fn stats(&self) -> WalStats {
+        WalStats {
+            records: self.inner.records.load(Ordering::Relaxed),
+            bytes: self.inner.bytes.load(Ordering::Relaxed),
+            commit_batches: self.inner.batches.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold the full shard state (as `Snap*` payloads, terminal marker
+    /// last) into a snapshot segment at the current committed frontier
+    /// and delete every log segment behind it. Must be called by the
+    /// shard's single writer thread with `payloads` describing the state
+    /// after every appended record — [`ShardWal::sync`] runs first, so
+    /// the snapshot never claims more than the disk holds.
+    pub fn compact(&self, payloads: &[WalPayload]) -> Result<()> {
+        debug_assert!(payloads.last().is_some_and(|p| matches!(p, WalPayload::SnapNextUid(_))));
+        self.sync();
+        let upto = self.inner.committed.load(Ordering::Acquire);
+        let encoded: Vec<Vec<u8>> = payloads.iter().map(|p| p.encode()).collect();
+        let mut files = self.inner.files.lock().unwrap();
+        let snap_path = write_snapshot(&self.inner.dir, self.inner.shard, upto, &encoded)?;
+        // Everything logged so far is <= upto (we are the writer thread
+        // and just synced), so all log segments — sealed and active —
+        // are superseded by the snapshot.
+        for (_, path) in files.sealed.drain(..) {
+            let _ = std::fs::remove_file(&path);
+        }
+        let old_active = files.active.path().to_path_buf();
+        let next_base = upto + 1;
+        let new_path = self.inner.dir.join(log_name(next_base));
+        // The old active file may sit at exactly `new_path` (compaction
+        // with zero new records), so remove before re-creating.
+        let _ = std::fs::remove_file(&old_active);
+        if new_path != old_active {
+            let _ = std::fs::remove_file(&new_path);
+        }
+        files.active = SegmentWriter::create(
+            &new_path,
+            SegmentHeader { kind: SegmentKind::Log, shard: self.inner.shard, base_seq: next_base },
+        )?;
+        if let Some((_, old_snap)) = files.snapshot.replace((upto, snap_path.clone())) {
+            if old_snap != snap_path {
+                let _ = std::fs::remove_file(&old_snap);
+            }
+        }
+        self.inner
+            .bytes
+            .store(file_len(&snap_path) + files.active.bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Read committed records starting at sequence `from` (at most `max`
+    /// log records). A cursor behind the compaction horizon gets a
+    /// `reset` slice carrying the entire newest snapshot instead; the
+    /// caller rebuilds from it and polls again from `next`.
+    pub fn read_from(&self, from: u64, max: usize) -> Result<WalSlice> {
+        let tip = self.inner.committed.load(Ordering::Acquire);
+        let files = self.inner.files.lock().unwrap();
+        if let Some((upto, snap_path)) = &files.snapshot {
+            if from <= *upto {
+                let scanned = scan(snap_path)?;
+                return Ok(WalSlice {
+                    reset: true,
+                    next: upto + 1,
+                    tip: tip.max(*upto),
+                    records: scanned.records,
+                });
+            }
+        }
+        let mut records = Vec::new();
+        let mut next = from;
+        let active_path = files.active.path().to_path_buf();
+        let active_base = active_path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .and_then(parse_name)
+            .map(|(_, base)| base)
+            .unwrap_or(0);
+        let mut segments: Vec<(u64, PathBuf)> = files
+            .sealed
+            .iter()
+            .map(|(base, path)| (*base, path.clone()))
+            .collect();
+        segments.push((active_base, active_path));
+        drop(files);
+        for (i, (_, path)) in segments.iter().enumerate() {
+            // Skip segments that end before the cursor: a segment's
+            // records all precede the next segment's base.
+            if let Some(&(next_base, _)) = segments.get(i + 1) {
+                if next_base <= from {
+                    continue;
+                }
+            }
+            let scanned = match scan(path) {
+                Ok(s) => s,
+                // The active segment may be mid-write; a torn tail scan
+                // already tolerates that, but a transient open error
+                // just ends this slice early.
+                Err(_) => break,
+            };
+            for (seq, payload) in scanned.records {
+                if seq >= from && seq <= tip && seq >= next {
+                    records.push((seq, payload));
+                    next = seq + 1;
+                    if records.len() >= max {
+                        return Ok(WalSlice { reset: false, next, tip, records });
+                    }
+                }
+            }
+        }
+        Ok(WalSlice { reset: false, next, tip, records })
+    }
+}
+
+impl Drop for ShardWal {
+    fn drop(&mut self) {
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.inner.work.notify_all();
+        if let Some(h) = self.committer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn file_len(path: &Path) -> u64 {
+    std::fs::metadata(path).map(|m| m.len()).unwrap_or(0)
+}
+
+/// The group-commit loop: drain whatever accumulated, write it as one
+/// batch, fsync once, advance the committed frontier, repeat. A lone
+/// record waits at most `commit_window` for company.
+fn committer_loop(inner: &Inner) {
+    loop {
+        let batch: Vec<(u64, Vec<u8>)> = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if !q.pending.is_empty() {
+                    break q.pending.drain(..).collect();
+                }
+                if q.shutdown {
+                    return;
+                }
+                let (guard, _) =
+                    inner.work.wait_timeout(q, inner.opts.commit_window).unwrap();
+                q = guard;
+            }
+        };
+        let mut files = inner.files.lock().unwrap();
+        let mut written_through = None;
+        for (seq, payload) in &batch {
+            if files.active.bytes >= inner.opts.segment_bytes {
+                if let Err(e) = rotate(inner, &mut files, *seq) {
+                    log_warn!("wal shard {} failed to rotate segments: {e}", inner.shard);
+                    break;
+                }
+            }
+            if let Err(e) = files.active.append(*seq, payload) {
+                log_warn!(
+                    "wal shard {} failed to append record {seq}: {e}; dropping the batch tail",
+                    inner.shard
+                );
+                break;
+            }
+            inner.records.fetch_add(1, Ordering::Relaxed);
+            inner
+                .bytes
+                .fetch_add((RECORD_OVERHEAD + payload.len()) as u64, Ordering::Relaxed);
+            written_through = Some(*seq);
+        }
+        let synced = files.active.sync();
+        drop(files);
+        if let Err(e) = synced {
+            log_warn!("wal shard {} fsync failed: {e}", inner.shard);
+        }
+        if let Some(seq) = written_through {
+            inner.committed.store(seq, Ordering::Release);
+            inner.batches.fetch_add(1, Ordering::Relaxed);
+        }
+        let _q = inner.queue.lock().unwrap();
+        inner.durable.notify_all();
+    }
+}
+
+/// Seal the active segment and open a fresh one whose base is `seq`.
+fn rotate(inner: &Inner, files: &mut FileState, seq: u64) -> Result<()> {
+    files.active.sync()?;
+    let old_path = files.active.path().to_path_buf();
+    let old_base = match parse_name(
+        old_path.file_name().and_then(|n| n.to_str()).unwrap_or(""),
+    ) {
+        Some((_, base)) => base,
+        None => 0,
+    };
+    let new_path = inner.dir.join(log_name(seq));
+    let _ = std::fs::remove_file(&new_path);
+    files.active = SegmentWriter::create(
+        &new_path,
+        SegmentHeader { kind: SegmentKind::Log, shard: inner.shard, base_seq: seq },
+    )?;
+    files.sealed.push((old_base, old_path));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("glint-wal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn write_payload(n: u64) -> WalPayload {
+        WalPayload::Write(vec![n as u8; 16])
+    }
+
+    fn snapshot_payloads(next_uid: u64) -> Vec<WalPayload> {
+        vec![
+            WalPayload::SnapMatrix {
+                id: 1,
+                rows: 10,
+                cols: 4,
+                dtype: Dtype::I64,
+                layout: Layout::Dense,
+            },
+            WalPayload::SnapRows {
+                matrix: 1,
+                rows: vec![0, 3],
+                cols: vec![1, 2],
+                values: Data::I64(vec![5, -2]),
+            },
+            WalPayload::SnapDedup { uids: vec![9, 11] },
+            WalPayload::SnapNextUid(next_uid),
+        ]
+    }
+
+    #[test]
+    fn payload_roundtrip() {
+        for p in [
+            write_payload(7),
+            WalPayload::SnapMatrix {
+                id: 3,
+                rows: 1 << 33,
+                cols: 1000,
+                dtype: Dtype::F32,
+                layout: Layout::Sparse,
+            },
+            WalPayload::SnapRows {
+                matrix: 3,
+                rows: vec![1, 2, 3],
+                cols: vec![0, 5, 9],
+                values: Data::F32(vec![0.5, -1.5, 2.0]),
+            },
+            WalPayload::SnapDedup { uids: vec![1, u64::MAX] },
+            WalPayload::SnapNextUid(42),
+        ] {
+            assert_eq!(WalPayload::decode(&p.encode()).unwrap(), p);
+        }
+        assert!(WalPayload::decode(&[99]).is_err());
+        assert!(WalPayload::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn append_sync_recover() {
+        let dir = tmp_dir("basic");
+        {
+            let (wal, replay) = ShardWal::open(&dir, 0, WalOptions::default()).unwrap();
+            assert!(replay.is_empty());
+            for n in 1..=20u64 {
+                assert_eq!(wal.append(&write_payload(n)), n);
+            }
+            wal.sync();
+            assert_eq!(wal.committed(), 20);
+            let stats = wal.stats();
+            assert_eq!(stats.records, 20);
+            assert!(stats.commit_batches >= 1);
+            assert!(stats.commit_batches <= 20);
+        }
+        let (wal, replay) = ShardWal::open(&dir, 0, WalOptions::default()).unwrap();
+        assert_eq!(replay.len(), 20);
+        for (i, (seq, payload)) in replay.iter().enumerate() {
+            assert_eq!(*seq, i as u64 + 1);
+            assert_eq!(WalPayload::decode(payload).unwrap(), write_payload(*seq));
+        }
+        // Appends continue after the recovered frontier.
+        assert_eq!(wal.append(&write_payload(21)), 21);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segments_rotate_and_recover_in_order() {
+        let dir = tmp_dir("rotate");
+        let opts = WalOptions { segment_bytes: 256, ..WalOptions::default() };
+        {
+            let (wal, _) = ShardWal::open(&dir, 1, opts.clone()).unwrap();
+            for n in 1..=64u64 {
+                wal.append(&write_payload(n));
+            }
+            wal.sync();
+            assert!(wal.sealed_segments() >= 2, "expected rotation");
+        }
+        let (_wal, replay) = ShardWal::open(&dir, 1, opts).unwrap();
+        assert_eq!(replay.len(), 64);
+        assert!(replay.windows(2).all(|w| w[0].0 + 1 == w[1].0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_replaces_logs_with_snapshot() {
+        let dir = tmp_dir("compact");
+        let opts = WalOptions { segment_bytes: 256, ..WalOptions::default() };
+        {
+            let (wal, _) = ShardWal::open(&dir, 0, opts.clone()).unwrap();
+            for n in 1..=50u64 {
+                wal.append(&write_payload(n));
+            }
+            wal.compact(&snapshot_payloads(1234)).unwrap();
+            assert_eq!(wal.sealed_segments(), 0);
+            // Fresh appends land after the snapshot frontier.
+            assert_eq!(wal.append(&write_payload(51)), 51);
+            wal.sync();
+        }
+        let (_wal, replay) = ShardWal::open(&dir, 0, opts).unwrap();
+        // 4 snapshot records (all at seq 50) + 1 log record after.
+        assert_eq!(replay.len(), 5);
+        assert!(replay[..4].iter().all(|(seq, _)| *seq == 50));
+        assert_eq!(replay[4].0, 51);
+        assert_eq!(
+            WalPayload::decode(&replay[3].1).unwrap(),
+            WalPayload::SnapNextUid(1234)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_snapshot_falls_back_to_older_one() {
+        let dir = tmp_dir("snapfall");
+        let opts = WalOptions::default();
+        {
+            let (wal, _) = ShardWal::open(&dir, 0, opts.clone()).unwrap();
+            for n in 1..=5u64 {
+                wal.append(&write_payload(n));
+            }
+            wal.compact(&snapshot_payloads(100)).unwrap();
+            for n in 6..=9u64 {
+                wal.append(&write_payload(n));
+            }
+            wal.compact(&snapshot_payloads(200)).unwrap();
+        }
+        // Corrupt the newest snapshot's tail: recovery must fall back to
+        // the older one... which compaction deleted, so recreate a stale
+        // copy first to exercise the fallback order.
+        let newest = dir.join(segment::snap_name(9));
+        assert!(newest.exists());
+        let older = dir.join(segment::snap_name(5));
+        let encoded: Vec<Vec<u8>> =
+            snapshot_payloads(100).iter().map(|p| p.encode()).collect();
+        write_snapshot(&dir, 0, 5, &encoded).unwrap();
+        assert!(older.exists());
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let n = bytes.len();
+        bytes.truncate(n - 6);
+        std::fs::write(&newest, &bytes).unwrap();
+
+        let (_wal, replay) = ShardWal::open(&dir, 0, opts).unwrap();
+        // Fallback snapshot at seq 5; no log records survive past it
+        // (compaction deleted them), so replay is exactly the snapshot.
+        assert_eq!(replay.len(), 4);
+        assert!(replay.iter().all(|(seq, _)| *seq == 5));
+        assert_eq!(
+            WalPayload::decode(&replay[3].1).unwrap(),
+            WalPayload::SnapNextUid(100)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_from_streams_committed_prefix() {
+        let dir = tmp_dir("readfrom");
+        let (wal, _) = ShardWal::open(&dir, 0, WalOptions::default()).unwrap();
+        for n in 1..=10u64 {
+            wal.append(&write_payload(n));
+        }
+        wal.sync();
+        let slice = wal.read_from(1, 4).unwrap();
+        assert!(!slice.reset);
+        assert_eq!(slice.tip, 10);
+        assert_eq!(slice.next, 5);
+        assert_eq!(slice.records.len(), 4);
+        assert_eq!(slice.records[0].0, 1);
+        let slice = wal.read_from(slice.next, 100).unwrap();
+        assert_eq!(slice.records.len(), 6);
+        assert_eq!(slice.next, 11);
+        // Caught up: empty slice.
+        let slice = wal.read_from(11, 100).unwrap();
+        assert!(slice.records.is_empty());
+        assert_eq!(slice.next, 11);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_from_behind_horizon_resets_with_snapshot() {
+        let dir = tmp_dir("reset");
+        let (wal, _) = ShardWal::open(&dir, 0, WalOptions::default()).unwrap();
+        for n in 1..=8u64 {
+            wal.append(&write_payload(n));
+        }
+        wal.compact(&snapshot_payloads(99)).unwrap();
+        for n in 9..=12u64 {
+            wal.append(&write_payload(n));
+        }
+        wal.sync();
+        // A poller at seq 3 is behind the horizon (snapshot upto = 8).
+        let slice = wal.read_from(3, 100).unwrap();
+        assert!(slice.reset);
+        assert_eq!(slice.next, 9);
+        assert_eq!(slice.records.len(), 4); // the snapshot payloads
+        assert!(slice.records.iter().all(|(seq, _)| *seq == 8));
+        // Following the reset cursor streams the post-snapshot log.
+        let slice = wal.read_from(slice.next, 100).unwrap();
+        assert!(!slice.reset);
+        assert_eq!(slice.records.len(), 4);
+        assert_eq!(slice.records[0].0, 9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn uncommitted_records_are_not_served() {
+        // read_from sees only the committed prefix: records queued but
+        // not yet fsynced (committer starved by a zero-length window
+        // trick is racy, so just check tip gating directly).
+        let dir = tmp_dir("gate");
+        let (wal, _) = ShardWal::open(&dir, 0, WalOptions::default()).unwrap();
+        for n in 1..=5u64 {
+            wal.append(&write_payload(n));
+        }
+        wal.sync();
+        let tip = wal.committed();
+        let slice = wal.read_from(1, 100).unwrap();
+        assert!(slice.records.iter().all(|(seq, _)| *seq <= tip));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,411 @@
+//! On-disk segment format of the per-shard write-ahead log.
+//!
+//! A WAL directory holds two kinds of segment files:
+//!
+//! - `log-<base_seq>.wal` — an append-only run of records whose
+//!   sequence numbers start at `base_seq`;
+//! - `snap-<upto_seq>.wal` — a compactor-written snapshot of the whole
+//!   shard state as of sequence `upto_seq` (every record inside carries
+//!   that sequence number).
+//!
+//! Every file opens with a fixed header and then carries length-prefixed,
+//! checksummed records:
+//!
+//! ```text
+//! header:  magic u32 | version u8 | kind u8 | shard u32 | base_seq u64
+//! record:  len u32 | fnv1a64(seq ++ payload) u64 | seq u64 | payload
+//! ```
+//!
+//! Reads are **torn-tail tolerant**, mirroring
+//! [`crate::lda::checkpoint::Checkpoint::load_latest`]'s
+//! skip-to-newest-valid semantics: a short or checksum-failing record
+//! ends the scan at the last good record instead of erroring — exactly
+//! what a `kill -9` mid-append leaves behind. Snapshot files are written
+//! to a temp name and atomically renamed, and recovery additionally
+//! requires their terminal marker record, so a torn snapshot is skipped
+//! in favor of an older valid one.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::log_warn;
+use crate::util::error::{Error, Result};
+
+/// `b"GLWA"` little-endian: glint WAL.
+pub const MAGIC: u32 = 0x4157_4c47;
+/// Format version.
+pub const VERSION: u8 = 1;
+
+/// Segment kind tag in the file header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentKind {
+    /// Append-only run of write records.
+    Log,
+    /// Snapshot-of-state written by the compactor.
+    Snapshot,
+}
+
+impl SegmentKind {
+    fn tag(self) -> u8 {
+        match self {
+            SegmentKind::Log => 0,
+            SegmentKind::Snapshot => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<SegmentKind> {
+        match t {
+            0 => Ok(SegmentKind::Log),
+            1 => Ok(SegmentKind::Snapshot),
+            _ => Err(Error::Decode(format!("bad wal segment kind {t}"))),
+        }
+    }
+}
+
+/// Parsed segment header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentHeader {
+    /// Log or snapshot.
+    pub kind: SegmentKind,
+    /// Shard this segment belongs to (cross-wiring guard).
+    pub shard: u32,
+    /// First sequence number (log) or snapshot-as-of sequence (snap).
+    pub base_seq: u64,
+}
+
+/// Header length in bytes.
+pub const HEADER_LEN: usize = 4 + 1 + 1 + 4 + 8;
+/// Per-record framing overhead in bytes (len + checksum + seq).
+pub const RECORD_OVERHEAD: usize = 4 + 8 + 8;
+
+/// One decoded record: `(seq, payload)`.
+pub type RawRecord = (u64, Vec<u8>);
+
+/// 64-bit FNV-1a over the record's seq (LE bytes) then payload.
+pub fn checksum(seq: u64, payload: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for b in seq.to_le_bytes() {
+        eat(b);
+    }
+    for &b in payload {
+        eat(b);
+    }
+    h
+}
+
+/// File name of a log segment whose first record is `base_seq`.
+pub fn log_name(base_seq: u64) -> String {
+    format!("log-{base_seq:020}.wal")
+}
+
+/// File name of a snapshot as of `upto_seq`.
+pub fn snap_name(upto_seq: u64) -> String {
+    format!("snap-{upto_seq:020}.wal")
+}
+
+/// Parse a segment file name into `(kind, seq)`; `None` for foreign
+/// files (temp files, editor droppings) so directory scans skip them.
+pub fn parse_name(name: &str) -> Option<(SegmentKind, u64)> {
+    let (kind, rest) = if let Some(r) = name.strip_prefix("log-") {
+        (SegmentKind::Log, r)
+    } else if let Some(r) = name.strip_prefix("snap-") {
+        (SegmentKind::Snapshot, r)
+    } else {
+        return None;
+    };
+    let digits = rest.strip_suffix(".wal")?;
+    if digits.len() != 20 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok().map(|seq| (kind, seq))
+}
+
+fn encode_header(h: &SegmentHeader) -> [u8; HEADER_LEN] {
+    let mut buf = [0u8; HEADER_LEN];
+    buf[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    buf[4] = VERSION;
+    buf[5] = h.kind.tag();
+    buf[6..10].copy_from_slice(&h.shard.to_le_bytes());
+    buf[10..18].copy_from_slice(&h.base_seq.to_le_bytes());
+    buf
+}
+
+fn decode_header(buf: &[u8]) -> Result<SegmentHeader> {
+    if buf.len() < HEADER_LEN {
+        return Err(Error::Decode(format!("wal header truncated at {} bytes", buf.len())));
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(Error::Decode(format!("bad wal magic {magic:#x}")));
+    }
+    if buf[4] != VERSION {
+        return Err(Error::Decode(format!("unsupported wal version {}", buf[4])));
+    }
+    Ok(SegmentHeader {
+        kind: SegmentKind::from_tag(buf[5])?,
+        shard: u32::from_le_bytes(buf[6..10].try_into().unwrap()),
+        base_seq: u64::from_le_bytes(buf[10..18].try_into().unwrap()),
+    })
+}
+
+/// Append-side handle to one open segment file.
+pub struct SegmentWriter {
+    path: PathBuf,
+    file: BufWriter<File>,
+    /// Bytes written so far, header included (drives rotation).
+    pub bytes: u64,
+    /// Records written.
+    pub records: u64,
+}
+
+impl SegmentWriter {
+    /// Create a fresh segment at `path` and write its header.
+    pub fn create(path: &Path, header: SegmentHeader) -> Result<SegmentWriter> {
+        let file = OpenOptions::new().write(true).create_new(true).open(path)?;
+        let mut w = SegmentWriter {
+            path: path.to_path_buf(),
+            file: BufWriter::new(file),
+            bytes: 0,
+            records: 0,
+        };
+        w.file.write_all(&encode_header(&header))?;
+        w.bytes += HEADER_LEN as u64;
+        Ok(w)
+    }
+
+    /// Append one framed record (buffered; durable only after
+    /// [`SegmentWriter::sync`]).
+    pub fn append(&mut self, seq: u64, payload: &[u8]) -> Result<()> {
+        self.file.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.file.write_all(&checksum(seq, payload).to_le_bytes())?;
+        self.file.write_all(&seq.to_le_bytes())?;
+        self.file.write_all(payload)?;
+        self.bytes += (RECORD_OVERHEAD + payload.len()) as u64;
+        self.records += 1;
+        Ok(())
+    }
+
+    /// Flush buffers and fsync to disk (the group-commit point).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.flush()?;
+        self.file.get_ref().sync_data()?;
+        Ok(())
+    }
+
+    /// The segment's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// A fully scanned segment: header, records up to the first torn or
+/// corrupt frame, and whether the scan reached a clean end-of-file.
+pub struct ScannedSegment {
+    /// Parsed header.
+    pub header: SegmentHeader,
+    /// Records in file order, ending at the last valid frame.
+    pub records: Vec<RawRecord>,
+    /// False when the scan stopped at a torn/corrupt frame before EOF.
+    pub clean: bool,
+}
+
+/// Read a segment, tolerating a torn tail: the scan stops at the first
+/// short or checksum-failing record and reports everything before it.
+/// Only a bad *header* is a hard error (the file is not a WAL segment).
+pub fn scan(path: &Path) -> Result<ScannedSegment> {
+    let mut buf = Vec::new();
+    File::open(path)?.read_to_end(&mut buf)?;
+    let header = decode_header(&buf)?;
+    let mut records = Vec::new();
+    let mut pos = HEADER_LEN;
+    let mut clean = true;
+    while pos < buf.len() {
+        if pos + RECORD_OVERHEAD > buf.len() {
+            clean = false;
+            break;
+        }
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let want = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().unwrap());
+        let seq = u64::from_le_bytes(buf[pos + 12..pos + 20].try_into().unwrap());
+        let start = pos + RECORD_OVERHEAD;
+        let Some(end) = start.checked_add(len).filter(|&e| e <= buf.len()) else {
+            clean = false;
+            break;
+        };
+        let payload = &buf[start..end];
+        if checksum(seq, payload) != want {
+            clean = false;
+            break;
+        }
+        records.push((seq, payload.to_vec()));
+        pos = end;
+    }
+    if !clean {
+        log_warn!(
+            "wal segment {} has a torn tail after {} record(s); replaying the valid prefix",
+            path.display(),
+            records.len()
+        );
+    }
+    Ok(ScannedSegment { header, records, clean })
+}
+
+/// Write a complete snapshot segment atomically: records go to a temp
+/// file which is fsynced and renamed into place, so a crash mid-write
+/// never leaves a half-snapshot under the real name.
+pub fn write_snapshot(
+    dir: &Path,
+    shard: u32,
+    upto_seq: u64,
+    payloads: &[Vec<u8>],
+) -> Result<PathBuf> {
+    let final_path = dir.join(snap_name(upto_seq));
+    let tmp_path = dir.join(format!(".tmp-{}", snap_name(upto_seq)));
+    let _ = std::fs::remove_file(&tmp_path);
+    {
+        let mut w = SegmentWriter::create(
+            &tmp_path,
+            SegmentHeader { kind: SegmentKind::Snapshot, shard, base_seq: upto_seq },
+        )?;
+        for p in payloads {
+            w.append(upto_seq, p)?;
+        }
+        w.sync()?;
+    }
+    std::fs::rename(&tmp_path, &final_path)?;
+    Ok(final_path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("glint-wal-seg-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_records() {
+        let dir = tmp_dir("roundtrip");
+        let path = dir.join(log_name(1));
+        let header = SegmentHeader { kind: SegmentKind::Log, shard: 3, base_seq: 1 };
+        let mut w = SegmentWriter::create(&path, header).unwrap();
+        for seq in 1..=5u64 {
+            w.append(seq, &vec![seq as u8; seq as usize * 10]).unwrap();
+        }
+        w.sync().unwrap();
+        let scanned = scan(&path).unwrap();
+        assert_eq!(scanned.header, header);
+        assert!(scanned.clean);
+        assert_eq!(scanned.records.len(), 5);
+        for (i, (seq, payload)) in scanned.records.iter().enumerate() {
+            assert_eq!(*seq, i as u64 + 1);
+            assert_eq!(payload.len(), (i + 1) * 10);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_stops_at_last_valid_record() {
+        let dir = tmp_dir("torn");
+        let path = dir.join(log_name(1));
+        let mut w = SegmentWriter::create(
+            &path,
+            SegmentHeader { kind: SegmentKind::Log, shard: 0, base_seq: 1 },
+        )
+        .unwrap();
+        w.append(1, b"first").unwrap();
+        w.append(2, b"second").unwrap();
+        w.sync().unwrap();
+        // Simulate a kill -9 mid-append: a frame whose payload is cut off.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&100u32.to_le_bytes()).unwrap();
+            f.write_all(&0u64.to_le_bytes()).unwrap();
+            f.write_all(&3u64.to_le_bytes()).unwrap();
+            f.write_all(b"only-part-of-the-payload").unwrap();
+        }
+        let scanned = scan(&path).unwrap();
+        assert!(!scanned.clean);
+        assert_eq!(scanned.records.len(), 2);
+        assert_eq!(scanned.records[1], (2, b"second".to_vec()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_record_stops_scan() {
+        let dir = tmp_dir("corrupt");
+        let path = dir.join(log_name(7));
+        let mut w = SegmentWriter::create(
+            &path,
+            SegmentHeader { kind: SegmentKind::Log, shard: 0, base_seq: 7 },
+        )
+        .unwrap();
+        w.append(7, b"good").unwrap();
+        w.append(8, b"flipped").unwrap();
+        w.sync().unwrap();
+        // Flip one payload byte of the second record.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let scanned = scan(&path).unwrap();
+        assert!(!scanned.clean);
+        assert_eq!(scanned.records, vec![(7, b"good".to_vec())]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_header_is_a_hard_error() {
+        let dir = tmp_dir("header");
+        let path = dir.join(log_name(1));
+        std::fs::write(&path, b"not a wal segment at all").unwrap();
+        assert!(scan(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn names_roundtrip_and_sort() {
+        assert_eq!(parse_name(&log_name(42)), Some((SegmentKind::Log, 42)));
+        assert_eq!(parse_name(&snap_name(7)), Some((SegmentKind::Snapshot, 7)));
+        assert_eq!(parse_name(".tmp-snap-00000000000000000007.wal"), None);
+        assert_eq!(parse_name("log-abc.wal"), None);
+        assert_eq!(parse_name("checkpoint-3.bin"), None);
+        // Zero-padded names sort lexicographically in seq order.
+        assert!(log_name(9) < log_name(10));
+    }
+
+    #[test]
+    fn snapshot_written_atomically() {
+        let dir = tmp_dir("snap");
+        let payloads = vec![b"state-a".to_vec(), b"state-b".to_vec()];
+        let path = write_snapshot(&dir, 2, 99, &payloads).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), snap_name(99));
+        let scanned = scan(&path).unwrap();
+        assert!(scanned.clean);
+        assert_eq!(scanned.header.kind, SegmentKind::Snapshot);
+        assert_eq!(scanned.header.base_seq, 99);
+        assert_eq!(
+            scanned.records,
+            vec![(99, b"state-a".to_vec()), (99, b"state-b".to_vec())]
+        );
+        // No temp file left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().starts_with(".tmp-")
+            })
+            .collect();
+        assert!(leftovers.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,186 @@
+//! Replication acceptance: a 2-shard deployment with one backup
+//! replica per shard over real TCP. A primary dies mid-stream; the
+//! client's route fails over to the backup, the backup is promoted,
+//! and the stream continues. The promoted replica must hold exactly
+//! the counts a no-fault run would have produced — every push uid
+//! applied exactly once, including uids redelivered across the
+//! failover — because the backup applied the primary's committed
+//! WAL records (counts *and* dedup window) before the crash.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use glint_lda::net::tcp::TcpTransport;
+use glint_lda::ps::client::PsClient;
+use glint_lda::ps::config::{PsConfig, TransportMode};
+use glint_lda::ps::messages::{Data, Layout, Request, Response};
+use glint_lda::ps::server::{TcpShardServer, ROLE_BACKUP, ROLE_PROMOTED};
+
+const ROWS: u64 = 16; // global rows; 8 local per shard under cyclic
+const COLS: u32 = 4;
+const LOCAL: u64 = 4; // local rows the test actually touches
+
+fn tmp(tag: &str) -> PathBuf {
+    let name = format!("glint-durability-{tag}-{}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A client whose routes cover `addrs` as primaries (with optional
+/// per-shard backups behind them).
+fn client(addrs: &[SocketAddr], backups: &[SocketAddr]) -> PsClient {
+    let cfg = PsConfig {
+        shards: addrs.len(),
+        transport: TransportMode::Connect(addrs.iter().map(|a| a.to_string()).collect()),
+        backups: backups.iter().map(|a| a.to_string()).collect(),
+        ..PsConfig::default()
+    };
+    let transport = TcpTransport::connect(addrs);
+    PsClient::connect(&transport, cfg)
+}
+
+fn push(c: &PsClient, shard: usize, id: u32, uid: u64, row: u64, col: u32, val: i64) -> bool {
+    match c
+        .request_retry(
+            shard,
+            &Request::PushCoords {
+                id,
+                uid,
+                rows: vec![row],
+                cols: vec![col],
+                values: Data::I64(vec![val]),
+            },
+        )
+        .expect("push")
+    {
+        Response::PushAck { fresh } => fresh,
+        other => panic!("unexpected push reply {other:?}"),
+    }
+}
+
+/// Pull the test's local rows from one shard, row-major.
+fn pull(c: &PsClient, shard: usize, id: u32) -> Vec<i64> {
+    let req = Request::PullRows { id, rows: (0..LOCAL).collect() };
+    match c.request_retry(shard, &req).expect("pull") {
+        Response::Rows(Data::I64(v)) => v,
+        other => panic!("unexpected pull reply {other:?}"),
+    }
+}
+
+/// Shard-tagged push uid (the convention `GenUid` uses).
+fn uid(shard: usize, n: u64) -> u64 {
+    ((shard as u64) << 48) | n
+}
+
+#[test]
+fn primary_death_fails_over_and_converges_exactly_once() {
+    let wal_dir = tmp("wal");
+
+    // Two primary processes, one WAL-backed shard each.
+    let pcfg = PsConfig { wal_dir: Some(wal_dir.clone()), ..PsConfig::with_shards(2) };
+    let want: Vec<SocketAddr> = vec!["127.0.0.1:0".parse().unwrap()];
+    let primary0 = TcpShardServer::bind(pcfg.clone(), 0, &want).expect("bind primary 0");
+    let primary1 = TcpShardServer::bind(pcfg.clone(), 1, &want).expect("bind primary 1");
+    let p_addrs = vec![primary0.addrs()[0], primary1.addrs()[0]];
+
+    // One backup process hosting a replica of each shard, tailing the
+    // primaries' logs.
+    let bcfg = PsConfig {
+        backup_of: Some(p_addrs.iter().map(|a| a.to_string()).collect()),
+        ..PsConfig::with_shards(2)
+    };
+    let b_want: Vec<SocketAddr> =
+        vec!["127.0.0.1:0".parse().unwrap(), "127.0.0.1:0".parse().unwrap()];
+    let backup = TcpShardServer::bind(bcfg, 0, &b_want).expect("bind backups");
+    let b_addrs = backup.addrs().to_vec();
+
+    let c = client(&p_addrs, &b_addrs);
+    let id = c
+        .matrix_with_layout::<i64>(ROWS, COLS, Layout::Dense)
+        .expect("create matrix")
+        .id();
+
+    // Phase A: a deterministic push stream to both shards. `grid` is
+    // what a no-fault run produces — the parity baseline.
+    let mut grid = vec![vec![0i64; (LOCAL * COLS as u64) as usize]; 2];
+    for s in 0..2 {
+        for n in 1..=30u64 {
+            let (row, col, val) = (n % LOCAL, (n % COLS as u64) as u32, (n % 5 + 1) as i64);
+            assert!(push(&c, s, id, uid(s, n), row, col, val), "phase A uid must be fresh");
+            grid[s][(row * COLS as u64 + col as u64) as usize] += val;
+        }
+    }
+
+    // Let both replicas drain the primaries' committed logs, so the
+    // upcoming crash loses nothing. (A lagging replica is healed by the
+    // coordinator's epoch roll in training; this test isolates the
+    // replication path itself.)
+    let admin = client(&b_addrs, &[]);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let caught_up = (0..2).all(|s| {
+            let info = admin.shard_info(s).expect("backup info");
+            info.role == ROLE_BACKUP && info.repl_applied > 0 && info.repl_lag == 0
+        });
+        if caught_up {
+            break;
+        }
+        assert!(Instant::now() < deadline, "replicas never caught up");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // Kill primary 0 (the moral equivalent of kill -9: the process is
+    // gone; only its committed WAL — already replicated — survives).
+    let killer = client(&p_addrs[..1], &[]);
+    killer.shutdown_servers().expect("stop primary 0");
+    primary0.join();
+
+    // The route discovers the death and fails over to the un-promoted
+    // backup, which still answers introspection.
+    let info = c.shard_info(0).expect("failover shard info");
+    assert_eq!(info.role, ROLE_BACKUP, "route must fail over to the backup");
+    c.promote_backup(0).expect("promote");
+    assert_eq!(c.shard_info(0).expect("promoted info").role, ROLE_PROMOTED);
+
+    // Redeliver every phase-A uid for the failed shard, as a client
+    // retrying in-flight pushes after failover would. The replica's
+    // replicated dedup window must reject each one.
+    for n in 1..=30u64 {
+        let (row, col, val) = (n % LOCAL, (n % COLS as u64) as u32, (n % 5 + 1) as i64);
+        assert!(
+            !push(&c, 0, id, uid(0, n), row, col, val),
+            "uid {n} redelivered across failover must dedup"
+        );
+    }
+
+    // The stream continues against the promoted replica.
+    for n in 31..=40u64 {
+        let (row, col, val) = (n % LOCAL, (n % COLS as u64) as u32, (n % 5 + 1) as i64);
+        assert!(push(&c, 0, id, uid(0, n), row, col, val), "post-promotion uid must be fresh");
+        grid[0][(row * COLS as u64 + col as u64) as usize] += val;
+    }
+    for n in 31..=40u64 {
+        let (row, col, val) = (n % LOCAL, (n % COLS as u64) as u32, (n % 5 + 1) as i64);
+        assert!(push(&c, 1, id, uid(1, n), row, col, val));
+        grid[1][(row * COLS as u64 + col as u64) as usize] += val;
+    }
+
+    // Parity: both shards hold exactly the no-fault counts.
+    assert_eq!(pull(&c, 0, id), grid[0], "promoted replica diverged from no-fault counts");
+    assert_eq!(pull(&c, 1, id), grid[1], "surviving primary diverged");
+
+    // The surviving primary logged the whole stream.
+    let info1 = c.shard_info(1).expect("primary 1 info");
+    assert!(info1.wal_records > 0 && info1.wal_commit_batches > 0);
+
+    // Teardown: the main client reaches the promoted backup 0 and
+    // primary 1; backup 1 needs a direct word.
+    c.shutdown_servers().expect("stop survivors");
+    let killer = client(&b_addrs[1..], &[]);
+    killer.shutdown_servers().expect("stop backup 1");
+    primary1.join();
+    backup.join();
+    let _ = std::fs::remove_dir_all(&wal_dir);
+}
