@@ -1,0 +1,206 @@
+//! In-tree concurrency/safety lint, run as a CI gate (`cargo run
+//! --release --bin glint-lint`).
+//!
+//! Four rules, all plain-text scans over `src/` (no syntax trees — the
+//! point is a zero-dependency gate that fails loudly, not a compiler):
+//!
+//! - **R1 `unsafe` needs `// SAFETY:`** — every `unsafe` block or fn in
+//!   the crate must have a `// SAFETY:` comment within the five lines
+//!   above it, stating the invariant that makes it sound.
+//! - **R2 `Ordering::Relaxed` allowlist** — `Relaxed` atomics are only
+//!   permitted in files audited for it (statistics counters and flags
+//!   whose readers tolerate staleness). Everything else must use an
+//!   ordering that says what it synchronizes, or take a lock.
+//! - **R3 no stray panics in `ps/`, `net/`, `wal/`** — the server tiers
+//!   must not `.unwrap()`/`.expect(` outside test code, except the
+//!   poison-propagation forms (`.lock()`/`.read()`/`.write()`/`.wait*`
+//!   — a poisoned lock means a sibling already panicked), infallible
+//!   `try_into()` slice conversions, and sites annotated with a
+//!   `// PANIC-OK:` comment explaining why panicking is correct.
+//! - **R4 single-writer markers** — `ps/server.rs` and `wal/mod.rs`
+//!   encode invariants that hold only on the shard's one writer thread;
+//!   each must carry at least one `// SINGLE-WRITER:` comment so the
+//!   invariant stays documented next to the code that relies on it.
+//!
+//! Exit status 0 when clean; 1 with one `file:line: rule: message` per
+//! violation otherwise.
+
+use std::path::{Path, PathBuf};
+
+/// Files allowed to use `Ordering::Relaxed` (R2). Each is a statistics
+/// counter or a flag whose readers tolerate arbitrary staleness.
+const RELAXED_ALLOWLIST: &[&str] = &[
+    "metrics/mod.rs",
+    "net/mod.rs",
+    "net/stats.rs",
+    "net/tcp.rs",
+    "ps/client.rs",
+    "ps/server.rs",
+    "util/logger.rs",
+    "wal/mod.rs",
+];
+
+/// Directories whose non-test code must not panic (R3).
+const NO_PANIC_DIRS: &[&str] = &["ps/", "net/", "wal/"];
+
+/// Files that must carry at least one `// SINGLE-WRITER:` marker (R4).
+const SINGLE_WRITER_FILES: &[&str] = &["ps/server.rs", "wal/mod.rs"];
+
+/// How many lines above an `unsafe` site a `// SAFETY:` comment may
+/// start (the comment block may be long; the marker is its first line).
+const SAFETY_WINDOW: usize = 10;
+
+/// How many lines above a panic site a `// PANIC-OK:` marker may sit.
+const PANIC_OK_WINDOW: usize = 3;
+
+fn main() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&src, &mut files);
+    files.sort();
+
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rel.starts_with("bin/") {
+            continue; // binaries (this linter included) are entry-point glue
+        }
+        let Ok(text) = std::fs::read_to_string(path) else {
+            violations.push(format!("{rel}:0: io: cannot read file"));
+            continue;
+        };
+        lint_file(&rel, &text, &mut violations);
+    }
+
+    if violations.is_empty() {
+        println!("glint-lint: {} files clean", files.len());
+        return;
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    eprintln!("glint-lint: {} violation(s)", violations.len());
+    std::process::exit(1);
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn lint_file(rel: &str, text: &str, violations: &mut Vec<String>) {
+    let lines: Vec<&str> = text.lines().collect();
+    let no_panic = NO_PANIC_DIRS.iter().any(|d| rel.starts_with(d));
+    let relaxed_ok = RELAXED_ALLOWLIST.contains(&rel);
+    let mut in_tests = false;
+    let mut single_writer_seen = false;
+
+    for (i, &line) in lines.iter().enumerate() {
+        let lineno = i + 1;
+        if line.contains("#[cfg(test)]") {
+            // Repo convention: the test module is the last item of a
+            // file, so everything below is test code.
+            in_tests = true;
+        }
+        if line.contains("// SINGLE-WRITER:") || line.contains("/// SINGLE-WRITER:") {
+            single_writer_seen = true;
+        }
+        let code = strip_comment(line);
+
+        // R1: unsafe needs a SAFETY comment just above it.
+        if mentions_unsafe(code) && !has_marker_above(&lines, i, SAFETY_WINDOW, "SAFETY:") {
+            violations.push(format!(
+                "{rel}:{lineno}: unsafe-needs-safety: `unsafe` without a \
+                 `// SAFETY:` comment starting within {SAFETY_WINDOW} lines above"
+            ));
+        }
+
+        // R2: Relaxed ordering only in allowlisted files.
+        if !relaxed_ok && code.contains("Ordering::Relaxed") {
+            violations.push(format!(
+                "{rel}:{lineno}: relaxed-ordering: `Ordering::Relaxed` outside the \
+                 audited allowlist (use a stronger ordering, or audit and allowlist \
+                 the file in glint-lint)"
+            ));
+        }
+
+        // R3: no stray panics in the server tiers.
+        if no_panic && !in_tests && has_panic_call(code) {
+            let joined = if i > 0 {
+                format!("{}{}", strip_comment(lines[i - 1]), code)
+            } else {
+                code.to_string()
+            };
+            let poison = ["lock()", ".read()", ".write()", ".wait(", "wait_timeout("]
+                .iter()
+                .any(|p| joined.contains(p));
+            let infallible = joined.contains("try_into()");
+            let annotated = has_marker_above(&lines, i, PANIC_OK_WINDOW, "PANIC-OK");
+            if !poison && !infallible && !annotated {
+                violations.push(format!(
+                    "{rel}:{lineno}: no-stray-panic: `.unwrap()`/`.expect(` in server-tier \
+                     code (propagate the error, or annotate with `// PANIC-OK: <why>`)"
+                ));
+            }
+        }
+    }
+
+    // R4: single-writer invariants must stay documented.
+    if SINGLE_WRITER_FILES.contains(&rel) && !single_writer_seen {
+        violations.push(format!(
+            "{rel}:0: single-writer-marker: file encodes single-writer invariants but \
+             has no `// SINGLE-WRITER:` comment documenting them"
+        ));
+    }
+}
+
+/// The code part of a line (everything before a `//` comment). Not
+/// string-literal aware; good enough for the patterns this lint greps.
+fn strip_comment(line: &str) -> &str {
+    match line.find("//") {
+        Some(pos) => &line[..pos],
+        None => line,
+    }
+}
+
+/// True when `code` uses the `unsafe` keyword (block or fn), matched as
+/// a whole word so identifiers like `unsafe_len` don't trip it.
+fn mentions_unsafe(code: &str) -> bool {
+    let mut rest = code;
+    while let Some(pos) = rest.find("unsafe") {
+        let before_ok =
+            pos == 0 || !rest[..pos].ends_with(|c: char| c.is_alphanumeric() || c == '_');
+        let tail = &rest[pos + "unsafe".len()..];
+        let after_ok = !tail.starts_with(|c: char| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        rest = tail;
+    }
+    false
+}
+
+/// True when `code` calls `.unwrap()` or `.expect(`.
+fn has_panic_call(code: &str) -> bool {
+    code.contains(".unwrap()") || code.contains(".expect(")
+}
+
+/// True when any of the `window` lines above `i` (or line `i` itself)
+/// carries `marker` inside a comment.
+fn has_marker_above(lines: &[&str], i: usize, window: usize, marker: &str) -> bool {
+    let start = i.saturating_sub(window);
+    lines[start..=i].iter().any(|l| l.contains(marker))
+}

@@ -29,10 +29,14 @@ pub mod infer;
 pub mod stats;
 pub mod tcp;
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::Duration;
+
+// Synchronization comes from the sync_shim so the model checker can drive
+// the sim transport's channels through explored interleavings (plain std
+// re-exports in normal builds).
+use crate::util::sync_shim::atomic::{AtomicU64, Ordering};
+use crate::util::sync_shim::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 
 use crate::util::rng::Pcg64;
 use stats::EndpointStats;

@@ -28,12 +28,17 @@
 use std::collections::HashMap;
 use std::io::{self, Read};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+// Locks, channels, and atomics come from the sync_shim: the protocol
+// surface of the mux (the [`MuxPending`] waiter table) is model-checked in
+// `tests/model.rs`, while the socket I/O threads themselves stay on real
+// `std::thread` (a blocking `read` cannot be a virtual task).
 use crate::util::error::{Error, Result};
+use crate::util::sync_shim::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use crate::util::sync_shim::{mpsc, Mutex};
 
 use super::frame::{parse_tagged_header, read_tagged_frame, write_tagged_frame, TAGGED_HEADER_LEN};
 use super::stats::EndpointStats;
@@ -63,6 +68,77 @@ const MUX_SUSPECT_TIMEOUTS: u32 = 2;
 /// still gets redialed instead of consuming the whole retry budget.
 const MUX_WEDGE_QUIET: Duration = Duration::from_secs(2);
 
+/// The waiter table of one mux connection: reply waiters keyed by
+/// correlation id, plus the `dead` flag that closes the
+/// registration/death race.
+///
+/// This is the pure protocol core of the mux — no sockets — extracted so
+/// the model checker can drive it directly (`tests/model.rs`, the
+/// `mux-*` models) with hand-written requester/reader/killer tasks. Its
+/// one invariant: [`MuxPending::kill`] (used by both [`MuxConn::kill`]
+/// and the reader's exit path) sets `dead` *before* clearing the table,
+/// so a waiter that registers on a dying connection either observes
+/// `dead` on its post-insert check or has its sender dropped by the
+/// clear — never a silent wait for a reply that cannot come.
+pub struct MuxPending {
+    /// Reply waiters keyed by correlation id.
+    waiters: Mutex<HashMap<u64, mpsc::SyncSender<Vec<u8>>>>,
+    /// Set once the connection is known broken; round-trips then dial a
+    /// replacement.
+    dead: AtomicBool,
+}
+
+impl Default for MuxPending {
+    fn default() -> Self {
+        MuxPending::new()
+    }
+}
+
+impl MuxPending {
+    /// Empty table on a live connection.
+    pub fn new() -> MuxPending {
+        MuxPending { waiters: Mutex::new(HashMap::new()), dead: AtomicBool::new(false) }
+    }
+
+    /// Register a reply waiter under `corr`. The caller must check
+    /// [`MuxPending::is_dead`] *after* registering and withdraw on death
+    /// (see the race note on the type).
+    pub fn register(&self, corr: u64, tx: mpsc::SyncSender<Vec<u8>>) {
+        self.waiters.lock().unwrap().insert(corr, tx);
+    }
+
+    /// True once the connection is known broken.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Hand `payload` to the waiter registered under `corr`, if any.
+    /// Returns whether a waiter was found *and* still listening; a reply
+    /// whose waiter already gave up is dropped (late replies are
+    /// harmless — matching by id means they can never be mistaken for
+    /// another request's answer).
+    pub fn deliver(&self, corr: u64, payload: Vec<u8>) -> bool {
+        match self.waiters.lock().unwrap().remove(&corr) {
+            Some(tx) => tx.try_send(payload).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Withdraw the waiter registered under `corr` (timeout or write
+    /// failure: the reply slot must not outlive the requester).
+    pub fn remove(&self, corr: u64) {
+        self.waiters.lock().unwrap().remove(&corr);
+    }
+
+    /// Mark the connection dead, then fail every parked waiter by
+    /// dropping its sender (so each errors out fast instead of running
+    /// its full timeout). The order is the invariant — see the type doc.
+    pub fn kill(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+        self.waiters.lock().unwrap().clear();
+    }
+}
+
 /// One multiplexed client connection: a shared write half plus a reader
 /// thread that routes tagged replies to waiters by correlation id.
 struct MuxConn {
@@ -74,11 +150,8 @@ struct MuxConn {
     /// contending on the writer mutex — a kill must never wait behind a
     /// slow in-progress write.
     closer: TcpStream,
-    /// Reply waiters keyed by correlation id.
-    pending: Mutex<HashMap<u64, mpsc::SyncSender<Vec<u8>>>>,
-    /// Set once the connection is known broken; round-trips then dial a
-    /// replacement.
-    dead: AtomicBool,
+    /// Reply waiters + death flag (the model-checked protocol core).
+    pending: MuxPending,
     /// Round-trip timeouts since the last frame arrived (any frame —
     /// progress proves the connection alive). See
     /// [`MUX_SUSPECT_TIMEOUTS`].
@@ -98,8 +171,7 @@ impl MuxConn {
         let conn = Arc::new(MuxConn {
             writer: Mutex::new(stream),
             closer,
-            pending: Mutex::new(HashMap::new()),
-            dead: AtomicBool::new(false),
+            pending: MuxPending::new(),
             strikes: AtomicU32::new(0),
             last_rx: Mutex::new(Instant::now()),
         });
@@ -120,13 +192,13 @@ impl MuxConn {
         *self.last_rx.lock().unwrap() = Instant::now();
     }
 
-    /// Mark the connection broken and close the socket, which wakes the
-    /// reader and errors out any in-progress write (it fails any
-    /// still-parked waiters on exit). Never blocks on the writer mutex.
+    /// Mark the connection broken (dead flag set, parked waiters failed
+    /// — see [`MuxPending::kill`]) and close the socket, which wakes the
+    /// reader and errors out any in-progress write. Never blocks on the
+    /// writer mutex.
     fn kill(&self) {
-        self.dead.store(true, Ordering::SeqCst);
+        self.pending.kill();
         let _ = self.closer.shutdown(Shutdown::Both);
-        self.pending.lock().unwrap().clear();
     }
 }
 
@@ -149,14 +221,11 @@ fn mux_reader_loop(mut stream: TcpStream, conn: &Arc<MuxConn>) {
         if !read_full(&mut stream, &mut payload, conn) {
             break;
         }
-        if let Some(tx) = conn.pending.lock().unwrap().remove(&corr) {
-            let _ = tx.try_send(payload);
-        }
+        conn.pending.deliver(corr, payload);
     }
-    conn.dead.store(true, Ordering::SeqCst);
-    // Drop the senders of any still-parked waiters so they fail fast
-    // instead of running out their full timeout.
-    conn.pending.lock().unwrap().clear();
+    // Dead-before-clear, so waiters racing with this exit either see the
+    // flag or lose their sender (never a silent wait).
+    conn.pending.kill();
 }
 
 /// Fill `buf` completely from the socket, tolerating read timeouts:
@@ -178,7 +247,7 @@ fn read_full(stream: &mut TcpStream, buf: &mut [u8], conn: &Arc<MuxConn>) -> boo
             }
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
             Err(e) if is_timeout(&e) => {
-                if conn.dead.load(Ordering::SeqCst) || Arc::strong_count(conn) <= 1 {
+                if conn.pending.is_dead() || Arc::strong_count(conn) <= 1 {
                     return false;
                 }
             }
@@ -227,7 +296,7 @@ impl TcpEndpoint {
         {
             let mut guard = self.conn.lock().unwrap();
             if let Some(current) = guard.as_ref() {
-                if !current.dead.load(Ordering::SeqCst) {
+                if !current.pending.is_dead() {
                     return Ok(Arc::clone(current));
                 }
                 current.kill();
@@ -239,7 +308,7 @@ impl TcpEndpoint {
             Ok(fresh) => {
                 let mut guard = self.conn.lock().unwrap();
                 if let Some(current) = guard.as_ref() {
-                    if !current.dead.load(Ordering::SeqCst) {
+                    if !current.pending.is_dead() {
                         // Another worker installed a live connection
                         // while we dialed; use it and close ours.
                         let winner = Arc::clone(current);
@@ -294,14 +363,15 @@ impl TcpEndpoint {
         let conn = self.connect(started, timeout, deadline)?;
         let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        conn.pending.lock().unwrap().insert(corr, reply_tx);
+        conn.pending.register(corr, reply_tx);
         // Close the registration/death race: `kill` and the reader's
-        // exit path both set `dead` *before* clearing `pending`, so a
-        // waiter registered on a dying connection either sees `dead`
-        // here or had its sender dropped by the clear — never a silent
-        // wait for a reply that cannot come.
-        if conn.dead.load(Ordering::SeqCst) {
-            conn.pending.lock().unwrap().remove(&corr);
+        // exit path both set `dead` *before* clearing the waiter table
+        // (see [`MuxPending`]), so a waiter registered on a dying
+        // connection either sees `dead` here or had its sender dropped
+        // by the clear — never a silent wait for a reply that cannot
+        // come.
+        if conn.pending.is_dead() {
+            conn.pending.remove(corr);
             self.discard(&conn);
             return Err(());
         }
@@ -312,7 +382,7 @@ impl TcpEndpoint {
                 || write_tagged_frame(&mut *stream, corr, payload).is_err()
             {
                 drop(stream);
-                conn.pending.lock().unwrap().remove(&corr);
+                conn.pending.remove(corr);
                 self.discard(&conn);
                 return Err(());
             }
@@ -328,10 +398,10 @@ impl TcpEndpoint {
                 // the whole quiet period is presumed wedged and replaced
                 // too, so a stalled socket cannot consume the caller's
                 // whole retry budget.
-                conn.pending.lock().unwrap().remove(&corr);
+                conn.pending.remove(corr);
                 let strikes = conn.strikes.fetch_add(1, Ordering::Relaxed) + 1;
                 let quiet = conn.last_rx.lock().unwrap().elapsed();
-                if conn.dead.load(Ordering::SeqCst)
+                if conn.pending.is_dead()
                     || (strikes >= MUX_SUSPECT_TIMEOUTS && quiet >= MUX_WEDGE_QUIET)
                 {
                     self.discard(&conn);
@@ -429,6 +499,9 @@ impl TcpServer {
             let handle = std::thread::Builder::new()
                 .name(format!("glint-tcp-accept-{i}"))
                 .spawn(move || accept_loop(&listener, &tx, &stop))
+                // PANIC-OK: thread spawn fails only on resource
+                // exhaustion at process startup; no cleaner recovery
+                // exists than aborting the bind.
                 .expect("spawn tcp accept loop");
             accepts.push(handle);
         }

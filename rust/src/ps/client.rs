@@ -349,6 +349,8 @@ impl ShardDispatcher {
                 std::thread::Builder::new()
                     .name(format!("glint-ps-dispatch-{shard}-{i}"))
                     .spawn(move || dispatcher_worker(&shared))
+                    // PANIC-OK: dispatcher spawn fails only on resource
+                    // exhaustion while the client connects.
                     .expect("spawn ps dispatcher worker")
             })
             .collect();
@@ -633,6 +635,8 @@ impl PsClient {
                     scope.spawn(move || self.request_retry(s, req))
                 })
                 .collect();
+            // PANIC-OK: join only errs when the worker itself panicked;
+            // re-raising that panic is the correct propagation.
             handles.into_iter().map(|h| h.join().expect("create worker")).collect()
         });
         for r in results {
@@ -937,6 +941,8 @@ impl<R> Ticket<R> {
     /// shard's hand-shake confirmed exactly-once application.
     pub fn wait(mut self) -> Result<R> {
         match std::mem::replace(&mut self.state, TicketState::Ready(None)) {
+            // PANIC-OK: `wait` consumes the ticket, so a twice-waited
+            // ticket is unreachable; the expects document the invariant.
             TicketState::Ready(result) => result.expect("ticket waited twice"),
             TicketState::Gather(f) => (f.expect("ticket waited twice"))(),
             TicketState::Push { parts, early, ok } => {
@@ -959,6 +965,7 @@ impl<R> Ticket<R> {
                 }
                 match first {
                     Some(e) => Err(e),
+                    // PANIC-OK: same consumed-ticket invariant as above.
                     None => Ok(ok.expect("ticket waited twice")),
                 }
             }

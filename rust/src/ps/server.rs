@@ -60,11 +60,16 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::SocketAddr;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
-use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+// The shard's synchronization — matrix registry locks, the dedup window,
+// the reader-pool queue, the replication role/cursor flags — rides the
+// sync_shim so the model checker can drive `ShardCore` through explored
+// interleavings (`tests/model.rs`, the `shard-*`/`repl-*` models). The
+// serve-loop threads and TCP pollers stay on real `std::thread`; only
+// the reader pool's workers (`vthread`) become virtual tasks.
 use crate::log_warn;
 use crate::net::tcp::{resolve_addrs, TcpServer, TcpTransport};
 use crate::net::{respond, Envelope, FaultPlan, Inbox, SimTransport, Transport};
@@ -73,6 +78,9 @@ use crate::ps::messages::{Data, Dtype, Layout, Request, Response, SparseData};
 use crate::ps::partition::Partitioner;
 use crate::ps::storage::{DenseShard, SparseShard, StorageElement};
 use crate::util::error::{Error, Result};
+use crate::util::sync_shim::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use crate::util::sync_shim::thread as vthread;
+use crate::util::sync_shim::{mpsc, Mutex, RwLock};
 use crate::wal::{ShardWal, WalOptions, WalPayload};
 
 /// Replication role: a regular primary shard.
@@ -583,9 +591,12 @@ impl ShardCore {
         }
     }
 
-    /// Handle a state-mutating operation. Must be called from a single
-    /// thread per shard (the inbox loop): exactly-once dedup relies on
-    /// pushes being serialized.
+    /// Handle a state-mutating operation.
+    ///
+    /// SINGLE-WRITER: must be called from one thread per shard (the
+    /// inbox loop): the dedup check → apply → record sequence of a push
+    /// is exactly-once only because no second push can interleave with
+    /// it.
     fn handle_write(&self, req: Request) -> Response {
         match req {
             Request::CreateMatrix { id, rows, cols, dtype, layout } => {
@@ -863,8 +874,9 @@ impl ShardCore {
     }
 
     /// The full shard state as snapshot records, terminal marker last.
-    /// Must run on the single writer thread so nothing mutates
-    /// underneath the capture.
+    ///
+    /// SINGLE-WRITER: must run on the shard's one writer thread so
+    /// nothing mutates underneath the capture.
     fn snapshot_payloads(&self) -> Vec<WalPayload> {
         let reg = self.matrices.read().unwrap();
         let mut ids: Vec<u32> = reg.keys().copied().collect();
@@ -995,15 +1007,49 @@ impl ShardState {
             self.core.apply_write(req, true)
         }
     }
+
+    /// A shareable read-only handle over this shard's core, for callers
+    /// that run read ops concurrently with the owning thread's writes
+    /// (the model-checker tests drive the reader/writer interleavings
+    /// through this).
+    pub fn reader(&self) -> ShardReader {
+        ShardReader { core: Arc::clone(&self.core) }
+    }
+
+    /// Start a concurrent reader pool over this shard's core (the same
+    /// executor [`serve`] uses). Exposed so tests — the model suite in
+    /// particular — can drive the pool directly with crafted envelopes.
+    pub fn start_read_pool(&self, threads: usize) -> ReadPool {
+        ReadPool::start(Arc::clone(&self.core), threads)
+    }
+}
+
+/// Cloneable read-only view of one shard (see [`ShardState::reader`]).
+#[derive(Clone)]
+pub struct ShardReader {
+    core: Arc<ShardCore>,
+}
+
+impl ShardReader {
+    /// Handle one read-only request. Safe to call from any thread,
+    /// concurrently with the owner's writes.
+    pub fn handle_read(&self, req: &Request) -> Response {
+        self.core.handle_read(req)
+    }
 }
 
 /// Concurrent executor for read ops: a fixed pool of reader threads
 /// draining a shared queue. Dropping the pool closes the queue and
 /// joins the workers after they finish (and respond to) whatever is
 /// still queued.
-struct ReadPool {
+///
+/// Public only for the test surface ([`ShardState::start_read_pool`]);
+/// production servers get one implicitly through [`serve`]. The workers
+/// spawn through the sync_shim, so under the model checker they become
+/// virtual tasks whose interleavings are explored.
+pub struct ReadPool {
     tx: Option<mpsc::Sender<(Envelope, Request)>>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<vthread::JoinHandle<()>>,
 }
 
 impl ReadPool {
@@ -1014,7 +1060,7 @@ impl ReadPool {
             .map(|i| {
                 let core = Arc::clone(&core);
                 let rx = Arc::clone(&rx);
-                std::thread::Builder::new()
+                vthread::Builder::new()
                     .name(format!("glint-shard-{}-read-{i}", core.shard_id))
                     .spawn(move || loop {
                         let item = rx.lock().unwrap().recv();
@@ -1025,13 +1071,17 @@ impl ReadPool {
                             Err(_) => return,
                         }
                     })
+                    // PANIC-OK: reader-pool spawn fails only on resource
+                    // exhaustion while bringing the shard up.
                     .expect("spawn shard reader")
             })
             .collect();
         ReadPool { tx: Some(tx), workers }
     }
 
-    fn submit(&self, env: Envelope, req: Request) {
+    /// Enqueue one read op; some pool worker will `respond` on the
+    /// envelope's reply channel.
+    pub fn submit(&self, env: Envelope, req: Request) {
         if let Some(tx) = &self.tx {
             let _ = tx.send((env, req));
         }
@@ -1089,6 +1139,8 @@ fn spawn_serve_threads(
             std::thread::Builder::new()
                 .name(format!("glint-shard-{shard_id}"))
                 .spawn(move || serve(state, inbox))
+                // PANIC-OK: serve-thread spawn fails only on resource
+                // exhaustion at server startup.
                 .expect("spawn shard server"),
         );
     }
@@ -1128,9 +1180,12 @@ impl ServerGroup {
                         "fault injection is sim-only; the TCP transport ignores the fault plan"
                     );
                 }
+                // PANIC-OK: a constant loopback address always parses.
                 let want: Vec<SocketAddr> =
                     vec!["127.0.0.1:0".parse().unwrap(); config.shards];
                 let (server, inboxes) =
+                    // PANIC-OK: an in-process loopback group that cannot
+                    // bind has no caller-visible fallback.
                     TcpServer::bind(&want).expect("bind loopback tcp listeners");
                 let transport = TcpTransport::connect(server.addrs());
                 let (handles, _cores) = spawn_serve_threads(&config, 0, inboxes);
@@ -1257,6 +1312,8 @@ impl TcpShardServer {
                     std::thread::Builder::new()
                         .name(format!("glint-repl-{shard}"))
                         .spawn(move || repl_poll_loop(&core, primary, &injector, &stop))
+                        // PANIC-OK: poller spawn fails only on resource
+                        // exhaustion at server startup.
                         .expect("spawn replication poller"),
                 );
             }

@@ -150,8 +150,13 @@ impl Writer {
         self.usize(v.len());
         #[cfg(target_endian = "little")]
         {
-            // SAFETY: i64 has no padding; reinterpreting as bytes is
-            // always valid, and on LE the byte order is the wire order.
+            // SAFETY: `v` is a live `&[i64]`, so `v.as_ptr()` is valid
+            // for reads of `v.len() * 8` bytes for the borrow's lifetime
+            // (the byte view ends at `extend_from_slice` below, inside
+            // it). i64 has no padding and every bit pattern is a valid
+            // u8, so reinterpreting as bytes is defined; `*const u8` has
+            // alignment 1, which any pointer satisfies. On LE the in-
+            // memory byte order is exactly the wire order.
             let bytes = unsafe {
                 std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8)
             };
@@ -168,7 +173,10 @@ impl Writer {
         self.usize(v.len());
         #[cfg(target_endian = "little")]
         {
-            // SAFETY: f32 has no padding; see slice_i64.
+            // SAFETY: same argument as `slice_i64` above with a 4-byte
+            // element: `v.as_ptr()` is valid for `v.len() * 4` bytes of
+            // reads while borrowed, f32 has no padding, and a `*const u8`
+            // view imposes no alignment requirement.
             let bytes = unsafe {
                 std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
             };
@@ -337,8 +345,15 @@ impl<'a> Reader<'a> {
         {
             let raw = self.take(n * 8)?;
             let mut out: Vec<i64> = Vec::with_capacity(n);
-            // SAFETY: the destination has capacity for n i64s; raw holds
-            // exactly n*8 bytes in wire (LE) order.
+            // SAFETY: `take` bounds-checked the read, so `raw` is exactly
+            // `n * 8` readable bytes; `with_capacity(n)` makes
+            // `out.as_mut_ptr()` valid for `n * 8` bytes of writes, and
+            // the two allocations are distinct so the copy cannot
+            // overlap. Writing through `*mut u8` needs no alignment, and
+            // any byte pattern is a valid i64 (no padding, no invalid
+            // values). `set_len(n)` runs only after all `n` elements are
+            // fully initialized by the copy, within the reserved
+            // capacity.
             unsafe {
                 std::ptr::copy_nonoverlapping(
                     raw.as_ptr(),
@@ -366,7 +381,11 @@ impl<'a> Reader<'a> {
         {
             let raw = self.take(n * 4)?;
             let mut out: Vec<f32> = Vec::with_capacity(n);
-            // SAFETY: see slice_i64.
+            // SAFETY: same argument as `slice_i64` above with a 4-byte
+            // element: `raw` is a bounds-checked `n * 4`-byte source, the
+            // freshly reserved Vec is a disjoint `n * 4`-byte
+            // destination, every bit pattern is a valid f32, and
+            // `set_len(n)` follows full initialization.
             unsafe {
                 std::ptr::copy_nonoverlapping(
                     raw.as_ptr(),

@@ -15,6 +15,7 @@ pub mod lru;
 pub mod math;
 pub mod proptest;
 pub mod rng;
+pub mod sync_shim;
 pub mod threadpool;
 pub mod timer;
 pub mod topk;

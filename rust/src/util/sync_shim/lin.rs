@@ -1,0 +1,287 @@
+//! Linearizability oracle for the exactly-once push protocol.
+//!
+//! The paper's push handshake (§2.4 of PAPER.md's source) promises that a
+//! client increment is applied *exactly once* no matter how the transport
+//! mangles delivery. At the history level that makes a shard a
+//! **counter with idempotent, uid-tagged increments**: the sequential spec
+//! applies each uid's delta at most once, and reads return the running
+//! total.
+//!
+//! Model tasks record invocations/returns into a [`Recorder`]; the test
+//! then runs [`linearizable_counter`] — a Wing & Gong-style backtracking
+//! search with a memo on the linearized-set bitmask (valid because the
+//! spec state is a function of *which* operations linearized, not their
+//! order) — to decide whether some legal linearization explains what every
+//! task observed. Operations that never returned (couriers killed by a
+//! crash schedule) are *pending*: the checker may linearize them anywhere
+//! after their invocation or drop them entirely, exactly matching the
+//! "message may or may not have taken effect" ambiguity of a crash.
+//!
+//! The recorder uses raw `std::sync` on purpose: under the cooperative
+//! scheduler exactly one task runs at a time, so these short critical
+//! sections can never park a task mid-schedule or add schedule points of
+//! their own — the history is an observation channel, not part of the
+//! model.
+
+use std::collections::HashSet;
+
+/// An operation against the counter-with-exactly-once-pushes spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Apply `delta` under idempotency key `uid`.
+    Push {
+        /// Exactly-once key (one per logical client push).
+        uid: u64,
+        /// Increment to apply.
+        delta: i64,
+    },
+    /// Read the current total.
+    Read,
+}
+
+/// What an operation returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetVal {
+    /// Push acknowledged (applied now or already applied earlier).
+    Done,
+    /// Read observed this total.
+    Value(i64),
+}
+
+/// One completed-or-pending operation in a recorded history.
+#[derive(Clone, Debug)]
+pub struct OpRecord {
+    /// Logical timestamp of the invocation.
+    pub inv: usize,
+    /// Logical timestamp of the return (`None` = pending at history end).
+    pub ret: Option<usize>,
+    /// The operation.
+    pub op: Op,
+    /// The observed result (`None` = pending).
+    pub out: Option<RetVal>,
+}
+
+struct RecInner {
+    time: usize,
+    ops: Vec<OpRecord>,
+}
+
+/// Concurrent history recorder (see module docs for why it uses raw std).
+pub struct Recorder {
+    inner: std::sync::Mutex<RecInner>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    /// Create an empty history.
+    pub fn new() -> Recorder {
+        Recorder {
+            inner: std::sync::Mutex::new(RecInner {
+                time: 0,
+                ops: Vec::new(),
+            }),
+        }
+    }
+
+    /// Record an invocation; returns the op's index for [`Recorder::ret`].
+    pub fn invoke(&self, op: Op) -> usize {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.time += 1;
+        let t = g.time;
+        g.ops.push(OpRecord {
+            inv: t,
+            ret: None,
+            op,
+            out: None,
+        });
+        g.ops.len() - 1
+    }
+
+    /// Record the return of op `idx`.
+    pub fn ret(&self, idx: usize, out: RetVal) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.time += 1;
+        let t = g.time;
+        let rec = &mut g.ops[idx];
+        rec.ret = Some(t);
+        rec.out = Some(out);
+    }
+
+    /// Consume the recorder and return the history.
+    pub fn finish(self) -> Vec<OpRecord> {
+        self.inner
+            .into_inner()
+            .unwrap_or_else(|e| e.into_inner())
+            .ops
+    }
+}
+
+/// Spec state reached after linearizing the ops in `mask`: the set of
+/// applied uids is order-independent, so the state is a pure function of
+/// the mask — which is what makes the bitmask memo below sound.
+fn total_of(ops: &[OpRecord], mask: u64) -> i64 {
+    let mut seen = HashSet::new();
+    let mut total = 0i64;
+    for (i, rec) in ops.iter().enumerate() {
+        if mask & (1 << i) == 0 {
+            continue;
+        }
+        if let Op::Push { uid, delta } = rec.op {
+            if seen.insert(uid) {
+                total += delta;
+            }
+        }
+    }
+    total
+}
+
+/// Wing & Gong linearizability check against the exactly-once counter
+/// spec. Returns `true` iff some linearization of the history is legal.
+///
+/// Histories are small (model schedules run tens of ops), so the u64
+/// bitmask cap of 64 ops is plenty; the memo makes the search polynomial
+/// in practice.
+pub fn linearizable_counter(ops: &[OpRecord]) -> bool {
+    assert!(
+        ops.len() <= 64,
+        "history too long for the bitmask checker ({} ops)",
+        ops.len()
+    );
+    let full_completed: u64 = ops
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.ret.is_some())
+        .map(|(i, _)| 1u64 << i)
+        .sum();
+    let mut memo: HashSet<u64> = HashSet::new();
+    search(ops, 0, full_completed, &mut memo)
+}
+
+fn search(ops: &[OpRecord], mask: u64, full_completed: u64, memo: &mut HashSet<u64>) -> bool {
+    // Done when every *completed* op is linearized; leftover pending ops
+    // are legal to drop (their effect never became visible).
+    if mask & full_completed == full_completed {
+        return true;
+    }
+    for (i, rec) in ops.iter().enumerate() {
+        let bit = 1u64 << i;
+        if mask & bit != 0 {
+            continue;
+        }
+        // Minimality: `i` may linearize next only if no other remaining
+        // op returned entirely before `i` was invoked.
+        let minimal = ops.iter().enumerate().all(|(j, other)| {
+            j == i
+                || mask & (1 << j) != 0
+                || other.ret.map_or(usize::MAX, |r| r) >= rec.inv
+        });
+        if !minimal {
+            continue;
+        }
+        // Spec conformance of the observed result.
+        let ok = match (rec.op, rec.out) {
+            (Op::Push { .. }, _) => true,
+            (Op::Read, Some(RetVal::Value(v))) => v == total_of(ops, mask),
+            (Op::Read, Some(RetVal::Done)) => false,
+            (Op::Read, None) => true,
+        };
+        if !ok {
+            continue;
+        }
+        let next = mask | bit;
+        if memo.insert(next) && search(ops, next, full_completed, memo) {
+            return true;
+        }
+    }
+    false
+}
+
+/// The sequential spec's final total: every distinct uid applied once.
+pub fn sequential_total(ops: &[OpRecord]) -> i64 {
+    total_of(ops, u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(inv: usize, ret: usize, op: Op, out: RetVal) -> OpRecord {
+        OpRecord {
+            inv,
+            ret: Some(ret),
+            op,
+            out: Some(out),
+        }
+    }
+
+    #[test]
+    fn sequential_history_is_linearizable() {
+        let h = vec![
+            rec(1, 2, Op::Push { uid: 1, delta: 5 }, RetVal::Done),
+            rec(3, 4, Op::Read, RetVal::Value(5)),
+        ];
+        assert!(linearizable_counter(&h));
+        assert_eq!(sequential_total(&h), 5);
+    }
+
+    #[test]
+    fn duplicate_uid_counts_once() {
+        let h = vec![
+            rec(1, 2, Op::Push { uid: 7, delta: 3 }, RetVal::Done),
+            rec(3, 4, Op::Push { uid: 7, delta: 3 }, RetVal::Done),
+            rec(5, 6, Op::Read, RetVal::Value(3)),
+        ];
+        assert!(linearizable_counter(&h));
+    }
+
+    #[test]
+    fn stale_read_after_completed_push_is_rejected() {
+        // Push finished (ret=2) strictly before the read began (inv=3),
+        // so the read must see its effect; Value(0) is a real-time
+        // ordering violation.
+        let h = vec![
+            rec(1, 2, Op::Push { uid: 1, delta: 5 }, RetVal::Done),
+            rec(3, 4, Op::Read, RetVal::Value(0)),
+        ];
+        assert!(!linearizable_counter(&h));
+    }
+
+    #[test]
+    fn concurrent_push_read_either_value_ok() {
+        // Read overlaps the push: both 0 and 5 are linearizable.
+        for v in [0, 5] {
+            let h = vec![
+                rec(1, 4, Op::Push { uid: 1, delta: 5 }, RetVal::Done),
+                rec(2, 3, Op::Read, RetVal::Value(v)),
+            ];
+            assert!(linearizable_counter(&h), "value {v} should linearize");
+        }
+        let h = vec![
+            rec(1, 4, Op::Push { uid: 1, delta: 5 }, RetVal::Done),
+            rec(2, 3, Op::Read, RetVal::Value(2)),
+        ];
+        assert!(!linearizable_counter(&h));
+    }
+
+    #[test]
+    fn pending_push_may_or_may_not_apply() {
+        // A push with no return (crash) can explain either read outcome.
+        for v in [0, 5] {
+            let h = vec![
+                OpRecord {
+                    inv: 1,
+                    ret: None,
+                    op: Op::Push { uid: 1, delta: 5 },
+                    out: None,
+                },
+                rec(2, 3, Op::Read, RetVal::Value(v)),
+            ];
+            assert!(linearizable_counter(&h), "value {v} should linearize");
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Swappable synchronization surface for the concurrent subsystems.
+//!
+//! Code that wants interleaving coverage imports its primitives from here
+//! instead of `std::sync` / `std::thread`:
+//!
+//! ```ignore
+//! use crate::util::sync_shim::{mpsc, thread, Condvar, Mutex};
+//! use crate::util::sync_shim::atomic::{AtomicU64, Ordering};
+//! ```
+//!
+//! In a normal build this module is a zero-cost pile of re-exports — the
+//! types *are* the `std` types and the compiled code is identical to
+//! importing `std::sync` directly.
+//!
+//! Under `--features model` the same names resolve to model-checking
+//! primitives: every lock acquire, condvar wait/notify, channel op, atomic
+//! access, spawn, and join becomes a *schedule point* where a cooperative
+//! virtual scheduler ([`sched`]) decides which task runs next. The
+//! scheduler runs one task at a time on real OS threads, records every
+//! decision, and explores many interleavings per test (seeded random walks
+//! for big models, bounded-preemption DFS for small ones). A failing
+//! schedule prints a `GLINT_MODEL_REPLAY` token that replays the exact
+//! interleaving deterministically. See `tests/model.rs` for the models and
+//! the README "Correctness tooling" section for the workflow.
+//!
+//! Model-build semantics intentionally differ from `std` in two documented
+//! ways: lock poisoning is never reported (panicking schedules abort the
+//! whole run instead, which is strictly stricter), and atomic memory
+//! orderings are accepted but ignored — the scheduler serializes all
+//! accesses, so every exploration runs under sequential consistency.
+//! Weak-ordering bugs are covered by the nightly TSan CI leg instead.
+
+#[cfg(not(feature = "model"))]
+pub use std::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult,
+};
+
+/// Atomic types (std re-exports in normal builds).
+#[cfg(not(feature = "model"))]
+pub mod atomic {
+    pub use std::sync::atomic::*;
+}
+
+/// Channels (std re-exports in normal builds).
+#[cfg(not(feature = "model"))]
+pub mod mpsc {
+    pub use std::sync::mpsc::*;
+}
+
+/// Thread spawning (std re-exports in normal builds).
+#[cfg(not(feature = "model"))]
+pub mod thread {
+    pub use std::thread::*;
+}
+
+#[cfg(feature = "model")]
+pub mod lin;
+#[cfg(feature = "model")]
+mod prim;
+#[cfg(feature = "model")]
+pub mod sched;
+
+#[cfg(feature = "model")]
+pub use prim::{
+    atomic, mpsc, thread, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    WaitTimeoutResult,
+};

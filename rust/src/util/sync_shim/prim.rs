@@ -1,0 +1,1049 @@
+//! Model-build implementations of the `sync_shim` primitives.
+//!
+//! Every type here keeps a *real* `std` primitive as its storage and
+//! overlays virtual ownership on top: a virtual task first wins the
+//! resource under the scheduler (parking at a schedule point if it must),
+//! and only then touches the real primitive — which is therefore always
+//! uncontended or held in a way the scheduler already sanctioned. Threads
+//! *outside* a model (e.g. the test harness itself) fall through to plain
+//! `std` behavior, so the same types work in both worlds.
+//!
+//! Two deliberate semantic simplifications, both documented on the shim
+//! module: poisoning is never reported (a panicking schedule aborts the
+//! run), and atomic orderings are ignored (the scheduler serializes every
+//! access, i.e. models run under sequential consistency).
+
+use std::time::Duration;
+
+use super::sched::{current, fresh_rid, Model};
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+/// Model-checked mutex; see the module docs for the ownership scheme.
+pub struct Mutex<T> {
+    rid: usize,
+    /// Virtual ownership flag. Only the running task mutates it, so a
+    /// plain load/swap is race-free by construction.
+    held: std::sync::atomic::AtomicBool,
+    inner: std::sync::Mutex<T>,
+}
+
+/// Guard for [`Mutex`]. Dropping it releases virtual ownership and wakes
+/// every task parked on the lock (re-acquisition order is then a fresh
+/// scheduling decision, like real lock handoff).
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    virt: bool,
+    /// Set by `Condvar::wait*`, which tears the guard down manually.
+    released: bool,
+}
+
+impl<T> Mutex<T> {
+    /// Create a mutex.
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex {
+            rid: fresh_rid(),
+            held: std::sync::atomic::AtomicBool::new(false),
+            inner: std::sync::Mutex::new(t),
+        }
+    }
+
+    /// Consume the mutex, returning its value. Always `Ok`: model
+    /// builds swallow poisoning (matching [`Mutex::lock`]).
+    pub fn into_inner(self) -> std::sync::LockResult<T> {
+        Ok(self.inner.into_inner().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Acquire. Always returns `Ok`: model builds swallow poisoning.
+    pub fn lock(&self) -> std::sync::LockResult<MutexGuard<'_, T>> {
+        if let Some((m, me)) = current() {
+            loop {
+                m.point(me);
+                if !self
+                    .held
+                    .swap(true, std::sync::atomic::Ordering::SeqCst)
+                {
+                    break;
+                }
+                m.block_on(me, self.rid);
+            }
+            let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            Ok(MutexGuard {
+                lock: self,
+                inner: Some(g),
+                virt: true,
+                released: false,
+            })
+        } else {
+            let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            Ok(MutexGuard {
+                lock: self,
+                inner: Some(g),
+                virt: false,
+                released: false,
+            })
+        }
+    }
+
+    fn virtual_unlock(&self) {
+        self.held
+            .store(false, std::sync::atomic::Ordering::SeqCst);
+        if let Some((m, _)) = current() {
+            m.wake_all(self.rid);
+        }
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard accessed after release")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard accessed after release")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.released {
+            return;
+        }
+        drop(self.inner.take());
+        if self.virt {
+            self.lock.virtual_unlock();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// Model-checked condition variable. The model variant has *no spurious
+/// wakeups*, which makes lost-wakeup bugs deterministic: a waiter that
+/// nobody notifies stays parked and the schedule fails as a deadlock.
+pub struct Condvar {
+    rid: usize,
+    real: std::sync::Condvar,
+}
+
+/// Result of [`Condvar::wait_timeout`] (std's type cannot be constructed
+/// outside std, so model builds ship their own; call sites only call
+/// [`WaitTimeoutResult::timed_out`]).
+#[derive(Clone, Copy, Debug)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    /// True when the wait ended because the timeout fired.
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl Condvar {
+    /// Create a condition variable.
+    pub fn new() -> Condvar {
+        Condvar {
+            rid: fresh_rid(),
+            real: std::sync::Condvar::new(),
+        }
+    }
+
+    /// Atomically (w.r.t. the virtual scheduler: the caller stays the
+    /// running task throughout) release the lock, park on the condvar,
+    /// and re-acquire once notified.
+    pub fn wait<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+    ) -> std::sync::LockResult<MutexGuard<'a, T>> {
+        if let Some((m, me)) = current() {
+            let lock = self.release_for_wait(guard, &m);
+            m.block_on(me, self.rid);
+            lock.lock()
+        } else {
+            let lock = guard.lock;
+            let mut guard = guard;
+            let inner = guard.inner.take().expect("guard accessed after release");
+            guard.released = true;
+            drop(guard);
+            let g = self.real.wait(inner).unwrap_or_else(|e| e.into_inner());
+            Ok(MutexGuard {
+                lock,
+                inner: Some(g),
+                virt: false,
+                released: false,
+            })
+        }
+    }
+
+    /// Like [`Condvar::wait`] but the scheduler may fire the timeout at
+    /// any step instead of delivering a notify — so every "deadline races
+    /// the signal" interleaving is explored regardless of `_dur`.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> std::sync::LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if let Some((m, me)) = current() {
+            let lock = self.release_for_wait(guard, &m);
+            let fired = m.timed_block_on(me, self.rid);
+            let g = lock.lock().unwrap_or_else(|e| e.into_inner());
+            Ok((g, WaitTimeoutResult(fired)))
+        } else {
+            let lock = guard.lock;
+            let mut guard = guard;
+            let inner = guard.inner.take().expect("guard accessed after release");
+            guard.released = true;
+            drop(guard);
+            let (g, r) = self
+                .real
+                .wait_timeout(inner, dur)
+                .unwrap_or_else(|e| e.into_inner());
+            Ok((
+                MutexGuard {
+                    lock,
+                    inner: Some(g),
+                    virt: false,
+                    released: false,
+                },
+                WaitTimeoutResult(r.timed_out()),
+            ))
+        }
+    }
+
+    /// Wake one waiter; which one is a recorded scheduling decision.
+    pub fn notify_one(&self) {
+        if let Some((m, me)) = current() {
+            m.wake_one(self.rid);
+            m.point(me);
+        } else {
+            self.real.notify_one();
+        }
+    }
+
+    /// Wake all waiters.
+    pub fn notify_all(&self) {
+        if let Some((m, me)) = current() {
+            m.wake_all(self.rid);
+            m.point(me);
+        } else {
+            self.real.notify_all();
+        }
+    }
+
+    fn release_for_wait<'a, T>(&self, mut guard: MutexGuard<'a, T>, m: &Model) -> &'a Mutex<T> {
+        let lock = guard.lock;
+        drop(guard.inner.take());
+        guard.released = true;
+        drop(guard);
+        lock.held
+            .store(false, std::sync::atomic::Ordering::SeqCst);
+        m.wake_all(lock.rid);
+        lock
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RwLock
+// ---------------------------------------------------------------------------
+
+/// Model-checked reader/writer lock (writer-exclusive, no fairness —
+/// wakeup order after a release is a scheduling decision).
+pub struct RwLock<T> {
+    rid: usize,
+    readers: std::sync::atomic::AtomicUsize,
+    writer: std::sync::atomic::AtomicBool,
+    inner: std::sync::RwLock<T>,
+}
+
+/// Shared guard for [`RwLock`].
+pub struct RwLockReadGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    inner: Option<std::sync::RwLockReadGuard<'a, T>>,
+    virt: bool,
+}
+
+/// Exclusive guard for [`RwLock`].
+pub struct RwLockWriteGuard<'a, T> {
+    lock: &'a RwLock<T>,
+    inner: Option<std::sync::RwLockWriteGuard<'a, T>>,
+    virt: bool,
+}
+
+impl<T> RwLock<T> {
+    /// Create a reader/writer lock.
+    pub fn new(t: T) -> RwLock<T> {
+        RwLock {
+            rid: fresh_rid(),
+            readers: std::sync::atomic::AtomicUsize::new(0),
+            writer: std::sync::atomic::AtomicBool::new(false),
+            inner: std::sync::RwLock::new(t),
+        }
+    }
+
+    /// Acquire shared. Always `Ok` (poisoning swallowed in model builds).
+    pub fn read(&self) -> std::sync::LockResult<RwLockReadGuard<'_, T>> {
+        if let Some((m, me)) = current() {
+            loop {
+                m.point(me);
+                if !self.writer.load(std::sync::atomic::Ordering::SeqCst) {
+                    self.readers
+                        .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    break;
+                }
+                m.block_on(me, self.rid);
+            }
+            let g = self.inner.read().unwrap_or_else(|e| e.into_inner());
+            Ok(RwLockReadGuard {
+                lock: self,
+                inner: Some(g),
+                virt: true,
+            })
+        } else {
+            let g = self.inner.read().unwrap_or_else(|e| e.into_inner());
+            Ok(RwLockReadGuard {
+                lock: self,
+                inner: Some(g),
+                virt: false,
+            })
+        }
+    }
+
+    /// Acquire exclusive. Always `Ok`.
+    pub fn write(&self) -> std::sync::LockResult<RwLockWriteGuard<'_, T>> {
+        if let Some((m, me)) = current() {
+            loop {
+                m.point(me);
+                if !self.writer.load(std::sync::atomic::Ordering::SeqCst)
+                    && self.readers.load(std::sync::atomic::Ordering::SeqCst) == 0
+                {
+                    self.writer
+                        .store(true, std::sync::atomic::Ordering::SeqCst);
+                    break;
+                }
+                m.block_on(me, self.rid);
+            }
+            let g = self.inner.write().unwrap_or_else(|e| e.into_inner());
+            Ok(RwLockWriteGuard {
+                lock: self,
+                inner: Some(g),
+                virt: true,
+            })
+        } else {
+            let g = self.inner.write().unwrap_or_else(|e| e.into_inner());
+            Ok(RwLockWriteGuard {
+                lock: self,
+                inner: Some(g),
+                virt: false,
+            })
+        }
+    }
+
+    fn wake(&self) {
+        if let Some((m, _)) = current() {
+            m.wake_all(self.rid);
+        }
+    }
+}
+
+impl<T> std::ops::Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard accessed after release")
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if self.virt {
+            let prev = self
+                .lock
+                .readers
+                .fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+            if prev == 1 {
+                self.lock.wake();
+            }
+        }
+    }
+}
+
+impl<T> std::ops::Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard accessed after release")
+    }
+}
+
+impl<T> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard accessed after release")
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if self.virt {
+            self.lock
+                .writer
+                .store(false, std::sync::atomic::Ordering::SeqCst);
+            self.lock.wake();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+/// Model-checked atomics: thin wrappers over the real types that insert a
+/// schedule point before every access from a model task. Orderings are
+/// accepted for API compatibility but ignored — the scheduler serializes
+/// all accesses, so models run under sequential consistency (weak-memory
+/// effects are the TSan leg's job, not the model's).
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    fn point() {
+        if let Some((m, me)) = super::current() {
+            m.point(me);
+        }
+    }
+
+    macro_rules! model_atomic_common {
+        ($name:ident, $std:ty, $prim:ty) => {
+            /// Model-checked atomic (schedule point before every access).
+            pub struct $name($std);
+
+            impl $name {
+                /// Create the atomic.
+                pub fn new(v: $prim) -> Self {
+                    Self(<$std>::new(v))
+                }
+
+                /// Load (ordering ignored; see module docs).
+                pub fn load(&self, _o: Ordering) -> $prim {
+                    point();
+                    self.0.load(Ordering::SeqCst)
+                }
+
+                /// Store (ordering ignored).
+                pub fn store(&self, v: $prim, _o: Ordering) {
+                    point();
+                    self.0.store(v, Ordering::SeqCst)
+                }
+
+                /// Swap (ordering ignored).
+                pub fn swap(&self, v: $prim, _o: Ordering) -> $prim {
+                    point();
+                    self.0.swap(v, Ordering::SeqCst)
+                }
+            }
+        };
+    }
+
+    macro_rules! model_atomic_int {
+        ($name:ident, $std:ty, $prim:ty) => {
+            model_atomic_common!($name, $std, $prim);
+
+            impl $name {
+                /// Add, returning the previous value (ordering ignored).
+                pub fn fetch_add(&self, v: $prim, _o: Ordering) -> $prim {
+                    point();
+                    self.0.fetch_add(v, Ordering::SeqCst)
+                }
+
+                /// Subtract, returning the previous value (ordering ignored).
+                pub fn fetch_sub(&self, v: $prim, _o: Ordering) -> $prim {
+                    point();
+                    self.0.fetch_sub(v, Ordering::SeqCst)
+                }
+
+                /// Max, returning the previous value (ordering ignored).
+                pub fn fetch_max(&self, v: $prim, _o: Ordering) -> $prim {
+                    point();
+                    self.0.fetch_max(v, Ordering::SeqCst)
+                }
+            }
+        };
+    }
+
+    model_atomic_common!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    model_atomic_int!(AtomicU8, std::sync::atomic::AtomicU8, u8);
+    model_atomic_int!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+    model_atomic_int!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    model_atomic_int!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+}
+
+// ---------------------------------------------------------------------------
+// Channels
+// ---------------------------------------------------------------------------
+
+/// Model-checked mpsc channels. Whether a channel is virtual is decided at
+/// construction: channels created by a model task are scheduler-driven;
+/// channels created outside (harness plumbing) are the real std ones, so
+/// either kind can flow through the same code.
+pub mod mpsc {
+    pub use std::sync::mpsc::{
+        RecvError, RecvTimeoutError, SendError, TryRecvError, TrySendError,
+    };
+
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use super::super::sched::{current, fresh_rid};
+
+    struct Chan<T> {
+        rid: usize,
+        q: std::sync::Mutex<VecDeque<T>>,
+        /// `None` = unbounded (`channel`), `Some(n)` = rendezvous-ish
+        /// bound (`sync_channel`).
+        cap: Option<usize>,
+        senders: std::sync::atomic::AtomicUsize,
+        rx_alive: std::sync::atomic::AtomicBool,
+    }
+
+    impl<T> Chan<T> {
+        fn new(cap: Option<usize>) -> Arc<Chan<T>> {
+            Arc::new(Chan {
+                rid: fresh_rid(),
+                q: std::sync::Mutex::new(VecDeque::new()),
+                cap,
+                senders: std::sync::atomic::AtomicUsize::new(1),
+                rx_alive: std::sync::atomic::AtomicBool::new(true),
+            })
+        }
+
+        fn push(&self, t: T) {
+            self.q.lock().unwrap_or_else(|e| e.into_inner()).push_back(t);
+        }
+
+        fn pop(&self) -> Option<T> {
+            self.q.lock().unwrap_or_else(|e| e.into_inner()).pop_front()
+        }
+
+        fn len(&self) -> usize {
+            self.q.lock().unwrap_or_else(|e| e.into_inner()).len()
+        }
+
+        fn senders_gone(&self) -> bool {
+            self.senders.load(std::sync::atomic::Ordering::SeqCst) == 0
+        }
+
+        fn rx_gone(&self) -> bool {
+            !self.rx_alive.load(std::sync::atomic::Ordering::SeqCst)
+        }
+
+        fn wake(&self) {
+            if let Some((m, _)) = current() {
+                m.wake_all(self.rid);
+            }
+        }
+    }
+
+    enum SenderImpl<T> {
+        Real(std::sync::mpsc::Sender<T>),
+        Virt(Arc<Chan<T>>),
+    }
+
+    enum SyncSenderImpl<T> {
+        Real(std::sync::mpsc::SyncSender<T>),
+        Virt(Arc<Chan<T>>),
+    }
+
+    enum ReceiverImpl<T> {
+        Real(std::sync::mpsc::Receiver<T>),
+        Virt(Arc<Chan<T>>),
+    }
+
+    /// Asynchronous (unbounded) sender.
+    pub struct Sender<T>(SenderImpl<T>);
+
+    /// Bounded sender.
+    pub struct SyncSender<T>(SyncSenderImpl<T>);
+
+    /// Receiver for either channel flavor.
+    pub struct Receiver<T>(ReceiverImpl<T>);
+
+    /// Unbounded channel (virtual iff created by a model task).
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        if current().is_some() {
+            let c = Chan::new(None);
+            (
+                Sender(SenderImpl::Virt(Arc::clone(&c))),
+                Receiver(ReceiverImpl::Virt(c)),
+            )
+        } else {
+            let (t, r) = std::sync::mpsc::channel();
+            (Sender(SenderImpl::Real(t)), Receiver(ReceiverImpl::Real(r)))
+        }
+    }
+
+    /// Bounded channel (virtual iff created by a model task).
+    pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+        if current().is_some() {
+            let c = Chan::new(Some(bound));
+            (
+                SyncSender(SyncSenderImpl::Virt(Arc::clone(&c))),
+                Receiver(ReceiverImpl::Virt(c)),
+            )
+        } else {
+            let (t, r) = std::sync::mpsc::sync_channel(bound);
+            (
+                SyncSender(SyncSenderImpl::Real(t)),
+                Receiver(ReceiverImpl::Real(r)),
+            )
+        }
+    }
+
+    fn ctx() -> (Arc<super::super::sched::Model>, super::super::sched::TaskId) {
+        current().expect("virtual channel endpoint used outside a model task")
+    }
+
+    impl<T> Sender<T> {
+        /// Send, failing if the receiver is gone.
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            match &self.0 {
+                SenderImpl::Real(s) => s.send(t),
+                SenderImpl::Virt(c) => {
+                    let (m, me) = ctx();
+                    m.point(me);
+                    if c.rx_gone() {
+                        return Err(SendError(t));
+                    }
+                    c.push(t);
+                    c.wake();
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            match &self.0 {
+                SenderImpl::Real(s) => Sender(SenderImpl::Real(s.clone())),
+                SenderImpl::Virt(c) => {
+                    c.senders
+                        .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    Sender(SenderImpl::Virt(Arc::clone(c)))
+                }
+            }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            if let SenderImpl::Virt(c) = &self.0 {
+                let prev = c
+                    .senders
+                    .fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+                if prev == 1 {
+                    c.wake();
+                }
+            }
+        }
+    }
+
+    impl<T> SyncSender<T> {
+        /// Blocking bounded send.
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            match &self.0 {
+                SyncSenderImpl::Real(s) => s.send(t),
+                SyncSenderImpl::Virt(c) => {
+                    let (m, me) = ctx();
+                    let mut t = Some(t);
+                    loop {
+                        m.point(me);
+                        if c.rx_gone() {
+                            return Err(SendError(t.take().expect("send value consumed twice")));
+                        }
+                        let cap = c.cap.unwrap_or(usize::MAX).max(1);
+                        if c.len() < cap {
+                            c.push(t.take().expect("send value consumed twice"));
+                            c.wake();
+                            return Ok(());
+                        }
+                        m.block_on(me, c.rid);
+                    }
+                }
+            }
+        }
+
+        /// Non-blocking bounded send.
+        pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+            match &self.0 {
+                SyncSenderImpl::Real(s) => s.try_send(t),
+                SyncSenderImpl::Virt(c) => {
+                    let (m, me) = ctx();
+                    m.point(me);
+                    if c.rx_gone() {
+                        return Err(TrySendError::Disconnected(t));
+                    }
+                    let cap = c.cap.unwrap_or(usize::MAX).max(1);
+                    if c.len() >= cap {
+                        return Err(TrySendError::Full(t));
+                    }
+                    c.push(t);
+                    c.wake();
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    impl<T> Clone for SyncSender<T> {
+        fn clone(&self) -> Self {
+            match &self.0 {
+                SyncSenderImpl::Real(s) => SyncSender(SyncSenderImpl::Real(s.clone())),
+                SyncSenderImpl::Virt(c) => {
+                    c.senders
+                        .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    SyncSender(SyncSenderImpl::Virt(Arc::clone(c)))
+                }
+            }
+        }
+    }
+
+    impl<T> Drop for SyncSender<T> {
+        fn drop(&mut self) {
+            if let SyncSenderImpl::Virt(c) = &self.0 {
+                let prev = c
+                    .senders
+                    .fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+                if prev == 1 {
+                    c.wake();
+                }
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        /// Blocking receive.
+        pub fn recv(&self) -> Result<T, RecvError> {
+            match &self.0 {
+                ReceiverImpl::Real(r) => r.recv(),
+                ReceiverImpl::Virt(c) => {
+                    let (m, me) = ctx();
+                    loop {
+                        m.point(me);
+                        if let Some(t) = c.pop() {
+                            c.wake();
+                            return Ok(t);
+                        }
+                        if c.senders_gone() {
+                            return Err(RecvError);
+                        }
+                        m.block_on(me, c.rid);
+                    }
+                }
+            }
+        }
+
+        /// Receive with a deadline; in model builds the scheduler may fire
+        /// the timeout at any step regardless of `dur`.
+        pub fn recv_timeout(&self, dur: Duration) -> Result<T, RecvTimeoutError> {
+            match &self.0 {
+                ReceiverImpl::Real(r) => r.recv_timeout(dur),
+                ReceiverImpl::Virt(c) => {
+                    let (m, me) = ctx();
+                    loop {
+                        m.point(me);
+                        if let Some(t) = c.pop() {
+                            c.wake();
+                            return Ok(t);
+                        }
+                        if c.senders_gone() {
+                            return Err(RecvTimeoutError::Disconnected);
+                        }
+                        if m.timed_block_on(me, c.rid) {
+                            return Err(RecvTimeoutError::Timeout);
+                        }
+                    }
+                }
+            }
+        }
+
+        /// Non-blocking receive.
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            match &self.0 {
+                ReceiverImpl::Real(r) => r.try_recv(),
+                ReceiverImpl::Virt(c) => {
+                    let (m, me) = ctx();
+                    m.point(me);
+                    if let Some(t) = c.pop() {
+                        c.wake();
+                        return Ok(t);
+                    }
+                    if c.senders_gone() {
+                        return Err(TryRecvError::Disconnected);
+                    }
+                    Err(TryRecvError::Empty)
+                }
+            }
+        }
+
+        /// Blocking iterator over received values (ends when senders drop).
+        pub fn iter(&self) -> Iter<'_, T> {
+            Iter { rx: self }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            if let ReceiverImpl::Virt(c) = &self.0 {
+                c.rx_alive
+                    .store(false, std::sync::atomic::Ordering::SeqCst);
+                c.wake();
+            }
+        }
+    }
+
+    /// Iterator returned by [`Receiver::iter`].
+    pub struct Iter<'a, T> {
+        rx: &'a Receiver<T>,
+    }
+
+    impl<T> Iterator for Iter<'_, T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.recv().ok()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+/// Model-checked thread spawning. A spawn from a model task registers a
+/// new virtual task (backed by a real OS thread that parks until the
+/// scheduler picks it); a spawn from outside is a plain `std` spawn.
+pub mod thread {
+    use std::panic::{self, AssertUnwindSafe};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use super::super::sched::{self, current, join_rid, Model, TaskId};
+
+    /// Thread factory mirroring `std::thread::Builder`.
+    #[derive(Default)]
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    enum HandleImpl<T> {
+        Real(std::thread::JoinHandle<T>),
+        Virt {
+            model: Arc<Model>,
+            task: TaskId,
+            result: Arc<std::sync::Mutex<Option<std::thread::Result<T>>>>,
+        },
+    }
+
+    /// Handle to a spawned thread/task.
+    pub struct JoinHandle<T>(HandleImpl<T>);
+
+    impl Builder {
+        /// Create a builder.
+        pub fn new() -> Builder {
+            Builder { name: None }
+        }
+
+        /// Name the thread.
+        pub fn name(mut self, name: String) -> Builder {
+            self.name = Some(name);
+            self
+        }
+
+        /// Spawn. From a model task this registers a virtual task; the
+        /// child's first step happens when the scheduler picks it.
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            let mut b = std::thread::Builder::new();
+            if let Some(n) = &self.name {
+                b = b.name(n.clone());
+            }
+            if let Some((m, me)) = current() {
+                let model = Arc::clone(&m);
+                let task = model.register_task();
+                let result: Arc<std::sync::Mutex<Option<std::thread::Result<T>>>> =
+                    Arc::new(std::sync::Mutex::new(None));
+                let r2 = Arc::clone(&result);
+                let m2 = Arc::clone(&model);
+                let real = b.spawn(move || {
+                    sched::set_ctx(Some((Arc::clone(&m2), task)));
+                    let out = panic::catch_unwind(AssertUnwindSafe(|| {
+                        m2.wait_until_active(task);
+                        f()
+                    }));
+                    match out {
+                        Ok(v) => {
+                            *r2.lock().unwrap_or_else(|e| e.into_inner()) = Some(Ok(v));
+                            m2.task_finished(task);
+                        }
+                        Err(p) => {
+                            let msg = sched::panic_msg(p.as_ref());
+                            *r2.lock().unwrap_or_else(|e| e.into_inner()) = Some(Err(p));
+                            m2.task_panicked(task, msg);
+                        }
+                    }
+                    sched::set_ctx(None);
+                })?;
+                model.note_os_handle(real);
+                // Schedule point: the child is now a candidate.
+                m.point(me);
+                Ok(JoinHandle(HandleImpl::Virt {
+                    model,
+                    task,
+                    result,
+                }))
+            } else {
+                Ok(JoinHandle(HandleImpl::Real(b.spawn(f)?)))
+            }
+        }
+    }
+
+    /// Spawn an unnamed thread (panics on spawn failure, like std).
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+
+    /// In a model task this is a plain schedule point (virtual time has
+    /// no duration); outside it really sleeps.
+    pub fn sleep(dur: Duration) {
+        if let Some((m, me)) = current() {
+            let _ = dur;
+            m.point(me);
+        } else {
+            std::thread::sleep(dur);
+        }
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Wait for the thread/task and collect its result.
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.0 {
+                HandleImpl::Real(h) => h.join(),
+                HandleImpl::Virt {
+                    model,
+                    task,
+                    result,
+                } => {
+                    let (m, me) =
+                        current().expect("virtual JoinHandle joined outside a model task");
+                    debug_assert!(Arc::ptr_eq(&m, &model));
+                    loop {
+                        if let Some(r) = result.lock().unwrap_or_else(|e| e.into_inner()).take()
+                        {
+                            return r;
+                        }
+                        m.block_on(me, join_rid(task));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Smoke check that the virtual pieces agree with each other (runs only
+// under `--features model`, alongside the real models in tests/model.rs).
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::sched::{explore, ExploreOpts};
+    use super::*;
+
+    #[test]
+    fn model_mutex_counter_is_exact() {
+        if super::super::sched::replay_active() {
+            return;
+        }
+        let stats = explore(
+            "prim-mutex-counter",
+            ExploreOpts {
+                schedules: 64,
+                ..ExploreOpts::default()
+            },
+            || {
+                let n = Arc::new(Mutex::new(0u32));
+                let mut hs = Vec::new();
+                for _ in 0..3 {
+                    let n = Arc::clone(&n);
+                    hs.push(thread::spawn(move || {
+                        for _ in 0..2 {
+                            *n.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+                        }
+                    }));
+                }
+                for h in hs {
+                    h.join().expect("worker panicked");
+                }
+                assert_eq!(*n.lock().unwrap_or_else(|e| e.into_inner()), 6);
+            },
+        );
+        assert!(stats.runs >= 64);
+    }
+
+    #[test]
+    fn model_channel_delivers_everything() {
+        if super::super::sched::replay_active() {
+            return;
+        }
+        explore(
+            "prim-channel",
+            ExploreOpts {
+                schedules: 64,
+                ..ExploreOpts::default()
+            },
+            || {
+                let (tx, rx) = mpsc::sync_channel::<u32>(1);
+                let tx2 = tx.clone();
+                let p = thread::spawn(move || {
+                    for i in 0..3 {
+                        tx.send(i).expect("receiver alive");
+                    }
+                });
+                let q = thread::spawn(move || {
+                    for i in 10..13 {
+                        tx2.send(i).expect("receiver alive");
+                    }
+                });
+                let mut got = Vec::new();
+                for _ in 0..6 {
+                    got.push(rx.recv().expect("senders alive"));
+                }
+                p.join().expect("producer");
+                q.join().expect("producer");
+                got.sort_unstable();
+                assert_eq!(got, vec![0, 1, 2, 10, 11, 12]);
+            },
+        );
+    }
+}

@@ -1,0 +1,726 @@
+//! The cooperative virtual scheduler behind the `model` feature.
+//!
+//! A *model* is one closure executed many times, each time under a
+//! different interleaving of its virtual tasks. Tasks are real OS threads,
+//! but exactly one is ever running: every synchronization operation in
+//! [`super::prim`] calls back into the task's [`Model`], which parks the
+//! caller and hands control to the task chosen for the next step. Because
+//! the primitives are the *only* interaction points between tasks, picking
+//! the running task at each such point is enough to enumerate every
+//! observable interleaving (a classic partial-order reduction: pure
+//! compute between schedule points commutes).
+//!
+//! Each multi-way decision — which task runs, which `notify_one` waiter
+//! wakes, which branch a [`choice`] takes — is appended to a trace. The
+//! trace is the schedule's identity: replaying the same trace reproduces
+//! the same execution bit-for-bit, which is how `GLINT_MODEL_REPLAY`
+//! tokens work and why `Date`-free determinism matters in model code.
+//!
+//! Exploration policies:
+//!
+//! - **Random walk** ([`ExploreOpts::dfs`] = false): each schedule draws
+//!   decisions from a per-schedule seeded PCG64. Good for large models
+//!   where systematic enumeration cannot finish; distinct-trace counting
+//!   makes the coverage measurable.
+//! - **Bounded DFS** ([`ExploreOpts::dfs`] = true): stateless iterative
+//!   deepening over *preemption bounds* (Musuvathi/Qadeer-style). A
+//!   prefix stack replays a recorded prefix, takes one alternative branch,
+//!   and continues with default choices; alternatives that would exceed
+//!   the current preemption budget are deferred to the next bound. Most
+//!   concurrency bugs need very few preemptions, so low bounds find them
+//!   fast while still being systematic.
+//!
+//! Failure handling: a deadlock (no runnable or timed-waiting task while
+//! unfinished tasks remain), a task panic, or an explicit assertion inside
+//! the model marks the whole schedule failed, prints the replay token,
+//! appends it to the `GLINT_MODEL_ARTIFACT` file if set, and unwinds every
+//! parked task with a sentinel panic.
+
+use std::collections::HashSet;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::rng::Pcg64;
+
+/// Panic payload used to tear down parked tasks once a schedule fails.
+/// Wrappers recognize it and do not report it as a task failure.
+pub(crate) const ABORT: &str = "__glint_model_schedule_abort__";
+
+/// Index of a virtual task within one schedule (0 is the root body).
+pub type TaskId = usize;
+
+/// Allocate a process-unique resource id for a primitive (lock, condvar,
+/// channel). Blocked tasks record the rid they are waiting on; ids only
+/// need to be unique within one model run, so a global counter is fine.
+pub(crate) fn fresh_rid() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(1);
+    NEXT.fetch_add(1, Ordering::SeqCst)
+}
+
+/// The rid joiners of task `t` block on (top of the rid space, far above
+/// anything `fresh_rid` hands out).
+pub(crate) fn join_rid(t: TaskId) -> usize {
+    usize::MAX - t
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    /// Eligible to run.
+    Runnable,
+    /// Parked until `wake_*` on this rid.
+    Blocked(usize),
+    /// Parked on this rid, but the scheduler may "fire the timeout" and
+    /// run the task anyway — which is how the model expresses that a
+    /// `wait_timeout`/`recv_timeout` deadline can race any other event.
+    TimedWait(usize),
+    Finished,
+}
+
+struct TaskState {
+    status: Status,
+    /// Set when the scheduler woke the task by firing its timeout rather
+    /// than via a notify; consumed by `timed_block_on`.
+    timed_out: bool,
+    /// FIFO stamp taken when the task parked (tie-break for `wake_one`).
+    wait_seq: u64,
+}
+
+/// One recorded nondeterministic decision. Single-option steps are not
+/// recorded, so the trace is exactly the schedule's branching structure.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Choice {
+    /// How many options were available.
+    pub options: usize,
+    /// The option taken.
+    pub chosen: usize,
+    /// The option that would have kept the previously running task
+    /// running, when it was still runnable (`None` for data choices and
+    /// for points where the task blocked). Taking any *other* option is a
+    /// preemption; the DFS bound counts those.
+    pub stay: Option<usize>,
+}
+
+struct SchedState {
+    tasks: Vec<TaskState>,
+    active: Option<TaskId>,
+    /// Tasks not yet `Finished`.
+    live: usize,
+    failed: Option<String>,
+    trace: Vec<Choice>,
+    replay: Vec<usize>,
+    rng: Pcg64,
+    /// Past the replay prefix: draw from `rng` (true) or take option 0.
+    random: bool,
+    seq: u64,
+    steps: usize,
+    max_steps: usize,
+}
+
+/// Scheduler for one schedule (one execution of the model body).
+pub struct Model {
+    name: String,
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    /// Real handles of the OS threads backing virtual tasks; the runner
+    /// joins them all after the root returns so no thread leaks across
+    /// schedules.
+    os_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<(Arc<Model>, TaskId)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// The (model, task) identity of the calling thread, if it is a virtual
+/// task. Primitives consult this; `None` means "behave like std".
+pub(crate) fn current() -> Option<(Arc<Model>, TaskId)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+pub(crate) fn set_ctx(v: Option<(Arc<Model>, TaskId)>) {
+    CTX.with(|c| *c.borrow_mut() = v);
+}
+
+/// True when this process is replaying a `GLINT_MODEL_REPLAY` token.
+/// Models other than the token's target skip themselves in that mode, so
+/// tests must not assert exploration stats when this returns true.
+pub fn replay_active() -> bool {
+    std::env::var("GLINT_MODEL_REPLAY").is_ok()
+}
+
+impl Model {
+    fn new(name: &str, replay: Vec<usize>, random: bool, seed: u64, max_steps: usize) -> Arc<Model> {
+        Arc::new(Model {
+            name: name.to_string(),
+            state: Mutex::new(SchedState {
+                tasks: Vec::new(),
+                active: None,
+                live: 0,
+                failed: None,
+                trace: Vec::new(),
+                replay,
+                rng: Pcg64::new(seed),
+                random,
+                seq: 0,
+                steps: 0,
+                max_steps,
+            }),
+            cv: Condvar::new(),
+            os_handles: Mutex::new(Vec::new()),
+        })
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        // The scheduler lock is never held across a park except via
+        // `cv.wait`, so poisoning can only come from a panic inside the
+        // scheduler itself; recover the guard and keep tearing down.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub(crate) fn register_task(&self) -> TaskId {
+        let mut st = self.locked();
+        let id = st.tasks.len();
+        st.tasks.push(TaskState {
+            status: Status::Runnable,
+            timed_out: false,
+            wait_seq: 0,
+        });
+        st.live += 1;
+        id
+    }
+
+    pub(crate) fn note_os_handle(&self, h: std::thread::JoinHandle<()>) {
+        self.os_handles
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(h);
+    }
+
+    /// Park until the scheduler makes this task active (used by a freshly
+    /// spawned task before its first step).
+    pub(crate) fn wait_until_active(&self, me: TaskId) {
+        let mut st = self.locked();
+        while st.active != Some(me) {
+            if st.failed.is_some() {
+                drop(st);
+                panic!("{ABORT}");
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// A plain schedule point: the running task stays runnable but the
+    /// scheduler may hand control to any other candidate here.
+    pub(crate) fn point(&self, me: TaskId) {
+        self.reschedule(me, Status::Runnable);
+    }
+
+    /// Park the running task on `rid` until some task calls `wake_*`.
+    pub(crate) fn block_on(&self, me: TaskId, rid: usize) {
+        self.reschedule(me, Status::Blocked(rid));
+    }
+
+    /// Park on `rid` but let the scheduler fire the timeout instead of a
+    /// wakeup. Returns true when the wait ended by timing out.
+    pub(crate) fn timed_block_on(&self, me: TaskId, rid: usize) -> bool {
+        self.reschedule(me, Status::TimedWait(rid));
+        let mut st = self.locked();
+        let fired = st.tasks[me].timed_out;
+        st.tasks[me].timed_out = false;
+        fired
+    }
+
+    /// Record a data decision in `0..n` for the running task.
+    pub(crate) fn data_choice(&self, _me: TaskId, n: usize) -> usize {
+        let mut st = self.locked();
+        if st.failed.is_some() {
+            drop(st);
+            panic!("{ABORT}");
+        }
+        decide(&mut st, n.max(1), None)
+    }
+
+    /// Wake every task parked on `rid`.
+    pub(crate) fn wake_all(&self, rid: usize) {
+        let mut st = self.locked();
+        for t in st.tasks.iter_mut() {
+            if t.status == Status::Blocked(rid) || t.status == Status::TimedWait(rid) {
+                t.status = Status::Runnable;
+                t.timed_out = false;
+            }
+        }
+    }
+
+    /// Wake one task parked on `rid`. Which waiter wakes is itself a
+    /// recorded scheduling decision (std's `notify_one` picks arbitrarily,
+    /// so the model explores every pick).
+    pub(crate) fn wake_one(&self, rid: usize) {
+        let mut st = self.locked();
+        let mut waiters: Vec<TaskId> = Vec::new();
+        for (i, t) in st.tasks.iter().enumerate() {
+            if t.status == Status::Blocked(rid) || t.status == Status::TimedWait(rid) {
+                waiters.push(i);
+            }
+        }
+        if waiters.is_empty() {
+            return;
+        }
+        waiters.sort_by_key(|&i| st.tasks[i].wait_seq);
+        let idx = decide(&mut st, waiters.len(), None);
+        let w = waiters[idx];
+        st.tasks[w].status = Status::Runnable;
+        st.tasks[w].timed_out = false;
+    }
+
+    /// Mark the running task finished and hand control onward.
+    pub(crate) fn task_finished(&self, me: TaskId) {
+        let mut st = self.locked();
+        if st.tasks[me].status != Status::Finished {
+            st.tasks[me].status = Status::Finished;
+            st.live -= 1;
+        }
+        let jr = join_rid(me);
+        for t in st.tasks.iter_mut() {
+            if t.status == Status::Blocked(jr) {
+                t.status = Status::Runnable;
+            }
+        }
+        if st.failed.is_some() {
+            self.cv.notify_all();
+            return;
+        }
+        if st.active == Some(me) {
+            self.pick_next(&mut st, None);
+        }
+    }
+
+    /// Called by the spawn/run wrappers when a task's closure panicked.
+    /// The ABORT sentinel (scheduled teardown) is not a failure; anything
+    /// else fails the schedule with the panic message.
+    pub(crate) fn task_panicked(&self, me: TaskId, msg: String) {
+        let aborting = msg.contains(ABORT);
+        let mut st = self.locked();
+        if st.tasks[me].status != Status::Finished {
+            st.tasks[me].status = Status::Finished;
+            st.live -= 1;
+        }
+        let jr = join_rid(me);
+        for t in st.tasks.iter_mut() {
+            if t.status == Status::Blocked(jr) {
+                t.status = Status::Runnable;
+            }
+        }
+        if !aborting && st.failed.is_none() {
+            self.fail_locked(&mut st, format!("task {me} panicked: {msg}"));
+        } else {
+            if st.active == Some(me) {
+                st.active = None;
+            }
+            self.cv.notify_all();
+        }
+    }
+
+    /// Fail the current schedule from model code (e.g. an oracle).
+    pub fn fail(&self, msg: &str) -> ! {
+        let mut st = self.locked();
+        if st.failed.is_none() {
+            self.fail_locked(&mut st, msg.to_string());
+        }
+        drop(st);
+        panic!("{ABORT}");
+    }
+
+    fn fail_locked(&self, st: &mut SchedState, msg: String) {
+        let token = trace_token(&st.trace);
+        let full = format!(
+            "model '{}' failed: {msg}\n  replay with: GLINT_MODEL_REPLAY='{}:{token}'",
+            self.name, self.name
+        );
+        eprintln!("{full}");
+        if let Ok(path) = std::env::var("GLINT_MODEL_ARTIFACT") {
+            use std::io::Write as _;
+            if let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+            {
+                let _ = writeln!(f, "{full}");
+            }
+        }
+        st.failed = Some(full);
+        st.active = None;
+        self.cv.notify_all();
+    }
+
+    /// The running task hands control back with its new status and parks
+    /// until it is active again.
+    fn reschedule(&self, me: TaskId, status: Status) {
+        if std::thread::panicking() {
+            // Teardown path: drops of guards/channels during an unwind
+            // must never park, or the unwinding thread would hang.
+            return;
+        }
+        let mut st = self.locked();
+        if st.failed.is_some() {
+            drop(st);
+            panic!("{ABORT}");
+        }
+        st.tasks[me].status = status;
+        if matches!(status, Status::Blocked(_) | Status::TimedWait(_)) {
+            st.seq += 1;
+            st.tasks[me].wait_seq = st.seq;
+        }
+        self.pick_next(&mut st, Some(me));
+        while st.active != Some(me) {
+            if st.failed.is_some() {
+                drop(st);
+                panic!("{ABORT}");
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn pick_next(&self, st: &mut SchedState, from: Option<TaskId>) {
+        st.steps += 1;
+        if st.steps > st.max_steps {
+            self.fail_locked(
+                st,
+                format!("exceeded max_steps={} (livelock?)", st.max_steps),
+            );
+            return;
+        }
+        let candidates: Vec<TaskId> = st
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t.status, Status::Runnable | Status::TimedWait(_)))
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            if st.live == 0 {
+                st.active = None;
+                self.cv.notify_all();
+                return;
+            }
+            let blocked: Vec<String> = st
+                .tasks
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| matches!(t.status, Status::Blocked(_)))
+                .map(|(i, t)| format!("task {i} on {:?}", t.status))
+                .collect();
+            self.fail_locked(
+                st,
+                format!(
+                    "deadlock: {} unfinished task(s), none runnable [{}]",
+                    st.live,
+                    blocked.join(", ")
+                ),
+            );
+            return;
+        }
+        let stay = from.and_then(|f| {
+            if st.tasks[f].status == Status::Runnable {
+                candidates.iter().position(|&c| c == f)
+            } else {
+                None
+            }
+        });
+        let idx = decide(st, candidates.len(), stay);
+        let next = candidates[idx];
+        if matches!(st.tasks[next].status, Status::TimedWait(_)) {
+            st.tasks[next].status = Status::Runnable;
+            st.tasks[next].timed_out = true;
+        }
+        st.active = Some(next);
+        self.cv.notify_all();
+    }
+}
+
+/// Take one decision with `options` alternatives: replay prefix first,
+/// then the schedule policy (seeded random or option 0 for DFS default
+/// continuation). Single-option decisions are not recorded.
+fn decide(st: &mut SchedState, options: usize, stay: Option<usize>) -> usize {
+    if options <= 1 {
+        return 0;
+    }
+    let step = st.trace.len();
+    let chosen = if step < st.replay.len() {
+        st.replay[step].min(options - 1)
+    } else if st.random {
+        (st.rng.next_u64() % options as u64) as usize
+    } else {
+        0
+    };
+    st.trace.push(Choice {
+        options,
+        chosen,
+        stay,
+    });
+    chosen
+}
+
+/// Nondeterministic data choice in `0..n` (fault injection, value picks).
+/// Recorded in the trace like a scheduling decision, so replays cover it;
+/// outside a model task it returns 0.
+pub fn choice(n: usize) -> usize {
+    match current() {
+        Some((m, me)) => m.data_choice(me, n),
+        None => 0,
+    }
+}
+
+/// Fail the current schedule if `cond` is false. Inside a model task this
+/// routes through the scheduler (printing a replay token); outside it is a
+/// plain assert.
+pub fn model_assert(cond: bool, msg: &str) {
+    if cond {
+        return;
+    }
+    match current() {
+        Some((m, _)) => m.fail(msg),
+        None => panic!("model assertion failed: {msg}"),
+    }
+}
+
+fn trace_token(trace: &[Choice]) -> String {
+    if trace.is_empty() {
+        return "-".to_string();
+    }
+    trace
+        .iter()
+        .map(|c| c.chosen.to_string())
+        .collect::<Vec<_>>()
+        .join(".")
+}
+
+fn parse_token(tok: &str) -> Vec<usize> {
+    if tok == "-" {
+        return Vec::new();
+    }
+    tok.split('.')
+        .filter_map(|s| s.trim().parse::<usize>().ok())
+        .collect()
+}
+
+/// Exploration parameters for [`explore`].
+#[derive(Clone, Copy, Debug)]
+pub struct ExploreOpts {
+    /// Schedule budget (random: exactly this many runs; DFS: upper bound).
+    pub schedules: usize,
+    /// Per-schedule decision cap; exceeding it fails the schedule. Guards
+    /// against livelocks (e.g. a timeout loop the policy keeps feeding).
+    pub max_steps: usize,
+    /// Systematic bounded-preemption DFS instead of random walks.
+    pub dfs: bool,
+    /// Max preemptions per schedule for DFS (iteratively deepened 0..=N).
+    pub max_preemptions: usize,
+    /// Base seed for the random policy.
+    pub seed: u64,
+}
+
+impl Default for ExploreOpts {
+    fn default() -> Self {
+        ExploreOpts {
+            schedules: 1200,
+            max_steps: 20_000,
+            dfs: false,
+            max_preemptions: 2,
+            seed: 0x5eed_0915,
+        }
+    }
+}
+
+/// What an exploration covered.
+#[derive(Clone, Copy, Debug)]
+pub struct ExploreStats {
+    /// Schedules executed.
+    pub runs: usize,
+    /// Distinct decision traces among them.
+    pub distinct: usize,
+}
+
+struct RunOutcome {
+    failed: Option<String>,
+    trace: Vec<Choice>,
+}
+
+fn run_one(
+    name: &str,
+    replay: Vec<usize>,
+    random: bool,
+    seed: u64,
+    max_steps: usize,
+    body: &Arc<dyn Fn() + Send + Sync>,
+) -> RunOutcome {
+    let model = Model::new(name, replay, random, seed, max_steps);
+    let root = model.register_task();
+    model.locked().active = Some(root);
+    let m2 = Arc::clone(&model);
+    let b = Arc::clone(body);
+    let h = std::thread::Builder::new()
+        .name(format!("model-{name}-root"))
+        .spawn(move || {
+            set_ctx(Some((Arc::clone(&m2), root)));
+            let out = panic::catch_unwind(AssertUnwindSafe(|| b()));
+            match out {
+                Ok(()) => m2.task_finished(root),
+                Err(p) => m2.task_panicked(root, panic_msg(p.as_ref())),
+            }
+            set_ctx(None);
+        })
+        .expect("spawn model root thread");
+    let _ = h.join();
+    // Tasks spawned by the body may still be running (the root can return
+    // while workers drain); join OS threads until none remain, including
+    // any spawned by threads we are joining.
+    loop {
+        let hs: Vec<_> = model
+            .os_handles
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
+        if hs.is_empty() {
+            break;
+        }
+        for h in hs {
+            let _ = h.join();
+        }
+    }
+    let st = model.locked();
+    RunOutcome {
+        failed: st.failed.clone(),
+        trace: st.trace.clone(),
+    }
+}
+
+pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Silence the default panic hook for ABORT-sentinel unwinds (they are
+/// scheduled teardown, not failures) while keeping it for real panics.
+fn install_quiet_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            let quiet = info
+                .payload()
+                .downcast_ref::<&str>()
+                .is_some_and(|s| s.contains(ABORT))
+                || info
+                    .payload()
+                    .downcast_ref::<String>()
+                    .is_some_and(|s| s.contains(ABORT));
+            if !quiet {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Run `body` under many interleavings. Panics (with the failing trace's
+/// replay token already printed) on the first failing schedule; otherwise
+/// returns coverage stats. When `GLINT_MODEL_REPLAY=name:token` is set,
+/// runs exactly that schedule for the matching model and skips all others
+/// (see [`replay_active`]).
+pub fn explore<F>(name: &str, opts: ExploreOpts, body: F) -> ExploreStats
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    install_quiet_hook();
+    let body: Arc<dyn Fn() + Send + Sync> = Arc::new(body);
+
+    if let Ok(spec) = std::env::var("GLINT_MODEL_REPLAY") {
+        let (target, tok) = spec.split_once(':').unwrap_or((spec.as_str(), "-"));
+        if target != name {
+            return ExploreStats {
+                runs: 0,
+                distinct: 0,
+            };
+        }
+        let out = run_one(name, parse_token(tok), false, opts.seed, opts.max_steps, &body);
+        if let Some(f) = out.failed {
+            panic!("{f}");
+        }
+        eprintln!("model '{name}': replay passed");
+        return ExploreStats {
+            runs: 1,
+            distinct: 1,
+        };
+    }
+
+    let mut seen: HashSet<Vec<Choice>> = HashSet::new();
+    let mut runs = 0usize;
+
+    if opts.dfs {
+        let mut queued: HashSet<Vec<usize>> = HashSet::new();
+        'bounds: for bound in 0..=opts.max_preemptions {
+            let mut stack: Vec<Vec<usize>> = vec![Vec::new()];
+            while let Some(prefix) = stack.pop() {
+                if runs >= opts.schedules {
+                    break 'bounds;
+                }
+                let out = run_one(name, prefix.clone(), false, opts.seed, opts.max_steps, &body);
+                runs += 1;
+                if let Some(f) = out.failed {
+                    panic!("{f}");
+                }
+                // Expand alternatives past the forced prefix, respecting
+                // the preemption budget along the executed trace.
+                let mut preemptions = 0usize;
+                for (i, c) in out.trace.iter().enumerate() {
+                    if i >= prefix.len() {
+                        for alt in 0..c.options {
+                            if alt == c.chosen {
+                                continue;
+                            }
+                            let is_preempt =
+                                matches!(c.stay, Some(s) if s != alt) as usize;
+                            if preemptions + is_preempt > bound {
+                                continue;
+                            }
+                            let mut p: Vec<usize> =
+                                out.trace[..i].iter().map(|c| c.chosen).collect();
+                            p.push(alt);
+                            if queued.insert(p.clone()) {
+                                stack.push(p);
+                            }
+                        }
+                    }
+                    if matches!(c.stay, Some(s) if s != c.chosen) {
+                        preemptions += 1;
+                    }
+                }
+                seen.insert(out.trace);
+            }
+        }
+    } else {
+        while runs < opts.schedules {
+            let seed = opts
+                .seed
+                .wrapping_add((runs as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            let out = run_one(name, Vec::new(), true, seed, opts.max_steps, &body);
+            runs += 1;
+            if let Some(f) = out.failed {
+                panic!("{f}");
+            }
+            seen.insert(out.trace);
+        }
+    }
+
+    ExploreStats {
+        runs,
+        distinct: seen.len(),
+    }
+}

@@ -11,24 +11,40 @@
 //!   on `std::thread::scope`, used for the per-partition sampling loops.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
+
+use crate::util::sync_shim::{thread, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// All mutable pool state lives behind one mutex, and both condvars
+/// signal only while the predicate they guard was just changed under that
+/// mutex. The previous design kept `shutdown`/`in_flight` as atomics
+/// beside the queue lock; the model checker (`tests/model.rs`,
+/// `threadpool-*` models) showed the shutdown flag being set between a
+/// worker's check and its park — a lost wakeup that left `Drop` joining a
+/// parked worker forever. Folding the flags under the lock closes every
+/// such window by construction, and leaves no atomics (hence no ordering
+/// choices) in the pool at all.
+struct PoolState {
+    queue: VecDeque<Job>,
+    /// Jobs submitted and not yet finished (queued + running).
+    in_flight: usize,
+    shutdown: bool,
+}
+
 struct Shared {
-    queue: Mutex<VecDeque<Job>>,
+    state: Mutex<PoolState>,
+    /// Signaled when a job is queued or shutdown begins.
     available: Condvar,
-    shutdown: AtomicBool,
-    in_flight: AtomicUsize,
+    /// Signaled when `in_flight` drops to zero.
     done: Condvar,
 }
 
 /// Fixed-size thread pool with FIFO job dispatch.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
@@ -36,16 +52,18 @@ impl ThreadPool {
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+            }),
             available: Condvar::new(),
-            shutdown: AtomicBool::new(false),
-            in_flight: AtomicUsize::new(0),
             done: Condvar::new(),
         });
         let workers = (0..n)
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("glint-pool-{i}"))
                     .spawn(move || worker_loop(&shared))
                     .expect("spawn pool worker")
@@ -61,26 +79,32 @@ impl ThreadPool {
 
     /// Submit a job for asynchronous execution.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
-        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
         {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Box::new(job));
+            let mut st = self.shared.state.lock().unwrap();
+            st.in_flight += 1;
+            st.queue.push_back(Box::new(job));
         }
         self.shared.available.notify_one();
     }
 
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
-        let mut q = self.shared.queue.lock().unwrap();
-        while self.shared.in_flight.load(Ordering::SeqCst) != 0 || !q.is_empty() {
-            q = self.shared.done.wait(q).unwrap();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.in_flight > 0 {
+            st = self.shared.done.wait(st).unwrap();
         }
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        // `shutdown` was set under the lock, so a worker that read it as
+        // false is either running a job or already parked on `available`
+        // — this notify reaches it either way.
         self.shared.available.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -91,21 +115,23 @@ impl Drop for ThreadPool {
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut st = shared.state.lock().unwrap();
             loop {
-                if let Some(job) = q.pop_front() {
+                if let Some(job) = st.queue.pop_front() {
                     break job;
                 }
-                if shared.shutdown.load(Ordering::SeqCst) {
+                if st.shutdown {
                     return;
                 }
-                q = shared.available.wait(q).unwrap();
+                st = shared.available.wait(st).unwrap();
             }
         };
         job();
-        if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
-            // Possibly the last job: wake waiters.
-            let _guard = shared.queue.lock().unwrap();
+        let mut st = shared.state.lock().unwrap();
+        st.in_flight -= 1;
+        if st.in_flight == 0 {
+            // Signaled under the lock that guards the predicate, so a
+            // `wait_idle` caller cannot recheck-and-park in between.
             shared.done.notify_all();
         }
     }
@@ -145,7 +171,7 @@ pub fn parallel_workers<R: Send>(n: usize, f: impl Fn(usize) -> R + Sync) -> Vec
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn pool_runs_all_jobs() {

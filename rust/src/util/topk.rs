@@ -23,11 +23,10 @@ impl<T: PartialEq> PartialOrd for Entry<T> {
 impl<T: PartialEq> Ord for Entry<T> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // Reverse: BinaryHeap is a max-heap; we want the smallest on top
-        // so it can be evicted.
-        other
-            .score
-            .partial_cmp(&self.score)
-            .unwrap_or(std::cmp::Ordering::Equal)
+        // so it can be evicted. total_cmp gives NaN a fixed place in the
+        // order (above +inf) instead of silently comparing Equal, which
+        // would let a NaN score corrupt the heap invariant.
+        other.score.total_cmp(&self.score)
     }
 }
 
@@ -72,7 +71,7 @@ impl<T: PartialEq> TopK<T> {
     /// Extract items sorted by descending score.
     pub fn into_sorted(self) -> Vec<(f64, T)> {
         let mut v: Vec<_> = self.heap.into_iter().map(|e| (e.score, e.item)).collect();
-        v.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        v.sort_by(|a, b| b.0.total_cmp(&a.0));
         v
     }
 }
@@ -107,6 +106,33 @@ mod tests {
         let mut tk = TopK::new(0);
         tk.push(1.0, 1);
         assert!(tk.is_empty());
+    }
+
+    #[test]
+    fn nan_scores_are_deterministic() {
+        // A NaN offered to a full heap never displaces a real entry
+        // (`score > min.score` is false for NaN)...
+        let mut tk = TopK::new(2);
+        tk.push(1.0, "a");
+        tk.push(2.0, "b");
+        tk.push(f64::NAN, "nan");
+        let out = tk.into_sorted();
+        assert_eq!(
+            out.iter().map(|e| e.1).collect::<Vec<_>>(),
+            vec!["b", "a"]
+        );
+
+        // ...and a NaN that entered a non-full heap sorts to a fixed
+        // position (total_cmp places +NaN above +inf) instead of
+        // shuffling nondeterministically as with partial_cmp-as-Equal.
+        let mut tk = TopK::new(3);
+        tk.push(f64::NAN, "nan");
+        tk.push(f64::INFINITY, "inf");
+        tk.push(1.0, "one");
+        let out = tk.into_sorted();
+        let order: Vec<&str> = out.iter().map(|e| e.1).collect();
+        assert_eq!(order, vec!["nan", "inf", "one"]);
+        assert!(out[0].0.is_nan());
     }
 
     #[test]

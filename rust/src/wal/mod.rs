@@ -43,15 +43,21 @@ pub mod segment;
 
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
 use std::time::Duration;
 
+// The group-commit handoff (append queue, committer condvar, durable
+// frontier) runs on the sync_shim so the model checker can explore its
+// interleavings — including the committer thread itself, which becomes a
+// virtual task under `--features model` (`tests/model.rs`, `wal-*`
+// models). Disk writes are real in both builds.
 use crate::log_warn;
 use crate::ps::messages::{Data, Dtype, Layout};
 use crate::util::codec::{Reader, Writer};
 use crate::util::error::{Error, Result};
+use crate::util::sync_shim::atomic::{AtomicU64, Ordering};
+use crate::util::sync_shim::thread::JoinHandle;
+use crate::util::sync_shim::{thread, Condvar, Mutex};
 use segment::{
     log_name, parse_name, scan, write_snapshot, RawRecord, SegmentHeader, SegmentKind,
     SegmentWriter, RECORD_OVERHEAD,
@@ -401,9 +407,12 @@ impl ShardWal {
         });
         let committer = {
             let inner = Arc::clone(&inner);
-            std::thread::Builder::new()
+            thread::Builder::new()
                 .name(format!("glint-wal-{shard}"))
                 .spawn(move || committer_loop(&inner))
+                // PANIC-OK: committer spawn fails only on resource
+                // exhaustion while opening the shard; there is no WAL
+                // without it.
                 .expect("spawn wal committer")
         };
         Ok((ShardWal { inner, committer: Mutex::new(Some(committer)) }, replay))
@@ -411,6 +420,11 @@ impl ShardWal {
 
     /// Enqueue one record for the committer; returns its sequence
     /// number. Never blocks on disk.
+    ///
+    /// SINGLE-WRITER: sequence numbers are dense because only the
+    /// shard's one writer thread appends; concurrent appenders would
+    /// still each get a unique seq (the queue lock allocates), but the
+    /// apply order would no longer match seq order.
     pub fn append(&self, payload: &WalPayload) -> u64 {
         let bytes = payload.encode();
         let mut q = self.inner.queue.lock().unwrap();
@@ -478,10 +492,12 @@ impl ShardWal {
 
     /// Fold the full shard state (as `Snap*` payloads, terminal marker
     /// last) into a snapshot segment at the current committed frontier
-    /// and delete every log segment behind it. Must be called by the
-    /// shard's single writer thread with `payloads` describing the state
-    /// after every appended record — [`ShardWal::sync`] runs first, so
-    /// the snapshot never claims more than the disk holds.
+    /// and delete every log segment behind it.
+    ///
+    /// SINGLE-WRITER: must be called by the shard's one writer thread,
+    /// with `payloads` describing the state after every appended record
+    /// — [`ShardWal::sync`] runs first, so the snapshot never claims
+    /// more than the disk holds.
     pub fn compact(&self, payloads: &[WalPayload]) -> Result<()> {
         debug_assert!(payloads.last().is_some_and(|p| matches!(p, WalPayload::SnapNextUid(_))));
         self.sync();

@@ -1,0 +1,716 @@
+//! Deterministic model-checking suite (`cargo test --features model`).
+//!
+//! Each test wraps a small concurrent scenario over the *real* crate
+//! code in [`explore`], which runs the body thousands of times under
+//! the sync_shim's virtual scheduler — one task runnable at a time,
+//! every lock/channel/condvar operation a schedule point — and fails
+//! with a replayable schedule token (`GLINT_MODEL_REPLAY`) on the first
+//! schedule that deadlocks, panics, or trips a [`model_assert`].
+//!
+//! Five subsystems are covered, mirroring the production call paths:
+//!
+//! - the [`ThreadPool`] used by trainer sweeps (lost-wakeup regression);
+//! - [`MuxPending`], the TCP mux's correlation table (no silent waits);
+//! - the shard read pool and bounded dedup window of `ps::server`;
+//! - the WAL's group-commit handoff and compaction (`wal`);
+//! - the replication `ReplApply` path with racing/zombie pollers;
+//!
+//! plus a Wing & Gong–style linearizability oracle checking the
+//! exactly-once push protocol against a sequential counter spec under
+//! scheduler-chosen message loss, duplication, reordering and
+//! crash-replay.
+//!
+//! Coverage floors: each subsystem model asserts that at least 1,000
+//! *distinct* schedules were explored (skipped under replay, where
+//! exactly one schedule runs by design).
+
+#![cfg(feature = "model")]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use glint_lda::net::tcp::MuxPending;
+use glint_lda::net::Envelope;
+use glint_lda::ps::config::PsConfig;
+use glint_lda::ps::messages::{Data, Dtype, Layout, Request, Response};
+use glint_lda::ps::server::{ShardState, ROLE_PROMOTED};
+use glint_lda::util::sync_shim::lin::{linearizable_counter, Op, Recorder, RetVal};
+use glint_lda::util::sync_shim::sched::{
+    choice, explore, model_assert, replay_active, ExploreOpts, ExploreStats,
+};
+use glint_lda::util::sync_shim::{mpsc, thread, Mutex};
+use glint_lda::util::threadpool::ThreadPool;
+use glint_lda::wal::{ShardWal, WalOptions, WalPayload};
+
+/// Assert the exploration visited at least `floor` distinct schedules.
+/// Skipped under `GLINT_MODEL_REPLAY` (a replay runs one schedule of
+/// one model; every other explore returns zeroed stats).
+fn coverage(name: &str, stats: ExploreStats, floor: usize) {
+    if replay_active() {
+        return;
+    }
+    assert!(
+        stats.distinct >= floor,
+        "model '{name}': only {} distinct schedules over {} runs (want >= {floor})",
+        stats.distinct,
+        stats.runs
+    );
+}
+
+/// A fresh scratch directory for WAL-backed models. Uniqueness comes
+/// from the pid plus a process-local counter — `Date.now`-style clocks
+/// are forbidden inside model bodies (they would break replay), and a
+/// counter keeps the name deterministic per run index anyway.
+fn fresh_dir(tag: &str) -> PathBuf {
+    static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    std::env::temp_dir().join(format!("glint-model-{tag}-{}-{n}", std::process::id()))
+}
+
+fn push_one(state: &mut ShardState, uid: u64, delta: i64) -> bool {
+    let resp = state.handle(Request::PushCoords {
+        id: 1,
+        uid,
+        rows: vec![0],
+        cols: vec![0],
+        values: Data::I64(vec![delta]),
+    });
+    match resp {
+        Response::PushAck { fresh } => fresh,
+        _ => {
+            model_assert(false, "push rejected");
+            false
+        }
+    }
+}
+
+fn create_counter(state: &mut ShardState) {
+    let resp = state.handle(Request::CreateMatrix {
+        id: 1,
+        rows: 2,
+        cols: 1,
+        dtype: Dtype::I64,
+        layout: Layout::Dense,
+    });
+    model_assert(matches!(resp, Response::Ok), "create rejected");
+}
+
+fn read_counter(state: &mut ShardState) -> i64 {
+    match state.handle(Request::PullRows { id: 1, rows: vec![0] }) {
+        Response::Rows(Data::I64(v)) => v[0],
+        _ => {
+            model_assert(false, "pull rejected");
+            0
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ThreadPool: the satellite-1 regression. The seed's `wait_idle`
+// busy-waited on an atomic and its shutdown used a racy flag; the
+// rewrite keeps queue + in-flight + shutdown under one mutex with two
+// condvars. A lost wakeup in either place shows up here as a deadlock.
+// ---------------------------------------------------------------------
+
+fn threadpool_jobs_model() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let counter = Arc::new(Mutex::new(0usize));
+    // A second submitter races the root's own submissions.
+    let submitter = {
+        let pool = Arc::clone(&pool);
+        let counter = Arc::clone(&counter);
+        thread::spawn(move || {
+            for _ in 0..2 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    *c.lock().unwrap() += 1;
+                });
+            }
+        })
+    };
+    for _ in 0..2 {
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            *c.lock().unwrap() += 1;
+        });
+    }
+    submitter.join().unwrap();
+    pool.wait_idle();
+    model_assert(*counter.lock().unwrap() == 4, "wait_idle returned before all jobs ran");
+    // Dropping the pool must terminate: a lost shutdown wakeup would
+    // leave a worker parked forever and fail as a deadlock.
+    drop(pool);
+}
+
+#[test]
+fn threadpool_wait_idle_and_shutdown() {
+    let stats = explore(
+        "threadpool-jobs",
+        ExploreOpts { schedules: 2500, ..ExploreOpts::default() },
+        threadpool_jobs_model,
+    );
+    coverage("threadpool-jobs", stats, 1000);
+    // Systematic pass: bounded-preemption DFS over the same model.
+    explore(
+        "threadpool-jobs-dfs",
+        ExploreOpts { schedules: 400, dfs: true, max_preemptions: 2, ..ExploreOpts::default() },
+        threadpool_jobs_model,
+    );
+}
+
+fn threadpool_drop_model() {
+    let pool = ThreadPool::new(2);
+    let counter = Arc::new(Mutex::new(0usize));
+    for _ in 0..4 {
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            *c.lock().unwrap() += 1;
+        });
+    }
+    // No wait_idle: Drop alone must drain the queue before joining.
+    drop(pool);
+    model_assert(*counter.lock().unwrap() == 4, "drop lost queued jobs");
+}
+
+#[test]
+fn threadpool_drop_drains_queue() {
+    let stats = explore(
+        "threadpool-drop",
+        ExploreOpts { schedules: 2500, ..ExploreOpts::default() },
+        threadpool_drop_model,
+    );
+    coverage("threadpool-drop", stats, 1000);
+}
+
+// ---------------------------------------------------------------------
+// MuxPending: the TCP mux's waiter table. The invariant under test is
+// "no silent wait": however `kill` (reader death) interleaves with
+// `register`, a waiter either observes `dead` on its post-insert check
+// or has its reply sender dropped — it never blocks forever. A
+// violation manifests as a deadlock, which the checker reports.
+// ---------------------------------------------------------------------
+
+fn mux_model() {
+    let mux = Arc::new(MuxPending::new());
+    // The "wire": requesters announce their correlation id to the
+    // reader only after registering, exactly as `roundtrip` writes the
+    // frame only after inserting the waiter.
+    let (wire_tx, wire_rx) = mpsc::channel::<u64>();
+    let mut requesters = Vec::new();
+    for corr in 0u64..2 {
+        let mux = Arc::clone(&mux);
+        let wire = wire_tx.clone();
+        requesters.push(thread::spawn(move || {
+            let (tx, rx) = mpsc::sync_channel(1);
+            mux.register(corr, tx);
+            if mux.is_dead() {
+                // Reader died around our registration: fail fast.
+                mux.remove(corr);
+                return;
+            }
+            let _ = wire.send(corr);
+            match rx.recv() {
+                Ok(payload) => model_assert(payload == [corr as u8], "cross-matched reply"),
+                // kill() dropped our sender: the fail-fast wakeup.
+                Err(_) => {}
+            }
+        }));
+    }
+    drop(wire_tx);
+    let reader = {
+        let mux = Arc::clone(&mux);
+        thread::spawn(move || {
+            while let Ok(corr) = wire_rx.recv() {
+                if choice(3) == 0 {
+                    // Socket error: the reader loop's exit path.
+                    mux.kill();
+                    return;
+                }
+                let _ = mux.deliver(corr, vec![corr as u8]);
+            }
+            if choice(2) == 0 {
+                mux.kill();
+            }
+        })
+    };
+    for h in requesters {
+        let _ = h.join();
+    }
+    let _ = reader.join();
+}
+
+#[test]
+fn mux_pending_no_silent_wait() {
+    let stats = explore(
+        "mux-pending",
+        ExploreOpts { schedules: 2500, ..ExploreOpts::default() },
+        mux_model,
+    );
+    coverage("mux-pending", stats, 1000);
+    explore(
+        "mux-pending-dfs",
+        ExploreOpts { schedules: 400, dfs: true, max_preemptions: 2, ..ExploreOpts::default() },
+        mux_model,
+    );
+}
+
+// ---------------------------------------------------------------------
+// Shard read pool: reads served by pool workers concurrently with the
+// owner thread's writes must never observe a torn value, and dropping
+// the pool must answer everything still queued.
+// ---------------------------------------------------------------------
+
+fn readpool_model() {
+    let mut state = ShardState::new(0, PsConfig::with_shards(1));
+    create_counter(&mut state);
+    model_assert(push_one(&mut state, 1, 5), "seed push deduped");
+    let pool = state.start_read_pool(2);
+    let mut replies = Vec::new();
+    for _ in 0..2 {
+        let (tx, rx) = mpsc::sync_channel(1);
+        pool.submit(
+            Envelope { payload: Vec::new(), reply: Some(tx) },
+            Request::PullRows { id: 1, rows: vec![0] },
+        );
+        replies.push(rx);
+    }
+    // Concurrent with the in-flight reads.
+    model_assert(push_one(&mut state, 2, 3), "second push deduped");
+    for rx in replies {
+        let bytes = rx.recv().expect("read pool dropped a reply");
+        match Response::decode(&bytes) {
+            Ok(Response::Rows(Data::I64(v))) => {
+                model_assert(v[0] == 5 || v[0] == 8, "read observed a torn write");
+            }
+            _ => model_assert(false, "read pool returned a non-Rows reply"),
+        }
+    }
+    drop(pool);
+}
+
+#[test]
+fn shard_read_pool_serves_under_writes() {
+    let stats = explore(
+        "shard-readpool",
+        ExploreOpts { schedules: 2500, ..ExploreOpts::default() },
+        readpool_model,
+    );
+    coverage("shard-readpool", stats, 1000);
+}
+
+// ---------------------------------------------------------------------
+// Bounded dedup window (satellite 4): a randomized property test under
+// the model scheduler. While pending uids stay within the window cap,
+// exactly-once holds for any interleaving and any scheduler-chosen
+// number of duplicate deliveries; overflowing the cap evicts the oldest
+// record, counts it, and (the documented weakening) a retry of an
+// evicted uid re-applies.
+// ---------------------------------------------------------------------
+
+fn dedup_model() {
+    let mut cfg = PsConfig::with_shards(1);
+    cfg.dedup_window = 2;
+    let mut state = ShardState::new(0, cfg);
+    create_counter(&mut state);
+    let reader = state.reader();
+    let state = Arc::new(Mutex::new(state));
+
+    let mut couriers = Vec::new();
+    let fresh_acks = Arc::new(Mutex::new([0usize; 2]));
+    for c in 0..2u64 {
+        let state = Arc::clone(&state);
+        let fresh_acks = Arc::clone(&fresh_acks);
+        couriers.push(thread::spawn(move || {
+            // 1..=3 deliveries of the same uid: retries after lost acks.
+            let deliveries = 1 + choice(3);
+            for _ in 0..deliveries {
+                if push_one(&mut state.lock().unwrap(), 10 + c, 1) {
+                    fresh_acks.lock().unwrap()[c as usize] += 1;
+                }
+            }
+            let resp = state.lock().unwrap().handle(Request::Forget { uid: 10 + c });
+            model_assert(matches!(resp, Response::Ok), "forget rejected");
+        }));
+    }
+    // A concurrent reader observes only committed prefixes: 0, 1 or 2.
+    let observer = thread::spawn(move || {
+        for _ in 0..2 {
+            match reader.handle_read(&Request::PullRows { id: 1, rows: vec![0] }) {
+                Response::Rows(Data::I64(v)) => {
+                    model_assert(v[0] >= 0 && v[0] <= 2, "reader saw an uncommitted value");
+                }
+                _ => model_assert(false, "concurrent read rejected"),
+            }
+        }
+    });
+    for h in couriers {
+        let _ = h.join();
+    }
+    let _ = observer.join();
+
+    let mut state = Arc::try_unwrap(state).ok().expect("state still shared").into_inner().unwrap();
+    let acks = *fresh_acks.lock().unwrap();
+    model_assert(acks == [1, 1], "a duplicate delivery was applied as fresh");
+    model_assert(read_counter(&mut state) == 2, "exactly-once violated within the window");
+    match state.handle(Request::ShardInfo) {
+        Response::Info { pending_uids, dedup_evictions, .. } => {
+            model_assert(pending_uids == 0, "forgotten uids still pending");
+            model_assert(dedup_evictions == 0, "window evicted within its cap");
+        }
+        _ => model_assert(false, "shard info rejected"),
+    }
+
+    // Overflow: three un-forgotten uids through a cap-2 window.
+    for uid in [20, 21, 22] {
+        model_assert(push_one(&mut state, uid, 10), "overflow push deduped");
+    }
+    match state.handle(Request::ShardInfo) {
+        Response::Info { pending_uids, dedup_evictions, .. } => {
+            model_assert(pending_uids == 2, "window exceeded its cap");
+            model_assert(dedup_evictions == 1, "eviction not counted");
+        }
+        _ => model_assert(false, "shard info rejected"),
+    }
+    // The documented weakening: a retry of the evicted uid re-applies.
+    model_assert(push_one(&mut state, 20, 10), "evicted uid was still deduplicated");
+    model_assert(read_counter(&mut state) == 42, "overflow accounting wrong");
+}
+
+#[test]
+fn dedup_window_bounded_property() {
+    let stats = explore(
+        "shard-dedup",
+        ExploreOpts { schedules: 2500, ..ExploreOpts::default() },
+        dedup_model,
+    );
+    coverage("shard-dedup", stats, 1000);
+}
+
+// ---------------------------------------------------------------------
+// WAL group commit: concurrent appenders, a virtual committer task,
+// `sync` as a durability barrier, and recovery replaying a dense,
+// ordered sequence. Disk writes are real; only the scheduling is
+// virtual.
+// ---------------------------------------------------------------------
+
+fn wal_commit_model() {
+    let dir = fresh_dir("wal");
+    let opts = WalOptions { commit_window: Duration::from_millis(1), ..WalOptions::default() };
+    {
+        let (wal, replay) = ShardWal::open(&dir, 0, opts.clone()).expect("open wal");
+        model_assert(replay.is_empty(), "fresh dir replayed records");
+        let wal = Arc::new(wal);
+        let mut appenders = Vec::new();
+        for t in 0..2u8 {
+            let wal = Arc::clone(&wal);
+            appenders.push(thread::spawn(move || {
+                for i in 0..2u8 {
+                    wal.append(&WalPayload::Write(vec![t, i]));
+                }
+            }));
+        }
+        for h in appenders {
+            let _ = h.join();
+        }
+        wal.sync();
+        model_assert(wal.committed() == 4, "sync returned before the appends were durable");
+    } // Drop joins the committer after it drains.
+    let (_wal, replay) = ShardWal::open(&dir, 0, opts).expect("reopen wal");
+    model_assert(replay.len() == 4, "reopen lost committed records");
+    for (i, (seq, _)) in replay.iter().enumerate() {
+        model_assert(*seq == i as u64 + 1, "replay sequence not dense and ordered");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wal_group_commit_durability() {
+    let stats = explore(
+        "wal-commit",
+        ExploreOpts { schedules: 1500, ..ExploreOpts::default() },
+        wal_commit_model,
+    );
+    coverage("wal-commit", stats, 1000);
+}
+
+fn wal_compact_model() {
+    let dir = fresh_dir("walc");
+    let opts = WalOptions { commit_window: Duration::from_millis(1), ..WalOptions::default() };
+    {
+        let (wal, _) = ShardWal::open(&dir, 0, opts.clone()).expect("open wal");
+        for n in 0..6u8 {
+            wal.append(&WalPayload::Write(vec![n; 8]));
+        }
+        // Compaction syncs first, so the snapshot claims exactly the
+        // durable prefix (seq 6); the tail record lands after it.
+        wal.compact(&[WalPayload::SnapNextUid(7)]).expect("compact");
+        wal.append(&WalPayload::Write(vec![9; 8]));
+        wal.sync();
+        model_assert(wal.committed() == 7, "sync returned early after compaction");
+    }
+    let (_wal, replay) = ShardWal::open(&dir, 0, opts).expect("reopen wal");
+    model_assert(replay.len() == 2, "compaction left stale or missing records");
+    model_assert(replay[0].0 == 6, "snapshot record carries the wrong horizon");
+    model_assert(replay[1].0 == 7, "tail record lost after compaction");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wal_compaction_replay() {
+    let stats = explore(
+        "wal-compact",
+        ExploreOpts { schedules: 1500, ..ExploreOpts::default() },
+        wal_compact_model,
+    );
+    coverage("wal-compact", stats, 1000);
+}
+
+// ---------------------------------------------------------------------
+// Replication: two racing pollers (one is effectively a zombie
+// duplicate) stream overlapping batches into a backup. The seq-skip
+// plus uid-dedup layers must apply every record exactly once; the role
+// gate must refuse data ops before promotion and refuse zombie applies
+// after it.
+// ---------------------------------------------------------------------
+
+fn wal_write_record(req: &Request) -> Vec<u8> {
+    WalPayload::Write(req.encode()).encode()
+}
+
+fn repl_model() {
+    let mut cfg = PsConfig::with_shards(1);
+    cfg.backup_of = Some(vec!["127.0.0.1:1".into()]);
+    let mut state = ShardState::new(0, cfg);
+    // The primary's committed log, as (seq, wal bytes) batches.
+    let log: Vec<(u64, Vec<u8>)> = vec![
+        (
+            1,
+            wal_write_record(&Request::CreateMatrix {
+                id: 1,
+                rows: 2,
+                cols: 1,
+                dtype: Dtype::I64,
+                layout: Layout::Dense,
+            }),
+        ),
+        (
+            2,
+            wal_write_record(&Request::PushCoords {
+                id: 1,
+                uid: 7,
+                rows: vec![0],
+                cols: vec![0],
+                values: Data::I64(vec![5]),
+            }),
+        ),
+        (
+            3,
+            wal_write_record(&Request::PushCoords {
+                id: 1,
+                uid: 8,
+                rows: vec![0],
+                cols: vec![0],
+                values: Data::I64(vec![3]),
+            }),
+        ),
+    ];
+    let tip = 3u64;
+
+    // Role gate: data ops are refused before promotion.
+    match state.handle(Request::PullRows { id: 1, rows: vec![0] }) {
+        Response::Unavailable(_) => {}
+        _ => model_assert(false, "un-promoted backup served a data op"),
+    }
+
+    let state = Arc::new(Mutex::new(state));
+    let mut pollers = Vec::new();
+    for _ in 0..2 {
+        let state = Arc::clone(&state);
+        let log = log.clone();
+        pollers.push(thread::spawn(move || loop {
+            let applied = {
+                let mut s = state.lock().unwrap();
+                match s.handle(Request::ShardInfo) {
+                    Response::Info { repl_applied, .. } => repl_applied,
+                    _ => return,
+                }
+            };
+            if applied >= tip {
+                return;
+            }
+            let from = applied + 1;
+            // Batch length is scheduler-chosen: 1..=remaining.
+            let take = 1 + choice((tip - from) as usize + 1);
+            let batch: Vec<(u64, Vec<u8>)> = log
+                .iter()
+                .filter(|(seq, _)| *seq >= from)
+                .take(take)
+                .cloned()
+                .collect();
+            let req = Request::ReplApply { reset: false, tip, records: batch.clone() };
+            let resp = state.lock().unwrap().handle(req);
+            model_assert(matches!(resp, Response::Ok), "backup refused a replication batch");
+            if choice(2) == 0 {
+                // Duplicate delivery of the whole batch.
+                let dup = Request::ReplApply { reset: false, tip, records: batch };
+                let resp = state.lock().unwrap().handle(dup);
+                model_assert(matches!(resp, Response::Ok), "backup refused a duplicate batch");
+            }
+        }));
+    }
+    for h in pollers {
+        let _ = h.join();
+    }
+
+    let mut state = Arc::try_unwrap(state).ok().expect("state still shared").into_inner().unwrap();
+    let resp = state.handle(Request::Promote);
+    model_assert(matches!(resp, Response::Ok), "promotion failed");
+    match state.handle(Request::ShardInfo) {
+        Response::Info { repl_applied, role, .. } => {
+            model_assert(repl_applied == tip, "replica stopped short of the tip");
+            model_assert(role == ROLE_PROMOTED, "promotion did not flip the role");
+        }
+        _ => model_assert(false, "shard info rejected"),
+    }
+    // Exactly-once across racing, duplicated, re-ordered batches.
+    model_assert(read_counter(&mut state) == 8, "replicated pushes applied a wrong # of times");
+    // A zombie poller arriving after promotion must be refused.
+    let resp = state.handle(Request::ReplApply {
+        reset: false,
+        tip: tip + 1,
+        records: vec![(tip + 1, wal_write_record(&Request::Forget { uid: 7 }))],
+    });
+    model_assert(
+        matches!(resp, Response::Error(_)),
+        "promoted replica accepted zombie replication",
+    );
+}
+
+#[test]
+fn repl_apply_exactly_once() {
+    let stats = explore(
+        "repl-apply",
+        ExploreOpts { schedules: 2000, ..ExploreOpts::default() },
+        repl_model,
+    );
+    coverage("repl-apply", stats, 1000);
+}
+
+// ---------------------------------------------------------------------
+// Linearizability oracle (Wing & Gong): the exactly-once push protocol
+// against a sequential counter spec. Couriers push unique-uid deltas
+// with scheduler-chosen duplicate deliveries and lost replies; a reader
+// pulls concurrently; the server may crash after serving two requests
+// and recover from its WAL. The recorded concurrent history must admit
+// a linearization in which every uid's delta is applied exactly once.
+//
+// Crash model: the teardown is a graceful drop — the WAL's group
+// committer drains its queue before exiting, so recovery replays the
+// full acknowledged prefix. This matches the durability contract the
+// oracle checks (acked implies recovered); hard `kill -9` mid-window
+// crashes are exercised by `tests/durability.rs` instead.
+// ---------------------------------------------------------------------
+
+fn lin_model() {
+    let dir = fresh_dir("lin");
+    let mut cfg = PsConfig::with_shards(1);
+    cfg.wal_dir = Some(dir.clone());
+    cfg.wal_commit_window = Duration::from_millis(1);
+
+    let recorder = Arc::new(Recorder::new());
+    let (srv_tx, srv_rx) = mpsc::channel::<(Request, mpsc::SyncSender<Response>)>();
+
+    let server = {
+        let cfg = cfg.clone();
+        thread::spawn(move || {
+            let mut state = ShardState::new(0, cfg.clone());
+            create_counter(&mut state);
+            let mut served = 0usize;
+            while let Ok((req, reply)) = srv_rx.recv() {
+                let resp = state.handle(req);
+                let _ = reply.try_send(resp);
+                served += 1;
+                if served == 2 && choice(2) == 0 {
+                    // Crash-replay: tear the shard down and recover it
+                    // from the same WAL directory.
+                    drop(state);
+                    state = ShardState::new(0, cfg.clone());
+                }
+            }
+        })
+    };
+
+    let mut clients = Vec::new();
+    for c in 0..2u64 {
+        let recorder = Arc::clone(&recorder);
+        let tx = srv_tx.clone();
+        clients.push(thread::spawn(move || {
+            let uid = 100 + c;
+            let delta = 1 + c as i64;
+            let op = recorder.invoke(Op::Push { uid, delta });
+            let mut acked = false;
+            // 1..=2 deliveries: re-sends model retry-after-lost-ack.
+            for _ in 0..1 + choice(2) {
+                let (rtx, rrx) = mpsc::sync_channel(1);
+                let req = Request::PushCoords {
+                    id: 1,
+                    uid,
+                    rows: vec![0],
+                    cols: vec![0],
+                    values: Data::I64(vec![delta]),
+                };
+                if tx.send((req, rtx)).is_err() {
+                    break;
+                }
+                if choice(2) == 0 {
+                    if let Ok(Response::PushAck { .. }) = rrx.recv() {
+                        acked = true;
+                    }
+                }
+                // Else: the reply is lost in flight (rrx dropped; the
+                // server's try_send to it is harmless).
+            }
+            if acked {
+                recorder.ret(op, RetVal::Done);
+            }
+            // An un-acked push stays pending: the oracle lets it either
+            // linearize or vanish.
+        }));
+    }
+    {
+        let recorder = Arc::clone(&recorder);
+        let tx = srv_tx.clone();
+        clients.push(thread::spawn(move || {
+            let op = recorder.invoke(Op::Read);
+            let (rtx, rrx) = mpsc::sync_channel(1);
+            if tx.send((Request::PullRows { id: 1, rows: vec![0] }, rtx)).is_ok() {
+                if let Ok(Response::Rows(Data::I64(v))) = rrx.recv() {
+                    recorder.ret(op, RetVal::Value(v[0]));
+                }
+            }
+        }));
+    }
+    for h in clients {
+        let _ = h.join();
+    }
+    drop(srv_tx);
+    let _ = server.join();
+
+    let history = Arc::try_unwrap(recorder).ok().expect("recorder still shared").finish();
+    model_assert(
+        linearizable_counter(&history),
+        "history is not linearizable against the exactly-once counter spec",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn exactly_once_pushes_linearize() {
+    let stats = explore(
+        "lin-oracle",
+        ExploreOpts { schedules: 1500, ..ExploreOpts::default() },
+        lin_model,
+    );
+    coverage("lin-oracle", stats, 1000);
+}
