@@ -1,0 +1,289 @@
+//! Elastic membership demo: one training run that scales 2 → 8 → 3
+//! workers mid-flight, entirely through the consistent-hash ring.
+//!
+//! Phase A starts 2 workers over 16 micro-partitions. Once iteration 3
+//! has checkpointed, 6 more workers join (phase B): the ring rebalances
+//! and every partition moves warm — checkpoint handoff, no re-push, no
+//! epoch roll. Five of the joiners then drain after a fixed number of
+//! sweeps (phase C), handing their partitions back at sweep boundaries.
+//!
+//! The run uses snapshot (BSP) sweeps with a staleness bound of 0, so
+//! the final count table is bit-for-bit identical to a second,
+//! static-membership baseline run over the same corpus, seed and
+//! partitioning — that equality is asserted, along with zero epoch
+//! rolls and tokens/sec strictly increasing after the 2 → 8 rebalance.
+//!
+//! ```sh
+//! cargo run --release --example elasticity
+//! # env knobs:
+//! #   ELASTICITY_CSV=path    per-iteration metrics   (default ELASTICITY_metrics.csv)
+//! #   ELASTICITY_BENCH=path  measured bench JSON     (default BENCH_elasticity.json)
+//! ```
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use glint_lda::cluster::{
+    run_worker, ClusterOutcome, Coordinator, CorpusSpec, WorkerOptions, WorkerSummary,
+};
+use glint_lda::corpus::dataset::Corpus;
+use glint_lda::corpus::synth::{generate, SynthConfig};
+use glint_lda::lda::checkpoint::PartitionCheckpoint;
+use glint_lda::lda::sweep::SamplerParams;
+use glint_lda::lda::trainer::TrainConfig;
+use glint_lda::ps::config::{PsConfig, TransportMode};
+use glint_lda::ps::server::TcpShardServer;
+
+/// 2 workers x partition_factor 8 = 16 fixed micro-partitions.
+const PARTITION_FACTOR: usize = 8;
+const PARTITIONS: usize = 2 * PARTITION_FACTOR;
+const ITERATIONS: u32 = 18;
+/// Joiners arrive once this iteration has checkpointed.
+const JOIN_AT: u32 = 3;
+/// Sweeps a draining joiner completes before asking to leave.
+const DRAIN_AFTER: u32 = 8;
+/// Artificial per-sweep cost so tokens/sec tracks the member count
+/// instead of scheduler noise.
+const SWEEP_DELAY_MS: u64 = 25;
+
+fn scratch_dir(tag: &str) -> std::io::Result<PathBuf> {
+    let dir = std::env::temp_dir().join(format!("glint-elasticity-{tag}-{}", std::process::id()));
+    // A stale directory from an earlier run would satisfy the join
+    // trigger (and warm loads) with the wrong data.
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+fn bind_shards() -> Result<(TcpShardServer, Vec<String>), Box<dyn std::error::Error>> {
+    let want: Vec<SocketAddr> = (0..2).map(|_| "127.0.0.1:0".parse().unwrap()).collect();
+    let shards = TcpShardServer::bind(PsConfig::with_shards(2), 0, &want)?;
+    let addrs: Vec<String> = shards.addrs().iter().map(|a| a.to_string()).collect();
+    Ok((shards, addrs))
+}
+
+fn train_cfg(shard_addrs: Vec<String>, checkpoint_dir: PathBuf, elastic: bool) -> TrainConfig {
+    TrainConfig {
+        num_topics: 8,
+        iterations: ITERATIONS,
+        workers: 2,
+        shards: 2,
+        partition_factor: PARTITION_FACTOR,
+        elastic,
+        snapshot: true,
+        max_staleness: 0,
+        sampler: SamplerParams {
+            block_words: 256,
+            buffer_cap: 2000,
+            dense_top_words: 50,
+            ..Default::default()
+        },
+        eval_every: 0,
+        transport: TransportMode::Connect(shard_addrs),
+        heartbeat_ms: 100,
+        straggler_timeout_ms: 60_000,
+        checkpoint_dir: Some(checkpoint_dir),
+        keep_checkpoints: 0,
+        seed: 0xe1a5,
+        ..TrainConfig::default()
+    }
+}
+
+fn spawn_worker(
+    name: String,
+    join: String,
+    corpus: &Corpus,
+    drain_after: Option<u32>,
+    sweep_delay_ms: u64,
+) -> std::io::Result<std::thread::JoinHandle<glint_lda::Result<WorkerSummary>>> {
+    let opts = WorkerOptions {
+        join,
+        corpus: Some(corpus.clone()),
+        drain_after,
+        sweep_delay_ms,
+        ..WorkerOptions::default()
+    };
+    std::thread::Builder::new().name(name).spawn(move || run_worker(opts))
+}
+
+/// Static-membership reference run: same corpus, seed, partitioning and
+/// snapshot discipline, fixed 2 workers throughout.
+fn run_baseline(corpus: &Corpus) -> Result<ClusterOutcome, Box<dyn std::error::Error>> {
+    let (_shards, shard_addrs) = bind_shards()?;
+    let cfg = train_cfg(shard_addrs, scratch_dir("baseline")?, false);
+    let coordinator = Coordinator::bind("127.0.0.1:0", cfg, corpus, CorpusSpec::Provided)?;
+    let join_addr = coordinator.addr().to_string();
+    let coord = std::thread::spawn(move || coordinator.run());
+    let mut workers = Vec::new();
+    for i in 0..2 {
+        workers.push(spawn_worker(
+            format!("baseline-worker-{i}"),
+            join_addr.clone(),
+            corpus,
+            None,
+            0,
+        )?);
+    }
+    let outcome = coord.join().expect("baseline coordinator thread")?;
+    for w in workers {
+        w.join().expect("baseline worker thread")?;
+    }
+    Ok(outcome)
+}
+
+/// Mean of `tokens_per_sec` over rows whose `members` column satisfies
+/// `pred`. `None` when no row matches.
+fn phase_tokens_per_sec(outcome: &ClusterOutcome, pred: impl Fn(f64) -> bool) -> Option<f64> {
+    let picked: Vec<f64> = outcome
+        .report
+        .rows()
+        .iter()
+        .filter(|r| r.get("members").is_some_and(&pred))
+        .filter_map(|r| r.get("tokens_per_sec"))
+        .collect();
+    if picked.is_empty() {
+        None
+    } else {
+        Some(picked.iter().sum::<f64>() / picked.len() as f64)
+    }
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let smoke = std::env::var("SMOKE").map(|v| v == "1").unwrap_or(false);
+    let corpus = generate(&SynthConfig {
+        num_docs: 480,
+        vocab_size: 1200,
+        num_topics: 8,
+        avg_doc_len: 40.0,
+        seed: 0xe1a5,
+        ..Default::default()
+    });
+
+    // ---- Elastic run: 2 -> 8 -> 3 workers on the ring. ----
+    let (_shards, shard_addrs) = bind_shards()?;
+    let ckpt_dir = scratch_dir("elastic")?;
+    let cfg = train_cfg(shard_addrs, ckpt_dir.clone(), true);
+    let coordinator = Coordinator::bind("127.0.0.1:0", cfg, &corpus, CorpusSpec::Provided)?;
+    let join_addr = coordinator.addr().to_string();
+    println!("coordinator up on {join_addr} ({PARTITIONS} partitions, {ITERATIONS} iterations)");
+    let coord = std::thread::spawn(move || coordinator.run());
+
+    let mut workers = Vec::new();
+    for i in 0..2 {
+        workers.push(spawn_worker(
+            format!("elastic-worker-{i}"),
+            join_addr.clone(),
+            &corpus,
+            None,
+            SWEEP_DELAY_MS,
+        )?);
+    }
+
+    // Phase B trigger: partition 0 has checkpointed iteration JOIN_AT
+    // (keep_checkpoints = 0, so the marker file is never pruned).
+    let marker = PartitionCheckpoint::path_for(&ckpt_dir, 0, JOIN_AT);
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !marker.exists() {
+        assert!(!coord.is_finished(), "run finished before the join trigger");
+        assert!(Instant::now() < deadline, "join trigger never appeared: {marker:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!("iteration {JOIN_AT} checkpointed; scaling out to 8 workers");
+    for i in 0..6 {
+        // Five of the six joiners drain again after DRAIN_AFTER sweeps,
+        // taking phase C down to 3 workers.
+        let drain_after = if i < 5 { Some(DRAIN_AFTER) } else { None };
+        workers.push(spawn_worker(
+            format!("elastic-joiner-{i}"),
+            join_addr.clone(),
+            &corpus,
+            drain_after,
+            SWEEP_DELAY_MS,
+        )?);
+    }
+
+    let outcome = coord.join().expect("elastic coordinator thread")?;
+    let mut summaries = Vec::new();
+    for w in workers {
+        summaries.push(w.join().expect("elastic worker thread")?);
+    }
+    println!("{}", outcome.report.to_table());
+
+    // ---- Elasticity assertions. ----
+    assert_eq!(outcome.epochs, 0, "joins and drains must not roll the epoch");
+    let drained = summaries.iter().filter(|s| s.drained).count();
+    assert_eq!(drained, 5, "five joiners asked to drain");
+    assert_eq!(outcome.counters.drain_count, 5, "coordinator saw five drains");
+    assert!(outcome.counters.rebalances >= 1, "the 2->8 join must rebalance the ring");
+    assert!(outcome.counters.moved_partitions >= 1, "rebalancing moves partitions warm");
+    let rows = outcome.report.rows();
+    let last_members = rows.last().and_then(|r| r.get("members"));
+    assert_eq!(last_members, Some(3.0), "run must finish with 3 members");
+
+    let tps_a = phase_tokens_per_sec(&outcome, |m| m <= 2.0)
+        .expect("no rows at 2 members: joiners arrived too early");
+    let tps_b = phase_tokens_per_sec(&outcome, |m| m >= 7.0)
+        .expect("no rows at 8 members: drains fired before scale-out settled");
+    let tps_c = phase_tokens_per_sec(&outcome, |m| m == 3.0).unwrap_or(0.0);
+    println!(
+        "tokens/sec by phase: A(2 workers) {tps_a:.0}  B(8 workers) {tps_b:.0}  \
+         C(3 workers) {tps_c:.0}"
+    );
+    assert!(
+        tps_b > tps_a,
+        "throughput must rise after the 2->8 rebalance ({tps_b:.0} <= {tps_a:.0})"
+    );
+
+    // Rebalance pause: iterations spent between the stable phases
+    // while partitions were still in flight to their new owners.
+    let rebalance_pause_secs: f64 = rows
+        .iter()
+        .filter(|r| r.get("members").is_some_and(|m| m > 2.0 && m < 7.0))
+        .filter_map(|r| r.get("seconds"))
+        .sum();
+    let moved_checkpoint_bytes: u64 = summaries.iter().map(|s| s.warm_bytes).sum();
+    println!(
+        "rebalance pause {rebalance_pause_secs:.3}s, moved checkpoint bytes \
+         {moved_checkpoint_bytes}, moved partitions {}",
+        outcome.counters.moved_partitions
+    );
+
+    // ---- Exactness vs a static-membership baseline. ----
+    println!("running static 2-worker baseline for the exactness check");
+    let baseline = run_baseline(&corpus)?;
+    assert_eq!(baseline.epochs, 0, "baseline must run failure-free");
+    assert_eq!(
+        outcome.model.n_wk, baseline.model.n_wk,
+        "elastic count table diverged from the static baseline"
+    );
+    assert_eq!(
+        outcome.model.n_k, baseline.model.n_k,
+        "elastic topic totals diverged from the static baseline"
+    );
+    println!("final count table exactly matches the static baseline");
+
+    let csv = std::env::var("ELASTICITY_CSV").unwrap_or_else(|_| "ELASTICITY_metrics.csv".into());
+    std::fs::write(&csv, outcome.report.to_csv())?;
+    println!("metrics written to {csv}");
+
+    let bench =
+        std::env::var("ELASTICITY_BENCH").unwrap_or_else(|_| "BENCH_elasticity.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"elasticity\",\n  \"source\": \"measured: cargo run --release \
+         --example elasticity\",\n  \"smoke\": {smoke},\n  \"partitions\": {PARTITIONS},\n  \
+         \"iterations\": {ITERATIONS},\n  \"phase_a_workers\": 2,\n  \"phase_b_workers\": 8,\n  \
+         \"phase_c_workers\": 3,\n  \"phase_a_tokens_per_sec\": {tps_a:.1},\n  \
+         \"phase_b_tokens_per_sec\": {tps_b:.1},\n  \"phase_c_tokens_per_sec\": {tps_c:.1},\n  \
+         \"rebalance_pause_secs\": {rebalance_pause_secs:.3},\n  \"moved_checkpoint_bytes\": \
+         {moved_checkpoint_bytes},\n  \"moved_partitions\": {},\n  \"rebalances\": {},\n  \
+         \"drain_count\": {},\n  \"epochs\": 0,\n  \"exact_match_vs_static\": true\n}}\n",
+        outcome.counters.moved_partitions,
+        outcome.counters.rebalances,
+        outcome.counters.drain_count,
+    );
+    std::fs::write(&bench, json)?;
+    println!("bench written to {bench}");
+    println!("elasticity OK");
+    Ok(())
+}

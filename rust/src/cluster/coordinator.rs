@@ -1,13 +1,15 @@
 //! The cluster coordinator: the driver of a multi-process LightLDA run
 //! (the analog of the paper's Spark driver dispatching APS-LDA tasks).
 //!
-//! The coordinator owns the run's control state — corpus partitions,
-//! worker registrations, the per-iteration barrier — while the *data*
-//! (count tables) lives on the parameter-server shards and the *work*
-//! (sampling) happens in worker processes. It is a single-threaded
-//! actor draining one tagged-frame TCP inbox, exactly like a shard
-//! serve loop: workers drive the protocol by polling, so no state here
-//! is ever touched concurrently.
+//! Since the elastic-membership refactor the coordinator is a thin
+//! network / parameter-server shell around
+//! [`Membership`](crate::cluster::membership::Membership), the pure
+//! state machine that owns partitions, admissions, warm transfers,
+//! drains and straggler shedding. This file only does I/O: it drains
+//! one tagged-frame TCP inbox (single-threaded actor, exactly like a
+//! shard serve loop), maps control requests onto membership verdicts,
+//! creates fresh count tables when an epoch rolls, and aggregates
+//! per-iteration reports.
 //!
 //! # Iteration loop
 //!
@@ -18,7 +20,25 @@
 //! slowest partition — the asynchronous bounded-staleness barrier.
 //! Workers flush their pushes and checkpoint *before* reporting, so
 //! when every partition has reported iteration `t`, the tables on the
-//! shards are exactly the counts of the reported assignments.
+//! shards are exactly the counts of the reported assignments. In
+//! snapshot mode ([`TrainConfig::snapshot`]) an additional *fetch
+//! barrier* ([`CtrlRequest::Fetched`]) orders snapshot pulls against
+//! sweeps, making the final table bit-exact under any membership
+//! history.
+//!
+//! # Elasticity
+//!
+//! With `--elastic`, members live on a consistent-hash ring and
+//! partitions move between live workers as *warm transfers*: the donor
+//! releases at a sweep boundary ([`CtrlResponse::Transfer`]), the
+//! recipient resumes from the partition checkpoint with its counts
+//! already in the table — no re-push, no epoch roll. Joins mid-run,
+//! planned drains (`Drain`) and straggler shedding all reduce to ring
+//! recomputations plus warm transfers. Static mode (the default) keeps
+//! the historical fixed partition table, except that surplus
+//! registrants are now *parked*: the coordinator holds their `Register`
+//! envelope and replies the moment a partition frees, instead of
+//! making them re-poll.
 //!
 //! # Failure recovery (paper §3.5, per-partition form)
 //!
@@ -27,33 +47,36 @@
 //! epoch's count table, so the coordinator *rolls the epoch*: it bumps
 //! the epoch counter, creates a **fresh** count table (a new matrix id
 //! — which also fences off any zombie worker still pushing to the old
-//! one), and reissues every partition's [`JobSpec`]. Each worker —
-//! survivors included — reloads its partition's last valid checkpoint
-//! (or re-initializes, if none), pushes those counts into the new
-//! table, and resumes from its checkpointed iteration. The dead
-//! partition itself is handed to the next worker that registers.
+//! one), and reissues every [`JobSpec`]. Each worker — survivors
+//! included — reloads its partitions' last valid checkpoints (or
+//! re-initializes, if none), pushes those counts into the new table,
+//! and resumes. A reaped worker that was merely slow *rejoins warm*:
+//! its next request answers `Error`, it re-registers with the same
+//! token, and the ring hands it back its old ranges.
 //!
 //! # Shard failure (replicated deployments)
 //!
 //! With backups (`serve --backup-of` processes named by
 //! [`TrainConfig::backups`]), worker and coordinator clients fail over
 //! to a shard's backup automatically after repeated delivery failures.
-//! The coordinator additionally *probes* every shard's
-//! `ShardInfo`: an answer from an un-promoted backup means its own
-//! route abandoned the primary — the shard-death signal. It then
-//! promotes the backup, repoints the shard address in future
-//! [`JobSpec`]s, and rolls the epoch, so every partition re-pushes its
-//! checkpoint counts into a fresh table on the surviving replica set —
-//! healing whatever the group-commit window or replication lag lost at
-//! the moment of death.
+//! The coordinator additionally *probes* every shard's `ShardInfo`: an
+//! answer from an un-promoted backup means its own route abandoned the
+//! primary — the shard-death signal. It then promotes the backup,
+//! repoints the shard address in future [`JobSpec`]s, and rolls the
+//! epoch, so every partition re-pushes its checkpoint counts into a
+//! fresh table on the surviving replica set.
 
 use std::collections::{BTreeMap, HashMap};
-use std::ops::Range;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::cluster::membership::{
+    AckVerdict, Admission, Counters, DrainVerdict, FetchVerdict, Membership, MembershipCfg,
+    PollVerdict, DEFAULT_VNODES,
+};
 use crate::cluster::protocol::{
-    CorpusSpec, CtrlRequest, CtrlResponse, JobSpec, SweepKnobs, SweepReport,
+    CorpusSpec, CtrlRequest, CtrlResponse, JobSpec, PartitionAssignment, SweepKnobs,
+    SweepReport,
 };
 use crate::corpus::dataset::Corpus;
 use crate::eval::perplexity::{perplexity_from_loglik, TopicModel};
@@ -61,7 +84,7 @@ use crate::lda::sweep::pull_full_model;
 use crate::lda::trainer::TrainConfig;
 use crate::metrics::{Report, Row};
 use crate::net::tcp::{resolve_addrs, TcpServer, TcpTransport};
-use crate::net::{respond, Inbox, Transport};
+use crate::net::{respond, Envelope, Inbox, Transport};
 use crate::ps::client::{BigMatrix, PsClient};
 use crate::ps::config::{PsConfig, TransportMode};
 use crate::util::error::{Error, Result};
@@ -72,33 +95,15 @@ use crate::{log_info, log_warn};
 const TICK: Duration = Duration::from_millis(50);
 /// Back-off suggested to a worker parked at a barrier.
 const BARRIER_WAIT_MS: u64 = 100;
-/// Back-off suggested to a worker the cluster has no partition for.
-const SPARE_WAIT_MS: u64 = 500;
 /// How long the coordinator keeps answering `Done` after completion so
 /// workers can exit cleanly before it tears the listener down.
 const DRAIN_GRACE: Duration = Duration::from_secs(5);
+/// How long the control line must stay quiet during the final drain
+/// before the coordinator stops listening.
+const QUIET_MS: u64 = 400;
 /// How often the coordinator probes shard roles for primary death
 /// (replicated deployments only).
 const REPLICA_PROBE: Duration = Duration::from_millis(500);
-
-/// One corpus partition's control state.
-struct Slot {
-    /// Absolute document range.
-    range: Range<usize>,
-    /// Worker currently assigned, if any.
-    worker: Option<u64>,
-    /// Epoch of the last `JobSpec` delivered to that worker.
-    delivered_epoch: Option<u32>,
-    /// Whether the worker confirmed `Ready` for the current epoch.
-    ready: bool,
-    /// Iterations completed (absolute, survives epochs).
-    completed: u32,
-    /// Newest iteration known checkpointed on disk.
-    checkpointed: u32,
-    /// A previous owner died or left; the next registration that picks
-    /// this slot up counts as a reassignment.
-    orphaned: bool,
-}
 
 /// One iteration's aggregate across partitions (only built once every
 /// partition has reported it).
@@ -145,14 +150,6 @@ fn aggregate(reports: &[Option<SweepReport>]) -> Option<IterAgg> {
     })
 }
 
-/// A registered worker.
-struct WorkerEntry {
-    /// Partition index it drives.
-    slot: usize,
-    /// Last time any request arrived from it.
-    last_seen: Instant,
-}
-
 /// Parameter-server health sampled when an iteration completes, summed
 /// over shards.
 #[derive(Clone, Copy)]
@@ -163,10 +160,19 @@ struct PsHealth {
     repl_lag: u64,
 }
 
+/// Membership state sampled when an iteration completes.
+#[derive(Clone, Copy)]
+struct MemberSample {
+    members: usize,
+    rebalances: u64,
+    moved_partitions: u64,
+    drain_count: u64,
+}
+
 /// What a finished cluster run produced.
 pub struct ClusterOutcome {
     /// Per-iteration aggregate rows (tokens, seconds, perplexity at
-    /// evaluation points, parameter-server health).
+    /// evaluation points, parameter-server health, membership).
     pub report: Report,
     /// The final model pulled off the parameter servers.
     pub model: TopicModel,
@@ -178,6 +184,8 @@ pub struct ClusterOutcome {
     pub reassignments: u32,
     /// Shard backups promoted to primary after a shard death.
     pub promotions: u32,
+    /// Membership counters: rebalances, warm moves, drains, sheds.
+    pub counters: Counters,
 }
 
 /// The coordinator half of a cluster run. Construct with
@@ -199,11 +207,10 @@ pub struct Coordinator {
     _transport: Arc<dyn Transport>,
     client: PsClient,
     n_wk: BigMatrix<i64>,
-    slots: Vec<Slot>,
-    workers: HashMap<u64, WorkerEntry>,
-    next_worker: u64,
-    epoch: u32,
-    reassignments: u32,
+    /// The membership state machine: partitions, admissions, transfers.
+    membership: Membership,
+    /// Zero point for the relative millisecond clock membership sees.
+    start: Instant,
     promotions: u32,
     /// Count table fenced off by the last epoch roll, retired (deleted
     /// on the shards) at the *next* roll — the one-epoch grace lets
@@ -216,15 +223,17 @@ pub struct Coordinator {
     agg: BTreeMap<u32, Vec<Option<SweepReport>>>,
     /// Parameter-server health sampled when an iteration completes.
     ps_health: BTreeMap<u32, PsHealth>,
+    /// Membership sampled when an iteration completes.
+    member_health: BTreeMap<u32, MemberSample>,
     /// Iterations already announced in the log.
     announced: u32,
     /// Set when recovery is impossible (e.g. no fresh count table could
     /// be created); the run loop aborts with this error.
     fatal: Option<Error>,
-    /// Token → worker id of successful registrations, so a retried
-    /// `Register` whose reply was lost re-receives its assignment
-    /// instead of being seated twice.
-    registrations: HashMap<u64, u64>,
+    /// Held `Register` envelopes of parked standbys (static mode),
+    /// keyed by registration token: answered with a `Job` the moment a
+    /// partition frees, or `Done` when the run finishes.
+    parked: HashMap<u64, Envelope>,
 }
 
 impl Coordinator {
@@ -243,6 +252,13 @@ impl Coordinator {
         cfg.hyper().validate()?;
         if corpus.num_docs() == 0 {
             return Err(Error::Config("empty corpus".into()));
+        }
+        if cfg.elastic && cfg.checkpoint_dir.is_none() {
+            return Err(Error::Config(
+                "--elastic needs --checkpoint-dir: warm partition transfers resume \
+                 from per-partition checkpoints"
+                    .into(),
+            ));
         }
         let TransportMode::Connect(addrs) = &cfg.transport else {
             return Err(Error::Config(
@@ -279,19 +295,23 @@ impl Coordinator {
         let (server, mut inboxes) = TcpServer::bind(&[bind_addr])?;
         let inbox = inboxes.remove(0);
 
-        let slots = corpus
-            .partitions(cfg.workers)
-            .into_iter()
-            .map(|range| Slot {
-                range,
-                worker: None,
-                delivered_epoch: None,
-                ready: false,
-                completed: 0,
-                checkpointed: 0,
-                orphaned: false,
-            })
-            .collect();
+        // Over-partition: partition identity (index, doc range, RNG
+        // stream, checkpoint prefix) is fixed for the whole run; the
+        // ring moves whole partitions between members.
+        let parts = cfg.workers.max(1) * cfg.partition_factor.max(1);
+        let membership = Membership::new(
+            MembershipCfg {
+                elastic: cfg.elastic,
+                workers: cfg.workers,
+                vnodes: DEFAULT_VNODES,
+                iterations: cfg.iterations,
+                max_staleness: cfg.max_staleness,
+                checkpointing: cfg.checkpoint_dir.is_some(),
+                shed_factor: cfg.shed_factor,
+                shed_stall_ms: cfg.shed_stall_ms,
+            },
+            corpus.partitions(parts),
+        );
 
         Ok(Coordinator {
             vocab_size: corpus.vocab_size,
@@ -303,19 +323,17 @@ impl Coordinator {
             _transport: transport,
             client,
             n_wk,
-            slots,
-            workers: HashMap::new(),
-            next_worker: 1,
-            epoch: 0,
-            reassignments: 0,
+            membership,
+            start: Instant::now(),
             promotions: 0,
             fenced: None,
             last_probe: Instant::now(),
             agg: BTreeMap::new(),
             ps_health: BTreeMap::new(),
+            member_health: BTreeMap::new(),
             announced: 0,
             fatal: None,
-            registrations: HashMap::new(),
+            parked: HashMap::new(),
             cfg,
         })
     }
@@ -325,20 +343,27 @@ impl Coordinator {
         self.server.addrs()[0]
     }
 
+    /// Milliseconds since the coordinator came up (the monotonic clock
+    /// the membership state machine runs on).
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
     /// Drive the run to completion: serve the control plane, detect dead
     /// workers, roll epochs on failure, and return the aggregated
     /// report plus the final model.
     pub fn run(mut self) -> Result<ClusterOutcome> {
         let total = self.cfg.iterations;
-        let straggler = Duration::from_millis(self.cfg.straggler_timeout_ms.max(1));
+        let straggler_ms = self.cfg.straggler_timeout_ms.max(1);
         log_info!(
-            "coordinator up on {} ({} partitions, {} iterations, staleness {})",
+            "coordinator up on {} ({} partitions, {} iterations, staleness {}, {})",
             self.addr(),
-            self.slots.len(),
+            self.membership.parts_len(),
             total,
-            self.cfg.max_staleness
+            self.cfg.max_staleness,
+            if self.cfg.elastic { "elastic" } else { "static" }
         );
-        while !self.finished() {
+        while !self.membership.finished() {
             if let Some(env) = self.inbox.recv_timeout(TICK) {
                 self.serve_one(env);
                 // Drain everything already queued before judging
@@ -349,23 +374,28 @@ impl Coordinator {
                     self.serve_one(env);
                 }
             }
-            self.reap_dead(straggler);
+            self.reap_dead(straggler_ms);
+            self.maybe_roll();
+            self.maybe_shed();
+            self.flush_admitted();
             self.probe_replicas();
             if let Some(e) = self.fatal.take() {
+                self.answer_parked_done();
                 self.server.shutdown();
                 return Err(e);
             }
         }
         log_info!("all {} iterations complete; draining workers", total);
-        // Keep answering (with Done) until every registered worker said
-        // goodbye AND the line has been quiet long enough for parked
-        // standbys (which re-register every SPARE_WAIT_MS) to hear the
-        // verdict too — bounded by a hard grace deadline.
+        // Standbys parked on a held envelope hear the verdict directly.
+        self.answer_parked_done();
+        // Keep answering (with Done) until every member said goodbye AND
+        // the line has been quiet for a beat — bounded by a hard grace
+        // deadline.
         let drain_deadline = Instant::now() + DRAIN_GRACE;
-        let quiet_needed = Duration::from_millis(SPARE_WAIT_MS + 200);
+        let quiet_needed = Duration::from_millis(QUIET_MS);
         let mut last_request = Instant::now();
         while Instant::now() < drain_deadline
-            && (!self.workers.is_empty() || last_request.elapsed() < quiet_needed)
+            && (self.membership.members_len() > 0 || last_request.elapsed() < quiet_needed)
         {
             if let Some(env) = self.inbox.recv_timeout(TICK) {
                 last_request = Instant::now();
@@ -385,268 +415,231 @@ impl Coordinator {
             report,
             model,
             final_perplexity,
-            epochs: self.epoch,
-            reassignments: self.reassignments,
+            epochs: self.membership.epoch(),
+            reassignments: self.membership.counters.reassignments as u32,
             promotions: self.promotions,
+            counters: self.membership.counters,
         })
     }
 
     /// Decode, dispatch and answer one inbound control envelope.
-    fn serve_one(&mut self, env: crate::net::Envelope) {
-        let resp = match CtrlRequest::decode(&env.payload) {
-            Ok(req) => self.handle(req),
-            Err(e) => CtrlResponse::Error(e.to_string()),
+    /// `Register` may *hold* the envelope instead (parked standby).
+    fn serve_one(&mut self, env: Envelope) {
+        let req = match CtrlRequest::decode(&env.payload) {
+            Ok(req) => req,
+            Err(e) => {
+                respond(&env, CtrlResponse::Error(e.to_string()).encode());
+                return;
+            }
         };
-        respond(&env, resp.encode());
+        if let CtrlRequest::Register { token } = req {
+            self.handle_register(token, env);
+        } else {
+            let resp = self.handle(req);
+            respond(&env, resp.encode());
+        }
+        self.maybe_roll();
+        self.flush_admitted();
     }
 
-    /// True once every partition has completed every iteration.
-    fn finished(&self) -> bool {
-        self.slots.iter().all(|s| s.completed >= self.cfg.iterations)
-    }
-
-    /// Smallest completed-iteration count across partitions.
-    fn min_completed(&self) -> u32 {
-        self.slots.iter().map(|s| s.completed).min().unwrap_or(0)
-    }
-
-    /// True once every partition's worker confirmed `Ready` for the
-    /// current epoch.
-    fn all_ready(&self) -> bool {
-        self.slots.iter().all(|s| s.ready)
-    }
-
-    /// Build the `JobSpec` for `slot` under the current epoch. The
+    /// Build the `JobSpec` reply for `worker`'s current assignment. The
     /// knobs are the one canonical projection of the trainer config
     /// (`SweepKnobs::from`), so coordinator and wire can never drift.
-    fn spec_for(&self, slot: usize, worker: u64) -> JobSpec {
-        let s = &self.slots[slot];
-        JobSpec {
+    fn build_spec(&mut self, worker: u64) -> CtrlResponse {
+        let parts = self
+            .membership
+            .spec_for(worker)
+            .into_iter()
+            .map(|a| PartitionAssignment {
+                partition: a.part,
+                doc_start: a.doc_start as u64,
+                doc_end: a.doc_end as u64,
+                resume: a.resume,
+                push: a.push,
+            })
+            .collect();
+        CtrlResponse::Job(Box::new(JobSpec {
             worker,
-            partition: slot as u32,
-            doc_start: s.range.start as u64,
-            doc_end: s.range.end as u64,
-            epoch: self.epoch,
+            parts,
+            epoch: self.membership.epoch(),
             matrix_id: self.n_wk.id(),
             iterations: self.cfg.iterations,
             shard_addrs: self.shard_addrs.clone(),
             backup_addrs: self.backup_addrs.clone(),
             corpus: self.corpus_spec.clone(),
             knobs: SweepKnobs::from(&self.cfg),
-        }
+        }))
     }
 
     /// Handle one control request, returning the reply.
     fn handle(&mut self, req: CtrlRequest) -> CtrlResponse {
+        let now = self.now_ms();
         match req {
-            CtrlRequest::Register { token } => self.handle_register(token),
-            CtrlRequest::Ready { worker, epoch, iteration } => {
-                self.touch(worker);
-                self.handle_ready(worker, epoch, iteration)
-            }
-            CtrlRequest::Poll { worker } => {
-                self.touch(worker);
-                self.handle_poll(worker)
-            }
-            CtrlRequest::Report { worker, epoch, iteration, stats } => {
-                self.touch(worker);
-                self.handle_report(worker, epoch, iteration, stats)
-            }
-            CtrlRequest::Heartbeat { worker } => {
-                if self.touch(worker) {
-                    CtrlResponse::Ack
-                } else {
-                    CtrlResponse::Error(format!("unknown worker {worker}"))
+            // Held-envelope path; never reaches here.
+            CtrlRequest::Register { token } => {
+                match self.membership.register(token, now) {
+                    Admission::Seated { worker } | Admission::Existing { worker } => {
+                        self.build_spec(worker)
+                    }
+                    Admission::Parked => CtrlResponse::Wait { millis: QUIET_MS },
+                    Admission::Finished => CtrlResponse::Done,
                 }
             }
-            CtrlRequest::Leave { worker } => self.handle_leave(worker),
-        }
-    }
-
-    /// Refresh a worker's liveness stamp. False when unknown.
-    fn touch(&mut self, worker: u64) -> bool {
-        match self.workers.get_mut(&worker) {
-            Some(entry) => {
-                entry.last_seen = Instant::now();
-                true
+            CtrlRequest::Ready { worker, epoch, parts } => {
+                match self.membership.ready(worker, epoch, &parts, now) {
+                    AckVerdict::Ok => CtrlResponse::Ack,
+                    AckVerdict::Respec => self.build_spec(worker),
+                    AckVerdict::Unknown => unknown(worker),
+                }
             }
-            None => false,
-        }
-    }
-
-    fn handle_register(&mut self, token: u64) -> CtrlResponse {
-        if self.finished() {
-            return CtrlResponse::Done;
-        }
-        // Idempotency: a retried Register whose reply was lost must not
-        // seat the same process twice (the ghost seat would never
-        // heartbeat, get reaped, and force a spurious epoch roll).
-        if let Some(&worker) = self.registrations.get(&token) {
-            if let Some(entry) = self.workers.get(&worker) {
-                let slot = entry.slot;
-                self.slots[slot].delivered_epoch = Some(self.epoch);
-                return CtrlResponse::Job(Box::new(self.spec_for(slot, worker)));
+            CtrlRequest::Poll { worker } => match self.membership.poll(worker, now) {
+                PollVerdict::Respec => self.build_spec(worker),
+                PollVerdict::Transfer(parts) => CtrlResponse::Transfer { parts },
+                PollVerdict::Run { part, iteration } => {
+                    let evaluate =
+                        self.cfg.eval_every > 0 && iteration % self.cfg.eval_every == 0;
+                    CtrlResponse::Run { partition: part, iteration, evaluate }
+                }
+                PollVerdict::Wait => CtrlResponse::Wait { millis: BARRIER_WAIT_MS },
+                PollVerdict::Drained => {
+                    let remaining = self.membership.members_len();
+                    log_info!("worker {worker} drained; {remaining} members remain");
+                    CtrlResponse::Drained
+                }
+                PollVerdict::Done => CtrlResponse::Done,
+                PollVerdict::Unknown => unknown(worker),
+            },
+            CtrlRequest::Report { worker, epoch, partition, iteration, stats } => {
+                match self.membership.report(worker, epoch, partition, iteration, now) {
+                    AckVerdict::Ok => {
+                        if self.membership.owner(partition) == Some(worker) {
+                            let parts = self.membership.parts_len();
+                            self.agg.entry(iteration).or_insert_with(|| vec![None; parts])
+                                [partition as usize] = Some(stats);
+                            self.announce_progress();
+                        }
+                        CtrlResponse::Ack
+                    }
+                    AckVerdict::Respec => self.build_spec(worker),
+                    AckVerdict::Unknown => unknown(worker),
+                }
             }
-            // The original seat was reaped meanwhile; register afresh.
-            self.registrations.remove(&token);
-        }
-        let Some(slot) = self.slots.iter().position(|s| s.worker.is_none()) else {
-            // Fully staffed: the joiner becomes a standby. It retries
-            // Register and picks a partition up the moment a failure
-            // frees one.
-            return CtrlResponse::Wait { millis: SPARE_WAIT_MS };
-        };
-        let worker = self.next_worker;
-        self.next_worker += 1;
-        self.registrations.insert(token, worker);
-        if self.slots[slot].orphaned {
-            // This partition lost its owner: a replacement pickup.
-            self.reassignments += 1;
-            self.slots[slot].orphaned = false;
-        }
-        self.slots[slot].worker = Some(worker);
-        self.slots[slot].delivered_epoch = Some(self.epoch);
-        self.slots[slot].ready = false;
-        self.workers.insert(worker, WorkerEntry { slot, last_seen: Instant::now() });
-        log_info!(
-            "worker {worker} registered; assigned partition {slot} (epoch {})",
-            self.epoch
-        );
-        CtrlResponse::Job(Box::new(self.spec_for(slot, worker)))
-    }
-
-    fn handle_ready(&mut self, worker: u64, epoch: u32, iteration: u32) -> CtrlResponse {
-        let Some(slot) = self.workers.get(&worker).map(|e| e.slot) else {
-            return CtrlResponse::Error(format!("unknown worker {worker}"));
-        };
-        if epoch != self.epoch {
-            // Raced a rollback; hand out the fresh spec. Marking it
-            // delivered here matters: otherwise the worker's next Poll
-            // would see a stale delivered_epoch, get the job AGAIN, and
-            // push its partition counts into the epoch's table twice
-            // (pushes are additive deltas, not idempotent).
-            self.slots[slot].delivered_epoch = Some(self.epoch);
-            self.slots[slot].ready = false;
-            return CtrlResponse::Job(Box::new(self.spec_for(slot, worker)));
-        }
-        let s = &mut self.slots[slot];
-        s.ready = true;
-        // The worker's disk is the authority on the resume point: its
-        // restored state *is* a checkpoint at `iteration`.
-        s.completed = iteration;
-        s.checkpointed = iteration;
-        log_info!(
-            "partition {slot} ready at iteration {iteration} (epoch {epoch}, worker {worker})"
-        );
-        CtrlResponse::Ack
-    }
-
-    fn handle_poll(&mut self, worker: u64) -> CtrlResponse {
-        if self.finished() {
-            return CtrlResponse::Done;
-        }
-        let Some(slot) = self.workers.get(&worker).map(|e| e.slot) else {
-            return CtrlResponse::Error(format!("unknown worker {worker} (re-register)"));
-        };
-        if self.slots[slot].delivered_epoch != Some(self.epoch) {
-            // A rollback happened since this worker's last instruction:
-            // reissue the assignment under the new epoch.
-            self.slots[slot].delivered_epoch = Some(self.epoch);
-            self.slots[slot].ready = false;
-            return CtrlResponse::Job(Box::new(self.spec_for(slot, worker)));
-        }
-        if !self.slots[slot].ready || !self.all_ready() {
-            // Either this worker polled before confirming Ready (odd but
-            // harmless) or some partition is still rebuilding. The
-            // column-sum totals are not meaningful yet.
-            return CtrlResponse::Wait { millis: BARRIER_WAIT_MS };
-        }
-        let s = &self.slots[slot];
-        if s.completed >= self.cfg.iterations {
-            // This partition is done; idle until the rest catch up.
-            return CtrlResponse::Wait { millis: BARRIER_WAIT_MS };
-        }
-        if s.completed > self.min_completed() + self.cfg.max_staleness {
-            // Bounded-staleness barrier: too far ahead of the slowest.
-            return CtrlResponse::Wait { millis: BARRIER_WAIT_MS };
-        }
-        let iteration = s.completed + 1;
-        let evaluate = self.cfg.eval_every > 0 && iteration % self.cfg.eval_every == 0;
-        CtrlResponse::Run { iteration, evaluate }
-    }
-
-    fn handle_report(
-        &mut self,
-        worker: u64,
-        epoch: u32,
-        iteration: u32,
-        stats: SweepReport,
-    ) -> CtrlResponse {
-        let Some(slot) = self.workers.get(&worker).map(|e| e.slot) else {
-            return CtrlResponse::Error(format!("unknown worker {worker} (re-register)"));
-        };
-        if epoch != self.epoch {
-            // The sweep ran under a rolled-back epoch: its pushes went to
-            // the fenced-off old table. Discard and reissue the job.
-            self.slots[slot].delivered_epoch = Some(self.epoch);
-            self.slots[slot].ready = false;
-            return CtrlResponse::Job(Box::new(self.spec_for(slot, worker)));
-        }
-        let checkpointing = self.cfg.checkpoint_dir.is_some();
-        {
-            let s = &mut self.slots[slot];
-            s.completed = iteration;
-            if checkpointing {
-                // Workers checkpoint before they report.
-                s.checkpointed = iteration;
+            CtrlRequest::Fetched { worker, epoch, partition, iteration } => {
+                match self.membership.fetched(worker, epoch, partition, iteration, now) {
+                    FetchVerdict::Go => CtrlResponse::Ack,
+                    FetchVerdict::Hold => CtrlResponse::Wait { millis: BARRIER_WAIT_MS },
+                    FetchVerdict::Respec => self.build_spec(worker),
+                    FetchVerdict::Unknown => unknown(worker),
+                }
+            }
+            CtrlRequest::Heartbeat { worker } => {
+                if self.membership.touch(worker, now) {
+                    CtrlResponse::Ack
+                } else {
+                    unknown(worker)
+                }
+            }
+            CtrlRequest::Drain { worker } => match self.membership.drain(worker, now) {
+                DrainVerdict::Draining => {
+                    log_info!("worker {worker} draining; partitions transfer at boundaries");
+                    CtrlResponse::Ack
+                }
+                DrainVerdict::Drained => {
+                    log_info!("worker {worker} drained");
+                    CtrlResponse::Drained
+                }
+                DrainVerdict::Unknown => unknown(worker),
+            },
+            CtrlRequest::Leave { worker } => {
+                self.membership.leave(worker, now);
+                CtrlResponse::Ack
             }
         }
-        let parts = self.slots.len();
-        self.agg.entry(iteration).or_insert_with(|| vec![None; parts])[slot] = Some(stats);
-        self.announce_progress();
-        CtrlResponse::Ack
     }
 
-    fn handle_leave(&mut self, worker: u64) -> CtrlResponse {
-        if let Some(entry) = self.workers.remove(&worker) {
-            if !self.finished() {
-                // A mid-run goodbye is a failure for recovery purposes:
-                // the partition's pushes stop at an arbitrary point.
-                log_warn!("worker {worker} left mid-run; rolling epoch");
-                self.slots[entry.slot].worker = None;
-                self.slots[entry.slot].orphaned = true;
-                self.roll_epoch();
-            } else {
-                self.slots[entry.slot].worker = None;
-            }
-        }
-        CtrlResponse::Ack
-    }
-
-    /// Declare workers dead after the straggler timeout and roll the
-    /// epoch if any held a partition.
-    fn reap_dead(&mut self, straggler: Duration) {
-        let now = Instant::now();
-        let dead: Vec<u64> = self
-            .workers
-            .iter()
-            .filter(|(_, e)| now.duration_since(e.last_seen) > straggler)
-            .map(|(&id, _)| id)
-            .collect();
-        if dead.is_empty() {
-            return;
-        }
-        for id in dead {
-            if let Some(entry) = self.workers.remove(&id) {
-                log_warn!(
-                    "worker {id} (partition {}) missed the straggler timeout; presumed dead",
-                    entry.slot
+    /// Seat, park, or re-acknowledge a registrant. A parked standby's
+    /// envelope is held (no reply) until a partition frees or the run
+    /// finishes; a re-register from the same token replaces the held
+    /// envelope (its predecessor's reply channel timed out worker-side).
+    fn handle_register(&mut self, token: u64, env: Envelope) {
+        match self.membership.register(token, self.now_ms()) {
+            Admission::Seated { worker } => {
+                log_info!(
+                    "worker {worker} registered (token {token:#018x}, epoch {})",
+                    self.membership.epoch()
                 );
-                self.slots[entry.slot].worker = None;
-                self.slots[entry.slot].orphaned = true;
+                let resp = self.build_spec(worker);
+                respond(&env, resp.encode());
+            }
+            Admission::Existing { worker } => {
+                // Idempotency: a retried Register whose reply was lost
+                // re-receives its current assignment instead of being
+                // seated twice.
+                let resp = self.build_spec(worker);
+                respond(&env, resp.encode());
+            }
+            Admission::Parked => {
+                log_info!("standby parked (token {token:#018x}); answered when a seat frees");
+                self.parked.insert(token, env);
+            }
+            Admission::Finished => {
+                respond(&env, CtrlResponse::Done.encode());
             }
         }
-        self.roll_epoch();
+    }
+
+    /// Reply to parked standbys admitted by a capacity change.
+    fn flush_admitted(&mut self) {
+        for (token, worker) in self.membership.take_admitted() {
+            let resp = self.build_spec(worker);
+            match self.parked.remove(&token) {
+                Some(env) => {
+                    log_info!("parked standby admitted as worker {worker}");
+                    respond(&env, resp.encode());
+                }
+                // Envelope lost (connection died while parked): the
+                // standby re-registers with the same token and the
+                // idempotent path re-delivers the spec.
+                None => log_warn!("admitted token {token:#018x} had no held envelope"),
+            }
+        }
+    }
+
+    /// Answer every held standby envelope with `Done`.
+    fn answer_parked_done(&mut self) {
+        for (_, env) in self.parked.drain() {
+            respond(&env, CtrlResponse::Done.encode());
+        }
+    }
+
+    /// Declare workers dead after the straggler timeout; membership
+    /// decides whether that forces an epoch roll.
+    fn reap_dead(&mut self, straggler_ms: u64) {
+        let dead = self.membership.reap(self.now_ms(), straggler_ms);
+        for w in dead {
+            log_warn!("worker {w} missed the straggler timeout; presumed dead");
+        }
+    }
+
+    /// Roll the epoch if membership wants one (reap with owned
+    /// partitions, failed warm handoff, cold drain, mid-run leave).
+    fn maybe_roll(&mut self) {
+        if self.membership.roll_wanted() {
+            self.roll_epoch();
+        }
+    }
+
+    /// Shed load off a straggler: narrow its ring range so the next
+    /// rebalance moves partitions to faster members.
+    fn maybe_shed(&mut self) {
+        if let Some(ev) = self.membership.maybe_shed(self.now_ms()) {
+            log_warn!(
+                "straggler shed: partition {} lags; worker {} narrowed to ring weight {}",
+                ev.part,
+                ev.worker,
+                ev.new_weight
+            );
+        }
     }
 
     /// Watch replicated shards for primary death. The detector is the
@@ -688,14 +681,13 @@ impl Coordinator {
     /// Start a fresh epoch after a failure: new count table (fencing off
     /// the old one), everyone rebuilds from checkpoints.
     fn roll_epoch(&mut self) {
-        self.epoch += 1;
-        let fenced = self.n_wk.id();
         match self.client.matrix_with_layout::<i64>(
             self.vocab_size as u64,
             self.cfg.num_topics,
             self.cfg.wt_layout,
         ) {
             Ok(m) => {
+                let fenced = self.n_wk.id();
                 self.n_wk = m;
                 // Retire the table fenced off by the *previous* roll.
                 // The just-fenced table gets one epoch of grace: live
@@ -723,45 +715,41 @@ impl Coordinator {
                 // unreachable — abort the run instead of corrupting it.
                 log_warn!(
                     "could not create epoch {} count table ({e}); aborting the run",
-                    self.epoch
+                    self.membership.epoch() + 1
                 );
                 self.fatal = Some(e);
                 return;
             }
         }
-        for s in self.slots.iter_mut() {
-            s.ready = false;
-            s.delivered_epoch = None;
-            // Resume point: the newest checkpoint we know of. The
-            // worker's Ready confirms (or corrects) this from disk.
-            s.completed = s.checkpointed;
-        }
+        self.membership.rolled(self.now_ms());
         // Drop aggregate rows beyond the common resume point: partitions
         // behind it will re-report those iterations under the new table,
         // while partitions ahead will not — a mix that would produce
         // rows (and perplexities) spanning two different count tables.
         // Dropped iterations simply re-complete (or stay absent, which
         // is honest) rather than reporting a silently wrong metric.
-        let base = self.min_completed();
+        let base = self.membership.min_completed();
         self.agg.retain(|&it, _| it <= base);
         self.ps_health.retain(|&it, _| it <= base);
+        self.member_health.retain(|&it, _| it <= base);
         self.announced = self.announced.min(base);
         log_info!(
             "epoch rolled to {} (matrix {}); partitions resume from their checkpoints",
-            self.epoch,
+            self.membership.epoch(),
             self.n_wk.id()
         );
     }
 
     /// Log iterations as they become fully reported, in order, and
-    /// sample parameter-server health for the iteration's report row.
+    /// sample parameter-server health and membership for the
+    /// iteration's report row.
     fn announce_progress(&mut self) {
         loop {
             let next = self.announced + 1;
             let Some(agg) = self.agg.get(&next).and_then(|r| aggregate(r)) else {
                 return;
             };
-            if self.min_completed() < next {
+            if self.membership.min_completed() < next {
                 return;
             }
             let rate = agg.tokens as f64 / agg.secs.max(1e-9);
@@ -773,6 +761,15 @@ impl Coordinator {
                 ),
             }
             self.announced = next;
+            self.member_health.insert(
+                next,
+                MemberSample {
+                    members: self.membership.members_len(),
+                    rebalances: self.membership.counters.rebalances,
+                    moved_partitions: self.membership.counters.moved_partitions,
+                    drain_count: self.membership.counters.drain_count,
+                },
+            );
             if let Ok(infos) = self.client.shard_infos() {
                 self.ps_health.insert(
                     next,
@@ -812,6 +809,13 @@ impl Coordinator {
                 row = row.set("perplexity", p);
                 final_perplexity = Some(p);
             }
+            if let Some(&m) = self.member_health.get(&iter) {
+                row = row
+                    .set("members", m.members as f64)
+                    .set("rebalances", m.rebalances as f64)
+                    .set("moved_partitions", m.moved_partitions as f64)
+                    .set("drain_count", m.drain_count as f64);
+            }
             if let Some(&h) = self.ps_health.get(&iter) {
                 row = row
                     .set("ps_resident_bytes", h.bytes as f64)
@@ -823,4 +827,10 @@ impl Coordinator {
         }
         (report, final_perplexity)
     }
+}
+
+/// The `Error` reply that tells a worker to re-register (zombie warm
+/// rejoin path).
+fn unknown(worker: u64) -> CtrlResponse {
+    CtrlResponse::Error(format!("unknown worker {worker} (re-register)"))
 }

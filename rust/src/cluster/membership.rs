@@ -1,0 +1,1280 @@
+//! Elastic membership: the pure state machine behind the coordinator's
+//! control plane.
+//!
+//! The coordinator used to keep a fixed `Vec<Slot>` sized at
+//! `--workers`: a freed partition parked until a standby re-registered,
+//! and every ownership change rolled the epoch. This module replaces
+//! that table with a [`Membership`] manager that supports two
+//! disciplines behind one API:
+//!
+//! - **static** (`elastic = false`, the default): the historical
+//!   behavior. The first `workers` registrants fill partitions in index
+//!   order, later registrants are *parked* (the coordinator holds their
+//!   envelope and replies when a partition frees — no re-register
+//!   polling), and recovery goes through epoch rolls.
+//! - **elastic** (`elastic = true`, requires checkpointing): members
+//!   live on a murmur3 consistent-hash [`Ring`](crate::cluster::ring)
+//!   keyed by their registration token. Joins, planned drains, reaps
+//!   and straggler shedding recompute the target assignment, and
+//!   partitions move between live members via *warm transfers* — the
+//!   donor releases at a sweep boundary, the recipient resumes from the
+//!   partition checkpoint with its counts already in the table (no
+//!   re-push, no epoch roll).
+//!
+//! Everything here is pure state: no sockets, no clocks (timestamps are
+//! passed in as `u64` milliseconds), no filesystem. That is what lets
+//! `tests/model.rs` drive the *real* membership logic under
+//! `util/sync_shim` schedules, and the coordinator stay a thin
+//! network/parameter-server shell around it.
+//!
+//! # Warm-transfer safety rules
+//!
+//! A partition may change owners mid-epoch only when **all** hold:
+//!
+//! 1. `issued == completed` — the donor is at a sweep boundary, not
+//!    mid-flight (transfers are delivered as poll replies, so the donor
+//!    observes the release before it could start another sweep).
+//! 2. `warm` — the partition's counts are settled in the *current*
+//!    epoch's table (its owner pushed and confirmed via `Ready`), so
+//!    the recipient must not push again (`PartAssign::push == false`).
+//! 3. The recipient may not be issued a sweep until it confirms the
+//!    checkpoint loaded at exactly the table's iteration (`confirmed`);
+//!    a failed or mismatched load falls back to an epoch roll, which
+//!    heals by rebuilding the table from everyone's checkpoints.
+//!
+//! Epoch rolls realize all pending moves for free (everyone re-pushes
+//! into a fresh table), so `rolled()` applies `target` directly.
+
+use std::collections::HashMap;
+use std::ops::Range;
+
+use crate::cluster::ring::Ring;
+
+/// Default virtual nodes per ring member.
+pub const DEFAULT_VNODES: u32 = 64;
+
+/// Membership configuration, derived from `TrainConfig` by the
+/// coordinator.
+#[derive(Debug, Clone)]
+pub struct MembershipCfg {
+    /// Elastic (ring) discipline instead of the static partition table.
+    pub elastic: bool,
+    /// Static-mode seat count (and sizing hint for partitioning).
+    pub workers: usize,
+    /// Virtual nodes per member at full weight.
+    pub vnodes: u32,
+    /// Total sweep iterations for the run.
+    pub iterations: u32,
+    /// Bounded-staleness window (0 = lockstep).
+    pub max_staleness: u32,
+    /// Partition checkpoints are enabled (required for warm transfers).
+    pub checkpointing: bool,
+    /// Straggler shedding: shed when a partition lags the staleness
+    /// window by this factor. `<= 0` disables shedding.
+    pub shed_factor: f64,
+    /// How long a lagging partition must make no progress before it is
+    /// considered stalled (also the shed cool-down).
+    pub shed_stall_ms: u64,
+}
+
+impl MembershipCfg {
+    fn shed_threshold(&self) -> u32 {
+        let scaled = (self.max_staleness as f64 * self.shed_factor).ceil() as u32;
+        scaled.max(1).min(self.max_staleness + 1)
+    }
+}
+
+/// One corpus partition's control state.
+#[derive(Debug, Clone)]
+struct Part {
+    range: Range<usize>,
+    /// Live owner (a member id), if any.
+    owner: Option<u64>,
+    /// Ring-desired owner; `Some(owner)` when no move is pending.
+    target: Option<u64>,
+    /// Counts for the current epoch are in the table.
+    ready: bool,
+    /// Counts are settled in the current table — the next owner resumes
+    /// warm (`push = false`). Cleared by epoch rolls.
+    warm: bool,
+    /// The current owner confirmed (via `Ready`) that its runner is
+    /// built; sweeps are only issued for confirmed partitions.
+    confirmed: bool,
+    /// Lost its owner to a failure; counted as a reassignment when
+    /// re-seated.
+    orphaned: bool,
+    completed: u32,
+    checkpointed: u32,
+    /// Highest iteration handed out via `Run`.
+    issued: u32,
+    /// Highest iteration whose model snapshot the owner has pulled
+    /// (snapshot-mode fetch barrier).
+    fetched: u32,
+    /// Last time this partition completed an iteration (or was seated).
+    last_progress_ms: u64,
+}
+
+#[derive(Debug, Clone)]
+struct MemberState {
+    token: u64,
+    last_seen_ms: u64,
+    draining: bool,
+    /// The member's delivered job spec is stale (seat, transfer-in,
+    /// epoch roll); next poll replies with a fresh spec.
+    needs_spec: bool,
+}
+
+/// Outcome of a registration attempt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Admission {
+    /// Seated as a member; deliver a job spec.
+    Seated { worker: u64 },
+    /// Idempotent retry of a live registration.
+    Existing { worker: u64 },
+    /// No partition free (static mode): hold the envelope, reply when
+    /// one frees.
+    Parked,
+    /// The run is already complete.
+    Finished,
+}
+
+/// Reply to a worker poll.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PollVerdict {
+    /// Assignment or epoch changed: deliver a fresh job spec.
+    Respec,
+    /// Release these partitions (warm transfer out); keep polling.
+    Transfer(Vec<u32>),
+    /// Sweep `part` at `iteration`.
+    Run { part: u32, iteration: u32 },
+    /// Nothing to do yet.
+    Wait,
+    /// Planned drain complete: checkpointed, ranges handed back, leave.
+    Drained,
+    /// Run complete.
+    Done,
+    /// Not a member (evicted): re-register to rejoin warm.
+    Unknown,
+}
+
+/// Reply to `Ready` / `Report`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AckVerdict {
+    Ok,
+    /// Stale epoch: deliver a fresh job spec.
+    Respec,
+    Unknown,
+}
+
+/// Reply to a snapshot-mode `Fetched` notification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchVerdict {
+    /// Every participating partition has fetched this iteration: sweep.
+    Go,
+    /// Barrier not met yet; re-poll.
+    Hold,
+    /// Stale epoch: go back to the poll loop for a fresh spec.
+    Respec,
+    Unknown,
+}
+
+/// Reply to a `Drain` request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainVerdict {
+    /// Keep working; partitions will transfer out at sweep boundaries
+    /// and a later poll answers `Drained`.
+    Draining,
+    /// Drain complete immediately (cold drain, or nothing owned).
+    Drained,
+    Unknown,
+}
+
+/// A partition assignment inside a job spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartAssign {
+    pub part: u32,
+    pub doc_start: usize,
+    pub doc_end: usize,
+    /// Checkpoint iteration to resume from (0 = none yet).
+    pub resume: u32,
+    /// Push the partition's counts into the table after building
+    /// (`false` for warm handoffs — the counts are already there).
+    pub push: bool,
+}
+
+/// Straggler-shedding event, for logging.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShedEvent {
+    pub worker: u64,
+    pub part: u32,
+    pub new_weight: u32,
+}
+
+/// Observability counters surfaced in the coordinator report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Counters {
+    /// Target-assignment recomputations that changed ownership.
+    pub rebalances: u64,
+    /// Partitions moved between live members (warm transfers + roll
+    /// realizations + warm pickups).
+    pub moved_partitions: u64,
+    /// Planned drains completed.
+    pub drain_count: u64,
+    /// Failure reassignments (orphaned partition re-seated).
+    pub reassignments: u64,
+    /// Straggler shed events.
+    pub sheds: u64,
+}
+
+/// The membership manager. See the module docs for the two disciplines.
+#[derive(Debug, Clone)]
+pub struct Membership {
+    cfg: MembershipCfg,
+    parts: Vec<Part>,
+    ring: Ring,
+    members: HashMap<u64, MemberState>,
+    /// Registration token → member id, for idempotent retries and
+    /// zombie rejoin.
+    tokens: HashMap<u64, u64>,
+    /// Parked registration tokens, FIFO (static mode).
+    parked: Vec<u64>,
+    /// Parked tokens admitted by a capacity change; the coordinator
+    /// drains this and replies to the held envelopes.
+    admitted: Vec<(u64, u64)>,
+    next_member: u64,
+    epoch: u32,
+    roll_wanted: bool,
+    shed_cooldown_until_ms: u64,
+    pub counters: Counters,
+}
+
+impl Membership {
+    pub fn new(cfg: MembershipCfg, ranges: Vec<Range<usize>>) -> Membership {
+        let parts = ranges
+            .into_iter()
+            .map(|range| Part {
+                range,
+                owner: None,
+                target: None,
+                ready: false,
+                warm: false,
+                confirmed: false,
+                orphaned: false,
+                completed: 0,
+                checkpointed: 0,
+                issued: 0,
+                fetched: 0,
+                last_progress_ms: 0,
+            })
+            .collect();
+        Membership {
+            cfg,
+            parts,
+            ring: Ring::new(),
+            members: HashMap::new(),
+            tokens: HashMap::new(),
+            parked: Vec::new(),
+            admitted: Vec::new(),
+            next_member: 0,
+            epoch: 0,
+            roll_wanted: false,
+            shed_cooldown_until_ms: 0,
+            counters: Counters::default(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Read accessors (used by the coordinator shell and the models).
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    pub fn roll_wanted(&self) -> bool {
+        self.roll_wanted
+    }
+
+    pub fn parts_len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn members_len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
+    }
+
+    pub fn owner(&self, part: u32) -> Option<u64> {
+        self.parts.get(part as usize).and_then(|p| p.owner)
+    }
+
+    pub fn completed(&self, part: u32) -> u32 {
+        self.parts.get(part as usize).map_or(0, |p| p.completed)
+    }
+
+    pub fn finished(&self) -> bool {
+        self.parts.iter().all(|p| p.completed >= self.cfg.iterations)
+    }
+
+    pub fn min_completed(&self) -> u32 {
+        self.parts.iter().map(|p| p.completed).min().unwrap_or(0)
+    }
+
+    fn all_ready(&self) -> bool {
+        self.parts.iter().all(|p| p.ready)
+    }
+
+    fn owns_any(&self, worker: u64) -> bool {
+        self.parts.iter().any(|p| p.owner == Some(worker))
+    }
+
+    /// Sanity invariants, asserted by the model checker after every
+    /// step: an owner is always a live member, a live target is always
+    /// a live member, and counters never run backwards.
+    pub fn check_invariants(&self) {
+        for (i, p) in self.parts.iter().enumerate() {
+            if let Some(w) = p.owner {
+                assert!(self.members.contains_key(&w), "part {i} owned by dead member {w}");
+            }
+            if let Some(w) = p.target {
+                assert!(
+                    self.members.contains_key(&w),
+                    "part {i} targeted at dead member {w}"
+                );
+            }
+            assert!(p.completed <= p.issued, "part {i} completed past issued");
+            assert!(p.checkpointed <= p.completed, "part {i} checkpointed past completed");
+        }
+        for (&token, &w) in &self.tokens {
+            assert!(
+                self.members.contains_key(&w),
+                "token {token:#x} maps to dead member {w}"
+            );
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Registration and admission.
+
+    /// Register a worker by token. Idempotent; a token whose member was
+    /// reaped re-registers fresh (zombie rejoin — it keeps its
+    /// checkpoint files because partition identity is stable).
+    pub fn register(&mut self, token: u64, now_ms: u64) -> Admission {
+        if let Some(&w) = self.tokens.get(&token) {
+            if let Some(m) = self.members.get_mut(&w) {
+                m.last_seen_ms = now_ms;
+                return Admission::Existing { worker: w };
+            }
+            self.tokens.remove(&token);
+        }
+        if self.finished() {
+            return Admission::Finished;
+        }
+        if self.cfg.elastic {
+            let w = self.seat(token, now_ms);
+            self.ring.insert(token, self.cfg.vnodes);
+            self.recompute_targets(true, now_ms);
+            Admission::Seated { worker: w }
+        } else if self.static_seat_available() {
+            let w = self.seat(token, now_ms);
+            self.static_fill(w, now_ms);
+            Admission::Seated { worker: w }
+        } else {
+            if !self.parked.contains(&token) {
+                self.parked.push(token);
+            }
+            Admission::Parked
+        }
+    }
+
+    fn seat(&mut self, token: u64, now_ms: u64) -> u64 {
+        let w = self.next_member;
+        self.next_member += 1;
+        self.members.insert(
+            w,
+            MemberState { token, last_seen_ms: now_ms, draining: false, needs_spec: true },
+        );
+        self.tokens.insert(token, w);
+        w
+    }
+
+    fn static_seat_available(&self) -> bool {
+        self.members.len() < self.cfg.workers
+            && self.parts.iter().any(|p| p.owner.is_none())
+    }
+
+    /// Static discipline: hand `worker` unowned partitions in index
+    /// order, up to the per-seat quota.
+    fn static_fill(&mut self, worker: u64, now_ms: u64) {
+        let quota = self.parts.len().div_ceil(self.cfg.workers.max(1));
+        let mut taken = 0usize;
+        for p in self.parts.iter_mut() {
+            if taken >= quota {
+                break;
+            }
+            if p.owner.is_some() {
+                continue;
+            }
+            p.owner = Some(worker);
+            p.target = Some(worker);
+            p.confirmed = false;
+            p.issued = p.completed;
+            p.fetched = p.completed;
+            p.last_progress_ms = now_ms;
+            if p.orphaned {
+                p.orphaned = false;
+                self.counters.reassignments += 1;
+            } else if p.warm {
+                // Warm pickup after a static planned drain.
+                self.counters.moved_partitions += 1;
+            }
+            taken += 1;
+        }
+        if let Some(m) = self.members.get_mut(&worker) {
+            m.needs_spec = true;
+        }
+    }
+
+    /// Admit parked registrants while capacity is free (static mode).
+    /// The coordinator drains [`take_admitted`](Self::take_admitted)
+    /// and replies to the envelopes it held.
+    fn admit_parked(&mut self, now_ms: u64) {
+        while !self.parked.is_empty() && self.static_seat_available() {
+            let token = self.parked.remove(0);
+            let w = self.seat(token, now_ms);
+            self.static_fill(w, now_ms);
+            self.admitted.push((token, w));
+        }
+    }
+
+    /// Parked tokens admitted since the last call (token, member id).
+    pub fn take_admitted(&mut self) -> Vec<(u64, u64)> {
+        std::mem::take(&mut self.admitted)
+    }
+
+    /// Parked tokens still waiting (the coordinator answers their
+    /// envelopes with `Done` when the run finishes).
+    pub fn parked_tokens(&self) -> &[u64] {
+        &self.parked
+    }
+
+    // ------------------------------------------------------------------
+    // Ring target recomputation (elastic mode).
+
+    /// Recompute the desired owner of every partition from the ring and
+    /// directly seat unowned partitions (fresh starts and post-roll
+    /// orphans need no warm handoff — there is no donor).
+    fn recompute_targets(&mut self, count_rebalance: bool, now_ms: u64) {
+        if !self.cfg.elastic {
+            return;
+        }
+        let assign = self.ring.assign(self.parts.len() as u32);
+        let by_token: HashMap<u64, u64> =
+            self.members.iter().map(|(&w, m)| (m.token, w)).collect();
+        let mut changed = false;
+        for (i, p) in self.parts.iter_mut().enumerate() {
+            let tgt = assign.get(i).and_then(|tok| by_token.get(tok)).copied();
+            if p.target != tgt {
+                p.target = tgt;
+                changed = true;
+            }
+            if p.owner.is_none() {
+                if let Some(w) = tgt {
+                    p.owner = Some(w);
+                    p.confirmed = false;
+                    p.issued = p.completed;
+                    p.fetched = p.completed;
+                    p.last_progress_ms = now_ms;
+                    if p.orphaned {
+                        p.orphaned = false;
+                        self.counters.reassignments += 1;
+                    } else if p.warm {
+                        self.counters.moved_partitions += 1;
+                    }
+                    if let Some(m) = self.members.get_mut(&w) {
+                        m.needs_spec = true;
+                    }
+                }
+            }
+        }
+        if changed && count_rebalance {
+            self.counters.rebalances += 1;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Job specs.
+
+    /// The worker's current assignment, for building a `JobSpec`.
+    /// Clears the respec flag.
+    pub fn spec_for(&mut self, worker: u64) -> Vec<PartAssign> {
+        if let Some(m) = self.members.get_mut(&worker) {
+            m.needs_spec = false;
+        }
+        self.parts
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.owner == Some(worker))
+            .map(|(i, p)| PartAssign {
+                part: i as u32,
+                doc_start: p.range.start,
+                doc_end: p.range.end,
+                resume: p.checkpointed,
+                push: !p.warm,
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Worker messages.
+
+    /// `Ready`: the worker built runners for its spec'd partitions.
+    /// `items` is `(part, iteration, loaded)` — the iteration each
+    /// runner resumed at, and whether the checkpoint loaded. Warm
+    /// handoffs must load at exactly the table's iteration; anything
+    /// else forces an epoch roll (the heal-everything path).
+    pub fn ready(
+        &mut self,
+        worker: u64,
+        epoch: u32,
+        items: &[(u32, u32, bool)],
+        now_ms: u64,
+    ) -> AckVerdict {
+        let Some(m) = self.members.get_mut(&worker) else {
+            return AckVerdict::Unknown;
+        };
+        m.last_seen_ms = now_ms;
+        if epoch != self.epoch {
+            m.needs_spec = true;
+            return AckVerdict::Respec;
+        }
+        let finished = self.finished();
+        for &(part, iteration, loaded) in items {
+            let Some(p) = self.parts.get_mut(part as usize) else { continue };
+            if p.owner != Some(worker) {
+                continue; // moved away since the spec was delivered
+            }
+            if p.warm {
+                // A warm handoff must resume at exactly the table's
+                // iteration. `resume == 0` needs no file: the fresh
+                // init stream is deterministic per (epoch, partition),
+                // so a rebuild reproduces the pushed counts bit-exact.
+                let ok = iteration == p.checkpointed && (loaded || iteration == 0);
+                if !ok {
+                    // The handoff checkpoint is gone or stale; the
+                    // table no longer matches any disk state this
+                    // worker can produce. Roll the epoch to rebuild.
+                    if !finished {
+                        self.roll_wanted = true;
+                    }
+                    continue;
+                }
+                p.confirmed = true;
+            } else {
+                // The worker pushed its (checkpoint or fresh) counts
+                // before `Ready`; its disk is the authority on where
+                // this partition resumes.
+                p.completed = iteration;
+                p.checkpointed = if loaded { iteration } else { 0 };
+                p.issued = iteration;
+                p.fetched = iteration;
+                p.ready = true;
+                p.warm = true;
+                p.confirmed = true;
+                p.last_progress_ms = now_ms;
+            }
+        }
+        AckVerdict::Ok
+    }
+
+    /// `Report`: the worker finished sweeping `part` at `iteration`.
+    pub fn report(
+        &mut self,
+        worker: u64,
+        epoch: u32,
+        part: u32,
+        iteration: u32,
+        now_ms: u64,
+    ) -> AckVerdict {
+        let Some(m) = self.members.get_mut(&worker) else {
+            return AckVerdict::Unknown;
+        };
+        m.last_seen_ms = now_ms;
+        if epoch != self.epoch {
+            m.needs_spec = true;
+            return AckVerdict::Respec;
+        }
+        let checkpointing = self.cfg.checkpointing;
+        let Some(p) = self.parts.get_mut(part as usize) else {
+            return AckVerdict::Ok;
+        };
+        if p.owner != Some(worker) {
+            return AckVerdict::Ok; // stale report from a past owner
+        }
+        p.completed = iteration;
+        p.issued = p.issued.max(iteration);
+        p.fetched = p.fetched.max(iteration);
+        if checkpointing {
+            p.checkpointed = iteration;
+        }
+        p.last_progress_ms = now_ms;
+        AckVerdict::Ok
+    }
+
+    /// Snapshot-mode fetch barrier: the worker pulled the model
+    /// snapshot for `iteration`. A worker pulls once per iteration and
+    /// sweeps every partition it owns against that one snapshot, so
+    /// the fetch covers all of its partitions — marking only `part`
+    /// would deadlock a worker that owns several (it cannot poll for
+    /// the others while parked at the barrier). Sweeping may start
+    /// only once every partition still participating in `iteration`
+    /// has fetched it — that is what makes the per-iteration snapshot
+    /// (and so the final count table) deterministic under any
+    /// membership.
+    pub fn fetched(
+        &mut self,
+        worker: u64,
+        epoch: u32,
+        part: u32,
+        iteration: u32,
+        now_ms: u64,
+    ) -> FetchVerdict {
+        let Some(m) = self.members.get_mut(&worker) else {
+            return FetchVerdict::Unknown;
+        };
+        m.last_seen_ms = now_ms;
+        if epoch != self.epoch {
+            m.needs_spec = true;
+            return FetchVerdict::Respec;
+        }
+        if !matches!(self.parts.get(part as usize), Some(p) if p.owner == Some(worker)) {
+            return FetchVerdict::Unknown;
+        }
+        for p in self.parts.iter_mut() {
+            if p.owner == Some(worker) {
+                p.fetched = p.fetched.max(iteration);
+            }
+        }
+        let barrier_met = self
+            .parts
+            .iter()
+            .all(|p| p.fetched >= iteration || p.completed >= iteration);
+        if barrier_met {
+            FetchVerdict::Go
+        } else {
+            FetchVerdict::Hold
+        }
+    }
+
+    /// Heartbeat. Returns false for unknown members.
+    pub fn touch(&mut self, worker: u64, now_ms: u64) -> bool {
+        match self.members.get_mut(&worker) {
+            Some(m) => {
+                m.last_seen_ms = now_ms;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Worker poll: the scheduling heart. Order matters — transfers
+    /// release before the ready barrier so a drain can finish even
+    /// while an orphan blocks the barrier.
+    pub fn poll(&mut self, worker: u64, now_ms: u64) -> PollVerdict {
+        let Some(m) = self.members.get_mut(&worker) else {
+            return PollVerdict::Unknown;
+        };
+        m.last_seen_ms = now_ms;
+        if self.finished() {
+            self.release_finished(worker);
+            self.remove_member(worker);
+            return PollVerdict::Done;
+        }
+        if self.members.get(&worker).is_some_and(|m| m.needs_spec) {
+            return PollVerdict::Respec;
+        }
+        // Pending warm transfers out of this worker, at sweep
+        // boundaries only.
+        let mut released = Vec::new();
+        for (i, p) in self.parts.iter_mut().enumerate() {
+            if p.owner == Some(worker)
+                && p.target.is_some()
+                && p.target != p.owner
+                && p.warm
+                && p.issued == p.completed
+                // In snapshot mode the owner may already have pulled
+                // (and fetch-marked) the next iteration for this
+                // partition; hand it over only once that sweep lands,
+                // so the recipient's own pull stays pre-barrier clean.
+                && p.fetched == p.completed
+            {
+                let to = p.target.expect("checked is_some");
+                p.owner = Some(to);
+                p.confirmed = false;
+                p.fetched = p.completed;
+                p.last_progress_ms = now_ms;
+                released.push((i as u32, to));
+            }
+        }
+        if !released.is_empty() {
+            self.counters.moved_partitions += released.len() as u64;
+            for &(_, to) in &released {
+                if let Some(rm) = self.members.get_mut(&to) {
+                    rm.needs_spec = true;
+                }
+            }
+            return PollVerdict::Transfer(released.into_iter().map(|(p, _)| p).collect());
+        }
+        if self.members.get(&worker).is_some_and(|m| m.draining) && !self.owns_any(worker) {
+            self.remove_member(worker);
+            self.counters.drain_count += 1;
+            return PollVerdict::Drained;
+        }
+        if !self.all_ready() {
+            return PollVerdict::Wait;
+        }
+        // Pick a sweep: owned, confirmed, at a boundary, inside the
+        // staleness window; least-completed first for fairness.
+        let min_c = self.min_completed();
+        let candidate = self
+            .parts
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| {
+                p.owner == Some(worker)
+                    && p.confirmed
+                    && p.issued == p.completed
+                    && p.completed < self.cfg.iterations
+                    && p.completed <= min_c.saturating_add(self.cfg.max_staleness)
+            })
+            .min_by_key(|(i, p)| (p.completed, *i))
+            .map(|(i, _)| i);
+        match candidate {
+            Some(i) => {
+                let p = &mut self.parts[i];
+                p.issued = p.completed + 1;
+                PollVerdict::Run { part: i as u32, iteration: p.issued }
+            }
+            None => PollVerdict::Wait,
+        }
+    }
+
+    /// Planned drain request.
+    pub fn drain(&mut self, worker: u64, now_ms: u64) -> DrainVerdict {
+        if !self.members.contains_key(&worker) {
+            return DrainVerdict::Unknown;
+        }
+        if self.finished() || !self.owns_any(worker) {
+            self.release_finished(worker);
+            self.remove_member(worker);
+            self.counters.drain_count += 1;
+            return DrainVerdict::Drained;
+        }
+        if !self.cfg.checkpointing {
+            // Cold drain: no checkpoints to hand off, so the partitions
+            // restart fresh under a new epoch.
+            let token = self.members.get(&worker).map(|m| m.token);
+            for p in self.parts.iter_mut() {
+                if p.owner == Some(worker) {
+                    p.owner = None;
+                    p.target = None;
+                    p.ready = false;
+                    p.warm = false;
+                    p.confirmed = false;
+                    p.orphaned = true;
+                    p.issued = p.completed;
+                }
+            }
+            self.remove_member(worker);
+            if let Some(tok) = token {
+                self.ring.remove(tok);
+            }
+            self.roll_wanted = true;
+            self.counters.drain_count += 1;
+            self.recompute_targets(true, now_ms);
+            self.admit_parked(now_ms);
+            return DrainVerdict::Drained;
+        }
+        if self.cfg.elastic {
+            // Warm drain: leave the ring now; partitions transfer out
+            // at sweep boundaries and a later poll answers `Drained`.
+            let token = self.members.get(&worker).map(|m| m.token);
+            if let Some(m) = self.members.get_mut(&worker) {
+                m.draining = true;
+            }
+            if let Some(tok) = token {
+                self.ring.remove(tok);
+            }
+            self.recompute_targets(true, now_ms);
+            DrainVerdict::Draining
+        } else {
+            // Static warm drain: the worker is at a boundary with all
+            // partitions checkpointed; free them warm for the next
+            // registrant (or a parked standby).
+            for p in self.parts.iter_mut() {
+                if p.owner == Some(worker) {
+                    p.owner = None;
+                    p.target = None;
+                    p.confirmed = false;
+                    p.issued = p.completed;
+                }
+            }
+            self.remove_member(worker);
+            self.counters.drain_count += 1;
+            self.admit_parked(now_ms);
+            DrainVerdict::Drained
+        }
+    }
+
+    /// Clean leave. Mid-run with owned partitions this is a failure
+    /// (orphan + roll), matching the historical coordinator.
+    pub fn leave(&mut self, worker: u64, now_ms: u64) {
+        if !self.members.contains_key(&worker) {
+            return;
+        }
+        let owned = self.owns_any(worker);
+        let finished = self.finished();
+        if owned && !finished {
+            self.orphan_owned_by(worker);
+            self.remove_member(worker);
+            self.roll_wanted = true;
+            self.recompute_targets(true, now_ms);
+            self.admit_parked(now_ms);
+        } else {
+            self.release_finished(worker);
+            self.remove_member(worker);
+        }
+    }
+
+    /// Reap members silent past `timeout_ms`. Rolls the epoch only when
+    /// a reaped member actually owned partitions.
+    pub fn reap(&mut self, now_ms: u64, timeout_ms: u64) -> Vec<u64> {
+        let dead: Vec<u64> = self
+            .members
+            .iter()
+            .filter(|(_, m)| now_ms.saturating_sub(m.last_seen_ms) > timeout_ms)
+            .map(|(&w, _)| w)
+            .collect();
+        if dead.is_empty() {
+            return dead;
+        }
+        let finished = self.finished();
+        let mut any_owned = false;
+        for &w in &dead {
+            let owned = self.owns_any(w);
+            any_owned |= owned;
+            self.remove_member(w);
+            if owned {
+                self.orphan_owned_by(w);
+            }
+        }
+        if any_owned && !finished {
+            self.roll_wanted = true;
+        }
+        self.recompute_targets(true, now_ms);
+        self.admit_parked(now_ms);
+        dead
+    }
+
+    fn orphan_owned_by(&mut self, worker: u64) {
+        for p in self.parts.iter_mut() {
+            if p.owner == Some(worker) {
+                p.owner = None;
+                p.target = None;
+                p.ready = false;
+                p.warm = false;
+                p.confirmed = false;
+                p.orphaned = true;
+                p.issued = p.completed;
+            }
+        }
+    }
+
+    /// Drop ownership of a departing member's partitions without
+    /// orphaning them (run finished, or nothing left to do).
+    fn release_finished(&mut self, worker: u64) {
+        for p in self.parts.iter_mut() {
+            if p.owner == Some(worker) {
+                p.owner = None;
+                p.confirmed = false;
+            }
+        }
+    }
+
+    /// Remove a member, its token registration, and its ring entry, and
+    /// retract any pending moves toward it. Clearing the *owner* side
+    /// is the caller's business (orphan vs. finished-release).
+    fn remove_member(&mut self, worker: u64) {
+        if let Some(m) = self.members.remove(&worker) {
+            self.tokens.remove(&m.token);
+            self.ring.remove(m.token);
+        }
+        for p in self.parts.iter_mut() {
+            if p.target == Some(worker) {
+                p.target = None;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Epoch rolls.
+
+    /// The coordinator created the new epoch's matrix; reset control
+    /// state. Rolls realize pending moves for free — everyone re-pushes
+    /// checkpoint counts into the fresh table.
+    pub fn rolled(&mut self, now_ms: u64) {
+        self.epoch += 1;
+        self.roll_wanted = false;
+        for p in self.parts.iter_mut() {
+            if let (Some(o), Some(t)) = (p.owner, p.target) {
+                if o != t {
+                    p.owner = Some(t);
+                    self.counters.moved_partitions += 1;
+                }
+            }
+            if p.orphaned && p.owner.is_some() {
+                p.orphaned = false;
+                self.counters.reassignments += 1;
+            }
+            p.ready = false;
+            p.warm = false;
+            p.confirmed = false;
+            p.completed = p.checkpointed;
+            p.issued = p.completed;
+            p.fetched = p.completed;
+            p.last_progress_ms = now_ms;
+        }
+        for m in self.members.values_mut() {
+            m.needs_spec = true;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Straggler shedding.
+
+    /// Shed load from a straggler: when the least-completed partition
+    /// lags the staleness window by `shed_factor` *and* has made no
+    /// progress for `shed_stall_ms`, halve its owner's ring weight so
+    /// the rebalance narrows that worker's range instead of letting it
+    /// gate the barrier.
+    pub fn maybe_shed(&mut self, now_ms: u64) -> Option<ShedEvent> {
+        if !self.cfg.elastic
+            || !self.cfg.checkpointing
+            || self.cfg.shed_factor <= 0.0
+            || self.members.len() < 2
+            || now_ms < self.shed_cooldown_until_ms
+        {
+            return None;
+        }
+        let max_c = self.parts.iter().map(|p| p.completed).max().unwrap_or(0);
+        let (pid, p) = self
+            .parts
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.completed < self.cfg.iterations && p.owner.is_some())
+            .min_by_key(|(i, p)| (p.completed, *i))?;
+        if max_c.saturating_sub(p.completed) < self.cfg.shed_threshold() {
+            return None;
+        }
+        if now_ms.saturating_sub(p.last_progress_ms) < self.cfg.shed_stall_ms {
+            return None;
+        }
+        let worker = p.owner.expect("filtered on owner");
+        let token = self.members.get(&worker)?.token;
+        if self.ring.weight(token)? <= 1 {
+            return None;
+        }
+        let new_weight = self.ring.narrow(token)?;
+        self.shed_cooldown_until_ms = now_ms + self.cfg.shed_stall_ms;
+        self.counters.sheds += 1;
+        let part = pid as u32;
+        self.recompute_targets(true, now_ms);
+        Some(ShedEvent { worker, part, new_weight })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(elastic: bool, workers: usize, iterations: u32) -> MembershipCfg {
+        MembershipCfg {
+            elastic,
+            workers,
+            vnodes: 16,
+            iterations,
+            max_staleness: 1,
+            checkpointing: true,
+            shed_factor: 0.0,
+            shed_stall_ms: 1000,
+        }
+    }
+
+    fn ranges(n: usize) -> Vec<Range<usize>> {
+        (0..n).map(|i| i * 10..(i + 1) * 10).collect()
+    }
+
+    fn seat_worker(ms: &mut Membership, token: u64, now: u64) -> u64 {
+        match ms.register(token, now) {
+            Admission::Seated { worker } => worker,
+            other => panic!("expected seat, got {other:?}"),
+        }
+    }
+
+    /// Drive `w` through respec + ready for all its parts at their
+    /// checkpoint iterations.
+    fn bring_up(ms: &mut Membership, w: u64, now: u64) -> Vec<PartAssign> {
+        assert_eq!(ms.poll(w, now), PollVerdict::Respec);
+        let spec = ms.spec_for(w);
+        let items: Vec<(u32, u32, bool)> =
+            spec.iter().map(|a| (a.part, a.resume, a.resume > 0)).collect();
+        assert_eq!(ms.ready(w, ms.epoch(), &items, now), AckVerdict::Ok);
+        spec
+    }
+
+    #[test]
+    fn static_seats_in_index_order_and_parks_standby() {
+        let mut ms = Membership::new(cfg(false, 2, 4), ranges(2));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        let w1 = seat_worker(&mut ms, 200, 0);
+        assert_eq!(ms.owner(0), Some(w0));
+        assert_eq!(ms.owner(1), Some(w1));
+        assert_eq!(ms.register(300, 0), Admission::Parked);
+        assert_eq!(ms.parked_len(), 1);
+        // Re-register of a live token is idempotent.
+        assert_eq!(ms.register(100, 1), Admission::Existing { worker: w0 });
+    }
+
+    #[test]
+    fn static_lockstep_runs_and_finishes() {
+        let mut ms = Membership::new(cfg(false, 2, 2), ranges(2));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        let w1 = seat_worker(&mut ms, 200, 0);
+        bring_up(&mut ms, w0, 0);
+        // Barrier: w0 alone is not enough.
+        assert_eq!(ms.poll(w0, 1), PollVerdict::Wait);
+        bring_up(&mut ms, w1, 1);
+        for it in 1..=2u32 {
+            assert_eq!(ms.poll(w0, 2), PollVerdict::Run { part: 0, iteration: it });
+            assert_eq!(ms.poll(w1, 2), PollVerdict::Run { part: 1, iteration: it });
+            assert_eq!(ms.report(w0, 0, 0, it, 3), AckVerdict::Ok);
+            assert_eq!(ms.report(w1, 0, 1, it, 3), AckVerdict::Ok);
+        }
+        assert!(ms.finished());
+        assert_eq!(ms.poll(w0, 4), PollVerdict::Done);
+        assert_eq!(ms.poll(w1, 4), PollVerdict::Done);
+        assert_eq!(ms.members_len(), 0);
+    }
+
+    #[test]
+    fn elastic_join_transfers_warm_at_boundary() {
+        let mut ms = Membership::new(cfg(true, 2, 10), ranges(4));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        // Sole member owns everything.
+        bring_up(&mut ms, w0, 0);
+        assert!((0..4).all(|p| ms.owner(p) == Some(w0)));
+        // Run part 0 so it is mid-flight when the join lands.
+        let PollVerdict::Run { part: inflight, iteration } = ms.poll(w0, 1) else {
+            panic!("expected a run");
+        };
+        let w1 = seat_worker(&mut ms, 200, 2);
+        // Mid-flight partition must not move; the others may.
+        let PollVerdict::Transfer(moved) = ms.poll(w0, 3) else {
+            panic!("expected transfers after join");
+        };
+        assert!(!moved.is_empty());
+        assert!(!moved.contains(&inflight));
+        for &p in &moved {
+            assert_eq!(ms.owner(p), Some(w1));
+        }
+        // Recipient respecs warm: no re-push.
+        assert_eq!(ms.poll(w1, 4), PollVerdict::Respec);
+        let spec = ms.spec_for(w1);
+        assert!(spec.iter().all(|a| !a.push));
+        // In-flight sweep still completes under the donor.
+        assert_eq!(ms.report(w0, 0, inflight, iteration, 5), AckVerdict::Ok);
+        assert_eq!(ms.epoch(), 0, "no epoch roll on join");
+        assert!(ms.counters.moved_partitions >= moved.len() as u64);
+    }
+
+    /// Poll until a non-transfer verdict; complete any issued sweep so
+    /// every partition sits at a boundary afterwards.
+    fn settle(ms: &mut Membership, w: u64, now: u64) {
+        loop {
+            match ms.poll(w, now) {
+                PollVerdict::Transfer(_) => {}
+                PollVerdict::Run { part, iteration } => {
+                    assert_eq!(ms.report(w, ms.epoch(), part, iteration, now), AckVerdict::Ok);
+                    return;
+                }
+                _ => return,
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_drain_hands_back_and_completes() {
+        let mut ms = Membership::new(cfg(true, 2, 10), ranges(4));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        bring_up(&mut ms, w0, 0);
+        let w1 = seat_worker(&mut ms, 200, 1);
+        // Settle the join transfers (and any sweep issued meanwhile).
+        settle(&mut ms, w0, 2);
+        bring_up(&mut ms, w1, 3);
+        assert_eq!(ms.drain(w0, 4), DrainVerdict::Draining);
+        // All at boundary: everything w0 owns releases, then Drained.
+        match ms.poll(w0, 5) {
+            PollVerdict::Transfer(parts) => {
+                for p in parts {
+                    assert_eq!(ms.owner(p), Some(w1));
+                }
+            }
+            other => panic!("expected transfer, got {other:?}"),
+        }
+        assert_eq!(ms.poll(w0, 6), PollVerdict::Drained);
+        assert_eq!(ms.counters.drain_count, 1);
+        assert_eq!(ms.epoch(), 0, "planned drain must not roll the epoch");
+        assert!(!ms.roll_wanted());
+        assert!((0..4).all(|p| ms.owner(p) == Some(w1)));
+    }
+
+    #[test]
+    fn reap_rolls_only_when_partitions_owned() {
+        let mut ms = Membership::new(cfg(true, 2, 10), ranges(2));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        bring_up(&mut ms, w0, 0);
+        // A second member that never managed to take a partition (all
+        // transfers pending) dying must not roll.
+        let w1 = seat_worker(&mut ms, 200, 1);
+        assert!(!ms.owns_any(w1));
+        let dead = ms.reap(10_000, 5_000);
+        assert_eq!(dead.len(), 2); // both silent
+        assert!(ms.roll_wanted(), "w0 owned partitions");
+        ms.rolled(10_001);
+        assert_eq!(ms.epoch(), 1);
+
+        // Now: a member with no partitions reaped alone → no roll.
+        let mut ms = Membership::new(cfg(true, 2, 10), ranges(2));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        bring_up(&mut ms, w0, 0);
+        let _w1 = seat_worker(&mut ms, 200, 9_000);
+        // w1 owns nothing (transfers pending, none released yet).
+        let dead = ms.reap(10_000, 5_000);
+        assert_eq!(dead, vec![w0]);
+        assert!(ms.roll_wanted());
+        ms.rolled(10_001);
+        // Orphans were re-seated on the surviving member.
+        assert!((0..2).all(|p| ms.owner(p).is_some()));
+        assert!(ms.counters.reassignments >= 2);
+    }
+
+    #[test]
+    fn zombie_rejoins_with_old_token_after_reap() {
+        let mut ms = Membership::new(cfg(true, 1, 10), ranges(2));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        bring_up(&mut ms, w0, 0);
+        let dead = ms.reap(10_000, 5_000);
+        assert_eq!(dead, vec![w0]);
+        ms.rolled(10_001);
+        // Same token re-registers: fresh member id, same ring position,
+        // so it deterministically reclaims its old partitions.
+        let w0b = seat_worker(&mut ms, 100, 10_002);
+        assert_ne!(w0, w0b);
+        assert!((0..2).all(|p| ms.owner(p) == Some(w0b)));
+    }
+
+    #[test]
+    fn shed_narrows_straggler_weight() {
+        let mut c = cfg(true, 2, 100);
+        c.shed_factor = 1.0;
+        c.shed_stall_ms = 100;
+        let mut ms = Membership::new(c, ranges(8));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        bring_up(&mut ms, w0, 0);
+        let w1 = seat_worker(&mut ms, 200, 1);
+        settle(&mut ms, w0, 2);
+        bring_up(&mut ms, w1, 3);
+        // Advance every partition except w0's first to iteration 2.
+        let lagging = (0..8).find(|&p| ms.owner(p) == Some(w0)).unwrap();
+        for it in 1..=2u32 {
+            for p in 0..8u32 {
+                if p == lagging {
+                    continue;
+                }
+                let w = ms.owner(p).unwrap();
+                assert_eq!(ms.report(w, 0, p, it, 10), AckVerdict::Ok);
+            }
+        }
+        // Lag 2 > staleness window 1 and stalled past shed_stall_ms.
+        let ev = ms.maybe_shed(10_000).expect("shed triggers");
+        assert_eq!(ev.worker, w0);
+        assert_eq!(ev.part, lagging);
+        assert!(ev.new_weight < 16);
+        assert_eq!(ms.counters.sheds, 1);
+        // Cool-down: no immediate second shed.
+        assert!(ms.maybe_shed(10_001).is_none());
+    }
+
+    #[test]
+    fn static_warm_drain_frees_partitions_for_parked_standby() {
+        let mut ms = Membership::new(cfg(false, 2, 10), ranges(2));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        let w1 = seat_worker(&mut ms, 200, 0);
+        bring_up(&mut ms, w0, 0);
+        bring_up(&mut ms, w1, 0);
+        assert_eq!(ms.register(300, 1), Admission::Parked);
+        assert_eq!(ms.report(w0, 0, 0, 3, 2), AckVerdict::Ok);
+        assert_eq!(ms.drain(w0, 3), DrainVerdict::Drained);
+        // The parked standby was admitted to the freed partition, warm.
+        let admitted = ms.take_admitted();
+        assert_eq!(admitted.len(), 1);
+        let (token, w2) = admitted[0];
+        assert_eq!(token, 300);
+        assert_eq!(ms.owner(0), Some(w2));
+        let spec = ms.spec_for(w2);
+        assert_eq!(spec.len(), 1);
+        assert!(!spec[0].push, "warm pickup must not re-push");
+        assert_eq!(spec[0].resume, 3);
+        assert_eq!(ms.epoch(), 0);
+        assert_eq!(ms.counters.drain_count, 1);
+    }
+
+    #[test]
+    fn fetch_barrier_holds_until_all_participants_fetch() {
+        let mut ms = Membership::new(cfg(false, 2, 10), ranges(2));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        let w1 = seat_worker(&mut ms, 200, 0);
+        bring_up(&mut ms, w0, 0);
+        bring_up(&mut ms, w1, 0);
+        assert_eq!(ms.fetched(w0, 0, 0, 1, 1), FetchVerdict::Hold);
+        assert_eq!(ms.fetched(w1, 0, 1, 1, 1), FetchVerdict::Go);
+        // Re-asking after the barrier passed still says Go.
+        assert_eq!(ms.fetched(w0, 0, 0, 1, 2), FetchVerdict::Go);
+        // A stale-epoch fetch cannot poison the barrier: it respecs.
+        assert_eq!(ms.fetched(w0, 9, 0, 2, 3), FetchVerdict::Respec);
+    }
+
+    #[test]
+    fn invariants_hold_through_a_churny_run() {
+        let mut ms = Membership::new(cfg(true, 2, 6), ranges(4));
+        let w0 = seat_worker(&mut ms, 100, 0);
+        ms.check_invariants();
+        bring_up(&mut ms, w0, 0);
+        let w1 = seat_worker(&mut ms, 200, 1);
+        ms.check_invariants();
+        while let PollVerdict::Transfer(_) = ms.poll(w0, 2) {
+            ms.check_invariants();
+        }
+        bring_up(&mut ms, w1, 3);
+        ms.drain(w1, 4);
+        ms.check_invariants();
+        while let PollVerdict::Transfer(_) = ms.poll(w1, 5) {
+            ms.check_invariants();
+        }
+        assert_eq!(ms.poll(w1, 6), PollVerdict::Drained);
+        ms.check_invariants();
+        assert!((0..4).all(|p| ms.owner(p) == Some(w0)));
+    }
+}

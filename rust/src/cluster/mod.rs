@@ -26,15 +26,25 @@
 //! ```
 //!
 //! - [`protocol`] — the control-plane messages (register / assign /
-//!   run / report / heartbeat), codec-serialized like the data plane.
-//! - [`coordinator`] — partition assignment, the `Ready` barrier, the
-//!   bounded-staleness iteration gate, heartbeat liveness, and
-//!   epoch-rolling failure recovery over per-partition checkpoints.
+//!   run / report / heartbeat / drain / transfer), codec-serialized
+//!   like the data plane.
+//! - [`ring`] — the murmur3 consistent-hash partition ring with
+//!   weighted virtual nodes (who *should* own which partition).
+//! - [`membership`] — the elastic membership manager: admission,
+//!   parked standbys, warm partition transfers, planned drain,
+//!   zombie rejoin, straggler shedding (pure state machine, no I/O).
+//! - [`coordinator`] — the network shell around [`membership`]: the
+//!   `Ready` barrier, the bounded-staleness iteration gate, heartbeat
+//!   liveness, and epoch-rolling failure recovery over per-partition
+//!   checkpoints.
 //! - [`worker`] — the remote executor driving the shared
-//!   [`crate::lda::sweep::SweepRunner`] kernel.
+//!   [`crate::lda::sweep::SweepRunner`] kernel over its set of owned
+//!   partitions.
 
 pub mod coordinator;
+pub mod membership;
 pub mod protocol;
+pub mod ring;
 pub mod worker;
 
 pub use coordinator::{ClusterOutcome, Coordinator};

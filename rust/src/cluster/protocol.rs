@@ -73,6 +73,11 @@ pub struct SweepKnobs {
     pub keep_checkpoints: u32,
     /// Worker heartbeat period, milliseconds.
     pub heartbeat_ms: u64,
+    /// Snapshot (BSP) mode: each sweep samples against a per-iteration
+    /// model snapshot behind the coordinator's fetch barrier, making
+    /// the final count table bit-identical for any membership history
+    /// (see `README` "Elastic membership").
+    pub snapshot: bool,
 }
 
 impl From<&TrainConfig> for SweepKnobs {
@@ -98,25 +103,42 @@ impl From<&TrainConfig> for SweepKnobs {
                 .unwrap_or_default(),
             keep_checkpoints: cfg.keep_checkpoints as u32,
             heartbeat_ms: cfg.heartbeat_ms,
+            snapshot: cfg.snapshot,
         }
     }
 }
 
-/// A worker's marching orders: which partition of which corpus to
-/// sample, against which shards, into which count table. Reissued in
-/// full whenever the assignment changes (a new epoch after a failure, or
-/// a partition handed to a replacement worker).
-#[derive(Debug, Clone, PartialEq)]
-pub struct JobSpec {
-    /// The coordinator-assigned worker id (echoed in every subsequent
-    /// request).
-    pub worker: u64,
-    /// Partition index within the run.
+/// One partition's slice of a [`JobSpec`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionAssignment {
+    /// Partition index within the run (stable for the whole run: it
+    /// keys the RNG stream and the checkpoint file prefix).
     pub partition: u32,
     /// First document (absolute corpus index) of the partition.
     pub doc_start: u64,
     /// One past the last document of the partition.
     pub doc_end: u64,
+    /// Checkpoint iteration to resume from (0 = none; build fresh).
+    pub resume: u32,
+    /// Whether to push the rebuilt counts into the epoch's table.
+    /// `false` on warm handoffs: the donor's counts are already there.
+    pub push: bool,
+}
+
+/// A worker's marching orders: which partitions of which corpus to
+/// sample, against which shards, into which count table. Reissued in
+/// full whenever the assignment changes (a new epoch after a failure, a
+/// ring rebalance granting a partition, or a partition handed to a
+/// replacement worker); a worker diffs successive specs and keeps the
+/// runners it already has.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// The coordinator-assigned worker id (echoed in every subsequent
+    /// request).
+    pub worker: u64,
+    /// The partitions this worker currently owns (may be empty for a
+    /// freshly joined member whose transfers are still pending).
+    pub parts: Vec<PartitionAssignment>,
     /// Recovery epoch: bumped on every failure rollback. Each epoch has
     /// its own count table on the parameter servers.
     pub epoch: u32,
@@ -176,16 +198,17 @@ pub enum CtrlRequest {
         /// instead of being seated as a second (ghost) worker.
         token: u64,
     },
-    /// The worker rebuilt its partition state for `epoch` (pushed its
-    /// counts into the epoch's table) and is resuming *after* completed
-    /// iteration `iteration` (0 = fresh start).
+    /// The worker rebuilt runner state for its spec'd partitions under
+    /// `epoch` (pushing counts where the spec said to).
     Ready {
         /// Worker id from the [`JobSpec`].
         worker: u64,
         /// Epoch the worker rebuilt for.
         epoch: u32,
-        /// Iteration its restored state corresponds to.
-        iteration: u32,
+        /// Per partition: `(partition, iteration, loaded)` — the
+        /// iteration its restored state corresponds to (0 = fresh) and
+        /// whether a checkpoint file actually loaded.
+        parts: Vec<(u32, u32, bool)>,
     },
     /// Ask for the next instruction.
     Poll {
@@ -198,13 +221,39 @@ pub enum CtrlRequest {
         worker: u64,
         /// Epoch the sweep ran under.
         epoch: u32,
+        /// Partition swept.
+        partition: u32,
         /// Iteration completed.
         iteration: u32,
         /// Sweep counters (and evaluation, when scheduled).
         stats: SweepReport,
     },
+    /// Snapshot mode: the worker pulled the model snapshot for
+    /// `iteration` of `partition` and waits at the fetch barrier. The
+    /// reply is [`CtrlResponse::Ack`] (go sweep) or
+    /// [`CtrlResponse::Wait`] (someone hasn't fetched yet).
+    Fetched {
+        /// Worker id.
+        worker: u64,
+        /// Epoch the fetch belongs to.
+        epoch: u32,
+        /// Partition about to sweep.
+        partition: u32,
+        /// Iteration whose snapshot was pulled.
+        iteration: u32,
+    },
     /// Liveness signal, sent on a side thread during long sweeps.
     Heartbeat {
+        /// Worker id.
+        worker: u64,
+    },
+    /// Planned drain: finish in-flight work, hand partitions back warm,
+    /// and leave without an epoch roll. The reply is
+    /// [`CtrlResponse::Ack`] (keep polling; partitions transfer out at
+    /// sweep boundaries and a later poll answers
+    /// [`CtrlResponse::Drained`]) or [`CtrlResponse::Drained`]
+    /// immediately when there is nothing to hand off.
+    Drain {
         /// Worker id.
         worker: u64,
     },
@@ -221,12 +270,21 @@ pub enum CtrlResponse {
     /// A (re)assignment: rebuild partition state per this spec, then
     /// send [`CtrlRequest::Ready`].
     Job(Box<JobSpec>),
-    /// Run one sweep.
+    /// Run one sweep of one owned partition.
     Run {
+        /// Partition to sweep.
+        partition: u32,
         /// Iteration to run (1-based).
         iteration: u32,
         /// Whether to also evaluate the partition log-likelihood.
         evaluate: bool,
+    },
+    /// Release these partitions (warm transfer out): drop their runners
+    /// after the already-written checkpoints; the recipient resumes
+    /// from disk. Keep polling.
+    Transfer {
+        /// Partitions to drop.
+        parts: Vec<u32>,
     },
     /// Nothing to do yet (barrier, staleness bound, or full cluster);
     /// poll again after roughly this long.
@@ -234,9 +292,12 @@ pub enum CtrlResponse {
         /// Suggested back-off, milliseconds.
         millis: u64,
     },
+    /// Planned drain complete: everything handed off, leave now.
+    Drained,
     /// Training is complete; send [`CtrlRequest::Leave`] and exit.
     Done,
-    /// Acknowledged (reports, heartbeats, ready, leave).
+    /// Acknowledged (reports, heartbeats, ready, drain, leave, fetch
+    /// barrier passed).
     Ack,
     /// The coordinator rejected the request (e.g. an unknown worker id
     /// after the worker was presumed dead — re-register to rejoin).
@@ -251,6 +312,8 @@ const C_POLL: u8 = 3;
 const C_REPORT: u8 = 4;
 const C_HEARTBEAT: u8 = 5;
 const C_LEAVE: u8 = 6;
+const C_DRAIN: u8 = 7;
+const C_FETCHED: u8 = 8;
 
 const R_JOB: u8 = 1;
 const R_RUN: u8 = 2;
@@ -258,6 +321,8 @@ const R_WAIT: u8 = 3;
 const R_DONE: u8 = 4;
 const R_ACK: u8 = 5;
 const R_ERROR: u8 = 6;
+const R_TRANSFER: u8 = 7;
+const R_DRAINED: u8 = 8;
 
 const CORPUS_FILE: u8 = 1;
 const CORPUS_SYNTH: u8 = 2;
@@ -325,6 +390,7 @@ impl SweepKnobs {
         w.str(&self.checkpoint_dir);
         w.u32(self.keep_checkpoints);
         w.u64(self.heartbeat_ms);
+        w.u8(u8::from(self.snapshot));
     }
 
     fn decode(r: &mut Reader) -> Result<SweepKnobs> {
@@ -351,6 +417,27 @@ impl SweepKnobs {
             checkpoint_dir: r.str()?,
             keep_checkpoints: r.u32()?,
             heartbeat_ms: r.u64()?,
+            snapshot: r.u8()? != 0,
+        })
+    }
+}
+
+impl PartitionAssignment {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.partition);
+        w.u64(self.doc_start);
+        w.u64(self.doc_end);
+        w.u32(self.resume);
+        w.u8(u8::from(self.push));
+    }
+
+    fn decode(r: &mut Reader) -> Result<PartitionAssignment> {
+        Ok(PartitionAssignment {
+            partition: r.u32()?,
+            doc_start: r.u64()?,
+            doc_end: r.u64()?,
+            resume: r.u32()?,
+            push: r.u8()? != 0,
         })
     }
 }
@@ -358,9 +445,10 @@ impl SweepKnobs {
 impl JobSpec {
     fn encode(&self, w: &mut Writer) {
         w.u64(self.worker);
-        w.u32(self.partition);
-        w.u64(self.doc_start);
-        w.u64(self.doc_end);
+        w.usize(self.parts.len());
+        for part in &self.parts {
+            part.encode(w);
+        }
         w.u32(self.epoch);
         w.u32(self.matrix_id);
         w.u32(self.iterations);
@@ -378,9 +466,11 @@ impl JobSpec {
 
     fn decode(r: &mut Reader) -> Result<JobSpec> {
         let worker = r.u64()?;
-        let partition = r.u32()?;
-        let doc_start = r.u64()?;
-        let doc_end = r.u64()?;
+        let n = r.usize()?;
+        let mut parts = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            parts.push(PartitionAssignment::decode(r)?);
+        }
         let epoch = r.u32()?;
         let matrix_id = r.u32()?;
         let iterations = r.u32()?;
@@ -396,9 +486,7 @@ impl JobSpec {
         }
         Ok(JobSpec {
             worker,
-            partition,
-            doc_start,
-            doc_end,
+            parts,
             epoch,
             matrix_id,
             iterations,
@@ -447,25 +535,42 @@ impl CtrlRequest {
                 w.u8(C_REGISTER);
                 w.u64(*token);
             }
-            CtrlRequest::Ready { worker, epoch, iteration } => {
+            CtrlRequest::Ready { worker, epoch, parts } => {
                 w.u8(C_READY);
                 w.u64(*worker);
                 w.u32(*epoch);
-                w.u32(*iteration);
+                w.usize(parts.len());
+                for &(part, iteration, loaded) in parts {
+                    w.u32(part);
+                    w.u32(iteration);
+                    w.u8(u8::from(loaded));
+                }
             }
             CtrlRequest::Poll { worker } => {
                 w.u8(C_POLL);
                 w.u64(*worker);
             }
-            CtrlRequest::Report { worker, epoch, iteration, stats } => {
+            CtrlRequest::Report { worker, epoch, partition, iteration, stats } => {
                 w.u8(C_REPORT);
                 w.u64(*worker);
                 w.u32(*epoch);
+                w.u32(*partition);
                 w.u32(*iteration);
                 stats.encode(&mut w);
             }
+            CtrlRequest::Fetched { worker, epoch, partition, iteration } => {
+                w.u8(C_FETCHED);
+                w.u64(*worker);
+                w.u32(*epoch);
+                w.u32(*partition);
+                w.u32(*iteration);
+            }
             CtrlRequest::Heartbeat { worker } => {
                 w.u8(C_HEARTBEAT);
+                w.u64(*worker);
+            }
+            CtrlRequest::Drain { worker } => {
+                w.u8(C_DRAIN);
                 w.u64(*worker);
             }
             CtrlRequest::Leave { worker } => {
@@ -481,19 +586,32 @@ impl CtrlRequest {
         let mut r = Reader::new(bytes);
         let req = match r.u8()? {
             C_REGISTER => CtrlRequest::Register { token: r.u64()? },
-            C_READY => CtrlRequest::Ready {
-                worker: r.u64()?,
-                epoch: r.u32()?,
-                iteration: r.u32()?,
-            },
+            C_READY => {
+                let worker = r.u64()?;
+                let epoch = r.u32()?;
+                let n = r.usize()?;
+                let mut parts = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    parts.push((r.u32()?, r.u32()?, r.u8()? != 0));
+                }
+                CtrlRequest::Ready { worker, epoch, parts }
+            }
             C_POLL => CtrlRequest::Poll { worker: r.u64()? },
             C_REPORT => CtrlRequest::Report {
                 worker: r.u64()?,
                 epoch: r.u32()?,
+                partition: r.u32()?,
                 iteration: r.u32()?,
                 stats: SweepReport::decode(&mut r)?,
             },
+            C_FETCHED => CtrlRequest::Fetched {
+                worker: r.u64()?,
+                epoch: r.u32()?,
+                partition: r.u32()?,
+                iteration: r.u32()?,
+            },
             C_HEARTBEAT => CtrlRequest::Heartbeat { worker: r.u64()? },
+            C_DRAIN => CtrlRequest::Drain { worker: r.u64()? },
             C_LEAVE => CtrlRequest::Leave { worker: r.u64()? },
             t => return Err(Error::Decode(format!("bad control request tag {t}"))),
         };
@@ -510,15 +628,24 @@ impl CtrlResponse {
                 w.u8(R_JOB);
                 spec.encode(&mut w);
             }
-            CtrlResponse::Run { iteration, evaluate } => {
+            CtrlResponse::Run { partition, iteration, evaluate } => {
                 w.u8(R_RUN);
+                w.u32(*partition);
                 w.u32(*iteration);
                 w.u8(u8::from(*evaluate));
+            }
+            CtrlResponse::Transfer { parts } => {
+                w.u8(R_TRANSFER);
+                w.usize(parts.len());
+                for &p in parts {
+                    w.u32(p);
+                }
             }
             CtrlResponse::Wait { millis } => {
                 w.u8(R_WAIT);
                 w.u64(*millis);
             }
+            CtrlResponse::Drained => w.u8(R_DRAINED),
             CtrlResponse::Done => w.u8(R_DONE),
             CtrlResponse::Ack => w.u8(R_ACK),
             CtrlResponse::Error(msg) => {
@@ -534,8 +661,21 @@ impl CtrlResponse {
         let mut r = Reader::new(bytes);
         let resp = match r.u8()? {
             R_JOB => CtrlResponse::Job(Box::new(JobSpec::decode(&mut r)?)),
-            R_RUN => CtrlResponse::Run { iteration: r.u32()?, evaluate: r.u8()? != 0 },
+            R_RUN => CtrlResponse::Run {
+                partition: r.u32()?,
+                iteration: r.u32()?,
+                evaluate: r.u8()? != 0,
+            },
+            R_TRANSFER => {
+                let n = r.usize()?;
+                let mut parts = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    parts.push(r.u32()?);
+                }
+                CtrlResponse::Transfer { parts }
+            }
             R_WAIT => CtrlResponse::Wait { millis: r.u64()? },
+            R_DRAINED => CtrlResponse::Drained,
             R_DONE => CtrlResponse::Done,
             R_ACK => CtrlResponse::Ack,
             R_ERROR => CtrlResponse::Error(r.str()?),
@@ -562,15 +702,29 @@ mod tests {
             checkpoint_dir: "/tmp/ckpt".into(),
             keep_checkpoints: 3,
             heartbeat_ms: 500,
+            snapshot: true,
         }
     }
 
     fn job() -> JobSpec {
         JobSpec {
             worker: 7,
-            partition: 1,
-            doc_start: 1000,
-            doc_end: 2000,
+            parts: vec![
+                PartitionAssignment {
+                    partition: 1,
+                    doc_start: 1000,
+                    doc_end: 2000,
+                    resume: 4,
+                    push: true,
+                },
+                PartitionAssignment {
+                    partition: 5,
+                    doc_start: 5000,
+                    doc_end: 6000,
+                    resume: 0,
+                    push: false,
+                },
+            ],
             epoch: 2,
             matrix_id: 0xdead,
             iterations: 50,
@@ -592,11 +746,17 @@ mod tests {
     #[test]
     fn roundtrip_all_request_variants() {
         roundtrip_req(CtrlRequest::Register { token: 0xfeed_beef });
-        roundtrip_req(CtrlRequest::Ready { worker: 3, epoch: 1, iteration: 12 });
+        roundtrip_req(CtrlRequest::Ready {
+            worker: 3,
+            epoch: 1,
+            parts: vec![(0, 12, true), (3, 0, false)],
+        });
+        roundtrip_req(CtrlRequest::Ready { worker: 4, epoch: 0, parts: vec![] });
         roundtrip_req(CtrlRequest::Poll { worker: u64::MAX });
         roundtrip_req(CtrlRequest::Report {
             worker: 3,
             epoch: 0,
+            partition: 6,
             iteration: 9,
             stats: SweepReport {
                 tokens: 120_000,
@@ -610,19 +770,31 @@ mod tests {
                 ll_tokens: 120_000,
             },
         });
+        roundtrip_req(CtrlRequest::Fetched { worker: 3, epoch: 2, partition: 1, iteration: 8 });
         roundtrip_req(CtrlRequest::Heartbeat { worker: 0 });
+        roundtrip_req(CtrlRequest::Drain { worker: 5 });
         roundtrip_req(CtrlRequest::Leave { worker: 9 });
     }
 
     #[test]
     fn roundtrip_all_response_variants() {
         roundtrip_resp(CtrlResponse::Job(Box::new(job())));
-        roundtrip_resp(CtrlResponse::Run { iteration: 17, evaluate: false });
-        roundtrip_resp(CtrlResponse::Run { iteration: 20, evaluate: true });
+        roundtrip_resp(CtrlResponse::Run { partition: 2, iteration: 17, evaluate: false });
+        roundtrip_resp(CtrlResponse::Run { partition: 0, iteration: 20, evaluate: true });
+        roundtrip_resp(CtrlResponse::Transfer { parts: vec![1, 4, 9] });
+        roundtrip_resp(CtrlResponse::Transfer { parts: vec![] });
         roundtrip_resp(CtrlResponse::Wait { millis: 250 });
+        roundtrip_resp(CtrlResponse::Drained);
         roundtrip_resp(CtrlResponse::Done);
         roundtrip_resp(CtrlResponse::Ack);
         roundtrip_resp(CtrlResponse::Error("no such worker".into()));
+    }
+
+    #[test]
+    fn empty_parts_job_roundtrips() {
+        let mut spec = job();
+        spec.parts.clear();
+        roundtrip_resp(CtrlResponse::Job(Box::new(spec)));
     }
 
     #[test]

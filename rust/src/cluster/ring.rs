@@ -1,0 +1,430 @@
+//! The consistent-hash partition ring: who owns which corpus partition.
+//!
+//! Corpus partitions live on a murmur3 ring with *weighted virtual
+//! nodes* (the `OtherShard` ring idiom: hash every member name, sort by
+//! hash, walk clockwise). Each member contributes `weight` virtual
+//! points; a partition's key hashes to a position and is owned by the
+//! first member point at or after it. Two refinements on the textbook
+//! ring:
+//!
+//! - **Bounded load.** A raw ring with few partitions is badly
+//!   unbalanced (with 2 members and 2 partitions, one member owns both
+//!   about half the time). Assignment therefore walks the ring with a
+//!   per-member capacity of `ceil(P / members)` live partitions: a
+//!   member at capacity is skipped and the partition falls to the next
+//!   point clockwise (Mirrokni's consistent hashing with bounded
+//!   loads). Balance is guaranteed within one partition of even, while
+//!   ownership stays a pure function of the member set — and *minimal
+//!   movement* still holds: members untouched by a join/leave keep the
+//!   partitions they had, except where the capacity bound itself
+//!   shifts.
+//!
+//! - **Weights.** Straggler shedding narrows a member's ring range by
+//!   lowering its weight: fewer virtual points *and* a proportionally
+//!   lower capacity, so the remainder of its range reassigns to the
+//!   neighbors without disturbing unrelated members.
+//!
+//! The ring is pure data — no clocks, no I/O — so the membership model
+//! checker ([`crate::util::sync_shim`]) can drive it through arbitrary
+//! schedules.
+
+/// One member's virtual point on the ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct VNode {
+    hash: u32,
+    member: u64,
+}
+
+/// Weighted ring member.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Member {
+    /// Stable member identity (the worker's registration token, so a
+    /// zombie that re-registers lands back on its old ranges).
+    pub id: u64,
+    /// Virtual-node count; halved by straggler shedding (never below 1).
+    pub weight: u32,
+}
+
+/// murmur3 32-bit (x86 variant), implemented in-repo: the crate is
+/// pure-std by policy, so the `murmur3` crate the `OtherShard` idiom
+/// uses is hand-rolled here. Standard reference constants; verified
+/// against the published test vectors in the unit tests below.
+pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
+    const C1: u32 = 0xcc9e_2d51;
+    const C2: u32 = 0x1b87_3593;
+    let mut h = seed;
+    let mut chunks = data.chunks_exact(4);
+    for chunk in &mut chunks {
+        let mut k = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        k = k.wrapping_mul(C1).rotate_left(15).wrapping_mul(C2);
+        h = (h ^ k).rotate_left(13).wrapping_mul(5).wrapping_add(0xe654_6b64);
+    }
+    let tail = chunks.remainder();
+    if !tail.is_empty() {
+        let mut k = 0u32;
+        for (i, &b) in tail.iter().enumerate() {
+            k |= (b as u32) << (8 * i);
+        }
+        k = k.wrapping_mul(C1).rotate_left(15).wrapping_mul(C2);
+        h ^= k;
+    }
+    h ^= data.len() as u32;
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85eb_ca6b);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xc2b2_ae35);
+    h ^= h >> 16;
+    h
+}
+
+/// Ring position of member `id`'s `i`-th virtual node.
+fn vnode_hash(id: u64, i: u32) -> u32 {
+    let mut key = [0u8; 12];
+    key[..8].copy_from_slice(&id.to_le_bytes());
+    key[8..].copy_from_slice(&i.to_le_bytes());
+    murmur3_32(&key, 0x9e37)
+}
+
+/// Ring position of partition `p`'s key (`part-{p}`, the same
+/// name-hashing shape as the `OtherShard` ring).
+pub fn partition_point(p: u32) -> u32 {
+    murmur3_32(format!("part-{p}").as_bytes(), 0)
+}
+
+/// The consistent-hash ring: weighted members, deterministic
+/// partition→member assignment.
+#[derive(Debug, Clone, Default)]
+pub struct Ring {
+    members: Vec<Member>,
+}
+
+impl Ring {
+    /// Empty ring.
+    pub fn new() -> Ring {
+        Ring::default()
+    }
+
+    /// Current members (insertion order; assignment does not depend on
+    /// this order).
+    pub fn members(&self) -> &[Member] {
+        &self.members
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True when no members are present.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// True when `id` is a member.
+    pub fn contains(&self, id: u64) -> bool {
+        self.members.iter().any(|m| m.id == id)
+    }
+
+    /// Add a member with `weight` virtual nodes. No-op if present.
+    pub fn insert(&mut self, id: u64, weight: u32) {
+        if !self.contains(id) {
+            self.members.push(Member { id, weight: weight.max(1) });
+        }
+    }
+
+    /// Remove a member. No-op if absent.
+    pub fn remove(&mut self, id: u64) {
+        self.members.retain(|m| m.id != id);
+    }
+
+    /// Member `id`'s current weight, if present.
+    pub fn weight(&self, id: u64) -> Option<u32> {
+        self.members.iter().find(|m| m.id == id).map(|m| m.weight)
+    }
+
+    /// Halve a member's weight (straggler shedding), never below 1.
+    /// Returns the new weight, or `None` for an unknown member.
+    pub fn narrow(&mut self, id: u64) -> Option<u32> {
+        let m = self.members.iter_mut().find(|m| m.id == id)?;
+        m.weight = (m.weight / 2).max(1);
+        Some(m.weight)
+    }
+
+    /// All virtual points, sorted by ring position (ties broken by
+    /// member id so assignment is deterministic even under hash
+    /// collisions).
+    fn points(&self) -> Vec<VNode> {
+        let mut points = Vec::new();
+        for m in &self.members {
+            for i in 0..m.weight {
+                points.push(VNode { hash: vnode_hash(m.id, i), member: m.id });
+            }
+        }
+        points.sort_by_key(|v| (v.hash, v.member));
+        points
+    }
+
+    /// Assign `partitions` partitions to members: partition `p` goes to
+    /// the owner of the first virtual point clockwise from
+    /// [`partition_point`]`(p)` that still has capacity. Capacity is
+    /// `ceil(P * w_m / W_total)` (so shedding weight sheds load), with
+    /// a floor of 1. Returns `owner[p]`; empty ring returns an empty
+    /// vector.
+    ///
+    /// Deterministic in the member *set* (ids + weights), balanced
+    /// within the capacity bound, and minimal-movement: a partition
+    /// only moves when its clockwise walk changes — i.e. when a member
+    /// joined/left/re-weighted in the arc it lands on, or the capacity
+    /// bound shifted.
+    pub fn assign(&self, partitions: u32) -> Vec<u64> {
+        if self.members.is_empty() || partitions == 0 {
+            return Vec::new();
+        }
+        let points = self.points();
+        let total_w: u64 = self.members.iter().map(|m| m.weight as u64).sum();
+        let cap_of = |w: u32| -> u32 {
+            let c = (partitions as u64 * w as u64).div_ceil(total_w);
+            (c as u32).max(1)
+        };
+        let mut load: std::collections::HashMap<u64, u32> =
+            self.members.iter().map(|m| (m.id, 0)).collect();
+        let mut owner = vec![0u64; partitions as usize];
+        // Partitions are placed in ascending ring position of their
+        // keys, so the clockwise walk is well-defined and order-free:
+        // the same member set always fills the same way.
+        let mut order: Vec<u32> = (0..partitions).collect();
+        order.sort_by_key(|&p| (partition_point(p), p));
+        for &p in &order {
+            let key = partition_point(p);
+            // First point at/after the key, wrapping.
+            let start = points.partition_point(|v| v.hash < key) % points.len();
+            let mut placed = false;
+            for off in 0..points.len() {
+                let v = &points[(start + off) % points.len()];
+                let w = self.weight(v.member).unwrap_or(1);
+                let l = load.get_mut(&v.member).expect("member in load map");
+                if *l < cap_of(w) {
+                    *l += 1;
+                    owner[p as usize] = v.member;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                // All members at capacity (can only happen when the
+                // floor-of-1 caps sum below P with extreme weights);
+                // fall back to the least-loaded member.
+                let m = *load.iter().min_by_key(|&(id, l)| (*l, *id)).expect("nonempty").0;
+                *load.get_mut(&m).expect("member") += 1;
+                owner[p as usize] = m;
+            }
+        }
+        owner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use std::collections::{HashMap, HashSet};
+
+    #[test]
+    fn murmur3_reference_vectors() {
+        // Published x86_32 test vectors.
+        assert_eq!(murmur3_32(b"", 0), 0);
+        assert_eq!(murmur3_32(b"", 1), 0x514e_28b7);
+        assert_eq!(murmur3_32(b"test", 0), 0xba6b_d213);
+        assert_eq!(murmur3_32(b"Hello, world!", 0), 0xc037_2da5);
+        assert_eq!(murmur3_32(b"The quick brown fox jumps over the lazy dog", 0), 0x2e4f_f723);
+    }
+
+    fn counts(owner: &[u64]) -> HashMap<u64, u32> {
+        let mut c = HashMap::new();
+        for &m in owner {
+            *c.entry(m).or_insert(0) += 1;
+        }
+        c
+    }
+
+    /// Property: load balanced within the capacity bound at various
+    /// vnode counts and member counts.
+    #[test]
+    fn balance_within_bound_across_vnode_counts() {
+        for vnodes in [1u32, 4, 16, 64, 128] {
+            for members in [1usize, 2, 3, 5, 8, 13] {
+                for partitions in [1u32, 2, 8, 16, 64] {
+                    let mut ring = Ring::new();
+                    for m in 0..members {
+                        ring.insert(0x1000 + m as u64 * 7919, vnodes);
+                    }
+                    let owner = ring.assign(partitions);
+                    assert_eq!(owner.len(), partitions as usize);
+                    let cap = (partitions as usize).div_ceil(members) as u32;
+                    for (&m, &load) in counts(&owner).iter() {
+                        assert!(
+                            load <= cap,
+                            "member {m:#x} holds {load} > cap {cap} \
+                             (v={vnodes}, m={members}, p={partitions})"
+                        );
+                    }
+                    // Every member gets work when P >= members.
+                    if partitions as usize >= members {
+                        assert_eq!(
+                            counts(&owner).len(),
+                            members,
+                            "some member idle (v={vnodes}, m={members}, p={partitions})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Property: ownership is a pure function of the member set —
+    /// insertion order and repeated evaluation don't matter.
+    #[test]
+    fn deterministic_ownership_given_same_member_set() {
+        let ids = [11u64, 22, 33, 44, 55];
+        let mut fwd = Ring::new();
+        for &id in &ids {
+            fwd.insert(id, 32);
+        }
+        let mut rev = Ring::new();
+        for &id in ids.iter().rev() {
+            rev.insert(id, 32);
+        }
+        for p in [3u32, 16, 40] {
+            assert_eq!(fwd.assign(p), rev.assign(p), "insertion order changed ownership");
+            assert_eq!(fwd.assign(p), fwd.assign(p), "re-evaluation changed ownership");
+        }
+    }
+
+    /// Property: joins and leaves move few partitions — only those whose
+    /// clockwise walk the change intersects. The textbook bound is
+    /// ~P/members expected moves per membership change; with the
+    /// capacity bound a change can also shift the boundary, so assert a
+    /// generous but meaningful cap (< half of all partitions move, and
+    /// on leave every move originates at the removed member or a
+    /// capacity shift).
+    #[test]
+    fn minimal_movement_on_join_and_leave() {
+        let partitions = 64u32;
+        let mut rng = Pcg64::new(0xA11CE);
+        for trial in 0..20u64 {
+            let members = 3 + (trial % 5) as usize;
+            let mut ring = Ring::new();
+            for m in 0..members {
+                ring.insert(rng.next_u64() | 1, 64);
+            }
+            let before = ring.assign(partitions);
+
+            // Join: only partitions that end up on the joiner may move.
+            let joiner = rng.next_u64() | 1;
+            let mut joined = ring.clone();
+            joined.insert(joiner, 64);
+            let after_join = joined.assign(partitions);
+            let mut moved_elsewhere = 0;
+            for p in 0..partitions as usize {
+                if after_join[p] != before[p] && after_join[p] != joiner {
+                    moved_elsewhere += 1;
+                }
+            }
+            let moved: usize =
+                (0..partitions as usize).filter(|&p| after_join[p] != before[p]).count();
+            assert!(
+                moved <= partitions as usize / 2,
+                "join moved {moved}/{partitions} partitions"
+            );
+            // Moves not landing on the joiner are capacity-shift
+            // ripples; they must be a small minority.
+            assert!(
+                moved_elsewhere <= moved / 2 + 1,
+                "join caused {moved_elsewhere} unrelated moves of {moved}"
+            );
+
+            // Leave: partitions not owned by the leaver overwhelmingly
+            // stay put.
+            let leaver = before[0];
+            let mut left = ring.clone();
+            left.remove(leaver);
+            let after_leave = left.assign(partitions);
+            let mut unrelated_moves = 0;
+            for p in 0..partitions as usize {
+                if before[p] != leaver && after_leave[p] != before[p] {
+                    unrelated_moves += 1;
+                }
+            }
+            let orphaned =
+                (0..partitions as usize).filter(|&p| before[p] == leaver).count();
+            assert!(
+                unrelated_moves <= orphaned + partitions as usize / 8,
+                "leave of {leaver:#x} moved {unrelated_moves} unrelated partitions \
+                 (only {orphaned} were orphaned)"
+            );
+        }
+    }
+
+    /// Narrowing a member's range (weight halving) sheds some of its
+    /// partitions and touches nobody else's beyond the shed.
+    #[test]
+    fn narrow_sheds_load_monotonically() {
+        let mut ring = Ring::new();
+        for m in 0..4u64 {
+            ring.insert(0xBEE0 + m * 101, 64);
+        }
+        let straggler = 0xBEE0;
+        let partitions = 32u32;
+        let before = counts(&ring.assign(partitions));
+        let w = ring.narrow(straggler).expect("member present");
+        assert_eq!(w, 32);
+        let after = counts(&ring.assign(partitions));
+        assert!(
+            after.get(&straggler).copied().unwrap_or(0)
+                <= before.get(&straggler).copied().unwrap_or(0),
+            "narrowing must not grow the straggler's load"
+        );
+        // Repeated narrowing converges to the floor weight of 1 and a
+        // minimal share, never zero members.
+        for _ in 0..10 {
+            ring.narrow(straggler);
+        }
+        assert_eq!(ring.weight(straggler), Some(1));
+        let floor = counts(&ring.assign(partitions));
+        assert!(floor.get(&straggler).copied().unwrap_or(0) >= 1, "capacity floor is 1");
+    }
+
+    /// The zombie-rejoin contract: removing a member and re-inserting
+    /// the same id restores exactly the pre-removal assignment.
+    #[test]
+    fn rejoin_restores_previous_ranges() {
+        let mut ring = Ring::new();
+        for &id in &[7u64, 8, 9] {
+            ring.insert(id, 48);
+        }
+        let before = ring.assign(24);
+        ring.remove(8);
+        let without = ring.assign(24);
+        assert_ne!(before, without);
+        ring.insert(8, 48);
+        assert_eq!(ring.assign(24), before, "same member set must restore ownership");
+    }
+
+    /// Degenerate shapes stay well-defined.
+    #[test]
+    fn degenerate_rings() {
+        let ring = Ring::new();
+        assert!(ring.assign(8).is_empty());
+        let mut one = Ring::new();
+        one.insert(42, 16);
+        assert_eq!(one.assign(5), vec![42; 5]);
+        assert_eq!(one.assign(0), Vec::<u64>::new());
+        let mut dup = Ring::new();
+        dup.insert(42, 16);
+        dup.insert(42, 16);
+        assert_eq!(dup.members().len(), 1, "double insert is a no-op");
+        let mut set = HashSet::new();
+        set.insert(dup.assign(3)[0]);
+        assert_eq!(set.into_iter().collect::<Vec<_>>(), vec![42]);
+    }
+}

@@ -1,35 +1,59 @@
-//! A remote cluster worker: joins a coordinator, receives a partition
-//! assignment, and drives the shared per-partition sweep
+//! A remote cluster worker: joins a coordinator, receives a set of
+//! partition assignments, and drives the shared per-partition sweep
 //! ([`crate::lda::sweep::SweepRunner`]) against the parameter-server
 //! shards — the same kernel the in-process trainer's worker threads run,
 //! so the two deployment modes are numerically equivalent.
 //!
 //! Lifecycle (all worker-initiated; see [`crate::cluster::protocol`]):
 //!
-//! 1. `Register` → a [`JobSpec`]: partition range, epoch, matrix id,
-//!    shard addresses, corpus spec, knobs.
-//! 2. Rebuild partition state — from the partition's latest valid
-//!    checkpoint when one exists, else a fresh seeded random
-//!    initialization — push its counts into the epoch's table, `Ready`.
+//! 1. `Register` → a [`JobSpec`]: partition assignments, epoch, matrix
+//!    id, shard addresses, corpus spec, knobs. A standby's `Register`
+//!    blocks server-side (the coordinator parks the envelope) until a
+//!    partition frees or the run ends.
+//! 2. Rebuild partition state. A *same-epoch* respec is diffed: runners
+//!    already held stay untouched, only newly assigned partitions are
+//!    built — from the checkpoint iteration the spec names (warm
+//!    transfers resume exactly there), else the latest valid
+//!    checkpoint, else a fresh seeded initialization. Counts are pushed
+//!    only where the spec says to (`push`): a warm handoff's counts are
+//!    already in the epoch's table. Then `Ready`.
 //! 3. `Poll` → `Run`: pull the topic totals (server-side column sums),
-//!    sweep, flush, optionally evaluate, **checkpoint, then report**.
-//!    The checkpoint-before-report order is what makes the
-//!    coordinator's recovery arithmetic sound.
-//! 4. On `Job` replies (any time): a rollback happened — rebuild from
-//!    checkpoint under the new epoch and matrix id. On `Done`: `Leave`.
+//!    re-derive the sweep RNG from `(seed, epoch, iteration,
+//!    partition)`, sweep, flush, optionally evaluate, **checkpoint,
+//!    then report**. The checkpoint-before-report order is what makes
+//!    the coordinator's recovery arithmetic sound, and the per-iteration
+//!    RNG derivation is what keeps the token→randomness stream identical
+//!    no matter which worker sweeps the partition.
+//!    `Poll` → `Transfer`: drop the named runners (their checkpoints
+//!    are already on disk); the recipient resumes from them.
+//! 4. On `Job` replies (any time): a rollback or reassignment happened —
+//!    rebuild per the new spec. On `Error` ("unknown worker"): we were
+//!    presumed dead; *re-register with the same token* and rejoin warm
+//!    instead of exiting (zombie rejoin). On `Done`: `Leave`.
+//!
+//! In snapshot mode (`knobs.snapshot`) each `Run` first pulls the full
+//! model snapshot and holds at the coordinator's fetch barrier
+//! (`Fetched`) until every participating partition has pulled it; the
+//! sweep then samples against the frozen snapshot while pushing deltas.
+//! That makes the final count table bit-exact under any membership
+//! history.
 //!
 //! A heartbeat thread pings the coordinator every
 //! [`crate::cluster::protocol::SweepKnobs::heartbeat_ms`] for the life
 //! of the process, so a long sweep or corpus load is never mistaken for
 //! a death.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::cluster::protocol::{CorpusSpec, CtrlRequest, CtrlResponse, JobSpec, SweepReport};
+use crate::cluster::protocol::{
+    CorpusSpec, CtrlRequest, CtrlResponse, JobSpec, PartitionAssignment, SweepReport,
+};
 use crate::corpus::dataset::Corpus;
 use crate::corpus::synth::{generate, SynthConfig};
+use crate::eval::perplexity::TopicModel;
 use crate::lda::checkpoint::{Checkpoint, PartitionCheckpoint};
 use crate::lda::hyper::LdaHyper;
 use crate::lda::sweep::{partition_rng, pull_full_model, SweepConfig, SweepRunner};
@@ -43,11 +67,23 @@ use crate::{log_info, log_warn};
 
 /// Per-attempt control round-trip timeout.
 const CTRL_TIMEOUT: Duration = Duration::from_secs(2);
+/// Per-attempt `Register` timeout: a standby's envelope is parked
+/// coordinator-side and only answered when a seat frees, so the worker
+/// must be willing to wait far longer than a normal round trip.
+const REGISTER_TIMEOUT: Duration = Duration::from_secs(30);
 /// Control-plane retries before giving the coordinator up for dead.
 const CTRL_RETRIES: u32 = 5;
 /// Ceiling on honored `Wait` back-off (the coordinator's suggestions
 /// are already small; this bounds a corrupt value).
 const MAX_WAIT: Duration = Duration::from_secs(2);
+
+/// Golden-ratio mix of the iteration counter into the sweep-RNG seed:
+/// iteration `t` of a partition samples from the same stream no matter
+/// which worker runs it, or whether it runs fresh or after a warm
+/// handoff.
+fn iter_mix(iteration: u32) -> u64 {
+    (iteration as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
 
 /// How a worker process is launched.
 #[derive(Default)]
@@ -62,18 +98,30 @@ pub struct WorkerOptions {
     /// i.e. mid-iteration from the control plane's view), the worker
     /// vanishes without a goodbye, exactly like a crashed process.
     pub crash_at_iteration: Option<u32>,
+    /// Planned drain: after completing this many sweeps, ask the
+    /// coordinator to `Drain` — finish hand-offs at sweep boundaries
+    /// and leave without tripping the reaper or rolling the epoch.
+    pub drain_after: Option<u32>,
+    /// Test/demo hook: sleep this long before every sweep, simulating a
+    /// straggler (drives the coordinator's load shedding).
+    pub sweep_delay_ms: u64,
 }
 
 /// What a worker did before exiting.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WorkerSummary {
     /// Coordinator-assigned id (0 if the run was already over at
-    /// registration time).
+    /// registration time). The *latest* id when a zombie rejoin
+    /// re-seated the worker.
     pub worker_id: u64,
-    /// Sweeps completed (across epochs).
+    /// Sweeps completed (across epochs and partitions).
     pub sweeps: u32,
     /// True when the crash hook fired.
     pub crashed: bool,
+    /// True when the worker left via a planned drain.
+    pub drained: bool,
+    /// Checkpoint bytes loaded for warm handoffs (transfers in).
+    pub warm_bytes: u64,
 }
 
 /// Retrying request/reply channel to the coordinator. Cloning shares
@@ -92,9 +140,13 @@ impl CtrlChannel {
     }
 
     fn call(&self, req: &CtrlRequest) -> Result<CtrlResponse> {
+        self.call_timeout(req, CTRL_TIMEOUT)
+    }
+
+    fn call_timeout(&self, req: &CtrlRequest, timeout: Duration) -> Result<CtrlResponse> {
         let payload = req.encode();
         for attempt in 0..CTRL_RETRIES {
-            match self.ep.request(payload.clone(), CTRL_TIMEOUT) {
+            match self.ep.request(payload.clone(), timeout) {
                 Ok(bytes) => return CtrlResponse::decode(&bytes),
                 Err(()) => {
                     std::thread::sleep(Duration::from_millis(50 << attempt.min(4)));
@@ -105,18 +157,30 @@ impl CtrlChannel {
     }
 }
 
-/// Everything bound to one `JobSpec`: the PS connection, the epoch's
-/// count table, and the rebuilt partition state.
+/// One owned partition: its assignment, its sweep state, and where that
+/// state came from.
+struct PartState {
+    assign: PartitionAssignment,
+    runner: SweepRunner,
+    /// Latest iteration this partition's in-memory state corresponds to
+    /// (resume point at build, then the last swept iteration).
+    done: u32,
+    /// A checkpoint file actually loaded at build time.
+    loaded: bool,
+}
+
+/// Everything bound to one `(epoch, matrix)` pair: the PS connection,
+/// the epoch's count table, and the owned partitions.
 struct ActiveJob {
     /// Keeps the shard connections alive for `client`/`n_wk`.
     _transport: Arc<dyn Transport>,
     client: PsClient,
     n_wk: BigMatrix<i64>,
-    runner: SweepRunner,
     scfg: SweepConfig,
     hyper: LdaHyper,
-    /// Iteration the restored state corresponds to (0 = fresh).
-    resumed: u32,
+    epoch: u32,
+    matrix_id: u32,
+    parts: HashMap<u32, PartState>,
 }
 
 /// Load the corpus a job names (when the caller didn't supply one).
@@ -151,14 +215,117 @@ pub fn load_corpus(spec: &CorpusSpec) -> Result<Corpus> {
     }
 }
 
-/// Rebuild all state for `spec`: connect to the shards, attach the
-/// epoch's table, restore the partition (checkpoint or fresh), push its
-/// counts and flush.
-fn setup_job(spec: &JobSpec, corpus: &Corpus) -> Result<ActiveJob> {
+impl ActiveJob {
+    /// Connect to the shards, attach the epoch's table, and build every
+    /// assigned partition.
+    fn build(spec: &JobSpec, corpus: &Corpus) -> Result<(ActiveJob, u64)> {
+        let knobs = &spec.knobs;
+        let hyper = LdaHyper { alpha: knobs.alpha, beta: knobs.beta };
+        hyper.validate()?;
+        let resolved = resolve_addrs(&spec.shard_addrs)?;
+        let mut ps_cfg = PsConfig::deployment(
+            resolved.len(),
+            knobs.scheme,
+            TransportMode::Connect(spec.shard_addrs.clone()),
+            knobs.sampler.pipeline_depth,
+        );
+        // Replica failover: pushes outlive a dying primary by routing to
+        // its (promoted) backup.
+        ps_cfg.backups = spec.backup_addrs.clone();
+        let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
+        let client = PsClient::connect(&*transport, ps_cfg);
+        client.validate_deployment()?;
+        let n_wk: BigMatrix<i64> = client.attach_matrix(
+            spec.matrix_id,
+            corpus.vocab_size as u64,
+            knobs.num_topics,
+            knobs.wt_layout,
+        )?;
+        let scfg = SweepConfig {
+            num_topics: knobs.num_topics,
+            sampler: knobs.sampler,
+            hyper,
+            vocab_size: corpus.vocab_size,
+        };
+        let mut job = ActiveJob {
+            _transport: transport,
+            client,
+            n_wk,
+            scfg,
+            hyper,
+            epoch: spec.epoch,
+            matrix_id: spec.matrix_id,
+            parts: HashMap::new(),
+        };
+        let bytes = job.add_parts(spec, &spec.parts, corpus)?;
+        Ok((job, bytes))
+    }
+
+    /// Same-epoch respec: drop partitions no longer assigned, build the
+    /// newly assigned ones, leave held runners untouched. Returns warm
+    /// checkpoint bytes loaded.
+    fn diff(&mut self, spec: &JobSpec, corpus: &Corpus) -> Result<u64> {
+        let keep: Vec<u32> = spec.parts.iter().map(|a| a.partition).collect();
+        self.parts.retain(|p, _| keep.contains(p));
+        let fresh: Vec<PartitionAssignment> = spec
+            .parts
+            .iter()
+            .filter(|a| !self.parts.contains_key(&a.partition))
+            .cloned()
+            .collect();
+        self.add_parts(spec, &fresh, corpus)
+    }
+
+    /// Build runners for `assigns`, pushing counts where the spec says
+    /// to, and flush. Returns warm checkpoint bytes loaded.
+    fn add_parts(
+        &mut self,
+        spec: &JobSpec,
+        assigns: &[PartitionAssignment],
+        corpus: &Corpus,
+    ) -> Result<u64> {
+        let mut pushed_any = false;
+        let mut warm_bytes = 0u64;
+        for assign in assigns {
+            let (runner, done, loaded, bytes) = restore_partition(spec, assign, corpus)?;
+            if assign.push {
+                runner.push_counts(&self.scfg, &self.n_wk);
+                pushed_any = true;
+            } else {
+                warm_bytes += bytes;
+            }
+            self.parts.insert(
+                assign.partition,
+                PartState { assign: assign.clone(), runner, done, loaded },
+            );
+        }
+        if pushed_any {
+            self.client.flush()?;
+        }
+        Ok(warm_bytes)
+    }
+
+    /// The `Ready` items for the current partition set, in partition
+    /// order.
+    fn ready_items(&self) -> Vec<(u32, u32, bool)> {
+        let mut items: Vec<(u32, u32, bool)> =
+            self.parts.values().map(|s| (s.assign.partition, s.done, s.loaded)).collect();
+        items.sort_unstable();
+        items
+    }
+}
+
+/// Rebuild one partition's sweep state: the exact checkpoint iteration
+/// the spec names when it exists, else the latest valid one, else a
+/// fresh seeded initialization. Returns `(runner, iteration, loaded,
+/// checkpoint_bytes)`.
+fn restore_partition(
+    spec: &JobSpec,
+    assign: &PartitionAssignment,
+    corpus: &Corpus,
+) -> Result<(SweepRunner, u32, bool, u64)> {
     let knobs = &spec.knobs;
-    let hyper = LdaHyper { alpha: knobs.alpha, beta: knobs.beta };
-    hyper.validate()?;
-    let (start, end) = (spec.doc_start as usize, spec.doc_end as usize);
+    let (start, end) = (assign.doc_start as usize, assign.doc_end as usize);
     if start > end || end > corpus.num_docs() {
         return Err(Error::Config(format!(
             "partition {}..{} exceeds the {}-doc corpus (wrong corpus?)",
@@ -167,107 +334,85 @@ fn setup_job(spec: &JobSpec, corpus: &Corpus) -> Result<ActiveJob> {
             corpus.num_docs()
         )));
     }
-
-    let resolved = resolve_addrs(&spec.shard_addrs)?;
-    let mut ps_cfg = PsConfig::deployment(
-        resolved.len(),
-        knobs.scheme,
-        TransportMode::Connect(spec.shard_addrs.clone()),
-        knobs.sampler.pipeline_depth,
-    );
-    // Replica failover: pushes outlive a dying primary by routing to
-    // its (promoted) backup.
-    ps_cfg.backups = spec.backup_addrs.clone();
-    let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&resolved));
-    let client = PsClient::connect(&*transport, ps_cfg);
-    client.validate_deployment()?;
-    let n_wk: BigMatrix<i64> = client.attach_matrix(
-        spec.matrix_id,
-        corpus.vocab_size as u64,
-        knobs.num_topics,
-        knobs.wt_layout,
-    )?;
-
-    let scfg = SweepConfig {
-        num_topics: knobs.num_topics,
-        sampler: knobs.sampler,
-        hyper,
-        vocab_size: corpus.vocab_size,
-    };
-
-    // Epoch 0's fresh initialization uses the bare cluster seed, so it
-    // is the exact stream the in-process trainer would hand partition
-    // `p`; later epochs and checkpoint resumes mix in distinguishers
-    // (mirroring Trainer::restore's `^ 0xc4`) so no epoch replays
-    // another's proposals.
-    let epoch_salt = (spec.epoch as u64) << 32;
     let range = start..end;
-    let (runner, resumed) = match load_partition_checkpoint(spec, corpus) {
-        Some(ckpt) => {
-            let rng = partition_rng(
-                knobs.seed ^ 0xc4 ^ epoch_salt,
-                spec.partition as usize,
-                spec.doc_start,
-            );
-            let iteration = ckpt.inner.iteration;
-            let assignments = std::cell::RefCell::new(ckpt.inner.assignments);
-            let next = std::cell::Cell::new(0usize);
-            let runner = SweepRunner::build(corpus, range, rng, |_, _| {
-                let i = next.get();
-                next.set(i + 1);
-                assignments.borrow_mut()[i].clone()
-            });
-            log_info!(
-                "partition {} restored from checkpoint at iteration {iteration}",
-                spec.partition
-            );
-            (runner, iteration)
-        }
-        None => {
-            let rng = partition_rng(
-                knobs.seed ^ epoch_salt,
-                spec.partition as usize,
-                spec.doc_start,
-            );
-            let k = knobs.num_topics;
-            (SweepRunner::build_random(corpus, range, k, rng), 0)
-        }
-    };
-
-    runner.push_counts(&scfg, &n_wk);
-    client.flush()?;
-    Ok(ActiveJob { _transport: transport, client, n_wk, runner, scfg, hyper, resumed })
+    // Fresh initialization is deterministic per (epoch, partition): the
+    // same stream every member would derive, which is what lets a warm
+    // handoff at iteration 0 rebuild the pushed counts without a file.
+    let epoch_salt = (spec.epoch as u64) << 32;
+    let init_rng =
+        partition_rng(knobs.seed ^ epoch_salt, assign.partition as usize, assign.doc_start);
+    if let Some((ckpt, bytes)) = load_partition_checkpoint(assign, knobs, corpus) {
+        let iteration = ckpt.inner.iteration;
+        let assignments = std::cell::RefCell::new(ckpt.inner.assignments);
+        let next = std::cell::Cell::new(0usize);
+        let runner = SweepRunner::build(corpus, range, init_rng, |_, _| {
+            let i = next.get();
+            next.set(i + 1);
+            assignments.borrow_mut()[i].clone()
+        });
+        log_info!(
+            "partition {} restored from checkpoint at iteration {iteration}",
+            assign.partition
+        );
+        Ok((runner, iteration, true, bytes))
+    } else {
+        let k = knobs.num_topics;
+        Ok((SweepRunner::build_random(corpus, range, k, init_rng), 0, false, 0))
+    }
 }
 
-/// The partition's latest valid checkpoint, if checkpointing is on and
-/// a compatible one exists. Shape mismatches (different corpus, topic
+/// The partition checkpoint to resume from, if checkpointing is on and
+/// a compatible one exists: the exact `resume` iteration the spec names
+/// when that file is valid (warm transfers must match the table), else
+/// the latest valid one. Shape mismatches (different corpus, topic
 /// count, or partition bounds) are treated as "no checkpoint" — a fresh
-/// start is always a safe recovery.
-fn load_partition_checkpoint(spec: &JobSpec, corpus: &Corpus) -> Option<PartitionCheckpoint> {
-    if spec.knobs.checkpoint_dir.is_empty() {
+/// start is always a safe recovery, because the coordinator's `Ready`
+/// check rolls the epoch when a warm handoff comes back wrong.
+fn load_partition_checkpoint(
+    assign: &PartitionAssignment,
+    knobs: &crate::cluster::protocol::SweepKnobs,
+    corpus: &Corpus,
+) -> Option<(PartitionCheckpoint, u64)> {
+    if knobs.checkpoint_dir.is_empty() {
         return None;
     }
-    let dir = std::path::Path::new(&spec.knobs.checkpoint_dir);
-    let ckpt = match PartitionCheckpoint::load_latest(dir, spec.partition) {
-        Ok(found) => found?,
-        Err(e) => {
-            log_warn!("cannot scan checkpoints in {dir:?}: {e}");
-            return None;
+    let dir = std::path::Path::new(&knobs.checkpoint_dir);
+    let mut found: Option<PartitionCheckpoint> = None;
+    if assign.resume > 0 {
+        let exact = PartitionCheckpoint::path_for(dir, assign.partition, assign.resume);
+        match PartitionCheckpoint::load(&exact) {
+            Ok(ckpt) => found = Some(ckpt),
+            Err(e) => log_warn!(
+                "partition {} checkpoint for iteration {} unreadable ({e}); \
+                 falling back to the latest",
+                assign.partition,
+                assign.resume
+            ),
         }
+    }
+    let ckpt = match found {
+        Some(c) => c,
+        None => match PartitionCheckpoint::load_latest(dir, assign.partition) {
+            Ok(c) => c?,
+            Err(e) => {
+                log_warn!("cannot scan checkpoints in {dir:?}: {e}");
+                return None;
+            }
+        },
     };
-    let (start, end) = (spec.doc_start as usize, spec.doc_end as usize);
-    if ckpt.doc_start != spec.doc_start
-        || ckpt.inner.num_topics != spec.knobs.num_topics
+    let (start, end) = (assign.doc_start as usize, assign.doc_end as usize);
+    if ckpt.doc_start != assign.doc_start
+        || ckpt.inner.num_topics != knobs.num_topics
         || ckpt.inner.assignments.len() != end - start
     {
         log_warn!(
             "partition {} checkpoint does not match the assignment (doc_start {} vs {}, \
              K {} vs {}, {} docs vs {}); starting fresh",
-            spec.partition,
+            assign.partition,
             ckpt.doc_start,
-            spec.doc_start,
+            assign.doc_start,
             ckpt.inner.num_topics,
-            spec.knobs.num_topics,
+            knobs.num_topics,
             ckpt.inner.assignments.len(),
             end - start
         );
@@ -277,67 +422,82 @@ fn load_partition_checkpoint(spec: &JobSpec, corpus: &Corpus) -> Option<Partitio
         if ckpt.inner.assignments[i].len() != doc.tokens.len() {
             log_warn!(
                 "partition {} checkpoint doc {i} length mismatch; starting fresh",
-                spec.partition
+                assign.partition
             );
             return None;
         }
     }
-    Some(ckpt)
+    let bytes: u64 = ckpt.inner.assignments.iter().map(|d| d.len() as u64 * 4).sum();
+    Some((ckpt, bytes))
 }
 
-/// Join the coordinator at `opts.join` and work until the run
-/// completes (or the crash hook fires). Blocks for the life of the
-/// membership.
+/// Register (or zombie-re-register) with `token`. `Ok(None)` means the
+/// run is already complete.
+fn register(ctrl: &CtrlChannel, token: u64) -> Result<Option<JobSpec>> {
+    loop {
+        match ctrl.call_timeout(&CtrlRequest::Register { token }, REGISTER_TIMEOUT)? {
+            CtrlResponse::Job(spec) => return Ok(Some(*spec)),
+            CtrlResponse::Wait { millis } => {
+                std::thread::sleep(Duration::from_millis(millis).min(MAX_WAIT));
+            }
+            CtrlResponse::Done => return Ok(None),
+            CtrlResponse::Error(e) => return Err(Error::Config(e)),
+            other => {
+                return Err(Error::Decode(format!("unexpected register reply {other:?}")))
+            }
+        }
+    }
+}
+
+/// Join the coordinator at `opts.join` and work until the run completes
+/// (or the worker drains, or the crash hook fires). Blocks for the life
+/// of the membership.
 pub fn run_worker(opts: WorkerOptions) -> Result<WorkerSummary> {
     let ctrl = CtrlChannel::connect(&opts.join)?;
     // Idempotency token for registration: entropy-seeded like the PS
     // client's matrix ids, so a retried Register (lost reply) re-reads
-    // its assignment instead of being seated twice.
+    // its assignment instead of being seated twice — and a reaped
+    // worker re-registers with the *same* token to reclaim its old ring
+    // position (zombie rejoin).
     let token = {
         let now = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .unwrap_or_default();
         (now.as_nanos() as u64) ^ ((std::process::id() as u64) << 32)
     };
-    // Register, waiting out a fully staffed cluster (a failure may free
-    // a partition for us at any time).
-    let mut spec: JobSpec = loop {
-        match ctrl.call(&CtrlRequest::Register { token })? {
-            CtrlResponse::Job(spec) => break *spec,
-            CtrlResponse::Wait { millis } => {
-                std::thread::sleep(Duration::from_millis(millis).min(MAX_WAIT));
-            }
-            CtrlResponse::Done => {
-                log_info!("training already complete; nothing to do");
-                return Ok(WorkerSummary { worker_id: 0, sweeps: 0, crashed: false });
-            }
-            CtrlResponse::Error(e) => return Err(Error::Config(e)),
-            other => {
-                return Err(Error::Decode(format!("unexpected register reply {other:?}")))
-            }
-        }
+    let Some(spec) = register(&ctrl, token)? else {
+        log_info!("training already complete; nothing to do");
+        return Ok(WorkerSummary {
+            worker_id: 0,
+            sweeps: 0,
+            crashed: false,
+            drained: false,
+            warm_bytes: 0,
+        });
     };
-    let worker_id = spec.worker;
+    let worker_id = Arc::new(AtomicU64::new(spec.worker));
     log_info!(
-        "joined as worker {worker_id}: partition {} (docs {}..{}), epoch {}",
-        spec.partition,
-        spec.doc_start,
-        spec.doc_end,
+        "joined as worker {}: {} partitions, epoch {}",
+        spec.worker,
+        spec.parts.len(),
         spec.epoch
     );
 
     // Heartbeats start before the (possibly slow) corpus load so the
-    // coordinator never mistakes setup time for death.
+    // coordinator never mistakes setup time for death. The id cell
+    // tracks re-registrations.
     let stop = Arc::new(AtomicBool::new(false));
     let hb = {
         let ctrl = ctrl.clone();
         let stop = Arc::clone(&stop);
+        let wid = Arc::clone(&worker_id);
         let period = Duration::from_millis(spec.knobs.heartbeat_ms.max(10));
         std::thread::Builder::new()
             .name("glint-worker-heartbeat".into())
             .spawn(move || {
                 while !stop.load(Ordering::SeqCst) {
-                    let _ = ctrl.call(&CtrlRequest::Heartbeat { worker: worker_id });
+                    let w = wid.load(Ordering::SeqCst);
+                    let _ = ctrl.call(&CtrlRequest::Heartbeat { worker: w });
                     std::thread::sleep(period);
                 }
             })
@@ -348,9 +508,9 @@ pub fn run_worker(opts: WorkerOptions) -> Result<WorkerSummary> {
     // heartbeat would keep a failed worker "alive" forever and wedge
     // the Ready barrier.
     let result = match &opts.corpus {
-        Some(c) => drive(&ctrl, spec, c, &opts, worker_id),
+        Some(c) => drive(&ctrl, spec, c, &opts, token, &worker_id),
         None => match load_corpus(&spec.corpus) {
-            Ok(c) => drive(&ctrl, spec, &c, &opts, worker_id),
+            Ok(c) => drive(&ctrl, spec, &c, &opts, token, &worker_id),
             Err(e) => Err(e),
         },
     };
@@ -359,22 +519,45 @@ pub fn run_worker(opts: WorkerOptions) -> Result<WorkerSummary> {
     result
 }
 
-/// The worker's main loop: rebuild per job spec, then poll/sweep/report
-/// until done (or crashed, or re-specced into a new epoch).
+/// The worker's main loop: rebuild (or diff) per job spec, then
+/// poll/sweep/report until done, drained, crashed, or re-specced.
 fn drive(
     ctrl: &CtrlChannel,
     mut spec: JobSpec,
     corpus: &Corpus,
     opts: &WorkerOptions,
-    worker_id: u64,
+    token: u64,
+    worker_id: &AtomicU64,
 ) -> Result<WorkerSummary> {
     let mut sweeps = 0u32;
+    let mut warm_bytes = 0u64;
+    let mut drained = false;
+    let mut drain_requested = false;
+    let mut job: Option<ActiveJob> = None;
+    // Snapshot mode pulls the frozen model once per (epoch,
+    // iteration) and sweeps every held partition against it.
+    let mut snap_cache: Option<(u32, u32, TopicModel)> = None;
     'job: loop {
-        let mut job = setup_job(&spec, corpus)?;
+        let wid = spec.worker;
+        worker_id.store(wid, Ordering::SeqCst);
+        // Same (epoch, matrix): an incremental respec — keep held
+        // runners warm, build only what's new. Otherwise a rollback or
+        // rejoin: rebuild everything against the fresh count table.
+        match job.as_mut() {
+            Some(j) if j.epoch == spec.epoch && j.matrix_id == spec.matrix_id => {
+                warm_bytes += j.diff(&spec, corpus)?;
+            }
+            _ => {
+                let (built, bytes) = ActiveJob::build(&spec, corpus)?;
+                warm_bytes += bytes;
+                job = Some(built);
+            }
+        }
+        let j = job.as_mut().expect("job just built");
         match ctrl.call(&CtrlRequest::Ready {
-            worker: worker_id,
+            worker: wid,
             epoch: spec.epoch,
-            iteration: job.resumed,
+            parts: j.ready_items(),
         })? {
             CtrlResponse::Ack => {}
             CtrlResponse::Job(new) => {
@@ -382,25 +565,115 @@ fn drive(
                 continue 'job;
             }
             CtrlResponse::Done => break 'job,
+            CtrlResponse::Error(_) => match register(ctrl, token)? {
+                Some(new) => {
+                    spec = new;
+                    drain_requested = false;
+                    continue 'job;
+                }
+                None => break 'job,
+            },
             other => return Err(Error::Decode(format!("unexpected ready reply {other:?}"))),
         }
 
         loop {
-            match ctrl.call(&CtrlRequest::Poll { worker: worker_id })? {
-                CtrlResponse::Run { iteration, evaluate } => {
+            let j = job.as_mut().expect("job active");
+            match ctrl.call(&CtrlRequest::Poll { worker: wid })? {
+                CtrlResponse::Run { partition, iteration, evaluate } => {
+                    let Some(st) = j.parts.get_mut(&partition) else {
+                        return Err(Error::Decode(format!(
+                            "coordinator ran partition {partition} this worker does not hold"
+                        )));
+                    };
+                    if opts.sweep_delay_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(opts.sweep_delay_ms));
+                    }
                     let sw = Stopwatch::new();
-                    let nk = job.n_wk.pull_col_sums()?;
-                    let stats = job.runner.sweep(&job.scfg, nk, &job.n_wk)?;
+                    // Snapshot mode: pull the frozen model (once per
+                    // iteration — all held partitions sample against
+                    // the same snapshot, and the coordinator credits
+                    // the fetch to all of them) and hold at the fetch
+                    // barrier before sampling against it.
+                    let snapshot = if spec.knobs.snapshot {
+                        let cached = matches!(&snap_cache,
+                            Some((e, i, _)) if *e == spec.epoch && *i == iteration);
+                        if !cached {
+                            let model = pull_full_model(
+                                &j.n_wk,
+                                corpus.vocab_size,
+                                j.scfg.sampler.pipeline_depth,
+                                j.hyper,
+                            )?;
+                            snap_cache = Some((spec.epoch, iteration, model));
+                        }
+                        loop {
+                            match ctrl.call(&CtrlRequest::Fetched {
+                                worker: wid,
+                                epoch: spec.epoch,
+                                partition,
+                                iteration,
+                            })? {
+                                CtrlResponse::Ack => break,
+                                CtrlResponse::Wait { millis } => {
+                                    std::thread::sleep(
+                                        Duration::from_millis(millis).min(MAX_WAIT),
+                                    );
+                                }
+                                CtrlResponse::Job(new) => {
+                                    spec = *new;
+                                    continue 'job;
+                                }
+                                CtrlResponse::Done => break 'job,
+                                CtrlResponse::Error(_) => match register(ctrl, token)? {
+                                    Some(new) => {
+                                        spec = new;
+                                        drain_requested = false;
+                                        continue 'job;
+                                    }
+                                    None => break 'job,
+                                },
+                                other => {
+                                    return Err(Error::Decode(format!(
+                                        "unexpected fetch reply {other:?}"
+                                    )))
+                                }
+                            }
+                        }
+                        true
+                    } else {
+                        false
+                    };
+                    // Per-iteration RNG: derived from (seed, epoch,
+                    // iteration, partition), never from which worker
+                    // happens to hold the partition.
+                    let epoch_salt = (spec.epoch as u64) << 32;
+                    st.runner.reseed(partition_rng(
+                        spec.knobs.seed ^ epoch_salt ^ iter_mix(iteration),
+                        partition as usize,
+                        st.assign.doc_start,
+                    ));
+                    let stats = if snapshot {
+                        let (_, _, model) = snap_cache.as_ref().expect("snapshot cached");
+                        st.runner.sweep_snapshot(&j.scfg, model, &j.n_wk)?
+                    } else {
+                        let nk = j.n_wk.pull_col_sums()?;
+                        st.runner.sweep(&j.scfg, nk, &j.n_wk)?
+                    };
                     // The flush barrier: every push of this sweep has
                     // landed (exactly-once) before we evaluate,
                     // checkpoint or report.
-                    job.client.flush()?;
+                    j.client.flush()?;
                     sweeps += 1;
+                    st.done = iteration;
                     if opts.crash_at_iteration.is_some_and(|at| iteration >= at) {
-                        log_warn!(
-                            "worker {worker_id}: simulated crash mid-iteration {iteration}"
-                        );
-                        return Ok(WorkerSummary { worker_id, sweeps, crashed: true });
+                        log_warn!("worker {wid}: simulated crash mid-iteration {iteration}");
+                        return Ok(WorkerSummary {
+                            worker_id: wid,
+                            sweeps,
+                            crashed: true,
+                            drained: false,
+                            warm_bytes,
+                        });
                     }
                     let mut report = SweepReport {
                         tokens: stats.tokens,
@@ -413,24 +686,24 @@ fn drive(
                     };
                     if evaluate {
                         let model = pull_full_model(
-                            &job.n_wk,
+                            &j.n_wk,
                             corpus.vocab_size,
-                            job.scfg.sampler.pipeline_depth,
-                            job.hyper,
+                            j.scfg.sampler.pipeline_depth,
+                            j.hyper,
                         )?;
-                        let (ll, n) = job.runner.log_likelihood(&model, corpus);
+                        let (ll, n) = st.runner.log_likelihood(&model, corpus);
                         report.evaluated = true;
                         report.log_likelihood = ll;
                         report.ll_tokens = n;
                     }
                     if !spec.knobs.checkpoint_dir.is_empty() {
                         let ckpt = PartitionCheckpoint {
-                            partition: spec.partition,
-                            doc_start: spec.doc_start,
+                            partition,
+                            doc_start: st.assign.doc_start,
                             inner: Checkpoint {
                                 iteration,
                                 num_topics: spec.knobs.num_topics,
-                                assignments: job.runner.assignments().to_vec(),
+                                assignments: st.runner.assignments().to_vec(),
                             },
                         };
                         ckpt.save(
@@ -439,8 +712,9 @@ fn drive(
                         )?;
                     }
                     match ctrl.call(&CtrlRequest::Report {
-                        worker: worker_id,
+                        worker: wid,
                         epoch: spec.epoch,
+                        partition,
                         iteration,
                         stats: report,
                     })? {
@@ -450,12 +724,57 @@ fn drive(
                             continue 'job;
                         }
                         CtrlResponse::Done => break 'job,
+                        CtrlResponse::Error(_) => match register(ctrl, token)? {
+                            Some(new) => {
+                                spec = new;
+                                drain_requested = false;
+                                continue 'job;
+                            }
+                            None => break 'job,
+                        },
                         other => {
                             return Err(Error::Decode(format!(
                                 "unexpected report reply {other:?}"
                             )))
                         }
                     }
+                    // Planned drain: ask once, after the configured
+                    // number of sweeps; then keep polling so transfers
+                    // drain out at boundaries.
+                    if !drain_requested && opts.drain_after.is_some_and(|n| sweeps >= n) {
+                        drain_requested = true;
+                        match ctrl.call(&CtrlRequest::Drain { worker: wid })? {
+                            CtrlResponse::Ack => {
+                                log_info!("worker {wid} draining; finishing hand-offs");
+                            }
+                            CtrlResponse::Drained => {
+                                drained = true;
+                                break 'job;
+                            }
+                            CtrlResponse::Job(new) => {
+                                spec = *new;
+                                continue 'job;
+                            }
+                            CtrlResponse::Done => break 'job,
+                            // "unknown worker": already reaped; we
+                            // wanted out anyway.
+                            CtrlResponse::Error(_) => break 'job,
+                            other => {
+                                return Err(Error::Decode(format!(
+                                    "unexpected drain reply {other:?}"
+                                )))
+                            }
+                        }
+                    }
+                }
+                CtrlResponse::Transfer { parts } => {
+                    // Warm transfer out: the checkpoints written before
+                    // our last reports are the handoff payload; just
+                    // drop the runners and keep polling.
+                    for p in &parts {
+                        j.parts.remove(p);
+                    }
+                    log_info!("worker {wid} released partitions {parts:?} (warm transfer)");
                 }
                 CtrlResponse::Wait { millis } => {
                     std::thread::sleep(Duration::from_millis(millis).min(MAX_WAIT));
@@ -464,12 +783,25 @@ fn drive(
                     spec = *new;
                     continue 'job;
                 }
+                CtrlResponse::Drained => {
+                    drained = true;
+                    break 'job;
+                }
                 CtrlResponse::Done => break 'job,
-                CtrlResponse::Error(e) => {
-                    // Typically "unknown worker": we were presumed dead
-                    // (e.g. a long stall). Our partition may already be
-                    // reassigned; restart the process to rejoin cleanly.
-                    return Err(Error::Config(format!("evicted by coordinator: {e}")));
+                CtrlResponse::Error(_) => {
+                    // Presumed dead (e.g. a long stall): the zombie
+                    // warm-rejoin path. Re-register with the same token;
+                    // the ring hands back whatever is still unowned, and
+                    // our checkpoints make the pickup warm.
+                    log_warn!("worker {wid} evicted; re-registering warm with same token");
+                    match register(ctrl, token)? {
+                        Some(new) => {
+                            spec = new;
+                            drain_requested = false;
+                            continue 'job;
+                        }
+                        None => break 'job,
+                    }
                 }
                 CtrlResponse::Ack => {
                     return Err(Error::Decode("unexpected bare ack to poll".into()))
@@ -477,7 +809,13 @@ fn drive(
             }
         }
     }
-    let _ = ctrl.call(&CtrlRequest::Leave { worker: worker_id });
-    log_info!("worker {worker_id} done after {sweeps} sweeps");
-    Ok(WorkerSummary { worker_id, sweeps, crashed: false })
+    let wid = worker_id.load(Ordering::SeqCst);
+    if !drained {
+        let _ = ctrl.call(&CtrlRequest::Leave { worker: wid });
+    }
+    log_info!(
+        "worker {wid} {} after {sweeps} sweeps",
+        if drained { "drained" } else { "done" }
+    );
+    Ok(WorkerSummary { worker_id: wid, sweeps, crashed: false, drained, warm_bytes })
 }

@@ -317,6 +317,16 @@ impl SweepRunner {
         self.doc_range.clone()
     }
 
+    /// Replace the runner's RNG. Cluster workers reseed per sweep with
+    /// an iteration-keyed [`partition_rng`] stream so the token→random
+    /// sequence of iteration `t` of partition `p` is a pure function of
+    /// `(seed, epoch, t, p)` — identical whether the partition ran
+    /// uninterrupted, resumed from a checkpoint, or moved to another
+    /// worker mid-run.
+    pub fn reseed(&mut self, rng: Pcg64) {
+        self.rng = rng;
+    }
+
     /// Per-document topic assignments, in range order.
     pub fn assignments(&self) -> &[Vec<u32>] {
         &self.assignments
@@ -489,6 +499,96 @@ impl SweepRunner {
         // End-of-sweep flushes: remaining sparse triples and the dense
         // hot-word aggregate (§3.3) — all fire-and-forget; the caller's
         // flush() barrier collects them.
+        let rest = buffer.take_sparse();
+        if !rest.is_empty() {
+            let _ = n_wk.push_coords_async(&rest);
+            stats.sparse_batches += 1;
+        }
+        let (rows, values) = buffer.take_dense();
+        if !rows.is_empty() {
+            let _ = n_wk.push_rows_async(&rows, &values);
+        }
+        Ok(stats)
+    }
+
+    /// One full sweep against a local model snapshot instead of live
+    /// pipeline pulls (the cluster's snapshot/BSP mode).
+    ///
+    /// Every read — word rows and topic totals — comes from `model`,
+    /// the iteration-start snapshot all partitions share behind the
+    /// coordinator's fetch barrier; only the *deltas* go to the live
+    /// table, as the usual fire-and-forget pushes (the caller's
+    /// `flush()` barrier collects them). Deltas are additive and
+    /// commutative, so the next iteration's snapshot — and therefore
+    /// the whole trajectory — is a pure function of the previous one,
+    /// bit-identical for any worker count or membership history.
+    pub fn sweep_snapshot(
+        &mut self,
+        cfg: &SweepConfig,
+        model: &TopicModel,
+        n_wk: &BigMatrix<i64>,
+    ) -> Result<IterStats> {
+        let k = cfg.num_topics;
+        let kk = k as usize;
+        let v = cfg.vocab_size;
+        let hyper = cfg.hyper;
+        if model.n_wk.len() < self.present.len() * kk || model.n_k.len() != kk {
+            return Err(Error::Decode(format!(
+                "model snapshot shape {}x{} does not cover vocab {} x {k} topics",
+                model.v, model.k, self.present.len()
+            )));
+        }
+        let mut stats = IterStats::default();
+        let mut buffer =
+            UpdateBuffer::new(cfg.sampler.buffer_cap, cfg.sampler.dense_top_words, k);
+        self.row.ensure(kk);
+        let mut nk_local = model.n_k.clone();
+
+        for w in 0..self.present.len() {
+            if !self.present[w] {
+                continue;
+            }
+            let build = Stopwatch::new();
+            let src = &model.n_wk[w * kk..(w + 1) * kk];
+            self.row.load_dense(src);
+            let alias = self.builder.build_dense(src, hyper.beta);
+            stats.alias_build_secs += build.secs();
+            for &(local, pos) in &self.occurrences[w] {
+                let (local, pos) = (local as usize, pos as usize);
+                let z_old = self.assignments[local][pos];
+                let z_new = {
+                    let view = TokenView {
+                        word_row: &self.row.values[..kk],
+                        n_k: &nk_local,
+                        doc_counts: &self.doc_counts[local],
+                        doc_assignments: &self.assignments[local],
+                        word_alias: &alias,
+                        v,
+                        hyper,
+                    };
+                    resample_token(z_old, &view, k, cfg.sampler.mh_steps, &mut self.rng)
+                };
+                stats.tokens += 1;
+                if z_new != z_old {
+                    self.doc_counts[local].decrement(z_old);
+                    self.doc_counts[local].increment(z_new);
+                    self.row.shift(z_old, z_new);
+                    nk_local[z_old as usize] -= 1;
+                    nk_local[z_new as usize] += 1;
+                    self.assignments[local][pos] = z_new;
+                    stats.changed += 1;
+                    if let Some(batch) = buffer.add(w as u64, z_old, -1) {
+                        let _ = n_wk.push_coords_async(&batch);
+                        stats.sparse_batches += 1;
+                    }
+                    if let Some(batch) = buffer.add(w as u64, z_new, 1) {
+                        let _ = n_wk.push_coords_async(&batch);
+                        stats.sparse_batches += 1;
+                    }
+                }
+            }
+        }
+        self.row.clear();
         let rest = buffer.take_sparse();
         if !rest.is_empty() {
             let _ = n_wk.push_coords_async(&rest);

@@ -118,6 +118,29 @@ pub struct TrainConfig {
     /// `serve --backup-of`). Empty disables replication: no client
     /// failover, no promotion on shard death.
     pub backups: Vec<String>,
+    /// Cluster mode: elastic membership on the consistent-hash ring.
+    /// Workers may join, drain and rejoin mid-run; partitions move
+    /// between members via warm checkpoint handoffs. Requires
+    /// `checkpoint_dir`. Off = the historical static partition table.
+    pub elastic: bool,
+    /// Cluster mode: micro-partitions per configured worker. The corpus
+    /// splits into `workers * partition_factor` fixed partitions, so
+    /// the ring can rebalance in units smaller than a whole worker's
+    /// share. 1 (the default) reproduces the historical one-partition-
+    /// per-worker layout.
+    pub partition_factor: usize,
+    /// Cluster mode, elastic only: straggler shedding factor. A
+    /// partition lagging the staleness window by this factor with no
+    /// progress for `shed_stall_ms` gets its owner's ring weight
+    /// halved. `<= 0` disables shedding.
+    pub shed_factor: f64,
+    /// Cluster mode: stall window (and shed cool-down), milliseconds.
+    pub shed_stall_ms: u64,
+    /// Cluster mode: snapshot (BSP) sweeps — each iteration samples a
+    /// full-model snapshot behind a coordinator fetch barrier. With
+    /// `max_staleness = 0` the final count table is bit-identical for
+    /// any membership history (the elasticity demo's exactness oracle).
+    pub snapshot: bool,
 }
 
 impl Default for TrainConfig {
@@ -142,6 +165,11 @@ impl Default for TrainConfig {
             straggler_timeout_ms: 10_000,
             max_staleness: 1,
             backups: Vec::new(),
+            elastic: false,
+            partition_factor: 1,
+            shed_factor: 0.0,
+            shed_stall_ms: 3000,
+            snapshot: false,
         }
     }
 }

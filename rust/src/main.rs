@@ -162,12 +162,26 @@ const COORDINATE_USAGE: &str = "train options apply (see `glint-lda help train`)
   --straggler-ms N      silence before a worker is declared dead
                         (default 10000)
   --max-staleness N     iterations a fast worker may run ahead (default 1)
+  --elastic             consistent-hash ring membership: `work` processes
+                        may join and drain mid-run; partitions move warm
+                        via checkpoints (requires --checkpoint-dir)
+  --partition-factor N  over-partition into workers*N fixed partitions so
+                        the ring has something to rebalance (default 1)
+  --shed-factor F       narrow a straggling owner's ring weight when its
+                        report cadence lags the staleness window by this
+                        factor (0 = off, default)
+  --shed-stall-ms N     minimum stall before shedding (default 3000)
+  --snapshot            BSP sweeps behind a fetch barrier: bit-exact final
+                        counts under any membership history
 ";
 
 const WORK_USAGE: &str = "options:
-  --join ADDR     coordinator host:port (required)
-  --corpus PATH   corpus override (else the coordinator's spec is used)
-  --crash-at N    fault injection: exit right after sweeping iteration N
+  --join ADDR       coordinator host:port (required)
+  --corpus PATH     corpus override (else the coordinator's spec is used)
+  --crash-at N      fault injection: exit right after sweeping iteration N
+  --drain-after N   planned drain: after N sweeps, hand partitions back
+                    warm and leave (no epoch roll, no reaper)
+  --sweep-delay-ms N  straggler simulation: sleep before every sweep
 ";
 
 const SHUTDOWN_USAGE: &str = "options:
@@ -419,6 +433,11 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
         straggler_timeout_ms: args.get_as("straggler-ms", 10_000u64)?,
         max_staleness: args.get_as("max-staleness", 1u32)?,
         backups: args.get("backups").map(split_addr_list).unwrap_or_default(),
+        elastic: args.flag("elastic"),
+        partition_factor: args.get_as("partition-factor", 1usize)?,
+        shed_factor: args.get_as("shed-factor", 0.0f64)?,
+        shed_stall_ms: args.get_as("shed-stall-ms", 3000u64)?,
+        snapshot: args.flag("snapshot"),
         ..TrainConfig::default()
     })
 }
@@ -670,16 +689,25 @@ fn cmd_work(args: &Args) -> Result<()> {
     // Fault-injection hook for demos and tests: crash (exit without
     // reporting) right after sweeping this iteration.
     let crash_at = args.get_as("crash-at", 0u32)?;
+    let drain_after = args.get_as("drain-after", 0u32)?;
     let summary = run_worker(WorkerOptions {
         join,
         corpus,
         crash_at_iteration: (crash_at > 0).then_some(crash_at),
+        drain_after: (drain_after > 0).then_some(drain_after),
+        sweep_delay_ms: args.get_as("sweep-delay-ms", 0u64)?,
     })?;
+    let how = if summary.crashed {
+        " (simulated crash)"
+    } else if summary.drained {
+        " (planned drain)"
+    } else {
+        ""
+    };
     log_info!(
-        "worker {} exiting after {} sweep(s){}",
+        "worker {} exiting after {} sweep(s){how}",
         summary.worker_id,
-        summary.sweeps,
-        if summary.crashed { " (simulated crash)" } else { "" }
+        summary.sweeps
     );
     Ok(())
 }

@@ -714,3 +714,455 @@ fn exactly_once_pushes_linearize() {
     );
     coverage("lin-oracle", stats, 1000);
 }
+
+
+// ---------------------------------------------------------------------
+// Elastic membership (cluster control plane). The real [`Membership`]
+// state machine is driven by a simulated cluster whose event order —
+// worker polls, reports, drains, registrations, crashes, wakeups, and
+// reaper ticks — is scheduler-chosen via [`choice`]. The coordinator's
+// automatic duties (roll the epoch as soon as one is wanted, deliver
+// specs to admitted registrants) run after every event, exactly as
+// `serve_one`/`run` do after every message and tick.
+//
+// Safety invariants, asserted after every step:
+// - `Membership::check_invariants` (owners and targets are live
+//   members, per-partition counters never run backwards);
+// - no partition is believed-owned by two workers *within one epoch*
+//   (a zombie's stale belief is tagged with the fenced old epoch, so
+//   its pushes can never land in the live table);
+// - a `Run` verdict only ever goes to a worker that believes it owns
+//   the partition.
+//
+// Liveness: each scenario then pumps events round-robin (reaping the
+// abandoned) and must reach `finished()` — every partition swept to the
+// iteration target, none orphaned — within a bounded number of rounds.
+// ---------------------------------------------------------------------
+
+use std::cell::Cell;
+use std::collections::{HashMap, HashSet};
+
+use glint_lda::cluster::membership::{
+    AckVerdict, Admission, DrainVerdict, Membership, MembershipCfg, PollVerdict,
+};
+
+/// One simulated worker process: what it believes, independent of the
+/// coordinator's books.
+struct SimWorker {
+    token: u64,
+    /// Seated member id (None: not registered, evicted, or exited).
+    id: Option<u64>,
+    /// Epoch of the spec this worker last built for.
+    epoch: u32,
+    /// Believed-owned partitions and the iteration each is at.
+    parts: Vec<(u32, u32)>,
+    /// Built runners but `Ready` not yet acknowledged.
+    needs_ready: bool,
+    /// Exited for good (crashed, drained, or run complete).
+    gone: bool,
+    /// Stalled: events disabled but state retained, so a later wakeup
+    /// (or the completion pump) exercises the zombie-rejoin path.
+    silent: bool,
+}
+
+struct SimCluster {
+    ms: Membership,
+    workers: Vec<SimWorker>,
+    /// Latest checkpoint per partition (the shared disk).
+    disk: HashMap<u32, u32>,
+    now: u64,
+    reap_timeout: u64,
+}
+
+impl SimCluster {
+    fn new(cfg: MembershipCfg, parts: usize, reap_timeout: u64, tokens: &[u64]) -> SimCluster {
+        let ranges = (0..parts).map(|i| i * 10..(i + 1) * 10).collect();
+        let workers = tokens
+            .iter()
+            .map(|&token| SimWorker {
+                token,
+                id: None,
+                epoch: 0,
+                parts: Vec::new(),
+                needs_ready: false,
+                gone: false,
+                silent: false,
+            })
+            .collect();
+        SimCluster {
+            ms: Membership::new(cfg, ranges),
+            workers,
+            disk: HashMap::new(),
+            now: 0,
+            reap_timeout,
+        }
+    }
+
+    /// Deliver the current spec to a seated worker (the coordinator's
+    /// `build_spec` plus the worker's rebuild/diff).
+    fn deliver_spec(&mut self, wi: usize) {
+        let w = self.workers[wi].id.expect("spec for unseated worker");
+        let assigns = self.ms.spec_for(w);
+        self.workers[wi].epoch = self.ms.epoch();
+        self.workers[wi].parts = assigns
+            .iter()
+            .map(|a| (a.part, self.disk.get(&a.part).copied().unwrap_or(0)))
+            .collect();
+        self.workers[wi].needs_ready = true;
+    }
+
+    /// The coordinator's after-every-message duties: roll a wanted
+    /// epoch (matrix creation modeled as always succeeding) and answer
+    /// admitted or timed-out registrants.
+    fn coordinator_duties(&mut self) {
+        if self.ms.roll_wanted() {
+            self.ms.rolled(self.now);
+        }
+        for (token, id) in self.ms.take_admitted() {
+            if let Some(wi) = self.workers.iter().position(|w| w.token == token) {
+                self.workers[wi].id = Some(id);
+                self.deliver_spec(wi);
+            }
+        }
+        if self.ms.finished() {
+            for w in &mut self.workers {
+                if w.id.is_none() && !w.gone {
+                    // Parked registrants are answered `Done`.
+                    w.gone = true;
+                }
+            }
+        }
+    }
+
+    fn register(&mut self, wi: usize) {
+        let token = self.workers[wi].token;
+        match self.ms.register(token, self.now) {
+            Admission::Seated { worker } | Admission::Existing { worker } => {
+                self.workers[wi].id = Some(worker);
+                self.deliver_spec(wi);
+            }
+            Admission::Parked => {}
+            Admission::Finished => self.workers[wi].gone = true,
+        }
+    }
+
+    /// The worker learned it was presumed dead; its loop re-registers
+    /// with the same token (separate schedule point).
+    fn evict(&mut self, wi: usize) {
+        self.workers[wi].id = None;
+        self.workers[wi].parts.clear();
+    }
+
+    fn send_ready(&mut self, wi: usize) {
+        let w = self.workers[wi].id.expect("ready from unseated worker");
+        let epoch = self.workers[wi].epoch;
+        let items: Vec<(u32, u32, bool)> = self.workers[wi]
+            .parts
+            .iter()
+            .map(|&(p, it)| (p, it, self.disk.contains_key(&p)))
+            .collect();
+        match self.ms.ready(w, epoch, &items, self.now) {
+            AckVerdict::Ok => self.workers[wi].needs_ready = false,
+            AckVerdict::Respec => self.deliver_spec(wi),
+            AckVerdict::Unknown => self.evict(wi),
+        }
+    }
+
+    /// One `Poll` round trip, including the sweep + checkpoint + report
+    /// when `Run` comes back.
+    fn poll(&mut self, wi: usize) {
+        let w = self.workers[wi].id.expect("poll from unseated worker");
+        match self.ms.poll(w, self.now) {
+            PollVerdict::Respec => self.deliver_spec(wi),
+            PollVerdict::Transfer(parts) => {
+                self.workers[wi].parts.retain(|(p, _)| !parts.contains(p));
+            }
+            PollVerdict::Run { part, iteration } => {
+                model_assert(
+                    self.workers[wi].parts.iter().any(|&(p, _)| p == part),
+                    "Run issued for a partition the worker does not believe it owns",
+                );
+                // Sweep, checkpoint, then report — checkpoint first,
+                // exactly like the worker: the disk moves even when the
+                // report is never delivered.
+                self.disk.insert(part, iteration);
+                let epoch = self.workers[wi].epoch;
+                match self.ms.report(w, epoch, part, iteration, self.now) {
+                    AckVerdict::Ok => {
+                        for slot in self.workers[wi].parts.iter_mut() {
+                            if slot.0 == part {
+                                slot.1 = iteration;
+                            }
+                        }
+                    }
+                    AckVerdict::Respec => self.deliver_spec(wi),
+                    AckVerdict::Unknown => self.evict(wi),
+                }
+            }
+            PollVerdict::Wait => {}
+            PollVerdict::Drained => {
+                model_assert(
+                    self.workers[wi].parts.is_empty(),
+                    "Drained while the worker still believes it owns partitions",
+                );
+                self.workers[wi].id = None;
+                self.workers[wi].gone = true;
+            }
+            PollVerdict::Done => {
+                self.workers[wi].id = None;
+                self.workers[wi].gone = true;
+            }
+            PollVerdict::Unknown => self.evict(wi),
+        }
+    }
+
+    fn drain(&mut self, wi: usize) {
+        let w = self.workers[wi].id.expect("drain from unseated worker");
+        match self.ms.drain(w, self.now) {
+            DrainVerdict::Draining => {}
+            DrainVerdict::Drained => {
+                self.workers[wi].id = None;
+                self.workers[wi].parts.clear();
+                self.workers[wi].gone = true;
+            }
+            DrainVerdict::Unknown => self.evict(wi),
+        }
+    }
+
+    /// Reaper tick: advance time and reap the silent.
+    fn tick(&mut self) {
+        self.now += self.reap_timeout / 2 + 1;
+        self.ms.reap(self.now, self.reap_timeout);
+    }
+
+    /// Safety net, asserted after every event.
+    fn check(&self) {
+        self.ms.check_invariants();
+        let mut seen: HashSet<(u32, u32)> = HashSet::new();
+        for w in &self.workers {
+            if w.id.is_none() && !w.silent {
+                continue;
+            }
+            for &(p, _) in &w.parts {
+                model_assert(
+                    seen.insert((w.epoch, p)),
+                    "partition believed-owned by two workers in one epoch",
+                );
+            }
+        }
+    }
+
+    /// One scheduler-chosen step over the enabled events: per live
+    /// worker (register | ready | poll), a reaper tick, and the
+    /// scenario's one-shot events.
+    fn step(&mut self, extra: &mut [&mut dyn FnMut(&mut SimCluster)]) {
+        let mut events: Vec<(usize, u8)> = Vec::new();
+        for (wi, w) in self.workers.iter().enumerate() {
+            if w.gone || w.silent {
+                continue;
+            }
+            if w.id.is_none() {
+                events.push((wi, 0));
+            } else if w.needs_ready {
+                events.push((wi, 1));
+            } else {
+                events.push((wi, 2));
+            }
+        }
+        let base = events.len();
+        let pick = choice(base + 1 + extra.len());
+        if pick < base {
+            let (wi, kind) = events[pick];
+            match kind {
+                0 => self.register(wi),
+                1 => self.send_ready(wi),
+                _ => self.poll(wi),
+            }
+        } else if pick == base {
+            self.tick();
+        } else {
+            (extra[pick - base - 1])(self);
+        }
+        self.coordinator_duties();
+        self.check();
+    }
+
+    /// Pump deterministically (no further scheduler choices) until the
+    /// run finishes; a wedged control plane trips the round bound. The
+    /// silent are woken (zombie rejoin must converge) and the abandoned
+    /// are reaped.
+    fn run_to_completion(&mut self) {
+        for _ in 0..200 {
+            if self.ms.finished()
+                && self.workers.iter().all(|w| w.gone || w.id.is_none())
+            {
+                return;
+            }
+            self.now += self.reap_timeout / 2 + 1;
+            for wi in 0..self.workers.len() {
+                if self.workers[wi].gone {
+                    continue;
+                }
+                self.workers[wi].silent = false;
+                if self.workers[wi].id.is_none() {
+                    self.register(wi);
+                } else if self.workers[wi].needs_ready {
+                    self.send_ready(wi);
+                } else {
+                    self.poll(wi);
+                }
+                self.coordinator_duties();
+                self.check();
+            }
+            self.ms.reap(self.now, self.reap_timeout);
+            self.coordinator_duties();
+            self.check();
+        }
+        model_assert(false, "membership did not converge within the round bound");
+    }
+}
+
+fn elastic_cfg(iterations: u32) -> MembershipCfg {
+    MembershipCfg {
+        elastic: true,
+        workers: 2,
+        vnodes: 8,
+        iterations,
+        max_staleness: 1,
+        checkpointing: true,
+        shed_factor: 0.0,
+        shed_stall_ms: 1000,
+    }
+}
+
+/// A joiner registers while a crashed worker is being reaped and the
+/// epoch rolls: however the join interleaves with the orphaning, the
+/// roll, and the re-specs, no partition is double-owned or left behind.
+fn membership_join_during_roll_model() {
+    let mut sim = SimCluster::new(elastic_cfg(2), 4, 4, &[11, 22, 33]);
+    sim.register(0);
+    sim.register(1);
+    sim.coordinator_duties();
+    sim.check();
+    let crashed = Cell::new(false);
+    let joined = Cell::new(false);
+    for _ in 0..14 {
+        let mut crash = |s: &mut SimCluster| {
+            crashed.set(true);
+            s.workers[1].silent = true;
+        };
+        let mut join = |s: &mut SimCluster| {
+            joined.set(true);
+            s.register(2);
+        };
+        let mut extra: Vec<&mut dyn FnMut(&mut SimCluster)> = Vec::new();
+        if !crashed.get() {
+            extra.push(&mut crash);
+        }
+        if !joined.get() {
+            extra.push(&mut join);
+        }
+        sim.step(&mut extra);
+    }
+    // The crashed worker never comes back in this scenario; the pump
+    // reaps it and the survivors finish the run.
+    if crashed.get() {
+        sim.workers[1].gone = true;
+    }
+    sim.run_to_completion();
+}
+
+#[test]
+fn membership_join_during_epoch_roll() {
+    let stats = explore(
+        "membership-join-roll",
+        ExploreOpts { schedules: 2500, ..ExploreOpts::default() },
+        membership_join_during_roll_model,
+    );
+    coverage("membership-join-roll", stats, 1000);
+}
+
+/// A planned drain races the reaper: the draining worker's polls may be
+/// delayed past the straggler timeout, so it can be reaped mid-drain.
+/// Either way every partition stays (or ends up) owned exactly once.
+fn membership_drain_races_reaper_model() {
+    let mut sim = SimCluster::new(elastic_cfg(2), 4, 4, &[11, 22, 33]);
+    for wi in 0..3 {
+        sim.register(wi);
+    }
+    sim.coordinator_duties();
+    sim.check();
+    let asked = Cell::new(false);
+    for _ in 0..14 {
+        let mut ask = |s: &mut SimCluster| {
+            // Only meaningful once seated with runners built; until
+            // then the one-shot stays armed.
+            if s.workers[1].id.is_some() && !s.workers[1].needs_ready {
+                asked.set(true);
+                s.drain(1);
+            }
+        };
+        let mut extra: Vec<&mut dyn FnMut(&mut SimCluster)> = Vec::new();
+        if !asked.get() {
+            extra.push(&mut ask);
+        }
+        sim.step(&mut extra);
+    }
+    sim.run_to_completion();
+}
+
+#[test]
+fn membership_drain_racing_reaper() {
+    let stats = explore(
+        "membership-drain-reaper",
+        ExploreOpts { schedules: 2500, ..ExploreOpts::default() },
+        membership_drain_races_reaper_model,
+    );
+    coverage("membership-drain-reaper", stats, 1000);
+}
+
+/// A reaped-but-alive worker (zombie) re-registers with its old token
+/// while its partitions are being reassigned: the rejoin must never
+/// alias the dead member id, double-own a partition, or wedge the run.
+fn membership_zombie_rejoin_model() {
+    let mut sim = SimCluster::new(elastic_cfg(2), 4, 4, &[11, 22, 33]);
+    for wi in 0..3 {
+        sim.register(wi);
+    }
+    sim.coordinator_duties();
+    sim.check();
+    // Stall worker 1 outright; scheduler-placed ticks decide when (and
+    // whether) the reaper declares it dead before the wakeup.
+    sim.workers[1].silent = true;
+    let woke = Cell::new(false);
+    for _ in 0..14 {
+        let mut wake = |s: &mut SimCluster| {
+            woke.set(true);
+            s.workers[1].silent = false;
+            // Its first call after the stall either discovers the
+            // eviction (Unknown -> re-register, same token) or finds
+            // the member still alive; both paths are legal.
+            if s.workers[1].id.is_some() {
+                s.poll(1);
+            } else {
+                s.register(1);
+            }
+        };
+        let mut extra: Vec<&mut dyn FnMut(&mut SimCluster)> = Vec::new();
+        if !woke.get() {
+            extra.push(&mut wake);
+        }
+        sim.step(&mut extra);
+    }
+    sim.run_to_completion();
+}
+
+#[test]
+fn membership_zombie_rejoin_vs_reassignment() {
+    let stats = explore(
+        "membership-zombie-rejoin",
+        ExploreOpts { schedules: 2500, ..ExploreOpts::default() },
+        membership_zombie_rejoin_model,
+    );
+    coverage("membership-zombie-rejoin", stats, 1000);
+}
