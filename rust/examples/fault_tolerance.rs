@@ -17,11 +17,23 @@
 //!    mid-training. The workers' clients fail over, the coordinator
 //!    promotes the backup and rolls the epoch, and training converges
 //!    on the survivors.
+//! 4. **Replication chains under chaos**: depth-2 standby chains, with
+//!    a deterministic network-fault plan injected on every TCP round
+//!    trip. Shard 0's primary is killed, its promoted successor is
+//!    killed too; promotion walks the chain head-ward and the tail is
+//!    re-seeded (`ReplSeed`) behind each new head. Snapshot (BSP)
+//!    sweeps make the final count table bit-exact, diffed against a
+//!    no-fault baseline run.
+//! 5. **Planned drain**: a serving head is handed off to its standby
+//!    mid-run via the drain protocol — zero epoch rolls, bounded
+//!    client retries, nothing acked lost.
 //!
 //! ```sh
 //! cargo run --release --example fault_tolerance
 //! # env knobs: SMOKE=1 runs only the replicated-shard scenario;
-//! #            DURABILITY_CSV=path writes its metrics for CI
+//! #            SMOKE=chain runs only the chain + drain scenarios
+//! #            (GLINT_CHAOS_PLAN / GLINT_CHAOS_SEED pin the chaos);
+//! #            DURABILITY_CSV=path writes replica metrics for CI
 //! ```
 
 use std::net::SocketAddr;
@@ -30,11 +42,12 @@ use glint_lda::cluster::{run_worker, Coordinator, CorpusSpec, WorkerOptions};
 use glint_lda::corpus::synth::{generate, SynthConfig};
 use glint_lda::lda::checkpoint::PartitionCheckpoint;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
+use glint_lda::net::chaos;
 use glint_lda::net::tcp::{resolve_addrs, TcpTransport};
 use glint_lda::net::FaultPlan;
 use glint_lda::ps::client::PsClient;
 use glint_lda::ps::config::{PsConfig, TransportMode};
-use glint_lda::ps::server::TcpShardServer;
+use glint_lda::ps::server::{TcpShardServer, ROLE_BACKUP, ROLE_PROMOTED};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let ckpt = std::env::temp_dir().join("glint_ft_demo");
@@ -47,11 +60,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         avg_doc_len: 60.0,
         ..Default::default()
     });
-    if std::env::var("SMOKE").is_ok() {
+    match std::env::var("SMOKE").ok().as_deref() {
+        // CI's chaos leg: the chain + planned-drain scenarios under a
+        // deterministic network-fault plan.
+        Some("chain") => {
+            chain_demo(&corpus)?;
+            drain_demo(&corpus)?;
+            println!("fault_tolerance OK");
+            return Ok(());
+        }
         // CI's durability leg: just the shard-kill scenario.
-        replica_demo(&corpus)?;
-        println!("fault_tolerance OK");
-        return Ok(());
+        Some(_) => {
+            replica_demo(&corpus)?;
+            println!("fault_tolerance OK");
+            return Ok(());
+        }
+        None => {}
     }
     let cfg = TrainConfig {
         num_topics: 20,
@@ -99,6 +123,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     cluster_demo(&corpus)?;
     replica_demo(&corpus)?;
+    chain_demo(&corpus)?;
+    drain_demo(&corpus)?;
     println!("fault_tolerance OK");
     Ok(())
 }
@@ -141,6 +167,7 @@ fn cluster_demo(
             join: join.clone(),
             corpus: Some(corpus.clone()),
             crash_at_iteration: crash,
+            ..WorkerOptions::default()
         };
         workers.push(std::thread::spawn(move || run_worker(opts)));
         // Stagger so the crash-rigged worker (spawned first) holds a
@@ -227,7 +254,7 @@ fn replica_demo(
         let opts = WorkerOptions {
             join: join.clone(),
             corpus: Some(corpus.clone()),
-            crash_at_iteration: None,
+            ..WorkerOptions::default()
         };
         workers.push(std::thread::spawn(move || run_worker(opts)));
         std::thread::sleep(std::time::Duration::from_millis(200));
@@ -300,5 +327,342 @@ fn replica_demo(
     let _ = std::fs::remove_dir_all(&ckpt);
     let _ = std::fs::remove_dir_all(&wal);
     println!("fault_tolerance (replicated shards) OK");
+    Ok(())
+}
+
+/// Admin client pinned to one replica address (introspection / kills).
+fn admin_client(addr: &str) -> Result<PsClient, glint_lda::util::error::Error> {
+    let resolved = resolve_addrs(&[addr.to_string()])?;
+    let cfg = PsConfig {
+        shards: 1,
+        transport: TransportMode::Connect(vec![addr.to_string()]),
+        ..PsConfig::default()
+    };
+    Ok(PsClient::connect(&TcpTransport::connect(&resolved), cfg))
+}
+
+/// Stop the shard serve loop at `addr` — to every client it looks like
+/// a kill -9: the socket goes away and requests start timing out. (The
+/// stop signal itself rides the reliable control channel, so it lands
+/// even under an installed chaos plan.)
+fn kill_shard(addr: &str) -> Result<(), glint_lda::util::error::Error> {
+    admin_client(addr)?.shutdown_servers()
+}
+
+/// Block until partition 0 has checkpointed `iteration` (training is
+/// provably that far along).
+fn wait_for_iteration(ckpt: &std::path::Path, iteration: u32) {
+    loop {
+        match PartitionCheckpoint::load_latest(ckpt, 0) {
+            Ok(Some(c)) if c.inner.iteration >= iteration => return,
+            _ => std::thread::sleep(std::time::Duration::from_millis(50)),
+        }
+    }
+}
+
+/// The training configuration both chain-demo runs (chaotic and
+/// baseline) share: snapshot (BSP) sweeps in lockstep, so the final
+/// count table is bit-identical for ANY failure history and the two
+/// runs can be diffed.
+fn chain_cfg(
+    shard_addrs: Vec<String>,
+    backups: Vec<String>,
+    ckpt: std::path::PathBuf,
+) -> TrainConfig {
+    TrainConfig {
+        num_topics: 20,
+        iterations: 8,
+        workers: 2,
+        shards: 2,
+        eval_every: 2,
+        checkpoint_dir: Some(ckpt),
+        transport: TransportMode::Connect(shard_addrs),
+        backups,
+        heartbeat_ms: 100,
+        straggler_timeout_ms: 1500,
+        snapshot: true,
+        max_staleness: 0,
+        seed: 0xc4a1,
+        ..TrainConfig::default()
+    }
+}
+
+/// The chain path, under deterministic network chaos: a depth-2
+/// standby chain behind each WAL-backed primary. Shard 0's primary is
+/// killed mid-training; the coordinator promotes the tier-1 standby
+/// and re-seeds tier 2 behind it (`ReplSeed`). Then the promoted head
+/// is killed too: promotion walks head-ward onto the re-seeded tail
+/// and training still converges — with final counts bit-exact against
+/// a no-fault baseline run.
+fn chain_demo(
+    corpus: &glint_lda::corpus::dataset::Corpus,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let ckpt = std::env::temp_dir().join("glint_ft_chain_ckpt");
+    let wal = std::env::temp_dir().join("glint_ft_chain_wal");
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let _ = std::fs::remove_dir_all(&wal);
+
+    // Deterministic TCP fault injection for everything from here on.
+    // Exactly-once pushes make the final counts immune to it, and the
+    // install logs a `--chaos-plan ... --chaos-seed ...` line, so any
+    // failure below replays bit-exactly. Env vars let CI pin the plan.
+    if !chaos::install_from_env() {
+        chaos::install(chaos::parse_plan("drop=0.03,dup=0.03")?, 7);
+    }
+
+    println!("chain phase 1: 2 WAL primaries, depth-2 standby chains, chaos on the wire");
+    let one: Vec<SocketAddr> = vec!["127.0.0.1:0".parse().unwrap()];
+    let mut pcfg = PsConfig::with_shards(2);
+    pcfg.wal_dir = Some(wal.clone());
+    let p0 = TcpShardServer::bind(pcfg.clone(), 0, &one)?;
+    let p1 = TcpShardServer::bind(pcfg, 1, &one)?;
+    let primary_addrs = vec![p0.addrs()[0].to_string(), p1.addrs()[0].to_string()];
+
+    // Two standby tiers, each a process hosting a replica of both
+    // shards. Every standby initially tails its primary; on promotion
+    // the coordinator re-points survivors at the new head.
+    let two: Vec<SocketAddr> = (0..2).map(|_| "127.0.0.1:0".parse().unwrap()).collect();
+    let mut bcfg = PsConfig::with_shards(2);
+    bcfg.backup_of = Some(primary_addrs.clone());
+    let tier1 = TcpShardServer::bind(bcfg.clone(), 0, &two)?;
+    let tier2 = TcpShardServer::bind(bcfg, 0, &two)?;
+    // Tier-major: [t1s0, t1s1, t2s0, t2s1].
+    let mut backup_addrs: Vec<String> = tier1.addrs().iter().map(|a| a.to_string()).collect();
+    backup_addrs.extend(tier2.addrs().iter().map(|a| a.to_string()));
+
+    let cfg = chain_cfg(primary_addrs.clone(), backup_addrs.clone(), ckpt.clone());
+    let coordinator = Coordinator::bind("127.0.0.1:0", cfg, corpus, CorpusSpec::Provided)?;
+    let join = coordinator.addr().to_string();
+    let coord = std::thread::spawn(move || coordinator.run());
+
+    println!("chain phase 2: workers join; shard 0 will lose two heads in sequence");
+    let mut workers = Vec::new();
+    for _ in 0..3 {
+        let opts = WorkerOptions {
+            join: join.clone(),
+            corpus: Some(corpus.clone()),
+            ..WorkerOptions::default()
+        };
+        workers.push(std::thread::spawn(move || run_worker(opts)));
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+
+    // The assassin kills shard 0's primary at iteration 3, waits for
+    // the chain to heal (tier 1 promoted, tier 2 re-seeded behind it
+    // and actively tailing again), then kills the promoted head at
+    // iteration 5, leaving only the twice-removed tail.
+    let victim1 = primary_addrs[0].clone();
+    let victim2 = backup_addrs[0].clone(); // shard 0's tier-1 standby
+    let tail = backup_addrs[2].clone(); // shard 0's tier-2 standby
+    let watch = ckpt.clone();
+    let assassin =
+        std::thread::spawn(move || -> Result<u64, String> {
+            wait_for_iteration(&watch, 3);
+            println!("chain phase 3: kill 1 — primary {victim1} dies");
+            kill_shard(&victim1).map_err(|e| e.to_string())?;
+            // Heal proof, step 1: tier 1 reports it now serves as the
+            // promoted head.
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+            let head = admin_client(&victim2).map_err(|e| e.to_string())?;
+            loop {
+                if std::time::Instant::now() > deadline {
+                    return Err("tier 1 was never promoted after kill 1".into());
+                }
+                if let Ok(info) = head.shard_info(0) {
+                    if info.role == ROLE_PROMOTED {
+                        break;
+                    }
+                }
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            }
+            // Heal proof, step 2: the tail's applied counter grows
+            // again with zero lag. Its original upstream is dead and
+            // cannot grow it, so growth past promotion means the
+            // coordinator re-seeded tier 2 behind the new head and it
+            // is actively tailing.
+            let observer = admin_client(&tail).map_err(|e| e.to_string())?;
+            let mut last = None;
+            let lag = loop {
+                if std::time::Instant::now() > deadline {
+                    return Err("tail was never re-seeded after kill 1".into());
+                }
+                if let Ok(info) = observer.shard_info(0) {
+                    if info.role == ROLE_BACKUP && info.repl_lag == 0 && info.repl_applied > 0 {
+                        match last {
+                            Some(prev) if info.repl_applied > prev => break info.repl_lag,
+                            _ => last = Some(info.repl_applied),
+                        }
+                    }
+                }
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            };
+            println!("  re-seeded tail is tailing the new head again (repl_lag {lag})");
+            wait_for_iteration(&watch, 5);
+            println!("chain phase 4: kill 2 — promoted head {victim2} dies");
+            kill_shard(&victim2).map_err(|e| e.to_string())?;
+            Ok(lag)
+        });
+
+    let outcome = coord.join().expect("coordinator thread")?;
+    let tail_lag = assassin.join().expect("assassin thread")?;
+    let finished = workers
+        .into_iter()
+        .filter_map(|w| w.join().expect("worker thread").ok())
+        .count();
+    assert!(finished >= 2, "at least two workers must finish cleanly");
+
+    println!(
+        "chain phase 5: survived via {} promotions, {} re-seed(s), {} epoch roll(s)",
+        outcome.promotions, outcome.reseeds, outcome.epochs
+    );
+    assert!(outcome.promotions >= 2, "both kills must promote along the chain");
+    assert!(outcome.reseeds >= 1, "the tail must be re-seeded behind the new head");
+    assert!(outcome.epochs >= 2, "each crash-promotion must roll the epoch");
+    assert_eq!(tail_lag, 0, "re-seeded tail must report zero replication lag");
+    assert_eq!(
+        outcome.model.n_k.iter().sum::<i64>(),
+        corpus.num_tokens() as i64,
+        "count table must cover every token exactly once"
+    );
+    let perplexity = outcome
+        .final_perplexity
+        .ok_or("no evaluation point produced a perplexity")?;
+    assert!(perplexity.is_finite() && perplexity > 1.0, "nonsense perplexity");
+    println!("  final training perplexity: {perplexity:.1}");
+
+    // The exactness oracle: rerun the same BSP-lockstep schedule on
+    // fresh failure-free shards (still under the same chaos plan) and
+    // require bit-identical final counts.
+    println!("chain phase 6: no-fault baseline for the bit-exactness check");
+    let base_ckpt = std::env::temp_dir().join("glint_ft_chain_base");
+    let _ = std::fs::remove_dir_all(&base_ckpt);
+    let want: Vec<SocketAddr> = (0..2).map(|_| "127.0.0.1:0".parse().unwrap()).collect();
+    let base_shards = TcpShardServer::bind(PsConfig::with_shards(2), 0, &want)?;
+    let base_addrs: Vec<String> = base_shards.addrs().iter().map(|a| a.to_string()).collect();
+    let base_cfg = chain_cfg(base_addrs, Vec::new(), base_ckpt.clone());
+    let base_coord = Coordinator::bind("127.0.0.1:0", base_cfg, corpus, CorpusSpec::Provided)?;
+    let base_join = base_coord.addr().to_string();
+    let bc = std::thread::spawn(move || base_coord.run());
+    let mut base_workers = Vec::new();
+    for _ in 0..2 {
+        let opts = WorkerOptions {
+            join: base_join.clone(),
+            corpus: Some(corpus.clone()),
+            ..WorkerOptions::default()
+        };
+        base_workers.push(std::thread::spawn(move || run_worker(opts)));
+    }
+    let baseline = bc.join().expect("baseline coordinator thread")?;
+    for w in base_workers {
+        w.join().expect("baseline worker thread")?;
+    }
+    assert_eq!(baseline.epochs, 0, "baseline must run failure-free");
+    assert_eq!(
+        outcome.model.n_wk, baseline.model.n_wk,
+        "double-failover count table diverged from the no-fault baseline"
+    );
+    assert_eq!(
+        outcome.model.n_k, baseline.model.n_k,
+        "double-failover topic totals diverged from the no-fault baseline"
+    );
+    println!("  final count table bit-exact vs the no-fault baseline");
+
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let _ = std::fs::remove_dir_all(&base_ckpt);
+    let _ = std::fs::remove_dir_all(&wal);
+    println!("fault_tolerance (replication chains under chaos) OK");
+    Ok(())
+}
+
+/// The planned-maintenance path: mid-training, the coordinator drains
+/// shard 0's serving head onto its standby. Unlike crash recovery this
+/// must cost NO epoch roll — the drain freezes the commit window at a
+/// known tip, the standby replicates through it, and clients simply
+/// retry their `Unavailable` answers onto the promoted replica.
+fn drain_demo(
+    corpus: &glint_lda::corpus::dataset::Corpus,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let ckpt = std::env::temp_dir().join("glint_ft_drain_ckpt");
+    let wal = std::env::temp_dir().join("glint_ft_drain_wal");
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let _ = std::fs::remove_dir_all(&wal);
+
+    println!("drain phase 1: 2 WAL primaries + 1 standby tier + coordinator");
+    let one: Vec<SocketAddr> = vec!["127.0.0.1:0".parse().unwrap()];
+    let mut pcfg = PsConfig::with_shards(2);
+    pcfg.wal_dir = Some(wal.clone());
+    let p0 = TcpShardServer::bind(pcfg.clone(), 0, &one)?;
+    let p1 = TcpShardServer::bind(pcfg, 1, &one)?;
+    let primary_addrs = vec![p0.addrs()[0].to_string(), p1.addrs()[0].to_string()];
+
+    let two: Vec<SocketAddr> = (0..2).map(|_| "127.0.0.1:0".parse().unwrap()).collect();
+    let mut bcfg = PsConfig::with_shards(2);
+    bcfg.backup_of = Some(primary_addrs.clone());
+    let backups = TcpShardServer::bind(bcfg, 0, &two)?;
+    let backup_addrs: Vec<String> = backups.addrs().iter().map(|a| a.to_string()).collect();
+
+    let cfg = TrainConfig {
+        num_topics: 20,
+        iterations: 8,
+        workers: 2,
+        shards: 2,
+        eval_every: 2,
+        checkpoint_dir: Some(ckpt.clone()),
+        transport: TransportMode::Connect(primary_addrs.clone()),
+        backups: backup_addrs,
+        heartbeat_ms: 100,
+        straggler_timeout_ms: 1500,
+        // The planned hand-off: once every partition has completed
+        // iteration 3, drain shard 0 onto its standby.
+        drain_shard_at: Some((3, 0)),
+        ..TrainConfig::default()
+    };
+    let coordinator = Coordinator::bind("127.0.0.1:0", cfg, corpus, CorpusSpec::Provided)?;
+    let join = coordinator.addr().to_string();
+    let coord = std::thread::spawn(move || coordinator.run());
+
+    println!("drain phase 2: workers join; shard 0 drains after iteration 3");
+    let mut workers = Vec::new();
+    for _ in 0..2 {
+        let opts = WorkerOptions {
+            join: join.clone(),
+            corpus: Some(corpus.clone()),
+            ..WorkerOptions::default()
+        };
+        workers.push(std::thread::spawn(move || run_worker(opts)));
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+
+    let outcome = coord.join().expect("coordinator thread")?;
+    for w in workers {
+        w.join().expect("worker thread")?;
+    }
+
+    println!(
+        "drain phase 3: {} hand-off(s), {} epoch roll(s), {} coordinator retry pause(s)",
+        outcome.shard_drains, outcome.epochs, outcome.ps_unavailable_retries
+    );
+    assert_eq!(outcome.shard_drains, 1, "the planned drain must complete");
+    assert_eq!(outcome.epochs, 0, "a planned drain must cost zero epoch rolls");
+    assert_eq!(outcome.promotions, 0, "no crash promotion may fire during a drain");
+    assert!(
+        outcome.ps_unavailable_retries < 500,
+        "drain hand-off caused an Unavailable storm ({} retry pauses)",
+        outcome.ps_unavailable_retries
+    );
+    assert_eq!(
+        outcome.model.n_k.iter().sum::<i64>(),
+        corpus.num_tokens() as i64,
+        "count table must cover every token exactly once"
+    );
+    let perplexity = outcome
+        .final_perplexity
+        .ok_or("no evaluation point produced a perplexity")?;
+    assert!(perplexity.is_finite() && perplexity > 1.0, "nonsense perplexity");
+    println!("  final training perplexity: {perplexity:.1}");
+
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let _ = std::fs::remove_dir_all(&wal);
+    println!("fault_tolerance (planned drain) OK");
     Ok(())
 }

@@ -158,6 +158,7 @@ struct PsHealth {
     dedup_evictions: u64,
     wal_bytes: u64,
     repl_lag: u64,
+    unavailable_retries: u64,
 }
 
 /// Membership state sampled when an iteration completes.
@@ -184,6 +185,13 @@ pub struct ClusterOutcome {
     pub reassignments: u32,
     /// Shard backups promoted to primary after a shard death.
     pub promotions: u32,
+    /// Standbys re-seeded behind a freshly promoted head (chain heals).
+    pub reseeds: u32,
+    /// Planned zero-roll shard hand-offs ([`Coordinator::drain_shard`]).
+    pub shard_drains: u32,
+    /// Total `Unavailable` retry pauses the coordinator's own PS client
+    /// sat through, summed over shards — the drain demo's no-storm gate.
+    pub ps_unavailable_retries: u64,
     /// Membership counters: rebalances, warm moves, drains, sheds.
     pub counters: Counters,
 }
@@ -196,8 +204,10 @@ pub struct Coordinator {
     cfg: TrainConfig,
     corpus_spec: CorpusSpec,
     shard_addrs: Vec<String>,
-    /// Backup replica addresses parallel to `shard_addrs` (empty =
-    /// unreplicated deployment).
+    /// Backup replica addresses, tier-major: `k * shards` entries
+    /// describe a chain of depth `k`, `backup_addrs[t*shards + s]`
+    /// being shard `s`'s tier-`t+1` replica (empty = unreplicated
+    /// deployment).
     backup_addrs: Vec<String>,
     vocab_size: u32,
     server: TcpServer,
@@ -212,6 +222,8 @@ pub struct Coordinator {
     /// Zero point for the relative millisecond clock membership sees.
     start: Instant,
     promotions: u32,
+    reseeds: u32,
+    shard_drains: u32,
     /// Count table fenced off by the last epoch roll, retired (deleted
     /// on the shards) at the *next* roll — the one-epoch grace lets
     /// mid-sweep pushes that still reference it land harmlessly.
@@ -268,9 +280,10 @@ impl Coordinator {
         let shard_addrs = addrs.clone();
         let resolved = resolve_addrs(&shard_addrs)?;
         let backup_addrs = cfg.backups.clone();
-        if !backup_addrs.is_empty() && backup_addrs.len() != shard_addrs.len() {
+        if !backup_addrs.is_empty() && backup_addrs.len() % shard_addrs.len() != 0 {
             return Err(Error::Config(format!(
-                "--backups needs one address per shard ({}), got {}",
+                "--backups needs whole tiers of {} address(es) (tier-major, one per \
+                 shard), got {}",
                 shard_addrs.len(),
                 backup_addrs.len()
             )));
@@ -326,6 +339,8 @@ impl Coordinator {
             membership,
             start: Instant::now(),
             promotions: 0,
+            reseeds: 0,
+            shard_drains: 0,
             fenced: None,
             last_probe: Instant::now(),
             agg: BTreeMap::new(),
@@ -379,6 +394,7 @@ impl Coordinator {
             self.maybe_shed();
             self.flush_admitted();
             self.probe_replicas();
+            self.maybe_drain_shard();
             if let Some(e) = self.fatal.take() {
                 self.answer_parked_done();
                 self.server.shutdown();
@@ -418,6 +434,11 @@ impl Coordinator {
             epochs: self.membership.epoch(),
             reassignments: self.membership.counters.reassignments as u32,
             promotions: self.promotions,
+            reseeds: self.reseeds,
+            shard_drains: self.shard_drains,
+            ps_unavailable_retries: (0..self.client.shards())
+                .map(|s| self.client.unavailable_retries(s))
+                .sum(),
             counters: self.membership.counters,
         })
     }
@@ -642,20 +663,24 @@ impl Coordinator {
         }
     }
 
-    /// Watch replicated shards for primary death. The detector is the
+    /// Watch replicated shards for head death. The detector is the
     /// client's own failover: `ShardInfo` rides the shard's route, so
-    /// an answer from an *un-promoted backup* (role 1) means the route
-    /// already abandoned an unresponsive primary. Recovery is then
-    /// promote → repoint the address future `JobSpec`s carry → roll the
-    /// epoch, so every partition re-pushes its checkpoint counts into a
-    /// fresh table on the survivor (healing the group-commit window and
-    /// any replication lag lost with the primary).
+    /// an answer from an *un-promoted backup* means the route already
+    /// abandoned an unresponsive head. Recovery walks the chain:
+    /// promote the first live standby (tier 1, or tier 2 if that too is
+    /// gone), repoint the address future `JobSpec`s carry, roll the
+    /// epoch (the head's un-replicated commit window died with it), and
+    /// then *re-seed* every remaining standby behind the new head so
+    /// the chain heals back toward full depth without pausing training.
+    /// A shard answering as a draining head is mid-planned-hand-off
+    /// ([`Coordinator::drain_shard`]) and is left alone.
     fn probe_replicas(&mut self) {
         if self.backup_addrs.is_empty() || self.last_probe.elapsed() < REPLICA_PROBE {
             return;
         }
         self.last_probe = Instant::now();
-        for s in 0..self.client.shards() {
+        let shards = self.client.shards();
+        for s in 0..shards {
             let info = match self.client.shard_info(s) {
                 Ok(info) => info,
                 Err(e) => {
@@ -666,16 +691,79 @@ impl Coordinator {
             if info.role != crate::ps::server::ROLE_BACKUP {
                 continue;
             }
-            log_warn!("shard {s}: primary presumed dead; promoting its backup");
-            match self.client.promote_backup(s) {
-                Ok(()) => {
-                    self.shard_addrs[s] = self.backup_addrs[s].clone();
-                    self.promotions += 1;
-                    self.roll_epoch();
+            log_warn!("shard {s}: head presumed dead; promoting along the chain");
+            let idx = match self.client.promote_backup(s) {
+                Ok(idx) => idx,
+                Err(e) => {
+                    log_warn!("promotion on shard {s}'s chain failed: {e}");
+                    continue;
                 }
-                Err(e) => log_warn!("promotion of shard {s}'s backup failed: {e}"),
+            };
+            // Route position idx is chain tier idx (tier-major list).
+            let head = self.backup_addrs[(idx - 1) * shards + s].clone();
+            self.shard_addrs[s] = head.clone();
+            self.promotions += 1;
+            self.roll_epoch();
+            self.reseed_standbys(s, idx, &head);
+        }
+    }
+
+    /// Re-attach every remaining standby on `shard`'s chain behind the
+    /// replica now serving at route position `head_idx` (listening on
+    /// `head`): each standby receives the head's newest snapshot slice
+    /// over `ReplSeed`, re-points its poller, and tails the head's log
+    /// from there — the chain heals mid-run, with no training pause.
+    fn reseed_standbys(&mut self, shard: usize, head_idx: usize, head: &str) {
+        for (idx, role) in self.client.replica_roles(shard).into_iter().enumerate() {
+            if idx == head_idx || role != Some(crate::ps::server::ROLE_BACKUP) {
+                continue;
+            }
+            match self.client.reseed_backup(shard, idx, head) {
+                Ok(()) => {
+                    self.reseeds += 1;
+                    log_info!("shard {shard}: standby {idx} re-seeded behind new head {head}");
+                }
+                Err(e) => log_warn!("shard {shard}: re-seed of standby {idx} failed: {e}"),
             }
         }
+    }
+
+    /// Fire the configured planned hand-off ([`TrainConfig::drain_shard_at`])
+    /// once the slowest partition has completed the trigger iteration.
+    /// One-shot: the knob is cleared after the first attempt, success or
+    /// not — `drain_shard` blocks up to the client's timeout waiting for
+    /// a standby to catch up, and retrying that every tick would stall
+    /// the control loop.
+    fn maybe_drain_shard(&mut self) {
+        let Some((after, shard)) = self.cfg.drain_shard_at else {
+            return;
+        };
+        if self.announced < after {
+            return;
+        }
+        self.cfg.drain_shard_at = None;
+        if let Err(e) = self.drain_shard(shard) {
+            log_warn!("planned drain of shard {shard} failed: {e}");
+        }
+    }
+
+    /// Planned zero-loss hand-off of `shard` to a standby (rolling
+    /// maintenance): drain the serving head — it freezes writes, fsyncs
+    /// and reports its committed tip — wait for a standby to replicate
+    /// through that tip, promote it, and repoint future `JobSpec`s.
+    /// Unlike crash recovery this needs **no epoch roll**: the tip
+    /// covers the entire commit window, so nothing acked is lost and
+    /// in-flight couriers simply retry their `Unavailable` answers onto
+    /// the new head. Returns the route position now serving the shard.
+    pub fn drain_shard(&mut self, shard: usize) -> Result<usize> {
+        let idx = self.client.drain_shard(shard)?;
+        if idx > 0 {
+            let shards = self.client.shards();
+            self.shard_addrs[shard] = self.backup_addrs[(idx - 1) * shards + shard].clone();
+        }
+        self.shard_drains += 1;
+        log_info!("shard {shard}: drained onto replica {idx} with zero epoch rolls");
+        Ok(idx)
     }
 
     /// Start a fresh epoch after a failure: new count table (fencing off
@@ -778,6 +866,9 @@ impl Coordinator {
                         dedup_evictions: infos.iter().map(|i| i.dedup_evictions).sum(),
                         wal_bytes: infos.iter().map(|i| i.wal_bytes).sum(),
                         repl_lag: infos.iter().map(|i| i.repl_lag).sum(),
+                        unavailable_retries: (0..self.client.shards())
+                            .map(|s| self.client.unavailable_retries(s))
+                            .sum(),
                     },
                 );
             }
@@ -821,7 +912,8 @@ impl Coordinator {
                     .set("ps_resident_bytes", h.bytes as f64)
                     .set("ps_dedup_evictions", h.dedup_evictions as f64)
                     .set("ps_wal_bytes", h.wal_bytes as f64)
-                    .set("ps_repl_lag", h.repl_lag as f64);
+                    .set("ps_repl_lag", h.repl_lag as f64)
+                    .set("ps_unavailable_retries", h.unavailable_retries as f64);
             }
             report.push(row);
         }

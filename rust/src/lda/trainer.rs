@@ -141,6 +141,12 @@ pub struct TrainConfig {
     /// `max_staleness = 0` the final count table is bit-identical for
     /// any membership history (the elasticity demo's exactness oracle).
     pub snapshot: bool,
+    /// Cluster mode: planned shard hand-off. Once every partition has
+    /// completed iteration `.0`, drain shard `.1` onto its most
+    /// caught-up standby — a zero-epoch-roll promotion (clients retarget
+    /// via the shared route; no rollback, no re-sampling). One-shot;
+    /// `None` disables.
+    pub drain_shard_at: Option<(u32, usize)>,
 }
 
 impl Default for TrainConfig {
@@ -170,6 +176,7 @@ impl Default for TrainConfig {
             shed_factor: 0.0,
             shed_stall_ms: 3000,
             snapshot: false,
+            drain_shard_at: None,
         }
     }
 }

@@ -31,6 +31,7 @@ use glint_lda::lda::infer::{FoldInBudget, InferConfig, InferEngine};
 use glint_lda::lda::sweep::SamplerParams;
 use glint_lda::lda::trainer::{TrainConfig, Trainer};
 use glint_lda::log_info;
+use glint_lda::net::chaos;
 use glint_lda::net::tcp::{resolve_addrs, TcpTransport};
 use glint_lda::ps::client::PsClient;
 use glint_lda::ps::config::{PsConfig, TransportMode};
@@ -45,6 +46,16 @@ use glint_lda::util::logger;
 const COMMON_USAGE: &str = "common options:
   --log LEVEL     error|warn|info|debug|trace (default info)
   --out PATH      write the mode's report CSV here (where applicable)
+
+chaos options (deterministic TCP fault injection, any networked mode):
+  --chaos-plan SPEC  inject faults on every client round-trip; SPEC is
+                     comma-separated key=value pairs: drop=F (request
+                     and reply), drop_req=F, drop_reply=F, dup=F,
+                     delay=DUR (e.g. 2ms), partition=LEN/EVERY
+                     (LEN consecutive sends black-holed out of EVERY)
+  --chaos-seed N     RNG seed for the plan; the same plan + seed
+                     replays a failure bit-exactly (default 1)
+                     (GLINT_CHAOS_PLAN / GLINT_CHAOS_SEED work too)
 
 corpus options (modes that read a corpus):
   --corpus PATH   corpus file (default: generate synthetic)
@@ -81,9 +92,11 @@ deployment options:
   --transport T     sim (in-process, default) | tcp (loopback TCP)
   --connect LIST    host:port,... of running `serve` shards
                     (wins over --transport)
-  --backups LIST    host:port,... of `serve --backup-of` replicas, one
-                    per shard and parallel to --connect; enables client
-                    failover when a primary dies
+  --backups LIST    host:port,... of `serve --backup-of` replicas in
+                    tier-major order (whole tiers of one address per
+                    shard; list two tiers for a chain of depth 2);
+                    enables client failover along the chain when the
+                    serving head dies
   --shutdown        stop the connected `serve` shards after training
 
 run options:
@@ -110,11 +123,24 @@ durability options:
                          (default 1048576)
 
 replication options:
-  --backup-of LIST  run every hosted shard as a *backup*: poll the
-                    primary at the corresponding address (indexed by
+  --backup-of LIST  run every hosted shard as a *standby*: poll the
+                    upstream at the corresponding address (indexed by
                     shard id) for committed WAL records and refuse
                     data ops until promoted. The list names ALL
-                    primaries in the deployment, shard order.
+                    upstreams in the deployment, shard order. Chains
+                    stack: every standby tier points at the serving
+                    head, and a coordinator re-points survivors
+                    (`ReplSeed`) when the head changes.
+
+admin options (one-shot against a running deployment, then exit):
+  --drain N         planned hand-off: freeze shard N's serving head,
+                    wait for a standby to replicate through its
+                    committed tip, promote it — zero epoch rolls,
+                    nothing acked is lost. Needs --connect with the
+                    serving heads and --backups with the standby list
+                    (tier-major, as given to `coordinate`)
+  --connect LIST    serving heads, shard order (with --drain)
+  --backups LIST    standby replicas, tier-major (with --drain)
 ";
 
 const SERVE_MODEL_USAGE: &str = "options:
@@ -151,10 +177,12 @@ examples:
 const COORDINATE_USAGE: &str = "train options apply (see `glint-lda help train`), plus:
   --bind ADDR           control-plane listen address (default 127.0.0.1:7600)
   --connect LIST        host:port,... of running `serve` shards (required)
-  --backups LIST        host:port,... of `serve --backup-of` replicas,
-                        one per shard and parallel to --connect; the
-                        coordinator promotes a backup when its primary
-                        dies and rolls the epoch to heal lost pushes
+  --backups LIST        host:port,... of `serve --backup-of` replicas in
+                        tier-major order (whole tiers of one address per
+                        shard); when a serving head dies the coordinator
+                        promotes along the chain, rolls the epoch to heal
+                        lost pushes, and re-seeds surviving standbys
+                        behind the new head
   --workers N           corpus partitions / expected `work` processes
   --checkpoint-dir D    per-partition checkpoints (enables failure recovery)
   --keep-checkpoints N  snapshots retained per partition (default 3)
@@ -173,6 +201,10 @@ const COORDINATE_USAGE: &str = "train options apply (see `glint-lda help train`)
   --shed-stall-ms N     minimum stall before shedding (default 3000)
   --snapshot            BSP sweeps behind a fetch barrier: bit-exact final
                         counts under any membership history
+  --drain-shard-at I:S  planned maintenance hand-off: once every
+                        partition has completed iteration I, drain
+                        shard S onto its most caught-up standby
+                        (zero epoch rolls; needs --backups)
 ";
 
 const WORK_USAGE: &str = "options:
@@ -346,6 +378,10 @@ fn main() {
         }
     };
     logger::set_level_str(&args.str_or("log", "info"));
+    if let Err(e) = install_chaos(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
     let code = match LAUNCHER.dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -354,6 +390,20 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Arm the deterministic TCP fault interposer before any mode dials a
+/// connection: `--chaos-plan`/`--chaos-seed` win; otherwise the
+/// `GLINT_CHAOS_*` environment (how CI legs and spawned demo processes
+/// inherit a plan) is consulted.
+fn install_chaos(args: &Args) -> Result<()> {
+    if let Some(spec) = args.get("chaos-plan") {
+        let plan = chaos::parse_plan(spec)?;
+        chaos::install(plan, args.get_as("chaos-seed", 1u64)?);
+    } else {
+        chaos::install_from_env();
+    }
+    Ok(())
 }
 
 fn load_or_generate(args: &Args) -> Result<Corpus> {
@@ -438,8 +488,22 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
         shed_factor: args.get_as("shed-factor", 0.0f64)?,
         shed_stall_ms: args.get_as("shed-stall-ms", 3000u64)?,
         snapshot: args.flag("snapshot"),
+        drain_shard_at: parse_drain_shard_at(args)?,
         ..TrainConfig::default()
     })
+}
+
+/// `--drain-shard-at ITER:SHARD` → [`TrainConfig::drain_shard_at`].
+fn parse_drain_shard_at(args: &Args) -> Result<Option<(u32, usize)>> {
+    let Some(spec) = args.get("drain-shard-at") else {
+        return Ok(None);
+    };
+    let bad = || Error::Config(format!("bad --drain-shard-at {spec:?} (want ITER:SHARD)"));
+    let (iter, shard) = spec.split_once(':').ok_or_else(bad)?;
+    Ok(Some((
+        iter.trim().parse::<u32>().map_err(|_| bad())?,
+        shard.trim().parse::<usize>().map_err(|_| bad())?,
+    )))
 }
 
 fn maybe_save(args: &Args, csv: String) -> Result<()> {
@@ -487,6 +551,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// multi-process deployment). Blocks until every hosted shard receives a
 /// `shutdown` request.
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(shard) = args.get("drain") {
+        let shard = shard
+            .parse::<usize>()
+            .map_err(|_| Error::Config(format!("bad --drain shard id {shard:?}")))?;
+        return cmd_serve_drain(args, shard);
+    }
     let binds = split_addr_list(&args.str_or("bind", "127.0.0.1:0"));
     let addrs = resolve_addrs(&binds)?;
     let first_shard = args.get_as("first-shard", 0usize)?;
@@ -517,6 +587,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     log_info!("serving; stop with `glint-lda shutdown --connect <addrs>`");
     server.join();
     log_info!("all hosted shards shut down");
+    Ok(())
+}
+
+/// `serve --drain N`: one-shot admin client for a planned shard
+/// hand-off. Freezes shard `N`'s serving head (it fsyncs and reports
+/// its committed tip), waits for the most caught-up standby to
+/// replicate through that tip, promotes it, and exits. No epoch roll:
+/// the tip covers the whole commit window, so nothing acked is lost.
+fn cmd_serve_drain(args: &Args, shard: usize) -> Result<()> {
+    let list = args
+        .get("connect")
+        .ok_or_else(|| Error::Config("--drain needs --connect with the serving heads".into()))?;
+    let heads = split_addr_list(list);
+    let resolved = resolve_addrs(&heads)?;
+    let mut cfg =
+        PsConfig::serving(resolved.len(), parse_scheme(args)?, TransportMode::Connect(heads));
+    cfg.backups = args.get("backups").map(split_addr_list).unwrap_or_default();
+    if cfg.backups.is_empty() {
+        return Err(Error::Config(
+            "--drain needs --backups with the standby replicas (tier-major)".into(),
+        ));
+    }
+    let transport = TcpTransport::connect(&resolved);
+    let client = PsClient::connect(&transport, cfg);
+    let idx = client.drain_shard(shard)?;
+    log_info!("shard {shard} drained onto replica {idx} with zero epoch rolls");
     Ok(())
 }
 

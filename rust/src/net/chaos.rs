@@ -1,0 +1,238 @@
+//! Deterministic network chaos for the TCP transport.
+//!
+//! The sim transport has always had seeded fault injection
+//! ([`super::FaultPlan`]); real multi-process deployments had none — a
+//! flaky cluster test over TCP was unreproducible by construction. This
+//! module closes that gap with an **in-process interposer**: once
+//! [`install`]ed, every [`super::tcp::TcpEndpoint`] round-trip in this
+//! process consults a process-global [`FaultPlan`] and a per-send
+//! counter-keyed RNG (the same forking scheme the sim transport uses), so
+//! requests are dropped, duplicated, delayed, or blackholed through
+//! partition windows *deterministically in the send ordering* for a given
+//! seed.
+//!
+//! Replay workflow: any test or demo that installs chaos logs a
+//! `chaos: plan=... seed=...` line up front. When a run fails, re-running
+//! with the same `--chaos-seed`/`--chaos-plan` (or
+//! `GLINT_CHAOS_SEED`/`GLINT_CHAOS_PLAN`) reproduces the same fault
+//! decisions at the same send offsets. Control-plane traffic sent through
+//! [`super::Endpoint::send_reliable`] bypasses the interposer, exactly as
+//! it bypasses the sim fault plan.
+
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+use crate::util::sync_shim::atomic::{AtomicU64, Ordering};
+
+use super::FaultPlan;
+
+/// Installed interposer state: the plan, the seed, and the send counter
+/// that keys each round-trip's fault decisions.
+struct ChaosState {
+    plan: FaultPlan,
+    seed: u64,
+    sends: AtomicU64,
+}
+
+static CHAOS: OnceLock<ChaosState> = OnceLock::new();
+
+/// Fault decisions for one TCP round-trip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Verdict {
+    /// Drop the request before it is written (the peer never sees it).
+    pub drop_request: bool,
+    /// Write the frame twice under distinct correlation ids (models a
+    /// retransmission racing a slow first delivery; the server processes
+    /// both, the client consumes one reply).
+    pub duplicate: bool,
+    /// Perform the round-trip but discard the reply (the dangerous case
+    /// for pushes: applied server-side, unacknowledged client-side).
+    pub drop_reply: bool,
+    /// Sleep this long before sending.
+    pub delay: Duration,
+}
+
+/// Install a process-global chaos plan for the TCP transport. Idempotent:
+/// the first install wins and later calls return `false` (so a test
+/// binary with several chaos tests cannot silently change plans
+/// mid-process). Logs the replay line.
+pub fn install(plan: FaultPlan, seed: u64) -> bool {
+    let installed = CHAOS
+        .set(ChaosState { plan: plan.clone(), seed, sends: AtomicU64::new(0) })
+        .is_ok();
+    if installed {
+        crate::log_info!("chaos: plan=[{}] seed={seed} (replay with --chaos-plan/--chaos-seed)",
+            format_plan(&plan));
+    }
+    installed
+}
+
+/// Install from `GLINT_CHAOS_PLAN` / `GLINT_CHAOS_SEED` when set.
+/// Returns whether an interposer is active after the call. A present
+/// plan with a missing seed defaults to seed `1`.
+pub fn install_from_env() -> bool {
+    let Ok(spec) = std::env::var("GLINT_CHAOS_PLAN") else {
+        return CHAOS.get().is_some();
+    };
+    let seed = std::env::var("GLINT_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(1);
+    match parse_plan(&spec) {
+        Ok(plan) => install(plan, seed),
+        Err(e) => {
+            crate::log_warn!("ignoring GLINT_CHAOS_PLAN: {e}");
+            CHAOS.get().is_some()
+        }
+    }
+}
+
+/// True when a chaos plan is installed in this process.
+pub fn active() -> bool {
+    CHAOS.get().is_some()
+}
+
+/// Fault decisions for the next TCP round-trip, or `None` when no chaos
+/// is installed (the common case: one branch, no RNG work).
+pub(crate) fn verdict() -> Option<Verdict> {
+    let state = CHAOS.get()?;
+    let n = state.sends.fetch_add(1, Ordering::Relaxed);
+    // Same per-send stream forking the sim transport uses, keyed off the
+    // installed seed so distinct seeds explore distinct fault schedules.
+    let mut rng = Pcg64::new(state.seed.wrapping_mul(0x9e37_79b9).wrapping_add(n) ^ 0xfa_175);
+    let plan = &state.plan;
+    Some(Verdict {
+        drop_request: plan.partitioned(n) || rng.bernoulli(plan.drop_request),
+        duplicate: rng.bernoulli(plan.duplicate),
+        drop_reply: rng.bernoulli(plan.drop_reply),
+        delay: plan.latency,
+    })
+}
+
+/// Parse a chaos plan spec: comma-separated `key=value` pairs.
+///
+/// Keys: `drop` (both directions), `drop_req`, `drop_reply`, `dup`
+/// (probabilities in `[0,1]`), `delay` (per-send latency, `2ms`/`1s`
+/// style), `partition` (`LEN/EVERY` — out of every `EVERY` sends the
+/// first `LEN` are blackholed). Example:
+/// `drop=0.05,dup=0.02,delay=1ms,partition=40/400`.
+pub fn parse_plan(spec: &str) -> Result<FaultPlan> {
+    let mut plan = FaultPlan::default();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (key, value) = part
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("chaos plan: {part:?} is not key=value")))?;
+        let bad = |what: &str| Error::Config(format!("chaos plan: bad {what} in {part:?}"));
+        match key {
+            "drop" => {
+                let p = parse_prob(value).ok_or_else(|| bad("probability"))?;
+                plan.drop_request = p;
+                plan.drop_reply = p;
+            }
+            "drop_req" => plan.drop_request = parse_prob(value).ok_or_else(|| bad("probability"))?,
+            "drop_reply" => plan.drop_reply = parse_prob(value).ok_or_else(|| bad("probability"))?,
+            "dup" => plan.duplicate = parse_prob(value).ok_or_else(|| bad("probability"))?,
+            "delay" => plan.latency = parse_duration(value).ok_or_else(|| bad("duration"))?,
+            "partition" => {
+                let (len, every) = value.split_once('/').ok_or_else(|| bad("LEN/EVERY"))?;
+                plan.partition_len = len.parse().map_err(|_| bad("LEN"))?;
+                plan.partition_every = every.parse().map_err(|_| bad("EVERY"))?;
+                if plan.partition_len > plan.partition_every {
+                    return Err(Error::Config(format!(
+                        "chaos plan: partition window {len} longer than its period {every}"
+                    )));
+                }
+            }
+            _ => return Err(Error::Config(format!("chaos plan: unknown key {key:?}"))),
+        }
+    }
+    Ok(plan)
+}
+
+/// Render a plan in the same `key=value` grammar [`parse_plan`] accepts,
+/// so the logged replay line can be pasted back into `--chaos-plan`.
+pub fn format_plan(plan: &FaultPlan) -> String {
+    let mut parts = Vec::new();
+    if plan.drop_request > 0.0 {
+        parts.push(format!("drop_req={}", plan.drop_request));
+    }
+    if plan.drop_reply > 0.0 {
+        parts.push(format!("drop_reply={}", plan.drop_reply));
+    }
+    if plan.duplicate > 0.0 {
+        parts.push(format!("dup={}", plan.duplicate));
+    }
+    if !plan.latency.is_zero() {
+        parts.push(format!("delay={}us", plan.latency.as_micros()));
+    }
+    if plan.partition_len > 0 {
+        parts.push(format!("partition={}/{}", plan.partition_len, plan.partition_every));
+    }
+    parts.join(",")
+}
+
+fn parse_prob(s: &str) -> Option<f64> {
+    let p = s.parse::<f64>().ok()?;
+    (0.0..=1.0).contains(&p).then_some(p)
+}
+
+/// Parse `10us` / `2ms` / `1s` / bare-milliseconds durations.
+pub fn parse_duration(s: &str) -> Option<Duration> {
+    let (digits, unit) = match s.find(|c: char| !c.is_ascii_digit()) {
+        Some(i) => s.split_at(i),
+        None => (s, "ms"),
+    };
+    let n = digits.parse::<u64>().ok()?;
+    match unit {
+        "us" => Some(Duration::from_micros(n)),
+        "ms" => Some(Duration::from_millis(n)),
+        "s" => Some(Duration::from_secs(n)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_specs_parse() {
+        let plan = parse_plan("drop=0.05,dup=0.02,delay=1ms,partition=40/400").unwrap();
+        assert_eq!(plan.drop_request, 0.05);
+        assert_eq!(plan.drop_reply, 0.05);
+        assert_eq!(plan.duplicate, 0.02);
+        assert_eq!(plan.latency, Duration::from_millis(1));
+        assert_eq!(plan.partition_len, 40);
+        assert_eq!(plan.partition_every, 400);
+
+        let plan = parse_plan("drop_req=1,drop_reply=0").unwrap();
+        assert_eq!(plan.drop_request, 1.0);
+        assert_eq!(plan.drop_reply, 0.0);
+
+        assert!(parse_plan("drop=2").is_err());
+        assert!(parse_plan("drop").is_err());
+        assert!(parse_plan("partition=400/40").is_err());
+        assert!(parse_plan("warp=0.5").is_err());
+    }
+
+    #[test]
+    fn plans_roundtrip_through_format() {
+        for spec in ["drop_req=0.1,dup=0.05", "delay=1500us,partition=8/64", ""] {
+            let plan = parse_plan(spec).unwrap();
+            let reparsed = parse_plan(&format_plan(&plan)).unwrap();
+            assert_eq!(format!("{plan:?}"), format!("{reparsed:?}"));
+        }
+    }
+
+    #[test]
+    fn durations_parse() {
+        assert_eq!(parse_duration("10us"), Some(Duration::from_micros(10)));
+        assert_eq!(parse_duration("2ms"), Some(Duration::from_millis(2)));
+        assert_eq!(parse_duration("1s"), Some(Duration::from_secs(1)));
+        assert_eq!(parse_duration("7"), Some(Duration::from_millis(7)));
+        assert_eq!(parse_duration("7min"), None);
+        assert_eq!(parse_duration(""), None);
+    }
+}

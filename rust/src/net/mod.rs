@@ -9,8 +9,9 @@
 //!
 //! - [`SimTransport`] — in-process delivery to shard inboxes with
 //!   configurable fault injection ([`FaultPlan`]): dropped requests,
-//!   dropped replies, duplicated deliveries, added latency. The protocol
-//!   test bed.
+//!   dropped replies, duplicated deliveries, added latency, periodic
+//!   partition windows. The protocol test bed. The same plan drives the
+//!   TCP path through the [`chaos`] interposer.
 //! - [`tcp::TcpTransport`] — real TCP with correlation-tagged,
 //!   length-prefixed frames ([`frame`]): one multiplexed connection per
 //!   shard carries any number of concurrently outstanding requests, with
@@ -24,6 +25,7 @@
 //! reasons about ~2 MB push messages and shuffle-write volumes) and the
 //! two transports are wire-compatible.
 
+pub mod chaos;
 pub mod frame;
 pub mod infer;
 pub mod stats;
@@ -66,6 +68,13 @@ pub struct FaultPlan {
     pub duplicate: f64,
     /// Artificial one-way latency added to each delivery.
     pub latency: Duration,
+    /// Periodic partition: out of every `partition_every` sends, the
+    /// first `partition_len` are blackholed (request dropped before
+    /// delivery). `0` disables. Deterministic in the send counter, so a
+    /// partition window replays bit-exactly from the transport seed.
+    pub partition_every: u64,
+    /// Length of each partition window in sends (see `partition_every`).
+    pub partition_len: u64,
 }
 
 impl Default for FaultPlan {
@@ -75,6 +84,8 @@ impl Default for FaultPlan {
             drop_reply: 0.0,
             duplicate: 0.0,
             latency: Duration::ZERO,
+            partition_every: 0,
+            partition_len: 0,
         }
     }
 }
@@ -91,7 +102,7 @@ impl FaultPlan {
             drop_request: drop,
             drop_reply: drop,
             duplicate,
-            latency: Duration::ZERO,
+            ..FaultPlan::default()
         }
     }
 
@@ -101,6 +112,14 @@ impl FaultPlan {
             && self.drop_reply == 0.0
             && self.duplicate == 0.0
             && self.latency.is_zero()
+            && self.partition_len == 0
+    }
+
+    /// True when send number `n` falls inside a partition window.
+    pub fn partitioned(&self, n: u64) -> bool {
+        self.partition_every > 0
+            && self.partition_len > 0
+            && n % self.partition_every < self.partition_len
     }
 }
 
@@ -151,13 +170,17 @@ impl SimEndpoint {
     /// for the reply (which may never arrive).
     fn send(&self, payload: Vec<u8>, stats: &EndpointStats) -> Receiver<Vec<u8>> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(2);
-        let mut rng = self.fork_rng();
+        // Each send gets a fresh deterministic stream keyed by the send
+        // counter: fault decisions are reproducible for a given transport
+        // seed and send ordering.
+        let n = self.seed.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Pcg64::new(n ^ 0xfa_175);
         stats.record_request(payload.len());
 
         if !self.plan.latency.is_zero() {
             std::thread::sleep(self.plan.latency);
         }
-        if rng.bernoulli(self.plan.drop_request) {
+        if self.plan.partitioned(n) || rng.bernoulli(self.plan.drop_request) {
             stats.record_dropped_request();
             return reply_rx; // envelope never delivered
         }
@@ -176,13 +199,6 @@ impl SimEndpoint {
             let _ = self.tx.send(Envelope { payload, reply: None });
         }
         reply_rx
-    }
-
-    fn fork_rng(&self) -> Pcg64 {
-        // Each send gets a fresh deterministic stream: fault decisions are
-        // reproducible for a given transport seed and send ordering.
-        let n = self.seed.fetch_add(1, Ordering::Relaxed);
-        Pcg64::new(n ^ 0xfa_175)
     }
 }
 
@@ -232,9 +248,9 @@ impl Endpoint {
                 }
                 reply_rx.recv_timeout(timeout).map_err(|_| ())
             }
-            // TCP has no fault injection to bypass; an ordinary
-            // round-trip (uncounted — operator traffic) is the same.
-            EndpointInner::Tcp(ep) => ep.roundtrip(&payload, timeout),
+            // Operator traffic skips the chaos interposer (uncounted),
+            // exactly as the sim arm skips the fault plan.
+            EndpointInner::Tcp(ep) => ep.roundtrip_inner(&payload, timeout, false),
         }
     }
 }
@@ -245,6 +261,13 @@ pub struct Inbox {
 }
 
 impl Inbox {
+    /// Build an inbox over a fresh channel, returning the sending half.
+    /// Test and model harnesses use this to drive a serve loop directly.
+    pub fn channel() -> (mpsc::Sender<Envelope>, Inbox) {
+        let (tx, rx) = mpsc::channel();
+        (tx, Inbox { rx })
+    }
+
     /// Block for the next envelope; `None` when all senders are gone.
     pub fn recv(&self) -> Option<Envelope> {
         self.rx.recv().ok()
@@ -412,5 +435,30 @@ mod tests {
         assert!(!FaultPlan::lossy(0.1, 0.0).is_reliable());
         assert!(!FaultPlan { latency: Duration::from_millis(1), ..FaultPlan::default() }
             .is_reliable());
+        assert!(!FaultPlan { partition_every: 8, partition_len: 2, ..FaultPlan::default() }
+            .is_reliable());
+    }
+
+    #[test]
+    fn partition_windows_blackhole_deterministically() {
+        let plan = FaultPlan { partition_every: 4, partition_len: 2, ..FaultPlan::default() };
+        // Window shape is a pure function of the send counter.
+        assert!(plan.partitioned(0));
+        assert!(plan.partitioned(1));
+        assert!(!plan.partitioned(2));
+        assert!(!plan.partitioned(3));
+        assert!(plan.partitioned(4));
+
+        let (net, mut inboxes) = SimTransport::new(1, plan, 7);
+        let h = spawn_echo(inboxes.remove(0));
+        let ep = net.endpoint(0);
+        let mut outcomes = Vec::new();
+        for i in 0..8u32 {
+            outcomes.push(ep.request(vec![i as u8], Duration::from_millis(20)).is_ok());
+        }
+        assert_eq!(outcomes, vec![false, false, true, true, false, false, true, true]);
+        drop(net);
+        drop(ep);
+        assert_eq!(h.join().unwrap(), 4);
     }
 }

@@ -348,12 +348,43 @@ impl TcpEndpoint {
     }
 
     /// One request/reply round-trip bounded by `timeout` as a whole-call
-    /// deadline, multiplexed over the shared connection: any number of
-    /// round-trips may be outstanding concurrently.
+    /// deadline, subject to the process-global chaos interposer when one
+    /// is installed ([`super::chaos`]): the data path every retryable
+    /// request takes.
     pub(crate) fn roundtrip(
         &self,
         payload: &[u8],
         timeout: Duration,
+    ) -> std::result::Result<Vec<u8>, ()> {
+        let Some(v) = super::chaos::verdict() else {
+            return self.roundtrip_inner(payload, timeout, false);
+        };
+        if !v.delay.is_zero() {
+            std::thread::sleep(v.delay);
+        }
+        if v.drop_request {
+            // Lost before the wire: indistinguishable from a dead peer.
+            return Err(());
+        }
+        let reply = self.roundtrip_inner(payload, timeout, v.duplicate);
+        if v.drop_reply {
+            // The server processed the request (and any duplicate); the
+            // client just never hears back — the dangerous case the
+            // exactly-once push hand-shake exists for.
+            return Err(());
+        }
+        reply
+    }
+
+    /// Chaos-free round-trip, multiplexed over the shared connection: any
+    /// number may be outstanding concurrently. With `duplicate`, the
+    /// frame is written twice under distinct correlation ids — the
+    /// second reply finds no waiter and is dropped by the mux reader.
+    pub(crate) fn roundtrip_inner(
+        &self,
+        payload: &[u8],
+        timeout: Duration,
+        duplicate: bool,
     ) -> std::result::Result<Vec<u8>, ()> {
         // Duration::ZERO means "no timeout" to the socket API; never pass
         // it through.
@@ -385,6 +416,13 @@ impl TcpEndpoint {
                 conn.pending.remove(corr);
                 self.discard(&conn);
                 return Err(());
+            }
+            if duplicate {
+                // Chaos retransmission: a second frame under its own
+                // (unregistered) correlation id. The server processes it;
+                // its reply matches no waiter and is dropped.
+                let dup_corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
+                let _ = write_tagged_frame(&mut *stream, dup_corr, payload);
             }
         }
         match reply_rx.recv_timeout(remaining(deadline).max(Duration::from_millis(1))) {

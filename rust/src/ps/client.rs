@@ -52,20 +52,25 @@
 //!
 //! # Replica failover
 //!
-//! When [`PsConfig::backups`] lists one backup address per shard, each
-//! shard's requests travel through a shared route: deliveries go to the
-//! route's *active* replica, and after `FAILOVER_AFTER` consecutive
-//! failures (timeouts, or `Unavailable` answers from an un-promoted
-//! backup) the route advances to the next replica and keeps retrying
-//! there. The route is shared by every clone of the client, so one
-//! courier discovering a dead primary moves the whole client. The
-//! cluster coordinator completes the switch by promoting the backup
-//! ([`PsClient::promote_backup`]), after which it serves reads and
-//! writes through the same exactly-once machinery.
+//! When [`PsConfig::backups`] lists `k * shards` backup addresses
+//! (tier-major), each shard's requests travel through a shared route
+//! `[primary, tier1, ..., tierk]`: deliveries go to the route's
+//! *active* replica, and after [`PsConfig::failover_after`]
+//! consecutive failures (timeouts, or `Unavailable` answers from a
+//! gated replica) the route advances to the next one and keeps
+//! retrying there, with `Unavailable` retries paced by a jittered
+//! [`PsConfig::unavailable_pause`]. The route is shared by every clone
+//! of the client, so one courier discovering a dead primary moves the
+//! whole client. The cluster coordinator completes the switch by
+//! promoting the first live backup on the chain
+//! ([`PsClient::promote_backup`]), can attach a fresh standby behind
+//! the new head mid-run ([`PsClient::reseed_backup`]), and can retire
+//! a healthy head without losing its commit window
+//! ([`PsClient::drain_shard`]).
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -131,32 +136,42 @@ impl Element for f32 {
 /// An asynchronous operation executed on a shard dispatcher worker.
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Consecutive delivery failures against a shard's active replica
-/// before its route advances to the next one.
-const FAILOVER_AFTER: usize = 3;
-
-/// Longest pause after an `Unavailable` answer before retrying: the
-/// replica is alive but gated (an un-promoted backup), so burning the
-/// full back-off ladder on it would only delay the coordinator's
-/// promotion from taking effect.
-const UNAVAILABLE_PAUSE: Duration = Duration::from_millis(100);
-
-/// One shard's replica set: the primary endpoint first, then any
-/// backups. Requests go to the `active` replica; repeated failures
-/// advance it (round-robin). Shared — via `Arc` — by every courier and
-/// clone of the client, so whichever courier trips the threshold fails
-/// the whole client over at once.
+/// One shard's replica set: the primary endpoint first, then the
+/// replica chain tier by tier. Requests go to the `active` replica;
+/// repeated failures advance it (round-robin). Shared — via `Arc` — by
+/// every courier and clone of the client, so whichever courier trips
+/// the threshold fails the whole client over at once.
 struct ShardRoute {
     eps: Vec<Endpoint>,
     active: AtomicUsize,
     /// Consecutive failures against the active replica.
     fails: AtomicUsize,
+    /// Consecutive-failure threshold before the route advances
+    /// ([`PsConfig::failover_after`]).
+    failover_after: usize,
+    /// Resolved seed of this route's retry-pause jitter stream.
+    jitter_seed: u64,
+    /// Jitter draws so far — each draw forks its own stream off the
+    /// seed, so the sequence is deterministic yet never repeats.
+    jitter_draws: AtomicU64,
+    /// Retries provoked by `Unavailable` answers (gated replicas).
+    /// Drain and promotion demos assert this stays bounded — a planned
+    /// hand-off must not degenerate into a retry storm.
+    unavailable_retries: AtomicU64,
 }
 
 impl ShardRoute {
-    fn new(eps: Vec<Endpoint>) -> ShardRoute {
+    fn new(eps: Vec<Endpoint>, failover_after: usize, jitter_seed: u64) -> ShardRoute {
         assert!(!eps.is_empty());
-        ShardRoute { eps, active: AtomicUsize::new(0), fails: AtomicUsize::new(0) }
+        ShardRoute {
+            eps,
+            active: AtomicUsize::new(0),
+            fails: AtomicUsize::new(0),
+            failover_after: failover_after.max(1),
+            jitter_seed,
+            jitter_draws: AtomicU64::new(0),
+            unavailable_retries: AtomicU64::new(0),
+        }
     }
 
     /// Index of the replica currently serving this shard.
@@ -175,13 +190,13 @@ impl ShardRoute {
     }
 
     /// A delivery failed (timeout or gated replica). After
-    /// [`FAILOVER_AFTER`] consecutive failures the route advances to
+    /// `failover_after` consecutive failures the route advances to
     /// the next replica; with a single replica there is nowhere to go.
     fn record_failure(&self, shard: usize) {
         if self.eps.len() < 2 {
             return;
         }
-        if self.fails.fetch_add(1, Ordering::Relaxed) + 1 < FAILOVER_AFTER {
+        if self.fails.fetch_add(1, Ordering::Relaxed) + 1 < self.failover_after {
             return;
         }
         self.fails.store(0, Ordering::Relaxed);
@@ -198,6 +213,27 @@ impl ShardRoute {
     fn force(&self, idx: usize) {
         self.fails.store(0, Ordering::Relaxed);
         self.active.store(idx % self.eps.len(), Ordering::Relaxed);
+    }
+
+    /// Jittered pause in `[base/2, 3*base/2)` before retrying a gated
+    /// replica, counting the retry. Burning the full back-off ladder on
+    /// an alive-but-gated replica would only delay a promotion from
+    /// taking effect; retrying on a fixed pause would stampede it in
+    /// lockstep across a fleet of couriers. Deterministic per route for
+    /// a fixed [`PsConfig::retry_jitter_seed`].
+    fn unavailable_pause(&self, base: Duration) -> Duration {
+        self.unavailable_retries.fetch_add(1, Ordering::Relaxed);
+        let n = self.jitter_draws.fetch_add(1, Ordering::Relaxed);
+        let mut rng = crate::util::rng::Pcg64::new(
+            self.jitter_seed.wrapping_mul(0x9e37_79b9).wrapping_add(n),
+        );
+        let us = base.as_micros().max(1) as u64;
+        Duration::from_micros(us / 2 + rng.next_u64() % us)
+    }
+
+    /// Retries provoked by `Unavailable` answers on this route so far.
+    fn unavailable_retry_count(&self) -> u64 {
+        self.unavailable_retries.load(Ordering::Relaxed)
     }
 }
 
@@ -234,6 +270,8 @@ impl Courier {
             Request::ReplPoll { .. } => "repl-poll",
             Request::Promote => "promote",
             Request::ReplApply { .. } => "repl-apply",
+            Request::ReplSeed { .. } => "repl-seed",
+            Request::Drain => "drain",
             Request::Shutdown => "shutdown",
         };
         for attempt in 0..self.config.max_retries {
@@ -247,11 +285,15 @@ impl Courier {
                         return Err(Error::PsRejected(msg));
                     }
                     Response::Unavailable(_) => {
-                        // Alive but gated (un-promoted backup): counts
-                        // toward failover, retried after a short pause
-                        // rather than the full back-off step.
+                        // Alive but gated (un-promoted backup, draining
+                        // head): counts toward failover, retried after a
+                        // short jittered pause rather than the full
+                        // back-off step.
                         self.route.record_failure(self.shard);
-                        std::thread::sleep(timeout.min(UNAVAILABLE_PAUSE));
+                        std::thread::sleep(
+                            self.route
+                                .unavailable_pause(timeout.min(self.config.unavailable_pause)),
+                        );
                     }
                     resp => {
                         self.route.record_success();
@@ -471,18 +513,20 @@ impl PsClient {
             .unwrap_or(0)
             ^ std::process::id().rotate_left(16);
         let endpoints = transport.endpoints();
-        // One backup endpoint per shard when configured: the route then
-        // holds [primary, backup] and fails over between them.
+        // Backup endpoints when configured: `k * shards` addresses
+        // describe a chain of depth `k` (tier-major), so shard `s`'s
+        // failover route becomes [primary, tier1, ..., tierk].
         let backup_eps: Option<Vec<Endpoint>> = if config.backups.is_empty() {
             None
         } else {
             match crate::net::tcp::resolve_addrs(&config.backups) {
-                Ok(addrs) if addrs.len() == endpoints.len() => {
+                Ok(addrs) if !addrs.is_empty() && addrs.len() % endpoints.len() == 0 => {
                     Some(crate::net::tcp::TcpTransport::connect(&addrs).endpoints())
                 }
                 Ok(addrs) => {
                     crate::log_warn!(
-                        "ignoring backups: {} address(es) for {} shard(s)",
+                        "ignoring backups: {} address(es) is not a whole number of \
+                         {}-shard tiers",
                         addrs.len(),
                         endpoints.len()
                     );
@@ -494,15 +538,28 @@ impl PsClient {
                 }
             }
         };
+        // Resolve the jitter seed once: 0 requests per-process entropy
+        // (reusing the matrix-id base), anything else is deterministic.
+        let jitter_seed = match config.retry_jitter_seed {
+            0 => u64::from(base) | 1,
+            s => s,
+        };
+        let shard_count = endpoints.len();
         let routes: Vec<Arc<ShardRoute>> = endpoints
             .into_iter()
             .enumerate()
             .map(|(s, ep)| {
                 let mut eps = vec![ep];
                 if let Some(backups) = &backup_eps {
-                    eps.push(backups[s].clone());
+                    for tier in 0..backups.len() / shard_count {
+                        eps.push(backups[tier * shard_count + s].clone());
+                    }
                 }
-                Arc::new(ShardRoute::new(eps))
+                Arc::new(ShardRoute::new(
+                    eps,
+                    config.failover_after,
+                    jitter_seed ^ ((s as u64) << 32),
+                ))
             })
             .collect();
         let depth = config.pipeline_depth.max(1);
@@ -753,30 +810,176 @@ impl PsClient {
         }
     }
 
-    /// Promote `shard`'s backup replica to serve reads and writes, then
-    /// pin this client's route to it. The failure-detection path is the
+    /// A courier pinned to replica `idx` of `shard`'s route alone: the
+    /// shared route may still point at a dead or gated replica, and
+    /// chain surgery must address a specific position regardless.
+    fn pinned_courier(&self, shard: usize, idx: usize) -> Courier {
+        let route = &self.routes[shard];
+        Courier {
+            route: Arc::new(ShardRoute::new(
+                vec![route.eps[idx].clone()],
+                self.config.failover_after,
+                route.jitter_seed,
+            )),
+            shard,
+            config: self.config.clone(),
+        }
+    }
+
+    /// Short `ShardInfo` probe straight at replica `idx` of `shard`'s
+    /// route, bypassing the shared route and the full retry ladder.
+    /// Returns `(role, repl_applied)` or `None` when unreachable.
+    fn probe_replica(&self, shard: usize, idx: usize) -> Option<(u8, u64)> {
+        let ep = &self.routes[shard].eps[idx];
+        let payload = Request::ShardInfo.encode();
+        for attempt in 0..3u32 {
+            let timeout = self.config.timeout_for_attempt(attempt);
+            if let Ok(bytes) = ep.request(payload.clone(), timeout) {
+                if let Ok(Response::Info { role, repl_applied, .. }) = Response::decode(&bytes) {
+                    return Some((role, repl_applied));
+                }
+            }
+        }
+        None
+    }
+
+    /// Promote a standby on `shard`'s failover route to serve reads and
+    /// writes, then pin this client's route to it; returns the route
+    /// index now serving the shard. Walks the replica chain head-ward:
+    /// the first live un-promoted backup (tier 1, or tier 2 if that
+    /// too is gone) is promoted, and a replica that already promoted
+    /// itself is adopted as-is. The failure-detection path is the
     /// route's automatic failover; this is the *recovery* path a
-    /// coordinator drives once it decides the primary is gone.
-    pub fn promote_backup(&self, shard: usize) -> Result<()> {
+    /// coordinator drives once it decides the head is gone.
+    pub fn promote_backup(&self, shard: usize) -> Result<usize> {
         let route = &self.routes[shard];
         if route.eps.len() < 2 {
             return Err(Error::Config(format!("shard {shard} has no backup replica configured")));
         }
-        let backup = route.eps.len() - 1;
-        // A courier pinned to the backup alone: the shared route may
-        // still point at the dead primary.
-        let pinned = Courier {
-            route: Arc::new(ShardRoute::new(vec![route.eps[backup].clone()])),
-            shard,
-            config: self.config.clone(),
-        };
-        match pinned.request_retry(&Request::Promote)? {
-            Response::Ok => {
-                route.force(backup);
-                Ok(())
+        for idx in 1..route.eps.len() {
+            let Some((role, _)) = self.probe_replica(shard, idx) else {
+                continue; // dead — walk further down the chain
+            };
+            if role == crate::ps::server::ROLE_PROMOTED {
+                route.force(idx);
+                return Ok(idx);
             }
-            r => Err(Error::Decode(format!("unexpected promote response {r:?}"))),
+            if role != crate::ps::server::ROLE_BACKUP {
+                continue;
+            }
+            let pinned = self.pinned_courier(shard, idx);
+            return match pinned.request_retry(&Request::Promote)? {
+                Response::Ok => {
+                    route.force(idx);
+                    Ok(idx)
+                }
+                r => Err(Error::Decode(format!("unexpected promote response {r:?}"))),
+            };
         }
+        Err(Error::Config(format!("shard {shard}: no live backup replica to promote")))
+    }
+
+    /// Rebuild the standby at route position `replica` from whichever
+    /// replica currently serves `shard`, and re-point its poller at
+    /// `upstream` (the serving head's listen address) — how a chain
+    /// heals after a promotion consumed its tier-1: the promoted head
+    /// keeps serving while the stale standby is re-seeded behind it.
+    /// The seed ships the head's newest snapshot slice; the standby
+    /// tails the remaining log through its normal poll loop and its
+    /// `repl_lag` converges without any training pause.
+    pub fn reseed_backup(&self, shard: usize, replica: usize, upstream: &str) -> Result<()> {
+        let route = &self.routes[shard];
+        if replica == 0 || replica >= route.eps.len() {
+            return Err(Error::Config(format!(
+                "shard {shard} has no replica {replica} to re-seed"
+            )));
+        }
+        // The head's snapshot slice (a compacted head answers with its
+        // snapshot; an uncompacted one streams from sequence 1 — either
+        // way the seed rebuilds the standby from nothing).
+        let (tip, records) = match self.request_retry(shard, &Request::ReplPoll { from: 1 })? {
+            Response::ReplBatch { tip, records, .. } => (tip, records),
+            r => return Err(Error::Decode(format!("unexpected repl-poll response {r:?}"))),
+        };
+        let pinned = self.pinned_courier(shard, replica);
+        let seed = Request::ReplSeed { upstream: upstream.to_string(), tip, records };
+        match pinned.request_retry(&seed)? {
+            Response::Ok => Ok(()),
+            r => Err(Error::Decode(format!("unexpected repl-seed response {r:?}"))),
+        }
+    }
+
+    /// Planned hand-off of `shard` to a standby with zero data loss:
+    /// drain the serving head (it freezes writes, fsyncs, and reports
+    /// its committed tip), wait for a standby to replicate through that
+    /// tip, promote it, and pin the route; returns the new serving
+    /// route index. Because the tip covers the entire commit window,
+    /// nothing is lost and the caller needs no epoch roll — in-flight
+    /// couriers just retry their `Unavailable` answers onto the new
+    /// head.
+    pub fn drain_shard(&self, shard: usize) -> Result<usize> {
+        let route = &self.routes[shard];
+        if route.eps.len() < 2 {
+            return Err(Error::Config(format!(
+                "shard {shard} has no standby to drain onto"
+            )));
+        }
+        let tip = match self.request_retry(shard, &Request::Drain)? {
+            Response::Drained { tip } => tip,
+            r => return Err(Error::Decode(format!("unexpected drain response {r:?}"))),
+        };
+        let drained = route.active();
+        let deadline = Instant::now() + self.config.max_timeout;
+        loop {
+            // The most caught-up live standby (any position except the
+            // drained head; dead or non-backup replicas are skipped).
+            let mut best: Option<(usize, u64)> = None;
+            for idx in (0..route.eps.len()).filter(|&i| i != drained) {
+                if let Some((role, applied)) = self.probe_replica(shard, idx) {
+                    if role == crate::ps::server::ROLE_BACKUP
+                        && best.map_or(true, |(_, a)| applied > a)
+                    {
+                        best = Some((idx, applied));
+                    }
+                }
+            }
+            match best {
+                Some((idx, applied)) if applied >= tip => {
+                    let pinned = self.pinned_courier(shard, idx);
+                    return match pinned.request_retry(&Request::Promote)? {
+                        Response::Ok => {
+                            route.force(idx);
+                            Ok(idx)
+                        }
+                        r => Err(Error::Decode(format!("unexpected promote response {r:?}"))),
+                    };
+                }
+                _ if Instant::now() >= deadline => {
+                    return Err(Error::Config(format!(
+                        "shard {shard}: no standby reached the drain tip {tip} within {:?}",
+                        self.config.max_timeout
+                    )));
+                }
+                // The tip is at most one commit window away; re-probe
+                // on a short cadence rather than the retry ladder.
+                _ => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    }
+
+    /// Role of every replica on `shard`'s route, by route position
+    /// (`None` = unreachable) — chain-health introspection for
+    /// coordinators deciding which standbys need a re-seed.
+    pub fn replica_roles(&self, shard: usize) -> Vec<Option<u8>> {
+        (0..self.routes[shard].eps.len())
+            .map(|idx| self.probe_replica(shard, idx).map(|(role, _)| role))
+            .collect()
+    }
+
+    /// Retries provoked by `Unavailable` answers on `shard`'s route
+    /// since connect — the counter drain demos assert stays bounded.
+    pub fn unavailable_retries(&self, shard: usize) -> u64 {
+        self.routes[shard].unavailable_retry_count()
     }
 
     /// Verify this client's deployment view against what every shard
@@ -833,7 +1036,8 @@ pub struct ShardInfo {
     /// their `Forget` arrived (abandoned hand-shakes).
     pub dedup_evictions: u64,
     /// Replication role: 0 = primary, 1 = un-promoted backup,
-    /// 2 = promoted backup (see `crate::ps::server::ROLE_PRIMARY` etc.).
+    /// 2 = promoted backup, 3 = draining head (see
+    /// `crate::ps::server::ROLE_PRIMARY` etc.).
     pub role: u8,
     /// Records appended to the shard's write-ahead log (0 without one).
     pub wal_records: u64,
@@ -1794,6 +1998,24 @@ mod tests {
         assert!(m.pull_sparse_rows(&[5]).is_err());
         assert!(m.pull_topk(&[99], 3).is_err());
         assert_eq!(m.pull_sparse_rows(&[]).unwrap(), Vec::<Vec<(u32, i64)>>::new());
+    }
+
+    #[test]
+    fn unavailable_pause_is_jittered_and_deterministic() {
+        let (_g, client) = setup(1, FaultPlan::reliable());
+        let ep = client.routes[0].eps[0].clone();
+        let base = Duration::from_millis(100);
+        let route = ShardRoute::new(vec![ep.clone()], 3, 42);
+        let draws: Vec<Duration> = (0..32).map(|_| route.unavailable_pause(base)).collect();
+        for d in &draws {
+            assert!(*d >= base / 2 && *d < base * 3 / 2, "{d:?} outside jitter band");
+        }
+        assert!(draws.windows(2).any(|w| w[0] != w[1]), "jitter must vary across draws");
+        assert_eq!(route.unavailable_retry_count(), 32);
+        // Same seed, same sequence: replayable retry schedules.
+        let route2 = ShardRoute::new(vec![ep], 3, 42);
+        let draws2: Vec<Duration> = (0..32).map(|_| route2.unavailable_pause(base)).collect();
+        assert_eq!(draws, draws2);
     }
 
     #[test]

@@ -84,15 +84,32 @@ pub struct PsConfig {
     /// WAL: sealed log segments that trigger folding the shard state
     /// into a snapshot segment (reclaiming deleted matrices' bytes).
     pub wal_compact_after: usize,
-    /// Replication (client side): backup addresses, one per shard and
-    /// parallel to a `Connect` transport's primaries. The client fails
-    /// over to `backups[s]` after repeated failures against shard `s`.
+    /// Replication (client side): backup addresses, tier-major and
+    /// parallel to a `Connect` transport's primaries — `k * shards`
+    /// entries describe a chain of depth `k` (`backups[t*shards + s]`
+    /// is shard `s`'s tier-`t+1` replica). Shard `s`'s failover route
+    /// becomes `[primary, tier1, ..., tierk]` and the client walks it
+    /// head-ward after repeated failures.
     pub backups: Vec<String>,
     /// Replication (server side): when set, every shard this server
-    /// hosts runs as a *backup*, polling the corresponding primary
+    /// hosts runs as a *backup*, polling the corresponding upstream
     /// address (indexed by shard id) for committed WAL records and
-    /// refusing data ops until promoted.
+    /// refusing data ops until promoted. In a chain every tier tails
+    /// the current head; a `ReplSeed` re-points a replica at a new
+    /// upstream mid-run.
     pub backup_of: Option<Vec<String>>,
+    /// Consecutive per-shard failures before the client's courier
+    /// advances to the next replica on the shard's failover route.
+    pub failover_after: usize,
+    /// Base pause before retrying a [`Response::Unavailable`] reply
+    /// (an un-promoted or draining replica). The actual pause is
+    /// jittered to `[pause/2, 3*pause/2)` so a fleet of clients does
+    /// not re-stampede a promoting backup in lockstep.
+    pub unavailable_pause: Duration,
+    /// Seed for the retry-pause jitter stream. `0` (the default) mixes
+    /// in per-process entropy; any other value makes the jitter
+    /// sequence deterministic for replayable tests.
+    pub retry_jitter_seed: u64,
 }
 
 impl Default for PsConfig {
@@ -114,6 +131,9 @@ impl Default for PsConfig {
             wal_compact_after: 4,
             backups: Vec::new(),
             backup_of: None,
+            failover_after: 3,
+            unavailable_pause: Duration::from_millis(100),
+            retry_jitter_seed: 0,
         }
     }
 }

@@ -313,13 +313,21 @@ pub enum Request {
         from: u64,
     },
     /// Promote a backup shard to primary (issued by the coordinator
-    /// when the primary goes silent). Idempotent.
+    /// when the primary goes silent). Idempotent. With a chain of
+    /// backups the coordinator walks the chain head-ward and promotes
+    /// the first live replica.
     Promote,
     /// Replication: apply a batch of WAL records to a backup. `reset`
     /// means the records are a full snapshot and existing state must be
     /// discarded first. Applied through the same dedup path as live
     /// pushes, so re-delivery is safe.
     ReplApply {
+        /// Replication generation the batch was fetched under. A
+        /// [`Request::ReplSeed`] bumps the replica's generation, so a
+        /// poller batch fetched from the *previous* upstream — a zombie
+        /// primary's log racing the re-seed — is fenced off instead of
+        /// corrupting the freshly seeded state.
+        gen: u64,
         /// Discard current state before applying (snapshot batch).
         reset: bool,
         /// The primary's committed tip at poll time, so the backup can
@@ -328,6 +336,29 @@ pub enum Request {
         /// `(seq, wal payload bytes)` in order.
         records: Vec<(u64, Vec<u8>)>,
     },
+    /// Replication: re-seed a backup behind a (possibly new) upstream
+    /// mid-run. The records are the upstream's newest snapshot slice
+    /// (the same shape a reset `ReplBatch` carries); the backup rebuilds
+    /// from them, bumps its replication generation (fencing any batch
+    /// still in flight from the old upstream), and re-points its poller
+    /// at `upstream` to tail the remaining log through the normal
+    /// `ReplPoll` path. This is how a deployment regains redundancy
+    /// after a promotion without pausing training.
+    ReplSeed {
+        /// Address of the upstream to tail after seeding; empty keeps
+        /// the currently configured upstream.
+        upstream: String,
+        /// The upstream's committed tip when the seed was taken.
+        tip: u64,
+        /// `(seq, wal payload bytes)`: the upstream's snapshot slice.
+        records: Vec<(u64, Vec<u8>)>,
+    },
+    /// Planned hand-off: stop accepting data ops (they get the retryable
+    /// [`Response::Unavailable`]), fsync the WAL, and report the
+    /// committed tip so the coordinator can wait for a backup to fully
+    /// catch up before promoting it — a hand-off that loses nothing and
+    /// therefore needs no epoch roll. Idempotent.
+    Drain,
     /// Shard introspection (row count, bytes, matrices).
     ShardInfo,
     /// Stop the shard server thread.
@@ -398,6 +429,14 @@ pub enum Response {
         /// `(seq, wal payload bytes)` in order.
         records: Vec<(u64, Vec<u8>)>,
     },
+    /// Answer to [`Request::Drain`]: the WAL is fsynced and the shard
+    /// now refuses data ops, so every write acked before the drain is
+    /// at or below `tip` — a backup whose `repl_applied` reaches `tip`
+    /// holds the complete commit window.
+    Drained {
+        /// The draining shard's committed WAL tip.
+        tip: u64,
+    },
     /// The shard cannot serve this request in its current role (e.g. a
     /// data op sent to an un-promoted backup). Unlike
     /// [`Response::Error`], this is retryable — the client's courier
@@ -424,6 +463,8 @@ const T_DELETE_MATRIX: u8 = 12;
 const T_REPL_POLL: u8 = 13;
 const T_PROMOTE: u8 = 14;
 const T_REPL_APPLY: u8 = 15;
+const T_REPL_SEED: u8 = 16;
+const T_DRAIN: u8 = 17;
 
 /// Encode `(seq, payload)` record lists shared by `ReplApply` and
 /// `ReplBatch`.
@@ -506,12 +547,20 @@ impl Request {
                 w.u64(*from);
             }
             Request::Promote => w.u8(T_PROMOTE),
-            Request::ReplApply { reset, tip, records } => {
+            Request::ReplApply { gen, reset, tip, records } => {
                 w.u8(T_REPL_APPLY);
+                w.u64(*gen);
                 w.u8(u8::from(*reset));
                 w.u64(*tip);
                 encode_records(&mut w, records);
             }
+            Request::ReplSeed { upstream, tip, records } => {
+                w.u8(T_REPL_SEED);
+                w.str(upstream);
+                w.u64(*tip);
+                encode_records(&mut w, records);
+            }
+            Request::Drain => w.u8(T_DRAIN),
             Request::ShardInfo => w.u8(T_INFO),
             Request::Shutdown => w.u8(T_SHUTDOWN),
         }
@@ -556,10 +605,17 @@ impl Request {
             T_REPL_POLL => Request::ReplPoll { from: r.u64()? },
             T_PROMOTE => Request::Promote,
             T_REPL_APPLY => Request::ReplApply {
+                gen: r.u64()?,
                 reset: r.u8()? != 0,
                 tip: r.u64()?,
                 records: decode_records(&mut r)?,
             },
+            T_REPL_SEED => Request::ReplSeed {
+                upstream: r.str()?,
+                tip: r.u64()?,
+                records: decode_records(&mut r)?,
+            },
+            T_DRAIN => Request::Drain,
             T_INFO => Request::ShardInfo,
             T_SHUTDOWN => Request::Shutdown,
             t => return Err(Error::Decode(format!("bad request tag {t}"))),
@@ -577,6 +633,7 @@ const R_ERROR: u8 = 6;
 const R_SPARSE_ROWS: u8 = 7;
 const R_REPL_BATCH: u8 = 8;
 const R_UNAVAILABLE: u8 = 9;
+const R_DRAINED: u8 = 10;
 
 impl Response {
     /// Serialize to wire bytes.
@@ -639,6 +696,10 @@ impl Response {
                 w.u64(*tip);
                 encode_records(&mut w, records);
             }
+            Response::Drained { tip } => {
+                w.u8(R_DRAINED);
+                w.u64(*tip);
+            }
             Response::Unavailable(msg) => {
                 w.u8(R_UNAVAILABLE);
                 w.str(msg);
@@ -686,6 +747,7 @@ impl Response {
                 tip: r.u64()?,
                 records: decode_records(&mut r)?,
             },
+            R_DRAINED => Response::Drained { tip: r.u64()? },
             R_UNAVAILABLE => Response::Unavailable(r.str()?),
             R_ERROR => Response::Error(r.str()?),
             t => return Err(Error::Decode(format!("bad response tag {t}"))),
@@ -748,12 +810,20 @@ mod tests {
         roundtrip_req(Request::DeleteMatrix { matrix: 7 });
         roundtrip_req(Request::ReplPoll { from: 1 << 50 });
         roundtrip_req(Request::Promote);
-        roundtrip_req(Request::ReplApply { reset: true, tip: 0, records: vec![] });
+        roundtrip_req(Request::ReplApply { gen: 0, reset: true, tip: 0, records: vec![] });
         roundtrip_req(Request::ReplApply {
+            gen: 7,
             reset: false,
             tip: 1 << 40,
             records: vec![(1, vec![1, 2, 3]), (2, vec![]), (u64::MAX, vec![0; 64])],
         });
+        roundtrip_req(Request::ReplSeed { upstream: String::new(), tip: 0, records: vec![] });
+        roundtrip_req(Request::ReplSeed {
+            upstream: "10.0.0.7:7071".into(),
+            tip: 1 << 41,
+            records: vec![(9, vec![4, 5]), (10, vec![])],
+        });
+        roundtrip_req(Request::Drain);
         roundtrip_req(Request::ShardInfo);
         roundtrip_req(Request::Shutdown);
     }
@@ -820,6 +890,8 @@ mod tests {
             tip: 0,
             records: vec![],
         });
+        roundtrip_resp(Response::Drained { tip: 0 });
+        roundtrip_resp(Response::Drained { tip: 1 << 45 });
         roundtrip_resp(Response::Unavailable("backup".into()));
         roundtrip_resp(Response::Error("boom".into()));
     }

@@ -49,13 +49,25 @@
 //! shard can never re-issue a uid an in-flight retry may still carry.
 //!
 //! A shard started with [`PsConfig::backup_of`] runs as a **backup**:
-//! a poller thread streams the primary's committed log over the normal
+//! a poller thread streams its upstream's committed log over the normal
 //! transport (`ReplPoll` → `ReplBatch`) and injects `ReplApply` batches
 //! into the shard's own inbox, so replicated writes flow through the
 //! identical serialized single-writer path. Until promoted
 //! ([`Request::Promote`]), data ops are answered with
 //! [`Response::Unavailable`] — the retryable signal the client's
 //! failover route reacts to.
+//!
+//! Replication generalizes to a **chain of N replicas**: every standby
+//! tails the current head, promotion walks the chain head-ward (the
+//! first live backup wins), and a [`Request::ReplSeed`] re-points a
+//! standby at a new upstream mid-run — it rebuilds from the upstream's
+//! snapshot slice, bumps its replication *generation* (fencing any
+//! batch still in flight from the old upstream), and tails the rest of
+//! the log through the normal poll path. A planned hand-off
+//! ([`Request::Drain`]) flips the head to [`ROLE_DRAINING`]: data ops
+//! get the retryable `Unavailable` while replicas finish catching up to
+//! the fsynced tip, so the successor takes over having lost nothing —
+//! no epoch roll required.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::SocketAddr;
@@ -89,6 +101,9 @@ pub const ROLE_PRIMARY: u8 = 0;
 pub const ROLE_BACKUP: u8 = 1;
 /// Replication role: a backup promoted to serve as primary.
 pub const ROLE_PROMOTED: u8 = 2;
+/// Replication role: a primary in planned hand-off — WAL fsynced, data
+/// ops refused (retryably) while a backup catches up and takes over.
+pub const ROLE_DRAINING: u8 = 3;
 
 /// Log records served per `ReplPoll` reply (bounds reply size).
 const REPL_BATCH_MAX: usize = 256;
@@ -507,10 +522,17 @@ struct ShardCore {
     wal: RwLock<Option<Arc<ShardWal>>>,
     /// Replication role (`ROLE_*`).
     role: AtomicU8,
-    /// Replication: highest primary WAL sequence applied here.
+    /// Replication: highest upstream WAL sequence applied here.
     repl_applied: AtomicU64,
-    /// Replication: the primary's committed tip at the last apply.
+    /// Replication: the upstream's committed tip at the last apply.
     repl_tip: AtomicU64,
+    /// Replication generation, bumped by each `ReplSeed`. A poller batch
+    /// fetched under an older generation is rejected by `repl_apply` —
+    /// the fence that keeps a zombie upstream's log from overwriting a
+    /// freshly seeded replica.
+    repl_gen: AtomicU64,
+    /// Address the replication poller tails; a `ReplSeed` re-points it.
+    repl_upstream: Mutex<Option<String>>,
 }
 
 impl ShardCore {
@@ -655,9 +677,13 @@ impl ShardCore {
                 Response::Ok
             }
             Request::Promote => self.promote(),
-            Request::ReplApply { reset, tip, records } => {
-                self.repl_apply(reset, tip, &records)
+            Request::ReplApply { gen, reset, tip, records } => {
+                self.repl_apply(gen, reset, tip, &records)
             }
+            Request::ReplSeed { upstream, tip, records } => {
+                self.repl_seed(&upstream, tip, &records)
+            }
+            Request::Drain => self.drain(),
             Request::Shutdown => Response::Ok,
             other => Response::Error(format!("not a write op: {other:?}")),
         }
@@ -730,22 +756,35 @@ impl ShardCore {
     }
 
     /// Role gate: an un-promoted backup accepts only replication
-    /// traffic, introspection and control ops — data ops get
+    /// traffic, introspection and control ops; a draining primary still
+    /// feeds its replicas (`ReplPoll`) and answers introspection but
+    /// refuses new data ops. Gated requests get
     /// [`Response::Unavailable`], which the client's courier treats as
     /// a retryable failover signal (unlike a hard `Error`).
     fn gate(&self, req: &Request) -> Option<Response> {
-        if self.role.load(Ordering::Relaxed) != ROLE_BACKUP {
-            return None;
-        }
-        match req {
-            Request::ShardInfo
-            | Request::ReplApply { .. }
-            | Request::Promote
-            | Request::Shutdown => None,
-            _ => Some(Response::Unavailable(format!(
-                "shard {} is an un-promoted backup",
-                self.shard_id
-            ))),
+        match self.role.load(Ordering::Relaxed) {
+            ROLE_BACKUP => match req {
+                Request::ShardInfo
+                | Request::ReplApply { .. }
+                | Request::ReplSeed { .. }
+                | Request::Promote
+                | Request::Shutdown => None,
+                _ => Some(Response::Unavailable(format!(
+                    "shard {} is an un-promoted backup",
+                    self.shard_id
+                ))),
+            },
+            ROLE_DRAINING => match req {
+                Request::ShardInfo
+                | Request::ReplPoll { .. }
+                | Request::Drain
+                | Request::Shutdown => None,
+                _ => Some(Response::Unavailable(format!(
+                    "shard {} is draining",
+                    self.shard_id
+                ))),
+            },
+            _ => None,
         }
     }
 
@@ -765,6 +804,17 @@ impl ShardCore {
                 match ShardWal::open(&path, self.shard_id as u32, self.wal_options()) {
                     Ok((wal, _stale)) => {
                         let wal = Arc::new(wal);
+                        // Continue the replication sequence domain: the
+                        // snapshot below then lands at `upto =
+                        // repl_applied`, so a `ReplPoll` from any
+                        // standby cursor reaches it (a fresh log would
+                        // compact at `upto = 0`, invisible to `from >=
+                        // 1`), and survivors already at the frontier
+                        // keep tailing without a reset.
+                        let applied = self.repl_applied.load(Ordering::Acquire);
+                        if applied > 0 {
+                            wal.adopt_frontier(applied);
+                        }
                         *self.wal.write().unwrap() = Some(Arc::clone(&wal));
                         if let Err(e) = wal.compact(&self.snapshot_payloads()) {
                             log_warn!(
@@ -788,12 +838,22 @@ impl ShardCore {
 
     /// Apply a replicated batch. Only a backup accepts this: a promoted
     /// replica is the authority and a zombie poller must not overwrite
-    /// it. Re-delivered records are skipped by sequence; the writes
-    /// inside flow through the normal dedup path, so re-application is
-    /// safe even across a `reset`.
-    fn repl_apply(&self, reset: bool, tip: u64, records: &[(u64, Vec<u8>)]) -> Response {
+    /// it. A batch fetched under a stale replication generation (the
+    /// poller read it from the *previous* upstream before a `ReplSeed`
+    /// re-pointed this shard) is rejected for the same reason — its
+    /// sequence numbers belong to a log this replica no longer follows.
+    /// Re-delivered records are skipped by sequence; the writes inside
+    /// flow through the normal dedup path, so re-application is safe
+    /// even across a `reset`.
+    fn repl_apply(&self, gen: u64, reset: bool, tip: u64, records: &[(u64, Vec<u8>)]) -> Response {
         if self.role.load(Ordering::Relaxed) != ROLE_BACKUP {
             return Response::Error("not a backup".into());
+        }
+        if gen != self.repl_gen.load(Ordering::SeqCst) {
+            return Response::Error(format!(
+                "stale replication generation {gen} (shard is at {})",
+                self.repl_gen.load(Ordering::SeqCst)
+            ));
         }
         if reset {
             self.matrices.write().unwrap().clear();
@@ -814,6 +874,52 @@ impl ShardCore {
         self.repl_applied.store(applied, Ordering::Relaxed);
         self.repl_tip.store(tip.max(applied), Ordering::Relaxed);
         Response::Ok
+    }
+
+    /// Rebuild this backup from an upstream's snapshot slice and
+    /// re-point its poller — how the coordinator attaches a standby
+    /// behind a freshly promoted head without pausing training. The seed
+    /// carries the upstream's snapshot at some sequence `S ≤ tip`; the
+    /// reset apply leaves `repl_applied == S`, so the poller's next
+    /// cursor (`S + 1`) tails the remaining log through the normal
+    /// `ReplPoll` path.
+    ///
+    /// SINGLE-WRITER: runs on the inbox thread like every write, so the
+    /// generation bump here is ordered before any later `ReplApply` —
+    /// a batch the poller fetched from the *old* upstream carries the
+    /// old generation and is fenced off instead of corrupting the seed.
+    fn repl_seed(&self, upstream: &str, tip: u64, records: &[(u64, Vec<u8>)]) -> Response {
+        if self.role.load(Ordering::Relaxed) != ROLE_BACKUP {
+            return Response::Error("not a backup".into());
+        }
+        let gen = self.repl_gen.fetch_add(1, Ordering::SeqCst) + 1;
+        if !upstream.is_empty() {
+            *self.repl_upstream.lock().unwrap() = Some(upstream.to_string());
+        }
+        self.repl_apply(gen, true, tip, records)
+    }
+
+    /// Planned hand-off: flip to [`ROLE_DRAINING`] (data ops get the
+    /// retryable `Unavailable`), fsync the WAL, and report the committed
+    /// tip. Because this runs on the single writer thread, every write
+    /// acked before it is already appended — `tip` covers the entire
+    /// commit window, and a backup whose `repl_applied` reaches `tip`
+    /// holds everything, so the subsequent promotion loses nothing and
+    /// needs no epoch roll. Idempotent.
+    fn drain(&self) -> Response {
+        if self.role.load(Ordering::Relaxed) == ROLE_BACKUP {
+            return Response::Error("cannot drain an un-promoted backup".into());
+        }
+        let Some(wal) = self.wal.read().unwrap().clone() else {
+            return Response::Error(
+                "drain needs a wal-backed shard: without a log there is no feed for a \
+                 backup to catch up on"
+                    .into(),
+            );
+        };
+        self.role.store(ROLE_DRAINING, Ordering::SeqCst);
+        wal.sync();
+        Response::Drained { tip: wal.committed() }
     }
 
     /// Apply one WAL record (recovery replay or replication): `Write`
@@ -918,6 +1024,7 @@ impl ShardCore {
             segment_bytes: self.config.wal_segment_bytes,
             commit_window: self.config.wal_commit_window,
             compact_after: self.config.wal_compact_after,
+            ..WalOptions::default()
         }
     }
 }
@@ -974,6 +1081,12 @@ impl ShardState {
     pub fn new(shard_id: usize, config: PsConfig) -> ShardState {
         let dedup_window = config.dedup_window;
         let is_backup = config.backup_of.is_some();
+        let upstream = config
+            .backup_of
+            .as_ref()
+            .and_then(|primaries| primaries.get(shard_id))
+            .filter(|addr| !addr.is_empty())
+            .cloned();
         let core = Arc::new(ShardCore {
             shard_id,
             config,
@@ -987,6 +1100,8 @@ impl ShardState {
             role: AtomicU8::new(if is_backup { ROLE_BACKUP } else { ROLE_PRIMARY }),
             repl_applied: AtomicU64::new(0),
             repl_tip: AtomicU64::new(0),
+            repl_gen: AtomicU64::new(0),
+            repl_upstream: Mutex::new(upstream),
         });
         if !is_backup {
             if let Some(dir) = core.config.wal_dir.clone() {
@@ -1177,7 +1292,8 @@ impl ServerGroup {
             TransportMode::TcpLoopback => {
                 if !plan.is_reliable() {
                     log_warn!(
-                        "fault injection is sim-only; the TCP transport ignores the fault plan"
+                        "the TCP transport ignores the sim fault plan; install the chaos \
+                         interposer (net::chaos) or --chaos-plan for TCP fault injection"
                     );
                 }
                 // PANIC-OK: a constant loopback address always parses.
@@ -1301,17 +1417,16 @@ impl TcpShardServer {
         let (handles, cores) = spawn_serve_threads(&config, first_shard, inboxes);
         let stop = Arc::new(AtomicBool::new(false));
         let mut pollers = Vec::new();
-        if let Some(primary_addrs) = primary_addrs {
+        if primary_addrs.is_some() {
             for (i, core) in cores.iter().enumerate() {
                 let shard = first_shard + i;
-                let primary = primary_addrs[shard];
                 let injector = server.injector(i);
                 let core = Arc::clone(core);
                 let stop = Arc::clone(&stop);
                 pollers.push(
                     std::thread::Builder::new()
                         .name(format!("glint-repl-{shard}"))
-                        .spawn(move || repl_poll_loop(&core, primary, &injector, &stop))
+                        .spawn(move || repl_poll_loop(&core, &injector, &stop))
                         // PANIC-OK: poller spawn fails only on resource
                         // exhaustion at server startup.
                         .expect("spawn replication poller"),
@@ -1341,22 +1456,51 @@ impl TcpShardServer {
 }
 
 /// Replication poller for one backup shard: pull committed WAL records
-/// from the primary and inject the batches into the shard's own inbox,
-/// so they apply through the same serialized single-writer path as live
-/// traffic. Exits when the server stops or the shard is promoted (the
-/// primary's feed is no longer the authority then).
+/// from the current upstream and inject the batches into the shard's
+/// own inbox, so they apply through the same serialized single-writer
+/// path as live traffic. The upstream address is re-read every
+/// iteration — a `ReplSeed` re-points the shard mid-run and the poller
+/// re-dials — and every batch is tagged with the replication generation
+/// it was fetched under, so a batch from a superseded upstream is
+/// rejected by the apply handler instead of corrupting the seed. Exits
+/// when the server stops or the shard is promoted (the upstream's feed
+/// is no longer the authority then).
 fn repl_poll_loop(
     core: &Arc<ShardCore>,
-    primary: SocketAddr,
     injector: &mpsc::Sender<Envelope>,
     stop: &Arc<AtomicBool>,
 ) {
-    let transport = TcpTransport::connect(&[primary]);
-    let ep = transport.endpoint(0);
+    // (address, endpoint) of the current upstream connection.
+    let mut conn: Option<(String, crate::net::Endpoint)> = None;
     while !stop.load(Ordering::SeqCst) {
         if core.role.load(Ordering::Relaxed) != ROLE_BACKUP {
             return;
         }
+        let Some(upstream) = core.repl_upstream.lock().unwrap().clone() else {
+            std::thread::sleep(REPL_ERROR_BACKOFF);
+            continue;
+        };
+        if conn.as_ref().map_or(true, |(addr, _)| *addr != upstream) {
+            match resolve_addrs(std::slice::from_ref(&upstream)) {
+                Ok(addrs) => {
+                    conn = Some((upstream.clone(), TcpTransport::connect(&addrs).endpoint(0)));
+                }
+                Err(e) => {
+                    log_warn!(
+                        "shard {}: bad replication upstream {upstream:?}: {e}",
+                        core.shard_id
+                    );
+                    std::thread::sleep(REPL_ERROR_BACKOFF);
+                    continue;
+                }
+            }
+        }
+        // PANIC-OK: `conn` was just installed above when absent.
+        let ep = &conn.as_ref().expect("upstream connection installed").1;
+        // Sample the generation *before* the poll: if a ReplSeed lands
+        // in between, this batch carries a stale generation and the
+        // single-writer apply path rejects it.
+        let gen = core.repl_gen.load(Ordering::SeqCst);
         let from = core.repl_applied.load(Ordering::Relaxed) + 1;
         let reply = match ep.request(Request::ReplPoll { from }.encode(), REPL_POLL_TIMEOUT) {
             Ok(bytes) => Response::decode(&bytes),
@@ -1368,13 +1512,17 @@ fn repl_poll_loop(
         match reply {
             Ok(Response::ReplBatch { reset, next: _, tip, records }) => {
                 if records.is_empty() && !reset {
-                    // Caught up; note the tip and idle briefly.
-                    let applied = core.repl_applied.load(Ordering::Relaxed);
-                    core.repl_tip.store(tip.max(applied), Ordering::Relaxed);
+                    // Caught up; note the tip and idle briefly (only if
+                    // no seed re-pointed us mid-poll — a superseded
+                    // upstream's tip would fake lag).
+                    if core.repl_gen.load(Ordering::SeqCst) == gen {
+                        let applied = core.repl_applied.load(Ordering::Relaxed);
+                        core.repl_tip.store(tip.max(applied), Ordering::Relaxed);
+                    }
                     std::thread::sleep(REPL_IDLE_POLL);
                     continue;
                 }
-                let apply = Request::ReplApply { reset, tip, records }.encode();
+                let apply = Request::ReplApply { gen, reset, tip, records }.encode();
                 let (reply_tx, reply_rx) = mpsc::sync_channel(1);
                 if injector.send(Envelope { payload: apply, reply: Some(reply_tx) }).is_err() {
                     return; // the serve loop is gone
@@ -1383,8 +1531,9 @@ fn repl_poll_loop(
                 // before the next poll computes its cursor.
                 let _ = reply_rx.recv_timeout(REPL_POLL_TIMEOUT);
             }
-            // Transient states (primary restarting without its WAL yet,
-            // decode noise) all take the same back-off.
+            // Transient states (upstream restarting without its WAL yet,
+            // a draining or just-promoted head, decode noise) all take
+            // the same back-off.
             Ok(_) | Err(_) => std::thread::sleep(REPL_ERROR_BACKOFF),
         }
     }
@@ -1869,6 +2018,7 @@ mod tests {
             let done = slice.records.is_empty();
             cursor = slice.next;
             let resp = backup.handle(Request::ReplApply {
+                gen: 0,
                 reset: slice.reset,
                 tip: slice.tip,
                 records: slice.records,
@@ -1882,6 +2032,7 @@ mod tests {
         let slice = wal.read_from(1, 7).unwrap();
         assert_eq!(
             backup.handle(Request::ReplApply {
+                gen: 0,
                 reset: slice.reset,
                 tip: slice.tip,
                 records: slice.records,
@@ -1892,6 +2043,140 @@ mod tests {
             Response::Info { repl_applied, .. } => assert_eq!(repl_applied, 41),
             r => panic!("unexpected {r:?}"),
         }
+        assert_eq!(backup.handle(Request::Promote), Response::Ok);
+        let want = match primary.handle(Request::PullColSums { id: 1 }) {
+            Response::Rows(d) => d,
+            r => panic!("unexpected {r:?}"),
+        };
+        let got = match backup.handle(Request::PullColSums { id: 1 }) {
+            Response::Rows(d) => d,
+            r => panic!("unexpected {r:?}"),
+        };
+        assert_eq!(got, want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drain_freezes_writes_but_keeps_feeding_replicas() {
+        let dir = tmp("drain");
+        let mut s = ShardState::new(0, wal_cfg(&dir));
+        s.handle(create(2, 2, Dtype::I64, Layout::Dense));
+        s.handle(Request::PushCoords {
+            id: 1,
+            uid: 1,
+            rows: vec![0],
+            cols: vec![0],
+            values: Data::I64(vec![3]),
+        });
+        let tip = match s.handle(Request::Drain) {
+            Response::Drained { tip } => tip,
+            r => panic!("unexpected {r:?}"),
+        };
+        assert_eq!(tip, 2); // create + push, both committed
+        // Idempotent: a second drain reports the same frozen tip.
+        assert_eq!(s.handle(Request::Drain), Response::Drained { tip });
+        match s.handle(Request::ShardInfo) {
+            Response::Info { role, .. } => assert_eq!(role, ROLE_DRAINING),
+            r => panic!("unexpected {r:?}"),
+        }
+        // New data ops get the retryable Unavailable...
+        match s.handle(Request::PushCoords {
+            id: 1,
+            uid: 2,
+            rows: vec![0],
+            cols: vec![0],
+            values: Data::I64(vec![1]),
+        }) {
+            Response::Unavailable(_) => {}
+            r => panic!("unexpected {r:?}"),
+        }
+        // ...while a catching-up replica can still poll the full window.
+        match s.handle(Request::ReplPoll { from: 1 }) {
+            Response::ReplBatch { tip: t, records, .. } => {
+                assert_eq!(t, tip);
+                assert!(!records.is_empty());
+            }
+            r => panic!("unexpected {r:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drain_rejects_wal_less_and_backup_shards() {
+        // No WAL: there is no log for a successor to tail.
+        let mut plain = state();
+        match plain.handle(Request::Drain) {
+            Response::Error(e) => assert!(e.contains("wal"), "{e}"),
+            r => panic!("unexpected {r:?}"),
+        }
+        // An un-promoted backup is gated like any non-replication op.
+        let cfg = PsConfig { backup_of: Some(vec![]), ..PsConfig::with_shards(1) };
+        let mut backup = ShardState::new(0, cfg);
+        match backup.handle(Request::Drain) {
+            Response::Unavailable(_) => {}
+            r => panic!("unexpected {r:?}"),
+        }
+    }
+
+    #[test]
+    fn repl_seed_repoints_a_backup_and_fences_stale_batches() {
+        let dir = tmp("reseed");
+        let mut primary = ShardState::new(0, wal_cfg(&dir));
+        primary.handle(create(4, 2, Dtype::I64, Layout::Dense));
+        for i in 0..10u64 {
+            primary.handle(Request::PushCoords {
+                id: 1,
+                uid: i + 1,
+                rows: vec![i % 4],
+                cols: vec![i as u32 % 2],
+                values: Data::I64(vec![1]),
+            });
+        }
+        let wal = primary.core.wal.read().unwrap().clone().unwrap();
+        wal.sync();
+        let tip = wal.committed();
+        let slice = wal.read_from(1, 1024).unwrap();
+
+        let backup_cfg = PsConfig { backup_of: Some(vec![]), ..PsConfig::with_shards(1) };
+        let mut backup = ShardState::new(0, backup_cfg);
+        // Generation 0 batches apply until a seed bumps the fence.
+        assert_eq!(
+            backup.handle(Request::ReplApply { gen: 0, reset: false, tip: 0, records: vec![] }),
+            Response::Ok
+        );
+        assert_eq!(
+            backup.handle(Request::ReplSeed {
+                upstream: "10.0.0.9:7070".into(),
+                tip,
+                records: slice.records,
+            }),
+            Response::Ok
+        );
+        assert_eq!(
+            backup.core.repl_upstream.lock().unwrap().as_deref(),
+            Some("10.0.0.9:7070")
+        );
+        match backup.handle(Request::ShardInfo) {
+            Response::Info { repl_applied, .. } => assert_eq!(repl_applied, tip),
+            r => panic!("unexpected {r:?}"),
+        }
+        // A batch the poller fetched from the *old* upstream (generation
+        // 0) lands after the seed: fenced off instead of applied.
+        match backup.handle(Request::ReplApply {
+            gen: 0,
+            reset: false,
+            tip: tip + 5,
+            records: vec![],
+        }) {
+            Response::Error(e) => assert!(e.contains("stale replication generation"), "{e}"),
+            r => panic!("unexpected {r:?}"),
+        }
+        // The new generation streams normally.
+        assert_eq!(
+            backup.handle(Request::ReplApply { gen: 1, reset: false, tip, records: vec![] }),
+            Response::Ok
+        );
+        // The seeded replica promotes into an exact copy of the source.
         assert_eq!(backup.handle(Request::Promote), Response::Ok);
         let want = match primary.handle(Request::PullColSums { id: 1 }) {
             Response::Rows(d) => d,

@@ -79,9 +79,46 @@ impl InferServer {
     }
 }
 
+/// What the serve loop needs from its engine: the real
+/// [`InferEngine`], or a scripted stand-in in the model suite, which
+/// drives the loop through a crafted [`Inbox`] to check the batching
+/// window never loses or double-answers a request across shutdown.
+pub trait BatchEngine {
+    /// Answer one coalesced batch: one `(topic, count)` list per
+    /// document, in batch order.
+    fn infer_batch(&mut self, docs: &[&[u32]]) -> Result<Vec<Vec<(u32, u32)>>>;
+
+    /// Cumulative counters for `Stats` answers; `requests` is the serve
+    /// loop's own request count.
+    fn serve_stats(&self, requests: u64) -> ServeStats;
+}
+
+impl BatchEngine for InferEngine {
+    fn infer_batch(&mut self, docs: &[&[u32]]) -> Result<Vec<Vec<(u32, u32)>>> {
+        InferEngine::infer_batch(self, docs)
+    }
+
+    fn serve_stats(&self, requests: u64) -> ServeStats {
+        let s = self.stats();
+        ServeStats {
+            requests,
+            docs: s.docs,
+            cache_hits: s.cache_hits,
+            words_pulled: s.words_pulled,
+            sparse_pulls: s.sparse_pulls,
+            batches: s.batches,
+        }
+    }
+}
+
 /// The replica's serve loop: block for the first request, drain the
 /// inbox for one batching window, answer the coalesced batch, repeat.
-fn serve_loop(inbox: &Inbox, mut engine: InferEngine, window: Duration) {
+///
+/// Public for the model suite, which runs it against a scripted
+/// [`BatchEngine`] over an [`Inbox::channel`] to explore batching /
+/// shutdown interleavings; production replicas reach it through
+/// [`InferServer::start`].
+pub fn serve_loop<E: BatchEngine>(inbox: &Inbox, mut engine: E, window: Duration) {
     let mut requests = 0u64;
     loop {
         let Some(first) = inbox.recv() else {
@@ -129,12 +166,12 @@ fn serve_loop(inbox: &Inbox, mut engine: InferEngine, window: Duration) {
 /// Classify one envelope: inference work joins the batch; stats and
 /// malformed requests are answered immediately; shutdown is deferred
 /// until the in-flight batch has been answered.
-fn sort_envelope(
+fn sort_envelope<E: BatchEngine>(
     env: Envelope,
     batch: &mut Vec<(Envelope, Vec<Vec<u32>>)>,
     stop: &mut Option<Envelope>,
     requests: &mut u64,
-    engine: &InferEngine,
+    engine: &E,
 ) {
     match InferRequest::decode(&env.payload) {
         Ok(InferRequest::Infer { docs }) => {
@@ -142,16 +179,7 @@ fn sort_envelope(
             batch.push((env, docs));
         }
         Ok(InferRequest::Stats) => {
-            let s = engine.stats();
-            let stats = ServeStats {
-                requests: *requests,
-                docs: s.docs,
-                cache_hits: s.cache_hits,
-                words_pulled: s.words_pulled,
-                sparse_pulls: s.sparse_pulls,
-                batches: s.batches,
-            };
-            respond(&env, InferResponse::Stats(stats).encode());
+            respond(&env, InferResponse::Stats(engine.serve_stats(*requests)).encode());
         }
         Ok(InferRequest::Shutdown) => *stop = Some(env),
         Err(e) => respond(&env, InferResponse::Error(e.to_string()).encode()),

@@ -73,6 +73,21 @@ pub struct WalOptions {
     pub commit_window: Duration,
     /// Sealed log segments that trigger a compaction into a snapshot.
     pub compact_after: usize,
+    /// Deterministic crash injection for the model checker: the
+    /// committer thread "dies" immediately after its `n+1`-th record
+    /// write (so `Some(0)` kills it after the very next one), in the
+    /// window between writing to the segment and fsyncing it — the
+    /// exact window a real `kill -9` hits, where records were handed to
+    /// the group-commit queue (and their pushes already acked) but
+    /// never became durable. The hook discards the un-flushed bytes (a
+    /// dead process never flushes its buffers), publishes nothing as
+    /// committed, and unblocks `sync` waiters through the shutdown
+    /// flag, so the model suite can assert that recovery replays
+    /// exactly the durable prefix. Per-WAL on purpose: a process-wide
+    /// switch would leak crashes into unrelated concurrently-running
+    /// tests.
+    #[cfg(feature = "model")]
+    pub crash_after_writes: Option<u64>,
 }
 
 impl Default for WalOptions {
@@ -81,6 +96,8 @@ impl Default for WalOptions {
             segment_bytes: 1 << 20,
             commit_window: Duration::from_millis(2),
             compact_after: 4,
+            #[cfg(feature = "model")]
+            crash_after_writes: None,
         }
     }
 }
@@ -436,6 +453,33 @@ impl ShardWal {
         seq
     }
 
+    /// Adopt `seq` as the already-durable frontier of an empty, freshly
+    /// opened WAL: the next append gets `seq + 1`. A backup promoted to
+    /// head uses this so its new log *continues* the replication
+    /// sequence domain its standbys are cursored into — the snapshot it
+    /// compacts right after lands at `upto = seq`, reachable by any
+    /// `read_from` cursor at or below it, and caught-up standbys keep
+    /// polling from `seq + 1` without a reset. No-op (with a warning)
+    /// on a WAL that already holds records; state it could contradict.
+    ///
+    /// SINGLE-WRITER: call before the first append, on the thread that
+    /// owns the shard's write path.
+    pub fn adopt_frontier(&self, seq: u64) {
+        let mut q = self.inner.queue.lock().unwrap();
+        let committed = self.inner.committed.load(Ordering::Acquire);
+        let empty = q.next_seq == 1 && q.pending.is_empty() && committed == 0;
+        if !empty {
+            log_warn!(
+                "wal shard {}: refusing to adopt frontier {seq} over existing records (next {})",
+                self.inner.shard,
+                q.next_seq
+            );
+            return;
+        }
+        q.next_seq = seq + 1;
+        self.inner.committed.store(seq, Ordering::Release);
+    }
+
     /// Block until everything appended before this call is fsynced.
     /// Gives up (with a warning) if the committer stops making progress
     /// for ~10s — a failing disk must not wedge the shard forever.
@@ -619,6 +663,8 @@ fn file_len(path: &Path) -> u64 {
 /// batch, fsync once, advance the committed frontier, repeat. A lone
 /// record waits at most `commit_window` for company.
 fn committer_loop(inner: &Inner) {
+    #[cfg(feature = "model")]
+    let mut crash_budget = inner.opts.crash_after_writes;
     loop {
         let batch: Vec<(u64, Vec<u8>)> = {
             let mut q = inner.queue.lock().unwrap();
@@ -655,6 +701,27 @@ fn committer_loop(inner: &Inner) {
                 .bytes
                 .fetch_add((RECORD_OVERHEAD + payload.len()) as u64, Ordering::Relaxed);
             written_through = Some(*seq);
+            #[cfg(feature = "model")]
+            if crash_tripped(&mut crash_budget) {
+                // Injected kill -9 (see
+                // [`WalOptions::crash_after_writes`]): die between the
+                // segment write and the fsync. The buffered tail is
+                // discarded (a dead process never flushes), nothing in
+                // this batch is published as committed, and `sync`
+                // waiters unblock through the shutdown flag.
+                if let Err(e) = files.active.discard_buffered() {
+                    log_warn!(
+                        "wal shard {} crash hook failed to discard buffers: {e}",
+                        inner.shard
+                    );
+                }
+                drop(files);
+                let mut q = inner.queue.lock().unwrap();
+                q.shutdown = true;
+                inner.durable.notify_all();
+                inner.work.notify_all();
+                return;
+            }
         }
         let synced = files.active.sync();
         drop(files);
@@ -667,6 +734,19 @@ fn committer_loop(inner: &Inner) {
         }
         let _q = inner.queue.lock().unwrap();
         inner.durable.notify_all();
+    }
+}
+
+/// Consume one write from the injected crash budget; `true` = die now.
+#[cfg(feature = "model")]
+fn crash_tripped(budget: &mut Option<u64>) -> bool {
+    match budget {
+        None => false,
+        Some(0) => true,
+        Some(n) => {
+            *n -= 1;
+            false
+        }
     }
 }
 

@@ -197,6 +197,20 @@ impl SegmentWriter {
         Ok(())
     }
 
+    /// Throw away buffered-but-unflushed bytes (crash injection for the
+    /// model suite): a dead process never flushes, so the injected
+    /// "kill -9" must not let this writer's eventual `Drop` leak the
+    /// lost records back into the file. Re-points the writer at a fresh
+    /// handle and closes the old one *without* flushing.
+    #[cfg(feature = "model")]
+    pub fn discard_buffered(&mut self) -> Result<()> {
+        let file = OpenOptions::new().append(true).open(&self.path)?;
+        let old = std::mem::replace(&mut self.file, BufWriter::new(file));
+        let (old_file, _lost) = old.into_parts();
+        drop(old_file); // closed un-flushed: the buffered tail is gone
+        Ok(())
+    }
+
     /// The segment's path.
     pub fn path(&self) -> &Path {
         &self.path

@@ -1,11 +1,18 @@
-//! Replication acceptance: a 2-shard deployment with one backup
-//! replica per shard over real TCP. A primary dies mid-stream; the
-//! client's route fails over to the backup, the backup is promoted,
-//! and the stream continues. The promoted replica must hold exactly
-//! the counts a no-fault run would have produced — every push uid
-//! applied exactly once, including uids redelivered across the
-//! failover — because the backup applied the primary's committed
-//! WAL records (counts *and* dedup window) before the crash.
+//! Replication acceptance over real TCP.
+//!
+//! One test runs a 2-shard deployment with one backup replica per
+//! shard: a primary dies mid-stream; the client's route fails over to
+//! the backup, the backup is promoted, and the stream continues with
+//! every push uid applied exactly once.
+//!
+//! The chain test runs a depth-2 standby chain behind one shard and
+//! kills the primary AND the promoted first tier in sequence: each
+//! promotion walks the chain head-ward, the surviving tail is
+//! re-seeded (`ReplSeed`) behind the new head so redundancy returns
+//! mid-run, and after the second kill the twice-promoted tail must
+//! still hold counts bit-exact with a no-fault baseline — including
+//! the dedup window, proved by redelivering every uid across both
+//! failovers.
 
 use std::net::SocketAddr;
 use std::path::PathBuf;
@@ -72,6 +79,31 @@ fn pull(c: &PsClient, shard: usize, id: u32) -> Vec<i64> {
 /// Shard-tagged push uid (the convention `GenUid` uses).
 fn uid(shard: usize, n: u64) -> u64 {
     ((shard as u64) << 48) | n
+}
+
+/// The deterministic push for step `n`: coordinates plus value.
+fn coords(n: u64) -> (u64, u32, i64) {
+    (n % LOCAL, (n % COLS as u64) as u32, (n % 5 + 1) as i64)
+}
+
+/// Wait until the backup behind `admin` reports `repl_applied >= floor`
+/// with zero lag — i.e. its applied tip covers the head's whole commit
+/// window, so a kill right now loses nothing.
+fn await_caught_up(admin: &PsClient, shard: usize, floor: u64, what: &str) -> u64 {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let info = admin.shard_info(shard).expect("replica info");
+        if info.role == ROLE_BACKUP && info.repl_applied >= floor && info.repl_lag == 0 {
+            return info.repl_applied;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{what} never caught up (applied {} / floor {floor}, lag {})",
+            info.repl_applied,
+            info.repl_lag
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
 }
 
 #[test]
@@ -183,4 +215,126 @@ fn primary_death_fails_over_and_converges_exactly_once() {
     primary1.join();
     backup.join();
     let _ = std::fs::remove_dir_all(&wal_dir);
+}
+
+#[test]
+fn chain_of_two_survives_sequential_kills() {
+    let p_wal = tmp("chain-p");
+    let b1_wal = tmp("chain-b1");
+    let b2_wal = tmp("chain-b2");
+
+    // One WAL-backed primary shard...
+    let pcfg = PsConfig { wal_dir: Some(p_wal.clone()), ..PsConfig::with_shards(1) };
+    let want: Vec<SocketAddr> = vec!["127.0.0.1:0".parse().unwrap()];
+    let primary = TcpShardServer::bind(pcfg, 0, &want).expect("bind primary");
+    let p_addr = primary.addrs()[0];
+
+    // ...and a chain of two standby tiers behind it, each a separate
+    // process-equivalent tailing the serving head. Tier order is
+    // promotion order; each tier carries its own wal dir so that, once
+    // promoted, it can snapshot and feed the tier behind it.
+    let tier = |wal: &PathBuf| PsConfig {
+        wal_dir: Some(wal.clone()),
+        backup_of: Some(vec![p_addr.to_string()]),
+        ..PsConfig::with_shards(1)
+    };
+    let b1 = TcpShardServer::bind(tier(&b1_wal), 0, &want).expect("bind tier 1");
+    let b2 = TcpShardServer::bind(tier(&b2_wal), 0, &want).expect("bind tier 2");
+    let (b1_addr, b2_addr) = (b1.addrs()[0], b2.addrs()[0]);
+
+    let c = client(&[p_addr], &[b1_addr, b2_addr]);
+    let id = c
+        .matrix_with_layout::<i64>(ROWS, COLS, Layout::Dense)
+        .expect("create matrix")
+        .id();
+
+    // Phase A onto the primary; `grid` is the no-fault baseline the
+    // twice-promoted survivor must match bit-exactly at the end.
+    let mut grid = vec![0i64; (LOCAL * COLS as u64) as usize];
+    for n in 1..=30u64 {
+        let (row, col, val) = coords(n);
+        assert!(push(&c, 0, id, uid(0, n), row, col, val), "phase A uid must be fresh");
+        grid[(row * COLS as u64 + col as u64) as usize] += val;
+    }
+
+    // Both tiers drain the primary's committed log: CreateMatrix plus
+    // 30 fresh pushes = 31 WAL records.
+    let admin1 = client(&[b1_addr], &[]);
+    let admin2 = client(&[b2_addr], &[]);
+    await_caught_up(&admin1, 0, 31, "tier 1");
+    await_caught_up(&admin2, 0, 31, "tier 2");
+
+    // Kill 1: the primary dies. Promotion walks the chain head-ward
+    // and lands on tier 1 (route position 1).
+    client(&[p_addr], &[]).shutdown_servers().expect("stop primary");
+    primary.join();
+    assert_eq!(c.shard_info(0).expect("failover info").role, ROLE_BACKUP);
+    let head = c.promote_backup(0).expect("first promotion");
+    assert_eq!(head, 1, "promotion must land on the first live tier");
+    assert_eq!(c.shard_info(0).expect("promoted info").role, ROLE_PROMOTED);
+
+    // Re-seed the surviving tail behind the new head, as the
+    // coordinator's probe loop does: tier 2 drops its dead-upstream
+    // cursor, installs the head's promotion snapshot, and tails the
+    // head under the bumped replication generation.
+    let roles = c.replica_roles(0);
+    assert_eq!(roles[1], Some(ROLE_PROMOTED), "route must see the promoted head");
+    assert_eq!(roles[2], Some(ROLE_BACKUP), "tail tier must have survived");
+    c.reseed_backup(0, 2, &b1_addr.to_string()).expect("re-seed tier 2");
+    let seeded_at = await_caught_up(&admin2, 0, 31, "freshly seeded tier 2");
+
+    // Redelivered phase-A uids must hit the replicated dedup window.
+    for n in 1..=30u64 {
+        let (row, col, val) = coords(n);
+        assert!(
+            !push(&c, 0, id, uid(0, n), row, col, val),
+            "uid {n} redelivered across failover must dedup"
+        );
+    }
+
+    // Phase B continues on the promoted head while the tail tier tails
+    // it; wait until the tail holds all 10 new records (redelivered
+    // dedup'd pushes are never logged, so the frontier is exact) —
+    // bounded repl_lag, zero at the sample point.
+    for n in 31..=40u64 {
+        let (row, col, val) = coords(n);
+        assert!(push(&c, 0, id, uid(0, n), row, col, val), "phase B uid must be fresh");
+        grid[(row * COLS as u64 + col as u64) as usize] += val;
+    }
+    await_caught_up(&admin2, 0, seeded_at + 10, "tier 2 behind the new head");
+
+    // Kill 2: the promoted head dies too. The route walks one tier
+    // deeper and the re-seeded tail takes over.
+    client(&[b1_addr], &[]).shutdown_servers().expect("stop tier 1");
+    b1.join();
+    assert_eq!(c.shard_info(0).expect("second failover info").role, ROLE_BACKUP);
+    let head = c.promote_backup(0).expect("second promotion");
+    assert_eq!(head, 2, "second promotion must land on the tail tier");
+    assert_eq!(c.shard_info(0).expect("tail info").role, ROLE_PROMOTED);
+
+    // Redelivery across the second failover: phase-B uids dedup, which
+    // proves the re-seed carried the dedup window, not just counts.
+    for n in 31..=40u64 {
+        let (row, col, val) = coords(n);
+        assert!(
+            !push(&c, 0, id, uid(0, n), row, col, val),
+            "uid {n} redelivered across the second failover must dedup"
+        );
+    }
+    // Phase C lands on the twice-promoted tail.
+    for n in 41..=50u64 {
+        let (row, col, val) = coords(n);
+        assert!(push(&c, 0, id, uid(0, n), row, col, val), "phase C uid must be fresh");
+        grid[(row * COLS as u64 + col as u64) as usize] += val;
+    }
+
+    // Bit-exact parity with the no-fault baseline across two kills and
+    // one mid-run re-seed.
+    assert_eq!(pull(&c, 0, id), grid, "chain survivor diverged from no-fault counts");
+
+    c.shutdown_servers().expect("stop tail");
+    b2.join();
+    for d in [p_wal, b1_wal, b2_wal] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
 }
